@@ -1,0 +1,82 @@
+//! DSE exploration across a whole model: the Table-1 workflow as a user
+//! would run it — per-layer design-space reduction, the survivor shortlist,
+//! alternates for accuracy fallback, and the compiled plan of the winner.
+//!
+//! Run: `cargo run --release --example dse_explore [model]`
+//! (model defaults to AlexNet-CIFAR10; try LeNet300, VGG-CIFAR10, GPT3-Ada)
+
+use ttrv::compiler::compile;
+use ttrv::config::DseConfig;
+use ttrv::dse;
+use ttrv::dse::report::MIN_FC_DIM;
+use ttrv::machine::MachineSpec;
+use ttrv::models::model_by_name;
+use ttrv::ttd::cost;
+
+fn main() -> ttrv::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "AlexNet-CIFAR10".into());
+    let model = model_by_name(&name)
+        .unwrap_or_else(|| panic!("unknown model '{name}' (see models::all_models)"));
+    let cfg = DseConfig::default();
+    let machine = MachineSpec::spacemit_k1();
+    println!("model: {} ({})", model.name, model.dataset);
+    println!(
+        "FC share: {:.1}% of params, {:.1}% of FLOPs\n",
+        model.fc_param_share(),
+        model.fc_flops_share()
+    );
+
+    for fc in model.fc_shapes() {
+        if fc.n < MIN_FC_DIM || fc.m < MIN_FC_DIM {
+            println!("[{} -> {}] x{}: below factorization floor, kept dense\n", fc.n, fc.m, fc.count);
+            continue;
+        }
+        let e = dse::explore(fc.m, fc.n, &cfg);
+        println!(
+            "[{} -> {}] x{}: DS {} -> {} -> {} -> {} -> {}",
+            fc.n,
+            fc.m,
+            fc.count,
+            ttrv::util::sci(e.counts.all),
+            ttrv::util::sci(e.counts.aligned),
+            e.counts.vectorized,
+            e.counts.initial,
+            e.counts.scalability
+        );
+        match dse::select_solution(&e, 8) {
+            Err(err) => println!("  no feasible solution: {err}\n"),
+            Ok(sol) => {
+                println!(
+                    "  selected {} | {:.1}x params, {:.1}x FLOPs vs dense",
+                    sol.layout.describe(),
+                    cost::dense_params(fc.m, fc.n) as f64 / sol.params as f64,
+                    cost::dense_flops(fc.m, fc.n) as f64 / sol.flops as f64
+                );
+                for (i, alt) in dse::select::alternates(&e, 3).iter().enumerate() {
+                    println!(
+                        "  alternate #{i}: {} (flops {})",
+                        alt.layout.describe(),
+                        alt.flops
+                    );
+                }
+                for dims in cost::einsum_chain(&sol.layout, cfg.batch) {
+                    let plan = compile(&dims, &machine)?;
+                    println!(
+                        "    {:?}: vec={:?} rb=({},{},{},{}) tile={:?} T={} ls~{}",
+                        dims.kind,
+                        plan.vector_loop,
+                        plan.rb.rm,
+                        plan.rb.rb,
+                        plan.rb.rr,
+                        plan.rb.rk,
+                        plan.tile.btl,
+                        plan.threads,
+                        plan.ls_estimate
+                    );
+                }
+                println!();
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,327 @@
+//! End-to-end driver (DESIGN.md deliverable): the full pipeline on a real
+//! small workload, proving all three layers compose.
+//!
+//!  1. generate a synthetic 10-class MNIST-like dataset;
+//!  2. train a dense LeNet300 MLP (784-300-100-10) from scratch in Rust
+//!     (SGD + backprop on the crate's own matmul substrate), logging loss;
+//!  3. TT-SVD-factorize the two large FC layers into the artifact layouts
+//!     (d = 2, rank 8 — the Sec. 6.4 policy family);
+//!  4. measure accuracy dense vs TT and latency dense vs the optimized TT
+//!     kernel engine (the paper's headline comparison);
+//!  5. feed the SAME factorized weights through the AOT JAX/Pallas artifact
+//!     (`mlp_tt_b16.hlo.txt`) via PJRT and assert the outputs match the
+//!     native Rust engine — the L1/L2/L3 composition proof.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_lenet300`
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Instant;
+
+use ttrv::baselines::dense::DenseFc;
+use ttrv::coordinator::{LayerOp, ModelEngine, TtFcEngine};
+use ttrv::linalg::matmul;
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::decompose::tt_svd;
+use ttrv::ttd::{cost, TtLayout};
+use ttrv::util::prng::Rng;
+
+// ---------------------------------------------------------------------------
+// Synthetic MNIST-like data: 10 class prototypes + noise.
+// ---------------------------------------------------------------------------
+
+struct Dataset {
+    x: Tensor,      // (n, 784)
+    y: Vec<usize>,  // labels
+}
+
+fn make_data(n: usize, rng: &mut Rng) -> (Dataset, Dataset) {
+    let protos: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(784, 1.0)).collect();
+    let mut gen = |count: usize| {
+        let mut x = Tensor::zeros(vec![count, 784]);
+        let mut y = Vec::with_capacity(count);
+        for i in 0..count {
+            let label = rng.gen_range(0, 10);
+            y.push(label);
+            let noise = rng.normal_vec(784, 0.6);
+            let row = &mut x.data_mut()[i * 784..(i + 1) * 784];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = protos[label][j] + noise[j];
+            }
+        }
+        Dataset { x, y }
+    };
+    (gen(n), gen(n / 4))
+}
+
+// ---------------------------------------------------------------------------
+// Dense MLP with backprop (the training substrate).
+// ---------------------------------------------------------------------------
+
+struct Mlp {
+    w: [Tensor; 3], // (m, n) each
+    b: [Vec<f32>; 3],
+}
+
+const DIMS: [(usize, usize); 3] = [(300, 784), (100, 300), (10, 100)];
+
+impl Mlp {
+    fn new(rng: &mut Rng) -> Self {
+        let w = DIMS.map(|(m, n)| {
+            Tensor::randn(vec![m, n], (2.0 / (m + n) as f32).sqrt(), rng)
+        });
+        let b = DIMS.map(|(m, _)| vec![0.0f32; m]);
+        Mlp { w, b }
+    }
+
+    /// Forward, returning per-layer activations (inputs to each layer).
+    fn forward(&self, x: &Tensor) -> (Vec<Tensor>, Tensor) {
+        let mut acts = vec![x.clone()];
+        let mut cur = x.clone();
+        for (i, (w, b)) in self.w.iter().zip(&self.b).enumerate() {
+            let mut z = matmul(&cur, &w.transpose(&[1, 0]).unwrap()).unwrap();
+            for row in z.data_mut().chunks_mut(b.len()) {
+                for (v, &bv) in row.iter_mut().zip(b) {
+                    *v += bv;
+                }
+            }
+            if i < 2 {
+                for v in z.data_mut() {
+                    *v = v.max(0.0);
+                }
+                acts.push(z.clone());
+            }
+            cur = z;
+        }
+        (acts, cur)
+    }
+
+    /// One SGD step on a minibatch; returns the CE loss.
+    fn step(&mut self, x: &Tensor, y: &[usize], lr: f32) -> f32 {
+        let batch = x.dims()[0];
+        let (acts, logits) = self.forward(x);
+        // softmax + CE
+        let mut probs = logits.clone();
+        let mut loss = 0.0f32;
+        for (i, row) in probs.data_mut().chunks_mut(10).enumerate() {
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+            loss -= (row[y[i]].max(1e-12)).ln();
+        }
+        loss /= batch as f32;
+        // dlogits = (probs - onehot) / batch
+        let mut delta = probs;
+        for (i, row) in delta.data_mut().chunks_mut(10).enumerate() {
+            row[y[i]] -= 1.0;
+            for v in row.iter_mut() {
+                *v /= batch as f32;
+            }
+        }
+        // backward through the three layers
+        for layer in (0..3).rev() {
+            let a_in = &acts[layer]; // (batch, n)
+            // dW = delta^T @ a_in ; db = col-sums of delta
+            let dw = matmul(&delta.transpose(&[1, 0]).unwrap(), a_in).unwrap();
+            let m = DIMS[layer].0;
+            let mut db = vec![0.0f32; m];
+            for row in delta.data().chunks(m) {
+                for (s, v) in db.iter_mut().zip(row) {
+                    *s += v;
+                }
+            }
+            if layer > 0 {
+                // d(a_in) = delta @ W, masked by relu'
+                let mut da = matmul(&delta, &self.w[layer]).unwrap();
+                for (v, &a) in da.data_mut().iter_mut().zip(a_in.data()) {
+                    if a <= 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                delta = da;
+            }
+            // SGD update
+            for (wv, gv) in self.w[layer].data_mut().iter_mut().zip(dw.data()) {
+                *wv -= lr * gv;
+            }
+            for (bv, gv) in self.b[layer].iter_mut().zip(&db) {
+                *bv -= lr * gv;
+            }
+        }
+        loss
+    }
+}
+
+fn accuracy(logits: &Tensor, y: &[usize]) -> f64 {
+    let mut correct = 0;
+    for (row, &label) in logits.data().chunks(10).zip(y) {
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / y.len() as f64
+}
+
+fn main() -> ttrv::Result<()> {
+    let mut rng = Rng::new(2026);
+    let machine = MachineSpec::spacemit_k1();
+
+    // ---- 1-2. data + TT-projected training -------------------------------
+    // Accuracy preservation under factorization needs training that is aware
+    // of the TT constraint (the paper defers accuracy to its refs [3, 33],
+    // which fine-tune). We use iterative hard thresholding: every
+    // PROJECT_EVERY steps the two large weight matrices are projected onto
+    // the rank-8 TT manifold (TT-SVD -> reconstruct), so SGD converges to
+    // weights that the final factorization represents exactly.
+    let layouts = [
+        TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8)?,
+        TtLayout::with_uniform_rank(vec![10, 10], vec![20, 15], 8)?,
+    ];
+    const PROJECT_EVERY: usize = 25;
+    let (train, test) = make_data(2048, &mut rng);
+    let mut mlp = Mlp::new(&mut rng);
+    println!("== TT-projected training of LeNet300 on synthetic MNIST-like data ==");
+    let batch = 64;
+    let steps = 400;
+    let t_train = Instant::now();
+    for step in 0..steps {
+        let start = (step * batch) % (train.y.len() - batch);
+        let xb = Tensor::from_vec(
+            vec![batch, 784],
+            train.x.data()[start * 784..(start + batch) * 784].to_vec(),
+        )?;
+        let yb = &train.y[start..start + batch];
+        let loss = mlp.step(&xb, yb, 0.08);
+        if (step + 1) % PROJECT_EVERY == 0 || step == steps - 1 {
+            for (i, layout) in layouts.iter().enumerate() {
+                let tt = tt_svd(&mlp.w[i], layout)?;
+                mlp.w[i] = tt.reconstruct()?;
+            }
+        }
+        if step % 50 == 0 || step == steps - 1 {
+            println!("  step {step:>4}  loss {loss:.4}");
+        }
+    }
+    println!("trained {steps} steps in {:.1} s", t_train.elapsed().as_secs_f64());
+    let (_, logits) = mlp.forward(&test.x);
+    let dense_acc = accuracy(&logits, &test.y);
+    println!("dense (TT-projected) test accuracy: {:.1}%", 100.0 * dense_acc);
+
+    // ---- 3. factorize the two large FC layers (artifact layouts) --------
+    // These d=2 rank-8 aligned layouts are exactly what the DSE's Sec. 6.4
+    // selection policy returns for these shapes, and what the AOT artifact
+    // (python/compile/model.py LENET300_TT_SPEC) is lowered for.
+    let mut tt_layers = Vec::new();
+    for (i, layout) in layouts.iter().enumerate() {
+        let mut tt = tt_svd(&mlp.w[i], layout)?;
+        tt.bias = Some(mlp.b[i].clone());
+        println!(
+            "layer {i}: {} | params {} -> {} ({:.1}x), recon err {:.3}",
+            layout.describe(),
+            cost::dense_params(layout.m_total(), layout.n_total()),
+            tt.param_count(),
+            cost::dense_params(layout.m_total(), layout.n_total()) as f64
+                / tt.param_count() as f64,
+            tt.rel_error(&mlp.w[i])?
+        );
+        tt_layers.push(tt);
+    }
+
+    // ---- 4. accuracy + latency: dense vs optimized TT engine ------------
+    let mut tt_model = ModelEngine::new(
+        "lenet300-tt",
+        vec![
+            LayerOp::Tt(TtFcEngine::new(&tt_layers[0], &machine)?),
+            LayerOp::Relu,
+            LayerOp::Tt(TtFcEngine::new(&tt_layers[1], &machine)?),
+            LayerOp::Relu,
+            LayerOp::Dense(DenseFc::new(&mlp.w[2], Some(mlp.b[2].clone()))?),
+        ],
+        784,
+        10,
+    );
+    let tt_logits = tt_model.forward(&test.x)?;
+    let tt_acc = accuracy(&tt_logits, &test.y);
+    println!(
+        "TT test accuracy: {:.1}% (delta {:+.1} pts, rank 8, no fine-tuning)",
+        100.0 * tt_acc,
+        100.0 * (tt_acc - dense_acc)
+    );
+
+    let mut dense_model = ModelEngine::new(
+        "lenet300-dense",
+        vec![
+            LayerOp::Dense(DenseFc::new(&mlp.w[0], Some(mlp.b[0].clone()))?),
+            LayerOp::Relu,
+            LayerOp::Dense(DenseFc::new(&mlp.w[1], Some(mlp.b[1].clone()))?),
+            LayerOp::Relu,
+            LayerOp::Dense(DenseFc::new(&mlp.w[2], Some(mlp.b[2].clone()))?),
+        ],
+        784,
+        10,
+    );
+    for bsz in [1usize, 16] {
+        let x = Tensor::from_vec(vec![bsz, 784], test.x.data()[..bsz * 784].to_vec())?;
+        let reps = 300;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            dense_model.forward(&x)?;
+        }
+        let dense_t = t0.elapsed().as_secs_f64() / reps as f64;
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            tt_model.forward(&x)?;
+        }
+        let tt_t = t1.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "batch {bsz:>2}: dense {:>9.1} us | TT {:>9.1} us | speedup {:.2}x",
+            dense_t * 1e6,
+            tt_t * 1e6,
+            dense_t / tt_t
+        );
+    }
+
+    // ---- 5. PJRT cross-check against the JAX/Pallas artifact ------------
+    let artifact_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifact_dir.join("manifest.json").exists() {
+        println!("\nartifacts/ missing — run `make artifacts` for the PJRT cross-check");
+        return Ok(());
+    }
+    let rt = ttrv::runtime::Runtime::open(&artifact_dir)?;
+    let exe = rt.compile("mlp_tt_b16")?;
+    let x16 = Tensor::from_vec(vec![16, 784], test.x.data()[..16 * 784].to_vec())?;
+    let mut args = vec![x16.clone()];
+    for tt in &tt_layers {
+        args.extend(tt.cores.iter().cloned());
+        args.push(Tensor::from_vec(
+            vec![tt.bias.as_ref().unwrap().len()],
+            tt.bias.clone().unwrap(),
+        )?);
+    }
+    args.push(mlp.w[2].clone());
+    args.push(Tensor::from_vec(vec![10], mlp.b[2].clone())?);
+    let pjrt_out = exe.run(&args)?;
+    let native_out = tt_model.forward(&x16)?;
+    let diff = pjrt_out[0].max_abs_diff(&native_out)?;
+    println!(
+        "\nPJRT (JAX+Pallas artifact) vs native Rust engine: max |diff| = {diff:.2e}"
+    );
+    assert!(
+        pjrt_out[0].allclose(&native_out, 1e-3, 1e-3),
+        "cross-language mismatch"
+    );
+    println!("L1 (Pallas) / L2 (JAX) / L3 (Rust) compose: OK");
+    Ok(())
+}

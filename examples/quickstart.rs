@@ -1,0 +1,83 @@
+//! Quickstart: compress one FC layer end to end.
+//!
+//! 1. DSE-explore the layer (784 -> 300) and pick a solution (Sec. 6.4
+//!    policy);
+//! 2. TT-SVD a weight matrix into that layout;
+//! 3. compile the einsum chain for the SpacemiT-K1 machine model;
+//! 4. run the optimized kernel engine and check it against the dense layer.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ttrv::config::DseConfig;
+use ttrv::coordinator::TtFcEngine;
+use ttrv::dse;
+use ttrv::linalg::matmul;
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::einsum::fc_batched_ref;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost;
+use ttrv::ttd::decompose::tt_svd;
+use ttrv::util::prng::Rng;
+
+fn main() -> ttrv::Result<()> {
+    let (m_dim, n_dim) = (300u64, 784u64);
+    let cfg = DseConfig::default();
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(42);
+
+    // 1. explore the design space
+    let explored = dse::explore(m_dim, n_dim, &cfg);
+    println!(
+        "DSE for FC [{n_dim} -> {m_dim}]: {} -> {} -> {} -> {} -> {} solutions",
+        ttrv::util::sci(explored.counts.all),
+        ttrv::util::sci(explored.counts.aligned),
+        explored.counts.vectorized,
+        explored.counts.initial,
+        explored.counts.scalability,
+    );
+    let sol = dse::select_solution(&explored, 8)?;
+    println!("selected: {} ({} params, {} FLOPs)", sol.layout.describe(), sol.params, sol.flops);
+    println!(
+        "dense:    {} params, {} FLOPs  => {:.1}x param / {:.1}x FLOP compression",
+        cost::dense_params(m_dim, n_dim),
+        cost::dense_flops(m_dim, n_dim),
+        cost::dense_params(m_dim, n_dim) as f64 / sol.params as f64,
+        cost::dense_flops(m_dim, n_dim) as f64 / sol.flops as f64
+    );
+
+    // 2. decompose a (synthetic low-rank-ish) trained weight matrix
+    let u = Tensor::randn(vec![m_dim as usize, 24], 0.3, &mut rng);
+    let v = Tensor::randn(vec![24, n_dim as usize], 0.3, &mut rng);
+    let w = matmul(&u, &v)?;
+    let mut tt = tt_svd(&w, &sol.layout)?;
+    tt.bias = Some(vec![0.0; m_dim as usize]);
+    println!(
+        "TT-SVD reconstruction error: {:.4} (achieved ranks {:?})",
+        tt.rel_error(&w)?,
+        tt.layout.ranks()
+    );
+
+    // 3+4. compile + execute the optimized chain, compare to dense
+    let mut engine = TtFcEngine::new(&tt, &machine)?;
+    let x = Tensor::randn(vec![4, n_dim as usize], 1.0, &mut rng);
+    let y_tt = engine.forward(&x)?;
+    let y_dense = fc_batched_ref(&w, &x, Some(&vec![0.0; m_dim as usize]))?;
+    println!(
+        "inference rel-L2 error vs dense: {:.4} (bounded by the decomposition error)",
+        y_tt.rel_l2_error(&y_dense)?
+    );
+
+    // show the compiler's decisions for each einsum in the chain
+    println!("\ncompiler plans (batch 4):");
+    for dims in cost::einsum_chain(&tt.layout, 4) {
+        let plan = ttrv::compiler::compile(&dims, &machine)?;
+        println!(
+            "  {:?} m={} b={} n={} r={} k={}: {:?}, rb=({},{},{},{}), {} threads",
+            dims.kind, dims.m, dims.b, dims.n, dims.r, dims.k,
+            plan.vector_loop, plan.rb.rm, plan.rb.rb, plan.rb.rr, plan.rb.rk,
+            plan.threads
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

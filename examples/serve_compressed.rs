@@ -1,0 +1,107 @@
+//! Serving example: stand up the coordinator on a TT-compressed LeNet300
+//! and on the equivalent dense model, drive both with the same synthetic
+//! request trace, and compare throughput/latency and memory.
+//!
+//! Run: `cargo run --release --example serve_compressed [requests]`
+
+use std::time::Instant;
+
+use ttrv::baselines::dense::DenseFc;
+use ttrv::config::{DseConfig, ServeConfig};
+use ttrv::coordinator::{
+    InferenceRequest, LayerOp, ModelEngine, Route, Server, TtFcEngine,
+};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::decompose::random_cores;
+use ttrv::util::prng::Rng;
+
+fn build_models(rng: &mut Rng) -> ttrv::Result<(ModelEngine, ModelEngine, usize, usize)> {
+    let machine = MachineSpec::spacemit_k1();
+    let cfg = DseConfig::default();
+    let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
+    let mut tt_ops = Vec::new();
+    let mut dense_ops = Vec::new();
+    let mut tt_params = 0usize;
+    let mut dense_params = 0usize;
+    for (i, &(n, m)) in shapes.iter().enumerate() {
+        dense_params += (n * m + m) as usize;
+        match ttrv::coordinator::router::route_layer(m, n, 8, &cfg) {
+            Route::Tt(sol) => {
+                let mut tt = random_cores(&sol.layout, rng);
+                tt.bias = Some(vec![0.0; m as usize]);
+                tt_params += tt.param_count();
+                let w = tt.reconstruct()?;
+                println!("layer {i}: TT {} ({} params)", sol.layout.describe(), sol.params);
+                tt_ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine)?));
+                dense_ops.push(LayerOp::Dense(DenseFc::new(&w, None)?));
+            }
+            Route::Dense => {
+                println!("layer {i}: dense [{n} -> {m}]");
+                let w = Tensor::randn(vec![m as usize, n as usize], 0.05, rng);
+                tt_params += (n * m + m) as usize;
+                tt_ops.push(LayerOp::Dense(DenseFc::new(&w, None)?));
+                dense_ops.push(LayerOp::Dense(DenseFc::new(&w, None)?));
+            }
+        }
+        if i + 1 < shapes.len() {
+            tt_ops.push(LayerOp::Relu);
+            dense_ops.push(LayerOp::Relu);
+        }
+    }
+    Ok((
+        ModelEngine::new("lenet300-tt", tt_ops, 784, 10),
+        ModelEngine::new("lenet300-dense", dense_ops, 784, 10),
+        tt_params,
+        dense_params,
+    ))
+}
+
+fn drive(server: &Server, requests: usize, rng: &mut Rng) -> (f64, ttrv::coordinator::metrics::Metrics) {
+    // pre-generate the trace so the submission burst is tight and the
+    // dynamic batcher actually gets to group requests
+    let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(784, 1.0)).collect();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(id, input)| {
+            server
+                .submit(InferenceRequest { id: id as u64, input })
+                .expect("admitted")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("ok");
+    }
+    (t0.elapsed().as_secs_f64(), server.metrics())
+}
+
+fn main() -> ttrv::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    let mut rng = Rng::new(7);
+    let (tt_model, dense_model, tt_params, dense_params) = build_models(&mut rng)?;
+    println!(
+        "\nmodel size: dense {dense_params} params vs TT-routed {tt_params} params ({:.1}x)\n",
+        dense_params as f64 / tt_params as f64
+    );
+    let cfg = ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 4096, workers: 1 };
+
+    let tt_server = Server::start(tt_model, cfg.clone());
+    let (tt_time, tt_metrics) = drive(&tt_server, requests, &mut rng);
+    tt_server.shutdown();
+
+    let dense_server = Server::start(dense_model, cfg);
+    let (dense_time, dense_metrics) = drive(&dense_server, requests, &mut rng);
+    dense_server.shutdown();
+
+    println!("TT    : {requests} reqs in {:>8.1} ms  ({:>7.0} req/s)", tt_time * 1e3, requests as f64 / tt_time);
+    println!("        {}", tt_metrics.summary());
+    println!("dense : {requests} reqs in {:>8.1} ms  ({:>7.0} req/s)", dense_time * 1e3, requests as f64 / dense_time);
+    println!("        {}", dense_metrics.summary());
+    println!("\nthroughput ratio TT/dense: {:.2}x", dense_time / tt_time);
+    Ok(())
+}

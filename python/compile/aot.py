@@ -1,0 +1,136 @@
+# AOT bridge: lower the L2 entry points (model.py, which call the L1 Pallas
+# kernels) to HLO *text* artifacts the Rust runtime loads via PJRT.
+#
+# HLO text — NOT ``lowered.compiler_ir().serialize()`` — is the interchange
+# format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+# image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+# parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+#
+# Usage:  cd python && python -m compile.aot --outdir ../artifacts
+# Python runs ONCE here; it is never on the request path.
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_entry(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(fn, arg_specs):
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def build_artifacts(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"format": "hlo-text", "return_tuple": True, "artifacts": []}
+
+    def emit(name: str, fn, arg_specs, note: str):
+        text = lower_entry(fn, arg_specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "args": [_shape_entry(s) for s in arg_specs],
+            "note": note,
+        })
+        print(f"  wrote {fname} ({len(text)} chars, {len(arg_specs)} args)")
+
+    # --- raw L1 kernel (middle-einsum, CB5-like size from paper Table 3) ---
+    emit(
+        "tt_einsum_middle_cb5", model.tt_einsum_flat,
+        [spec((8, 7, 32, 8)), spec((9, 7, 8))],
+        "einsum('rnmk,bnk->mbr') Pallas kernel, paper Table 3 CB5 middle",
+    )
+
+    # --- single TT FC layer: the paper's running example (LeNet300 l1,
+    #     784 -> 300, d = 5, m = [5,5,3,2,2], n = [2,2,2,7,14], R = 8) ------
+    m_shape, n_shape = (5, 5, 3, 2, 2), (2, 2, 2, 7, 14)
+    ranks = (1, 8, 8, 8, 8, 1)
+    cs = model.core_shapes(m_shape, n_shape, ranks)
+    for batch in (1, 16):
+        emit(
+            f"tt_fc_784x300_d5_r8_b{batch}", model.tt_fc_forward_flat,
+            [spec((batch, 784))] + [spec(s) for s in cs] + [spec((300,))],
+            "paper Sec.2 running example layer, d=5 rank=8",
+        )
+
+    # --- single TT FC layer, d = 2 (the paper's Sec. 6.4 selection policy) -
+    m2, n2, r2 = (20, 15), (28, 28), (1, 8, 1)
+    cs2 = model.core_shapes(m2, n2, r2)
+    for batch in (1, 16):
+        emit(
+            f"tt_fc_784x300_d2_r8_b{batch}", model.tt_fc_forward_flat,
+            [spec((batch, 784))] + [spec(s) for s in cs2] + [spec((300,))],
+            "Sec. 6.4 policy: min-FLOPs aligned d=2 solution, rank 8",
+        )
+
+    # --- dense FC baseline, same shape ------------------------------------
+    for batch in (1, 16):
+        emit(
+            f"dense_fc_784x300_b{batch}", model.dense_fc_forward_flat,
+            [spec((batch, 784)), spec((300, 784)), spec((300,))],
+            "uncompressed FC baseline",
+        )
+
+    # --- full LeNet300 MLP, TT and dense, weights as runtime args ---------
+    tt_params = model.init_mlp_tt(jax.random.PRNGKey(0))
+    flat_specs = [spec(p.shape) for p in model.flatten_tt_mlp_params(tt_params)]
+    for batch in (1, 16):
+        emit(
+            f"mlp_tt_b{batch}", model.mlp_tt_forward_flat,
+            [spec((batch, 784))] + flat_specs,
+            "LeNet300 MLP, l1+l2 TT-factorized (d=2, rank 8), l3 dense",
+        )
+        emit(
+            f"mlp_dense_b{batch}", model.mlp_dense_forward_flat,
+            [spec((batch, 784)), spec((300, 784)), spec((300,)),
+             spec((100, 300)), spec((100,)), spec((10, 100)), spec((10,))],
+            "LeNet300 MLP, dense",
+        )
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-lower L2 graphs to HLO text")
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: also copy the mlp_tt_b16 artifact here")
+    args = ap.parse_args()
+    manifest = build_artifacts(args.outdir)
+    if args.out:
+        src = os.path.join(args.outdir, "mlp_tt_b16.hlo.txt")
+        with open(src) as f, open(args.out, "w") as g:
+            g.write(f.read())
+    print(f"AOT done: {len(manifest['artifacts'])} artifacts in {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

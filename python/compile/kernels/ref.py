@@ -1,0 +1,125 @@
+# Pure-jnp correctness oracle for the T3F Einsum kernel family.
+#
+# The paper's hot-spot kernel (Listing 2) is, for each TT core t:
+#
+#     Out[m, b, r] = sum_{n, k} G[r, n, m, k] * In[b, n, k]
+#
+# where, in tensor-index terms, r is the *left* rank r_{t-1} (the paper's
+# ``rt``) and k is the *right* rank r_t (the paper's ``rt_1``, the rank shared
+# with the previously-processed core — cores are processed t = d .. 1).
+#
+# Three variants appear in a TT chain:
+#   * first  (t = d): k-extent 1  (r_d = 1)   — no k loop
+#   * middle (1<t<d): both rank extents > 1
+#   * final  (t = 1): r-extent 1  (r_0 = 1)   — no r loop
+#
+# The generic einsum covers all three; the variants only matter for the
+# optimized implementations (different microkernels).
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def einsum_ref(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Reference for ``einsum("rnmk,bnk->mbr", G, In)``.
+
+    Args:
+      g: TT core, shape ``(r, n, m, k)`` = ``(r_{t-1}, n_t, m_t, r_t)``.
+      x: input slab, shape ``(b, n, k)``.
+
+    Returns:
+      Output slab of shape ``(m, b, r)``.
+    """
+    return jnp.einsum("rnmk,bnk->mbr", g, x)
+
+
+def einsum_loop_ref(g, x):
+    """Second oracle mirroring the paper's Listing 2 loop nest.
+
+    The same contraction expressed through explicit transpose/reshape/matmul
+    so it exercises a *different* lowering than einsum_ref; used to
+    cross-check the oracle itself.
+    """
+    r, n, m, k = g.shape
+    b = x.shape[0]
+    # G[r,n,m,k] -> (m, r, n*k); In[b,n,k] -> (n*k, b)
+    gm = jnp.transpose(g, (2, 0, 1, 3)).reshape(m, r, n * k)
+    xm = x.reshape(b, n * k).T
+    out = jnp.einsum("mrq,qb->mbr", gm, xm)
+    return out
+
+
+def tt_forward_ref(x, cores, bias=None):
+    """Reference forward pass of a TT-decomposed FC layer (paper Listing 1).
+
+    Args:
+      x: input of shape ``(B, N)`` with ``N = prod(n_t)``.
+      cores: list of d arrays, core t (0-based) of shape
+        ``(r_t, n_{t+1}, m_{t+1}, r_{t+1})`` with ``r_0 = r_d = 1``.
+      bias: optional ``(M,)`` bias.
+
+    Returns:
+      ``(B, M)`` output, equal to ``x @ W.T + bias`` where W is the
+      TT-reconstructed ``(M, N)`` matrix (row-major multi-index convention).
+    """
+    d = len(cores)
+    batch = x.shape[0]
+    cur = x.reshape(-1)  # row-major (batch, j_1, ..., j_d)
+    total_m = 1
+    for t in range(d - 1, -1, -1):
+        g = cores[t]
+        r_prev, n_t, m_t, r_t = g.shape
+        bt = cur.size // (n_t * r_t)
+        slab = cur.reshape(bt, n_t, r_t)
+        out = einsum_ref(g, slab)  # (m_t, bt, r_prev)
+        cur = out.reshape(-1)
+        total_m *= m_t
+    # Final layout is (i_1, ..., i_d, batch) = (M, B) row-major.
+    y = cur.reshape(total_m, batch).T
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def tt_reconstruct(cores):
+    """Materialize the dense ``(M, N)`` matrix a TT-core chain represents.
+
+    W[(i_1..i_d), (j_1..j_d)] = G_1[:, j_1, i_1, :] @ ... @ G_d[:, j_d, i_d, :]
+    with row-major multi-indices (i_1, j_1 most significant).
+    """
+    # acc carries (i_1..i_t, j_1..j_t, r_t) flattened as (Mt, Nt, r_t)
+    acc = jnp.ones((1, 1, 1), dtype=cores[0].dtype)
+    for g in cores:
+        r_prev, n_t, m_t, r_t = g.shape
+        # acc (Mp, Np, r_prev) x g (r_prev, n, m, r) -> (Mp, m, Np, n, r)
+        acc = jnp.einsum("PQr,rnms->PmQns", acc, g)
+        mp, m, np_, n, r = acc.shape
+        acc = acc.reshape(mp * m, np_ * n, r)
+    return acc[:, :, 0]
+
+
+def tt_params(m_shape, n_shape, ranks):
+    """Paper Eq. (4): parameter count of the factorized layer (incl. bias)."""
+    d = len(m_shape)
+    total = 1
+    for m in m_shape:
+        total *= m  # bias
+    for t in range(d):
+        total += ranks[t] * m_shape[t] * n_shape[t] * ranks[t + 1]
+    return total
+
+
+def tt_flops(m_shape, n_shape, ranks):
+    """Paper Eq. (11): total FLOPs of the einsum chain (incl. bias adds)."""
+    d = len(m_shape)
+    total = 1
+    for m in m_shape:
+        total *= m  # bias adds
+    for t in range(1, d + 1):  # paper is 1-based
+        term = 2 * ranks[t] * ranks[t - 1]
+        for u in range(t, d + 1):
+            term *= m_shape[u - 1]
+        for u in range(1, t + 1):
+            term *= n_shape[u - 1]
+        total += term
+    return total

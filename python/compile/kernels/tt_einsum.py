@@ -1,0 +1,195 @@
+# L1 — Pallas kernel for the T3F Einsum hot-spot.
+#
+#     Out[m, b, r] = sum_{n, k} G[r, n, m, k] * In[b, n, k]
+#
+# Hardware adaptation (paper targets RISC-V RVV; we target the TPU model —
+# see DESIGN.md §Hardware-Adaptation):
+#
+#   * The paper vectorizes the r-loop and array-packs G so that the vector
+#     lanes read contiguous memory. Here r is the trailing (lane) dimension of
+#     every block, so stores are lane-contiguous for the same reason.
+#   * The paper's register blocking (Rm x Rb output accumulators) becomes the
+#     per-grid-cell output tile (TM, TB, r) living in VMEM.
+#   * The paper's L2 cache tiling over bt (Eq. 26-28) becomes the grid over b
+#     with VMEM-bounded block shapes: each grid cell stages one (r,n,TM,k)
+#     G tile and one (TB,n,k) input tile HBM->VMEM via BlockSpec.
+#   * The contraction itself is phrased as a single (TB, n*k) @ (n*k, TM*r)
+#     matmul so it maps onto the MXU systolic array instead of the paper's
+#     vfmacc chains.
+#
+# interpret=True is mandatory in this image: real-TPU lowering emits a Mosaic
+# custom-call the CPU PJRT plugin cannot execute.
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the modeled vector unit (paper: 256-bit RVV / f32 -> 8).
+VL = 8
+
+
+def _kernel(g_ref, x_ref, o_ref, *, acc_dtype):
+    """One grid cell: full contraction for an (TM, TB, r) output tile."""
+    g = g_ref[...]  # (r, n, TM, k)
+    x = x_ref[...]  # (TB, n, k)
+    r, n, tm, k = g.shape
+    tb = x.shape[0]
+    # (n, k, TM, r) -> (n*k, TM*r): contiguous-in-r layout, the Pallas
+    # analogue of the paper's array-packing of G (done at trace time, i.e.
+    # "compile time" in the paper's sense — G is a constant weight).
+    gm = jnp.transpose(g, (1, 3, 2, 0)).reshape(n * k, tm * r)
+    xm = x.reshape(tb, n * k)
+    out = jnp.dot(
+        xm.astype(acc_dtype), gm.astype(acc_dtype),
+        preferred_element_type=acc_dtype,
+    )  # (TB, TM*r) on the MXU
+    out = out.reshape(tb, tm, r).transpose(1, 0, 2)  # (TM, TB, r)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def tt_einsum_pallas(g, x, *, tm: int | None = None, tb: int | None = None,
+                     interpret: bool = True, acc_dtype=jnp.float32):
+    """Pallas implementation of ``einsum("rnmk,bnk->mbr", G, In)``.
+
+    Args:
+      g: core, shape ``(r, n, m, k)``.
+      x: input slab, shape ``(b, n, k)``.
+      tm, tb: output tile sizes along m and b (grid block shape). Defaults
+        chosen to keep the per-cell VMEM footprint modest; inputs are
+        zero-padded up to tile multiples and the output is sliced back, so
+        arbitrary (non-dividing) shapes are supported.
+      interpret: must stay True on CPU (Mosaic custom-calls do not run here).
+
+    Returns:
+      Output of shape ``(m, b, r)``.
+    """
+    r, n, m, k = g.shape
+    b = x.shape[0]
+    if x.shape != (b, n, k):
+        raise ValueError(f"input slab {x.shape} incompatible with core {g.shape}")
+    if tm is None:
+        tm = min(m, 128)
+    if tb is None:
+        tb = min(b, 128)
+    tm = max(1, min(tm, m))
+    tb = max(1, min(tb, b))
+
+    m_pad = _round_up(m, tm)
+    b_pad = _round_up(b, tb)
+    if m_pad != m:
+        g = jnp.pad(g, ((0, 0), (0, 0), (0, m_pad - m), (0, 0)))
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0), (0, 0)))
+
+    grid = (m_pad // tm, b_pad // tb)
+    out = pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, n, tm, k), lambda i, j: (0, 0, i, 0)),
+            pl.BlockSpec((tb, n, k), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tb, r), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, b_pad, r), x.dtype),
+        interpret=interpret,
+    )(g, x)
+    return out[:m, :b, :]
+
+
+def first_einsum_pallas(g, x, **kw):
+    """First-processed core (t = d): right-rank extent k = 1."""
+    if g.shape[3] != 1:
+        raise ValueError("first einsum requires k (= r_d) == 1")
+    return tt_einsum_pallas(g, x, **kw)
+
+
+def middle_einsum_pallas(g, x, **kw):
+    return tt_einsum_pallas(g, x, **kw)
+
+
+def final_einsum_pallas(g, x, **kw):
+    """Last-processed core (t = 1): left-rank extent r = 1."""
+    if g.shape[0] != 1:
+        raise ValueError("final einsum requires r (= r_0) == 1")
+    return tt_einsum_pallas(g, x, **kw)
+
+
+def tt_forward_pallas(x, cores, bias=None, *, tm=None, tb=None,
+                      interpret=True):
+    """TT FC-layer forward (paper Listing 1) with every einsum on Pallas.
+
+    Mirrors ref.tt_forward_ref exactly; see there for the layout derivation.
+    """
+    d = len(cores)
+    batch = x.shape[0]
+    cur = x.reshape(-1)
+    total_m = 1
+    for t in range(d - 1, -1, -1):
+        g = cores[t]
+        r_prev, n_t, m_t, r_t = g.shape
+        bt = cur.size // (n_t * r_t)
+        slab = cur.reshape(bt, n_t, r_t)
+        out = tt_einsum_pallas(g, slab, tm=tm, tb=tb, interpret=interpret)
+        cur = out.reshape(-1)
+        total_m *= m_t
+    y = cur.reshape(total_m, batch).T
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# ---------------------------------------------------------------------------
+# TPU performance estimation (DESIGN.md §Perf / §Hardware-Adaptation).
+# interpret=True gives CPU-numpy timings only, so real-TPU performance is
+# estimated structurally from the BlockSpecs: VMEM footprint per grid cell and
+# MXU utilization of the staged matmul.
+# ---------------------------------------------------------------------------
+
+def vmem_bytes_per_cell(r, n, m, k, tm, tb, dtype_bytes=4):
+    """Bytes resident in VMEM for one grid cell (G tile + In tile + Out tile)."""
+    g_tile = r * n * tm * k
+    x_tile = tb * n * k
+    o_tile = tm * tb * r
+    return (g_tile + x_tile + o_tile) * dtype_bytes
+
+
+def mxu_utilization_estimate(r, n, m, k, tm, tb, mxu=128):
+    """Fraction of MXU lanes busy for the staged (TB, n*k) @ (n*k, TM*r) dot.
+
+    The MXU processes mxu x mxu tiles; a dot of shape (A, C) @ (C, B) runs at
+    min(A,mxu)/mxu * min(B,mxu)/mxu * min(C,mxu)/mxu efficiency for the
+    partial tiles (crude but monotone in the right directions).
+    """
+    a, c, b = tb, n * k, tm * r
+    eff = 1.0
+    for dim in (a, b, c):
+        frac = (dim % mxu) / mxu if dim % mxu else 1.0
+        full = dim // mxu
+        # weighted average of full tiles and the ragged remainder tile
+        total = full + (1 if dim % mxu else 0)
+        eff *= (full + frac * (1 if dim % mxu else 0)) / total if total else 1.0
+    return eff
+
+
+def block_choice_report(r, n, m, k, b, candidates=((32, 32), (64, 64),
+                                                   (128, 128), (256, 128))):
+    """Sweep candidate (TM, TB) block shapes; returns list of dicts."""
+    rows = []
+    for tm, tb in candidates:
+        tm_c, tb_c = min(tm, m), min(tb, b)
+        rows.append({
+            "tm": tm_c,
+            "tb": tb_c,
+            "vmem_bytes": vmem_bytes_per_cell(r, n, m, k, tm_c, tb_c),
+            "mxu_util": mxu_utilization_estimate(r, n, m, k, tm_c, tb_c),
+            "grid": (math.ceil(m / tm_c)) * (math.ceil(b / tb_c)),
+        })
+    return rows

@@ -1,0 +1,181 @@
+# L2 — the paper's compute graph in JAX: TT-decomposed FC layers (T3F
+# formulation) composed into a LeNet300-style MLP, in both dense and TT form.
+#
+# Build-time only: aot.py lowers the jitted entry points below to HLO text;
+# the Rust runtime (rust/src/runtime) loads and executes them via PJRT.
+# Python is never on the request path.
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import tt_einsum
+
+
+# ---------------------------------------------------------------------------
+# TT layer
+# ---------------------------------------------------------------------------
+
+def core_shapes(m_shape: Sequence[int], n_shape: Sequence[int],
+                ranks: Sequence[int]):
+    """T3F core shapes ``(r_{t-1}, n_t, m_t, r_t)`` for a TT-matrix."""
+    d = len(m_shape)
+    assert len(n_shape) == d and len(ranks) == d + 1
+    assert ranks[0] == 1 and ranks[d] == 1
+    return [(ranks[t], n_shape[t], m_shape[t], ranks[t + 1]) for t in range(d)]
+
+
+def init_tt_cores(key, m_shape, n_shape, ranks, dtype=jnp.float32):
+    """Glorot-style init matched to the reconstructed matrix variance.
+
+    The reconstructed W entry is a sum over prod(ranks[1:-1]) paths of
+    products of d core entries, so per-core std is chosen to give W roughly
+    the variance of a Glorot-initialized (M, N) dense matrix.
+    """
+    m_total = 1
+    for m in m_shape:
+        m_total *= m
+    n_total = 1
+    for n in n_shape:
+        n_total *= n
+    d = len(m_shape)
+    target_var = 2.0 / (m_total + n_total)
+    rank_paths = 1
+    for r in ranks[1:-1]:
+        rank_paths *= r
+    core_var = (target_var / rank_paths) ** (1.0 / d)
+    cores = []
+    for shape in core_shapes(m_shape, n_shape, ranks):
+        key, sub = jax.random.split(key)
+        cores.append(jax.random.normal(sub, shape, dtype) * jnp.sqrt(core_var))
+    return cores
+
+
+def tt_linear_apply(cores, bias, x, *, impl: str = "pallas",
+                    interpret: bool = True):
+    """Forward pass of a TT FC layer. ``impl`` in {"pallas", "jnp"}."""
+    if impl == "pallas":
+        return tt_einsum.tt_forward_pallas(x, cores, bias, interpret=interpret)
+    if impl == "jnp":
+        return ref.tt_forward_ref(x, cores, bias)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def dense_apply(w, b, x):
+    """Dense FC reference: ``x @ w.T + b`` with w of shape (M, N)."""
+    return x @ w.T + b
+
+
+# ---------------------------------------------------------------------------
+# LeNet300-style MLP (784 -> 300 -> 100 -> 10), dense and TT variants.
+# Layer factorizations follow the paper's §6.4 policy: minimum-FLOPs aligned
+# solutions of configuration length two, rank a multiple of vl = 8. The final
+# 100 -> 10 layer is left dense (the paper does not factorize tiny layers).
+# ---------------------------------------------------------------------------
+
+LENET300_TT_SPEC = {
+    "l1": {"n_shape": (28, 28), "m_shape": (20, 15), "ranks": (1, 8, 1)},
+    "l2": {"n_shape": (20, 15), "m_shape": (10, 10), "ranks": (1, 8, 1)},
+    "l3_dense": {"n": 100, "m": 10},
+}
+
+
+def init_mlp_dense(key, dtype=jnp.float32):
+    sizes = [(300, 784), (100, 300), (10, 100)]
+    params = []
+    for m, n in sizes:
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (m, n), dtype) * jnp.sqrt(2.0 / (m + n))
+        params.append((w, jnp.zeros((m,), dtype)))
+    return params
+
+
+def init_mlp_tt(key, dtype=jnp.float32):
+    spec = LENET300_TT_SPEC
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    l1 = (init_tt_cores(k1, spec["l1"]["m_shape"], spec["l1"]["n_shape"],
+                        spec["l1"]["ranks"], dtype),
+          jnp.zeros((300,), dtype))
+    l2 = (init_tt_cores(k2, spec["l2"]["m_shape"], spec["l2"]["n_shape"],
+                        spec["l2"]["ranks"], dtype),
+          jnp.zeros((100,), dtype))
+    w3 = jax.random.normal(k3, (10, 100), dtype) * jnp.sqrt(2.0 / 110)
+    l3 = (w3, jnp.zeros((10,), dtype))
+    return (l1, l2, l3)
+
+
+def mlp_dense_apply(params, x):
+    (w1, b1), (w2, b2), (w3, b3) = params
+    h = jax.nn.relu(dense_apply(w1, b1, x))
+    h = jax.nn.relu(dense_apply(w2, b2, h))
+    return dense_apply(w3, b3, h)
+
+
+def mlp_tt_apply(params, x, *, impl="pallas", interpret=True):
+    (c1, b1), (c2, b2), (w3, b3) = params
+    h = jax.nn.relu(tt_linear_apply(c1, b1, x, impl=impl, interpret=interpret))
+    h = jax.nn.relu(tt_linear_apply(c2, b2, h, impl=impl, interpret=interpret))
+    return dense_apply(w3, b3, h)
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def mlp_tt_loss(params, x, labels, *, impl="jnp"):
+    # jnp impl for the grad path: pallas interpret-mode grads are slow and
+    # numerically identical (both lower to the same contraction).
+    return cross_entropy(mlp_tt_apply(params, x, impl=impl), labels)
+
+
+mlp_tt_grad = jax.grad(mlp_tt_loss)
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument entry points for AOT lowering. PJRT executables take a flat
+# list of buffers; these wrappers define the calling convention recorded in
+# artifacts/manifest.json and relied upon by rust/src/runtime.
+# ---------------------------------------------------------------------------
+
+def flatten_tt_mlp_params(params):
+    (c1, b1), (c2, b2), (w3, b3) = params
+    return list(c1) + [b1] + list(c2) + [b2] + [w3, b3]
+
+
+def unflatten_tt_mlp_params(flat):
+    d1 = len(LENET300_TT_SPEC["l1"]["m_shape"])
+    d2 = len(LENET300_TT_SPEC["l2"]["m_shape"])
+    i = 0
+    c1 = flat[i:i + d1]; i += d1
+    b1 = flat[i]; i += 1
+    c2 = flat[i:i + d2]; i += d2
+    b2 = flat[i]; i += 1
+    w3, b3 = flat[i], flat[i + 1]
+    return ((c1, b1), (c2, b2), (w3, b3))
+
+
+def mlp_tt_forward_flat(x, *flat_params):
+    return (mlp_tt_apply(unflatten_tt_mlp_params(list(flat_params)), x),)
+
+
+def mlp_dense_forward_flat(x, w1, b1, w2, b2, w3, b3):
+    return (mlp_dense_apply(((w1, b1), (w2, b2), (w3, b3)), x),)
+
+
+def tt_fc_forward_flat(x, *cores_and_bias):
+    """Single TT FC layer: args are d cores followed by the bias."""
+    cores, bias = list(cores_and_bias[:-1]), cores_and_bias[-1]
+    return (tt_linear_apply(cores, bias, x, impl="pallas"),)
+
+
+def dense_fc_forward_flat(x, w, b):
+    return (dense_apply(w, b, x),)
+
+
+def tt_einsum_flat(g, x):
+    """The raw L1 kernel as its own artifact (kernel-level PJRT benches)."""
+    return (tt_einsum.tt_einsum_pallas(g, x),)

@@ -1,0 +1,59 @@
+# L1 performance estimation report (DESIGN.md §Perf).
+#
+# interpret=True gives CPU-numpy timings that are NOT a TPU proxy, so the
+# Pallas kernel is optimized *structurally*: for each candidate (TM, TB)
+# block shape we report the per-grid-cell VMEM footprint and an MXU
+# utilization estimate, and pick the best shape that fits VMEM.
+#
+# Usage: cd python && python -m compile.perf_report
+
+from __future__ import annotations
+
+from compile.kernels import tt_einsum as tk
+
+# TPU-v4-ish envelope used for the estimates.
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per core
+MXU = 128
+
+# The paper's Table 3 kernel instances (middle einsum; r = k = 8).
+CASES = [
+    ("CB0", 8, 2, 48, 8, 224),
+    ("CB1", 8, 4, 64, 8, 3582),
+    ("CB2", 8, 14, 96, 8, 128),
+    ("CB3", 8, 32, 64, 8, 64),
+    ("CB4", 8, 4, 256, 8, 128),
+    ("CB5", 8, 7, 32, 8, 9),
+    ("CB6", 8, 28, 4, 8, 16383),
+    ("CB7", 8, 28, 64, 8, 1020),
+]
+
+
+def pick_block(r, n, m, k, b):
+    """Best candidate: max MXU utilization among shapes fitting VMEM."""
+    rows = tk.block_choice_report(r, n, m, k, b)
+    fitting = [x for x in rows if x["vmem_bytes"] <= VMEM_BUDGET]
+    pool = fitting or rows
+    return max(pool, key=lambda x: (x["mxu_util"], -x["grid"])), rows
+
+
+def main():
+    print("== L1 Pallas BlockSpec sweep (structural TPU estimates) ==")
+    print(f"{'case':<6} {'chosen TMxTB':>12} {'VMEM/cell':>12} {'MXU util':>9} {'grid':>6}")
+    for name, r, n, m, k, b in CASES:
+        best, _ = pick_block(r, n, m, k, b)
+        print(
+            f"{name:<6} {best['tm']:>5}x{best['tb']:<6} "
+            f"{best['vmem_bytes'] / 1024:>9.1f}KB {best['mxu_util']:>8.2%} "
+            f"{best['grid']:>6}"
+        )
+    print("\nfull sweep for CB1:")
+    _, rows = pick_block(8, 4, 64, 8, 3582)
+    for x in rows:
+        print(
+            f"  TM={x['tm']:<4} TB={x['tb']:<4} vmem={x['vmem_bytes'] / 1024:>8.1f}KB "
+            f"mxu={x['mxu_util']:.2%} grid={x['grid']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

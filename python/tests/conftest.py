@@ -1,0 +1,6 @@
+# Allow running pytest from the repo root OR from python/: put python/ on
+# sys.path so `import compile` resolves.
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -1,0 +1,206 @@
+# pytest: Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+#
+# hypothesis sweeps the kernel's shape/dtype space (including the degenerate
+# first/final-einsum rank extents and non-dividing tile sizes) and asserts
+# allclose against ref.py.
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import tt_einsum as tk
+
+
+def rand(shape, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed + sum(shape))
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+def assert_kernel_matches_ref(r, n, m, k, b, tm=None, tb=None,
+                              dtype=np.float32, rtol=1e-5, atol=1e-5):
+    g = rand((r, n, m, k), dtype, seed=1)
+    x = rand((b, n, k), dtype, seed=2)
+    got = tk.tt_einsum_pallas(g, x, tm=tm, tb=tb)
+    want = ref.einsum_ref(g, x)
+    assert got.shape == (m, b, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic cases: the paper's Table 3 configurations (rank 8).
+# ---------------------------------------------------------------------------
+
+# (mt, bt, nt) for first einsum (k=1), middle (r=k=8), final (r=1), Table 3.
+CB_FIRST = [(512, 32, 128), (64, 64, 64), (128, 1024, 4), (256, 64, 784),
+            (32, 64, 392), (512, 896, 28), (100, 12, 64), (16, 4, 150)]
+CB_MIDDLE = [(48, 224, 2), (64, 3582, 4), (96, 128, 14), (64, 64, 32),
+             (256, 128, 4), (32, 9, 7), (4, 16383, 28), (64, 1020, 28)]
+CB_FINAL = [(32, 126, 256), (64, 64, 128), (32, 126, 4), (256, 16, 7),
+            (8, 510, 896), (32, 250, 4), (124, 9, 16), (48, 21, 4)]
+
+
+@pytest.mark.parametrize("mt,bt,nt", CB_FIRST[:4])
+def test_first_einsum_table3(mt, bt, nt):
+    # first: right rank k = r_d = 1, left rank r = 8
+    assert_kernel_matches_ref(r=8, n=nt, m=mt, k=1, b=bt, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mt,bt,nt", CB_MIDDLE[:4])
+def test_middle_einsum_table3(mt, bt, nt):
+    assert_kernel_matches_ref(r=8, n=nt, m=mt, k=8, b=bt, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mt,bt,nt", CB_FINAL[:4])
+def test_final_einsum_table3(mt, bt, nt):
+    assert_kernel_matches_ref(r=1, n=nt, m=mt, k=8, b=bt, rtol=1e-4, atol=1e-4)
+
+
+def test_variant_wrappers_enforce_rank_extents():
+    g_mid = rand((8, 4, 6, 8))
+    x = rand((5, 4, 8))
+    with pytest.raises(ValueError):
+        tk.first_einsum_pallas(g_mid, x)
+    with pytest.raises(ValueError):
+        tk.final_einsum_pallas(g_mid, x)
+    out = tk.middle_einsum_pallas(g_mid, x)
+    assert out.shape == (6, 5, 8)
+
+
+def test_incompatible_input_slab_raises():
+    g = rand((8, 4, 6, 8))
+    x_bad = rand((5, 3, 8))
+    with pytest.raises(ValueError):
+        tk.tt_einsum_pallas(g, x_bad)
+
+
+def test_oracles_agree_with_each_other():
+    g = rand((8, 7, 32, 8))
+    x = rand((9, 7, 8))
+    a = ref.einsum_ref(g, x)
+    b = ref.einsum_loop_ref(g, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, rank extents, tile sizes, dtypes.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    r=st.sampled_from([1, 2, 8, 16]),
+    k=st.sampled_from([1, 2, 8, 16]),
+    n=st.integers(1, 12),
+    m=st.integers(1, 40),
+    b=st.integers(1, 40),
+)
+def test_kernel_shape_sweep(r, k, n, m, b):
+    assert_kernel_matches_ref(r, n, m, k, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(3, 50),
+    b=st.integers(3, 50),
+    tm=st.integers(1, 17),
+    tb=st.integers(1, 17),
+)
+def test_kernel_nondividing_tiles(m, b, tm, tb):
+    # tile sizes that do not divide (m, b) exercise the pad-and-slice path
+    assert_kernel_matches_ref(r=8, n=5, m=m, k=8, b=b, tm=tm, tb=tb,
+                              rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 24), b=st.integers(2, 24))
+def test_kernel_bfloat16(m, b):
+    g = rand((8, 4, m, 8)).astype(jnp.bfloat16)
+    x = rand((b, 4, 8)).astype(jnp.bfloat16)
+    got = tk.tt_einsum_pallas(g, x)
+    want = ref.einsum_ref(g.astype(jnp.float32), x.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want),
+        rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(1, 4),
+    data=st.data(),
+)
+def test_tt_forward_pallas_matches_ref_chain(d, data):
+    ms = [data.draw(st.integers(2, 5)) for _ in range(d)]
+    ns = [data.draw(st.integers(2, 5)) for _ in range(d)]
+    ranks = [1] + [data.draw(st.sampled_from([1, 2, 4])) for _ in range(d - 1)] + [1]
+    batch = data.draw(st.integers(1, 6))
+    rng = np.random.default_rng(42)
+    cores = [jnp.asarray(rng.standard_normal(
+        (ranks[t], ns[t], ms[t], ranks[t + 1])).astype(np.float32) * 0.5)
+        for t in range(d)]
+    n_total = int(np.prod(ns))
+    x = jnp.asarray(rng.standard_normal((batch, n_total)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal(int(np.prod(ms))).astype(np.float32))
+    got = tk.tt_forward_pallas(x, cores, bias)
+    want = ref.tt_forward_ref(x, cores, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tt_forward_equals_dense_matmul():
+    # The whole point of TTD: the chain computes x @ W.T for the
+    # reconstructed W (paper Eq. 2/3 with row-major multi-indices).
+    rng = np.random.default_rng(7)
+    shapes = [(1, 2, 5, 4), (4, 2, 5, 4), (4, 2, 3, 4), (4, 7, 2, 4),
+              (4, 14, 2, 1)]
+    cores = [jnp.asarray(rng.standard_normal(s).astype(np.float32) * 0.3)
+             for s in shapes]
+    w = ref.tt_reconstruct(cores)
+    assert w.shape == (300, 784)
+    x = jnp.asarray(rng.standard_normal((3, 784)).astype(np.float32))
+    got = tk.tt_forward_pallas(x, cores)
+    want = x @ w.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cost-equation oracles (paper Eq. 4 / Eq. 11) — cross-language fixtures.
+# The Rust ttd::cost module asserts the same values; keep in sync.
+# ---------------------------------------------------------------------------
+
+def test_params_eq4_running_example():
+    # paper Sec. 2 example at R = 10:
+    # cores (1,2,5,10),(10,2,5,10),(10,2,3,10),(10,7,2,10),(10,14,2,1)
+    p = ref.tt_params([5, 5, 3, 2, 2], [2, 2, 2, 7, 14],
+                      [1, 10, 10, 10, 10, 1])
+    expected = 300 + (1 * 2 * 5 * 10 + 10 * 2 * 5 * 10 + 10 * 2 * 3 * 10
+                      + 10 * 7 * 2 * 10 + 10 * 14 * 2 * 1)
+    assert p == expected == 300 + 100 + 1000 + 600 + 1400 + 280
+
+
+def test_flops_eq11_is_sum_of_eq13_terms():
+    ms, ns, rk = [5, 3, 2], [2, 7, 14], [1, 4, 4, 1]
+    total = ref.tt_flops(ms, ns, rk)
+    # Eq. 13: FLOPs^(t) = 2 * r_t * r_{t-1} * m_t..m_d * n_1..n_t
+    e1 = 2 * 4 * 1 * (5 * 3 * 2) * 2
+    e2 = 2 * 4 * 4 * (3 * 2) * (2 * 7)
+    e3 = 2 * 1 * 4 * 2 * (2 * 7 * 14)
+    assert total == (5 * 3 * 2) + e1 + e2 + e3
+
+
+def test_flops_match_actual_multiply_count():
+    # count scalar multiplies the chain performs and compare with Eq. 11
+    ms, ns, rk = [4, 3], [2, 5], [1, 2, 1]
+    d = 2
+    n_total = int(np.prod(ns))
+    mults = 0
+    cur_size = n_total  # batch 1
+    for t in range(d - 1, -1, -1):
+        r_prev, n_t, m_t, r_t = rk[t], ns[t], ms[t], rk[t + 1]
+        bt = cur_size // (n_t * r_t)
+        # each output element needs n_t*r_t mults and n_t*r_t adds
+        mults += 2 * m_t * bt * r_prev * n_t * r_t
+        cur_size = m_t * bt * r_prev
+    assert mults + int(np.prod(ms)) == ref.tt_flops(ms, ns, rk)

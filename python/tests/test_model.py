@@ -1,0 +1,107 @@
+# pytest: L2 model — TT layer vs dense reconstruction, MLP shapes, grads.
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_core_shapes_match_t3f_layout():
+    cs = model.core_shapes((5, 5, 3, 2, 2), (2, 2, 2, 7, 14),
+                           (1, 10, 10, 10, 10, 1))
+    # paper Sec. 2: G^0..G^4 shapes (r_{t-1}, n_t, m_t, r_t)
+    assert cs == [(1, 2, 5, 10), (10, 2, 5, 10), (10, 2, 3, 10),
+                  (10, 7, 2, 10), (10, 14, 2, 1)]
+
+
+def test_init_variance_roughly_glorot():
+    cores = model.init_tt_cores(KEY, (20, 15), (28, 28), (1, 8, 1))
+    w = ref.tt_reconstruct(cores)
+    target = 2.0 / (300 + 784)
+    var = float(jnp.var(w))
+    assert 0.1 * target < var < 10 * target
+
+
+def test_tt_linear_apply_impls_agree():
+    cores = model.init_tt_cores(KEY, (20, 15), (28, 28), (1, 8, 1))
+    bias = jnp.linspace(-1, 1, 300, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 784))
+    a = model.tt_linear_apply(cores, bias, x, impl="pallas")
+    b = model.tt_linear_apply(cores, bias, x, impl="jnp")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_tt_linear_equals_dense_on_reconstruction():
+    cores = model.init_tt_cores(KEY, (10, 10), (20, 15), (1, 8, 1))
+    w = ref.tt_reconstruct(cores)
+    bias = jnp.zeros((100,))
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 300))
+    tt = model.tt_linear_apply(cores, bias, x, impl="pallas")
+    dn = model.dense_apply(w, bias, x)
+    np.testing.assert_allclose(np.asarray(tt), np.asarray(dn),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_variants_shapes():
+    xt = jax.random.normal(jax.random.PRNGKey(3), (7, 784))
+    tt = model.mlp_tt_apply(model.init_mlp_tt(KEY), xt)
+    dn = model.mlp_dense_apply(model.init_mlp_dense(KEY), xt)
+    assert tt.shape == dn.shape == (7, 10)
+
+
+def test_flatten_unflatten_roundtrip():
+    params = model.init_mlp_tt(KEY)
+    flat = model.flatten_tt_mlp_params(params)
+    back = model.unflatten_tt_mlp_params(flat)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 784))
+    a = model.mlp_tt_apply(params, x, impl="jnp")
+    b = model.mlp_tt_apply(back, x, impl="jnp")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_flat_entry_points_return_tuples():
+    params = model.init_mlp_tt(KEY)
+    flat = model.flatten_tt_mlp_params(params)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 784))
+    (out,) = model.mlp_tt_forward_flat(x, *flat)
+    assert out.shape == (2, 10)
+
+
+def test_grad_descends_loss():
+    params = model.init_mlp_tt(KEY)
+    x = jax.random.normal(jax.random.PRNGKey(6), (32, 784))
+    labels = jnp.arange(32) % 10
+    loss0 = model.mlp_tt_loss(params, x, labels)
+    grads = model.mlp_tt_grad(params, x, labels)
+    stepped = jax.tree_util.tree_map(lambda p, g: p - 0.5 * g, params, grads)
+    loss1 = model.mlp_tt_loss(stepped, x, labels)
+    assert float(loss1) < float(loss0)
+
+
+def test_tt_compression_counts():
+    # the LeNet300 l1 factorization must actually compress (paper Eq. 4)
+    spec = model.LENET300_TT_SPEC["l1"]
+    p = ref.tt_params(spec["m_shape"], spec["n_shape"], spec["ranks"])
+    dense_params = 300 * 784 + 300
+    assert p < dense_params / 25  # > 25x parameter compression (8140 params)
+    f = ref.tt_flops(spec["m_shape"], spec["n_shape"], spec["ranks"])
+    dense_flops = 2 * 300 * 784 + 300
+    assert f < dense_flops  # initial-layer constraint satisfied
+
+
+@settings(max_examples=10, deadline=None)
+@given(batch=st.integers(1, 9), seed=st.integers(0, 1000))
+def test_mlp_tt_batch_invariance(batch, seed):
+    # per-sample results must not depend on which batch they ride in
+    params = model.init_mlp_tt(KEY)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (batch, 784))
+    full = model.mlp_tt_apply(params, x, impl="jnp")
+    one = model.mlp_tt_apply(params, x[:1], impl="jnp")
+    np.testing.assert_allclose(np.asarray(full[:1]), np.asarray(one),
+                               rtol=1e-4, atol=1e-5)

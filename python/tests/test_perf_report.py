@@ -1,0 +1,46 @@
+# pytest: the L1 structural performance estimators behave sanely.
+import math
+
+from compile.kernels import tt_einsum as tk
+from compile import perf_report
+
+
+def test_vmem_formula_counts_all_tiles():
+    # (G tile + In tile + Out tile) * 4 bytes
+    v = tk.vmem_bytes_per_cell(r=8, n=4, m=64, k=8, tm=16, tb=32)
+    expected = 4 * (8 * 4 * 16 * 8 + 32 * 4 * 8 + 16 * 32 * 8)
+    assert v == expected
+
+
+def test_mxu_utilization_bounds_and_monotonicity():
+    # always in (0, 1]; bigger tiles can't hurt utilization
+    small = tk.mxu_utilization_estimate(8, 4, 64, 8, tm=8, tb=8)
+    big = tk.mxu_utilization_estimate(8, 4, 64, 8, tm=64, tb=128)
+    assert 0.0 < small <= 1.0
+    assert 0.0 < big <= 1.0
+    assert big >= small
+
+
+def test_full_mxu_tiles_are_perfect():
+    # every dot dimension a multiple of 128 -> utilization exactly 1
+    u = tk.mxu_utilization_estimate(r=8, n=16, m=1024, k=8, tm=128, tb=128)
+    # contraction n*k = 128, a = tb = 128, b = tm*r = 1024
+    assert math.isclose(u, 1.0)
+
+
+def test_block_choice_report_structure():
+    rows = tk.block_choice_report(8, 4, 64, 8, 3582)
+    assert len(rows) >= 3
+    for x in rows:
+        assert x["tm"] <= 64 and x["tb"] <= 3582
+        assert x["vmem_bytes"] > 0
+        assert x["grid"] >= 1
+
+
+def test_pick_block_prefers_fitting_shapes():
+    best, rows = perf_report.pick_block(8, 4, 64, 8, 3582)
+    assert best in rows
+    assert best["vmem_bytes"] <= perf_report.VMEM_BUDGET
+    # best has max utilization among fitting candidates
+    fitting = [x for x in rows if x["vmem_bytes"] <= perf_report.VMEM_BUDGET]
+    assert best["mxu_util"] == max(x["mxu_util"] for x in fitting)

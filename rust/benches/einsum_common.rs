@@ -1,0 +1,100 @@
+//! Shared harness for Figs. 12-14: one CB-suite sweep of a kernel variant
+//! measuring ours vs IREE-like vs Pluto-like, with modeled-K1 columns.
+
+use ttrv::baselines::{iree_like, pluto_like};
+use ttrv::bench::{measure, BenchCfg, Measurement};
+use ttrv::compiler::{cb_suite, compile};
+use ttrv::kernels;
+use ttrv::machine::{costmodel, MachineSpec};
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::EinsumKind;
+use ttrv::util::prng::Rng;
+use ttrv::util::stats;
+
+pub struct FigRow {
+    pub id: &'static str,
+    pub flops: u64,
+    pub ours: Measurement,
+    pub iree: Measurement,
+    pub pluto: Measurement,
+    pub k1_model_gflops: f64,
+}
+
+pub fn run_suite(kind: EinsumKind, fig: &str) {
+    let machine = MachineSpec::spacemit_k1();
+    let host = MachineSpec::host();
+    let bcfg = BenchCfg::from_env();
+    let mut rng = Rng::new(12);
+    let mut rows = Vec::new();
+    for entry in cb_suite(kind) {
+        let d = entry.dims;
+        let g = Tensor::randn(vec![d.r, d.n, d.m, d.k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![d.b, d.n, d.k], 1.0, &mut rng);
+        let plan = compile(&d, &machine).expect("plan");
+        // measured path: plan against the *host* description (16 vregs,
+        // 1 core) — the compiler is machine-parameterized, so the measured
+        // numbers reflect what it would deploy on this CPU, while the
+        // modeled column uses the K1 plan (DESIGN.md §3)
+        let mut host_plan = compile(&d, &host).expect("host plan");
+        host_plan.threads = 1;
+        // measured autotune over the solver's top candidates (§Perf iter 2)
+        host_plan = kernels::tune_plan(&host_plan, &host, &g, &x, 6).expect("tune");
+        let pg = kernels::pack(&g, &host_plan).expect("pack");
+        let gm = iree_like::prepare_g(&g).expect("prep");
+        let ours = measure(&format!("{} ours", entry.id), d.flops(), &bcfg, || {
+            kernels::execute(&host_plan, &pg, &x).expect("kernel");
+        });
+        let iree = measure(&format!("{} iree", entry.id), d.flops(), &bcfg, || {
+            iree_like::run(&gm, &x, d.r).expect("iree");
+        });
+        let pluto = measure(&format!("{} pluto", entry.id), d.flops(), &bcfg, || {
+            pluto_like::einsum_default(&g, &x).expect("pluto");
+        });
+        rows.push(FigRow {
+            id: entry.id,
+            flops: d.flops(),
+            ours,
+            iree,
+            pluto,
+            k1_model_gflops: costmodel::gflops(&plan, &machine),
+        });
+    }
+
+    println!("== {fig}: {kind:?} Einsum kernel, CB0-CB7 (measured host + modeled K1) ==");
+    println!(
+        "{:<5} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "CB", "FLOPs", "ours", "iree", "pluto", "vs iree", "vs pluto", "K1 model"
+    );
+    let mut s_iree = Vec::new();
+    let mut s_pluto = Vec::new();
+    for r in &rows {
+        let vi = r.iree.seconds / r.ours.seconds;
+        let vp = r.pluto.seconds / r.ours.seconds;
+        s_iree.push(vi);
+        s_pluto.push(vp);
+        println!(
+            "{:<5} {:>10} {:>7.2}GF {:>7.2}GF {:>7.2}GF {:>8.2}x {:>8.2}x {:>8.2}GF",
+            r.id,
+            r.flops,
+            r.ours.gflops(),
+            r.iree.gflops(),
+            r.pluto.gflops(),
+            vi,
+            vp,
+            r.k1_model_gflops
+        );
+    }
+    println!(
+        "geomean speedup: vs IREE-like {:.2}x | vs Pluto-like {:.2}x  (paper avg: ~3x / ~8x overall)",
+        geomean(&s_iree),
+        geomean(&s_pluto)
+    );
+    println!(
+        "mean measured GFLOP/s (ours): {:.2}",
+        stats::mean(&rows.iter().map(|r| r.ours.gflops()).collect::<Vec<_>>())
+    );
+}
+
+pub fn geomean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}

@@ -1,0 +1,21 @@
+//! Fig. 1: parameters and FLOPs percentage of FC vs non-FC parts across the
+//! model zoo. Regenerates both bar series.
+
+fn main() {
+    println!("== Fig. 1: FC vs non-FC share (params | FLOPs) ==");
+    println!("{:<22} {:>12} {:>12} {:>14} {:>12}", "model", "params", "FC-param%", "FLOPs", "FC-FLOPs%");
+    for m in ttrv::models::all_models() {
+        let (fc_p, other_p) = m.params_split();
+        let (fc_f, other_f) = m.flops_split();
+        println!(
+            "{:<22} {:>12} {:>11.1}% {:>14} {:>11.1}%",
+            m.name,
+            fc_p + other_p,
+            m.fc_param_share(),
+            fc_f + other_f,
+            m.fc_flops_share()
+        );
+    }
+    println!("\npaper shape check: LLMs ~100% FC FLOPs; ImageNet CNNs <15% FC FLOPs;");
+    println!("VGG16/AlexNet param share dominated by FC. See EXPERIMENTS.md Fig.1.");
+}

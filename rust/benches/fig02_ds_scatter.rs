@@ -1,0 +1,79 @@
+//! Fig. 2: (a) the params-vs-FLOPs design space of the FC layer 120x84,
+//! full and filtered to solutions beating the initial layer; (b) FLOPs vs
+//! *measured* execution time for sampled solutions (showing FLOPs and time
+//! do not always align).
+
+use ttrv::bench::{measure, BenchCfg};
+use ttrv::compiler::compile;
+use ttrv::config::DseConfig;
+use ttrv::kernels;
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{self, einsum_chain};
+use ttrv::util::prng::Rng;
+
+fn main() {
+    // ---- Fig. 2a: the design space of [120, 84] -------------------------
+    let mut cfg = DseConfig::default();
+    // admit every rank 1..=max for the scatter (the paper plots all)
+    cfg.ranks = (1..=64).collect();
+    cfg.vl = 1; // no vectorization filter for the raw scatter
+    let sols = ttrv::dse::space::enumerate_aligned(84, 120, &cfg);
+    let dense_p = cost::dense_params(84, 120);
+    let dense_f = cost::dense_flops(84, 120);
+    let better = sols
+        .iter()
+        .filter(|s| s.params < dense_p && s.flops < dense_f)
+        .count();
+    println!("== Fig. 2a: DS of FC 120x84 (aligned configurations) ==");
+    println!("initial layer: params={dense_p} flops={dense_f}");
+    println!("aligned solutions: {} | beating the initial layer: {}", sols.len(), better);
+    println!("sample (params, flops) points:");
+    for s in sols.iter().step_by((sols.len() / 15).max(1)) {
+        let mark = if s.params < dense_p && s.flops < dense_f { "*" } else { " " };
+        println!("  {mark} params={:<8} flops={:<8} {}", s.params, s.flops, s.layout.describe());
+    }
+
+    // ---- Fig. 2b: FLOPs vs measured time --------------------------------
+    println!("\n== Fig. 2b: FLOPs vs measured execution time (rank-8 solutions) ==");
+    let machine = MachineSpec::spacemit_k1();
+    let bcfg = BenchCfg::from_env();
+    let mut rng = Rng::new(2);
+    let cfg8 = DseConfig::default();
+    let sols8 = ttrv::dse::space::enumerate_aligned(84, 120, &cfg8);
+    println!("{:>10} {:>12} {:>10}", "flops", "time", "layout");
+    let mut rows: Vec<(u64, f64, String)> = Vec::new();
+    for s in sols8.iter().take(12) {
+        // execute the whole einsum chain at batch 1
+        let chain = einsum_chain(&s.layout, 1);
+        let cores: Vec<Tensor> = s
+            .layout
+            .core_shapes()
+            .into_iter()
+            .map(|sh| Tensor::randn(sh.to_vec(), 0.3, &mut rng))
+            .collect();
+        let plans: Vec<_> = chain.iter().map(|d| compile(d, &machine).unwrap()).collect();
+        let packed: Vec<_> = plans
+            .iter()
+            .enumerate()
+            .map(|(i, p)| kernels::pack(&cores[s.layout.d() - 1 - i], p).unwrap())
+            .collect();
+        let x0 = rng.normal_vec(s.layout.n_total() as usize, 1.0);
+        let mes = measure("chain", s.flops, &bcfg, || {
+            let mut cur = x0.clone();
+            let mut out = Vec::new();
+            for (p, g) in plans.iter().zip(&packed) {
+                kernels::execute_into(p, g, &cur, &mut out).unwrap();
+                std::mem::swap(&mut cur, &mut out);
+            }
+        });
+        rows.push((s.flops, mes.seconds, s.layout.describe()));
+    }
+    rows.sort_by_key(|r| r.0);
+    for (f, t, l) in &rows {
+        println!("{:>10} {:>12} {}", f, ttrv::bench::format_secs(*t), l);
+    }
+    // the Fig. 2b observation: time is not monotone in FLOPs
+    let monotone = rows.windows(2).all(|w| w[0].1 <= w[1].1 * 1.05);
+    println!("\ntime monotone in FLOPs? {monotone} (paper: No — Fig. 2b)");
+}

@@ -1,0 +1,44 @@
+//! Fig. 9: speedup vs thread count for Einsum kernels of increasing FLOPs
+//! on the (modeled) SpacemiT K1.
+//!
+//! The CI host has one core, so multi-thread *speedups* come from the
+//! calibrated cost model (DESIGN.md §3); the thread-selection heuristic the
+//! paper derives from this figure is reproduced exactly and the measured
+//! single-core numbers anchor the model.
+
+use ttrv::compiler::{compile, threads};
+use ttrv::machine::costmodel::thread_speedup;
+use ttrv::machine::MachineSpec;
+use ttrv::ttd::cost::{EinsumDims, EinsumKind};
+
+fn dims_for_flops(target: u64) -> EinsumDims {
+    let m = (target / (2 * 256 * 8 * 8 * 4)).max(1) as usize;
+    EinsumDims { kind: EinsumKind::Middle, m, b: 256, n: 4, r: 8, k: 8 }
+}
+
+fn main() {
+    let machine = MachineSpec::spacemit_k1();
+    println!("== Fig. 9: modeled speedup vs threads (SpacemiT K1) ==");
+    println!("{:>12} {:>8} {:>8} {:>8} {:>8}  best", "FLOPs", "T=1", "T=2", "T=3", "T=4");
+    for target in [5e5, 1e6, 2e6, 3e6, 4e6, 6e6, 8e6, 2e7, 1e8] {
+        let d = dims_for_flops(target as u64);
+        let plan = compile(&d, &machine).unwrap();
+        let speedups: Vec<f64> = (1..=4).map(|t| thread_speedup(&plan, &machine, t)).collect();
+        let best = 1 + speedups
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let heuristic = threads::threads_for(&d, &machine);
+        println!(
+            "{:>12} {:>8.2} {:>8.2} {:>8.2} {:>8.2}  model={best} heuristic={heuristic}",
+            d.flops(),
+            speedups[0],
+            speedups[1],
+            speedups[2],
+            speedups[3]
+        );
+    }
+    println!("\npaper thresholds: <2e6 -> 1T, 2-4e6 -> 2T, 4-8e6 -> 3T, >8e6 -> 4T");
+}

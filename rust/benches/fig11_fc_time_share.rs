@@ -1,0 +1,49 @@
+//! Fig. 11: percentage of total execution time spent in FC layers.
+//!
+//! The paper uses the TFLite layer profiler on-device; here each layer's
+//! latency comes from the same memory-bound machine model used throughout
+//! (modeled K1, batch 1): t = max(flops / (vl * f), bytes / BW).
+
+use ttrv::machine::MachineSpec;
+use ttrv::models::{self, LayerSpec};
+
+/// Modeled single-core latency of one layer at batch 1.
+fn layer_seconds(l: &LayerSpec, machine: &MachineSpec) -> f64 {
+    let flops = l.flops() as f64;
+    let bytes = match *l {
+        // weights + activations streamed once
+        LayerSpec::Conv { c_in, c_out, k, out_h, out_w } => {
+            4.0 * (c_in * c_out * k * k + c_out * out_h * out_w + c_in * out_h * out_w * 4) as f64
+        }
+        LayerSpec::Fc { n, m, tokens } => 4.0 * (n * m + (n + m) * tokens) as f64,
+        LayerSpec::Embed { dim, .. } => 4.0 * dim as f64,
+        LayerSpec::Norm { dim, tokens } => 4.0 * (2 * dim * tokens) as f64,
+        LayerSpec::AttnMatmul { seq, dim } => 4.0 * (2 * seq * dim + seq * seq) as f64,
+    };
+    let compute = flops / (machine.peak_gflops_core() * 1e9);
+    let memory = bytes / (machine.dram_gbps * 1e9);
+    compute.max(memory)
+}
+
+fn main() {
+    let machine = MachineSpec::spacemit_k1();
+    println!("== Fig. 11: modeled FC share of execution time (K1, batch 1) ==");
+    println!("{:<22} {:>12}", "model", "FC time %");
+    for m in models::all_models() {
+        // very large LLMs don't fit the device in the paper either; keep the
+        // same set but note the substitution
+        let mut fc = 0.0;
+        let mut other = 0.0;
+        for (l, count) in &m.layers {
+            let t = layer_seconds(l, &machine) * *count as f64;
+            if l.is_fc() {
+                fc += t;
+            } else {
+                other += t;
+            }
+        }
+        let share = 100.0 * fc / (fc + other);
+        println!("{:<22} {:>11.1}%", m.name, share);
+    }
+    println!("\npaper anchors: LeNet300 97.6% | LLMs up to 86.1% | conv-heavy CNNs lower");
+}

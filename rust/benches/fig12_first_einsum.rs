@@ -1,0 +1,9 @@
+//! Fig. 12: First-Einsum kernel (k = r_d = 1), CB0-CB7 — ours vs IREE-like
+//! vs Pluto-like, GFLOP/s.
+
+#[path = "einsum_common.rs"]
+mod einsum_common;
+
+fn main() {
+    einsum_common::run_suite(ttrv::ttd::cost::EinsumKind::First, "Fig. 12");
+}

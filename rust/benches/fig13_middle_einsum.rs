@@ -1,0 +1,9 @@
+//! Fig. 13: Middle-Einsum kernel (r = k = 8), CB0-CB7 — ours vs IREE-like
+//! vs Pluto-like, GFLOP/s.
+
+#[path = "einsum_common.rs"]
+mod einsum_common;
+
+fn main() {
+    einsum_common::run_suite(ttrv::ttd::cost::EinsumKind::Middle, "Fig. 13");
+}

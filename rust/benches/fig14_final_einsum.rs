@@ -1,0 +1,9 @@
+//! Fig. 14: Final-Einsum kernel (r = r_0 = 1, k-loop vectorized with
+//! horizontal adds), CB0-CB7 — ours vs IREE-like vs Pluto-like, GFLOP/s.
+
+#[path = "einsum_common.rs"]
+mod einsum_common;
+
+fn main() {
+    einsum_common::run_suite(ttrv::ttd::cost::EinsumKind::Final, "Fig. 14");
+}

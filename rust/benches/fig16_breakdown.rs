@@ -1,0 +1,111 @@
+//! Fig. 16: progressive-optimization breakdown on the factorized layers of
+//! Sec. 6.4 at rank 16 — GCC-O3-style naive, +vectorization/packing,
+//! +RB/tiling, +parallelization (modeled; 1 host core).
+
+use ttrv::bench::{measure, BenchCfg};
+use ttrv::compiler::pipeline::{compile_stage, OptStage};
+use ttrv::config::DseConfig;
+use ttrv::dse;
+use ttrv::kernels;
+use ttrv::machine::{costmodel, MachineSpec};
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::einsum_chain;
+use ttrv::util::prng::Rng;
+
+fn main() {
+    let machine = MachineSpec::spacemit_k1();
+    let mut cfg = DseConfig::default();
+    cfg.ranks = vec![16]; // the paper uses rank 16 here
+    let bcfg = BenchCfg::from_env();
+    let mut rng = Rng::new(16);
+    let models: Vec<(&str, Vec<(u64, u64)>)> = vec![
+        ("ResNet", vec![(2048, 1000)]),
+        ("VGG", vec![(512, 512), (512, 256)]),
+        ("AlexNet", vec![(4096, 2048), (2048, 2048)]),
+        ("GPT2-M", vec![(1024, 1024)]),
+    ];
+    let stages = [OptStage::Naive, OptStage::VecPack, OptStage::RbTile, OptStage::Parallel];
+
+    println!("== Fig. 16: speedup over naive per optimization stage (rank 16) ==");
+    println!(
+        "{:<10} {:>9} {:>12} {:>12} {:>14}",
+        "model", "naive", "+vec/pack", "+RB/tile", "+par (modeled)"
+    );
+    let mut geo: Vec<[f64; 4]> = Vec::new();
+    for (name, layers) in &models {
+        let mut totals = [0.0f64; 4];
+        for &(n, m) in layers {
+            let e = dse::explore(m, n, &cfg);
+            let Ok(sol) = dse::select_solution(&e, 16) else { continue };
+            let chain = einsum_chain(&sol.layout, 1);
+            let cores: Vec<Tensor> = sol
+                .layout
+                .core_shapes()
+                .into_iter()
+                .map(|s| Tensor::randn(s.to_vec(), 0.2, &mut rng))
+                .collect();
+            let x0 = rng.normal_vec(sol.layout.n_total() as usize, 1.0);
+            let mut layer_rbtile = 0.0f64;
+            for (si, stage) in stages.iter().enumerate() {
+                let plans: Vec<_> = chain
+                    .iter()
+                    .map(|d| compile_stage(d, &machine, *stage).unwrap())
+                    .collect();
+                if *stage == OptStage::Parallel {
+                    // 1-core host: take THIS layer's measured RbTile time and
+                    // apply the modeled parallel speedup (DESIGN.md §3)
+                    let model_speedup: f64 = plans
+                        .iter()
+                        .map(|p| {
+                            let single = ttrv::compiler::OptimizationPlan { threads: 1, ..*p };
+                            costmodel::estimate(&single, &machine).seconds()
+                                / costmodel::estimate(p, &machine).seconds()
+                        })
+                        .sum::<f64>()
+                        / plans.len() as f64;
+                    totals[si] += layer_rbtile / model_speedup.max(1.0);
+                    continue;
+                }
+                let packed: Vec<_> = plans
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| {
+                        kernels::pack(&cores[sol.layout.d() - 1 - i], p).unwrap()
+                    })
+                    .collect();
+                let mes = measure("stage", sol.flops, &bcfg, || {
+                    let mut cur = x0.clone();
+                    let mut out = Vec::new();
+                    for (p, g) in plans.iter().zip(&packed) {
+                        kernels::execute_into(p, g, &cur, &mut out).unwrap();
+                        std::mem::swap(&mut cur, &mut out);
+                    }
+                });
+                totals[si] += mes.seconds;
+                if *stage == OptStage::RbTile {
+                    layer_rbtile = mes.seconds;
+                }
+            }
+        }
+        let s = |i: usize| totals[0] / totals[i];
+        println!(
+            "{:<10} {:>8.2}x {:>11.2}x {:>11.2}x {:>13.2}x",
+            name,
+            1.0,
+            s(1),
+            s(2),
+            s(3)
+        );
+        geo.push([1.0, s(1), s(2), s(3)]);
+    }
+    let gm = |i: usize| {
+        (geo.iter().map(|g| g[i].ln()).sum::<f64>() / geo.len() as f64).exp()
+    };
+    println!(
+        "\ngeomean: +vec/pack {:.1}x | +RB/tile {:.1}x | +par {:.1}x \
+         (paper: ~9x, ~2x more, ~1.7x more; overall ~37x)",
+        gm(1),
+        gm(2),
+        gm(3)
+    );
+}

@@ -1,0 +1,53 @@
+//! §Perf harness: register-blocking factor sweep on representative middle
+//! Einsum kernels — validates the analytical RB solver's choice against
+//! brute-force measurement on the host (EXPERIMENTS.md §Perf).
+
+use ttrv::bench::{measure, BenchCfg};
+use ttrv::compiler::plan::RbFactors;
+use ttrv::compiler::{compile, cb_suite};
+use ttrv::kernels;
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::EinsumKind;
+use ttrv::util::prng::Rng;
+
+fn main() {
+    let host = MachineSpec::host();
+    let bcfg = BenchCfg::from_env();
+    let mut rng = Rng::new(99);
+    let candidates = [
+        (1usize, 8usize),
+        (2, 4),
+        (2, 6),
+        (2, 8),
+        (4, 2),
+        (4, 3),
+        (4, 4),
+        (4, 6),
+        (8, 1),
+        (8, 2),
+    ];
+    for idx in [3usize, 7] {
+        let entry = cb_suite(EinsumKind::Middle)[idx];
+        let mut dims = entry.dims;
+        dims.b = dims.b.min(1024);
+        let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, &mut rng);
+        let base = compile(&dims, &host).expect("plan");
+        println!(
+            "== RB sweep {} (m={} b={} n={} r={} k={}); solver chose ({}, {}) ==",
+            entry.id, dims.m, dims.b, dims.n, dims.r, dims.k, base.rb.rm, base.rb.rb
+        );
+        for (rm, rb) in candidates {
+            let mut plan = base;
+            plan.rb = RbFactors { rm, rb, rr: 1, rk: 1 };
+            plan.threads = 1;
+            let pg = kernels::pack(&g, &plan).expect("pack");
+            let m = measure(&format!("rm={rm} rb={rb}"), dims.flops(), &bcfg, || {
+                kernels::execute(&plan, &pg, &x).expect("exec");
+            });
+            let mark = if (rm, rb) == (base.rb.rm, base.rb.rb) { " <= solver" } else { "" };
+            println!("  rm={rm} rb={rb}: {:>7.2} GF  (regs {}){mark}", m.gflops(), plan.rb.registers());
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Tables 1-2: design-space reduction per FC layer for every CNN and LLM
+//! in the paper's evaluation.
+
+use ttrv::config::DseConfig;
+use ttrv::dse::report::{format_rows, rows_for_model};
+use ttrv::models;
+
+fn main() {
+    let cfg = DseConfig::default();
+    let mut cnn_rows = Vec::new();
+    for m in models::cnn_models() {
+        cnn_rows.extend(rows_for_model(&m, &cfg));
+    }
+    print!("{}", format_rows("Table 1: design-space reduction (CNN models)", &cnn_rows));
+
+    let mut llm_rows = Vec::new();
+    for m in models::llm_models() {
+        llm_rows.extend(rows_for_model(&m, &cfg));
+    }
+    print!("{}", format_rows("Table 2: design-space reduction (LLM models)", &llm_rows));
+
+    // shape checks the paper states in Sec. 6.2
+    let max_all = cnn_rows
+        .iter()
+        .chain(&llm_rows)
+        .map(|r| r.counts.all)
+        .fold(0.0f64, f64::max);
+    println!("\nlargest raw design space: {:.1e} (paper: up to ~4.9e33 under its counting model)", max_all);
+    let all_reduce: Vec<f64> = cnn_rows
+        .iter()
+        .chain(&llm_rows)
+        .filter(|r| r.counts.aligned > 0.0)
+        .map(|r| r.counts.all / r.counts.aligned)
+        .collect();
+    let geo = (all_reduce.iter().map(|x| x.ln()).sum::<f64>() / all_reduce.len() as f64).exp();
+    println!(
+        "alignment-stage reduction: geomean {:.1}x across {} layers (paper: 2.1x-92x)",
+        geo,
+        all_reduce.len()
+    );
+}

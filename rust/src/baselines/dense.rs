@@ -1,0 +1,77 @@
+//! Dense (uncompressed) FC baseline: the MMM kernel the paper's Fig. 15
+//! uses for the non-factorized layers ("non-factorized FC layers were
+//! executed using the MMM kernel").
+
+use crate::error::Result;
+use crate::linalg::matmul;
+use crate::tensor::Tensor;
+
+/// A dense FC layer prepared for repeated inference: `W^T` materialized once
+/// (compile-time) so the hot path is a single row-major MMM.
+#[derive(Debug, Clone)]
+pub struct DenseFc {
+    /// `(N, M)` — transposed weights.
+    wt: Tensor,
+    bias: Option<Vec<f32>>,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl DenseFc {
+    /// Build from `W (M, N)`.
+    pub fn new(w: &Tensor, bias: Option<Vec<f32>>) -> Result<Self> {
+        let d = w.dims();
+        let (m, n) = (d[0], d[1]);
+        Ok(DenseFc { wt: w.transpose(&[1, 0])?, bias, m, n })
+    }
+
+    /// `Y = X W^T + b`, X `(B, N)`.
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let mut y = matmul(x, &self.wt)?;
+        if let Some(b) = &self.bias {
+            let m = self.m;
+            for row in y.data_mut().chunks_mut(m) {
+                for (v, &bv) in row.iter_mut().zip(b) {
+                    *v += bv;
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// FLOPs per forward at batch `b`.
+    pub fn flops(&self, b: usize) -> u64 {
+        (2 * self.m * self.n * b + if self.bias.is_some() { self.m * b } else { 0 }) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::einsum::fc_batched_ref;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_reference_fc() {
+        let mut rng = Rng::new(95);
+        let w = Tensor::randn(vec![30, 20], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..30).map(|i| i as f32 / 10.0).collect();
+        let fc = DenseFc::new(&w, Some(bias.clone())).unwrap();
+        let x = Tensor::randn(vec![7, 20], 1.0, &mut rng);
+        let got = fc.forward(&x).unwrap();
+        let want = fc_batched_ref(&w, &x, Some(&bias)).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+        assert_eq!(fc.flops(7), 2 * 30 * 20 * 7 + 30 * 7);
+    }
+
+    #[test]
+    fn no_bias_path() {
+        let mut rng = Rng::new(96);
+        let w = Tensor::randn(vec![4, 6], 1.0, &mut rng);
+        let fc = DenseFc::new(&w, None).unwrap();
+        let x = Tensor::randn(vec![2, 6], 1.0, &mut rng);
+        let got = fc.forward(&x).unwrap();
+        let want = fc_batched_ref(&w, &x, None).unwrap();
+        assert!(got.allclose(&want, 1e-5, 1e-5));
+    }
+}

@@ -1,0 +1,88 @@
+//! IREE-like baseline: einsum as transpose/pack -> MMM -> unpack/transpose
+//! (the paper's Appendix, Listing 8).
+
+use crate::error::Result;
+use crate::linalg::matmul;
+use crate::tensor::einsum::{core_dims, slab_dims};
+use crate::tensor::Tensor;
+
+/// The compile-time half: `G (r, n, m, k) -> (r*m, n*k)` matrix, i.e. the
+/// `stablehlo.transpose dims=[0,2,1,3]` + reshape that
+/// `iree-consteval-jit-globals` folds into the constant.
+pub fn prepare_g(g: &Tensor) -> Result<Tensor> {
+    let (r, n, m, k) = core_dims(g)?;
+    let t = g.transpose(&[0, 2, 1, 3])?; // (r, m, n, k)
+    t.reshape(vec![r * m, n * k])
+}
+
+/// The runtime half, mirroring Listing 8 exactly:
+/// 1. transpose input `(b, n, k) -> (n, k, b)`, reshape `(n*k, b)` (packing);
+/// 2. `stablehlo.dot`: `(r*m, n*k) x (n*k, b)`;
+/// 3. reshape `(r, m, b)`, transpose `-> (m, b, r)` (unpacking).
+pub fn run(g_mat: &Tensor, x: &Tensor, r: usize) -> Result<Tensor> {
+    let d = x.dims();
+    let (b, n, k) = (d[0], d[1], d[2]);
+    let rm = g_mat.dims()[0];
+    let m = rm / r;
+    // step 1: input transpose + pack
+    let xt = x.transpose(&[1, 2, 0])?.reshape(vec![n * k, b])?;
+    // step 2: MMM
+    let prod = matmul(g_mat, &xt)?; // (r*m, b)
+    // step 3: output unpack + transpose
+    prod.reshape(vec![r, m, b])?.transpose(&[1, 2, 0])
+}
+
+/// Convenience: full einsum through the IREE-like path.
+pub fn einsum(g: &Tensor, x: &Tensor) -> Result<Tensor> {
+    let (r, n, k) = {
+        let (r, n, _m, k) = core_dims(g)?;
+        (r, n, k)
+    };
+    slab_dims(x, n, k)?;
+    let g_mat = prepare_g(g)?;
+    run(&g_mat, x, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::einsum::tt_einsum_ref;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_reference_on_cb5() {
+        // the Appendix's own example: G (8,7,32,8), x (9,7,8) -> (32,9,8)
+        let mut rng = Rng::new(80);
+        let g = Tensor::randn(vec![8, 7, 32, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![9, 7, 8], 1.0, &mut rng);
+        let got = einsum(&g, &x).unwrap();
+        assert_eq!(got.dims(), &[32, 9, 8]);
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn matches_reference_on_degenerate_ranks() {
+        let mut rng = Rng::new(81);
+        for (r, n, m, k, b) in [(8, 5, 16, 1, 7), (1, 6, 12, 8, 9), (1, 2, 3, 1, 4)] {
+            let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+            let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+            let got = einsum(&g, &x).unwrap();
+            let want = tt_einsum_ref(&g, &x).unwrap();
+            assert!(got.allclose(&want, 1e-4, 1e-4), "r={r} k={k}");
+        }
+    }
+
+    #[test]
+    fn prepared_g_is_reusable_across_inputs() {
+        let mut rng = Rng::new(82);
+        let g = Tensor::randn(vec![8, 4, 8, 8], 1.0, &mut rng);
+        let gm = prepare_g(&g).unwrap();
+        for _ in 0..3 {
+            let x = Tensor::randn(vec![5, 4, 8], 1.0, &mut rng);
+            let got = run(&gm, &x, 8).unwrap();
+            let want = tt_einsum_ref(&g, &x).unwrap();
+            assert!(got.allclose(&want, 1e-4, 1e-4));
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Comparator implementations (paper §5/§6): the IREE-like and Pluto-like
+//! strategies the paper benchmarks against, plus the dense uncompressed FC.
+//!
+//! Neither tool runs in this environment (no RISC-V board, no cross
+//! toolchain), so each baseline reimplements the *code shape* the paper
+//! attributes to the tool — reproducing its overhead structure on the same
+//! substrate our kernels run on (DESIGN.md §3):
+//!
+//! * **IREE-like** ([`iree_like`]): the `iree-stablehlo-to-stablehlo-
+//!   preprocessing` rewrite from the paper's Appendix — einsum becomes
+//!   transpose/reshape -> MMM -> reshape/transpose, with the `G` transpose
+//!   const-folded away (`iree-consteval-jit-globals`) but the input/output
+//!   transposes and pack/unpack paid at runtime.
+//! * **Pluto-like** ([`pluto_like`]): polyhedral tiling + interchange of the
+//!   Listing-2 nest on the canonical layout, *without* vectorization (the
+//!   paper observed gcc fails to vectorize Pluto's output).
+//! * **Dense** ([`dense`]): the unfactorized FC as an MMM kernel (the
+//!   paper's Fig. 15 uncompressed-IREE baseline).
+
+pub mod iree_like;
+pub mod pluto_like;
+pub mod dense;

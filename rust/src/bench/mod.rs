@@ -1,0 +1,160 @@
+//! Measurement harness (criterion is unavailable offline).
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall time are reached; the reported
+//! estimate is the 20%-trimmed mean with MAD spread — robust against
+//! scheduler noise on the shared CI host.
+
+use std::time::Duration;
+
+use crate::util::{stats, timer};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Trimmed-mean seconds per iteration.
+    pub seconds: f64,
+    /// Median absolute deviation of the samples.
+    pub mad: f64,
+    pub iters: usize,
+    /// Work per iteration, used for GFLOP/s reporting (0 = unknown).
+    pub flops: u64,
+}
+
+impl Measurement {
+    pub fn gflops(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.flops as f64 / self.seconds / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchCfg {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub trim: f64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_time: Duration::from_millis(200),
+            trim: 0.2,
+        }
+    }
+}
+
+/// Quick preset for CI / smoke runs.
+impl BenchCfg {
+    pub fn quick() -> Self {
+        BenchCfg {
+            warmup_iters: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(30),
+            trim: 0.2,
+        }
+    }
+
+    /// Honor `TTRV_BENCH_QUICK=1` for fast end-to-end runs.
+    pub fn from_env() -> Self {
+        match std::env::var("TTRV_BENCH_QUICK") {
+            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => BenchCfg::quick(),
+            _ => BenchCfg::default(),
+        }
+    }
+}
+
+/// Measure a closure. `flops` is the per-iteration work for GFLOP/s output.
+pub fn measure(name: &str, flops: u64, cfg: &BenchCfg, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let samples = timer::time_iters(&mut f, cfg.min_iters, cfg.min_time);
+    Measurement {
+        name: name.to_string(),
+        seconds: stats::trimmed_mean(&samples, cfg.trim),
+        mad: stats::mad(&samples),
+        iters: samples.len(),
+        flops,
+    }
+}
+
+/// Format a table of measurements, one row per entry, with a speedup column
+/// relative to `baseline_idx` when given.
+pub fn format_table(title: &str, rows: &[Measurement], baseline_idx: Option<usize>) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<40} {:>12} {:>10} {:>10} {:>8}\n",
+        "name", "time", "GFLOP/s", "speedup", "iters"
+    ));
+    let base = baseline_idx.map(|i| rows[i].seconds);
+    for r in rows {
+        let speedup = match base {
+            Some(b) if r.seconds > 0.0 => format!("{:.2}x", b / r.seconds),
+            _ => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<40} {:>12} {:>10.2} {:>10} {:>8}\n",
+            r.name,
+            format_secs(r.seconds),
+            r.gflops(),
+            speedup,
+            r.iters
+        ));
+    }
+    out
+}
+
+/// Human-readable seconds.
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters_and_reports_gflops() {
+        let cfg = BenchCfg { warmup_iters: 0, min_iters: 5, min_time: Duration::ZERO, trim: 0.2 };
+        let mut n = 0u64;
+        let m = measure("noop", 1_000_000, &cfg, || n += 1);
+        assert!(m.iters >= 5);
+        assert!(n >= 5);
+        assert!(m.seconds >= 0.0);
+        assert!(m.gflops() >= 0.0);
+    }
+
+    #[test]
+    fn table_formats_speedups() {
+        let rows = vec![
+            Measurement { name: "base".into(), seconds: 1.0, mad: 0.0, iters: 3, flops: 0 },
+            Measurement { name: "fast".into(), seconds: 0.25, mad: 0.0, iters: 3, flops: 0 },
+        ];
+        let t = format_table("t", &rows, Some(0));
+        assert!(t.contains("4.00x"));
+        assert!(t.contains("base"));
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(format_secs(2.5), "2.500 s");
+        assert_eq!(format_secs(0.0025), "2.500 ms");
+        assert_eq!(format_secs(2.5e-6), "2.5 us");
+    }
+}

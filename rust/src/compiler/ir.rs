@@ -1,0 +1,113 @@
+//! Compiler-level IR: the Einsum instance plus the paper's Table 3
+//! benchmark suite (CB0-CB7 for each kernel variant).
+
+pub use crate::ttd::cost::{EinsumDims, EinsumKind};
+
+/// One row of the paper's Table 3: the (mt, bt, nt, rank) sizes of a kernel
+/// instance drawn from the studied models.
+#[derive(Debug, Clone, Copy)]
+pub struct CbEntry {
+    pub id: &'static str,
+    pub dims: EinsumDims,
+}
+
+/// The paper's Table 3 suite for a given kernel variant. Rank value 8
+/// throughout ("a rank value of eight was chosen"): first einsums have
+/// `k = 1, r = 8`; middle have `r = k = 8`; final have `r = 1, k = 8`.
+pub fn cb_suite(kind: EinsumKind) -> Vec<CbEntry> {
+    const IDS: [&str; 8] = ["CB0", "CB1", "CB2", "CB3", "CB4", "CB5", "CB6", "CB7"];
+    // (mt, bt, nt) triplets straight from Table 3.
+    let (sizes, r, k): ([(usize, usize, usize); 8], usize, usize) = match kind {
+        EinsumKind::First => (
+            [
+                (512, 32, 128),
+                (64, 64, 64),
+                (128, 1024, 4),
+                (256, 64, 784),
+                (32, 64, 392),
+                (512, 896, 28),
+                (100, 12, 64),
+                (16, 4, 150),
+            ],
+            8,
+            1,
+        ),
+        EinsumKind::Middle => (
+            [
+                (48, 224, 2),
+                (64, 3582, 4),
+                (96, 128, 14),
+                (64, 64, 32),
+                (256, 128, 4),
+                (32, 9, 7),
+                (4, 16383, 28),
+                (64, 1020, 28),
+            ],
+            8,
+            8,
+        ),
+        EinsumKind::Final => (
+            [
+                (32, 126, 256),
+                (64, 64, 128),
+                (32, 126, 4),
+                (256, 16, 7),
+                (8, 510, 896),
+                (32, 250, 4),
+                (124, 9, 16),
+                (48, 21, 4),
+            ],
+            1,
+            8,
+        ),
+    };
+    sizes
+        .iter()
+        .zip(IDS)
+        .map(|(&(m, b, n), id)| CbEntry {
+            id,
+            dims: EinsumDims { kind, m, b, n, r, k },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_flops_match_paper() {
+        // paper Table 3 prints the FLOPs column; spot-check entries
+        let first = cb_suite(EinsumKind::First);
+        assert_eq!(first[0].dims.flops(), 33_554_432); // CB0 3.36E+07
+        assert_eq!(first[3].dims.flops(), 205_520_896); // CB3 2.06E+08
+        let middle = cb_suite(EinsumKind::Middle);
+        assert_eq!(middle[5].dims.flops(), 258_048); // CB5 2.58E+05
+        assert_eq!(middle[6].dims.flops(), 234_866_688); // CB6 2.35E+08
+        let fin = cb_suite(EinsumKind::Final);
+        assert_eq!(fin[0].dims.flops(), 16_515_072); // CB0 1.65E+07
+        assert_eq!(fin[7].dims.flops(), 64_512); // CB7 6.45E+04
+    }
+
+    #[test]
+    fn variants_have_expected_rank_extents() {
+        for e in cb_suite(EinsumKind::First) {
+            assert_eq!(e.dims.k, 1);
+            assert_eq!(e.dims.r, 8);
+        }
+        for e in cb_suite(EinsumKind::Final) {
+            assert_eq!(e.dims.r, 1);
+            assert_eq!(e.dims.k, 8);
+        }
+        for e in cb_suite(EinsumKind::Middle) {
+            assert_eq!((e.dims.r, e.dims.k), (8, 8));
+        }
+    }
+
+    #[test]
+    fn suite_has_eight_entries_each() {
+        for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+            assert_eq!(cb_suite(kind).len(), 8);
+        }
+    }
+}

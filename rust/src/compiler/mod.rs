@@ -1,0 +1,29 @@
+//! The analytical compiler for T3F Einsum kernels (paper §4.3).
+//!
+//! Given an Einsum instance ([`crate::ttd::cost::EinsumDims`]) and a target
+//! ([`crate::machine::MachineSpec`]), the pass pipeline decides — entirely
+//! analytically, no autotuning runs —
+//!
+//! 1. **array packing** of the constant core `G` (§4.3.1) and reshape-layer
+//!    elimination (§4.3.2) — always on, encoded in the plan's layout;
+//! 2. **vectorized loop** selection: `r`-loop where possible, `k`-loop for
+//!    the final Einsum (§4.3.3);
+//! 3. **register blocking** factors minimizing the load/store count under
+//!    the register-file constraint (§4.3.4, Eq. 18-25);
+//! 4. **loop order + L2 tiling** via the cache-occupancy inequalities
+//!    (§4.3.5, Eq. 26-28);
+//! 5. **thread count** from the workload heuristic (§4.2.3, Fig. 9).
+//!
+//! The output [`plan::OptimizationPlan`] is executed by [`crate::kernels`]
+//! and priced by [`crate::machine::costmodel`].
+
+pub mod ir;
+pub mod regblock;
+pub mod tiling;
+pub mod threads;
+pub mod plan;
+pub mod pipeline;
+
+pub use ir::{cb_suite, CbEntry};
+pub use pipeline::compile;
+pub use plan::{LoopOrder, OptimizationPlan, RbFactors, VectorLoop};

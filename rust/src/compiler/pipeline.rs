@@ -1,0 +1,149 @@
+//! The pass pipeline: Einsum instance + machine -> OptimizationPlan.
+
+use crate::error::Result;
+use crate::machine::MachineSpec;
+use crate::ttd::cost::EinsumDims;
+
+use super::plan::{OptimizationPlan, VectorLoop};
+use super::{regblock, threads, tiling};
+
+/// Vectorized-loop selection (paper §4.3.3): the r-loop, unless the kernel
+/// is a final Einsum (r = 1) or r is too small to fill a vector register —
+/// then the k-loop (horizontal-add microkernel). Kernels whose contraction
+/// is also tiny stay scalar.
+pub fn select_vector_loop(dims: &EinsumDims, vl: usize) -> VectorLoop {
+    if dims.r >= vl && dims.r % vl == 0 {
+        VectorLoop::R
+    } else if dims.n * dims.k >= vl {
+        VectorLoop::K
+    } else {
+        VectorLoop::None
+    }
+}
+
+/// Run the full pipeline.
+pub fn compile(dims: &EinsumDims, machine: &MachineSpec) -> Result<OptimizationPlan> {
+    let vl = machine.vl_f32();
+    let vector_loop = select_vector_loop(dims, vl);
+    let eff_vl = if vector_loop == VectorLoop::None { 1 } else { vl };
+    let (rb, ls_estimate) = regblock::solve(dims, machine, vector_loop);
+    // the Fig. 9 heuristic gives the upper bound; the cost model then picks
+    // the cheapest count at or below it, so "+parallelization" can never be
+    // planned as a slowdown
+    let t_max = threads::threads_for(dims, machine);
+    let tile = tiling::select(dims, machine, t_max)?;
+    let mut plan = OptimizationPlan {
+        dims: *dims,
+        pack_g: true,
+        vector_loop,
+        vl: eff_vl,
+        rb,
+        tile,
+        threads: t_max,
+        ls_estimate,
+    };
+    if t_max > 1 {
+        let best = (1..=t_max)
+            .min_by(|&a, &b| {
+                let ta = crate::machine::costmodel::estimate(
+                    &OptimizationPlan { threads: a, ..plan },
+                    machine,
+                )
+                .seconds();
+                let tb = crate::machine::costmodel::estimate(
+                    &OptimizationPlan { threads: b, ..plan },
+                    machine,
+                )
+                .seconds();
+                ta.partial_cmp(&tb).expect("no NaN")
+            })
+            .unwrap_or(t_max);
+        plan.threads = best;
+    }
+    Ok(plan)
+}
+
+/// Ablation stages for the Fig. 16 breakdown. Each stage adds one family of
+/// optimizations on top of the previous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptStage {
+    /// Plain loop nest (the "GCC -O3" bar).
+    Naive,
+    /// + array packing and vectorization (§4.3.1-4.3.3).
+    VecPack,
+    /// + register blocking and L2 tiling (§4.3.4-4.3.5).
+    RbTile,
+    /// + parallelization (full pipeline).
+    Parallel,
+}
+
+/// Compile at a given ablation stage.
+pub fn compile_stage(
+    dims: &EinsumDims,
+    machine: &MachineSpec,
+    stage: OptStage,
+) -> Result<OptimizationPlan> {
+    let full = compile(dims, machine)?;
+    Ok(match stage {
+        OptStage::Naive => OptimizationPlan::naive(*dims),
+        OptStage::VecPack => OptimizationPlan {
+            rb: super::plan::RbFactors::NONE,
+            tile: super::plan::TilePlan { order: super::plan::LoopOrder::Mbrk, btl: None },
+            threads: 1,
+            ..full
+        },
+        OptStage::RbTile => OptimizationPlan { threads: 1, ..full },
+        OptStage::Parallel => full,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::cost::EinsumKind;
+
+    fn middle(m: usize, b: usize, n: usize) -> EinsumDims {
+        EinsumDims { kind: EinsumKind::Middle, m, b, n, r: 8, k: 8 }
+    }
+
+    #[test]
+    fn vector_loop_selection_follows_paper() {
+        // first/middle einsums (r = 8 = vl) vectorize r
+        assert_eq!(select_vector_loop(&middle(64, 64, 8), 8), VectorLoop::R);
+        // final einsum (r = 1) vectorizes k
+        let fin = EinsumDims { kind: EinsumKind::Final, m: 32, b: 126, n: 256, r: 1, k: 8 };
+        assert_eq!(select_vector_loop(&fin, 8), VectorLoop::K);
+        // tiny everything stays scalar
+        let tiny = EinsumDims { kind: EinsumKind::Final, m: 4, b: 4, n: 3, r: 1, k: 1 };
+        assert_eq!(select_vector_loop(&tiny, 8), VectorLoop::None);
+    }
+
+    #[test]
+    fn full_pipeline_produces_consistent_plan() {
+        let k1 = MachineSpec::spacemit_k1();
+        let d = middle(96, 128, 14); // CB2 middle
+        let p = compile(&d, &k1).unwrap();
+        assert!(p.pack_g);
+        assert_eq!(p.vector_loop, VectorLoop::R);
+        assert_eq!(p.vl, 8);
+        assert!(p.rb.registers() <= 32);
+        assert!(p.threads >= 1 && p.threads <= 4);
+        assert!(p.ls_estimate > 0);
+    }
+
+    #[test]
+    fn stages_are_monotone_in_capability() {
+        let k1 = MachineSpec::spacemit_k1();
+        let d = middle(64, 1020, 28); // CB7 middle, 2.3e8 FLOPs
+        let naive = compile_stage(&d, &k1, OptStage::Naive).unwrap();
+        let vec = compile_stage(&d, &k1, OptStage::VecPack).unwrap();
+        let rbt = compile_stage(&d, &k1, OptStage::RbTile).unwrap();
+        let par = compile_stage(&d, &k1, OptStage::Parallel).unwrap();
+        assert_eq!(naive.vector_loop, VectorLoop::None);
+        assert_eq!(vec.vector_loop, VectorLoop::R);
+        assert_eq!(vec.rb, crate::compiler::plan::RbFactors::NONE);
+        assert_ne!(rbt.rb, crate::compiler::plan::RbFactors::NONE);
+        assert_eq!(rbt.threads, 1);
+        assert_eq!(par.threads, 4);
+    }
+}

@@ -1,0 +1,120 @@
+//! The optimization plan — the compiler's output artifact.
+
+use crate::ttd::cost::EinsumDims;
+
+/// Which loop the microkernel vectorizes (paper §4.3.3 analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VectorLoop {
+    /// Vectorize the `r` (output-rank) loop: contiguous vector stores, no
+    /// horizontal adds. Requires `r > 1`; the packed `G` layout makes the
+    /// loads contiguous. Chosen for first/middle Einsums.
+    R,
+    /// Vectorize the `k = n*r_t` contraction loop: needs a horizontal
+    /// reduction per output element and scalar stores. Forced for the final
+    /// Einsum (`r = 1`).
+    K,
+    /// No vectorization (baseline stages only).
+    None,
+}
+
+/// Register-blocking factors (paper §4.3.4). `rm`/`rb` unroll the `m` and
+/// `b` loops in scalar iterations; `rr`/`rk` unroll the vectorized `r`/`k`
+/// loop in *vector registers* (each covering `vl` lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RbFactors {
+    pub rm: usize,
+    pub rb: usize,
+    pub rr: usize,
+    pub rk: usize,
+}
+
+impl RbFactors {
+    pub const NONE: RbFactors = RbFactors { rm: 1, rb: 1, rr: 1, rk: 1 };
+
+    /// Vector registers the innermost body needs (paper Eq. 19):
+    /// `Rm*Rb*Rr + min(Rb*Rk, Rm*Rr) + 1`.
+    pub fn registers(&self) -> usize {
+        self.rm * self.rb * self.rr + (self.rb * self.rk).min(self.rm * self.rr) + 1
+    }
+}
+
+/// Loop order of the three data-parallel outer loops (paper §4.3.5 considers
+/// these two of the 4! permutations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// `{mt, bt, rt, nt*rt_1}` — parallelize `mt` (Eq. 26 / Eq. 28).
+    Mbrk,
+    /// `{bt, mt, rt, nt*rt_1}` — parallelize `bt` (Eq. 27).
+    Bmrk,
+}
+
+/// L2 tiling decision (paper Eq. 26-28).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    pub order: LoopOrder,
+    /// Tile length over `bt` when Eq. 26/27 fail and Eq. 28 must be applied;
+    /// `None` = untiled.
+    pub btl: Option<usize>,
+}
+
+/// Everything the kernel engine needs to execute one Einsum optimally.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimizationPlan {
+    pub dims: EinsumDims,
+    /// Pack `G` into the access-ordered layout (always on in the full
+    /// pipeline; off in ablation stages).
+    pub pack_g: bool,
+    pub vector_loop: VectorLoop,
+    /// f32 lanes per vector register on the target.
+    pub vl: usize,
+    pub rb: RbFactors,
+    pub tile: TilePlan,
+    /// Threads assigned by the Fig. 9 heuristic.
+    pub threads: u32,
+    /// Predicted load/store instruction count (Eq. 20), the RB objective.
+    pub ls_estimate: u64,
+}
+
+impl OptimizationPlan {
+    /// An unoptimized plan (the GCC -O3 ablation baseline): no packing, no
+    /// vectorization, no blocking, single thread.
+    pub fn naive(dims: EinsumDims) -> Self {
+        OptimizationPlan {
+            dims,
+            pack_g: false,
+            vector_loop: VectorLoop::None,
+            vl: 1,
+            rb: RbFactors::NONE,
+            tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+            threads: 1,
+            ls_estimate: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+
+    #[test]
+    fn register_formula_matches_paper_example() {
+        // paper Listing 6 context: Rm=2, Rb=3 -> 6 outputs + 2 G regs + 1
+        let rb = RbFactors { rm: 2, rb: 3, rr: 1, rk: 1 };
+        // Eq.19: 2*3*1 + min(3*1, 2*1) + 1 = 6 + 2 + 1 = 9
+        assert_eq!(rb.registers(), 9);
+        // paper Step-3 example solution {4,3,1,1} with 16 registers
+        let rb = RbFactors { rm: 4, rb: 3, rr: 1, rk: 1 };
+        assert_eq!(rb.registers(), 16);
+    }
+
+    #[test]
+    fn naive_plan_is_fully_unoptimized() {
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 4, b: 4, n: 4, r: 8, k: 8 };
+        let p = OptimizationPlan::naive(dims);
+        assert_eq!(p.vector_loop, VectorLoop::None);
+        assert_eq!(p.rb, RbFactors::NONE);
+        assert_eq!(p.threads, 1);
+        assert!(!p.pack_g);
+    }
+}

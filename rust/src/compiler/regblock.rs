@@ -1,0 +1,242 @@
+//! Register-blocking solver (paper §4.3.4).
+//!
+//! Three steps, exactly as the paper:
+//! 1. constrain factor tuples by the vector-register budget (Eq. 18/19);
+//! 2. price each candidate with the load/store-count equations (Eq. 20-25),
+//!    including the padding-ukernel terms (Eq. 22);
+//! 3. pick the candidate minimizing the L/S count.
+//!
+//! `Rm` and `Rr` are restricted to powers of two: both shape the packed `G`
+//! layout (`{m, r/(Rr*vl), n*k, Rr*vl}` chunks), which must tile evenly at
+//! compile time. `Rb`/`Rk` are free. This restriction also reproduces the
+//! paper's worked example ({128,32,8,8} @ 16 regs -> {4,3,1,1}).
+
+use crate::machine::MachineSpec;
+use crate::ttd::cost::EinsumDims;
+
+use super::plan::{RbFactors, VectorLoop};
+
+/// Kronecker delta of Eq. 23.
+#[inline]
+fn delta(x: usize) -> u64 {
+    (x != 0) as u64
+}
+
+/// Load/store instruction counts per array (Eq. 20 decomposition).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LsCounts {
+    pub g: u64,
+    pub input: u64,
+    pub output: u64,
+}
+
+impl LsCounts {
+    pub fn total(&self) -> u64 {
+        self.g + self.input + self.output
+    }
+}
+
+/// Evaluate Eq. 21/22/24/25 for a candidate factor tuple.
+///
+/// Loop extents in the paper's notation: `mt = dims.m`, `bt = dims.b`,
+/// `rt = dims.r` (elements), and the merged contraction loop
+/// `nt*rt_1 = dims.n * dims.k`.
+pub fn ls_counts(dims: &EinsumDims, vl: usize, rb: &RbFactors, vloop: VectorLoop) -> LsCounts {
+    let (m, b, r) = (dims.m as u64, dims.b as u64, dims.r as u64);
+    let l = (dims.n * dims.k) as u64; // nt * rt_1
+    let vl = vl as u64;
+    let (rm, rbf, rr) = (rb.rm as u64, rb.rb as u64, rb.rr as u64);
+
+    // Eq. 21 + Eq. 22: G is re-read once per b-block.
+    let g_main = m * (b / rbf) * r * l / vl;
+    let g_pad = (m * r * l / vl) * delta((b % rbf) as usize);
+
+    // Eq. 24: Input is re-read once per (m-block, r-block).
+    let in_main = (m / rm) * b * (r / rr) * l / vl;
+    let in_pad = (b * (r / rr) * l / vl) * delta((m % rm) as usize);
+
+    // Eq. 25: Output stores.
+    let (out_main, out_pad) = match vloop {
+        VectorLoop::K => {
+            // k-vectorized microkernel stores scalars (paper: "the number of
+            // stores for the Output array need to be amended").
+            (m * (b / rbf) * (r / rr), (m * (r / rr)) * delta((b % rbf) as usize))
+        }
+        _ => (
+            m * (b / rbf) * (r / rr) / vl,
+            (m * (r / rr) / vl) * delta((b % rbf) as usize),
+        ),
+    };
+
+    LsCounts { g: g_main + g_pad, input: in_main + in_pad, output: out_main + out_pad }
+}
+
+fn powers_of_two_upto(max: usize) -> impl Iterator<Item = usize> {
+    (0..).map(|e| 1usize << e).take_while(move |&v| v <= max)
+}
+
+/// All feasible candidates sorted by predicted L/S count (ascending).
+/// Used by the solver (first entry) and by the measured autotuner
+/// (`kernels::tune_rb`), which re-ranks the top few on real hardware —
+/// the L/S proxy cannot see register-spill/ILP effects (EXPERIMENTS.md
+/// §Perf iteration 2).
+pub fn candidates(
+    dims: &EinsumDims,
+    machine: &MachineSpec,
+    vloop: VectorLoop,
+    top_k: usize,
+) -> Vec<(RbFactors, u64)> {
+    let vl = machine.vl_f32();
+    let regs = machine.vector_regs as usize;
+    let rr_max = match vloop {
+        VectorLoop::R => (dims.r / vl).max(1),
+        _ => 1,
+    };
+    let mut all = Vec::new();
+    for rm in powers_of_two_upto(dims.m.min(8).max(1)) {
+        for rr in powers_of_two_upto(rr_max) {
+            for rb in 1..=dims.b.min(8).max(1) {
+                for rk in powers_of_two_upto((dims.n * dims.k).min(8).max(1)) {
+                    let cand = RbFactors { rm, rb, rr, rk };
+                    if cand.registers() > regs {
+                        continue;
+                    }
+                    let ls = ls_counts(dims, vl, &cand, vloop).total();
+                    all.push((cand, ls));
+                }
+            }
+        }
+    }
+    all.sort_by_key(|(cand, ls)| (*ls, cand.registers()));
+    // drop duplicates that differ only in rk (identical L/S and kernel)
+    all.dedup_by_key(|(cand, ls)| (cand.rm, cand.rb, cand.rr, *ls));
+    all.truncate(top_k);
+    all
+}
+
+/// Solve for the L/S-minimizing register-blocking factors (paper Step 1-3).
+/// Returns the factors and the predicted L/S count.
+pub fn solve(dims: &EinsumDims, machine: &MachineSpec, vloop: VectorLoop) -> (RbFactors, u64) {
+    let vl = machine.vl_f32();
+    let regs = machine.vector_regs as usize;
+    // r-loop unroll is in units of vector registers; at most r/vl of them.
+    let rr_max = match vloop {
+        VectorLoop::R => (dims.r / vl).max(1),
+        _ => 1,
+    };
+    let mut best: Option<(RbFactors, u64)> = None;
+    // Rm capped at 8 to match the kernel engine's 8x8 register tile.
+    for rm in powers_of_two_upto(dims.m.min(8).max(1)) {
+        for rr in powers_of_two_upto(rr_max) {
+            // Rb capped at 8: beyond that the accumulator tile exceeds any
+            // realistic register file, and the kernel engine's microkernel
+            // register tile is sized 8x8.
+            for rb in 1..=dims.b.min(8).max(1) {
+                for rk in powers_of_two_upto((dims.n * dims.k).min(8).max(1)) {
+                    let cand = RbFactors { rm, rb, rr, rk };
+                    if cand.registers() > regs {
+                        continue;
+                    }
+                    let ls = ls_counts(dims, vl, &cand, vloop).total();
+                    let better = match &best {
+                        None => true,
+                        Some((prev, prev_ls)) => {
+                            ls < *prev_ls
+                                // tiebreak: fewer registers, then smaller factors
+                                || (ls == *prev_ls && cand.registers() < prev.registers())
+                        }
+                    };
+                    if better {
+                        best = Some((cand, ls));
+                    }
+                }
+            }
+        }
+    }
+    best.unwrap_or((RbFactors::NONE, u64::MAX))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::cost::EinsumKind;
+
+    fn dims(m: usize, b: usize, r: usize, l: usize) -> EinsumDims {
+        // encode the merged contraction length l as n = l, k = 1
+        EinsumDims { kind: EinsumKind::Middle, m, b, n: l, r, k: 1 }
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // paper Step 3: 16 registers, {mt, bt, rt, nt*rt_1} = {128, 32, 8, 8}
+        // -> {Rm, Rb, Rr, Rk} = {4, 3, 1, 1}
+        let mut machine = MachineSpec::spacemit_k1();
+        machine.vector_regs = 16;
+        let d = dims(128, 32, 8, 8);
+        let (rb, _ls) = solve(&d, &machine, VectorLoop::R);
+        assert_eq!((rb.rm, rb.rb, rb.rr, rb.rk), (4, 3, 1, 1));
+    }
+
+    #[test]
+    fn ls_counts_worked_example_values() {
+        let d = dims(128, 32, 8, 8);
+        let rb = RbFactors { rm: 4, rb: 3, rr: 1, rk: 1 };
+        let ls = ls_counts(&d, 8, &rb, VectorLoop::R);
+        // Eq.21: 128*floor(32/3)*8*8/8 + 128*8*8/8 = 10240 + 1024
+        assert_eq!(ls.g, 11_264);
+        // Eq.24: floor(128/4)*32*8*8/8 + 0 = 8192
+        assert_eq!(ls.input, 8_192);
+        // Eq.25: 128*10*8/8 + 128*8/8 = 1280 + 128
+        assert_eq!(ls.output, 1_408);
+        assert_eq!(ls.total(), 20_864);
+    }
+
+    #[test]
+    fn no_blocking_counts_every_access() {
+        let d = dims(16, 16, 8, 4);
+        let ls = ls_counts(&d, 8, &RbFactors::NONE, VectorLoop::R);
+        // G: every (m, b, r-vec, l) -> 16*16*1*4 vec loads
+        assert_eq!(ls.g, 16 * 16 * 8 * 4 / 8);
+        assert_eq!(ls.input, 16 * 16 * 8 * 4 / 8);
+        assert_eq!(ls.output, 16 * 16 * 8 / 8);
+    }
+
+    #[test]
+    fn blocking_reduces_ls_vs_none() {
+        let machine = MachineSpec::spacemit_k1();
+        let d = dims(256, 128, 16, 32);
+        let (rb, ls) = solve(&d, &machine, VectorLoop::R);
+        let base = ls_counts(&d, 8, &RbFactors::NONE, VectorLoop::R).total();
+        assert!(ls < base, "blocked {ls} !< naive {base}");
+        assert!(rb.rm * rb.rb > 1);
+        assert!(rb.registers() <= 32);
+    }
+
+    #[test]
+    fn k_vectorized_stores_are_scalar() {
+        let d = EinsumDims { kind: EinsumKind::Final, m: 32, b: 126, n: 4, r: 1, k: 8 };
+        let r_like = ls_counts(&d, 8, &RbFactors::NONE, VectorLoop::R);
+        let k_like = ls_counts(&d, 8, &RbFactors::NONE, VectorLoop::K);
+        assert_eq!(k_like.output, r_like.output * 8);
+        assert_eq!(k_like.g, r_like.g);
+    }
+
+    #[test]
+    fn solver_respects_register_budget() {
+        let mut machine = MachineSpec::spacemit_k1();
+        for regs in [4u32, 8, 16, 32] {
+            machine.vector_regs = regs;
+            let d = dims(128, 64, 8, 16);
+            let (rb, _) = solve(&d, &machine, VectorLoop::R);
+            assert!(rb.registers() <= regs as usize, "{rb:?} over {regs}");
+        }
+    }
+
+    #[test]
+    fn tiny_kernels_get_unit_factors() {
+        let machine = MachineSpec::spacemit_k1();
+        let d = dims(1, 1, 8, 2);
+        let (rb, _) = solve(&d, &machine, VectorLoop::R);
+        assert_eq!((rb.rm, rb.rb), (1, 1));
+    }
+}

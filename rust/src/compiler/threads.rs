@@ -1,0 +1,66 @@
+//! Thread-count heuristic (paper §4.2.3, calibrated by the Fig. 9 study).
+//!
+//! "For the Einsum loop kernels with FLOPs value lower than 2e6,
+//! single-thread execution is optimal; between 2e6 and 4e6 two threads;
+//! between 4e6 and 8e6 three; above 8e6 four."
+
+use crate::machine::MachineSpec;
+use crate::ttd::cost::EinsumDims;
+
+/// FLOPs thresholds of the paper's measured study.
+pub const T2: u64 = 2_000_000;
+pub const T3: u64 = 4_000_000;
+pub const T4: u64 = 8_000_000;
+
+/// Threads to assign to one Einsum kernel, capped by the machine's cores.
+pub fn threads_for(dims: &EinsumDims, machine: &MachineSpec) -> u32 {
+    let f = dims.flops();
+    let ideal: u32 = if f < T2 {
+        1
+    } else if f < T3 {
+        2
+    } else if f < T4 {
+        3
+    } else {
+        4
+    };
+    ideal.min(machine.cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::cost::EinsumKind;
+
+    fn dims_with_flops(target: u64) -> EinsumDims {
+        // flops = 2*m*b*n*r*k; pick m to hit the target
+        let m = (target / (2 * 64 * 8)).max(1) as usize;
+        EinsumDims { kind: EinsumKind::Middle, m, b: 64, n: 1, r: 8, k: 1 }
+    }
+
+    #[test]
+    fn paper_thresholds() {
+        let k1 = MachineSpec::spacemit_k1();
+        assert_eq!(threads_for(&dims_with_flops(1_000_000), &k1), 1);
+        assert_eq!(threads_for(&dims_with_flops(3_000_000), &k1), 2);
+        assert_eq!(threads_for(&dims_with_flops(6_000_000), &k1), 3);
+        assert_eq!(threads_for(&dims_with_flops(20_000_000), &k1), 4);
+    }
+
+    #[test]
+    fn capped_by_core_count() {
+        let host = MachineSpec::host(); // 1 core
+        assert_eq!(threads_for(&dims_with_flops(20_000_000), &host), 1);
+    }
+
+    #[test]
+    fn table3_examples() {
+        let k1 = MachineSpec::spacemit_k1();
+        // middle CB5 (2.58E+05 FLOPs) -> single thread
+        let cb5 = EinsumDims { kind: EinsumKind::Middle, m: 32, b: 9, n: 7, r: 8, k: 8 };
+        assert_eq!(threads_for(&cb5, &k1), 1);
+        // first CB3 (2.06E+08) -> four threads
+        let cb3 = EinsumDims { kind: EinsumKind::First, m: 256, b: 64, n: 784, r: 8, k: 1 };
+        assert_eq!(threads_for(&cb3, &k1), 4);
+    }
+}

@@ -1,0 +1,154 @@
+//! Loop order, parallelization and L2 tiling (paper §4.3.5, Eq. 26-28).
+//!
+//! The three candidate schedules, tried in order:
+//! 1. order `{mt, bt, rt, nt*rt_1}`, parallelize `mt`, untiled — accept if
+//!    the per-thread working set satisfies Eq. 26;
+//! 2. order `{bt, mt, rt, nt*rt_1}`, parallelize `bt`, untiled — accept if
+//!    Eq. 27 holds;
+//! 3. order 1 with `bt` tiled by the largest `Btl` satisfying Eq. 28;
+//!    if no `Btl >= 1` works the solution is discarded (Plan error).
+
+use crate::error::{Error, Result};
+use crate::machine::MachineSpec;
+use crate::ttd::cost::EinsumDims;
+
+use super::plan::{LoopOrder, TilePlan};
+
+const F32: u64 = 4;
+
+fn ways(bytes: u64, way_bytes: u64) -> u64 {
+    bytes.div_ceil(way_bytes)
+}
+
+/// Eq. 26: `{mt, bt, rt, k}` order, `mt` parallelized over `t` threads.
+/// Output slice (bt*rt), G slice (rt*nt*rt_1) per thread; Input shared.
+pub fn eq26_holds(dims: &EinsumDims, machine: &MachineSpec, t: u32) -> bool {
+    let (b, r) = (dims.b as u64, dims.r as u64);
+    let l = (dims.n * dims.k) as u64;
+    let way = machine.l2_way_bytes();
+    let t = t as u64;
+    let lhs = t * ways(b * r * F32, way) + t * ways(r * l * F32, way) + ways(b * l * F32, way);
+    lhs <= machine.l2_assoc as u64
+}
+
+/// Eq. 27: `{bt, mt, rt, k}` order, `bt` parallelized. The whole `G`
+/// (mt*rt*nt*rt_1) is shared; each thread streams one input row (nt*rt_1).
+pub fn eq27_holds(dims: &EinsumDims, machine: &MachineSpec, t: u32) -> bool {
+    let (m, r) = (dims.m as u64, dims.r as u64);
+    let l = (dims.n * dims.k) as u64;
+    let way = machine.l2_way_bytes();
+    let lhs = 1 + ways(m * r * l * F32, way) + t as u64 * ways(l * F32, way);
+    lhs <= machine.l2_assoc as u64
+}
+
+/// Eq. 28: order `{mt, bt, rt, k}` with `bt` tiled by `btl`.
+pub fn eq28_holds(dims: &EinsumDims, machine: &MachineSpec, t: u32, btl: usize) -> bool {
+    let r = dims.r as u64;
+    let l = (dims.n * dims.k) as u64;
+    let way = machine.l2_way_bytes();
+    let t = t as u64;
+    let btl = btl as u64;
+    let lhs =
+        t * ways(btl * r * F32, way) + t * ways(r * l * F32, way) + ways(btl * l * F32, way);
+    lhs <= machine.l2_assoc as u64
+}
+
+/// Select loop order + tiling per the three-step method.
+pub fn select(dims: &EinsumDims, machine: &MachineSpec, threads: u32) -> Result<TilePlan> {
+    if eq26_holds(dims, machine, threads) {
+        return Ok(TilePlan { order: LoopOrder::Mbrk, btl: None });
+    }
+    if eq27_holds(dims, machine, threads) {
+        return Ok(TilePlan { order: LoopOrder::Bmrk, btl: None });
+    }
+    // Step 3: largest Btl (multiple of the vector length for clean ukernels)
+    let mut btl = dims.b;
+    while btl >= 1 {
+        if eq28_holds(dims, machine, threads, btl) {
+            return Ok(TilePlan { order: LoopOrder::Mbrk, btl: Some(btl) });
+        }
+        btl /= 2;
+    }
+    Err(Error::plan(format!(
+        "no feasible L2 tiling for {dims:?} on {}",
+        machine.name
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::cost::EinsumKind;
+
+    fn dims(m: usize, b: usize, n: usize, r: usize, k: usize) -> EinsumDims {
+        EinsumDims { kind: EinsumKind::Middle, m, b, n, r, k }
+    }
+
+    #[test]
+    fn small_kernel_needs_no_tiling() {
+        let k1 = MachineSpec::spacemit_k1();
+        // CB5 middle: {32, 9, 7, 8, 8} — tiny working set
+        let d = dims(32, 9, 7, 8, 8);
+        let plan = select(&d, &k1, 1).unwrap();
+        assert_eq!(plan.order, LoopOrder::Mbrk);
+        assert_eq!(plan.btl, None);
+    }
+
+    #[test]
+    fn huge_b_with_big_g_falls_through_to_eq27_or_tiling() {
+        let k1 = MachineSpec::spacemit_k1();
+        // CB6 middle: {4, 16383, 28, 8, 8}: b*l = 16383*224*4B = 14.7 MB >> L2
+        let d = dims(4, 16383, 28, 8, 8);
+        assert!(!eq26_holds(&d, &k1, 4));
+        let plan = select(&d, &k1, 4).unwrap();
+        // paper Sec. 6.3 (CB6): "we select the loop permutation {bt, mt, rt,
+        // nt*rt_1} to fit data into L2-cache"
+        assert_eq!(plan.order, LoopOrder::Bmrk);
+    }
+
+    #[test]
+    fn giant_g_forces_bt_tiling() {
+        let k1 = MachineSpec::spacemit_k1();
+        // G = m*r*l*4 = 2048*8*1024*4 = 64 MB >> L2 -> Eq.27 fails too
+        let d = dims(2048, 8192, 128, 8, 8);
+        assert!(!eq26_holds(&d, &k1, 4));
+        assert!(!eq27_holds(&d, &k1, 4));
+        let plan = select(&d, &k1, 4).unwrap();
+        assert_eq!(plan.order, LoopOrder::Mbrk);
+        let btl = plan.btl.expect("must tile bt");
+        assert!(btl < 8192);
+        assert!(eq28_holds(&d, &k1, 4, btl));
+    }
+
+    #[test]
+    fn eq26_monotone_in_threads() {
+        let k1 = MachineSpec::spacemit_k1();
+        let d = dims(256, 512, 16, 8, 8);
+        // more threads -> more per-thread slices -> harder to satisfy
+        let ok1 = eq26_holds(&d, &k1, 1);
+        let ok4 = eq26_holds(&d, &k1, 4);
+        assert!(ok1 || !ok4, "Eq.26 must not get easier with more threads");
+    }
+
+    #[test]
+    fn tighter_cache_tiles_smaller() {
+        let mut small = MachineSpec::spacemit_k1();
+        small.l2_bytes = 256 * 1024; // 256 KB LLC
+        let d = dims(512, 4096, 64, 8, 8);
+        let plan_small = select(&d, &small, 4).unwrap();
+        let plan_big = select(&d, &MachineSpec::spacemit_k1(), 4).unwrap();
+        let btl_small = plan_small.btl.unwrap_or(d.b);
+        let btl_big = plan_big.btl.unwrap_or(d.b);
+        assert!(btl_small <= btl_big);
+    }
+
+    #[test]
+    fn infeasible_tiling_is_discarded() {
+        // paper: "if Eq. 28 is not satisfied, the solution is deemed
+        // inefficient and discarded" — a tiny LLC makes even btl = 1 fail
+        let mut tiny = MachineSpec::spacemit_k1();
+        tiny.l2_bytes = 64 * 1024;
+        let d = dims(512, 4096, 64, 8, 8);
+        assert!(select(&d, &tiny, 4).is_err());
+    }
+}

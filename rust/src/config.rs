@@ -1,0 +1,277 @@
+//! Configuration: a TOML-subset parser and the typed config the CLI,
+//! DSE engine and serving coordinator consume.
+//!
+//! Grammar supported (sufficient for our configs, errors loudly otherwise):
+//! `[section]` headers, `key = value` with string/int/float/bool values,
+//! `#` comments. No arrays-of-tables, no nested tables, no multiline.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed config: section -> key -> raw value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Toml {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A TOML-subset scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut out = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::config(format!("line {}: unterminated section", lineno + 1)))?;
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("line {}: expected key = value", lineno + 1)))?;
+            let value = parse_value(value.trim())
+                .map_err(|e| Error::config(format!("line {}: {e}", lineno + 1)))?;
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unparseable value '{s}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Typed configs
+// ---------------------------------------------------------------------------
+
+/// DSE engine knobs (paper §4.1-4.2 constants, overridable per run).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseConfig {
+    /// Ranks must be multiples of this (the vectorization constraint).
+    pub vl: u64,
+    /// Uniform rank values to sweep.
+    pub ranks: Vec<u64>,
+    /// Maximum configuration length to explore.
+    pub d_max: usize,
+    /// Scalability cut: discard d > limit when the heaviest einsum is below
+    /// `scal_flops` FLOPs.
+    pub d_scal_limit: usize,
+    pub scal_flops: u64,
+    /// Batch size assumed when pricing inference.
+    pub batch: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            vl: 8,
+            ranks: vec![8, 16, 24, 32, 40, 48, 56, 64],
+            d_max: 6,
+            d_scal_limit: 4,
+            scal_flops: 8_000_000,
+            batch: 1,
+        }
+    }
+}
+
+/// Serving coordinator knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    /// Max time a request waits for batch-mates.
+    pub max_wait_us: u64,
+    /// Bounded queue length (admission control).
+    pub queue_cap: usize,
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 16, max_wait_us: 500, queue_cap: 1024, workers: 1 }
+    }
+}
+
+/// Load DSE + serve configs from a TOML-subset file.
+pub fn load(text: &str) -> Result<(DseConfig, ServeConfig)> {
+    let t = Toml::parse(text)?;
+    let mut dse = DseConfig::default();
+    if let Some(v) = t.get_int("dse", "vl") {
+        dse.vl = v as u64;
+    }
+    if let Some(v) = t.get_int("dse", "d_max") {
+        dse.d_max = v as usize;
+    }
+    if let Some(v) = t.get_int("dse", "batch") {
+        dse.batch = v as usize;
+    }
+    if let Some(v) = t.get_int("dse", "scal_flops") {
+        dse.scal_flops = v as u64;
+    }
+    if let Some(v) = t.get_str("dse", "ranks") {
+        dse.ranks = v
+            .split(',')
+            .map(|x| x.trim().parse::<u64>().map_err(|e| Error::config(e.to_string())))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let mut serve = ServeConfig::default();
+    if let Some(v) = t.get_int("serve", "max_batch") {
+        serve.max_batch = v as usize;
+    }
+    if let Some(v) = t.get_int("serve", "max_wait_us") {
+        serve.max_wait_us = v as u64;
+    }
+    if let Some(v) = t.get_int("serve", "queue_cap") {
+        serve.queue_cap = v as usize;
+    }
+    if let Some(v) = t.get_int("serve", "workers") {
+        serve.workers = v as usize;
+    }
+    Ok((dse, serve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let t = Toml::parse(
+            r#"
+            # comment
+            [dse]
+            vl = 8
+            ranks = "8, 16"   # inline comment
+            frac = 0.5
+            [serve]
+            max_batch = 32
+            debug = true
+            name = "a # not comment"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get_int("dse", "vl"), Some(8));
+        assert_eq!(t.get_str("dse", "ranks"), Some("8, 16"));
+        assert_eq!(t.get_f64("dse", "frac"), Some(0.5));
+        assert_eq!(t.get_bool("serve", "debug"), Some(true));
+        assert_eq!(t.get_str("serve", "name"), Some("a # not comment"));
+        assert_eq!(t.get("nope", "x"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Toml::parse("[open").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("x = \"unterminated").is_err());
+        assert!(Toml::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn typed_load_roundtrip() {
+        let (dse, serve) = load(
+            r#"
+            [dse]
+            vl = 4
+            ranks = "8, 24"
+            batch = 16
+            [serve]
+            max_batch = 8
+            workers = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(dse.vl, 4);
+        assert_eq!(dse.ranks, vec![8, 24]);
+        assert_eq!(dse.batch, 16);
+        assert_eq!(serve.max_batch, 8);
+        assert_eq!(serve.workers, 2);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let (dse, serve) = load("").unwrap();
+        assert_eq!(dse, DseConfig::default());
+        assert_eq!(serve, ServeConfig::default());
+    }
+}

@@ -1,0 +1,131 @@
+//! Dynamic batching policy (pure logic, independently testable).
+//!
+//! Requests accumulate until the batch is full or the oldest request has
+//! waited `max_wait`; then the batch closes. The same policy a serving
+//! frontend (vLLM-style) applies, scaled to this system.
+
+use std::time::{Duration, Instant};
+
+/// Decision state for one in-flight batch.
+#[derive(Debug)]
+pub struct Batcher {
+    max_batch: usize,
+    max_wait: Duration,
+    opened_at: Option<Instant>,
+    pending: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Batcher { max_batch, max_wait, opened_at: None, pending: 0 }
+    }
+
+    /// Record an arriving request; returns true if the batch is now full
+    /// and must be dispatched.
+    pub fn push(&mut self, now: Instant) -> bool {
+        if self.pending == 0 {
+            self.opened_at = Some(now);
+        }
+        self.pending += 1;
+        self.pending >= self.max_batch
+    }
+
+    /// Should a non-full batch be dispatched due to the wait deadline?
+    pub fn deadline_reached(&self, now: Instant) -> bool {
+        match self.opened_at {
+            Some(t0) if self.pending > 0 => now.duration_since(t0) >= self.max_wait,
+            _ => false,
+        }
+    }
+
+    /// Time the queue worker may sleep before the deadline fires.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.opened_at.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.max_wait.saturating_sub(elapsed)
+        })
+    }
+
+    /// Close the batch, returning its size.
+    pub fn take(&mut self) -> usize {
+        let n = self.pending;
+        self.pending = 0;
+        self.opened_at = None;
+        n
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut b = Batcher::new(3, Duration::from_millis(10));
+        let t = Instant::now();
+        assert!(!b.push(t));
+        assert!(!b.push(t));
+        assert!(b.push(t)); // full
+        assert_eq!(b.take(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_fires_only_with_pending() {
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        assert!(!b.deadline_reached(t0 + Duration::from_secs(1)));
+        b.push(t0);
+        assert!(!b.deadline_reached(t0));
+        assert!(b.deadline_reached(t0 + Duration::from_millis(5)));
+        assert_eq!(b.take(), 1);
+        assert!(!b.deadline_reached(t0 + Duration::from_secs(2)));
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push(t0);
+        let left = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(left <= Duration::from_millis(6));
+        let left2 = b.time_to_deadline(t0 + Duration::from_millis(40)).unwrap();
+        assert_eq!(left2, Duration::ZERO);
+    }
+
+    #[test]
+    fn property_batch_never_exceeds_max() {
+        crate::testkit::check("batch <= max_batch", 50, |d| {
+            let max = d.usize_in(1, 16);
+            let mut b = Batcher::new(max, Duration::from_millis(1));
+            let t = Instant::now();
+            let mut total_in = 0usize;
+            let mut total_out = 0usize;
+            for _ in 0..d.usize_in(0, 60) {
+                total_in += 1;
+                if b.push(t) {
+                    let n = b.take();
+                    if n > max {
+                        return Err(format!("batch {n} > max {max}"));
+                    }
+                    total_out += n;
+                }
+            }
+            total_out += b.take();
+            if total_in != total_out {
+                return Err(format!("lost requests: in {total_in} out {total_out}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Executable model engines: the serving-time realization of DSE output.
+
+use std::collections::HashMap;
+
+use crate::baselines::dense::DenseFc;
+use crate::compiler::{compile, OptimizationPlan};
+use crate::error::{Error, Result};
+use crate::kernels::{self, PackedG};
+use crate::machine::MachineSpec;
+use crate::tensor::Tensor;
+use crate::ttd::cost::{einsum_chain, EinsumDims};
+use crate::ttd::decompose::TtCores;
+
+/// A TT-decomposed FC layer compiled for serving: packed cores plus a
+/// per-batch-size plan cache.
+pub struct TtFcEngine {
+    machine: MachineSpec,
+    layout: crate::ttd::TtLayout,
+    /// Packed core per chain step, in processing order (t = d-1 .. 0).
+    packed: Vec<PackedG>,
+    bias: Option<Vec<f32>>,
+    /// batch -> plans per chain step.
+    plan_cache: HashMap<usize, Vec<OptimizationPlan>>,
+    /// Measured RB autotuning on plan-cache misses (kernels::tune_plan).
+    tune: bool,
+    /// Ping-pong buffers for the einsum chain (no per-request allocation).
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+}
+
+impl TtFcEngine {
+    /// Compile a decomposed layer for the target machine.
+    pub fn new(tt: &TtCores, machine: &MachineSpec) -> Result<TtFcEngine> {
+        // plans at batch 1 determine the (batch-independent) packing layout
+        let chain = einsum_chain(&tt.layout, 1);
+        let mut packed = Vec::with_capacity(chain.len());
+        for (step, dims) in chain.iter().enumerate() {
+            let core_idx = tt.layout.d() - 1 - step; // processing order
+            let plan = compile(dims, machine)?;
+            packed.push(kernels::pack(&tt.cores[core_idx], &plan)?);
+        }
+        Ok(TtFcEngine {
+            machine: machine.clone(),
+            layout: tt.layout.clone(),
+            packed,
+            bias: tt.bias.clone(),
+            plan_cache: HashMap::new(),
+            tune: false,
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+        })
+    }
+
+    /// Enable measured register-blocking autotuning: each plan-cache miss
+    /// micro-benchmarks the solver's top candidates on this machine
+    /// (EXPERIMENTS.md §Perf iteration 2). One-time cost per batch size.
+    pub fn with_tuning(mut self) -> Self {
+        self.tune = true;
+        self
+    }
+
+    pub fn layout(&self) -> &crate::ttd::TtLayout {
+        &self.layout
+    }
+
+    /// Input width N.
+    pub fn n_total(&self) -> usize {
+        self.layout.n_total() as usize
+    }
+
+    /// Output width M.
+    pub fn m_total(&self) -> usize {
+        self.layout.m_total() as usize
+    }
+
+    fn plans_for_batch(&mut self, batch: usize) -> Result<&[OptimizationPlan]> {
+        if !self.plan_cache.contains_key(&batch) {
+            let chain = einsum_chain(&self.layout, batch);
+            let d = self.layout.d();
+            let mut plans = Vec::with_capacity(chain.len());
+            for (step, dims) in chain.iter().enumerate() {
+                let mut plan = compile(dims, &self.machine)?;
+                // packing layout must be batch-invariant for the cache to work
+                debug_assert_eq!(
+                    plan.vector_loop,
+                    compile(&einsum_chain(&self.layout, 1)[step], &self.machine)?.vector_loop
+                );
+                if self.tune {
+                    let core_shape = self.layout.core_shape(d - 1 - step);
+                    let mut rng = crate::util::prng::Rng::new(0x7e57);
+                    let g = Tensor::randn(core_shape.to_vec(), 0.5, &mut rng);
+                    let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 0.5, &mut rng);
+                    plan = kernels::tune_plan(&plan, &self.machine, &g, &x, 6)?;
+                }
+                plans.push(plan);
+            }
+            self.plan_cache.insert(batch, plans);
+        }
+        Ok(self.plan_cache.get(&batch).expect("just inserted"))
+    }
+
+    /// Forward `x (B, N) -> (B, M)` through the optimized kernel chain.
+    pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
+        let dims = x.dims();
+        if dims.len() != 2 || dims[1] != self.n_total() {
+            return Err(Error::shape(format!(
+                "engine expects (B, {}), got {:?}",
+                self.n_total(),
+                dims
+            )));
+        }
+        let batch = dims[0];
+        self.plans_for_batch(batch)?;
+        let plans = self.plan_cache.get(&batch).expect("cached").clone();
+        let m_total = self.m_total();
+
+        // ping-pong between the two owned buffers; input of step 0 is x
+        self.buf_a.clear();
+        self.buf_a.extend_from_slice(x.data());
+        for (step, plan) in plans.iter().enumerate() {
+            let EinsumDims { b, n, k, .. } = plan.dims;
+            debug_assert_eq!(self.buf_a.len(), b * n * k);
+            kernels::execute_into(plan, &self.packed[step], &self.buf_a, &mut self.buf_b)?;
+            std::mem::swap(&mut self.buf_a, &mut self.buf_b);
+        }
+        // final layout (M, B) row-major -> (B, M)
+        let mut y = Tensor::from_vec(vec![m_total, batch], self.buf_a.clone())?
+            .transpose(&[1, 0])?;
+        if let Some(bias) = &self.bias {
+            for row in y.data_mut().chunks_mut(m_total) {
+                for (v, &bv) in row.iter_mut().zip(bias) {
+                    *v += bv;
+                }
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// One step of a sequential model.
+pub enum LayerOp {
+    Tt(TtFcEngine),
+    Dense(DenseFc),
+    Relu,
+}
+
+/// A sequential model engine (the LeNet300-style MLP in the examples).
+pub struct ModelEngine {
+    pub name: String,
+    ops: Vec<LayerOp>,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl ModelEngine {
+    pub fn new(name: impl Into<String>, ops: Vec<LayerOp>, in_dim: usize, out_dim: usize) -> Self {
+        ModelEngine { name: name.into(), ops, in_dim, out_dim }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// Forward a batch `(B, in_dim) -> (B, out_dim)`.
+    pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
+        let mut cur = x.clone();
+        for op in &mut self.ops {
+            cur = match op {
+                LayerOp::Tt(engine) => engine.forward(&cur)?,
+                LayerOp::Dense(fc) => fc.forward(&cur)?,
+                LayerOp::Relu => {
+                    let mut t = cur;
+                    for v in t.data_mut() {
+                        *v = v.max(0.0);
+                    }
+                    t
+                }
+            };
+        }
+        if cur.dims()[1] != self.out_dim {
+            return Err(Error::shape("model produced wrong output width"));
+        }
+        Ok(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::einsum::fc_batched_ref;
+    use crate::ttd::decompose::random_cores;
+    use crate::ttd::TtLayout;
+    use crate::util::prng::Rng;
+
+    fn engine_and_truth() -> (TtFcEngine, Tensor, Option<Vec<f32>>) {
+        let mut rng = Rng::new(100);
+        let layout = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        let mut tt = random_cores(&layout, &mut rng);
+        tt.bias = Some((0..300).map(|i| (i % 7) as f32 * 0.1).collect());
+        let w = tt.reconstruct().unwrap();
+        let bias = tt.bias.clone();
+        let engine = TtFcEngine::new(&tt, &MachineSpec::spacemit_k1()).unwrap();
+        (engine, w, bias)
+    }
+
+    #[test]
+    fn engine_matches_dense_reconstruction() {
+        let (mut engine, w, bias) = engine_and_truth();
+        let mut rng = Rng::new(101);
+        for batch in [1usize, 3, 16] {
+            let x = Tensor::randn(vec![batch, 784], 1.0, &mut rng);
+            let got = engine.forward(&x).unwrap();
+            let want = fc_batched_ref(&w, &x, bias.as_deref()).unwrap();
+            assert!(
+                got.allclose(&want, 1e-3, 1e-3),
+                "batch {batch}: {}",
+                got.max_abs_diff(&want).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn plan_cache_reuses_batches() {
+        let (mut engine, _, _) = engine_and_truth();
+        let mut rng = Rng::new(102);
+        let x = Tensor::randn(vec![4, 784], 1.0, &mut rng);
+        engine.forward(&x).unwrap();
+        engine.forward(&x).unwrap();
+        assert_eq!(engine.plan_cache.len(), 1);
+        let x2 = Tensor::randn(vec![8, 784], 1.0, &mut rng);
+        engine.forward(&x2).unwrap();
+        assert_eq!(engine.plan_cache.len(), 2);
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let (mut engine, _, _) = engine_and_truth();
+        let x = Tensor::zeros(vec![2, 100]);
+        assert!(engine.forward(&x).is_err());
+    }
+
+    #[test]
+    fn model_engine_composes_layers() {
+        let mut rng = Rng::new(103);
+        let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![20, 15], 8).unwrap();
+        let tt = random_cores(&layout, &mut rng);
+        let t_engine = TtFcEngine::new(&tt, &MachineSpec::spacemit_k1()).unwrap();
+        let w2 = Tensor::randn(vec![10, 100], 0.2, &mut rng);
+        let fc = DenseFc::new(&w2, None).unwrap();
+        let mut model = ModelEngine::new(
+            "toy",
+            vec![LayerOp::Tt(t_engine), LayerOp::Relu, LayerOp::Dense(fc)],
+            300,
+            10,
+        );
+        let x = Tensor::randn(vec![5, 300], 1.0, &mut rng);
+        let y = model.forward(&x).unwrap();
+        assert_eq!(y.dims(), &[5, 10]);
+
+        // reference: dense reconstruction + relu + dense
+        let w1 = tt.reconstruct().unwrap();
+        let mut h = fc_batched_ref(&w1, &x, None).unwrap();
+        for v in h.data_mut() {
+            *v = v.max(0.0);
+        }
+        let want = fc_batched_ref(&w2, &h, None).unwrap();
+        assert!(y.allclose(&want, 1e-3, 1e-3));
+    }
+}

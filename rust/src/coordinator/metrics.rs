@@ -1,0 +1,148 @@
+//! Serving metrics: latency histograms and throughput counters.
+
+use std::time::Duration;
+
+/// Log-scaled latency histogram (microseconds, factor-2 buckets from 1us).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1); // bucket upper bound
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// End-to-end request latency (enqueue -> reply).
+    pub latency: Histogram,
+    /// Time spent waiting for batch-mates.
+    pub queue_wait: Histogram,
+    /// Model execution time per batch.
+    pub exec: Histogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub batch_size_sum: u64,
+}
+
+impl Metrics {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} rejected={} mean_batch={:.2} \
+             p50={}us p99={}us mean={:.0}us max={}us",
+            self.requests,
+            self.batches,
+            self.rejected,
+            self.mean_batch(),
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(99.0),
+            self.latency.mean_us(),
+            self.latency.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_summarizes() {
+        let mut h = Histogram::default();
+        for us in [1u64, 10, 100, 1000, 10000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max_us(), 10000);
+        assert!((h.mean_us() - 11111.0 / 5.0).abs() < 1.0);
+        // p100 spans the largest bucket
+        assert!(h.percentile_us(100.0) >= 10000);
+        assert!(h.percentile_us(1.0) <= 4);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut h = Histogram::default();
+        for i in 0..1000u64 {
+            h.record(Duration::from_micros(i + 1));
+        }
+        let p50 = h.percentile_us(50.0);
+        let p90 = h.percentile_us(90.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p90 && p90 <= p99);
+    }
+
+    #[test]
+    fn metrics_mean_batch() {
+        let mut m = Metrics::default();
+        m.batches = 4;
+        m.batch_size_sum = 10;
+        assert_eq!(m.mean_batch(), 2.5);
+        assert!(m.summary().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn empty_histogram_is_quiet() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 serving coordinator: a deployable inference runtime around the
+//! compressed layers.
+//!
+//! The paper's contribution is compile-time (DSE + kernel plans); this
+//! module is the system that *uses* those plans in production shape:
+//!
+//! * [`engine`] — executable models: TT FC layers driven by the optimized
+//!   kernel engine, dense layers on the MMM baseline, composed into
+//!   networks; built from DSE output by the [`router`].
+//! * [`batcher`] — dynamic batching: group requests up to (max_batch,
+//!   max_wait) like a serving frontend.
+//! * [`server`] — the event loop: bounded queue, worker thread, replies
+//!   over channels; no allocation on the per-request hot path beyond the
+//!   reply buffers.
+//! * [`metrics`] — latency histograms + throughput counters.
+//!
+//! Invariants (property-tested): no request is lost or duplicated, batches
+//! never exceed `max_batch`, FIFO order within the queue, and batched
+//! outputs are identical to single-request outputs.
+
+pub mod engine;
+pub mod batcher;
+pub mod server;
+pub mod metrics;
+pub mod router;
+
+pub use engine::{LayerOp, ModelEngine, TtFcEngine};
+pub use router::{route_model, Route};
+pub use server::{InferenceRequest, InferenceResponse, Server};

@@ -1,0 +1,87 @@
+//! Layer routing: run the DSE per FC layer and decide TT vs dense
+//! (the paper factorizes layers where a surviving solution beats the dense
+//! layer; tiny layers stay dense).
+
+use crate::config::DseConfig;
+use crate::dse::{self, Solution};
+use crate::dse::report::MIN_FC_DIM;
+use crate::error::Result;
+use crate::ttd::cost;
+
+/// Routing decision for one FC layer.
+#[derive(Debug, Clone)]
+pub enum Route {
+    /// Factorize with this DSE-selected solution.
+    Tt(Solution),
+    /// Keep the dense MMM path.
+    Dense,
+}
+
+impl Route {
+    pub fn is_tt(&self) -> bool {
+        matches!(self, Route::Tt(_))
+    }
+}
+
+/// Decide the route for an FC layer `(m_out, n_in)` at the given rank.
+pub fn route_layer(m_out: u64, n_in: u64, rank: u64, cfg: &DseConfig) -> Route {
+    if m_out < MIN_FC_DIM || n_in < MIN_FC_DIM {
+        return Route::Dense;
+    }
+    let explored = dse::explore(m_out, n_in, cfg);
+    match dse::select_solution(&explored, rank) {
+        Ok(sol) if sol.flops < cost::dense_flops(m_out, n_in) => Route::Tt(sol),
+        _ => Route::Dense,
+    }
+}
+
+/// Route every FC layer of a model architecture.
+pub fn route_model(
+    shapes: &[(u64, u64)], // (n_in, m_out) pairs, paper table order
+    rank: u64,
+    cfg: &DseConfig,
+) -> Result<Vec<Route>> {
+    Ok(shapes
+        .iter()
+        .map(|&(n, m)| route_layer(m, n, rank, cfg))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_layers_get_factorized() {
+        let cfg = DseConfig::default();
+        let r = route_layer(300, 784, 8, &cfg);
+        assert!(r.is_tt());
+        if let Route::Tt(sol) = r {
+            assert!(sol.flops < cost::dense_flops(300, 784));
+            assert_eq!(sol.layout.d(), 2); // Sec. 6.4 selection policy
+        }
+    }
+
+    #[test]
+    fn tiny_layers_stay_dense() {
+        let cfg = DseConfig::default();
+        assert!(!route_layer(10, 100, 8, &cfg).is_tt()); // 10-class head
+        assert!(!route_layer(100, 10, 8, &cfg).is_tt());
+    }
+
+    #[test]
+    fn prime_dims_stay_dense() {
+        let cfg = DseConfig::default();
+        assert!(!route_layer(101, 784, 8, &cfg).is_tt()); // 101 prime
+    }
+
+    #[test]
+    fn lenet300_routing_matches_examples() {
+        let cfg = DseConfig::default();
+        let routes =
+            route_model(&[(784, 300), (300, 100), (100, 10)], 8, &cfg).unwrap();
+        assert!(routes[0].is_tt());
+        assert!(routes[1].is_tt());
+        assert!(!routes[2].is_tt()); // 100 -> 10 too small
+    }
+}

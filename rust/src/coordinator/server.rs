@@ -1,0 +1,337 @@
+//! The serving event loop: bounded request queue, dynamic batching worker,
+//! channel-based replies. Hand-rolled on std (tokio is unavailable
+//! offline); the loop structure is the standard serving shape: admission ->
+//! queue -> batch -> execute -> fan-out.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::batcher::Batcher;
+use super::engine::ModelEngine;
+use super::metrics::Metrics;
+
+/// A single inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Flat input row (length = model in_dim).
+    pub input: Vec<f32>,
+}
+
+/// The reply.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+    /// Time from enqueue to reply.
+    pub latency: Duration,
+}
+
+struct Envelope {
+    req: InferenceRequest,
+    enqueued: Instant,
+    reply: Sender<Result<InferenceResponse>>,
+}
+
+enum Msg {
+    Request(Envelope),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: SyncSender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    in_dim: usize,
+}
+
+impl Server {
+    /// Start the event loop over a model engine.
+    pub fn start(engine: ModelEngine, cfg: ServeConfig) -> Server {
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap.max(1));
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let in_dim = engine.in_dim();
+        let m2 = Arc::clone(&metrics);
+        let worker = std::thread::spawn(move || worker_loop(engine, cfg, rx, m2));
+        Server { tx, worker: Some(worker), metrics, in_dim }
+    }
+
+    /// Submit without blocking on execution; returns the reply channel.
+    /// Fails fast when the queue is full (admission control) or the input
+    /// width is wrong.
+    pub fn submit(&self, req: InferenceRequest) -> Result<Receiver<Result<InferenceResponse>>> {
+        if req.input.len() != self.in_dim {
+            return Err(Error::serve(format!(
+                "input width {} != model {}",
+                req.input.len(),
+                self.in_dim
+            )));
+        }
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let env = Envelope { req, enqueued: Instant::now(), reply: reply_tx };
+        match self.tx.try_send(Msg::Request(env)) {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.lock().expect("metrics lock").rejected += 1;
+                Err(Error::serve("queue full (admission control)"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(Error::serve("server stopped")),
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| Error::serve("worker dropped reply"))?
+    }
+
+    /// Snapshot of the metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().expect("metrics lock").clone()
+    }
+
+    /// Graceful shutdown: in-flight requests are answered first.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    mut engine: ModelEngine,
+    cfg: ServeConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let mut batcher = Batcher::new(cfg.max_batch.max(1), max_wait);
+    let mut pending: Vec<Envelope> = Vec::with_capacity(cfg.max_batch);
+    loop {
+        // wait for work (or the batch deadline of already-pending work)
+        let msg = if pending.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // all senders gone
+            }
+        } else {
+            let wait = batcher
+                .time_to_deadline(Instant::now())
+                .unwrap_or(Duration::ZERO);
+            match rx.recv_timeout(wait) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        let mut shutdown = false;
+        match msg {
+            Some(Msg::Request(env)) => {
+                let full = batcher.push(env.enqueued);
+                pending.push(env);
+                if !full && !batcher.deadline_reached(Instant::now()) {
+                    continue;
+                }
+            }
+            Some(Msg::Shutdown) => shutdown = true,
+            None => {} // deadline fired
+        }
+        if !pending.is_empty() {
+            batcher.take();
+            dispatch(&mut engine, &mut pending, &metrics);
+        }
+        if shutdown {
+            break;
+        }
+    }
+    // answer any stragglers before exiting
+    if !pending.is_empty() {
+        dispatch(&mut engine, &mut pending, &metrics);
+    }
+}
+
+fn dispatch(engine: &mut ModelEngine, pending: &mut Vec<Envelope>, metrics: &Arc<Mutex<Metrics>>) {
+    let batch = pending.len();
+    let in_dim = engine.in_dim();
+    let out_dim = engine.out_dim();
+    let mut flat = Vec::with_capacity(batch * in_dim);
+    for env in pending.iter() {
+        flat.extend_from_slice(&env.req.input);
+    }
+    let exec_start = Instant::now();
+    let result = Tensor::from_vec(vec![batch, in_dim], flat).and_then(|x| engine.forward(&x));
+    let exec_time = exec_start.elapsed();
+
+    {
+        let mut m = metrics.lock().expect("metrics lock");
+        m.batches += 1;
+        m.requests += batch as u64;
+        m.batch_size_sum += batch as u64;
+        m.exec.record(exec_time);
+        for env in pending.iter() {
+            m.queue_wait.record(exec_start.duration_since(env.enqueued));
+            m.latency.record(env.enqueued.elapsed());
+        }
+    }
+
+    match result {
+        Ok(y) => {
+            for (i, env) in pending.drain(..).enumerate() {
+                let output = y.data()[i * out_dim..(i + 1) * out_dim].to_vec();
+                let _ = env.reply.send(Ok(InferenceResponse {
+                    id: env.req.id,
+                    output,
+                    batch_size: batch,
+                    latency: env.enqueued.elapsed(),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for env in pending.drain(..) {
+                let _ = env.reply.send(Err(Error::serve(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::dense::DenseFc;
+    use crate::coordinator::engine::{LayerOp, ModelEngine};
+    use crate::util::prng::Rng;
+
+    /// Tiny deterministic model: y = x @ W^T with known W (4 -> 2).
+    fn toy_engine() -> ModelEngine {
+        let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
+        let fc = DenseFc::new(&w, None).unwrap();
+        ModelEngine::new("toy", vec![LayerOp::Dense(fc)], 4, 2)
+    }
+
+    fn serve_cfg(max_batch: usize, wait_us: u64) -> ServeConfig {
+        ServeConfig { max_batch, max_wait_us: wait_us, queue_cap: 256, workers: 1 }
+    }
+
+    #[test]
+    fn admission_control_rejects_when_queue_full() {
+        // a 1-slot queue with a slow wait window fills immediately
+        let cfg = ServeConfig { max_batch: 64, max_wait_us: 50_000, queue_cap: 1, workers: 1 };
+        let server = Server::start(toy_engine(), cfg);
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for id in 0..50u64 {
+            match server.submit(InferenceRequest { id, input: vec![0.0; 4] }) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        // every accepted request still gets exactly one reply
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        if rejected > 0 {
+            assert!(server.metrics().rejected >= 1);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = Server::start(toy_engine(), serve_cfg(4, 100));
+        let resp = server
+            .infer(InferenceRequest { id: 7, input: vec![1.0, 2.0, 3.0, 4.0] })
+            .unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.output, vec![1.0, 2.0]);
+        let m = server.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.batches, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated_under_load() {
+        let server = Server::start(toy_engine(), serve_cfg(8, 200));
+        let mut rng = Rng::new(110);
+        let mut receivers = Vec::new();
+        for id in 0..100u64 {
+            let input = rng.normal_vec(4, 1.0);
+            receivers.push((id, input.clone(), server.submit(InferenceRequest { id, input }).unwrap()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (id, input, rx) in receivers {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.id, id);
+            assert!(seen.insert(id), "duplicate reply {id}");
+            // batched output equals the single-request math
+            assert!((resp.output[0] - input[0]).abs() < 1e-6);
+            assert!((resp.output[1] - input[1]).abs() < 1e-6);
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+        }
+        assert_eq!(seen.len(), 100);
+        let m = server.metrics();
+        assert_eq!(m.requests, 100);
+        assert!(m.mean_batch() >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_width_and_reports() {
+        let server = Server::start(toy_engine(), serve_cfg(4, 50));
+        let err = server.infer(InferenceRequest { id: 0, input: vec![1.0; 3] });
+        assert!(err.is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        // long wait window + burst submit => batches bigger than 1
+        let server = Server::start(toy_engine(), serve_cfg(16, 50_000));
+        let rxs: Vec<_> = (0..16)
+            .map(|id| {
+                server
+                    .submit(InferenceRequest { id, input: vec![0.5; 4] })
+                    .unwrap()
+            })
+            .collect();
+        let sizes: Vec<usize> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().batch_size)
+            .collect();
+        // at least one multi-request batch must have formed
+        assert!(sizes.iter().any(|&s| s > 1), "sizes {sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_inflight() {
+        let server = Server::start(toy_engine(), serve_cfg(64, 1_000_000));
+        let rx = server
+            .submit(InferenceRequest { id: 1, input: vec![1.0; 4] })
+            .unwrap();
+        // batch not full, deadline far away: shutdown must still flush it
+        server.shutdown();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Permutation sweeps for the alignment-strategy evaluation
+//! (paper Figs. 5-8 and Eq. 16-17 ratios).
+
+use crate::factor::{self, multiset_permutations};
+use crate::ttd::{cost, TtLayout};
+
+/// FLOPs + memory of every (m, n) shape-permutation pair for one aligned
+/// configuration at uniform rank `r`, with the aligned pair flagged.
+#[derive(Debug, Clone)]
+pub struct PermutationSweep {
+    /// (flops, memory, is_aligned) per permutation pair.
+    pub points: Vec<(u64, u64, bool)>,
+    pub aligned_flops: u64,
+    pub aligned_memory: u64,
+}
+
+/// Sweep all permutations of the given shape multisets (paper Figs. 5-6).
+/// Skips rank-infeasible permutations (the paper's rank caps apply to all).
+pub fn sweep_permutations(m_multiset: &[u64], n_multiset: &[u64], rank: u64) -> PermutationSweep {
+    let m_aligned = factor::align_m(m_multiset.to_vec());
+    let n_aligned = factor::align_n(n_multiset.to_vec());
+    let mut points = Vec::new();
+    let mut aligned_flops = u64::MAX;
+    let mut aligned_memory = u64::MAX;
+    for mp in multiset_permutations(m_multiset) {
+        for np in multiset_permutations(n_multiset) {
+            let layout = match TtLayout::with_uniform_rank(mp.clone(), np.clone(), rank) {
+                Ok(l) => l,
+                Err(_) => continue,
+            };
+            let f = cost::flops(&layout);
+            let mem = cost::params(&layout);
+            let is_aligned = mp == m_aligned && np == n_aligned;
+            if is_aligned {
+                aligned_flops = f;
+                aligned_memory = mem;
+            }
+            points.push((f, mem, is_aligned));
+        }
+    }
+    PermutationSweep { points, aligned_flops, aligned_memory }
+}
+
+/// Eq. 16/17 normalized ratios for one sweep: 1.0 = aligned achieves the
+/// minimum, 0.0 = the maximum.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlignmentRatios {
+    pub flops: f64,
+    pub memory: f64,
+}
+
+pub fn ratios(sweep: &PermutationSweep) -> AlignmentRatios {
+    let fmax = sweep.points.iter().map(|p| p.0).max().unwrap_or(0) as f64;
+    let fmin = sweep.points.iter().map(|p| p.0).min().unwrap_or(0) as f64;
+    let mmax = sweep.points.iter().map(|p| p.1).max().unwrap_or(0) as f64;
+    let mmin = sweep.points.iter().map(|p| p.1).min().unwrap_or(0) as f64;
+    let ratio = |max: f64, min: f64, aligned: f64| {
+        if max > min {
+            (max - aligned) / (max - min)
+        } else {
+            1.0
+        }
+    };
+    AlignmentRatios {
+        flops: ratio(fmax, fmin, sweep.aligned_flops as f64),
+        memory: ratio(mmax, mmin, sweep.aligned_memory as f64),
+    }
+}
+
+/// Fig. 7/8 benchmark: ratios over many (shape, rank) configurations of a
+/// layer. Returns one `AlignmentRatios` per aligned configuration.
+pub fn layer_ratio_study(
+    m_dim: u64,
+    n_dim: u64,
+    d: usize,
+    ranks: &[u64],
+    max_configs: usize,
+) -> Vec<AlignmentRatios> {
+    let m_sets = factor::factor_multisets(m_dim, d);
+    let n_sets = factor::factor_multisets(n_dim, d);
+    let mut out = Vec::new();
+    'outer: for ms in &m_sets {
+        for ns in &n_sets {
+            for &r in ranks {
+                let sweep = sweep_permutations(ms, ns, r);
+                if sweep.aligned_flops == u64::MAX {
+                    continue; // aligned pair infeasible at this rank
+                }
+                out.push(ratios(&sweep));
+                if out.len() >= max_configs {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_is_always_flops_optimal() {
+        // the paper's central claim (Fig. 7: FLOPs ratio boxplot collapses
+        // to 1.0); exhaustively verify on several configurations
+        for (ms, ns, r) in [
+            (vec![5u64, 5, 3, 2, 2], vec![2u64, 2, 2, 7, 14], 4),
+            (vec![10, 10, 5, 2], vec![2, 8, 8, 32], 8),
+            (vec![16, 32], vec![64, 64], 8),
+            (vec![4, 8, 16], vec![2, 4, 8], 2),
+        ] {
+            let sweep = sweep_permutations(&ms, &ns, r);
+            let rt = ratios(&sweep);
+            assert!(
+                (rt.flops - 1.0).abs() < 1e-12,
+                "aligned not FLOPs-minimal for {ms:?} x {ns:?}: {rt:?}"
+            );
+            let min = sweep.points.iter().map(|p| p.0).min().unwrap();
+            assert_eq!(sweep.aligned_flops, min);
+        }
+    }
+
+    #[test]
+    fn memory_ratio_close_to_one_but_not_always_one() {
+        // Fig. 7: memory is near-optimal; Fig. 8 example values
+        let rts = layer_ratio_study(1000, 2048, 3, &[8, 16], 64);
+        assert!(!rts.is_empty());
+        let avg_mem = rts.iter().map(|r| r.memory).sum::<f64>() / rts.len() as f64;
+        assert!(avg_mem > 0.8, "avg memory ratio {avg_mem}");
+    }
+
+    #[test]
+    fn paper_fig8_example_memory_values() {
+        // paper: m=[10,10,5,2], n=[2,8,8,32], r=[1,8,8,8,1] -> memory 9352,
+        // max over permutations 26952, min 5224
+        let sweep = sweep_permutations(&[10, 10, 5, 2], &[2, 8, 8, 32], 8);
+        assert_eq!(sweep.aligned_memory, 9352);
+        let mmax = sweep.points.iter().map(|p| p.1).max().unwrap();
+        let mmin = sweep.points.iter().map(|p| p.1).min().unwrap();
+        assert_eq!(mmax, 26952);
+        assert_eq!(mmin, 5224);
+    }
+
+    #[test]
+    fn sweep_point_count_matches_prop4() {
+        let ms = [5u64, 5, 3, 2, 2];
+        let ns = [2u64, 2, 2, 7, 14];
+        let sweep = sweep_permutations(&ms, &ns, 1); // rank 1 always feasible
+        assert_eq!(sweep.points.len() as u128, factor::prop4_permutations(&ms, &ns));
+        assert_eq!(sweep.points.len(), 600); // the paper's example value
+        assert_eq!(sweep.points.iter().filter(|p| p.2).count(), 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! The design-space exploration engine (paper §4.1-4.2) — the paper's
+//! primary contribution.
+//!
+//! Pipeline stages, exactly the paper's Figure 4 / Tables 1-2 columns:
+//!
+//! 1. **All initial solutions** — counted, never materialized
+//!    ([`crate::factor::count`]).
+//! 2. **Alignment strategy** (§4.1) — keep only aligned shape pairs
+//!    (Def. 1); reduction factor per Prop. 4.
+//! 3. **Vectorization constraint** (§4.2.1) — ranks must be multiples of
+//!    `vl`; from here the space is small enough to *enumerate*.
+//! 4. **Initial-layer constraint** (§4.2.2) — FLOPs *and* params must beat
+//!    the dense layer.
+//! 5. **Scalability constraint** (§4.2.3) — discard long configurations
+//!    whose heaviest Einsum cannot keep threads busy.
+//!
+//! The enumerated stages sweep *uniform* rank values (the paper's `R`
+//! notation; its experiments fix R per solution), which keeps stage-3+
+//! spaces at the table's reported magnitudes.
+
+pub mod space;
+pub mod prune;
+pub mod report;
+pub mod select;
+pub mod alignment_stats;
+
+pub use prune::{explore, StageCounts};
+pub use select::select_solution;
+pub use space::Solution;

@@ -1,0 +1,173 @@
+//! The staged pruning pipeline and its stage-size accounting
+//! (paper Tables 1-2).
+
+use crate::config::DseConfig;
+use crate::factor::count::{space_sizes, CountCfg};
+use crate::ttd::cost;
+
+use super::space::{enumerate_aligned, Solution};
+
+/// Design-space size after each pipeline stage (one Tables-1/2 row).
+///
+/// Stages 1-2 are counted combinatorially (f64 magnitudes; the raw space
+/// reaches ~1e33). Stages 3-5 are exact enumeration counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCounts {
+    pub all: f64,
+    pub aligned: f64,
+    pub vectorized: usize,
+    pub initial: usize,
+    pub scalability: usize,
+}
+
+/// Result of exploring one FC layer.
+#[derive(Debug, Clone)]
+pub struct Explored {
+    pub m_dim: u64,
+    pub n_dim: u64,
+    pub counts: StageCounts,
+    /// Solutions surviving all five stages, sorted by ascending FLOPs.
+    pub survivors: Vec<Solution>,
+}
+
+/// Stage 4: the initial-layer constraint (§4.2.2) — keep solutions whose
+/// FLOPs *and* parameters beat the unfactorized layer.
+pub fn initial_layer_ok(s: &Solution, m_dim: u64, n_dim: u64) -> bool {
+    s.flops < cost::dense_flops(m_dim, n_dim) && s.params < cost::dense_params(m_dim, n_dim)
+}
+
+/// Stage 5: the scalability constraint (§4.2.3) — discard configuration
+/// lengths over `cfg.d_scal_limit` whose heaviest Einsum has fewer than
+/// `cfg.scal_flops` FLOPs (poor workload per thread).
+pub fn scalability_ok(s: &Solution, cfg: &DseConfig) -> bool {
+    if s.layout.d() <= cfg.d_scal_limit {
+        return true;
+    }
+    let max_flops = cost::einsum_chain(&s.layout, cfg.batch)
+        .iter()
+        .map(|e| e.flops())
+        .max()
+        .unwrap_or(0);
+    max_flops >= cfg.scal_flops
+}
+
+/// Run the full pipeline for one FC layer (M outputs, N inputs).
+pub fn explore(m_dim: u64, n_dim: u64, cfg: &DseConfig) -> Explored {
+    let ccfg = CountCfg { vl: cfg.vl, d_max: cfg.d_max, ..CountCfg::default() };
+    let sizes = space_sizes(m_dim, n_dim, &ccfg);
+
+    let vectorized = enumerate_aligned(m_dim, n_dim, cfg);
+    let n_vec = vectorized.len();
+
+    let mut initial: Vec<Solution> = vectorized
+        .into_iter()
+        .filter(|s| initial_layer_ok(s, m_dim, n_dim))
+        .collect();
+    let n_init = initial.len();
+
+    initial.retain(|s| scalability_ok(s, cfg));
+    let n_scal = initial.len();
+
+    initial.sort_by_key(|s| (s.flops, s.params));
+    Explored {
+        m_dim,
+        n_dim,
+        counts: StageCounts {
+            all: sizes.all,
+            aligned: sizes.aligned,
+            vectorized: n_vec,
+            initial: n_init,
+            scalability: n_scal,
+        },
+        survivors: initial,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn cfg() -> DseConfig {
+        DseConfig::default()
+    }
+
+    #[test]
+    fn stage_counts_monotone_nonincreasing() {
+        for (m, n) in [(120u64, 400u64), (300, 784), (512, 512), (2048, 2048)] {
+            let e = explore(m, n, &cfg());
+            let c = &e.counts;
+            assert!(c.all >= c.aligned, "{m}x{n}");
+            assert!(c.aligned >= c.vectorized as f64, "{m}x{n}");
+            assert!(c.vectorized >= c.initial, "{m}x{n}");
+            assert!(c.initial >= c.scalability, "{m}x{n}");
+            assert_eq!(e.survivors.len(), c.scalability);
+        }
+    }
+
+    #[test]
+    fn survivors_sorted_and_all_beat_dense() {
+        let e = explore(300, 784, &cfg());
+        assert!(!e.survivors.is_empty());
+        for w in e.survivors.windows(2) {
+            assert!(w[0].flops <= w[1].flops);
+        }
+        for s in &e.survivors {
+            assert!(s.flops < cost::dense_flops(300, 784));
+            assert!(s.params < cost::dense_params(300, 784));
+        }
+    }
+
+    #[test]
+    fn initial_layer_constraint_bites_at_high_rank() {
+        // with a huge uniform rank the factorized layer is more expensive
+        let mut c = cfg();
+        c.ranks = vec![512];
+        let e = explore(512, 512, &c);
+        // everything enumerable at rank 512 must fail the initial constraint
+        assert_eq!(e.counts.initial, 0);
+    }
+
+    #[test]
+    fn scalability_prunes_only_long_light_configs() {
+        let e = explore(4096, 4096, &cfg());
+        // pruned = initial - scalability; every pruned solution must have
+        // d > 4, i.e. every survivor with d > 4 is heavy
+        for s in &e.survivors {
+            if s.layout.d() > 4 {
+                let max_f = cost::einsum_chain(&s.layout, 1)
+                    .iter()
+                    .map(|x| x.flops())
+                    .max()
+                    .unwrap();
+                assert!(max_f >= cfg().scal_flops);
+            }
+        }
+        assert!(e.counts.initial > e.counts.scalability, "constraint should bite");
+    }
+
+    #[test]
+    fn property_survivors_always_satisfy_all_constraints() {
+        testkit::check("dse invariants", 12, |d| {
+            // random composite dims
+            let m = 8 * d.usize_in(2, 64) as u64;
+            let n = 8 * d.usize_in(2, 64) as u64;
+            let e = explore(m, n, &cfg());
+            for s in &e.survivors {
+                if !s.layout.is_aligned() {
+                    return Err(format!("misaligned survivor {}", s.layout.describe()));
+                }
+                if s.rank % 8 != 0 {
+                    return Err("non-vectorizable rank".into());
+                }
+                if !initial_layer_ok(s, m, n) {
+                    return Err("initial-layer violation".into());
+                }
+                if !scalability_ok(s, &cfg()) {
+                    return Err("scalability violation".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

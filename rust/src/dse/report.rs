@@ -1,0 +1,99 @@
+//! Tables 1-2 row generation: design-space reduction per FC layer of the
+//! model zoo.
+
+use crate::config::DseConfig;
+use crate::models::ModelArch;
+use crate::util::sci;
+
+use super::prune::{explore, StageCounts};
+
+/// One table row.
+#[derive(Debug, Clone)]
+pub struct DsRow {
+    pub model: String,
+    pub dataset: String,
+    /// `[N, M]` as the paper prints FC shapes.
+    pub shape: (u64, u64),
+    pub count: u64,
+    pub counts: StageCounts,
+}
+
+/// The paper factorizes layers above a size floor only ("extremely small
+/// layers are not factorized"): Table 1 keeps [120, 84] and [256, 100] but
+/// drops the 10-/100-class heads whose output width is tiny.
+pub const MIN_FC_DIM: u64 = 64;
+
+/// Generate the DS-reduction rows for one model.
+pub fn rows_for_model(model: &ModelArch, cfg: &DseConfig) -> Vec<DsRow> {
+    model
+        .fc_shapes()
+        .into_iter()
+        .filter(|s| s.n >= MIN_FC_DIM && s.m >= MIN_FC_DIM)
+        .map(|s| DsRow {
+            model: model.name.to_string(),
+            dataset: model.dataset.to_string(),
+            shape: (s.n, s.m),
+            count: s.count,
+            counts: explore(s.m, s.n, cfg).counts,
+        })
+        .collect()
+}
+
+/// Render rows in the paper's table format.
+pub fn format_rows(title: &str, rows: &[DsRow]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!(
+        "{:<22} {:<10} {:>6} {:>16} {:>12} {:>12} {:>12} {:>12}\n",
+        "model", "dataset", "count", "FC shape [N,M]", "all", "aligned", "vector", "final"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<22} {:<10} {:>6} {:>16} {:>12} {:>12} {:>12} {:>12}\n",
+            r.model,
+            r.dataset,
+            r.count,
+            format!("[{}, {}]", r.shape.0, r.shape.1),
+            sci(r.counts.all),
+            sci(r.counts.aligned),
+            sci(r.counts.vectorized as f64),
+            sci(r.counts.scalability as f64),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::model_by_name;
+
+    #[test]
+    fn lenet5_rows_match_table1_structure() {
+        let m = model_by_name("LeNet5").unwrap();
+        let rows = rows_for_model(&m, &DseConfig::default());
+        // [400,120] and [120,84] qualify; [84,10] is below the floor
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].shape, (400, 120));
+        assert_eq!(rows[1].shape, (120, 84));
+        for r in &rows {
+            assert!(r.counts.all > r.counts.scalability as f64);
+        }
+    }
+
+    #[test]
+    fn tiny_fc_layers_are_skipped() {
+        let m = model_by_name("LeNet300").unwrap();
+        let rows = rows_for_model(&m, &DseConfig::default());
+        // [784,300] and [300,100]; [100,10] skipped (m = 10 < 100)
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn formatting_contains_sci_notation() {
+        let m = model_by_name("LeNet5").unwrap();
+        let rows = rows_for_model(&m, &DseConfig::default());
+        let s = format_rows("Table 1", &rows);
+        assert!(s.contains("E+"));
+        assert!(s.contains("LeNet5"));
+    }
+}

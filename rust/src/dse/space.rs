@@ -1,0 +1,114 @@
+//! Aligned-solution enumeration (stage 3 of the pipeline).
+
+use crate::config::DseConfig;
+use crate::factor::{self, factor_multisets, partitions::omega};
+use crate::ttd::{cost, TtLayout};
+
+/// One candidate factorization of an FC layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    pub layout: TtLayout,
+    /// Uniform rank value R of the layout.
+    pub rank: u64,
+    pub params: u64,
+    pub flops: u64,
+}
+
+impl Solution {
+    pub fn new(layout: TtLayout, rank: u64) -> Self {
+        let params = cost::params(&layout);
+        let flops = cost::flops(&layout);
+        Solution { layout, rank, params, flops }
+    }
+}
+
+/// Enumerate every *aligned* solution with uniform rank drawn from
+/// `cfg.ranks`, restricted to ranks that are multiples of `cfg.vl` (the
+/// vectorization constraint) and feasible w.r.t. the TT rank bound.
+///
+/// `m_dim` = output width M, `n_dim` = input width N.
+pub fn enumerate_aligned(m_dim: u64, n_dim: u64, cfg: &DseConfig) -> Vec<Solution> {
+    let mut out = Vec::new();
+    let d_cap = cfg.d_max.min(omega(m_dim)).min(omega(n_dim)).max(2);
+    for d in 2..=d_cap {
+        let m_sets = factor_multisets(m_dim, d);
+        let n_sets = factor_multisets(n_dim, d);
+        for ms in &m_sets {
+            let m_aligned = factor::align_m(ms.clone());
+            for ns in &n_sets {
+                let n_aligned = factor::align_n(ns.clone());
+                // tightest rank bound across boundaries caps the sweep
+                let bound = (1..d)
+                    .map(|t| factor::max_rank_at(&m_aligned, &n_aligned, t))
+                    .min()
+                    .unwrap_or(1);
+                for &r in &cfg.ranks {
+                    if r % cfg.vl != 0 || r > bound {
+                        continue;
+                    }
+                    let layout = TtLayout::with_uniform_rank(
+                        m_aligned.clone(),
+                        n_aligned.clone(),
+                        r,
+                    )
+                    .expect("validated by construction");
+                    out.push(Solution::new(layout, r));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DseConfig {
+        DseConfig::default()
+    }
+
+    #[test]
+    fn all_solutions_are_aligned_and_vectorizable() {
+        for s in enumerate_aligned(300, 784, &cfg()) {
+            assert!(s.layout.is_aligned(), "{}", s.layout.describe());
+            assert_eq!(s.rank % 8, 0);
+            assert!(s.layout.ranks_feasible());
+            assert_eq!(s.layout.m_total(), 300);
+            assert_eq!(s.layout.n_total(), 784);
+        }
+    }
+
+    #[test]
+    fn includes_the_paper_selected_d2_solution() {
+        // Sec. 6.4 style: [784 -> 300] at rank 8 with d = 2 must exist
+        let sols = enumerate_aligned(300, 784, &cfg());
+        assert!(sols.iter().any(|s| {
+            s.layout.d() == 2 && s.rank == 8 && s.layout.m_shape() == [20, 15]
+                && s.layout.n_shape() == [28, 28]
+        }));
+    }
+
+    #[test]
+    fn no_duplicate_layouts() {
+        let sols = enumerate_aligned(120, 400, &cfg());
+        let mut seen = std::collections::HashSet::new();
+        for s in &sols {
+            let key = format!("{}-{}", s.layout.describe(), s.rank);
+            assert!(seen.insert(key), "dup {}", s.layout.describe());
+        }
+        assert!(!sols.is_empty());
+    }
+
+    #[test]
+    fn rank_bound_respected() {
+        // tiny layer: 4 x 4 = [2,2]x[2,2], bound at t=1 is 4 < 8 -> empty
+        let sols = enumerate_aligned(4, 4, &cfg());
+        assert!(sols.is_empty());
+    }
+
+    #[test]
+    fn prime_dims_empty() {
+        assert!(enumerate_aligned(13, 784, &cfg()).is_empty());
+    }
+}

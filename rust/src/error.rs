@@ -1,0 +1,112 @@
+//! Crate-wide error type.
+//!
+//! `thiserror` is unavailable offline, so the derive is spelled out by hand —
+//! same shape: one variant per subsystem, `Display` + `std::error::Error` +
+//! `From` conversions.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the public API.
+#[derive(Debug)]
+pub enum Error {
+    /// Tensor shape mismatch or invalid reshape/transpose request.
+    Shape(String),
+    /// Invalid TT layout (factor products, rank bounds, alignment).
+    Layout(String),
+    /// Numerical failure (SVD non-convergence, NaN poisoning).
+    Numeric(String),
+    /// Design-space exploration produced no feasible solution.
+    NoSolution(String),
+    /// Compiler pass could not produce a plan (e.g. Eq. 28 infeasible).
+    Plan(String),
+    /// Config file / CLI parse error.
+    Config(String),
+    /// JSON parse error (artifact manifest).
+    Json(String),
+    /// PJRT runtime failure (wraps the `xla` crate error as text).
+    Runtime(String),
+    /// Serving coordinator failure (queue closed, engine missing, ...).
+    Serve(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Layout(m) => write!(f, "tt-layout error: {m}"),
+            Error::Numeric(m) => write!(f, "numeric error: {m}"),
+            Error::NoSolution(m) => write!(f, "no feasible solution: {m}"),
+            Error::Plan(m) => write!(f, "compiler plan error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Shorthand constructors used across the crate.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn layout(msg: impl Into<String>) -> Self {
+        Error::Layout(msg.into())
+    }
+    pub fn numeric(msg: impl Into<String>) -> Self {
+        Error::Numeric(msg.into())
+    }
+    pub fn plan(msg: impl Into<String>) -> Self {
+        Error::Plan(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn json(msg: impl Into<String>) -> Self {
+        Error::Json(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn serve(msg: impl Into<String>) -> Self {
+        Error::Serve(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_prefixed() {
+        assert!(Error::shape("bad").to_string().starts_with("shape error"));
+        assert!(Error::runtime("x").to_string().contains("runtime"));
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

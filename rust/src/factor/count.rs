@@ -1,0 +1,161 @@
+//! Design-space size counting (paper Tables 1-2, "Number of solutions").
+//!
+//! Exact enumeration is infeasible (up to ~1e33 solutions), so sizes are
+//! *counted*, never materialized. The counting model (documented in
+//! EXPERIMENTS.md; the paper does not spell out its own) is:
+//!
+//! * a solution = (ordered m-shape, ordered n-shape, rank list), with shapes
+//!   of equal length `d in 2..=d_max` and per-boundary ranks
+//!   `r_t in 1..=min(max_rank_at(t), rank_cap)`;
+//! * "All initial solutions" sums over all shape *permutations*;
+//! * "Alignment strategy" sums over aligned shape pairs only (one multiset
+//!   pair stands for `prop4_permutations` raw pairs, per Prop. 4);
+//! * the vectorization constraint restricts each rank to multiples of `vl`.
+//!
+//! Counts are f64 (log-domain magnitudes like the paper's tables, which
+//! report 2 significant digits); u128 exactness is impossible at 1e33 scale
+//! with per-boundary rank products anyway.
+
+use super::partitions::{factor_multisets, omega};
+use super::{max_rank_at, prop4_permutations};
+
+/// Counting-model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CountCfg {
+    /// Cap on any TT-rank (paper sweeps ranks up to 3064).
+    pub rank_cap: u64,
+    /// Vector length for the vectorization constraint (ranks must be
+    /// multiples of `vl`).
+    pub vl: u64,
+    /// Maximum configuration length to explore.
+    pub d_max: usize,
+}
+
+impl Default for CountCfg {
+    fn default() -> Self {
+        CountCfg { rank_cap: 3064, vl: 8, d_max: 6 }
+    }
+}
+
+/// Number of rank lists for an aligned shape pair: product over boundaries
+/// of the admissible rank count.
+fn rank_list_count(m: &[u64], n: &[u64], cfg: &CountCfg, multiples_of_vl: bool) -> f64 {
+    let d = m.len();
+    let mut total = 1.0f64;
+    for t in 1..d {
+        let cap = max_rank_at(m, n, t).min(cfg.rank_cap);
+        let choices = if multiples_of_vl {
+            cap / cfg.vl // ranks vl, 2vl, ..., floor(cap/vl)*vl
+        } else {
+            cap
+        };
+        if choices == 0 {
+            return 0.0;
+        }
+        total *= choices as f64;
+    }
+    total
+}
+
+/// Stage-by-stage design-space sizes for one FC layer `(M = out, N = in)`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpaceSizes {
+    /// All (permuted shapes x rank lists).
+    pub all: f64,
+    /// After keeping only aligned shape pairs.
+    pub aligned: f64,
+    /// After additionally constraining ranks to multiples of vl.
+    pub vectorized: f64,
+}
+
+/// Count the design space for FC layer with `M` outputs, `N` inputs.
+pub fn space_sizes(m_dim: u64, n_dim: u64, cfg: &CountCfg) -> SpaceSizes {
+    let d_max = cfg.d_max.min(omega(m_dim)).min(omega(n_dim)).max(2);
+    let mut sizes = SpaceSizes::default();
+    for d in 2..=d_max {
+        let m_sets = factor_multisets(m_dim, d);
+        let n_sets = factor_multisets(n_dim, d);
+        if m_sets.is_empty() || n_sets.is_empty() {
+            continue;
+        }
+        for ms in &m_sets {
+            // aligned m-shape is the descending ordering of the multiset
+            let mut m_aligned = ms.clone();
+            m_aligned.reverse();
+            for ns in &n_sets {
+                let n_aligned = ns.clone(); // multisets are ascending already
+                let pair_perms = prop4_permutations(&m_aligned, &n_aligned) as f64;
+                // rank bounds are permutation-dependent in general; the
+                // aligned bound is used as the representative (the bound
+                // depends only weakly on ordering: products telescope).
+                let ranks_all = rank_list_count(&m_aligned, &n_aligned, cfg, false);
+                let ranks_vec = rank_list_count(&m_aligned, &n_aligned, cfg, true);
+                sizes.all += pair_perms * ranks_all;
+                sizes.aligned += ranks_all;
+                sizes.vectorized += ranks_vec;
+            }
+        }
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_reduction_is_prop4_for_single_pair() {
+        // M = 25 = 5*5, N = 6 = 2*3 (single d=2 multiset each)
+        let cfg = CountCfg { rank_cap: 1_000_000, vl: 8, d_max: 2 };
+        let s = space_sizes(25, 6, &cfg);
+        // m perms = 1 (5,5 identical), n perms = 2 -> all = 2 * aligned
+        assert!((s.all / s.aligned - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vectorization_prunes_by_about_vl_per_boundary() {
+        let cfg = CountCfg::default();
+        let s = space_sizes(4096, 2048, &cfg);
+        assert!(s.vectorized > 0.0);
+        assert!(s.aligned / s.vectorized >= cfg.vl as f64 * 0.5);
+        assert!(s.all > s.aligned);
+    }
+
+    #[test]
+    fn monotone_in_layer_size() {
+        let cfg = CountCfg::default();
+        let small = space_sizes(120, 84, &cfg);
+        let big = space_sizes(4096, 4096, &cfg);
+        assert!(big.all > small.all);
+    }
+
+    #[test]
+    fn paper_order_of_magnitude_sanity() {
+        // Table 1 reports [400, 120] (N=400 in, M=120 out) at ~9.5E+08 raw.
+        // Our counting model must land within a few orders of magnitude and
+        // preserve the qualitative reduction chain all > aligned > vectorized.
+        let cfg = CountCfg::default();
+        let s = space_sizes(120, 400, &cfg);
+        assert!(s.all > 1e6 && s.all < 1e12, "all = {:e}", s.all);
+        assert!(s.aligned < s.all);
+        assert!(s.vectorized < s.aligned);
+    }
+
+    #[test]
+    fn prime_dims_have_empty_space() {
+        let cfg = CountCfg::default();
+        let s = space_sizes(13, 7, &cfg);
+        assert_eq!(s.all, 0.0);
+        assert_eq!(s.vectorized, 0.0);
+    }
+
+    #[test]
+    fn rank_cap_reduces_counts() {
+        let loose = CountCfg { rank_cap: 3064, vl: 8, d_max: 4 };
+        let tight = CountCfg { rank_cap: 8, vl: 8, d_max: 4 };
+        let a = space_sizes(512, 512, &loose);
+        let b = space_sizes(512, 512, &tight);
+        assert!(b.all < a.all);
+        assert!(b.vectorized <= a.vectorized);
+    }
+}

@@ -1,0 +1,95 @@
+//! Integer factorization combinatorics: the raw material of the TTD design
+//! space (paper §4.1).
+//!
+//! A *combination shape* for dimension `X` and configuration length `d` is a
+//! list of factors `[x_1..x_d]`, each `>= 2`, with product `X`. The design
+//! space couples one shape for `M`, one for `N`, and a rank list. This module
+//! enumerates shapes (as multisets and as permutations), counts permutations
+//! exactly (Prop. 4), and provides the aligned ordering (Def. 1).
+
+pub mod partitions;
+mod perms;
+pub mod count;
+
+pub use partitions::{divisors, factor_multisets, factor_multisets_all};
+pub use perms::{multiset_permutations, permutation_count};
+
+/// Aligned output shape per Definition 1: `m_1 >= m_2 >= ... >= m_d`.
+pub fn align_m(mut factors: Vec<u64>) -> Vec<u64> {
+    factors.sort_unstable_by(|a, b| b.cmp(a));
+    factors
+}
+
+/// Aligned input shape per Definition 1: `n_1 <= n_2 <= ... <= n_d`.
+pub fn align_n(mut factors: Vec<u64>) -> Vec<u64> {
+    factors.sort_unstable();
+    factors
+}
+
+/// Is the (m, n) shape pair aligned per Definition 1?
+pub fn is_aligned(m_shape: &[u64], n_shape: &[u64]) -> bool {
+    m_shape.windows(2).all(|w| w[0] >= w[1])
+        && n_shape.windows(2).all(|w| w[0] <= w[1])
+}
+
+/// Prop. 4: the number of (m, n) permutation pairs an aligned pair stands
+/// for: `(d!)^2 / (k_1! k_2! ... k_j!)` with per-list multiplicities.
+pub fn prop4_permutations(m_shape: &[u64], n_shape: &[u64]) -> u128 {
+    permutation_count(m_shape) * permutation_count(n_shape)
+}
+
+/// Maximum admissible TT-rank at boundary `t` (between core t and t+1,
+/// 1-based, `t in 1..d`): the rank of any TT unfolding is bounded by the
+/// smaller of the two unfolding dimensions,
+/// `r_t <= min(prod_{u<=t} m_u n_u, prod_{u>t} m_u n_u)`.
+pub fn max_rank_at(m_shape: &[u64], n_shape: &[u64], t: usize) -> u64 {
+    debug_assert!(t >= 1 && t < m_shape.len());
+    let left: u128 = m_shape[..t]
+        .iter()
+        .zip(&n_shape[..t])
+        .map(|(&m, &n)| m as u128 * n as u128)
+        .product();
+    let right: u128 = m_shape[t..]
+        .iter()
+        .zip(&n_shape[t..])
+        .map(|(&m, &n)| m as u128 * n as u128)
+        .product();
+    left.min(right).min(u64::MAX as u128) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_orders() {
+        assert_eq!(align_m(vec![2, 5, 3, 5, 2]), vec![5, 5, 3, 2, 2]);
+        assert_eq!(align_n(vec![14, 2, 7, 2, 2]), vec![2, 2, 2, 7, 14]);
+        assert!(is_aligned(&[5, 5, 3, 2, 2], &[2, 2, 2, 7, 14]));
+        assert!(!is_aligned(&[5, 3, 5], &[2, 2, 2]));
+        assert!(!is_aligned(&[5, 5, 5], &[2, 7, 2]));
+    }
+
+    #[test]
+    fn prop4_paper_example() {
+        // paper: m = [5,5,3,2,2], n = [2,2,2,7,14] -> (5!)^2/(2!2!3!) = 600
+        let m = [5u64, 5, 3, 2, 2];
+        let n = [2u64, 2, 2, 7, 14];
+        assert_eq!(prop4_permutations(&m, &n), 600);
+    }
+
+    #[test]
+    fn prop4_all_distinct_is_d_factorial_squared() {
+        let m = [7u64, 5, 3, 2];
+        let n = [11u64, 13, 17, 19];
+        assert_eq!(prop4_permutations(&m, &n), (24 * 24) as u128);
+    }
+
+    #[test]
+    fn max_rank_bounds() {
+        // m=[4,4], n=[4,4]: boundary rank <= min(16, 16) = 16
+        assert_eq!(max_rank_at(&[4, 4], &[4, 4], 1), 16);
+        // strongly lopsided: min side governs
+        assert_eq!(max_rank_at(&[2, 100], &[2, 100], 1), 4);
+    }
+}

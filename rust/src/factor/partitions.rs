@@ -1,0 +1,141 @@
+//! Multiplicative partitions (factorizations into ordered multisets).
+
+/// All divisors of `x`, ascending.
+pub fn divisors(x: u64) -> Vec<u64> {
+    assert!(x >= 1);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut i = 1u64;
+    while i * i <= x {
+        if x % i == 0 {
+            small.push(i);
+            if i != x / i {
+                large.push(x / i);
+            }
+        }
+        i += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// All multisets of exactly `d` factors `>= 2` with product `x`, each
+/// returned in non-decreasing order. Empty when impossible.
+pub fn factor_multisets(x: u64, d: usize) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(d);
+    rec(x, d, 2, &mut cur, &mut out);
+    out
+}
+
+fn rec(x: u64, d: usize, min_factor: u64, cur: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+    if d == 1 {
+        if x >= min_factor {
+            cur.push(x);
+            out.push(cur.clone());
+            cur.pop();
+        }
+        return;
+    }
+    // factor f must satisfy f^d <= x (non-decreasing order)
+    let mut f = min_factor;
+    while f.saturating_pow(d as u32) <= x {
+        if x % f == 0 {
+            cur.push(f);
+            rec(x / f, d - 1, f, cur, out);
+            cur.pop();
+        }
+        f += 1;
+    }
+}
+
+/// Multisets for every length `2..=d_max` (the paper explores lengths up to
+/// the number of prime factors; longer is impossible).
+pub fn factor_multisets_all(x: u64, d_max: usize) -> Vec<(usize, Vec<Vec<u64>>)> {
+    (2..=d_max)
+        .map(|d| (d, factor_multisets(x, d)))
+        .filter(|(_, v)| !v.is_empty())
+        .collect()
+}
+
+/// Number of prime factors with multiplicity (upper bound on `d`).
+pub fn omega(x: u64) -> usize {
+    let mut x = x;
+    let mut count = 0;
+    let mut p = 2u64;
+    while p * p <= x {
+        while x % p == 0 {
+            x /= p;
+            count += 1;
+        }
+        p += 1;
+    }
+    if x > 1 {
+        count += 1;
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(13), vec![1, 13]);
+    }
+
+    #[test]
+    fn multisets_of_12() {
+        assert_eq!(factor_multisets(12, 2), vec![vec![2, 6], vec![3, 4]]);
+        assert_eq!(factor_multisets(12, 3), vec![vec![2, 2, 3]]);
+        assert!(factor_multisets(12, 4).is_empty());
+    }
+
+    #[test]
+    fn multisets_products_and_order() {
+        for d in 2..=5 {
+            for ms in factor_multisets(720, d) {
+                assert_eq!(ms.iter().product::<u64>(), 720);
+                assert!(ms.windows(2).all(|w| w[0] <= w[1]));
+                assert!(ms.iter().all(|&f| f >= 2));
+                assert_eq!(ms.len(), d);
+            }
+        }
+    }
+
+    #[test]
+    fn multisets_of_primes_are_singular() {
+        assert!(factor_multisets(13, 2).is_empty());
+        assert_eq!(factor_multisets(4, 2), vec![vec![2, 2]]);
+    }
+
+    #[test]
+    fn paper_running_example_shapes_present() {
+        // 300 = 5*5*3*2*2 and 784 = 2*2*2*7*14 are valid d=5 multisets
+        let m300 = factor_multisets(300, 5);
+        assert!(m300.contains(&vec![2, 2, 3, 5, 5]));
+        let n784 = factor_multisets(784, 5);
+        assert!(n784.contains(&vec![2, 2, 2, 7, 14]));
+    }
+
+    #[test]
+    fn omega_counts_prime_multiplicity() {
+        assert_eq!(omega(12), 3); // 2*2*3
+        assert_eq!(omega(784), 6); // 2^4 * 7^2
+        assert_eq!(omega(13), 1);
+        // no d=7 multiset of 784 can exist
+        assert!(factor_multisets(784, 7).is_empty());
+        assert_eq!(factor_multisets(784, 6).len(), 1); // [2,2,2,2,7,7]
+    }
+
+    #[test]
+    fn all_lengths_enumeration() {
+        let all = factor_multisets_all(64, 6);
+        let lens: Vec<usize> = all.iter().map(|(d, _)| *d).collect();
+        assert_eq!(lens, vec![2, 3, 4, 5, 6]); // 64 = 2^6
+    }
+}

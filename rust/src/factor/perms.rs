@@ -1,0 +1,103 @@
+//! Multiset permutations: exact counts and enumeration.
+
+/// Exact number of distinct permutations of a multiset: `d! / prod(k_i!)`.
+pub fn permutation_count(multiset: &[u64]) -> u128 {
+    let d = multiset.len();
+    let mut numer: u128 = 1;
+    for i in 1..=d {
+        numer *= i as u128;
+    }
+    let mut sorted = multiset.to_vec();
+    sorted.sort_unstable();
+    let mut denom: u128 = 1;
+    let mut run = 1u128;
+    for w in sorted.windows(2) {
+        if w[0] == w[1] {
+            run += 1;
+            denom *= run;
+        } else {
+            run = 1;
+        }
+    }
+    numer / denom
+}
+
+/// All distinct permutations of a multiset, in lexicographic order.
+/// Uses the classic next-permutation algorithm, so duplicates collapse.
+pub fn multiset_permutations(multiset: &[u64]) -> Vec<Vec<u64>> {
+    let mut cur = multiset.to_vec();
+    cur.sort_unstable();
+    let mut out = Vec::new();
+    loop {
+        out.push(cur.clone());
+        if !next_permutation(&mut cur) {
+            break;
+        }
+    }
+    out
+}
+
+/// In-place lexicographic next permutation; false when `xs` was the last.
+fn next_permutation(xs: &mut [u64]) -> bool {
+    if xs.len() < 2 {
+        return false;
+    }
+    // find longest non-increasing suffix
+    let mut i = xs.len() - 1;
+    while i > 0 && xs[i - 1] >= xs[i] {
+        i -= 1;
+    }
+    if i == 0 {
+        return false;
+    }
+    // pivot is xs[i-1]; find rightmost element greater than pivot
+    let mut j = xs.len() - 1;
+    while xs[j] <= xs[i - 1] {
+        j -= 1;
+    }
+    xs.swap(i - 1, j);
+    xs[i..].reverse();
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn count_distinct_elements() {
+        assert_eq!(permutation_count(&[1, 2, 3]), 6);
+        assert_eq!(permutation_count(&[2, 2]), 1);
+        assert_eq!(permutation_count(&[5, 5, 3, 2, 2]), 30); // 5!/(2!2!)
+        assert_eq!(permutation_count(&[2, 2, 2, 7, 14]), 20); // 5!/3!
+        assert_eq!(permutation_count(&[]), 1);
+    }
+
+    #[test]
+    fn enumeration_matches_count_and_is_unique() {
+        for ms in [vec![2u64, 2, 3], vec![5, 5, 3, 2, 2], vec![4, 4, 4]] {
+            let perms = multiset_permutations(&ms);
+            assert_eq!(perms.len() as u128, permutation_count(&ms));
+            let set: HashSet<Vec<u64>> = perms.iter().cloned().collect();
+            assert_eq!(set.len(), perms.len(), "duplicates for {ms:?}");
+            for p in &perms {
+                let mut s = p.clone();
+                s.sort_unstable();
+                let mut orig = ms.clone();
+                orig.sort_unstable();
+                assert_eq!(s, orig);
+            }
+        }
+    }
+
+    #[test]
+    fn lexicographic_order() {
+        let perms = multiset_permutations(&[3, 1, 2]);
+        assert_eq!(perms[0], vec![1, 2, 3]);
+        assert_eq!(perms.last().unwrap(), &vec![3, 2, 1]);
+        for w in perms.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Plan executor: loop order, bt tiling, thread parallelization around the
+//! microkernels (paper §4.3.5 + §4.2.3).
+
+use crate::compiler::plan::{LoopOrder, OptimizationPlan, VectorLoop};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::micro;
+use super::naive::naive_einsum;
+use super::packed::{GLayout, PackedG};
+
+/// Reusable buffers for the serving hot loop (no allocation per request).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    out: Vec<f32>,
+}
+
+impl Scratch {
+    /// The most recent kernel output (`m*b*r` floats, `(m, b, r)` order).
+    pub fn out_slice(&self) -> &[f32] {
+        &self.out
+    }
+}
+
+/// Execute a planned Einsum: `x (b, n, k)` against the packed core,
+/// producing `(m, b, r)`.
+pub fn execute(plan: &OptimizationPlan, g: &PackedG, x: &Tensor) -> Result<Tensor> {
+    let mut out = Vec::new();
+    let d = &plan.dims;
+    execute_into(plan, g, x.data(), &mut out)?;
+    Tensor::from_vec(vec![d.m, d.b, d.r], out)
+}
+
+/// Allocation-free variant: output lands in `scratch.out` (`m*b*r` floats).
+pub fn execute_with_scratch(
+    plan: &OptimizationPlan,
+    g: &PackedG,
+    xd: &[f32],
+    scratch: &mut Scratch,
+) -> Result<()> {
+    execute_into(plan, g, xd, &mut scratch.out)
+}
+
+/// Core executor writing into a caller-owned buffer (resized to `m*b*r`).
+pub fn execute_into(
+    plan: &OptimizationPlan,
+    g: &PackedG,
+    xd: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let d = &plan.dims;
+    let (r, n, m, k) = g.dims;
+    if (d.r, d.n, d.m, d.k) != (r, n, m, k) {
+        return Err(Error::shape(format!("plan dims {d:?} vs core {:?}", g.dims)));
+    }
+    if xd.len() != d.b * n * k {
+        return Err(Error::shape(format!(
+            "input len {} != b*n*k = {}",
+            xd.len(),
+            d.b * n * k
+        )));
+    }
+    // layout/vector-loop consistency
+    let expected_layout = match (plan.pack_g, plan.vector_loop) {
+        (false, _) => GLayout::Canonical,
+        (true, VectorLoop::R) => GLayout::PackedR,
+        (true, _) => GLayout::PackedK,
+    };
+    if g.layout != expected_layout {
+        return Err(Error::plan(format!(
+            "core packed as {:?} but plan requires {:?}",
+            g.layout, expected_layout
+        )));
+    }
+
+    out.clear();
+    out.resize(m * d.b * r, 0.0);
+
+    if g.layout == GLayout::Canonical {
+        // naive stage: run the Listing-2 loop nest
+        let gt = Tensor::from_vec(vec![r, n, m, k], g.data.clone())?;
+        let xt = Tensor::from_vec(vec![d.b, n, k], xd.to_vec())?;
+        let naive = naive_einsum(&gt, &xt)?;
+        out.copy_from_slice(naive.data());
+        return Ok(());
+    }
+
+    let threads = plan.threads.max(1) as usize;
+    let b_total = d.b;
+    // bt tile bound (Eq. 28); full extent when untiled
+    let btl = plan.tile.btl.unwrap_or(b_total).max(1);
+
+    if threads == 1 {
+        let od = &mut out[..];
+        let mut b0 = 0;
+        while b0 < b_total {
+            let b1 = (b0 + btl).min(b_total);
+            run_region(plan, g, xd, od, b_total, 0, m, b0, b1);
+            b0 = b1;
+        }
+        return Ok(());
+    }
+
+    match plan.tile.order {
+        LoopOrder::Mbrk => {
+            // parallelize mt: output is m-major, so thread slices are
+            // contiguous and can be split safely
+            let rows_per = m.div_ceil(threads);
+            let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            let mut rest: &mut [f32] = &mut out[..];
+            let mut m0 = 0;
+            while m0 < m {
+                let m1 = (m0 + rows_per).min(m);
+                let (head, tail) = rest.split_at_mut((m1 - m0) * b_total * r);
+                slices.push((m0, m1, head));
+                rest = tail;
+                m0 = m1;
+            }
+            std::thread::scope(|s| {
+                for (m0, m1, out_slice) in slices {
+                    s.spawn(move || {
+                        let mut b0 = 0;
+                        while b0 < b_total {
+                            let b1 = (b0 + btl).min(b_total);
+                            // out_slice starts at row m0: shift base by -m0
+                            run_region_offset(
+                                plan, g, xd, out_slice, b_total, m0, m1, b0, b1, m0,
+                            );
+                            b0 = b1;
+                        }
+                    });
+                }
+            });
+            Ok(())
+        }
+        LoopOrder::Bmrk => {
+            // parallelize bt: output is b-strided; compute into per-thread
+            // temps and merge (safe; the host measurement path is
+            // single-threaded anyway — DESIGN.md §3)
+            let cols_per = b_total.div_ceil(threads);
+            let mut ranges = Vec::new();
+            let mut b0 = 0;
+            while b0 < b_total {
+                let b1 = (b0 + cols_per).min(b_total);
+                ranges.push((b0, b1));
+                b0 = b1;
+            }
+            let chunks: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .into_iter()
+                    .map(|(b0, b1)| {
+                        s.spawn(move || {
+                            let width = b1 - b0;
+                            let mut local = vec![0.0f32; m * width * r];
+                            // local is (m, width, r) with b rebased to 0
+                            let xl: Vec<f32> = xd[b0 * n * k..b1 * n * k].to_vec();
+                            let mut plan_local = *plan;
+                            plan_local.dims.b = width;
+                            run_region(&plan_local, g, &xl, &mut local, width, 0, m, 0, width);
+                            (b0, b1, local)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            });
+            for (b0, b1, local) in chunks {
+                let width = b1 - b0;
+                for mi in 0..m {
+                    for bi in 0..width {
+                        let src = (mi * width + bi) * r;
+                        let dst = (mi * b_total + b0 + bi) * r;
+                        out[dst..dst + r].copy_from_slice(&local[src..src + r]);
+                    }
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Dispatch a rectangular region to the plan's microkernel.
+#[allow(clippy::too_many_arguments)]
+fn run_region(
+    plan: &OptimizationPlan,
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+) {
+    run_region_offset(plan, g, xd, od, b_total, m0, m1, b0, b1, 0)
+}
+
+/// Same as [`run_region`] but with the output buffer starting at row
+/// `m_base` (for contiguous per-thread slices).
+#[allow(clippy::too_many_arguments)]
+fn run_region_offset(
+    plan: &OptimizationPlan,
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    // microkernels index output by absolute m; rebase via a shifted slice
+    // trick: when m_base > 0, we conceptually pass od starting at negative
+    // offset. Implemented by adjusting m bounds and core offsets instead:
+    // the packed-G reads use absolute m, output uses (m - m_base).
+    match plan.vector_loop {
+        VectorLoop::R => micro::r_region_based(
+            g, xd, od, b_total, plan.rb.rm, plan.rb.rb, m0, m1, b0, b1, m_base,
+        ),
+        VectorLoop::K => micro::k_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base),
+        VectorLoop::None => {
+            micro::scalar_packed_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::kernels::pack;
+    use crate::machine::MachineSpec;
+    use crate::tensor::einsum::tt_einsum_ref;
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn scratch_reuse_produces_identical_results() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(70);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 24, b: 17, n: 5, r: 8, k: 8 };
+        let plan = compile(&dims, &machine).unwrap();
+        let g = Tensor::randn(vec![8, 5, 24, 8], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let mut scratch = Scratch::default();
+        let x1 = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
+        let x2 = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
+        execute_with_scratch(&plan, &pg, x1.data(), &mut scratch).unwrap();
+        let out1 = scratch.out_slice().to_vec();
+        execute_with_scratch(&plan, &pg, x2.data(), &mut scratch).unwrap();
+        let want1 = tt_einsum_ref(&g, &x1).unwrap();
+        let want2 = tt_einsum_ref(&g, &x2).unwrap();
+        assert_eq!(out1.len(), want1.numel());
+        for (a, b) in out1.iter().zip(want1.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in scratch.out_slice().iter().zip(want2.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn forced_multithread_mbrk_matches_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(71);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 37, b: 29, n: 6, r: 8, k: 8 };
+        let mut plan = compile(&dims, &machine).unwrap();
+        plan.threads = 4;
+        plan.tile.order = LoopOrder::Mbrk;
+        let g = Tensor::randn(vec![8, 6, 37, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![29, 6, 8], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let got = execute(&plan, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn forced_multithread_bmrk_matches_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(72);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 8, b: 61, n: 6, r: 8, k: 8 };
+        let mut plan = compile(&dims, &machine).unwrap();
+        plan.threads = 3;
+        plan.tile.order = LoopOrder::Bmrk;
+        let g = Tensor::randn(vec![8, 6, 8, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![61, 6, 8], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let got = execute(&plan, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn forced_bt_tiling_matches_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(73);
+        let dims = EinsumDims { kind: EinsumKind::First, m: 16, b: 53, n: 9, r: 8, k: 1 };
+        let mut plan = compile(&dims, &machine).unwrap();
+        plan.tile.btl = Some(7); // deliberately non-dividing tile
+        let g = Tensor::randn(vec![8, 9, 16, 1], 1.0, &mut rng);
+        let x = Tensor::randn(vec![53, 9, 1], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let got = execute(&plan, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn mismatched_layout_is_rejected() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(74);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 4, b: 4, n: 4, r: 8, k: 8 };
+        let plan = compile(&dims, &machine).unwrap();
+        let naive = OptimizationPlan::naive(dims);
+        let g = Tensor::randn(vec![8, 4, 4, 8], 1.0, &mut rng);
+        let pg_naive = pack(&g, &naive).unwrap();
+        let x = Tensor::randn(vec![4, 4, 8], 1.0, &mut rng);
+        assert!(execute(&plan, &pg_naive, &x).is_err());
+        // bad input length
+        let pg = pack(&g, &plan).unwrap();
+        let x_bad = Tensor::randn(vec![4, 4, 4], 1.0, &mut rng);
+        assert!(execute(&plan, &pg, &x_bad).is_err());
+    }
+}

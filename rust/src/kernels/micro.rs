@@ -1,0 +1,283 @@
+//! Microkernels: the innermost loop bodies for each vectorization choice.
+//!
+//! RVV intrinsics from the paper's Listings 4-6 map to `[f32; VL]` lane
+//! arrays (`vle32` = lane copy, `vfmv_v_f` = broadcast, `vfmacc` = per-lane
+//! fma, `vfredosum` = horizontal sum). Register blocking is monomorphized
+//! over (Rm, Rb) so accumulator tiles live in registers, exactly like the
+//! unroll-and-jam the paper performs in source.
+
+use super::packed::PackedG;
+use super::VL;
+
+type Lane = [f32; VL];
+
+#[inline(always)]
+fn fma(acc: &mut Lane, a: &Lane, scalar: f32) {
+    for i in 0..VL {
+        acc[i] += a[i] * scalar;
+    }
+}
+
+#[inline(always)]
+fn load(src: &[f32]) -> Lane {
+    let mut v = [0.0f32; VL];
+    v.copy_from_slice(&src[..VL]);
+    v
+}
+
+#[inline(always)]
+fn hsum(v: &Lane) -> f32 {
+    // pairwise for a short dependency chain (the ordered vfredosum is the
+    // slow part the paper calls out; pairwise is the faster legal shape)
+    let s0 = v[0] + v[4];
+    let s1 = v[1] + v[5];
+    let s2 = v[2] + v[6];
+    let s3 = v[3] + v[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// r-vectorized, register-blocked block: computes the output tile
+/// `m0..m0+RM` x `b0..b0+RB` for all r-vector steps (paper Listing 6).
+///
+/// `gd` is PackedR `[m][r_pad/VL][L][VL]`, `xd` is `[b][L]`,
+/// `od` is `[m][b][r]` whose first row corresponds to absolute row
+/// `m_base` (per-thread contiguous output slices).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn r_block<const RM: usize, const RB: usize>(
+    gd: &[f32],
+    xd: &[f32],
+    od: &mut [f32],
+    l: usize,
+    r: usize,
+    r_pad: usize,
+    b_total: usize,
+    m0: usize,
+    b0: usize,
+    m_base: usize,
+) {
+    let rv_count = r_pad / VL;
+    for rv in 0..rv_count {
+        let mut acc = [[[0.0f32; VL]; RB]; RM];
+        // Per-row packed-G slices + chunks_exact iterators: the bounds
+        // checks hoist out of the k loop entirely (§Perf iteration 1).
+        let mut g_rows: [std::slice::ChunksExact<'_, f32>; RM] =
+            std::array::from_fn(|im| {
+                let off = ((m0 + im) * rv_count + rv) * l * VL;
+                gd[off..off + l * VL].chunks_exact(VL)
+            });
+        let x_rows: [&[f32]; RB] =
+            std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
+        for kk in 0..l {
+            // G vector loads: one per m-row, reused across the RB b-columns
+            let mut gvec = [[0.0f32; VL]; RM];
+            for im in 0..RM {
+                gvec[im] = load(g_rows[im].next().expect("length l by construction"));
+            }
+            for ib in 0..RB {
+                let xs = x_rows[ib][kk]; // vfmv_v_f broadcast
+                for im in 0..RM {
+                    fma(&mut acc[im][ib], &gvec[im], xs);
+                }
+            }
+        }
+        // stores: vl elements per (m, b) pair; clip the final partial vector
+        let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
+        for im in 0..RM {
+            for ib in 0..RB {
+                let out_base =
+                    ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
+                od[out_base..out_base + lanes].copy_from_slice(&acc[im][ib][..lanes]);
+            }
+        }
+    }
+}
+
+macro_rules! dispatch_rb {
+    ($rm:expr, $rb:expr, $call:ident, ($($args:tt)*)) => {
+        match ($rm, $rb) {
+            (1, 1) => $call::<1, 1>($($args)*),
+            (1, 2) => $call::<1, 2>($($args)*),
+            (1, 3) => $call::<1, 3>($($args)*),
+            (1, 4) => $call::<1, 4>($($args)*),
+            (1, 5) => $call::<1, 5>($($args)*),
+            (1, 6) => $call::<1, 6>($($args)*),
+            (1, 7) => $call::<1, 7>($($args)*),
+            (1, 8) => $call::<1, 8>($($args)*),
+            (2, 1) => $call::<2, 1>($($args)*),
+            (2, 2) => $call::<2, 2>($($args)*),
+            (2, 3) => $call::<2, 3>($($args)*),
+            (2, 4) => $call::<2, 4>($($args)*),
+            (2, 5) => $call::<2, 5>($($args)*),
+            (2, 6) => $call::<2, 6>($($args)*),
+            (2, 7) => $call::<2, 7>($($args)*),
+            (2, 8) => $call::<2, 8>($($args)*),
+            (4, 1) => $call::<4, 1>($($args)*),
+            (4, 2) => $call::<4, 2>($($args)*),
+            (4, 3) => $call::<4, 3>($($args)*),
+            (4, 4) => $call::<4, 4>($($args)*),
+            (4, 5) => $call::<4, 5>($($args)*),
+            (4, 6) => $call::<4, 6>($($args)*),
+            (4, 7) => $call::<4, 7>($($args)*),
+            (4, 8) => $call::<4, 8>($($args)*),
+            (8, 1) => $call::<8, 1>($($args)*),
+            (8, 2) => $call::<8, 2>($($args)*),
+            (8, 3) => $call::<8, 3>($($args)*),
+            (8, 4) => $call::<8, 4>($($args)*),
+            (8, 5) => $call::<8, 5>($($args)*),
+            (8, 6) => $call::<8, 6>($($args)*),
+            (8, 7) => $call::<8, 7>($($args)*),
+            (8, 8) => $call::<8, 8>($($args)*),
+            _ => $call::<1, 1>($($args)*),
+        }
+    };
+}
+
+/// r-vectorized region kernel over `m0..m1` x `b0..b1` with register
+/// blocking (rm, rb); remainders run as (1, 1) padding ukernels
+/// (paper Listing 6 lines 42/44). `od`'s first row is absolute row `m_base`.
+#[allow(clippy::too_many_arguments)]
+pub fn r_region_based(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    rm: usize,
+    rb: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let r_pad = g.r_pad;
+    let rm = rm.clamp(1, 8);
+    let rb = rb.clamp(1, 8);
+    let m_main = m0 + (m1 - m0) / rm * rm;
+    let b_main = b0 + (b1 - b0) / rb * rb;
+    let mut mi = m0;
+    while mi < m_main {
+        let mut bi = b0;
+        while bi < b_main {
+            dispatch_rb!(rm, rb, r_block,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        // padding ukernel: b remainder
+        while bi < b1 {
+            dispatch_rb!(rm, 1, r_block,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += 1;
+        }
+        mi += rm;
+    }
+    // padding ukernel: m remainder
+    while mi < m1 {
+        let mut bi = b0;
+        while bi + rb <= b1 {
+            dispatch_rb!(1, rb, r_block,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            r_block::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base);
+            bi += 1;
+        }
+        mi += 1;
+    }
+}
+
+/// k-vectorized region kernel (paper Listing 4): dot-product microkernel
+/// with horizontal reduction and scalar stores. `g` is PackedK `[m][r][L]`;
+/// `od`'s first row is absolute row `m_base`.
+#[allow(clippy::too_many_arguments)]
+pub fn k_region_based(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let chunks = l / VL;
+    let tail = chunks * VL;
+    for mi in m0..m1 {
+        for ri in 0..r {
+            let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+            for bi in b0..b1 {
+                let xrow = &xd[bi * l..(bi + 1) * l];
+                let mut acc = [0.0f32; VL];
+                for c in 0..chunks {
+                    let gv = load(&grow[c * VL..]);
+                    let xv = load(&xrow[c * VL..]);
+                    for i in 0..VL {
+                        acc[i] += gv[i] * xv[i];
+                    }
+                }
+                let mut s = hsum(&acc);
+                for i in tail..l {
+                    s += grow[i] * xrow[i];
+                }
+                od[((mi - m_base) * b_total + bi) * r + ri] = s; // scalar store
+            }
+        }
+    }
+}
+
+/// Packed-but-scalar region kernel (paper Listing 3: packing applied, merged
+/// `k = n*rt_1` loop, no vector structure). `g` is PackedK `[m][r][L]`;
+/// `od`'s first row is absolute row `m_base`.
+#[allow(clippy::too_many_arguments)]
+pub fn scalar_packed_region_based(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    for mi in m0..m1 {
+        for bi in b0..b1 {
+            let xrow = &xd[bi * l..(bi + 1) * l];
+            for ri in 0..r {
+                let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+                let mut acc = 0.0f32;
+                for (gv, xv) in grow.iter().zip(xrow) {
+                    acc += gv * xv;
+                }
+                od[((mi - m_base) * b_total + bi) * r + ri] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hsum_matches_scalar_sum() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert_eq!(hsum(&v), 36.0);
+    }
+
+    #[test]
+    fn fma_accumulates_lanes() {
+        let mut acc = [1.0f32; VL];
+        let a = [2.0f32; VL];
+        fma(&mut acc, &a, 3.0);
+        assert!(acc.iter().all(|&x| x == 7.0));
+    }
+}

@@ -1,0 +1,152 @@
+//! The optimized Einsum kernel engine — executable realizations of every
+//! optimization stage the compiler can plan (paper §4.3).
+//!
+//! `Out[m, b, r] = sum over (n, k) of G[r, n, m, k] * In[b, n, k]`
+//!
+//! The RISC-V RVV intrinsics of the paper's listings are realized as
+//! fixed-width `[f32; VL]` lane arrays that LLVM auto-vectorizes on the host
+//! ISA (same lane count, same microkernel structure — DESIGN.md §3). The
+//! engine executes exactly what an [`OptimizationPlan`] prescribes:
+//!
+//! * [`pack`] — array packing of the constant core (§4.3.1, Listing 3);
+//! * vectorized r-loop / k-loop microkernels (§4.3.3, Listings 4-5);
+//! * register-blocked tiles with padding ukernels (§4.3.4, Listing 6);
+//! * bt tiling + loop order (§4.3.5) and thread parallelization (§4.2.3).
+
+mod packed;
+mod naive;
+mod micro;
+mod exec;
+mod tune;
+
+pub use exec::{execute, execute_into, execute_with_scratch, Scratch};
+pub use tune::tune_plan;
+pub use naive::naive_einsum;
+pub use packed::{pack, GLayout, PackedG};
+
+/// Microkernel lane width. Matches the paper's `vl` (256-bit RVV / f32) and
+/// both MachineSpec presets; a different `MachineSpec::vl_f32` is planned
+/// against but executed at this width.
+pub const VL: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, pipeline::compile_stage, pipeline::OptStage};
+    use crate::machine::MachineSpec;
+    use crate::tensor::einsum::tt_einsum_ref;
+    use crate::tensor::Tensor;
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+    use crate::util::prng::Rng;
+
+    fn rand_case(dims: &EinsumDims, rng: &mut Rng) -> (Tensor, Tensor) {
+        let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, rng);
+        let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, rng);
+        (g, x)
+    }
+
+    /// Every stage of every plan must equal the reference bit-for-bit shape
+    /// and numerically close.
+    #[test]
+    fn all_stages_match_reference_on_cb_suite() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(40);
+        for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+            // limit to 3 entries per kind to keep test time bounded;
+            // integration tests sweep the full suite
+            for e in crate::compiler::cb_suite(kind).into_iter().take(3) {
+                // shrink huge b to keep the unit test fast
+                let mut dims = e.dims;
+                dims.b = dims.b.min(96);
+                let (g, x) = rand_case(&dims, &mut rng);
+                let want = tt_einsum_ref(&g, &x).unwrap();
+                for stage in [
+                    OptStage::Naive,
+                    OptStage::VecPack,
+                    OptStage::RbTile,
+                    OptStage::Parallel,
+                ] {
+                    let plan = compile_stage(&dims, &machine, stage).unwrap();
+                    let pg = pack(&g, &plan).unwrap();
+                    let got = execute(&plan, &pg, &x).unwrap();
+                    assert!(
+                        got.allclose(&want, 1e-4, 1e-4),
+                        "{} {:?} stage {:?}: maxdiff {}",
+                        e.id,
+                        kind,
+                        stage,
+                        got.max_abs_diff(&want).unwrap()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn awkward_remainder_shapes() {
+        // m, b deliberately prime / non-multiples of every blocking factor
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(41);
+        for (m, b, n, r, k) in [
+            (1usize, 1usize, 1usize, 8usize, 8usize),
+            (7, 11, 3, 8, 8),
+            (13, 5, 2, 8, 1),
+            (3, 17, 5, 1, 8),
+            (9, 1, 4, 16, 8),
+            (2, 3, 1, 8, 16),
+        ] {
+            let kind = if k == 1 {
+                EinsumKind::First
+            } else if r == 1 {
+                EinsumKind::Final
+            } else {
+                EinsumKind::Middle
+            };
+            let dims = EinsumDims { kind, m, b, n, r, k };
+            let (g, x) = rand_case(&dims, &mut rng);
+            let want = tt_einsum_ref(&g, &x).unwrap();
+            let plan = compile(&dims, &machine).unwrap();
+            let pg = pack(&g, &plan).unwrap();
+            let got = execute(&plan, &pg, &x).unwrap();
+            assert!(
+                got.allclose(&want, 1e-4, 1e-4),
+                "dims {dims:?}: maxdiff {}",
+                got.max_abs_diff(&want).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn property_random_dims_match_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        crate::testkit::check("kernel == reference", 30, |d| {
+            let m = d.usize_in(1, 40);
+            let b = d.usize_in(1, 40);
+            let n = d.usize_in(1, 12);
+            let (r, k) = *d.choose(&[(8usize, 8usize), (8, 1), (1, 8), (16, 8), (8, 16), (1, 1)]);
+            let kind = if k == 1 && r > 1 {
+                EinsumKind::First
+            } else if r == 1 {
+                EinsumKind::Final
+            } else {
+                EinsumKind::Middle
+            };
+            let dims = EinsumDims { kind, m, b, n, r, k };
+            let mut rng = d.rng().fork();
+            let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+            let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+            let want = tt_einsum_ref(&g, &x).map_err(|e| e.to_string())?;
+            let plan = compile(&dims, &machine).map_err(|e| e.to_string())?;
+            let pg = pack(&g, &plan).map_err(|e| e.to_string())?;
+            let got = execute(&plan, &pg, &x).map_err(|e| e.to_string())?;
+            if got.allclose(&want, 1e-3, 1e-3) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "dims {dims:?} maxdiff {}",
+                    got.max_abs_diff(&want).unwrap()
+                ))
+            }
+        });
+    }
+}

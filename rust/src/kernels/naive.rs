@@ -1,0 +1,47 @@
+//! The unoptimized kernel (paper Listing 2 / "GCC -O3" ablation bar):
+//! canonical layouts, no vectorization structure, no blocking.
+
+use crate::error::Result;
+use crate::tensor::einsum::{core_dims, slab_dims};
+use crate::tensor::Tensor;
+
+/// Plain five-deep loop nest over the canonical `G[r][n][m][k]`.
+pub fn naive_einsum(g: &Tensor, x: &Tensor) -> Result<Tensor> {
+    let (r, n, m, k) = core_dims(g)?;
+    let b = slab_dims(x, n, k)?;
+    let (gd, xd) = (g.data(), x.data());
+    let mut out = Tensor::zeros(vec![m, b, r]);
+    let od = out.data_mut();
+    for mi in 0..m {
+        for bi in 0..b {
+            for ri in 0..r {
+                let mut acc = 0.0f32;
+                for ni in 0..n {
+                    for ki in 0..k {
+                        acc += gd[((ri * n + ni) * m + mi) * k + ki]
+                            * xd[(bi * n + ni) * k + ki];
+                    }
+                }
+                od[(mi * b + bi) * r + ri] = acc;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::einsum::tt_einsum_ref;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn equals_reference() {
+        let mut rng = Rng::new(60);
+        let g = Tensor::randn(vec![8, 5, 7, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![9, 5, 8], 1.0, &mut rng);
+        let a = naive_einsum(&g, &x).unwrap();
+        let b = tt_einsum_ref(&g, &x).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+}

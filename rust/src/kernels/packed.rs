@@ -1,0 +1,197 @@
+//! Array packing of the constant core `G` (paper §4.3.1, Listing 3).
+//!
+//! The canonical T3F layout is `G[r][n][m][k]`. The Einsum loop nest reads
+//! it as `(m, r-vector-step, n*k, lane)` — so packing rewrites it, at
+//! compile time (G is a constant weight), into exactly that order:
+//!
+//! * `PackedR`: `G_t[m][r/vl][n*k][vl]` — unit-stride vector loads for the
+//!   r-vectorized microkernel (Listing 5's layout change);
+//! * `PackedK`: `G_t[m][r][n*k]` — unit-stride along the contraction for
+//!   the k-vectorized microkernel (Listing 4) and the scalar kernels
+//!   (Listing 3's merged `k = n*rt_1` loop).
+
+use crate::compiler::plan::{OptimizationPlan, VectorLoop};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::VL;
+
+/// Which packed layout a [`PackedG`] buffer holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GLayout {
+    /// Canonical `[r][n][m][k]` (naive stage — no packing).
+    Canonical,
+    /// `[m][r/VL][n*k][VL]` (+ zero padding of r up to a VL multiple).
+    PackedR,
+    /// `[m][r][n*k]`.
+    PackedK,
+}
+
+/// A core repacked for the kernel engine.
+#[derive(Debug, Clone)]
+pub struct PackedG {
+    pub layout: GLayout,
+    /// (r, n, m, k) of the canonical core.
+    pub dims: (usize, usize, usize, usize),
+    /// r rounded up to a VL multiple (PackedR only).
+    pub r_pad: usize,
+    pub data: Vec<f32>,
+}
+
+impl PackedG {
+    /// Bytes of the packed buffer.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Pack `g` as the plan requires.
+pub fn pack(g: &Tensor, plan: &OptimizationPlan) -> Result<PackedG> {
+    let d = g.dims();
+    if d.len() != 4 {
+        return Err(Error::shape(format!("core must be rank 4, got {:?}", d)));
+    }
+    let (r, n, m, k) = (d[0], d[1], d[2], d[3]);
+    let dm = &plan.dims;
+    if (dm.r, dm.n, dm.m, dm.k) != (r, n, m, k) {
+        return Err(Error::shape(format!(
+            "plan dims {:?} do not match core {:?}",
+            dm, d
+        )));
+    }
+    let gd = g.data();
+    let at = |ri: usize, ni: usize, mi: usize, ki: usize| gd[((ri * n + ni) * m + mi) * k + ki];
+
+    if !plan.pack_g {
+        return Ok(PackedG {
+            layout: GLayout::Canonical,
+            dims: (r, n, m, k),
+            r_pad: r,
+            data: gd.to_vec(),
+        });
+    }
+    match plan.vector_loop {
+        VectorLoop::R => {
+            let r_pad = r.div_ceil(VL) * VL;
+            let l = n * k;
+            let mut data = vec![0.0f32; m * r_pad * l];
+            for mi in 0..m {
+                for rv in 0..r_pad / VL {
+                    for ni in 0..n {
+                        for ki in 0..k {
+                            let kk = ni * k + ki;
+                            let base = ((mi * (r_pad / VL) + rv) * l + kk) * VL;
+                            for lane in 0..VL {
+                                let ri = rv * VL + lane;
+                                if ri < r {
+                                    data[base + lane] = at(ri, ni, mi, ki);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(PackedG { layout: GLayout::PackedR, dims: (r, n, m, k), r_pad, data })
+        }
+        VectorLoop::K | VectorLoop::None => {
+            let l = n * k;
+            let mut data = vec![0.0f32; m * r * l];
+            for mi in 0..m {
+                for ri in 0..r {
+                    for ni in 0..n {
+                        for ki in 0..k {
+                            data[(mi * r + ri) * l + ni * k + ki] = at(ri, ni, mi, ki);
+                        }
+                    }
+                }
+            }
+            Ok(PackedG { layout: GLayout::PackedK, dims: (r, n, m, k), r_pad: r, data })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::{LoopOrder, RbFactors, TilePlan};
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+    use crate::util::prng::Rng;
+
+    fn plan_for(g_dims: (usize, usize, usize, usize), vloop: VectorLoop, pack_g: bool) -> OptimizationPlan {
+        let (r, n, m, k) = g_dims;
+        OptimizationPlan {
+            dims: EinsumDims { kind: EinsumKind::Middle, m, b: 4, n, r, k },
+            pack_g,
+            vector_loop: vloop,
+            vl: VL,
+            rb: RbFactors::NONE,
+            tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+            threads: 1,
+            ls_estimate: 0,
+        }
+    }
+
+    #[test]
+    fn packed_r_layout_roundtrip() {
+        let mut rng = Rng::new(50);
+        let g = Tensor::randn(vec![8, 3, 5, 2], 1.0, &mut rng);
+        let p = pack(&g, &plan_for((8, 3, 5, 2), VectorLoop::R, true)).unwrap();
+        assert_eq!(p.layout, GLayout::PackedR);
+        assert_eq!(p.r_pad, 8);
+        // check a handful of entries
+        let l = 3 * 2;
+        for (ri, ni, mi, ki) in [(0, 0, 0, 0), (7, 2, 4, 1), (3, 1, 2, 0)] {
+            let kk = ni * 2 + ki;
+            let packed = p.data[((mi * 1 + 0) * l + kk) * VL + ri];
+            assert_eq!(packed, g.at(&[ri, ni, mi, ki]).unwrap());
+        }
+    }
+
+    #[test]
+    fn packed_r_pads_odd_r_with_zeros() {
+        let mut rng = Rng::new(51);
+        let g = Tensor::randn(vec![3, 2, 2, 1], 1.0, &mut rng);
+        let p = pack(&g, &plan_for((3, 2, 2, 1), VectorLoop::R, true)).unwrap();
+        assert_eq!(p.r_pad, 8);
+        // lanes 3..8 must be zero
+        for mi in 0..2 {
+            for kk in 0..2 {
+                for lane in 3..8 {
+                    assert_eq!(p.data[(mi * 2 + kk) * VL + lane], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_k_layout_roundtrip() {
+        let mut rng = Rng::new(52);
+        let g = Tensor::randn(vec![2, 3, 4, 8], 1.0, &mut rng);
+        let p = pack(&g, &plan_for((2, 3, 4, 8), VectorLoop::K, true)).unwrap();
+        assert_eq!(p.layout, GLayout::PackedK);
+        let l = 3 * 8;
+        for (ri, ni, mi, ki) in [(0, 0, 0, 0), (1, 2, 3, 7), (1, 1, 2, 4)] {
+            assert_eq!(
+                p.data[(mi * 2 + ri) * l + ni * 8 + ki],
+                g.at(&[ri, ni, mi, ki]).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn canonical_when_packing_disabled() {
+        let mut rng = Rng::new(53);
+        let g = Tensor::randn(vec![2, 2, 2, 2], 1.0, &mut rng);
+        let p = pack(&g, &plan_for((2, 2, 2, 2), VectorLoop::None, false)).unwrap();
+        assert_eq!(p.layout, GLayout::Canonical);
+        assert_eq!(p.data, g.data());
+    }
+
+    #[test]
+    fn dims_mismatch_rejected() {
+        let g = Tensor::zeros(vec![2, 2, 2, 2]);
+        let p = plan_for((2, 2, 3, 2), VectorLoop::R, true);
+        assert!(pack(&g, &p).is_err());
+        assert!(pack(&Tensor::zeros(vec![2, 2, 2]), &p).is_err());
+    }
+}

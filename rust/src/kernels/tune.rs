@@ -1,0 +1,94 @@
+//! Measured register-blocking autotuner (§Perf iteration 2).
+//!
+//! The paper's Eq. 18-25 L/S model ranks candidates analytically; on hosts
+//! we can *measure*, the top candidates are micro-benchmarked on the real
+//! buffers and the fastest wins. Packing depends only on the vectorized
+//! loop, not the RB factors, so one packed core serves every candidate.
+//!
+//! The analytic path ([`crate::compiler::compile`]) stays paper-faithful;
+//! benches and deployments opt in via [`tune_plan`].
+
+use std::time::Instant;
+
+use crate::compiler::plan::OptimizationPlan;
+use crate::compiler::regblock;
+use crate::error::Result;
+use crate::machine::MachineSpec;
+use crate::tensor::Tensor;
+
+use super::{execute_into, pack};
+
+/// Re-rank the solver's top-`k` RB candidates by measurement and return the
+/// plan updated with the winner. `g`/`x` are representative buffers of the
+/// planned shapes.
+pub fn tune_plan(
+    plan: &OptimizationPlan,
+    machine: &MachineSpec,
+    g: &Tensor,
+    x: &Tensor,
+    top_k: usize,
+) -> Result<OptimizationPlan> {
+    let cands = regblock::candidates(&plan.dims, machine, plan.vector_loop, top_k);
+    if cands.len() <= 1 {
+        return Ok(*plan);
+    }
+    let pg = pack(g, plan)?; // layout is RB-invariant
+    let mut out = Vec::new();
+    let mut best = (*plan, f64::INFINITY);
+    for (rb, _ls) in cands {
+        let cand_plan = OptimizationPlan { rb, ..*plan };
+        // warm once, then take the best of 3 (min is the right statistic
+        // for short deterministic kernels)
+        execute_into(&cand_plan, &pg, x.data(), &mut out)?;
+        let mut t_best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            execute_into(&cand_plan, &pg, x.data(), &mut out)?;
+            t_best = t_best.min(t0.elapsed().as_secs_f64());
+        }
+        if t_best < best.1 {
+            best = (cand_plan, t_best);
+        }
+    }
+    Ok(best.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::tensor::einsum::tt_einsum_ref;
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn tuned_plan_is_valid_and_not_slower_class() {
+        let machine = MachineSpec::host();
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 32, b: 48, n: 8, r: 8, k: 8 };
+        let mut rng = Rng::new(123);
+        let g = Tensor::randn(vec![8, 8, 32, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![48, 8, 8], 1.0, &mut rng);
+        let plan = compile(&dims, &machine).unwrap();
+        let tuned = tune_plan(&plan, &machine, &g, &x, 6).unwrap();
+        // same structure, possibly different RB; must stay within budget
+        assert_eq!(tuned.vector_loop, plan.vector_loop);
+        assert!(tuned.rb.registers() <= machine.vector_regs as usize);
+        // and must still compute the right answer
+        let pg = pack(&g, &tuned).unwrap();
+        let got = crate::kernels::execute(&tuned, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn degenerate_spaces_return_original() {
+        let machine = MachineSpec::host();
+        let dims = EinsumDims { kind: EinsumKind::Final, m: 1, b: 1, n: 1, r: 1, k: 1 };
+        let mut rng = Rng::new(124);
+        let g = Tensor::randn(vec![1, 1, 1, 1], 1.0, &mut rng);
+        let x = Tensor::randn(vec![1, 1, 1], 1.0, &mut rng);
+        let plan = compile(&dims, &machine).unwrap();
+        let tuned = tune_plan(&plan, &machine, &g, &x, 4).unwrap();
+        assert_eq!(tuned.dims, plan.dims);
+    }
+}

@@ -1,0 +1,48 @@
+//! # ttrv — Tensor-Train DSE + analytical compiler optimization for RISC-V
+//!
+//! Reproduction of *"Optimizing Tensor Train Decomposition in DNNs for RISC-V
+//! Architectures Using Design Space Exploration and Compiler Optimizations"*
+//! (ACM TECS 2026, DOI 10.1145/3768624) as a three-layer Rust + JAX + Pallas
+//! stack. See `DESIGN.md` for the full system inventory and experiment index.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the paper's contribution: the design-space
+//!   exploration engine ([`dse`]), the analytical compiler for T3F Einsum
+//!   kernels ([`compiler`], [`machine`]), executable optimized kernels and
+//!   baselines ([`kernels`], [`baselines`]), a serving coordinator
+//!   ([`coordinator`]) and a PJRT runtime ([`runtime`]) that executes
+//!   AOT-lowered JAX/Pallas artifacts.
+//! * **L2** — `python/compile/model.py`: TT FC layers + MLP in JAX.
+//! * **L1** — `python/compile/kernels/tt_einsum.py`: the Pallas hot-spot
+//!   kernel, validated against `ref.py`.
+//!
+//! Quick tour:
+//! ```
+//! use ttrv::ttd::{TtLayout, cost};
+//! // The paper's running example: FC 784 -> 300, d = 5, rank 8.
+//! let layout = TtLayout::new(
+//!     vec![5, 5, 3, 2, 2], vec![2, 2, 2, 7, 14],
+//!     vec![1, 8, 8, 8, 8, 1]).unwrap();
+//! assert!(cost::params(&layout) < 300 * 784 + 300);
+//! assert!(cost::flops(&layout) < 2 * 300 * 784 + 300);
+//! ```
+
+pub mod error;
+pub mod util;
+pub mod testkit;
+pub mod tensor;
+pub mod linalg;
+pub mod factor;
+pub mod ttd;
+pub mod models;
+pub mod machine;
+pub mod compiler;
+pub mod kernels;
+pub mod baselines;
+pub mod dse;
+pub mod bench;
+pub mod config;
+pub mod runtime;
+pub mod coordinator;
+
+pub use error::{Error, Result};

@@ -1,0 +1,111 @@
+//! Dense matrix multiplication.
+//!
+//! `matmul` is a cache-blocked i-k-j kernel used by the SVD, the IREE-like
+//! baseline's MMM stage and the e2e trainer. It is deliberately *not* the
+//! paper's optimized einsum engine (that lives in [`crate::kernels`]) — it is
+//! the generic substrate.
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Naive triple loop, kept as the correctness oracle for `matmul`.
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k, n) = check_dims(a, b)?;
+    let (ad, bd) = (a.data(), b.data());
+    let mut out = Tensor::zeros(vec![m, n]);
+    let od = out.data_mut();
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += ad[i * k + p] * bd[p * n + j];
+            }
+            od[i * n + j] = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// Cache-blocked i-k-j matmul (`C = A B`, A `(m, k)`, B `(k, n)`).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k, n) = check_dims(a, b)?;
+    let (ad, bd) = (a.data(), b.data());
+    let mut out = Tensor::zeros(vec![m, n]);
+    let od = out.data_mut();
+    // block sizes sized for a ~32 KiB L1: 64*64*4 B tiles
+    const BI: usize = 64;
+    const BK: usize = 64;
+    for i0 in (0..m).step_by(BI) {
+        let i1 = (i0 + BI).min(m);
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in i0..i1 {
+                let arow = &ad[i * k..(i + 1) * k];
+                let crow = &mut od[i * n..(i + 1) * n];
+                for p in k0..k1 {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[p * n..(p + 1) * n];
+                    // j loop vectorizes (contiguous fma over crow/brow)
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += av * bv;
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn check_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
+    let (da, db) = (a.dims(), b.dims());
+    if da.len() != 2 || db.len() != 2 || da[1] != db[0] {
+        return Err(Error::shape(format!("matmul dims {:?} x {:?}", da, db)));
+    }
+    Ok((da[0], da[1], db[1]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(vec![4, 4], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(vec![4, 4]);
+        for i in 0..4 {
+            *eye.at_mut(&[i, i]).unwrap() = 1.0;
+        }
+        let c = matmul(&a, &eye).unwrap();
+        assert!(c.allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_awkward_shapes() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (3, 70, 5), (65, 64, 63), (130, 7, 129)] {
+            let a = Tensor::randn(vec![m, k], 1.0, &mut rng);
+            let b = Tensor::randn(vec![k, n], 1.0, &mut rng);
+            let fast = matmul(&a, &b).unwrap();
+            let slow = matmul_naive(&a, &b).unwrap();
+            assert!(
+                fast.allclose(&slow, 1e-4, 1e-4),
+                "mismatch at ({m},{k},{n}): {}",
+                fast.max_abs_diff(&slow).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let a = Tensor::zeros(vec![2, 3]);
+        let b = Tensor::zeros(vec![4, 2]);
+        assert!(matmul(&a, &b).is_err());
+        let v = Tensor::zeros(vec![3]);
+        assert!(matmul(&a, &v).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Numerical linear algebra substrate: blocked matmul and a one-sided
+//! Jacobi SVD (no LAPACK offline). Powers TT-SVD decomposition
+//! ([`crate::ttd::decompose`]) and the dense baselines.
+
+mod matmul;
+mod svd;
+
+pub use matmul::{matmul, matmul_naive};
+pub use svd::{svd, truncated_svd, Svd};

@@ -1,0 +1,309 @@
+//! One-sided (Hestenes) Jacobi SVD.
+//!
+//! LAPACK is unavailable offline, and TT-SVD only needs thin SVDs of
+//! moderate unfoldings, for which cyclic one-sided Jacobi is simple, robust
+//! and accurate (dot products are accumulated in f64).
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Thin SVD `A = U diag(S) V^T` with `A (m, n)`, `U (m, p)`, `S (p)`,
+/// `V^T (p, n)` and `p = min(m, n)`; singular values sorted descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub vt: Tensor,
+}
+
+impl Svd {
+    /// Reconstruct the (possibly truncated) matrix `U diag(S) V^T`.
+    pub fn reconstruct(&self) -> Result<Tensor> {
+        let p = self.s.len();
+        let m = self.u.dims()[0];
+        let n = self.vt.dims()[1];
+        let (ud, vd) = (self.u.data(), self.vt.data());
+        let mut out = Tensor::zeros(vec![m, n]);
+        let od = out.data_mut();
+        for (k, &sk) in self.s.iter().enumerate().take(p) {
+            for i in 0..m {
+                let uik = ud[i * p + k] * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                let vrow = &vd[k * n..(k + 1) * n];
+                let orow = &mut od[i * n..(i + 1) * n];
+                for (o, &v) in orow.iter_mut().zip(vrow) {
+                    *o += uik * v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Keep only the top `r` singular triplets.
+    pub fn truncate(mut self, r: usize) -> Svd {
+        let p = self.s.len();
+        let r = r.min(p);
+        let m = self.u.dims()[0];
+        let n = self.vt.dims()[1];
+        let mut u = Tensor::zeros(vec![m, r]);
+        for i in 0..m {
+            for k in 0..r {
+                u.data_mut()[i * r + k] = self.u.data()[i * p + k];
+            }
+        }
+        let vt_data = self.vt.data()[..r * n].to_vec();
+        self.u = u;
+        self.s.truncate(r);
+        self.vt = Tensor::from_vec(vec![r, n], vt_data).expect("vt slice");
+        self
+    }
+}
+
+/// Compute the thin SVD of `a` via cyclic one-sided Jacobi.
+pub fn svd(a: &Tensor) -> Result<Svd> {
+    let d = a.dims();
+    if d.len() != 2 {
+        return Err(Error::shape(format!("svd expects a matrix, got {:?}", d)));
+    }
+    let (m, n) = (d[0], d[1]);
+    if m == 0 || n == 0 {
+        return Err(Error::shape("svd of empty matrix"));
+    }
+    if m >= n {
+        svd_tall(a)
+    } else {
+        // A = U S V^T  <=>  A^T = V S U^T
+        let at = a.transpose(&[1, 0])?;
+        let Svd { u, s, vt } = svd_tall(&at)?;
+        Ok(Svd { u: vt.transpose(&[1, 0])?, s, vt: u.transpose(&[1, 0])? })
+    }
+}
+
+/// One-sided Jacobi for `m >= n`: rotate column pairs of A until all are
+/// mutually orthogonal; then `sigma_j = ||a_j||`, `u_j = a_j / sigma_j`.
+fn svd_tall(a: &Tensor) -> Result<Svd> {
+    let d = a.dims();
+    let (m, n) = (d[0], d[1]);
+    debug_assert!(m >= n);
+    // Work on A^T so columns of A are contiguous rows.
+    let mut at = a.transpose(&[1, 0])?.into_vec(); // (n, m) row-major
+    let mut vt = vec![0.0f32; n * n]; // V^T, rows are v_j^T
+    for j in 0..n {
+        vt[j * n + j] = 1.0;
+    }
+
+    const MAX_SWEEPS: usize = 60;
+    let tol = 1e-9f64;
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64; // largest |gamma| / sqrt(alpha*beta) this sweep
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (alpha, beta, gamma) = {
+                    let ci = &at[i * m..(i + 1) * m];
+                    let cj = &at[j * m..(j + 1) * m];
+                    let mut alpha = 0.0f64;
+                    let mut beta = 0.0f64;
+                    let mut gamma = 0.0f64;
+                    for (x, y) in ci.iter().zip(cj) {
+                        alpha += (*x as f64) * (*x as f64);
+                        beta += (*y as f64) * (*y as f64);
+                        gamma += (*x as f64) * (*y as f64);
+                    }
+                    (alpha, beta, gamma)
+                };
+                if alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                let rel = gamma.abs() / (alpha * beta).sqrt();
+                off = off.max(rel);
+                if rel <= tol {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (i, j) Gram entry
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_rows(&mut at, m, i, j, c as f32, s as f32);
+                rotate_rows(&mut vt, n, i, j, c as f32, s as f32);
+            }
+        }
+        if off <= tol {
+            break;
+        }
+    }
+
+    // Singular values = column norms; sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| {
+            at[j * m..(j + 1) * m]
+                .iter()
+                .map(|x| (*x as f64) * (*x as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    order.sort_by(|&x, &y| norms[y].partial_cmp(&norms[x]).expect("NaN in svd"));
+
+    let mut u = Tensor::zeros(vec![m, n]);
+    let mut s = vec![0.0f32; n];
+    let mut vt_sorted = Tensor::zeros(vec![n, n]);
+    for (slot, &j) in order.iter().enumerate() {
+        let norm = norms[j];
+        s[slot] = norm as f32;
+        let col = &at[j * m..(j + 1) * m];
+        if norm > 0.0 {
+            let inv = (1.0 / norm) as f32;
+            for (row, &v) in col.iter().enumerate() {
+                u.data_mut()[row * n + slot] = v * inv;
+            }
+        }
+        vt_sorted.data_mut()[slot * n..(slot + 1) * n]
+            .copy_from_slice(&vt[j * n..(j + 1) * n]);
+    }
+    Ok(Svd { u, s, vt: vt_sorted })
+}
+
+/// Apply the Givens rotation to rows `i`, `j` of a row-major `(rows, width)`
+/// buffer: `(ri, rj) <- (c*ri - s*rj, s*ri + c*rj)`.
+fn rotate_rows(buf: &mut [f32], width: usize, i: usize, j: usize, c: f32, s: f32) {
+    debug_assert_ne!(i, j);
+    let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+    let (head, tail) = buf.split_at_mut(hi * width);
+    let ri = &mut head[lo * width..(lo + 1) * width];
+    let rj = &mut tail[..width];
+    if lo == i {
+        for (x, y) in ri.iter_mut().zip(rj.iter_mut()) {
+            let (xi, yj) = (*x, *y);
+            *x = c * xi - s * yj;
+            *y = s * xi + c * yj;
+        }
+    } else {
+        for (y, x) in ri.iter_mut().zip(rj.iter_mut()) {
+            let (xi, yj) = (*x, *y);
+            *x = c * xi - s * yj;
+            *y = s * xi + c * yj;
+        }
+    }
+}
+
+/// SVD truncated to rank `r`.
+pub fn truncated_svd(a: &Tensor, r: usize) -> Result<Svd> {
+    Ok(svd(a)?.truncate(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::prng::Rng;
+
+    fn assert_orthonormal_cols(t: &Tensor, tol: f32) {
+        let g = matmul(&t.transpose(&[1, 0]).unwrap(), t).unwrap();
+        let p = g.dims()[0];
+        for i in 0..p {
+            for j in 0..p {
+                let want = if i == j { 1.0 } else { 0.0 };
+                let got = g.at(&[i, j]).unwrap();
+                assert!((got - want).abs() < tol, "gram[{i},{j}]={got}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstructs_random_tall_matrix() {
+        let mut rng = Rng::new(10);
+        let a = Tensor::randn(vec![20, 8], 1.0, &mut rng);
+        let f = svd(&a).unwrap();
+        let back = f.reconstruct().unwrap();
+        assert!(
+            back.rel_l2_error(&a).unwrap() < 1e-4,
+            "err {}",
+            back.rel_l2_error(&a).unwrap()
+        );
+        assert_orthonormal_cols(&f.u, 1e-4);
+        assert_orthonormal_cols(&f.vt.transpose(&[1, 0]).unwrap(), 1e-4);
+        // descending
+        for w in f.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn reconstructs_wide_matrix() {
+        let mut rng = Rng::new(11);
+        let a = Tensor::randn(vec![6, 17], 1.0, &mut rng);
+        let f = svd(&a).unwrap();
+        assert_eq!(f.u.dims(), &[6, 6]);
+        assert_eq!(f.vt.dims(), &[6, 17]);
+        let back = f.reconstruct().unwrap();
+        assert!(back.rel_l2_error(&a).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Tensor::zeros(vec![4, 4]);
+        for (i, &v) in [3.0f32, 7.0, 1.0, 5.0].iter().enumerate() {
+            *a.at_mut(&[i, i]).unwrap() = v;
+        }
+        let f = svd(&a).unwrap();
+        assert!((f.s[0] - 7.0).abs() < 1e-5);
+        assert!((f.s[1] - 5.0).abs() < 1e-5);
+        assert!((f.s[2] - 3.0).abs() < 1e-5);
+        assert!((f.s[3] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncation_recovers_exact_low_rank() {
+        // A = u v^T (rank 1) reconstructed exactly from rank-1 truncation
+        let mut rng = Rng::new(12);
+        let u = Tensor::randn(vec![15, 1], 1.0, &mut rng);
+        let v = Tensor::randn(vec![1, 9], 1.0, &mut rng);
+        let a = matmul(&u, &v).unwrap();
+        let f = truncated_svd(&a, 1).unwrap();
+        assert_eq!(f.s.len(), 1);
+        let back = f.reconstruct().unwrap();
+        assert!(back.rel_l2_error(&a).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let mut rng = Rng::new(13);
+        let a = Tensor::randn(vec![30, 30], 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for r in [1usize, 5, 15, 30] {
+            let back = truncated_svd(&a, r).unwrap().reconstruct().unwrap();
+            let err = back.rel_l2_error(&a).unwrap();
+            assert!(err <= last + 1e-6, "rank {r}: {err} > {last}");
+            last = err;
+        }
+        assert!(last < 1e-4); // full rank is exact
+    }
+
+    #[test]
+    fn truncation_error_matches_tail_energy() {
+        // Eckart–Young: ||A - A_r||_F^2 = sum_{i>r} sigma_i^2
+        let mut rng = Rng::new(14);
+        let a = Tensor::randn(vec![12, 10], 1.0, &mut rng);
+        let f = svd(&a).unwrap();
+        let r = 4;
+        let back = f.clone().truncate(r).reconstruct().unwrap();
+        let mut diff2 = 0.0f64;
+        for (x, y) in back.data().iter().zip(a.data()) {
+            diff2 += ((x - y) as f64).powi(2);
+        }
+        let tail2: f64 = f.s[r..].iter().map(|&s| (s as f64).powi(2)).sum();
+        assert!(
+            (diff2 - tail2).abs() / tail2.max(1e-12) < 1e-3,
+            "{diff2} vs {tail2}"
+        );
+    }
+
+    #[test]
+    fn rejects_non_matrices() {
+        assert!(svd(&Tensor::zeros(vec![2, 2, 2])).is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Analytical execution-time model for planned Einsum kernels.
+//!
+//! Produces the "modeled-K1" series reported next to measured-host numbers
+//! in Figs. 9 and 12-16 (the physical board is unavailable — DESIGN.md §3).
+//! The model combines:
+//!
+//! * a compute term: MACs through the vector unit, derated by the
+//!   microkernel's vectorization efficiency (§4.3.3 analysis);
+//! * a load/store term: the register-blocking L/S count (Eq. 20-25), one
+//!   L/S per cycle, with an un-packed-G locality penalty when array packing
+//!   is disabled (ablations);
+//! * a DRAM term: compulsory traffic, or thrash traffic when the schedule's
+//!   working set violates the L2 inequalities (Eq. 26-28);
+//! * a parallel term: near-linear scaling with a per-thread spawn/sync
+//!   overhead — this term reproduces the paper's Fig. 9 thresholds.
+
+use crate::compiler::plan::{OptimizationPlan, VectorLoop};
+use crate::compiler::regblock;
+use crate::compiler::tiling;
+use crate::machine::MachineSpec;
+
+/// Seconds of one-off overhead per extra thread (spawn + barrier), the
+/// paper's "thread creation and synchronization overheads". Calibrated so
+/// the model's thread crossovers land at the paper's Fig. 9 FLOPs
+/// thresholds (2e6 / 4e6 / 8e6 at the K1's achieved memory-bound rate).
+pub const SPAWN_SECONDS: f64 = 100e-6;
+
+/// Relative efficiency of the k-vectorized microkernel (horizontal
+/// reductions + scalar stores; paper §4.3.3 item 3 and Fig. 14).
+pub const K_LOOP_EFF: f64 = 0.55;
+
+/// Locality penalty multiplier on G loads when array packing is off.
+pub const UNPACKED_G_PENALTY: f64 = 4.0;
+
+/// Decomposed time estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct TimeEstimate {
+    pub compute_s: f64,
+    pub ls_s: f64,
+    pub dram_s: f64,
+    pub spawn_s: f64,
+}
+
+impl TimeEstimate {
+    /// Total wall-clock estimate: bottleneck of the per-cycle terms plus
+    /// the fixed spawn overhead.
+    pub fn seconds(&self) -> f64 {
+        self.compute_s.max(self.ls_s).max(self.dram_s) + self.spawn_s
+    }
+
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.seconds() / 1e9
+    }
+}
+
+/// Estimate execution time of `plan` on `machine`.
+pub fn estimate(plan: &OptimizationPlan, machine: &MachineSpec) -> TimeEstimate {
+    let d = &plan.dims;
+    let macs = (d.m * d.b * d.n * d.r * d.k) as f64;
+    let vl = machine.vl_f32() as f64;
+
+    // --- compute term ---------------------------------------------------
+    let vec_eff = match plan.vector_loop {
+        VectorLoop::R => 1.0,
+        VectorLoop::K => K_LOOP_EFF,
+        VectorLoop::None => 1.0 / vl,
+    };
+    let lanes = vl * machine.fma_per_cycle * vec_eff;
+    let compute_cycles = macs / lanes;
+
+    // --- load/store term --------------------------------------------------
+    let eff_vl = if plan.vector_loop == VectorLoop::None { 1 } else { machine.vl_f32() };
+    let ls = regblock::ls_counts(d, eff_vl, &plan.rb, plan.vector_loop);
+    let g_pen = if plan.pack_g { 1.0 } else { UNPACKED_G_PENALTY };
+    let ls_cycles = ls.g as f64 * g_pen + ls.input as f64 + ls.output as f64;
+
+    // --- DRAM term --------------------------------------------------------
+    let compulsory = d.min_bytes() as f64;
+    let t = plan.threads;
+    let resident = match plan.tile.btl {
+        Some(btl) => tiling::eq28_holds(d, machine, t, btl),
+        None => match plan.tile.order {
+            crate::compiler::plan::LoopOrder::Mbrk => tiling::eq26_holds(d, machine, t),
+            crate::compiler::plan::LoopOrder::Bmrk => tiling::eq27_holds(d, machine, t),
+        },
+    };
+    let dram_bytes = if resident {
+        compulsory
+    } else {
+        // input re-streamed once per m-block sweep (dominant thrash mode)
+        let reload = (d.m as f64 / plan.rb.rm as f64).max(1.0).min(64.0);
+        4.0 * (d.b * d.n * d.k) as f64 * reload + compulsory
+    };
+
+    // --- combine ----------------------------------------------------------
+    let hz = machine.ghz * 1e9;
+    let threads = plan.threads.max(1) as f64;
+    let par_eff = 0.95f64.powi(plan.threads.saturating_sub(1) as i32);
+    let scale = threads * par_eff;
+    TimeEstimate {
+        compute_s: compute_cycles / hz / scale,
+        ls_s: ls_cycles / hz / scale,
+        dram_s: dram_bytes / (machine.dram_gbps * 1e9), // bandwidth is shared
+        spawn_s: if plan.threads > 1 { SPAWN_SECONDS * (threads - 1.0) } else { 0.0 },
+    }
+}
+
+/// Modeled GFLOP/s for a plan.
+pub fn gflops(plan: &OptimizationPlan, machine: &MachineSpec) -> f64 {
+    estimate(plan, machine).gflops(plan.dims.flops())
+}
+
+/// Fig. 9 helper: modeled speedup of running `plan` with `t` threads
+/// relative to single-threaded execution.
+pub fn thread_speedup(plan: &OptimizationPlan, machine: &MachineSpec, t: u32) -> f64 {
+    let single = OptimizationPlan { threads: 1, ..*plan };
+    let multi = OptimizationPlan { threads: t.min(machine.cores), ..*plan };
+    estimate(&single, machine).seconds() / estimate(&multi, machine).seconds()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, pipeline::compile_stage, pipeline::OptStage};
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+
+    fn k1() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
+
+    fn middle(m: usize, b: usize, n: usize) -> EinsumDims {
+        EinsumDims { kind: EinsumKind::Middle, m, b, n, r: 8, k: 8 }
+    }
+
+    #[test]
+    fn modeled_gflops_below_peak_and_positive() {
+        let machine = k1();
+        for e in crate::compiler::cb_suite(EinsumKind::Middle) {
+            let plan = compile(&e.dims, &machine).unwrap();
+            let g = gflops(&plan, &machine);
+            assert!(g > 0.1, "{}: {g}", e.id);
+            assert!(
+                g < machine.peak_gflops(plan.threads),
+                "{}: {g} exceeds peak",
+                e.id
+            );
+        }
+    }
+
+    #[test]
+    fn ablation_stages_are_monotone() {
+        // Fig. 16 shape: each optimization family must not slow things down
+        let machine = k1();
+        let d = middle(100, 512, 64); // ~5e7 FLOPs
+        let mut last = f64::INFINITY;
+        for stage in [OptStage::Naive, OptStage::VecPack, OptStage::RbTile, OptStage::Parallel] {
+            let plan = compile_stage(&d, &machine, stage).unwrap();
+            let s = estimate(&plan, &machine).seconds();
+            assert!(s <= last * 1.001, "{stage:?}: {s} > {last}");
+            last = s;
+        }
+    }
+
+    #[test]
+    fn fig9_thresholds_qualitative() {
+        // small kernels prefer 1 thread; large kernels prefer 4
+        let machine = k1();
+        let small = compile(&middle(32, 9, 7), &machine).unwrap(); // 2.6e5 flops
+        let large = compile(&middle(64, 1020, 28), &machine).unwrap(); // 2.3e8
+        let best_t = |plan: &OptimizationPlan| {
+            (1..=4u32)
+                .max_by(|&a, &b| {
+                    thread_speedup(plan, &machine, a)
+                        .partial_cmp(&thread_speedup(plan, &machine, b))
+                        .unwrap()
+                })
+                .unwrap()
+        };
+        assert_eq!(best_t(&small), 1);
+        assert_eq!(best_t(&large), 4);
+        // speedup of the big kernel at 4 threads is substantial
+        assert!(thread_speedup(&large, &machine, 4) > 2.0);
+    }
+
+    #[test]
+    fn optimal_thread_count_nondecreasing_in_flops() {
+        let machine = k1();
+        let mut last_best = 1;
+        for scale in [1usize, 4, 16, 64, 256] {
+            let d = middle(16 * scale, 128, 16);
+            let plan = compile(&d, &machine).unwrap();
+            let best = (1..=4u32)
+                .max_by(|&a, &b| {
+                    thread_speedup(&plan, &machine, a)
+                        .partial_cmp(&thread_speedup(&plan, &machine, b))
+                        .unwrap()
+                })
+                .unwrap();
+            assert!(best >= last_best, "flops {} best {best} < {last_best}", d.flops());
+            last_best = best;
+        }
+    }
+
+    #[test]
+    fn k_vectorized_final_is_slower_per_flop() {
+        // Fig. 14 observation: final einsums utilize hardware worse
+        let machine = k1();
+        let mid = compile(&middle(64, 512, 32), &machine).unwrap();
+        let fin_dims = EinsumDims { kind: EinsumKind::Final, m: 64, b: 512, n: 32, r: 1, k: 8 };
+        let fin = compile(&fin_dims, &machine).unwrap();
+        assert!(gflops(&fin, &machine) < gflops(&mid, &machine));
+    }
+
+    #[test]
+    fn unpacked_g_costs_more() {
+        // without register blocking the G stream dominates the L/S term, so
+        // the packing penalty must show up in the estimate
+        let machine = k1();
+        let d = middle(128, 256, 16);
+        let mut packed = compile(&d, &machine).unwrap();
+        packed.rb = crate::compiler::plan::RbFactors::NONE;
+        let unpacked = OptimizationPlan { pack_g: false, ..packed };
+        assert!(
+            estimate(&unpacked, &machine).seconds() > estimate(&packed, &machine).seconds()
+        );
+    }
+}

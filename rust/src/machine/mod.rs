@@ -1,0 +1,130 @@
+//! Target-machine description and performance models.
+//!
+//! The paper's methodology is parameterized by the hardware: vector length,
+//! register file size, L2 geometry, core count (SpacemiT K1). Every compiler
+//! pass in [`crate::compiler`] consumes a [`MachineSpec`], so retargeting is
+//! a data change (the paper: "this methodology can be extended to other
+//! processor families").
+//!
+//! The actual K1 board is unavailable in this environment; [`cache`] and
+//! [`costmodel`] provide the simulation substrate (set-associative cache
+//! simulator + analytical cycle model) used to produce "modeled-K1" numbers
+//! alongside measured-host numbers (DESIGN.md §3).
+
+pub mod cache;
+pub mod costmodel;
+
+/// Description of a target CPU for the analytical compiler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineSpec {
+    pub name: &'static str,
+    /// Vector width in bits (RVV VLEN / AVX width).
+    pub vector_bits: u32,
+    /// Number of architectural vector registers.
+    pub vector_regs: u32,
+    /// Physical cores available to the schedule.
+    pub cores: u32,
+    /// Clock in GHz.
+    pub ghz: f64,
+    /// FMA throughput: fused multiply-adds per lane per cycle.
+    pub fma_per_cycle: f64,
+    /// Sustained main-memory bandwidth in GB/s (per socket).
+    pub dram_gbps: f64,
+    /// L1 data cache per core, bytes.
+    pub l1_bytes: u64,
+    /// Last-level (shared) cache size in bytes.
+    pub l2_bytes: u64,
+    /// LLC associativity (paper Eq. 26-28 `L2.assoc`).
+    pub l2_assoc: u32,
+    /// Cache line size in bytes.
+    pub line_bytes: u32,
+}
+
+impl MachineSpec {
+    /// Vector lanes for f32 (`vl` in the paper; 8 on the K1).
+    pub fn vl_f32(&self) -> usize {
+        (self.vector_bits / 32) as usize
+    }
+
+    /// Bytes per L2 way (paper Eq. 26 `L2.way`).
+    pub fn l2_way_bytes(&self) -> u64 {
+        self.l2_bytes / self.l2_assoc as u64
+    }
+
+    /// Theoretical peak GFLOP/s of one core (paper: 25.6 on the K1).
+    pub fn peak_gflops_core(&self) -> f64 {
+        self.ghz * self.vl_f32() as f64 * self.fma_per_cycle * 2.0
+    }
+
+    /// Theoretical peak GFLOP/s across `t` cores.
+    pub fn peak_gflops(&self, t: u32) -> f64 {
+        self.peak_gflops_core() * t.min(self.cores) as f64
+    }
+
+    /// The paper's evaluation platform: SpacemiT K1 (Banana Pi BPI-F3),
+    /// cluster 0 = 4 cores @ 1.6 GHz, RVV 256-bit, 32 KB L1, 1 MB shared L2.
+    /// DRAM bandwidth per the paper's measurement: ~8x lower than a
+    /// high-performance x86 (~3 GB/s sustained).
+    pub fn spacemit_k1() -> Self {
+        MachineSpec {
+            name: "SpacemiT-K1",
+            vector_bits: 256,
+            vector_regs: 32,
+            cores: 4,
+            ghz: 1.6,
+            fma_per_cycle: 1.0,
+            dram_gbps: 3.0,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 1024 * 1024,
+            l2_assoc: 16,
+            line_bytes: 64,
+        }
+    }
+
+    /// The build/CI host this reproduction measures on: modeled as a single
+    /// generic x86-64 core with 256-bit vectors (AVX2-class).
+    pub fn host() -> Self {
+        MachineSpec {
+            name: "host-x86",
+            vector_bits: 256,
+            vector_regs: 16,
+            cores: 1,
+            ghz: 3.0,
+            fma_per_cycle: 2.0,
+            dram_gbps: 24.0,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 1024 * 1024,
+            l2_assoc: 16,
+            line_bytes: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k1_matches_paper_numbers() {
+        let k1 = MachineSpec::spacemit_k1();
+        assert_eq!(k1.vl_f32(), 8); // 256-bit / f32, paper Sec. 4.3.3
+        // paper Sec. 6.3: theoretical peak 25.6 GFLOP/s per core
+        assert!((k1.peak_gflops_core() - 25.6).abs() < 1e-9);
+        assert_eq!(k1.l2_way_bytes(), 65536);
+        assert_eq!(k1.vector_regs, 32);
+    }
+
+    #[test]
+    fn peak_scales_with_cores_capped() {
+        let k1 = MachineSpec::spacemit_k1();
+        assert_eq!(k1.peak_gflops(2), 2.0 * k1.peak_gflops_core());
+        assert_eq!(k1.peak_gflops(99), 4.0 * k1.peak_gflops_core());
+    }
+
+    #[test]
+    fn host_spec_is_sane() {
+        let h = MachineSpec::host();
+        assert_eq!(h.vl_f32(), 8);
+        assert!(h.peak_gflops_core() > 0.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Architecture catalog: the 7 CNNs and 6 LLMs of the paper's evaluation
+//! (Tables 1-2, Figs. 1 and 11), as parameter/FLOP layer inventories.
+//!
+//! Weights are not stored — Tables 1-2 and the share figures depend only on
+//! architecture shapes. Conv stacks are encoded at standard-architecture
+//! fidelity (documented per model); LLM blocks follow the paper's own
+//! estimates (Table 2 lists the exact FC shapes and multiplicities).
+
+mod zoo;
+
+pub use zoo::{all_models, cnn_models, llm_models, model_by_name};
+
+/// One layer kind with enough detail to count parameters and FLOPs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerSpec {
+    /// 2D convolution producing `out_h x out_w` spatial output.
+    Conv { c_in: u64, c_out: u64, k: u64, out_h: u64, out_w: u64 },
+    /// Fully connected `N -> M` applied at `tokens` positions per forward
+    /// (1 for CNN heads; the sequence length for transformer sub-layers —
+    /// parameters are shared, FLOPs scale with `tokens`).
+    Fc { n: u64, m: u64, tokens: u64 },
+    /// Token embedding lookup (parameters only, no MACs).
+    Embed { vocab: u64, dim: u64 },
+    /// LayerNorm / BatchNorm over `dim` features across `tokens` positions.
+    Norm { dim: u64, tokens: u64 },
+    /// Attention score+context matmuls (the non-FC part of self-attention):
+    /// `2 * seq^2 * dim` MACs per head-group, `seq` tokens.
+    AttnMatmul { seq: u64, dim: u64 },
+}
+
+impl LayerSpec {
+    /// Trainable parameter count.
+    pub fn params(&self) -> u64 {
+        match *self {
+            LayerSpec::Conv { c_in, c_out, k, .. } => c_in * c_out * k * k + c_out,
+            LayerSpec::Fc { n, m, .. } => n * m + m,
+            LayerSpec::Embed { vocab, dim } => vocab * dim,
+            LayerSpec::Norm { dim, .. } => 2 * dim,
+            LayerSpec::AttnMatmul { .. } => 0,
+        }
+    }
+
+    /// Inference FLOPs (one forward pass; 2 per MAC).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            LayerSpec::Conv { c_in, c_out, k, out_h, out_w } => {
+                2 * c_in * c_out * k * k * out_h * out_w
+            }
+            LayerSpec::Fc { n, m, tokens } => (2 * n * m + m) * tokens,
+            LayerSpec::Embed { .. } => 0,
+            LayerSpec::Norm { dim, tokens } => 5 * dim * tokens,
+            LayerSpec::AttnMatmul { seq, dim } => 2 * 2 * seq * seq * dim,
+        }
+    }
+
+    pub fn is_fc(&self) -> bool {
+        matches!(self, LayerSpec::Fc { .. })
+    }
+}
+
+/// Model family tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Cnn,
+    Llm,
+}
+
+/// A model architecture: named layers with multiplicities.
+#[derive(Debug, Clone)]
+pub struct ModelArch {
+    pub name: &'static str,
+    pub family: Family,
+    pub dataset: &'static str,
+    /// (layer, multiplicity) pairs.
+    pub layers: Vec<(LayerSpec, u64)>,
+}
+
+/// An FC layer occurrence eligible for factorization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FcShape {
+    /// Input width `N`.
+    pub n: u64,
+    /// Output width `M`.
+    pub m: u64,
+    /// How many identical instances the model contains.
+    pub count: u64,
+}
+
+impl ModelArch {
+    /// FC layers of the model (paper Tables 1-2 rows), in definition order.
+    pub fn fc_shapes(&self) -> Vec<FcShape> {
+        self.layers
+            .iter()
+            .filter_map(|(l, count)| match *l {
+                LayerSpec::Fc { n, m, .. } => Some(FcShape { n, m, count: *count }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// (fc, non_fc) parameter totals — Fig. 1 left.
+    pub fn params_split(&self) -> (u64, u64) {
+        self.split(LayerSpec::params)
+    }
+
+    /// (fc, non_fc) FLOP totals — Fig. 1 right.
+    pub fn flops_split(&self) -> (u64, u64) {
+        self.split(LayerSpec::flops)
+    }
+
+    fn split(&self, f: impl Fn(&LayerSpec) -> u64) -> (u64, u64) {
+        let mut fc = 0;
+        let mut other = 0;
+        for (l, count) in &self.layers {
+            let v = f(l) * count;
+            if l.is_fc() {
+                fc += v;
+            } else {
+                other += v;
+            }
+        }
+        (fc, other)
+    }
+
+    /// FC share of parameters in percent.
+    pub fn fc_param_share(&self) -> f64 {
+        let (fc, other) = self.params_split();
+        100.0 * fc as f64 / (fc + other).max(1) as f64
+    }
+
+    /// FC share of FLOPs in percent.
+    pub fn fc_flops_share(&self) -> f64 {
+        let (fc, other) = self.flops_split();
+        100.0 * fc as f64 / (fc + other).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_cost_formulas() {
+        let fc = LayerSpec::Fc { n: 784, m: 300, tokens: 1 };
+        assert_eq!(fc.params(), 784 * 300 + 300);
+        assert_eq!(fc.flops(), 2 * 784 * 300 + 300);
+        let fc_seq = LayerSpec::Fc { n: 784, m: 300, tokens: 4 };
+        assert_eq!(fc_seq.params(), fc.params());
+        assert_eq!(fc_seq.flops(), 4 * fc.flops());
+        let conv = LayerSpec::Conv { c_in: 3, c_out: 16, k: 3, out_h: 32, out_w: 32 };
+        assert_eq!(conv.params(), 3 * 16 * 9 + 16);
+        assert_eq!(conv.flops(), 2 * 3 * 16 * 9 * 32 * 32);
+        assert_eq!(LayerSpec::Embed { vocab: 10, dim: 4 }.flops(), 0);
+        assert!(!conv.is_fc());
+        assert!(fc.is_fc());
+    }
+
+    #[test]
+    fn split_respects_multiplicity() {
+        let arch = ModelArch {
+            name: "toy",
+            family: Family::Llm,
+            dataset: "none",
+            layers: vec![
+                (LayerSpec::Fc { n: 10, m: 10, tokens: 1 }, 3),
+                (LayerSpec::Norm { dim: 10, tokens: 1 }, 2),
+            ],
+        };
+        let (fc, other) = arch.params_split();
+        assert_eq!(fc, 3 * 110);
+        assert_eq!(other, 2 * 20);
+        assert_eq!(arch.fc_shapes(), vec![FcShape { n: 10, m: 10, count: 3 }]);
+    }
+}

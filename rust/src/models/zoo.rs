@@ -1,0 +1,266 @@
+//! The concrete model catalog.
+//!
+//! FC shapes and multiplicities for every model follow the paper's
+//! Tables 1-2 exactly. Conv stacks are standard-architecture encodings
+//! (LeNet/AlexNet/VGG16 exact; ResNet/GoogleNet/Xception as aggregate conv
+//! budgets at published totals) — they only feed the FC-share figures
+//! (Figs. 1 and 11), not the DSE tables.
+
+use super::{Family, LayerSpec, ModelArch};
+use LayerSpec::{AttnMatmul, Conv, Embed, Fc, Norm};
+
+fn cnn(name: &'static str, dataset: &'static str, layers: Vec<(LayerSpec, u64)>) -> ModelArch {
+    ModelArch { name, family: Family::Cnn, dataset, layers }
+}
+
+/// GPT-family block: per transformer layer 4x [dim, dim] projections,
+/// [dim, 4*dim] + [4*dim, dim] feed-forward, 2 norms, attention matmuls;
+/// plus embedding and the LM head [dim, vocab] (paper Table 2 rows).
+fn gpt(
+    name: &'static str,
+    layers_n: u64,
+    dim: u64,
+    seq: u64,
+    vocab: u64,
+) -> ModelArch {
+    let layers = vec![
+        (Embed { vocab, dim }, 1),
+        (Embed { vocab: seq, dim }, 1), // positional table
+        (Fc { n: dim, m: dim, tokens: seq }, 4 * layers_n),
+        (Fc { n: dim, m: 4 * dim, tokens: seq }, layers_n),
+        (Fc { n: 4 * dim, m: dim, tokens: seq }, layers_n),
+        (Norm { dim, tokens: seq }, 2 * layers_n + 1),
+        (AttnMatmul { seq, dim }, layers_n),
+        (Fc { n: dim, m: vocab, tokens: 1 }, 1), // LM head (last position)
+    ];
+    ModelArch { name, family: Family::Llm, dataset: "WebText", layers }
+}
+
+/// Every model in the paper's evaluation, CNNs first.
+pub fn all_models() -> Vec<ModelArch> {
+    let mut v = cnn_models();
+    v.extend(llm_models());
+    v
+}
+
+/// The paper's CNN suite (Table 1).
+pub fn cnn_models() -> Vec<ModelArch> {
+    vec![
+        cnn("LeNet5", "MNIST", vec![
+            (Conv { c_in: 1, c_out: 6, k: 5, out_h: 28, out_w: 28 }, 1),
+            (Conv { c_in: 6, c_out: 16, k: 5, out_h: 10, out_w: 10 }, 1),
+            (Fc { n: 400, m: 120, tokens: 1 }, 1),
+            (Fc { n: 120, m: 84, tokens: 1 }, 1),
+            (Fc { n: 84, m: 10, tokens: 1 }, 1),
+        ]),
+        cnn("LeNet300", "MNIST", vec![
+            (Fc { n: 784, m: 300, tokens: 1 }, 1),
+            (Fc { n: 300, m: 100, tokens: 1 }, 1),
+            (Fc { n: 100, m: 10, tokens: 1 }, 1),
+        ]),
+        cnn("AlexNet-CIFAR10", "CIFAR10", vec![
+            (Conv { c_in: 3, c_out: 64, k: 3, out_h: 32, out_w: 32 }, 1),
+            (Conv { c_in: 64, c_out: 192, k: 3, out_h: 16, out_w: 16 }, 1),
+            (Conv { c_in: 192, c_out: 384, k: 3, out_h: 8, out_w: 8 }, 1),
+            (Conv { c_in: 384, c_out: 256, k: 3, out_h: 8, out_w: 8 }, 1),
+            (Conv { c_in: 256, c_out: 256, k: 3, out_h: 8, out_w: 8 }, 1),
+            (Fc { n: 4096, m: 2048, tokens: 1 }, 1),
+            (Fc { n: 2048, m: 2048, tokens: 1 }, 1),
+            (Fc { n: 2048, m: 10, tokens: 1 }, 1),
+        ]),
+        cnn("AlexNet-CIFAR100", "CIFAR100", vec![
+            (Conv { c_in: 3, c_out: 64, k: 3, out_h: 32, out_w: 32 }, 1),
+            (Conv { c_in: 64, c_out: 192, k: 3, out_h: 16, out_w: 16 }, 1),
+            (Conv { c_in: 192, c_out: 384, k: 3, out_h: 8, out_w: 8 }, 1),
+            (Conv { c_in: 384, c_out: 256, k: 3, out_h: 8, out_w: 8 }, 1),
+            (Conv { c_in: 256, c_out: 256, k: 3, out_h: 8, out_w: 8 }, 1),
+            (Fc { n: 4096, m: 2048, tokens: 1 }, 1),
+            (Fc { n: 2048, m: 2048, tokens: 1 }, 1),
+            (Fc { n: 2048, m: 100, tokens: 1 }, 1),
+        ]),
+        cnn("AlexNet-ImageNet", "ImageNet", vec![
+            (Conv { c_in: 3, c_out: 96, k: 11, out_h: 55, out_w: 55 }, 1),
+            (Conv { c_in: 96, c_out: 256, k: 5, out_h: 27, out_w: 27 }, 1),
+            (Conv { c_in: 256, c_out: 384, k: 3, out_h: 13, out_w: 13 }, 1),
+            (Conv { c_in: 384, c_out: 384, k: 3, out_h: 13, out_w: 13 }, 1),
+            (Conv { c_in: 384, c_out: 256, k: 3, out_h: 13, out_w: 13 }, 1),
+            (Fc { n: 9216, m: 4096, tokens: 1 }, 1),
+            (Fc { n: 4096, m: 4096, tokens: 1 }, 1),
+            (Fc { n: 4096, m: 1000, tokens: 1 }, 1),
+        ]),
+        cnn("VGG-CIFAR10", "CIFAR10", vec![
+            (Conv { c_in: 3, c_out: 64, k: 3, out_h: 32, out_w: 32 }, 2),
+            (Conv { c_in: 64, c_out: 128, k: 3, out_h: 16, out_w: 16 }, 2),
+            (Conv { c_in: 128, c_out: 256, k: 3, out_h: 8, out_w: 8 }, 3),
+            (Conv { c_in: 256, c_out: 512, k: 3, out_h: 4, out_w: 4 }, 3),
+            (Conv { c_in: 512, c_out: 512, k: 3, out_h: 2, out_w: 2 }, 3),
+            (Fc { n: 512, m: 512, tokens: 1 }, 1),
+            (Fc { n: 512, m: 256, tokens: 1 }, 1),
+            (Fc { n: 256, m: 10, tokens: 1 }, 1),
+        ]),
+        cnn("VGG-CIFAR100", "CIFAR100", vec![
+            (Conv { c_in: 3, c_out: 64, k: 3, out_h: 32, out_w: 32 }, 2),
+            (Conv { c_in: 64, c_out: 128, k: 3, out_h: 16, out_w: 16 }, 2),
+            (Conv { c_in: 128, c_out: 256, k: 3, out_h: 8, out_w: 8 }, 3),
+            (Conv { c_in: 256, c_out: 512, k: 3, out_h: 4, out_w: 4 }, 3),
+            (Conv { c_in: 512, c_out: 512, k: 3, out_h: 2, out_w: 2 }, 3),
+            (Fc { n: 512, m: 512, tokens: 1 }, 1),
+            (Fc { n: 512, m: 256, tokens: 1 }, 1),
+            (Fc { n: 256, m: 100, tokens: 1 }, 1),
+        ]),
+        cnn("VGG16-ImageNet", "ImageNet", vec![
+            (Conv { c_in: 3, c_out: 64, k: 3, out_h: 224, out_w: 224 }, 2),
+            (Conv { c_in: 64, c_out: 128, k: 3, out_h: 112, out_w: 112 }, 2),
+            (Conv { c_in: 128, c_out: 256, k: 3, out_h: 56, out_w: 56 }, 3),
+            (Conv { c_in: 256, c_out: 512, k: 3, out_h: 28, out_w: 28 }, 3),
+            (Conv { c_in: 512, c_out: 512, k: 3, out_h: 14, out_w: 14 }, 3),
+            (Fc { n: 25088, m: 4096, tokens: 1 }, 1),
+            (Fc { n: 4096, m: 4096, tokens: 1 }, 1),
+            (Fc { n: 4096, m: 1000, tokens: 1 }, 1),
+        ]),
+        // Aggregate conv budgets at published totals (params ~23.5M/5.8M/20.8M,
+        // FLOPs ~2x GMACs) — only the FC/non-FC split matters downstream.
+        cnn("ResNet-ImageNet", "ImageNet", vec![
+            (Conv { c_in: 512, c_out: 512, k: 3, out_h: 44, out_w: 44 }, 10),
+            (Fc { n: 2048, m: 1000, tokens: 1 }, 1),
+        ]),
+        cnn("GoogleNet-ImageNet", "ImageNet", vec![
+            (Conv { c_in: 256, c_out: 256, k: 3, out_h: 32, out_w: 32 }, 10),
+            (Fc { n: 1024, m: 1000, tokens: 1 }, 1),
+        ]),
+        cnn("Xception-ImageNet", "ImageNet", vec![
+            (Conv { c_in: 512, c_out: 512, k: 3, out_h: 41, out_w: 41 }, 9),
+            (Fc { n: 2048, m: 1000, tokens: 1 }, 1),
+        ]),
+    ]
+}
+
+/// The paper's LLM suite (Table 2). Layer counts / dims follow the table's
+/// FC multiplicities (e.g. "24*4*([1024, 1024])" = 24 blocks, 4 projections).
+pub fn llm_models() -> Vec<ModelArch> {
+    vec![
+        gpt("GPT2-Medium", 24, 1024, 1024, 50257),
+        gpt("GPT2-Large", 36, 1280, 1024, 50257),
+        gpt("GPT2-ExtraLarge", 48, 1600, 1024, 50257),
+        gpt("GPT3-Ada", 12, 768, 2048, 50257),
+        gpt("GPT3-Curie", 24, 2048, 2048, 50257),
+        gpt("GPT3-Davinci", 96, 12288, 2048, 50257),
+    ]
+}
+
+/// Look a model up by (case-insensitive) name.
+pub fn model_by_name(name: &str) -> Option<ModelArch> {
+    all_models()
+        .into_iter()
+        .find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_complete() {
+        assert_eq!(cnn_models().len(), 11);
+        assert_eq!(llm_models().len(), 6);
+        assert!(model_by_name("lenet300").is_some());
+        assert!(model_by_name("gpt3-davinci").is_some());
+        assert!(model_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn table1_fc_shapes_present() {
+        // spot-check Table 1 rows
+        let lenet5 = model_by_name("LeNet5").unwrap();
+        let shapes = lenet5.fc_shapes();
+        assert!(shapes.iter().any(|s| s.n == 400 && s.m == 120));
+        assert!(shapes.iter().any(|s| s.n == 120 && s.m == 84));
+
+        let alex = model_by_name("AlexNet-ImageNet").unwrap();
+        let shapes = alex.fc_shapes();
+        assert!(shapes.iter().any(|s| s.n == 9216 && s.m == 4096));
+
+        let vgg = model_by_name("VGG16-ImageNet").unwrap();
+        assert!(vgg.fc_shapes().iter().any(|s| s.n == 25088 && s.m == 4096));
+    }
+
+    #[test]
+    fn table2_fc_multiplicities() {
+        let m = model_by_name("GPT2-Medium").unwrap();
+        let shapes = m.fc_shapes();
+        // 24*4 projections [1024,1024]
+        assert!(shapes
+            .iter()
+            .any(|s| s.n == 1024 && s.m == 1024 && s.count == 96));
+        // 24 of [1024, 4096] and [4096, 1024]
+        assert!(shapes
+            .iter()
+            .any(|s| s.n == 1024 && s.m == 4096 && s.count == 24));
+        assert!(shapes
+            .iter()
+            .any(|s| s.n == 4096 && s.m == 1024 && s.count == 24));
+        // LM head [1024, 50257]
+        assert!(shapes.iter().any(|s| s.n == 1024 && s.m == 50257));
+    }
+
+    #[test]
+    fn lenet300_is_fc_dominated() {
+        // paper Fig. 11: 97.6% of LeNet300 execution is FC; parameter share
+        // must likewise be ~100%
+        let m = model_by_name("LeNet300").unwrap();
+        assert!(m.fc_param_share() > 99.0);
+        assert!(m.fc_flops_share() > 99.0);
+    }
+
+    #[test]
+    fn conv_models_have_low_fc_flops_share() {
+        // paper Fig. 1: conv nets burn most FLOPs outside FC
+        for name in ["VGG16-ImageNet", "ResNet-ImageNet", "Xception-ImageNet"] {
+            let m = model_by_name(name).unwrap();
+            assert!(
+                m.fc_flops_share() < 15.0,
+                "{name} fc flops share {}",
+                m.fc_flops_share()
+            );
+        }
+        // ...while FC dominates VGG16 parameters
+        let vgg = model_by_name("VGG16-ImageNet").unwrap();
+        assert!(vgg.fc_param_share() > 70.0, "{}", vgg.fc_param_share());
+    }
+
+    #[test]
+    fn llms_are_fc_dominated_in_params() {
+        for m in llm_models() {
+            assert!(
+                m.fc_param_share() > 55.0,
+                "{} share {}",
+                m.name,
+                m.fc_param_share()
+            );
+        }
+        // bigger models: larger share (embeddings amortize)
+        let ada = model_by_name("GPT3-Ada").unwrap();
+        let davinci = model_by_name("GPT3-Davinci").unwrap();
+        assert!(davinci.fc_param_share() > ada.fc_param_share());
+    }
+
+    #[test]
+    fn published_total_sanity() {
+        // GPT2-Medium ~ 350-400M params
+        let m = model_by_name("GPT2-Medium").unwrap();
+        let (fc, other) = m.params_split();
+        let total = fc + other;
+        assert!(
+            (300_000_000..500_000_000).contains(&total),
+            "GPT2-Medium total {total}"
+        );
+        // VGG16 ~ 138M params
+        let v = model_by_name("VGG16-ImageNet").unwrap();
+        let (fc, other) = v.params_split();
+        assert!(
+            (120_000_000..160_000_000).contains(&(fc + other)),
+            "VGG16 total {}",
+            fc + other
+        );
+    }
+}

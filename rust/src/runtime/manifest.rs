@@ -1,0 +1,148 @@
+//! `artifacts/manifest.json` parsing (written by python/compile/aot.py).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one executable argument.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub note: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = json::parse(text)?;
+        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::runtime("manifest format must be 'hlo-text'"));
+        }
+        if doc.get("return_tuple").and_then(Json::as_bool) != Some(true) {
+            return Err(Error::runtime("manifest must declare return_tuple=true"));
+        }
+        let arts = doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::runtime("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::runtime("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::runtime(format!("artifact {name} missing file")))?
+                .to_string();
+            let note = a.get("note").and_then(Json::as_str).unwrap_or("").to_string();
+            let args = a
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::runtime(format!("artifact {name} missing args")))?
+                .iter()
+                .map(|arg| {
+                    let shape = arg
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| Error::runtime("arg missing shape"))?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or_else(|| Error::runtime("bad dim")))
+                        .collect::<Result<Vec<_>>>()?;
+                    let dtype = arg
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(ArgSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta { name, file, args, note });
+        }
+        Ok(ArtifactManifest { artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": "hlo-text", "return_tuple": true,
+        "artifacts": [
+            {"name": "mlp_tt_b16", "file": "mlp_tt_b16.hlo.txt", "note": "x",
+             "args": [{"shape": [16, 784], "dtype": "float32"},
+                      {"shape": [1, 28, 20, 8], "dtype": "float32"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("mlp_tt_b16").unwrap();
+        assert_eq!(a.file, "mlp_tt_b16.hlo.txt");
+        assert_eq!(a.args[0].shape, vec![16, 784]);
+        assert_eq!(a.args[1].shape, vec![1, 28, 20, 8]);
+        assert_eq!(m.names(), vec!["mlp_tt_b16"]);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format_or_tuple() {
+        assert!(ArtifactManifest::parse(
+            r#"{"format": "proto", "return_tuple": true, "artifacts": []}"#
+        )
+        .is_err());
+        assert!(ArtifactManifest::parse(
+            r#"{"format": "hlo-text", "return_tuple": false, "artifacts": []}"#
+        )
+        .is_err());
+        assert!(ArtifactManifest::parse(r#"{"format": "hlo-text", "return_tuple": true}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = ArtifactManifest::load(&path).unwrap();
+            assert!(m.find("mlp_tt_b16").is_some());
+            assert!(m.find("dense_fc_784x300_b16").is_some());
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Dense row-major f32 tensor.
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+use super::shape::Shape;
+
+/// A dense, row-major, owned f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: impl Into<Vec<usize>>) -> Self {
+        let shape = Shape::new(dims);
+        let data = vec![0.0; shape.numel()];
+        Tensor { shape, data }
+    }
+
+    /// Tensor from existing data (length must match the shape).
+    pub fn from_vec(dims: impl Into<Vec<usize>>, data: Vec<f32>) -> Result<Self> {
+        let shape = Shape::new(dims);
+        if data.len() != shape.numel() {
+            return Err(Error::shape(format!(
+                "data length {} != shape {} numel {}",
+                data.len(),
+                shape,
+                shape.numel()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// N(0, sigma^2) random tensor.
+    pub fn randn(dims: impl Into<Vec<usize>>, sigma: f32, rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let data = rng.normal_vec(shape.numel(), sigma);
+        Tensor { shape, data }
+    }
+
+    /// Tensor filled with a single value.
+    pub fn full(dims: impl Into<Vec<usize>>, value: f32) -> Self {
+        let shape = Shape::new(dims);
+        let data = vec![value; shape.numel()];
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element accessor by multi-index (bounds-checked).
+    pub fn at(&self, idx: &[usize]) -> Result<f32> {
+        Ok(self.data[self.shape.offset(idx)?])
+    }
+
+    /// Mutable element accessor by multi-index (bounds-checked).
+    pub fn at_mut(&mut self, idx: &[usize]) -> Result<&mut f32> {
+        let off = self.shape.offset(idx)?;
+        Ok(&mut self.data[off])
+    }
+
+    /// Reshape in place (free: row-major data is unchanged).
+    pub fn reshape(mut self, dims: impl Into<Vec<usize>>) -> Result<Self> {
+        let new: Vec<usize> = dims.into();
+        self.shape.check_reshape(&new)?;
+        self.shape = Shape::new(new);
+        Ok(self)
+    }
+
+    /// Materialized axis permutation (copies data into the new layout).
+    pub fn transpose(&self, perm: &[usize]) -> Result<Tensor> {
+        let out_shape = self.shape.permuted(perm)?;
+        let in_strides = self.shape.strides();
+        let out_dims = out_shape.dims().to_vec();
+        let mut out = vec![0.0f32; self.numel()];
+        // walk the output in order; compute the source offset incrementally
+        let rank = out_dims.len();
+        if rank == 0 {
+            out.clone_from_slice(&self.data);
+            return Tensor::from_vec(Vec::new(), out);
+        }
+        let src_stride_for_out: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+        let mut idx = vec![0usize; rank];
+        let mut src = 0usize;
+        for slot in out.iter_mut() {
+            *slot = self.data[src];
+            // increment multi-index, updating src incrementally
+            for ax in (0..rank).rev() {
+                idx[ax] += 1;
+                src += src_stride_for_out[ax];
+                if idx[ax] < out_dims[ax] {
+                    break;
+                }
+                src -= src_stride_for_out[ax] * out_dims[ax];
+                idx[ax] = 0;
+            }
+        }
+        Ok(Tensor { shape: out_shape, data: out })
+    }
+
+    /// Elementwise maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::shape(format!(
+                "shape mismatch {} vs {}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Relative L2 error ||a-b|| / max(||b||, eps).
+    pub fn rel_l2_error(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return Err(Error::shape("shape mismatch in rel_l2_error"));
+        }
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let den: f32 = other.data.iter().map(|b| b * b).sum();
+        Ok((num.sqrt()) / den.sqrt().max(1e-20))
+    }
+
+    /// True when all elements are within `atol + rtol*|other|`.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.at(&[1, 2]).unwrap(), 5.0);
+        assert!(t.at(&[2, 0]).is_err());
+        assert!(Tensor::from_vec(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_is_free_and_checked() {
+        let t = Tensor::from_vec(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let r = t.clone().reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.reshape(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn transpose_2d_matches_manual() {
+        let t = Tensor::from_vec(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.transpose(&[1, 0]).unwrap();
+        assert_eq!(tt.dims(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip_nd() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(vec![3, 4, 5], 1.0, &mut rng);
+        let perm = [2, 0, 1];
+        let inv = [1, 2, 0];
+        let back = t.transpose(&perm).unwrap().transpose(&inv).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn transpose_matches_naive_gather() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::randn(vec![2, 3, 4, 5], 1.0, &mut rng);
+        let perm = [3, 1, 0, 2];
+        let fast = t.transpose(&perm).unwrap();
+        // naive gather
+        let d = t.dims().to_vec();
+        let mut naive = Tensor::zeros(vec![d[3], d[1], d[0], d[2]]);
+        for i0 in 0..d[0] {
+            for i1 in 0..d[1] {
+                for i2 in 0..d[2] {
+                    for i3 in 0..d[3] {
+                        *naive.at_mut(&[i3, i1, i0, i2]).unwrap() =
+                            t.at(&[i0, i1, i2, i3]).unwrap();
+                    }
+                }
+            }
+        }
+        assert_eq!(fast, naive);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(vec![2], vec![1.0, 2.5]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+        assert!(a.allclose(&b, 0.3, 0.0));
+        assert!(!a.allclose(&b, 0.1, 0.0));
+        let c = Tensor::from_vec(vec![3], vec![0.0; 3]).unwrap();
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+}

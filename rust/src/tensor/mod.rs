@@ -1,0 +1,9 @@
+//! Dense row-major f32 tensors — the substrate under the kernel engine,
+//! TT decomposition, and the serving data path.
+
+mod shape;
+mod dense;
+pub mod einsum;
+
+pub use dense::Tensor;
+pub use shape::Shape;

@@ -1,0 +1,146 @@
+//! Shapes and row-major stride arithmetic.
+
+use crate::error::{Error, Result};
+
+/// A tensor shape (row-major layout throughout the crate).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: impl Into<Vec<usize>>) -> Self {
+        Shape(dims.into())
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total element count (empty shape = scalar = 1).
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1; self.0.len()];
+        for i in (0..self.0.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.0[i + 1];
+        }
+        strides
+    }
+
+    /// Linear offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> Result<usize> {
+        if idx.len() != self.0.len() {
+            return Err(Error::shape(format!(
+                "index rank {} != shape rank {}",
+                idx.len(),
+                self.0.len()
+            )));
+        }
+        let strides = self.strides();
+        let mut off = 0;
+        for ((&i, &d), &s) in idx.iter().zip(&self.0).zip(&strides) {
+            if i >= d {
+                return Err(Error::shape(format!("index {i} out of bounds {d}")));
+            }
+            off += i * s;
+        }
+        Ok(off)
+    }
+
+    /// Validate that a reshape preserves the element count.
+    pub fn check_reshape(&self, new: &[usize]) -> Result<()> {
+        let n: usize = new.iter().product();
+        if n != self.numel() {
+            return Err(Error::shape(format!(
+                "cannot reshape {:?} ({}) into {:?} ({})",
+                self.0,
+                self.numel(),
+                new,
+                n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Shape after applying a permutation of axes.
+    pub fn permuted(&self, perm: &[usize]) -> Result<Shape> {
+        if perm.len() != self.rank() {
+            return Err(Error::shape("permutation rank mismatch"));
+        }
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if p >= perm.len() || seen[p] {
+                return Err(Error::shape(format!("invalid permutation {perm:?}")));
+            }
+            seen[p] = true;
+        }
+        Ok(Shape(perm.iter().map(|&p| self.0[p]).collect()))
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.0.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(s.numel(), 24);
+    }
+
+    #[test]
+    fn offset_and_bounds() {
+        let s = Shape::new(vec![2, 3]);
+        assert_eq!(s.offset(&[1, 2]).unwrap(), 5);
+        assert!(s.offset(&[2, 0]).is_err());
+        assert!(s.offset(&[0]).is_err());
+    }
+
+    #[test]
+    fn reshape_check() {
+        let s = Shape::new(vec![6, 4]);
+        assert!(s.check_reshape(&[2, 3, 4]).is_ok());
+        assert!(s.check_reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn permutation_validation() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.permuted(&[2, 0, 1]).unwrap().dims(), &[4, 2, 3]);
+        assert!(s.permuted(&[0, 0, 1]).is_err());
+        assert!(s.permuted(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Shape::new(Vec::new());
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.offset(&[]).unwrap(), 0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Reference TT forward pass (paper Listing 1) and dense reconstruction.
+//!
+//! These are the *correctness* paths: the serving engine uses the optimized
+//! kernel pipeline in [`crate::kernels`], which is tested against this
+//! module. Mirrors `python/compile/kernels/ref.py` (`tt_forward_ref`,
+//! `tt_reconstruct`).
+
+use crate::error::{Error, Result};
+use crate::tensor::einsum::tt_einsum_ref;
+use crate::tensor::Tensor;
+
+/// Forward pass `Y = X W^T + b` through the einsum chain.
+///
+/// `x` is `(B, N)`; cores are T3F `(r_{t-1}, n_t, m_t, r_t)`; result is
+/// `(B, M)`.
+pub fn tt_forward(cores: &[Tensor], x: &Tensor, bias: Option<&[f32]>) -> Result<Tensor> {
+    let dx = x.dims();
+    if dx.len() != 2 {
+        return Err(Error::shape("tt_forward expects (B, N) input"));
+    }
+    let batch = dx[0];
+    let n_total: usize = cores.iter().map(|c| c.dims()[1]).product();
+    let m_total: usize = cores.iter().map(|c| c.dims()[2]).product();
+    if dx[1] != n_total {
+        return Err(Error::shape(format!(
+            "input width {} != prod(n_t) {}",
+            dx[1], n_total
+        )));
+    }
+    let mut cur = x.clone().reshape(vec![batch * n_total])?;
+    for core in cores.iter().rev() {
+        let [_, n_t, _, r_t] = [
+            core.dims()[0],
+            core.dims()[1],
+            core.dims()[2],
+            core.dims()[3],
+        ];
+        let size = cur.numel();
+        if size % (n_t * r_t) != 0 {
+            return Err(Error::shape(format!(
+                "chain size {size} not divisible by n_t*r_t = {}",
+                n_t * r_t
+            )));
+        }
+        let b_t = size / (n_t * r_t);
+        let slab = cur.reshape(vec![b_t, n_t, r_t])?;
+        let out = tt_einsum_ref(core, &slab)?; // (m_t, b_t, r_prev)
+        let total = out.numel();
+        cur = out.reshape(vec![total])?;
+    }
+    // final layout: (i_1..i_d, batch) = (M, B) row-major -> transpose
+    let y = cur.reshape(vec![m_total, batch])?.transpose(&[1, 0])?;
+    match bias {
+        None => Ok(y),
+        Some(b) => {
+            if b.len() != m_total {
+                return Err(Error::shape(format!(
+                    "bias len {} != M {m_total}",
+                    b.len()
+                )));
+            }
+            let mut y = y;
+            for row in 0..batch {
+                let slice = &mut y.data_mut()[row * m_total..(row + 1) * m_total];
+                for (v, &bv) in slice.iter_mut().zip(b) {
+                    *v += bv;
+                }
+            }
+            Ok(y)
+        }
+    }
+}
+
+/// Densify cores back to `W (M, N)` (row-major multi-index convention).
+pub fn reconstruct(cores: &[Tensor]) -> Result<Tensor> {
+    if cores.is_empty() {
+        return Err(Error::shape("reconstruct of empty core list"));
+    }
+    // acc carries (M_t, N_t, r_t); start with (1, 1, 1) identity
+    let mut acc = Tensor::from_vec(vec![1, 1, 1], vec![1.0])?;
+    for core in cores {
+        let [r_prev, n_t, m_t, r_t] = [
+            core.dims()[0],
+            core.dims()[1],
+            core.dims()[2],
+            core.dims()[3],
+        ];
+        let (mp, np_, rp) = (acc.dims()[0], acc.dims()[1], acc.dims()[2]);
+        if rp != r_prev {
+            return Err(Error::shape(format!(
+                "core rank mismatch: acc r {rp} vs core r_prev {r_prev}"
+            )));
+        }
+        // next[Pm, m, Qn, n, r] = sum_rp acc[Pm, Qn, rp] * core[rp, n, m, r]
+        let mut next = Tensor::zeros(vec![mp, m_t, np_, n_t, r_t]);
+        {
+            let ad = acc.data();
+            let cd = core.data();
+            let nd = next.data_mut();
+            for pm in 0..mp {
+                for mi in 0..m_t {
+                    for qn in 0..np_ {
+                        for ni in 0..n_t {
+                            let out_base = (((pm * m_t + mi) * np_ + qn) * n_t + ni) * r_t;
+                            for ri in 0..r_t {
+                                let mut s = 0.0f32;
+                                for rpi in 0..rp {
+                                    let a = ad[(pm * np_ + qn) * rp + rpi];
+                                    let c = cd[((rpi * n_t + ni) * m_t + mi) * r_t + ri];
+                                    s += a * c;
+                                }
+                                nd[out_base + ri] = s;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        acc = next.reshape(vec![mp * m_t, np_ * n_t, r_t])?;
+    }
+    let (m, n, r) = (acc.dims()[0], acc.dims()[1], acc.dims()[2]);
+    if r != 1 {
+        return Err(Error::shape(format!("trailing rank {r} != 1")));
+    }
+    acc.reshape(vec![m, n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::einsum::fc_batched_ref;
+    use crate::ttd::decompose::random_cores;
+    use crate::ttd::TtLayout;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn forward_equals_dense_reconstruction() {
+        let mut rng = Rng::new(31);
+        for (ms, ns, r) in [
+            (vec![4u64, 3], vec![5u64, 2], 2u64),
+            (vec![5, 3, 2], vec![2, 7, 14], 4),
+            (vec![2, 2, 2, 2], vec![3, 2, 2, 2], 3),
+        ] {
+            let layout = TtLayout::with_uniform_rank(ms, ns, r).unwrap();
+            let tt = random_cores(&layout, &mut rng);
+            let w = reconstruct(&tt.cores).unwrap();
+            let x = Tensor::randn(vec![4, layout.n_total() as usize], 1.0, &mut rng);
+            let got = tt_forward(&tt.cores, &x, None).unwrap();
+            let want = fc_batched_ref(&w, &x, None).unwrap();
+            assert!(
+                got.allclose(&want, 1e-3, 1e-4),
+                "{} maxdiff {}",
+                layout.describe(),
+                got.max_abs_diff(&want).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn forward_with_bias() {
+        let mut rng = Rng::new(32);
+        let layout = TtLayout::with_uniform_rank(vec![4, 3], vec![3, 4], 2).unwrap();
+        let tt = random_cores(&layout, &mut rng);
+        let bias: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let x = Tensor::randn(vec![2, 12], 1.0, &mut rng);
+        let plain = tt_forward(&tt.cores, &x, None).unwrap();
+        let biased = tt_forward(&tt.cores, &x, Some(&bias)).unwrap();
+        for b in 0..2 {
+            for m in 0..12 {
+                let d = biased.at(&[b, m]).unwrap() - plain.at(&[b, m]).unwrap();
+                assert!((d - m as f32).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        let mut rng = Rng::new(33);
+        let layout = TtLayout::with_uniform_rank(vec![5, 2], vec![2, 5], 3).unwrap();
+        let tt = random_cores(&layout, &mut rng);
+        let x = Tensor::randn(vec![6, 10], 1.0, &mut rng);
+        let full = tt_forward(&tt.cores, &x, None).unwrap();
+        for b in 0..6 {
+            let row = Tensor::from_vec(vec![1, 10], x.data()[b * 10..(b + 1) * 10].to_vec())
+                .unwrap();
+            let single = tt_forward(&tt.cores, &row, None).unwrap();
+            for m in 0..10 {
+                let a = full.at(&[b, m]).unwrap();
+                let s = single.at(&[0, m]).unwrap();
+                assert!((a - s).abs() < 1e-4, "b={b} m={m}: {a} vs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn error_paths() {
+        let mut rng = Rng::new(34);
+        let layout = TtLayout::with_uniform_rank(vec![4, 3], vec![5, 2], 2).unwrap();
+        let tt = random_cores(&layout, &mut rng);
+        // wrong input width
+        let x = Tensor::zeros(vec![2, 11]);
+        assert!(tt_forward(&tt.cores, &x, None).is_err());
+        // wrong bias length
+        let x = Tensor::zeros(vec![2, 10]);
+        assert!(tt_forward(&tt.cores, &x, Some(&[0.0; 5])).is_err());
+        // empty cores
+        assert!(reconstruct(&[]).is_err());
+    }
+
+    #[test]
+    fn reconstruct_d1_is_transposed_core() {
+        // single core (1, n, m, 1): W[i, j] = G[0, j, i, 0]
+        let mut rng = Rng::new(35);
+        let g = Tensor::randn(vec![1, 3, 4, 1], 1.0, &mut rng);
+        let w = reconstruct(std::slice::from_ref(&g)).unwrap();
+        assert_eq!(w.dims(), &[4, 3]);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert_eq!(
+                    w.at(&[i, j]).unwrap(),
+                    g.at(&[0, j, i, 0]).unwrap()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Closed-form cost models for a TT layout (paper Eq. 4, 11, 13) and the
+//! per-Einsum kernel dimensions used by the compiler and the DSE engine.
+
+use super::TtLayout;
+
+/// Paper Eq. 4: parameters of the factorized layer (cores + bias).
+pub fn params(layout: &TtLayout) -> u64 {
+    let mut total = layout.m_total(); // bias
+    for t in 0..layout.d() {
+        let [r0, n, m, r1] = layout.core_shape(t);
+        total += (r0 * n * m * r1) as u64;
+    }
+    total
+}
+
+/// Parameters of the *unfactorized* layer (`M*N` weights + `M` bias).
+pub fn dense_params(m: u64, n: u64) -> u64 {
+    m * n + m
+}
+
+/// Paper Eq. 13: FLOPs of the Einsum at level `t` (1-based, t = 1..=d):
+/// `2 * r_t * r_{t-1} * m_t*..*m_d * n_1*..*n_t`.
+pub fn flops_level(layout: &TtLayout, t: usize) -> u64 {
+    debug_assert!((1..=layout.d()).contains(&t));
+    let ranks = layout.ranks();
+    let mut term = 2 * ranks[t] * ranks[t - 1];
+    for &m in &layout.m_shape()[t - 1..] {
+        term *= m;
+    }
+    for &n in &layout.n_shape()[..t] {
+        term *= n;
+    }
+    term
+}
+
+/// Paper Eq. 11: total FLOPs of the einsum chain plus bias adds.
+pub fn flops(layout: &TtLayout) -> u64 {
+    let mut total = layout.m_total(); // bias adds
+    for t in 1..=layout.d() {
+        total += flops_level(layout, t);
+    }
+    total
+}
+
+/// FLOPs of the unfactorized layer: `2*M*N` MAC + `M` bias.
+pub fn dense_flops(m: u64, n: u64) -> u64 {
+    2 * m * n + m
+}
+
+/// Which of the paper's three kernel variants an Einsum instance is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EinsumKind {
+    /// t = d (processed first): contracted rank extent k = r_d = 1.
+    First,
+    /// 1 < t < d.
+    Middle,
+    /// t = 1 (processed last): output rank extent r = r_0 = 1.
+    Final,
+}
+
+/// Concrete loop bounds of one Einsum kernel instance
+/// (`Out[m, b, r] += G[r, n, m, k] * In[b, n, k]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EinsumDims {
+    pub kind: EinsumKind,
+    /// Output feature extent `m_t`.
+    pub m: usize,
+    /// Slab extent `b_t` (depends on batch and chain position).
+    pub b: usize,
+    /// Contracted input factor `n_t`.
+    pub n: usize,
+    /// Output rank extent (`r_{t-1}`; the paper Listing 2's `rt`).
+    pub r: usize,
+    /// Contracted rank extent (`r_t`; the paper Listing 2's `rt_1`).
+    pub k: usize,
+}
+
+impl EinsumDims {
+    /// FLOPs of this instance (2 per MAC).
+    pub fn flops(&self) -> u64 {
+        2 * (self.m * self.b * self.r * self.n * self.k) as u64
+    }
+
+    /// Bytes touched assuming each array element is loaded/stored once
+    /// (compulsory traffic; f32).
+    pub fn min_bytes(&self) -> u64 {
+        let g = self.r * self.n * self.m * self.k;
+        let input = self.b * self.n * self.k;
+        let out = self.m * self.b * self.r;
+        4 * (g + input + out) as u64
+    }
+
+    /// Arithmetic intensity (FLOPs per compulsory byte).
+    pub fn intensity(&self) -> f64 {
+        self.flops() as f64 / self.min_bytes() as f64
+    }
+}
+
+/// The Einsum chain a TT layout executes for batch size `batch`, in
+/// processing order (t = d down to t = 1) — paper Listing 1.
+pub fn einsum_chain(layout: &TtLayout, batch: usize) -> Vec<EinsumDims> {
+    let d = layout.d();
+    let mut out = Vec::with_capacity(d);
+    let mut cur_size = batch as u64 * layout.n_total();
+    for t in (0..d).rev() {
+        let [r_prev, n_t, m_t, r_t] = layout.core_shape(t);
+        let b_t = cur_size / (n_t as u64 * r_t as u64);
+        let kind = if t == d - 1 && d > 1 {
+            EinsumKind::First
+        } else if t == 0 {
+            EinsumKind::Final
+        } else {
+            EinsumKind::Middle
+        };
+        out.push(EinsumDims {
+            kind,
+            m: m_t,
+            b: b_t as usize,
+            n: n_t,
+            r: r_prev,
+            k: r_t,
+        });
+        cur_size = m_t as u64 * b_t * r_prev as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::TtLayout;
+
+    fn example() -> TtLayout {
+        TtLayout::new(
+            vec![5, 5, 3, 2, 2],
+            vec![2, 2, 2, 7, 14],
+            vec![1, 10, 10, 10, 10, 1],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn params_eq4_running_example() {
+        // cores: 1*2*5*10 + 10*2*5*10 + 10*2*3*10 + 10*7*2*10 + 10*14*2*1
+        assert_eq!(params(&example()), 300 + 100 + 1000 + 600 + 1400 + 280);
+        assert_eq!(dense_params(300, 784), 300 * 784 + 300);
+    }
+
+    #[test]
+    fn flops_eq11_cross_checked_with_python_fixture() {
+        // mirrors python/tests/test_kernel.py::test_flops_eq11_is_sum_of_eq13_terms
+        let l = TtLayout::new(vec![5, 3, 2], vec![2, 7, 14], vec![1, 4, 4, 1]).unwrap();
+        let e1 = 2 * 4 * (5 * 3 * 2) * 2;
+        let e2 = 2 * 4 * 4 * (3 * 2) * (2 * 7);
+        let e3 = 2 * 4 * 2 * (2 * 7 * 14);
+        assert_eq!(flops(&l), (5 * 3 * 2) + e1 + e2 + e3);
+        assert_eq!(flops_level(&l, 1), e1);
+        assert_eq!(flops_level(&l, 2), e2);
+        assert_eq!(flops_level(&l, 3), e3);
+    }
+
+    #[test]
+    fn chain_flops_sum_matches_eq11() {
+        // chain with batch=1 must reproduce Eq. 11 exactly (minus bias adds)
+        for layout in [
+            example(),
+            TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap(),
+            TtLayout::with_uniform_rank(vec![10, 10, 3], vec![4, 8, 16], 4).unwrap(),
+        ] {
+            let chain = einsum_chain(&layout, 1);
+            let total: u64 = chain.iter().map(|e| e.flops()).sum();
+            assert_eq!(total + layout.m_total(), flops(&layout), "{}", layout.describe());
+        }
+    }
+
+    #[test]
+    fn chain_kinds_and_batch_scaling() {
+        let l = example();
+        let chain = einsum_chain(&l, 1);
+        assert_eq!(chain.len(), 5);
+        assert_eq!(chain[0].kind, EinsumKind::First);
+        assert_eq!(chain[0].k, 1);
+        assert!(matches!(chain[1].kind, EinsumKind::Middle));
+        assert_eq!(chain[4].kind, EinsumKind::Final);
+        assert_eq!(chain[4].r, 1);
+        // doubling batch doubles every slab extent
+        let chain2 = einsum_chain(&l, 2);
+        for (a, b) in chain.iter().zip(&chain2) {
+            assert_eq!(2 * a.b, b.b);
+        }
+    }
+
+    #[test]
+    fn chain_shapes_consistent() {
+        // slab input size of step i+1 equals output size of step i
+        let l = TtLayout::with_uniform_rank(vec![8, 8, 4], vec![4, 8, 8], 8).unwrap();
+        let chain = einsum_chain(&l, 3);
+        for w in chain.windows(2) {
+            let out_size = w[0].m * w[0].b * w[0].r;
+            let in_size = w[1].b * w[1].n * w[1].k;
+            assert_eq!(out_size, in_size);
+        }
+        // final output size = batch * M
+        let last = chain.last().unwrap();
+        assert_eq!(last.m * last.b * last.r, 3 * 8 * 8 * 4);
+    }
+
+    #[test]
+    fn d1_layout_is_single_final_einsum() {
+        let l = TtLayout::new(vec![6], vec![9], vec![1, 1]).unwrap();
+        let chain = einsum_chain(&l, 2);
+        assert_eq!(chain.len(), 1);
+        assert_eq!(chain[0].kind, EinsumKind::Final);
+    }
+
+    #[test]
+    fn compression_wins_for_paper_example() {
+        let l = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        assert!(params(&l) < dense_params(300, 784));
+        assert!(flops(&l) < dense_flops(300, 784));
+    }
+
+    #[test]
+    fn intensity_is_low_memory_bound() {
+        // the paper calls these kernels memory-bound; check intensity < 10
+        let l = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        for e in einsum_chain(&l, 1) {
+            assert!(e.intensity() < 10.0, "{e:?} intensity {}", e.intensity());
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! TT-SVD: decompose a dense FC weight matrix into T3F cores
+//! (Oseledets 2011, adapted to the TT-matrix index convention of
+//! Novikov et al. / T3F used throughout the paper).
+//!
+//! The weight matrix `W (M, N)` is first regarded as a 2d-way tensor with
+//! combined modes `k_t = (i_t, j_t)` (output factor major), then swept with
+//! sequential truncated SVDs. The resulting cores have the T3F shape
+//! `(r_{t-1}, n_t, m_t, r_t)` so they drop straight into the einsum chain,
+//! the Pallas kernel, and the serving engine.
+
+use crate::error::{Error, Result};
+use crate::linalg::{truncated_svd, Svd};
+use crate::tensor::Tensor;
+
+use super::{apply, TtLayout};
+
+/// A TT-decomposed FC layer: layout + concrete cores (+ optional bias).
+#[derive(Debug, Clone)]
+pub struct TtCores {
+    pub layout: TtLayout,
+    /// Core `t` has shape `(r_{t-1}, n_t, m_t, r_t)`.
+    pub cores: Vec<Tensor>,
+    pub bias: Option<Vec<f32>>,
+}
+
+impl TtCores {
+    /// Total stored parameters (cores + bias).
+    pub fn param_count(&self) -> usize {
+        self.cores.iter().map(|c| c.numel()).sum::<usize>()
+            + self.bias.as_ref().map_or(0, |b| b.len())
+    }
+
+    /// Densify back to `W (M, N)`.
+    pub fn reconstruct(&self) -> Result<Tensor> {
+        apply::reconstruct(&self.cores)
+    }
+
+    /// Relative Frobenius reconstruction error against the original matrix.
+    pub fn rel_error(&self, w: &Tensor) -> Result<f32> {
+        self.reconstruct()?.rel_l2_error(w)
+    }
+}
+
+/// Rearrange `W (M, N)` into the 2d-way tensor `A[k_1, ..., k_d]` with
+/// `k_t = i_t * n_t + j_t` (row-major), returned flat.
+fn interleave(w: &Tensor, m_shape: &[u64], n_shape: &[u64]) -> Result<Vec<f32>> {
+    let d = m_shape.len();
+    let m_total: u64 = m_shape.iter().product();
+    let n_total: u64 = n_shape.iter().product();
+    let dims = w.dims();
+    if dims != [m_total as usize, n_total as usize] {
+        return Err(Error::shape(format!(
+            "W {:?} incompatible with shapes m={m_shape:?} n={n_shape:?}",
+            dims
+        )));
+    }
+    // strides of the combined-mode tensor
+    let combined: Vec<usize> = (0..d)
+        .map(|t| (m_shape[t] * n_shape[t]) as usize)
+        .collect();
+    let mut a = vec![0.0f32; (m_total * n_total) as usize];
+    let wd = w.data();
+    let mut i_parts = vec![0usize; d];
+    let mut j_parts = vec![0usize; d];
+    for (lin, slot) in a.iter_mut().enumerate() {
+        // decompose lin into (k_1..k_d), each k_t into (i_t, j_t)
+        let mut rem = lin;
+        for t in (0..d).rev() {
+            let k_t = rem % combined[t];
+            rem /= combined[t];
+            i_parts[t] = k_t / n_shape[t] as usize;
+            j_parts[t] = k_t % n_shape[t] as usize;
+        }
+        let mut i = 0usize;
+        let mut j = 0usize;
+        for t in 0..d {
+            i = i * m_shape[t] as usize + i_parts[t];
+            j = j * n_shape[t] as usize + j_parts[t];
+        }
+        *slot = wd[i * n_total as usize + j];
+    }
+    Ok(a)
+}
+
+/// TT-SVD of `w` targeting the given layout's shapes with intermediate
+/// ranks *at most* the layout's ranks (they are clipped to the actual
+/// unfolding ranks). The returned `TtCores.layout` carries the achieved
+/// ranks.
+pub fn tt_svd(w: &Tensor, target: &TtLayout) -> Result<TtCores> {
+    let d = target.d();
+    let m_shape = target.m_shape().to_vec();
+    let n_shape = target.n_shape().to_vec();
+    let a = interleave(w, &m_shape, &n_shape)?;
+    let combined: Vec<usize> = (0..d)
+        .map(|t| (m_shape[t] * n_shape[t]) as usize)
+        .collect();
+
+    let mut cores_knm: Vec<Tensor> = Vec::with_capacity(d); // (r_prev, k_t, r_t)
+    let mut achieved = vec![1u64; d + 1];
+    let total: usize = combined.iter().product();
+    let mut cur = Tensor::from_vec(vec![combined[0], total / combined[0]], a)?;
+    let mut r_prev = 1usize;
+    for t in 0..d - 1 {
+        let rows = cur.dims()[0];
+        let cols = cur.dims()[1];
+        let cap = target.ranks()[t + 1] as usize;
+        let r_t = cap.min(rows).min(cols);
+        let Svd { u, s, vt } = truncated_svd(&cur, r_t)?;
+        let r_t = s.len();
+        achieved[t + 1] = r_t as u64;
+        // core_t = U reshaped (r_prev, k_t, r_t)
+        cores_knm.push(u.reshape(vec![r_prev, combined[t], r_t])?);
+        // cur = diag(S) * Vt, reshaped for the next unfolding
+        let mut sv = vt;
+        for (row, &sval) in s.iter().enumerate() {
+            let cols_v = sv.dims()[1];
+            for v in &mut sv.data_mut()[row * cols_v..(row + 1) * cols_v] {
+                *v *= sval;
+            }
+        }
+        let rest: usize = combined[t + 1..].iter().product();
+        debug_assert_eq!(sv.numel(), r_t * rest);
+        let next_cols = rest / combined[t + 1];
+        cur = sv.reshape(vec![r_t * combined[t + 1], next_cols])?;
+        r_prev = r_t;
+        let _ = (rows, cols);
+    }
+    // last core: (r_prev, k_d, 1)
+    cores_knm.push(cur.reshape(vec![r_prev, combined[d - 1], 1])?);
+
+    // split k_t = (i_t, j_t) and swap to T3F order (r_prev, n_t, m_t, r_t)
+    let mut cores = Vec::with_capacity(d);
+    for (t, c) in cores_knm.into_iter().enumerate() {
+        let r0 = achieved[t] as usize;
+        let r1 = achieved[t + 1] as usize;
+        let mt = m_shape[t] as usize;
+        let nt = n_shape[t] as usize;
+        let c = c
+            .reshape(vec![r0, mt, nt, r1])?
+            .transpose(&[0, 2, 1, 3])?;
+        cores.push(c);
+    }
+
+    let layout = TtLayout::new(m_shape, n_shape, achieved)?;
+    Ok(TtCores { layout, cores, bias: None })
+}
+
+/// Random TT cores for a layout (the Rust analogue of `t3f.random_matrix`);
+/// per-core sigma chosen so the reconstructed W has roughly Glorot variance.
+pub fn random_cores(layout: &TtLayout, rng: &mut crate::util::prng::Rng) -> TtCores {
+    let d = layout.d();
+    let m_total = layout.m_total() as f64;
+    let n_total = layout.n_total() as f64;
+    let rank_paths: f64 = layout.ranks()[1..d].iter().map(|&r| r as f64).product();
+    let target_var = 2.0 / (m_total + n_total);
+    let core_sigma = ((target_var / rank_paths).powf(1.0 / d as f64)).sqrt() as f32;
+    let cores = layout
+        .core_shapes()
+        .into_iter()
+        .map(|s| Tensor::randn(s.to_vec(), core_sigma, rng))
+        .collect();
+    TtCores { layout: layout.clone(), cores, bias: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ttd::apply;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn exact_recovery_of_tt_structured_matrix() {
+        // build a random TT matrix of rank 3, decompose at rank >= 3: exact
+        let mut rng = Rng::new(21);
+        let layout = TtLayout::with_uniform_rank(vec![4, 3], vec![5, 2], 3).unwrap();
+        let truth = random_cores(&layout, &mut rng);
+        let w = truth.reconstruct().unwrap();
+        let target = TtLayout::with_uniform_rank(vec![4, 3], vec![5, 2], 6).unwrap();
+        let tt = tt_svd(&w, &target).unwrap();
+        let err = tt.rel_error(&w).unwrap();
+        assert!(err < 1e-4, "err {err}");
+        // achieved rank must not exceed the true rank
+        assert!(tt.layout.ranks()[1] <= 10);
+    }
+
+    #[test]
+    fn full_rank_decomposition_is_exact() {
+        let mut rng = Rng::new(22);
+        let w = Tensor::randn(vec![12, 10], 1.0, &mut rng);
+        // ranks high enough to be unconstrained
+        let target = TtLayout::new(vec![4, 3], vec![2, 5], vec![1, 999, 1]).unwrap();
+        let tt = tt_svd(&w, &target).unwrap();
+        assert!(tt.rel_error(&w).unwrap() < 1e-4);
+        // achieved rank clipped to min unfolding dim (4*2 = 8)
+        assert_eq!(tt.layout.ranks()[1], 8);
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(vec![30, 16], 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for r in [1u64, 2, 4, 8] {
+            let target = TtLayout::with_uniform_rank(vec![6, 5], vec![4, 4], r).unwrap();
+            let err = tt_svd(&w, &target).unwrap().rel_error(&w).unwrap();
+            assert!(err <= last + 1e-5, "rank {r}: {err} > {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn cores_have_layout_shapes_and_forward_works() {
+        let mut rng = Rng::new(24);
+        let w = Tensor::randn(vec![300, 784], 0.1, &mut rng);
+        let target = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        let tt = tt_svd(&w, &target).unwrap();
+        for (t, c) in tt.cores.iter().enumerate() {
+            assert_eq!(c.dims(), tt.layout.core_shape(t));
+        }
+        // forward through the einsum chain approximates dense forward
+        let x = Tensor::randn(vec![3, 784], 1.0, &mut rng);
+        let approx = apply::tt_forward(&tt.cores, &x, None).unwrap();
+        let w_hat = tt.reconstruct().unwrap();
+        let exact = crate::tensor::einsum::fc_batched_ref(&w_hat, &x, None).unwrap();
+        assert!(approx.allclose(&exact, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn d3_roundtrip() {
+        let mut rng = Rng::new(25);
+        let layout = TtLayout::with_uniform_rank(vec![3, 2, 2], vec![2, 3, 2], 2).unwrap();
+        let truth = random_cores(&layout, &mut rng);
+        let w = truth.reconstruct().unwrap();
+        assert_eq!(w.dims(), &[12, 12]);
+        let target = TtLayout::with_uniform_rank(vec![3, 2, 2], vec![2, 3, 2], 12).unwrap();
+        let tt = tt_svd(&w, &target).unwrap();
+        assert!(tt.rel_error(&w).unwrap() < 1e-4);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let w = Tensor::zeros(vec![10, 10]);
+        let target = TtLayout::with_uniform_rank(vec![5, 3], vec![5, 2], 2).unwrap();
+        assert!(tt_svd(&w, &target).is_err()); // 5*3 != 10
+    }
+
+    #[test]
+    fn param_count_includes_bias() {
+        let mut rng = Rng::new(26);
+        let layout = TtLayout::with_uniform_rank(vec![4, 3], vec![5, 2], 2).unwrap();
+        let mut tt = random_cores(&layout, &mut rng);
+        let base = tt.param_count();
+        tt.bias = Some(vec![0.0; 12]);
+        assert_eq!(tt.param_count(), base + 12);
+    }
+}

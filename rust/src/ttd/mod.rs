@@ -1,0 +1,177 @@
+//! Tensor-Train decomposition of FC layers — the T3F formulation the paper
+//! builds on (paper §2).
+//!
+//! * [`TtLayout`] — a validated (m-shape, n-shape, rank-list) triple.
+//! * [`cost`] — the paper's closed-form parameter (Eq. 4) and FLOP
+//!   (Eq. 11/13) models, plus per-Einsum kernel dimensions.
+//! * [`decompose`] — TT-SVD of a dense weight matrix into T3F cores.
+//! * [`apply`] — reference forward pass (einsum chain, Listing 1) and dense
+//!   reconstruction.
+
+pub mod cost;
+pub mod decompose;
+pub mod apply;
+
+use crate::error::{Error, Result};
+use crate::factor;
+
+/// A validated TT-matrix layout for an FC layer `y = Wx + b`,
+/// `W (M, N)` with `M = prod(m_shape)`, `N = prod(n_shape)`.
+///
+/// Cores have T3F shape `(r_{t-1}, n_t, m_t, r_t)`; `ranks` has length
+/// `d + 1` with `ranks[0] == ranks[d] == 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TtLayout {
+    m_shape: Vec<u64>,
+    n_shape: Vec<u64>,
+    ranks: Vec<u64>,
+}
+
+impl TtLayout {
+    pub fn new(m_shape: Vec<u64>, n_shape: Vec<u64>, ranks: Vec<u64>) -> Result<Self> {
+        let d = m_shape.len();
+        if d == 0 || n_shape.len() != d {
+            return Err(Error::layout(format!(
+                "shape lengths differ: m {} vs n {}",
+                d,
+                n_shape.len()
+            )));
+        }
+        if ranks.len() != d + 1 {
+            return Err(Error::layout(format!(
+                "rank list must have d+1 = {} entries, got {}",
+                d + 1,
+                ranks.len()
+            )));
+        }
+        if ranks[0] != 1 || ranks[d] != 1 {
+            return Err(Error::layout("boundary ranks r_0 and r_d must be 1"));
+        }
+        if m_shape.iter().chain(&n_shape).any(|&f| f == 0)
+            || ranks.iter().any(|&r| r == 0)
+        {
+            return Err(Error::layout("zero factor or rank"));
+        }
+        Ok(TtLayout { m_shape, n_shape, ranks })
+    }
+
+    /// Layout with every intermediate rank equal to `r` (the paper's "R").
+    pub fn with_uniform_rank(m_shape: Vec<u64>, n_shape: Vec<u64>, r: u64) -> Result<Self> {
+        let d = m_shape.len();
+        let mut ranks = vec![r; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        TtLayout::new(m_shape, n_shape, ranks)
+    }
+
+    /// Configuration length `d` (number of cores / Einsum layers).
+    pub fn d(&self) -> usize {
+        self.m_shape.len()
+    }
+
+    pub fn m_shape(&self) -> &[u64] {
+        &self.m_shape
+    }
+
+    pub fn n_shape(&self) -> &[u64] {
+        &self.n_shape
+    }
+
+    pub fn ranks(&self) -> &[u64] {
+        &self.ranks
+    }
+
+    /// Output dimension `M`.
+    pub fn m_total(&self) -> u64 {
+        self.m_shape.iter().product()
+    }
+
+    /// Input dimension `N`.
+    pub fn n_total(&self) -> u64 {
+        self.n_shape.iter().product()
+    }
+
+    /// Core `t` (0-based) shape `(r_{t-1}, n_t, m_t, r_t)`.
+    pub fn core_shape(&self, t: usize) -> [usize; 4] {
+        [
+            self.ranks[t] as usize,
+            self.n_shape[t] as usize,
+            self.m_shape[t] as usize,
+            self.ranks[t + 1] as usize,
+        ]
+    }
+
+    /// All core shapes, t = 0..d.
+    pub fn core_shapes(&self) -> Vec<[usize; 4]> {
+        (0..self.d()).map(|t| self.core_shape(t)).collect()
+    }
+
+    /// Is this layout aligned per the paper's Definition 1?
+    pub fn is_aligned(&self) -> bool {
+        factor::is_aligned(&self.m_shape, &self.n_shape)
+    }
+
+    /// Are all intermediate ranks within the TT rank bound?
+    pub fn ranks_feasible(&self) -> bool {
+        (1..self.d()).all(|t| {
+            self.ranks[t] <= factor::max_rank_at(&self.m_shape, &self.n_shape, t)
+        })
+    }
+
+    /// Compact display string, e.g. `m=[5,5,3]x n=[2,7,14] r=[1,8,8,1]`.
+    pub fn describe(&self) -> String {
+        format!(
+            "m={:?} n={:?} r={:?}",
+            self.m_shape, self.n_shape, self.ranks
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_running_example_layout() {
+        let l = TtLayout::new(
+            vec![5, 5, 3, 2, 2],
+            vec![2, 2, 2, 7, 14],
+            vec![1, 10, 10, 10, 10, 1],
+        )
+        .unwrap();
+        assert_eq!(l.d(), 5);
+        assert_eq!(l.m_total(), 300);
+        assert_eq!(l.n_total(), 784);
+        // paper Sec. 2: G^0..G^4 shapes
+        assert_eq!(l.core_shape(0), [1, 2, 5, 10]);
+        assert_eq!(l.core_shape(1), [10, 2, 5, 10]);
+        assert_eq!(l.core_shape(2), [10, 2, 3, 10]);
+        assert_eq!(l.core_shape(3), [10, 7, 2, 10]);
+        assert_eq!(l.core_shape(4), [10, 14, 2, 1]);
+        assert!(l.is_aligned());
+    }
+
+    #[test]
+    fn validation_failures() {
+        assert!(TtLayout::new(vec![2], vec![2, 2], vec![1, 1]).is_err());
+        assert!(TtLayout::new(vec![2, 2], vec![2, 2], vec![1, 1]).is_err());
+        assert!(TtLayout::new(vec![2, 2], vec![2, 2], vec![2, 4, 1]).is_err());
+        assert!(TtLayout::new(vec![2, 2], vec![2, 2], vec![1, 0, 1]).is_err());
+        assert!(TtLayout::new(vec![], vec![], vec![1]).is_err());
+    }
+
+    #[test]
+    fn uniform_rank_constructor() {
+        let l = TtLayout::with_uniform_rank(vec![4, 4], vec![8, 8], 16).unwrap();
+        assert_eq!(l.ranks(), &[1, 16, 1]);
+        assert!(l.ranks_feasible()); // bound at t=1 is min(32, 32) = 32
+        let l2 = TtLayout::with_uniform_rank(vec![2, 2], vec![2, 2], 16).unwrap();
+        assert!(!l2.ranks_feasible()); // bound is 4
+    }
+
+    #[test]
+    fn misaligned_layout_detected() {
+        let l = TtLayout::with_uniform_rank(vec![2, 5], vec![2, 2], 2).unwrap();
+        assert!(!l.is_aligned()); // m ascending = not aligned
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny leveled stderr logger (the `log` facade is not wired offline).
+//!
+//! Level is taken from `TTRV_LOG` (error|warn|info|debug|trace), default
+//! `info`. Usage: `log::info!(...)`-style via the exported macros `tinfo!`,
+//! `twarn!`, `tdebug!`, `terror!`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+/// Severity levels, ascending verbosity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: Once = Once::new();
+
+fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("TTRV_LOG") {
+            let lvl = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            };
+            LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Override the level programmatically (tests, CLI `-v`).
+pub fn set_level(level: Level) {
+    init_from_env();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is the given level enabled?
+pub fn enabled(level: Level) -> bool {
+    init_from_env();
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Internal sink for the macros.
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[ttrv {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! terror {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! twarn {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! tinfo {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! tdebug {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_output() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,51 @@
+//! Small self-contained utilities (offline image: no external crates).
+
+pub mod prng;
+pub mod stats;
+pub mod timer;
+pub mod json;
+pub mod log;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(a: usize, m: usize) -> usize {
+    ceil_div(a, m) * m
+}
+
+/// Human-readable engineering notation, e.g. `9.5e8 -> "9.5E+08"` (the
+/// format used in the paper's Tables 1-2).
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    format!("{mant:.1}E{exp:+03}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_and_round_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+    }
+
+    #[test]
+    fn sci_matches_paper_format() {
+        assert_eq!(sci(9.5e8), "9.5E+08");
+        assert_eq!(sci(4.9e33), "4.9E+33");
+        assert_eq!(sci(0.0), "0");
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock timing helpers for the bench harness and coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure one invocation of `f`, returning (result, elapsed seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly until at least `min_time` has elapsed *and* at least
+/// `min_iters` iterations have run; returns per-iteration seconds samples.
+pub fn time_iters(
+    mut f: impl FnMut(),
+    min_iters: usize,
+    min_time: Duration,
+) -> Vec<f64> {
+    let mut samples = Vec::with_capacity(min_iters.max(8));
+    let deadline = Instant::now() + min_time;
+    loop {
+        let start = Instant::now();
+        f();
+        samples.push(start.elapsed().as_secs_f64());
+        if samples.len() >= min_iters && Instant::now() >= deadline {
+            break;
+        }
+        // hard cap so accidental O(huge) workloads terminate
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples
+}
+
+/// A stopwatch accumulating named phase durations (coordinator metrics).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    phases: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or switch to) the named phase, closing any open phase.
+    pub fn phase(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Close the open phase, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, start)) = self.current.take() {
+            self.phases.push((name, start.elapsed()));
+        }
+    }
+
+    /// Accumulated (name, seconds) pairs, merged by name.
+    pub fn totals(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = Vec::new();
+        for (name, dur) in &self.phases {
+            match out.iter_mut().find(|(n, _)| n == name) {
+                Some((_, acc)) => *acc += dur.as_secs_f64(),
+                None => out.push((name.clone(), dur.as_secs_f64())),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_value_and_positive_time() {
+        let (v, t) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn time_iters_respects_min_iters() {
+        let samples = time_iters(|| {}, 5, Duration::from_millis(0));
+        assert!(samples.len() >= 5);
+    }
+
+    #[test]
+    fn stopwatch_merges_phases() {
+        let mut sw = Stopwatch::new();
+        sw.phase("a");
+        sw.phase("b");
+        sw.phase("a");
+        sw.stop();
+        let totals = sw.totals();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0].0, "a");
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: DSE -> compiler -> kernel engine, over the model zoo.
+
+use ttrv::config::DseConfig;
+use ttrv::coordinator::TtFcEngine;
+use ttrv::dse;
+use ttrv::machine::MachineSpec;
+use ttrv::models;
+use ttrv::tensor::einsum::fc_batched_ref;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::decompose::{random_cores, tt_svd};
+use ttrv::ttd::{cost, TtLayout};
+use ttrv::util::prng::Rng;
+
+#[test]
+fn zoo_cnn_layers_explore_cleanly() {
+    let cfg = DseConfig::default();
+    for model in models::cnn_models() {
+        for fc in model.fc_shapes() {
+            if fc.m < 64 || fc.n < 64 {
+                continue;
+            }
+            let e = dse::explore(fc.m, fc.n, &cfg);
+            // stage monotonicity on real shapes
+            assert!(e.counts.all >= e.counts.aligned);
+            assert!(e.counts.aligned >= e.counts.vectorized as f64);
+            assert!(e.counts.vectorized >= e.counts.initial);
+            assert!(e.counts.initial >= e.counts.scalability);
+            // every sizeable layer must retain at least one solution
+            assert!(
+                !e.survivors.is_empty(),
+                "{} [{}, {}] lost all solutions",
+                model.name,
+                fc.n,
+                fc.m
+            );
+        }
+    }
+}
+
+#[test]
+fn selected_solutions_execute_and_beat_dense_flops() {
+    let cfg = DseConfig::default();
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(11);
+    // the Fig. 15 model set (Sec. 6.4 shapes)
+    for (n, m) in [(2048u64, 1000u64), (512, 512), (4096, 2048), (1024, 1000)] {
+        let e = dse::explore(m, n, &cfg);
+        let sol = dse::select_solution(&e, 8).unwrap();
+        assert_eq!(sol.layout.d(), 2, "Sec 6.4 policy picks d=2 for [{n},{m}]");
+        assert!(sol.flops < cost::dense_flops(m, n));
+        // the selected layout must compile + run through the engine
+        let tt = random_cores(&sol.layout, &mut rng);
+        let mut engine = TtFcEngine::new(&tt, &machine).unwrap();
+        let x = Tensor::randn(vec![2, n as usize], 1.0, &mut rng);
+        let w = tt.reconstruct().unwrap();
+        let got = engine.forward(&x).unwrap();
+        let want = fc_batched_ref(&w, &x, None).unwrap();
+        assert!(
+            got.allclose(&want, 1e-2, 1e-2),
+            "[{n},{m}]: maxdiff {}",
+            got.max_abs_diff(&want).unwrap()
+        );
+    }
+}
+
+#[test]
+fn dse_plus_ttsvd_roundtrip_on_real_layer_shape() {
+    // decompose an actual (random) 784x300 weight matrix with the
+    // DSE-selected layout and verify approximation + compression
+    let cfg = DseConfig::default();
+    let mut rng = Rng::new(12);
+    let e = dse::explore(300, 784, &cfg);
+    let sol = dse::select_solution(&e, 8).unwrap();
+    // a W that is exactly TT-rank 8 in the selected layout
+    let truth = random_cores(&sol.layout, &mut rng);
+    let w = truth.reconstruct().unwrap();
+    let tt = tt_svd(&w, &sol.layout).unwrap();
+    assert!(tt.rel_error(&w).unwrap() < 1e-3);
+    assert!(cost::params(&tt.layout) < cost::dense_params(300, 784) / 10);
+}
+
+#[test]
+fn alternates_allow_accuracy_fallback() {
+    // the paper's flexibility claim: a list of solutions, not just one
+    let cfg = DseConfig::default();
+    let e = dse::explore(1000, 2048, &cfg);
+    let alts = dse::select::alternates(&e, 8);
+    assert!(alts.len() >= 3, "need fallback candidates, got {}", alts.len());
+    // all alternates are valid layouts with distinct (layout, rank)
+    let mut seen = std::collections::HashSet::new();
+    for a in &alts {
+        assert!(a.layout.ranks_feasible());
+        assert!(seen.insert(format!("{}@{}", a.layout.describe(), a.rank)));
+    }
+}
+
+#[test]
+fn paper_running_example_survives_pipeline() {
+    // the Sec. 2 example (m=[5,5,3,2,2], n=[2,2,2,7,14], R=8) is aligned and
+    // must appear among enumerated solutions before the scalability cut
+    let cfg = DseConfig::default();
+    let e = dse::explore(300, 784, &cfg);
+    let target = TtLayout::with_uniform_rank(
+        vec![5, 5, 3, 2, 2],
+        vec![2, 2, 2, 7, 14],
+        8,
+    )
+    .unwrap();
+    // d=5 > 4 and light einsums -> the scalability constraint prunes it
+    let in_survivors = e.survivors.iter().any(|s| s.layout == target);
+    assert!(!in_survivors, "d=5 light config should be scalability-pruned");
+    // but the d=2 solution the paper ultimately uses survives
+    assert!(e.survivors.iter().any(|s| s.layout.d() == 2 && s.rank == 8));
+}

@@ -1,0 +1,122 @@
+//! Integration: TT-SVD compression of realistic weight matrices + engine
+//! execution — compression/accuracy invariants across layouts.
+
+use ttrv::config::DseConfig;
+use ttrv::coordinator::TtFcEngine;
+use ttrv::dse;
+use ttrv::linalg::matmul;
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::einsum::fc_batched_ref;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::decompose::tt_svd;
+use ttrv::ttd::{cost, TtLayout};
+use ttrv::util::prng::Rng;
+
+/// A synthetic "trained" weight matrix with decaying spectrum (real FC
+/// layers are approximately low-rank; pure white noise is the worst case).
+fn lowrankish(m: usize, n: usize, rng: &mut Rng) -> Tensor {
+    let k = m.min(n);
+    let u = Tensor::randn(vec![m, k], 1.0, rng);
+    let mut v = Tensor::randn(vec![k, n], 1.0, rng);
+    for (i, row) in v.data_mut().chunks_mut(n).enumerate() {
+        let scale = 1.0 / (1.0 + i as f32).powf(2.0);
+        row.iter_mut().for_each(|x| *x *= scale);
+    }
+    matmul(&u, &v).unwrap()
+}
+
+#[test]
+fn compression_error_tradeoff_is_monotone() {
+    let mut rng = Rng::new(41);
+    let w = lowrankish(120, 400, &mut rng);
+    let mut last_err = f32::INFINITY;
+    let mut last_params = 0;
+    let mut errs = Vec::new();
+    for r in [4u64, 8, 16, 32] {
+        let layout = TtLayout::with_uniform_rank(vec![12, 10], vec![20, 20], r).unwrap();
+        let tt = tt_svd(&w, &layout).unwrap();
+        let err = tt.rel_error(&w).unwrap();
+        assert!(err <= last_err + 1e-5, "rank {r}: error went up");
+        assert!(tt.param_count() >= last_params, "rank {r}: params shrank");
+        last_err = err;
+        last_params = tt.param_count();
+        errs.push(err);
+    }
+    // The TT-rank spectrum of the interleaved matricization decays much more
+    // slowly than W's own SVD spectrum (a matrix-low-rank W is NOT TT-low-
+    // rank), so assert the *tradeoff shape*, not an absolute error: strictly
+    // better at each rank and a meaningful cumulative improvement.
+    assert!(last_err < 0.85 * errs[0], "no meaningful improvement: {errs:?}");
+}
+
+#[test]
+fn engine_inference_error_bounded_by_decomposition_error() {
+    let mut rng = Rng::new(42);
+    let w = lowrankish(120, 400, &mut rng);
+    let layout = TtLayout::with_uniform_rank(vec![12, 10], vec![20, 20], 16).unwrap();
+    let mut tt = tt_svd(&w, &layout).unwrap();
+    tt.bias = Some(vec![0.0; 120]);
+    let w_hat = tt.reconstruct().unwrap();
+    let mut engine = TtFcEngine::new(&tt, &MachineSpec::spacemit_k1()).unwrap();
+    let x = Tensor::randn(vec![8, 400], 1.0, &mut rng);
+    let got = engine.forward(&x).unwrap();
+    // engine output == reconstruction output (engine adds no extra error)
+    let recon = fc_batched_ref(&w_hat, &x, Some(&vec![0.0; 120])).unwrap();
+    assert!(
+        got.allclose(&recon, 1e-3, 1e-3),
+        "engine vs reconstruction: {}",
+        got.max_abs_diff(&recon).unwrap()
+    );
+    // and approximates the original weights at the decomposition error scale
+    let exact = fc_batched_ref(&w, &x, Some(&vec![0.0; 120])).unwrap();
+    let rel = got.rel_l2_error(&exact).unwrap();
+    let decomp_rel = w_hat.rel_l2_error(&w).unwrap();
+    assert!(rel < 4.0 * decomp_rel + 1e-3, "inference rel {rel} vs decomp {decomp_rel}");
+}
+
+#[test]
+fn dse_selected_layouts_decompose_every_zoo_cnn_layer() {
+    // for each mid-size CNN FC layer: DSE-select, TT-SVD, check compression
+    let cfg = DseConfig::default();
+    let mut rng = Rng::new(43);
+    for (n, m) in [(400u64, 120u64), (512, 256)] {
+        let e = dse::explore(m, n, &cfg);
+        let sol = dse::select_solution(&e, 8).unwrap();
+        let w = lowrankish(m as usize, n as usize, &mut rng);
+        let tt = tt_svd(&w, &sol.layout).unwrap();
+        assert!(
+            (tt.param_count() as u64) < cost::dense_params(m, n),
+            "[{n},{m}] did not compress"
+        );
+        assert!(tt.rel_error(&w).unwrap() < 0.9);
+    }
+}
+
+#[test]
+fn property_ttsvd_never_increases_achieved_rank_beyond_request() {
+    ttrv::testkit::check("tt-svd rank clipping", 10, |d| {
+        let mut rng = d.rng().fork();
+        let m1 = d.usize_in(2, 6) as u64;
+        let m2 = d.usize_in(2, 6) as u64;
+        let n1 = d.usize_in(2, 6) as u64;
+        let n2 = d.usize_in(2, 6) as u64;
+        let req = d.usize_in(1, 16) as u64;
+        let w = Tensor::randn(vec![(m1 * m2) as usize, (n1 * n2) as usize], 1.0, &mut rng);
+        let layout = TtLayout::with_uniform_rank(vec![m1, m2], vec![n1, n2], req)
+            .map_err(|e| e.to_string())?;
+        let tt = tt_svd(&w, &layout).map_err(|e| e.to_string())?;
+        let achieved = tt.layout.ranks()[1];
+        let bound = (m1 * n1).min(m2 * n2);
+        if achieved > req || achieved > bound {
+            return Err(format!("achieved {achieved} > req {req} or bound {bound}"));
+        }
+        // full-rank request => exact reconstruction
+        if req >= bound {
+            let err = tt.rel_error(&w).map_err(|e| e.to_string())?;
+            if err > 1e-3 {
+                return Err(format!("full-rank not exact: {err}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,130 @@
+//! Integration: the full Table-3 CB suite, every optimization stage, every
+//! kernel variant, against the reference einsum — plus randomized sweeps.
+
+use ttrv::compiler::pipeline::{compile_stage, OptStage};
+use ttrv::compiler::{cb_suite, compile};
+use ttrv::kernels;
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::einsum::tt_einsum_ref;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{EinsumDims, EinsumKind};
+use ttrv::util::prng::Rng;
+
+fn check_dims(dims: &EinsumDims, machine: &MachineSpec, rng: &mut Rng, stage: OptStage) {
+    let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, rng);
+    let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, rng);
+    let want = tt_einsum_ref(&g, &x).unwrap();
+    let plan = compile_stage(dims, machine, stage).unwrap();
+    let pg = kernels::pack(&g, &plan).unwrap();
+    let got = kernels::execute(&plan, &pg, &x).unwrap();
+    // accumulation-order noise grows with the contraction length (reference
+    // sums sequentially, microkernels pairwise across lanes)
+    let tol = 2e-4 * ((dims.n * dims.k) as f32).sqrt().max(1.0);
+    assert!(
+        got.allclose(&want, tol, tol),
+        "{dims:?} at {stage:?}: maxdiff {} (tol {tol})",
+        got.max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn full_cb_suite_all_variants_full_pipeline() {
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(1);
+    for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+        for e in cb_suite(kind) {
+            // bound the largest b to keep runtime sane; shape structure and
+            // remainder handling is what matters for correctness
+            let mut dims = e.dims;
+            dims.b = dims.b.min(512);
+            check_dims(&dims, &machine, &mut rng, OptStage::Parallel);
+        }
+    }
+}
+
+#[test]
+fn ablation_stages_on_selected_cbs() {
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(2);
+    for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+        for e in cb_suite(kind).into_iter().step_by(3) {
+            let mut dims = e.dims;
+            dims.b = dims.b.min(128);
+            for stage in [OptStage::Naive, OptStage::VecPack, OptStage::RbTile] {
+                check_dims(&dims, &machine, &mut rng, stage);
+            }
+        }
+    }
+}
+
+#[test]
+fn host_machine_plans_also_correct() {
+    // plans for the host spec (16 vregs, 1 core) must execute correctly too
+    let machine = MachineSpec::host();
+    let mut rng = Rng::new(3);
+    for e in cb_suite(EinsumKind::Middle).into_iter().take(4) {
+        let mut dims = e.dims;
+        dims.b = dims.b.min(256);
+        check_dims(&dims, &machine, &mut rng, OptStage::Parallel);
+    }
+}
+
+#[test]
+fn randomized_shape_fuzz() {
+    let machine = MachineSpec::spacemit_k1();
+    ttrv::testkit::check("integration kernel fuzz", 60, |d| {
+        let m = d.usize_in(1, 96);
+        let b = d.usize_in(1, 96);
+        let n = d.usize_in(1, 20);
+        let (r, k) = *d.choose(&[
+            (8usize, 8usize),
+            (8, 1),
+            (1, 8),
+            (16, 16),
+            (24, 8),
+            (8, 24),
+            (1, 1),
+            (2, 2),
+        ]);
+        let kind = if k == 1 && r > 1 {
+            EinsumKind::First
+        } else if r == 1 {
+            EinsumKind::Final
+        } else {
+            EinsumKind::Middle
+        };
+        let dims = EinsumDims { kind, m, b, n, r, k };
+        let mut rng = d.rng().fork();
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+        let want = tt_einsum_ref(&g, &x).map_err(|e| e.to_string())?;
+        let plan = compile(&dims, &machine).map_err(|e| e.to_string())?;
+        let pg = kernels::pack(&g, &plan).map_err(|e| e.to_string())?;
+        let got = kernels::execute(&plan, &pg, &x).map_err(|e| e.to_string())?;
+        if got.allclose(&want, 1e-3, 1e-3) {
+            Ok(())
+        } else {
+            Err(format!("{dims:?}: {}", got.max_abs_diff(&want).unwrap()))
+        }
+    });
+}
+
+#[test]
+fn baselines_agree_with_kernel_engine() {
+    // ours, IREE-like and Pluto-like must all compute the same function
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(4);
+    for e in cb_suite(EinsumKind::Middle).into_iter().take(5) {
+        let mut dims = e.dims;
+        dims.b = dims.b.min(200);
+        let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, &mut rng);
+        let plan = compile(&dims, &machine).unwrap();
+        let pg = kernels::pack(&g, &plan).unwrap();
+        let ours = kernels::execute(&plan, &pg, &x).unwrap();
+        let iree = ttrv::baselines::iree_like::einsum(&g, &x).unwrap();
+        let pluto = ttrv::baselines::pluto_like::einsum_default(&g, &x).unwrap();
+        assert!(ours.allclose(&iree, 2e-4, 2e-4), "{}", e.id);
+        assert!(ours.allclose(&pluto, 2e-4, 2e-4), "{}", e.id);
+    }
+}

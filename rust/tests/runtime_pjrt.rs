@@ -1,0 +1,145 @@
+//! Integration: the PJRT runtime loads the AOT artifacts and its outputs
+//! match the Rust-native implementations — the cross-language correctness
+//! proof that L1 (Pallas) / L2 (JAX) / L3 (Rust) compose.
+//!
+//! Requires `make artifacts`; the tests no-op (with a loud note) otherwise.
+
+use ttrv::runtime::Runtime;
+use ttrv::tensor::einsum::{fc_batched_ref, tt_einsum_ref};
+use ttrv::tensor::Tensor;
+use ttrv::ttd::apply::tt_forward;
+use ttrv::ttd::TtLayout;
+use ttrv::util::prng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn pallas_einsum_artifact_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("tt_einsum_middle_cb5").unwrap();
+    let mut rng = Rng::new(31);
+    let g = Tensor::randn(vec![8, 7, 32, 8], 1.0, &mut rng);
+    let x = Tensor::randn(vec![9, 7, 8], 1.0, &mut rng);
+    let out = exe.run(&[g.clone(), x.clone()]).unwrap();
+    let want = tt_einsum_ref(&g, &x).unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(
+        out[0].allclose(&want, 1e-4, 1e-4),
+        "PJRT-vs-rust maxdiff {}",
+        out[0].max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn dense_fc_artifact_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("dense_fc_784x300_b16").unwrap();
+    let mut rng = Rng::new(32);
+    let x = Tensor::randn(vec![16, 784], 1.0, &mut rng);
+    let w = Tensor::randn(vec![300, 784], 0.05, &mut rng);
+    let b = Tensor::randn(vec![300], 0.1, &mut rng);
+    let out = exe.run(&[x.clone(), w.clone(), b.clone()]).unwrap();
+    let want = fc_batched_ref(&w, &x, Some(b.data())).unwrap();
+    assert!(out[0].allclose(&want, 1e-3, 1e-3));
+}
+
+#[test]
+fn tt_fc_artifact_matches_rust_tt_forward() {
+    let Some(rt) = runtime() else { return };
+    // d = 2 artifact: layout m=[20,15], n=[28,28], ranks [1,8,1]
+    let exe = rt.compile("tt_fc_784x300_d2_r8_b16").unwrap();
+    let layout = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+    let mut rng = Rng::new(33);
+    let cores: Vec<Tensor> = layout
+        .core_shapes()
+        .into_iter()
+        .map(|s| Tensor::randn(s.to_vec(), 0.2, &mut rng))
+        .collect();
+    let bias = Tensor::randn(vec![300], 0.1, &mut rng);
+    let x = Tensor::randn(vec![16, 784], 1.0, &mut rng);
+    let mut args = vec![x.clone()];
+    args.extend(cores.iter().cloned());
+    args.push(bias.clone());
+    let out = exe.run(&args).unwrap();
+    let want = tt_forward(&cores, &x, Some(bias.data())).unwrap();
+    assert!(
+        out[0].allclose(&want, 1e-3, 1e-3),
+        "maxdiff {}",
+        out[0].max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn tt_fc_d5_artifact_matches_rust_tt_forward() {
+    let Some(rt) = runtime() else { return };
+    // the paper's Sec. 2 running example layout at batch 1
+    let exe = rt.compile("tt_fc_784x300_d5_r8_b1").unwrap();
+    let layout =
+        TtLayout::with_uniform_rank(vec![5, 5, 3, 2, 2], vec![2, 2, 2, 7, 14], 8).unwrap();
+    let mut rng = Rng::new(34);
+    let cores: Vec<Tensor> = layout
+        .core_shapes()
+        .into_iter()
+        .map(|s| Tensor::randn(s.to_vec(), 0.3, &mut rng))
+        .collect();
+    let bias = Tensor::zeros(vec![300]);
+    let x = Tensor::randn(vec![1, 784], 1.0, &mut rng);
+    let mut args = vec![x.clone()];
+    args.extend(cores.iter().cloned());
+    args.push(bias.clone());
+    let out = exe.run(&args).unwrap();
+    let want = tt_forward(&cores, &x, Some(bias.data())).unwrap();
+    assert!(out[0].allclose(&want, 1e-3, 1e-3));
+}
+
+#[test]
+fn mlp_artifacts_match_rust_model_math() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("mlp_dense_b1").unwrap();
+    let mut rng = Rng::new(35);
+    let x = Tensor::randn(vec![1, 784], 1.0, &mut rng);
+    let w1 = Tensor::randn(vec![300, 784], 0.05, &mut rng);
+    let b1 = Tensor::zeros(vec![300]);
+    let w2 = Tensor::randn(vec![100, 300], 0.05, &mut rng);
+    let b2 = Tensor::zeros(vec![100]);
+    let w3 = Tensor::randn(vec![10, 100], 0.05, &mut rng);
+    let b3 = Tensor::zeros(vec![10]);
+    let out = exe
+        .run(&[x.clone(), w1.clone(), b1, w2.clone(), b2, w3.clone(), b3])
+        .unwrap();
+    // rust-native: fc -> relu -> fc -> relu -> fc
+    let mut h = fc_batched_ref(&w1, &x, None).unwrap();
+    h.data_mut().iter_mut().for_each(|v| *v = v.max(0.0));
+    let mut h2 = fc_batched_ref(&w2, &h, None).unwrap();
+    h2.data_mut().iter_mut().for_each(|v| *v = v.max(0.0));
+    let want = fc_batched_ref(&w3, &h2, None).unwrap();
+    assert!(
+        out[0].allclose(&want, 1e-3, 1e-3),
+        "maxdiff {}",
+        out[0].max_abs_diff(&want).unwrap()
+    );
+}
+
+#[test]
+fn shape_validation_errors_are_loud() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.compile("dense_fc_784x300_b1").unwrap();
+    // wrong arg count
+    assert!(exe.run(&[Tensor::zeros(vec![1, 784])]).is_err());
+    // wrong shape
+    let bad = exe.run(&[
+        Tensor::zeros(vec![2, 784]),
+        Tensor::zeros(vec![300, 784]),
+        Tensor::zeros(vec![300]),
+    ]);
+    assert!(bad.is_err());
+    // unknown artifact
+    assert!(rt.compile("nonexistent").is_err());
+}

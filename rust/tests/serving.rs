@@ -1,0 +1,158 @@
+//! Integration: the serving coordinator over a real TT-compressed model.
+
+use ttrv::baselines::dense::DenseFc;
+use ttrv::config::{DseConfig, ServeConfig};
+use ttrv::coordinator::{
+    InferenceRequest, LayerOp, ModelEngine, Route, Server, TtFcEngine,
+};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::decompose::random_cores;
+use ttrv::util::prng::Rng;
+
+/// Build a DSE-routed TT LeNet300 and an equivalent dense model (same
+/// reconstructed weights) for output comparison.
+fn build_pair(rng: &mut Rng) -> (ModelEngine, ModelEngine) {
+    let machine = MachineSpec::spacemit_k1();
+    let cfg = DseConfig::default();
+    let mut tt_ops = Vec::new();
+    let mut dense_ops = Vec::new();
+    let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
+    for (i, &(n, m)) in shapes.iter().enumerate() {
+        match ttrv::coordinator::router::route_layer(m, n, 8, &cfg) {
+            Route::Tt(sol) => {
+                let tt = random_cores(&sol.layout, rng);
+                let w = tt.reconstruct().unwrap();
+                tt_ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine).unwrap()));
+                dense_ops.push(LayerOp::Dense(DenseFc::new(&w, None).unwrap()));
+            }
+            Route::Dense => {
+                let w = Tensor::randn(vec![m as usize, n as usize], 0.1, rng);
+                tt_ops.push(LayerOp::Dense(DenseFc::new(&w, None).unwrap()));
+                dense_ops.push(LayerOp::Dense(DenseFc::new(&w, None).unwrap()));
+            }
+        }
+        if i + 1 < shapes.len() {
+            tt_ops.push(LayerOp::Relu);
+            dense_ops.push(LayerOp::Relu);
+        }
+    }
+    (
+        ModelEngine::new("lenet300-tt", tt_ops, 784, 10),
+        ModelEngine::new("lenet300-dense", dense_ops, 784, 10),
+    )
+}
+
+#[test]
+fn served_outputs_match_dense_reference_model() {
+    let mut rng = Rng::new(21);
+    let (tt_model, mut dense_model) = build_pair(&mut rng);
+    let server = Server::start(
+        tt_model,
+        ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 128, workers: 1 },
+    );
+    for id in 0..24u64 {
+        let input = rng.normal_vec(784, 1.0);
+        let resp = server
+            .infer(InferenceRequest { id, input: input.clone() })
+            .unwrap();
+        let x = Tensor::from_vec(vec![1, 784], input).unwrap();
+        let want = dense_model.forward(&x).unwrap();
+        for (a, b) in resp.output.iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-2 + 1e-2 * b.abs(), "{a} vs {b}");
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 24);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_get_consistent_replies() {
+    let mut rng = Rng::new(22);
+    let (tt_model, _) = build_pair(&mut rng);
+    let server = std::sync::Arc::new(Server::start(
+        tt_model,
+        ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 512, workers: 1 },
+    ));
+    // a fixed probe input must produce identical output regardless of the
+    // batch it rides in
+    let probe: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
+    let expected = server
+        .infer(InferenceRequest { id: 0, input: probe.clone() })
+        .unwrap()
+        .output;
+
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let server = std::sync::Arc::clone(&server);
+        let probe = probe.clone();
+        let expected = expected.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for i in 0..25u64 {
+                if i % 3 == 0 {
+                    let out = server
+                        .infer(InferenceRequest { id: t * 1000 + i, input: probe.clone() })
+                        .unwrap()
+                        .output;
+                    for (a, b) in out.iter().zip(&expected) {
+                        assert!((a - b).abs() < 1e-4, "probe drifted: {a} vs {b}");
+                    }
+                } else {
+                    let input = rng.normal_vec(784, 1.0);
+                    server
+                        .infer(InferenceRequest { id: t * 1000 + i, input })
+                        .unwrap();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 1 + 4 * 25);
+    assert!(m.mean_batch() >= 1.0);
+}
+
+#[test]
+fn throughput_improves_with_batching() {
+    // serving sanity: under burst load the dynamic batcher forms multi-
+    // request batches and every request is answered. Batching is
+    // opportunistic (depends on scheduler interleaving on a 1-core host),
+    // so the batching assertion is retried across bursts; losing a request
+    // is never tolerated.
+    let mut rng = Rng::new(23);
+    let (tt_model, _) = build_pair(&mut rng);
+    let server = Server::start(
+        tt_model,
+        ServeConfig { max_batch: 32, max_wait_us: 20_000, queue_cap: 512, workers: 1 },
+    );
+    let mut batched = false;
+    for attempt in 0..5 {
+        let inputs: Vec<Vec<f32>> = (0..128).map(|_| rng.normal_vec(784, 1.0)).collect();
+        let rxs: Vec<_> = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(id, input)| {
+                server
+                    .submit(InferenceRequest { id: (attempt * 1000 + id) as u64, input })
+                    .unwrap()
+            })
+            .collect();
+        let mut max_batch = 0usize;
+        for rx in rxs {
+            max_batch = max_batch.max(rx.recv().unwrap().unwrap().batch_size);
+        }
+        assert!(max_batch <= 32);
+        if max_batch > 1 {
+            batched = true;
+            break;
+        }
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests % 128, 0);
+    assert!(batched, "no burst formed a multi-request batch in 5 attempts");
+    server.shutdown();
+}
