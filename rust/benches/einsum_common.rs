@@ -1,10 +1,11 @@
 //! Shared harness for Figs. 12-14: one CB-suite sweep of a kernel variant
 //! measuring ours vs IREE-like vs Pluto-like, with modeled-K1 columns.
+//! All three strategies run through the [`Executor`] entry point.
 
-use ttrv::baselines::{iree_like, pluto_like};
+use ttrv::baselines::iree_like;
 use ttrv::bench::{measure, BenchCfg, Measurement};
 use ttrv::compiler::{cb_suite, compile};
-use ttrv::kernels;
+use ttrv::kernels::{pack, tune_plan, Executor};
 use ttrv::machine::{costmodel, MachineSpec};
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::EinsumKind;
@@ -26,6 +27,7 @@ pub fn run_suite(kind: EinsumKind, fig: &str) {
     let bcfg = BenchCfg::from_env();
     let mut rng = Rng::new(12);
     let mut rows = Vec::new();
+    let mut ex = Executor::new(&host);
     for entry in cb_suite(kind) {
         let d = entry.dims;
         let g = Tensor::randn(vec![d.r, d.n, d.m, d.k], 1.0, &mut rng);
@@ -38,17 +40,18 @@ pub fn run_suite(kind: EinsumKind, fig: &str) {
         let mut host_plan = compile(&d, &host).expect("host plan");
         host_plan.threads = 1;
         // measured autotune over the solver's top candidates (§Perf iter 2)
-        host_plan = kernels::tune_plan(&host_plan, &host, &g, &x, 6).expect("tune");
-        let pg = kernels::pack(&g, &host_plan).expect("pack");
+        host_plan = tune_plan(&host_plan, &host, &g, &x, 6).expect("tune");
+        ex.set_plan(host_plan);
+        let pg = pack(&g, &host_plan).expect("pack");
         let gm = iree_like::prepare_g(&g).expect("prep");
         let ours = measure(&format!("{} ours", entry.id), d.flops(), &bcfg, || {
-            kernels::execute(&host_plan, &pg, &x).expect("kernel");
+            ex.execute(&d, &pg, &x).expect("kernel");
         });
         let iree = measure(&format!("{} iree", entry.id), d.flops(), &bcfg, || {
-            iree_like::run(&gm, &x, d.r).expect("iree");
+            ex.execute_iree_prepared(&gm, d.r, &x).expect("iree");
         });
         let pluto = measure(&format!("{} pluto", entry.id), d.flops(), &bcfg, || {
-            pluto_like::einsum_default(&g, &x).expect("pluto");
+            ex.execute_pluto_like(&g, &x).expect("pluto");
         });
         rows.push(FigRow {
             id: entry.id,

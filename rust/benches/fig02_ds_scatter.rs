@@ -4,9 +4,8 @@
 //! do not always align).
 
 use ttrv::bench::{measure, BenchCfg};
-use ttrv::compiler::compile;
 use ttrv::config::DseConfig;
-use ttrv::kernels;
+use ttrv::kernels::Executor;
 use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::{self, einsum_chain};
@@ -43,8 +42,9 @@ fn main() {
     let sols8 = ttrv::dse::space::enumerate_aligned(84, 120, &cfg8);
     println!("{:>10} {:>12} {:>10}", "flops", "time", "layout");
     let mut rows: Vec<(u64, f64, String)> = Vec::new();
+    let mut ex = Executor::new(&machine);
     for s in sols8.iter().take(12) {
-        // execute the whole einsum chain at batch 1
+        // execute the whole einsum chain at batch 1 through the Executor
         let chain = einsum_chain(&s.layout, 1);
         let cores: Vec<Tensor> = s
             .layout
@@ -52,20 +52,14 @@ fn main() {
             .into_iter()
             .map(|sh| Tensor::randn(sh.to_vec(), 0.3, &mut rng))
             .collect();
-        let plans: Vec<_> = chain.iter().map(|d| compile(d, &machine).unwrap()).collect();
-        let packed: Vec<_> = plans
+        let packed: Vec<_> = chain
             .iter()
             .enumerate()
-            .map(|(i, p)| kernels::pack(&cores[s.layout.d() - 1 - i], p).unwrap())
+            .map(|(i, d)| ex.pack(&cores[s.layout.d() - 1 - i], d).unwrap())
             .collect();
         let x0 = rng.normal_vec(s.layout.n_total() as usize, 1.0);
         let mes = measure("chain", s.flops, &bcfg, || {
-            let mut cur = x0.clone();
-            let mut out = Vec::new();
-            for (p, g) in plans.iter().zip(&packed) {
-                kernels::execute_into(p, g, &cur, &mut out).unwrap();
-                std::mem::swap(&mut cur, &mut out);
-            }
+            ex.run_tt_chain(&s.layout, 1, &packed, &x0).unwrap();
         });
         rows.push((s.flops, mes.seconds, s.layout.describe()));
     }

@@ -6,7 +6,7 @@ use ttrv::bench::{measure, BenchCfg};
 use ttrv::compiler::pipeline::{compile_stage, OptStage};
 use ttrv::config::DseConfig;
 use ttrv::dse;
-use ttrv::kernels;
+use ttrv::kernels::{pack, Executor};
 use ttrv::machine::{costmodel, MachineSpec};
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::einsum_chain;
@@ -69,15 +69,19 @@ fn main() {
                 let packed: Vec<_> = plans
                     .iter()
                     .enumerate()
-                    .map(|(i, p)| {
-                        kernels::pack(&cores[sol.layout.d() - 1 - i], p).unwrap()
-                    })
+                    .map(|(i, p)| pack(&cores[sol.layout.d() - 1 - i], p).unwrap())
                     .collect();
+                // one Executor per stage: the staged plans override the
+                // cache for the same chain dims
+                let mut ex = Executor::new(&machine);
+                for p in &plans {
+                    ex.set_plan(*p);
+                }
                 let mes = measure("stage", sol.flops, &bcfg, || {
                     let mut cur = x0.clone();
                     let mut out = Vec::new();
-                    for (p, g) in plans.iter().zip(&packed) {
-                        kernels::execute_into(p, g, &cur, &mut out).unwrap();
+                    for (d, g) in chain.iter().zip(&packed) {
+                        ex.execute_into(d, g, &cur, &mut out).unwrap();
                         std::mem::swap(&mut cur, &mut out);
                     }
                 });

@@ -4,8 +4,8 @@
 
 use ttrv::bench::{measure, BenchCfg};
 use ttrv::compiler::plan::RbFactors;
-use ttrv::compiler::{compile, cb_suite};
-use ttrv::kernels;
+use ttrv::compiler::{cb_suite, compile};
+use ttrv::kernels::{pack, Executor};
 use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::EinsumKind;
@@ -38,13 +38,15 @@ fn main() {
             "== RB sweep {} (m={} b={} n={} r={} k={}); solver chose ({}, {}) ==",
             entry.id, dims.m, dims.b, dims.n, dims.r, dims.k, base.rb.rm, base.rb.rb
         );
+        let mut ex = Executor::new(&host);
         for (rm, rb) in candidates {
             let mut plan = base;
             plan.rb = RbFactors { rm, rb, rr: 1, rk: 1 };
             plan.threads = 1;
-            let pg = kernels::pack(&g, &plan).expect("pack");
+            ex.set_plan(plan);
+            let pg = pack(&g, &plan).expect("pack");
             let m = measure(&format!("rm={rm} rb={rb}"), dims.flops(), &bcfg, || {
-                kernels::execute(&plan, &pg, &x).expect("exec");
+                ex.execute(&dims, &pg, &x).expect("exec");
             });
             let mark = if (rm, rb) == (base.rb.rm, base.rb.rb) { " <= solver" } else { "" };
             println!("  rm={rm} rb={rb}: {:>7.2} GF  (regs {}){mark}", m.gflops(), plan.rb.registers());

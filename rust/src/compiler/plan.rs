@@ -1,4 +1,9 @@
 //! The optimization plan — the compiler's output artifact.
+//!
+//! Plans describe *how* to run the Listing-2 contraction; the core `G`
+//! `(r, n, m, k)` and output `(m, b, r)` index conventions the loop bounds
+//! refer to are documented once in [`crate::kernels`] (§ Data layout
+//! conventions).
 
 use crate::ttd::cost::EinsumDims;
 

@@ -1,66 +1,65 @@
 //! Executable model engines: the serving-time realization of DSE output.
 
-use std::collections::HashMap;
-
 use crate::baselines::dense::DenseFc;
-use crate::compiler::{compile, OptimizationPlan};
 use crate::error::{Error, Result};
-use crate::kernels::{self, PackedG};
+use crate::kernels::{Executor, PackedG};
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
-use crate::ttd::cost::{einsum_chain, EinsumDims};
+use crate::ttd::cost::einsum_chain;
 use crate::ttd::decompose::TtCores;
 
-/// A TT-decomposed FC layer compiled for serving: packed cores plus a
-/// per-batch-size plan cache.
+/// A TT-decomposed FC layer compiled for serving: packed cores plus the
+/// shared plan-driven [`Executor`]. The executor owns the per-shape plan
+/// cache and the chain scratch buffers — the engine holds no kernel state of
+/// its own.
 pub struct TtFcEngine {
-    machine: MachineSpec,
     layout: crate::ttd::TtLayout,
     /// Packed core per chain step, in processing order (t = d-1 .. 0).
     packed: Vec<PackedG>,
     bias: Option<Vec<f32>>,
-    /// batch -> plans per chain step.
-    plan_cache: HashMap<usize, Vec<OptimizationPlan>>,
-    /// Measured RB autotuning on plan-cache misses (kernels::tune_plan).
-    tune: bool,
-    /// Ping-pong buffers for the einsum chain (no per-request allocation).
-    buf_a: Vec<f32>,
-    buf_b: Vec<f32>,
+    executor: Executor,
 }
 
 impl TtFcEngine {
     /// Compile a decomposed layer for the target machine.
+    ///
+    /// Invariant: the cores are packed once with the batch-1 plans, which is
+    /// sound because the vectorized-loop choice (and hence the packed `G`
+    /// layout) depends only on `(r, n, k)`, never on the batch — pinned by
+    /// the `packing_layout_is_batch_invariant` test below. A batch-dependent
+    /// layout choice would surface as an `execute_plan_into` layout error at
+    /// serving time.
     pub fn new(tt: &TtCores, machine: &MachineSpec) -> Result<TtFcEngine> {
+        let mut executor = Executor::new(machine);
         // plans at batch 1 determine the (batch-independent) packing layout
         let chain = einsum_chain(&tt.layout, 1);
         let mut packed = Vec::with_capacity(chain.len());
         for (step, dims) in chain.iter().enumerate() {
             let core_idx = tt.layout.d() - 1 - step; // processing order
-            let plan = compile(dims, machine)?;
-            packed.push(kernels::pack(&tt.cores[core_idx], &plan)?);
+            packed.push(executor.pack(&tt.cores[core_idx], dims)?);
         }
         Ok(TtFcEngine {
-            machine: machine.clone(),
             layout: tt.layout.clone(),
             packed,
             bias: tt.bias.clone(),
-            plan_cache: HashMap::new(),
-            tune: false,
-            buf_a: Vec::new(),
-            buf_b: Vec::new(),
+            executor,
         })
     }
 
-    /// Enable measured register-blocking autotuning: each plan-cache miss
-    /// micro-benchmarks the solver's top candidates on this machine
+    /// Enable measured register-blocking autotuning on plan-cache misses
     /// (EXPERIMENTS.md §Perf iteration 2). One-time cost per batch size.
     pub fn with_tuning(mut self) -> Self {
-        self.tune = true;
+        self.executor = self.executor.with_tuning();
         self
     }
 
     pub fn layout(&self) -> &crate::ttd::TtLayout {
         &self.layout
+    }
+
+    /// The shared executor (plan cache + scratch) driving this layer.
+    pub fn executor(&self) -> &Executor {
+        &self.executor
     }
 
     /// Input width N.
@@ -73,59 +72,37 @@ impl TtFcEngine {
         self.layout.m_total() as usize
     }
 
-    fn plans_for_batch(&mut self, batch: usize) -> Result<&[OptimizationPlan]> {
-        if !self.plan_cache.contains_key(&batch) {
-            let chain = einsum_chain(&self.layout, batch);
-            let d = self.layout.d();
-            let mut plans = Vec::with_capacity(chain.len());
-            for (step, dims) in chain.iter().enumerate() {
-                let mut plan = compile(dims, &self.machine)?;
-                // packing layout must be batch-invariant for the cache to work
-                debug_assert_eq!(
-                    plan.vector_loop,
-                    compile(&einsum_chain(&self.layout, 1)[step], &self.machine)?.vector_loop
-                );
-                if self.tune {
-                    let core_shape = self.layout.core_shape(d - 1 - step);
-                    let mut rng = crate::util::prng::Rng::new(0x7e57);
-                    let g = Tensor::randn(core_shape.to_vec(), 0.5, &mut rng);
-                    let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 0.5, &mut rng);
-                    plan = kernels::tune_plan(&plan, &self.machine, &g, &x, 6)?;
-                }
-                plans.push(plan);
-            }
-            self.plan_cache.insert(batch, plans);
-        }
-        Ok(self.plan_cache.get(&batch).expect("just inserted"))
-    }
-
     /// Forward `x (B, N) -> (B, M)` through the optimized kernel chain.
+    ///
+    /// With single-threaded plans (the serving configuration measured in
+    /// `rust/tests/alloc_free.rs`), per-request heap traffic is the response
+    /// tensor only: plans are cached per shape and the chain ping-pongs
+    /// inside the executor's scratch. Multi-threaded plans additionally
+    /// allocate their fork/join scratch per request.
     pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
         let dims = x.dims();
-        if dims.len() != 2 || dims[1] != self.n_total() {
+        if dims.len() != 2 || dims[1] != self.n_total() || dims[0] == 0 {
             return Err(Error::shape(format!(
-                "engine expects (B, {}), got {:?}",
+                "engine expects (B >= 1, {}), got {:?}",
                 self.n_total(),
                 dims
             )));
         }
         let batch = dims[0];
-        self.plans_for_batch(batch)?;
-        let plans = self.plan_cache.get(&batch).expect("cached").clone();
         let m_total = self.m_total();
-
-        // ping-pong between the two owned buffers; input of step 0 is x
-        self.buf_a.clear();
-        self.buf_a.extend_from_slice(x.data());
-        for (step, plan) in plans.iter().enumerate() {
-            let EinsumDims { b, n, k, .. } = plan.dims;
-            debug_assert_eq!(self.buf_a.len(), b * n * k);
-            kernels::execute_into(plan, &self.packed[step], &self.buf_a, &mut self.buf_b)?;
-            std::mem::swap(&mut self.buf_a, &mut self.buf_b);
-        }
+        let final_slab =
+            self.executor
+                .run_tt_chain(&self.layout, batch, &self.packed, x.data())?;
         // final layout (M, B) row-major -> (B, M)
-        let mut y = Tensor::from_vec(vec![m_total, batch], self.buf_a.clone())?
-            .transpose(&[1, 0])?;
+        let mut y = Tensor::zeros(vec![batch, m_total]);
+        {
+            let yd = y.data_mut();
+            for (mi, col) in final_slab.chunks_exact(batch).enumerate() {
+                for (bi, &v) in col.iter().enumerate() {
+                    yd[bi * m_total + mi] = v;
+                }
+            }
+        }
         if let Some(bias) = &self.bias {
             for row in y.data_mut().chunks_mut(m_total) {
                 for (v, &bv) in row.iter_mut().zip(bias) {
@@ -224,16 +201,45 @@ mod tests {
     }
 
     #[test]
-    fn plan_cache_reuses_batches() {
+    fn executor_plan_cache_reuses_batches() {
         let (mut engine, _, _) = engine_and_truth();
         let mut rng = Rng::new(102);
+        // d = 2 chain: 2 plans per distinct batch size, cached in the
+        // executor (construction already planned batch 1)
+        let base = engine.executor().cached_plans();
+        assert_eq!(base, 2);
         let x = Tensor::randn(vec![4, 784], 1.0, &mut rng);
         engine.forward(&x).unwrap();
         engine.forward(&x).unwrap();
-        assert_eq!(engine.plan_cache.len(), 1);
+        assert_eq!(engine.executor().cached_plans(), base + 2);
         let x2 = Tensor::randn(vec![8, 784], 1.0, &mut rng);
         engine.forward(&x2).unwrap();
-        assert_eq!(engine.plan_cache.len(), 2);
+        assert_eq!(engine.executor().cached_plans(), base + 4);
+    }
+
+    #[test]
+    fn packing_layout_is_batch_invariant() {
+        // the engine packs cores once with batch-1 plans; the compiler's
+        // vectorized-loop (and thus layout) choice must not depend on batch
+        use crate::compiler::compile;
+        let machine = MachineSpec::spacemit_k1();
+        for layout in [
+            TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap(),
+            TtLayout::with_uniform_rank(vec![10, 10, 3], vec![4, 8, 16], 8).unwrap(),
+        ] {
+            let base = einsum_chain(&layout, 1);
+            for batch in [2usize, 7, 64, 1024] {
+                for (step, dims) in einsum_chain(&layout, batch).iter().enumerate() {
+                    let p = compile(dims, &machine).unwrap();
+                    let p1 = compile(&base[step], &machine).unwrap();
+                    assert_eq!(
+                        p.vector_loop, p1.vector_loop,
+                        "batch {batch} step {step}: layout choice drifted"
+                    );
+                    assert_eq!(p.pack_g, p1.pack_g, "batch {batch} step {step}");
+                }
+            }
+        }
     }
 
     #[test]

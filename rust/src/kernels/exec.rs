@@ -1,48 +1,23 @@
-//! Plan executor: loop order, bt tiling, thread parallelization around the
-//! microkernels (paper §4.3.5 + §4.2.3).
+//! Plan execution internals: loop order, bt tiling, thread parallelization
+//! around the microkernels (paper §4.3.5 + §4.2.3).
+//!
+//! This module is crate-private; the single public entry point is
+//! [`super::Executor`]. All validation happens *before* the output buffer is
+//! touched, so a failed call leaves caller scratch exactly as it was.
 
 use crate::compiler::plan::{LoopOrder, OptimizationPlan, VectorLoop};
 use crate::error::{Error, Result};
-use crate::tensor::Tensor;
 
 use super::micro;
-use super::naive::naive_einsum;
+use super::naive::naive_region;
 use super::packed::{GLayout, PackedG};
 
-/// Reusable buffers for the serving hot loop (no allocation per request).
-#[derive(Debug, Default)]
-pub struct Scratch {
-    out: Vec<f32>,
-}
-
-impl Scratch {
-    /// The most recent kernel output (`m*b*r` floats, `(m, b, r)` order).
-    pub fn out_slice(&self) -> &[f32] {
-        &self.out
-    }
-}
-
-/// Execute a planned Einsum: `x (b, n, k)` against the packed core,
-/// producing `(m, b, r)`.
-pub fn execute(plan: &OptimizationPlan, g: &PackedG, x: &Tensor) -> Result<Tensor> {
-    let mut out = Vec::new();
-    let d = &plan.dims;
-    execute_into(plan, g, x.data(), &mut out)?;
-    Tensor::from_vec(vec![d.m, d.b, d.r], out)
-}
-
-/// Allocation-free variant: output lands in `scratch.out` (`m*b*r` floats).
-pub fn execute_with_scratch(
-    plan: &OptimizationPlan,
-    g: &PackedG,
-    xd: &[f32],
-    scratch: &mut Scratch,
-) -> Result<()> {
-    execute_into(plan, g, xd, &mut scratch.out)
-}
-
-/// Core executor writing into a caller-owned buffer (resized to `m*b*r`).
-pub fn execute_into(
+/// Execute a planned Einsum into a caller-owned buffer (resized to `m*b*r`).
+///
+/// Validation order matters: every precondition (plan/core dims, input
+/// length, packing layout) is checked before `out` is cleared or resized, so
+/// an `Err` return cannot expose a half-initialized buffer.
+pub(crate) fn execute_plan_into(
     plan: &OptimizationPlan,
     g: &PackedG,
     xd: &[f32],
@@ -77,11 +52,9 @@ pub fn execute_into(
     out.resize(m * d.b * r, 0.0);
 
     if g.layout == GLayout::Canonical {
-        // naive stage: run the Listing-2 loop nest
-        let gt = Tensor::from_vec(vec![r, n, m, k], g.data.clone())?;
-        let xt = Tensor::from_vec(vec![d.b, n, k], xd.to_vec())?;
-        let naive = naive_einsum(&gt, &xt)?;
-        out.copy_from_slice(naive.data());
+        // naive stage: the Listing-2 loop nest straight into the caller's
+        // buffer — no Tensor round-trip, no per-call allocation
+        naive_region(&g.data, xd, &mut out[..], r, n, m, k, d.b);
         return Ok(());
     }
 
@@ -221,105 +194,5 @@ fn run_region_offset(
         VectorLoop::None => {
             micro::scalar_packed_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
         }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::compiler::compile;
-    use crate::kernels::pack;
-    use crate::machine::MachineSpec;
-    use crate::tensor::einsum::tt_einsum_ref;
-    use crate::ttd::cost::{EinsumDims, EinsumKind};
-    use crate::util::prng::Rng;
-
-    #[test]
-    fn scratch_reuse_produces_identical_results() {
-        let machine = MachineSpec::spacemit_k1();
-        let mut rng = Rng::new(70);
-        let dims = EinsumDims { kind: EinsumKind::Middle, m: 24, b: 17, n: 5, r: 8, k: 8 };
-        let plan = compile(&dims, &machine).unwrap();
-        let g = Tensor::randn(vec![8, 5, 24, 8], 1.0, &mut rng);
-        let pg = pack(&g, &plan).unwrap();
-        let mut scratch = Scratch::default();
-        let x1 = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
-        let x2 = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
-        execute_with_scratch(&plan, &pg, x1.data(), &mut scratch).unwrap();
-        let out1 = scratch.out_slice().to_vec();
-        execute_with_scratch(&plan, &pg, x2.data(), &mut scratch).unwrap();
-        let want1 = tt_einsum_ref(&g, &x1).unwrap();
-        let want2 = tt_einsum_ref(&g, &x2).unwrap();
-        assert_eq!(out1.len(), want1.numel());
-        for (a, b) in out1.iter().zip(want1.data()) {
-            assert!((a - b).abs() < 1e-4);
-        }
-        for (a, b) in scratch.out_slice().iter().zip(want2.data()) {
-            assert!((a - b).abs() < 1e-4);
-        }
-    }
-
-    #[test]
-    fn forced_multithread_mbrk_matches_reference() {
-        let machine = MachineSpec::spacemit_k1();
-        let mut rng = Rng::new(71);
-        let dims = EinsumDims { kind: EinsumKind::Middle, m: 37, b: 29, n: 6, r: 8, k: 8 };
-        let mut plan = compile(&dims, &machine).unwrap();
-        plan.threads = 4;
-        plan.tile.order = LoopOrder::Mbrk;
-        let g = Tensor::randn(vec![8, 6, 37, 8], 1.0, &mut rng);
-        let x = Tensor::randn(vec![29, 6, 8], 1.0, &mut rng);
-        let pg = pack(&g, &plan).unwrap();
-        let got = execute(&plan, &pg, &x).unwrap();
-        let want = tt_einsum_ref(&g, &x).unwrap();
-        assert!(got.allclose(&want, 1e-4, 1e-4));
-    }
-
-    #[test]
-    fn forced_multithread_bmrk_matches_reference() {
-        let machine = MachineSpec::spacemit_k1();
-        let mut rng = Rng::new(72);
-        let dims = EinsumDims { kind: EinsumKind::Middle, m: 8, b: 61, n: 6, r: 8, k: 8 };
-        let mut plan = compile(&dims, &machine).unwrap();
-        plan.threads = 3;
-        plan.tile.order = LoopOrder::Bmrk;
-        let g = Tensor::randn(vec![8, 6, 8, 8], 1.0, &mut rng);
-        let x = Tensor::randn(vec![61, 6, 8], 1.0, &mut rng);
-        let pg = pack(&g, &plan).unwrap();
-        let got = execute(&plan, &pg, &x).unwrap();
-        let want = tt_einsum_ref(&g, &x).unwrap();
-        assert!(got.allclose(&want, 1e-4, 1e-4));
-    }
-
-    #[test]
-    fn forced_bt_tiling_matches_reference() {
-        let machine = MachineSpec::spacemit_k1();
-        let mut rng = Rng::new(73);
-        let dims = EinsumDims { kind: EinsumKind::First, m: 16, b: 53, n: 9, r: 8, k: 1 };
-        let mut plan = compile(&dims, &machine).unwrap();
-        plan.tile.btl = Some(7); // deliberately non-dividing tile
-        let g = Tensor::randn(vec![8, 9, 16, 1], 1.0, &mut rng);
-        let x = Tensor::randn(vec![53, 9, 1], 1.0, &mut rng);
-        let pg = pack(&g, &plan).unwrap();
-        let got = execute(&plan, &pg, &x).unwrap();
-        let want = tt_einsum_ref(&g, &x).unwrap();
-        assert!(got.allclose(&want, 1e-4, 1e-4));
-    }
-
-    #[test]
-    fn mismatched_layout_is_rejected() {
-        let machine = MachineSpec::spacemit_k1();
-        let mut rng = Rng::new(74);
-        let dims = EinsumDims { kind: EinsumKind::Middle, m: 4, b: 4, n: 4, r: 8, k: 8 };
-        let plan = compile(&dims, &machine).unwrap();
-        let naive = OptimizationPlan::naive(dims);
-        let g = Tensor::randn(vec![8, 4, 4, 8], 1.0, &mut rng);
-        let pg_naive = pack(&g, &naive).unwrap();
-        let x = Tensor::randn(vec![4, 4, 8], 1.0, &mut rng);
-        assert!(execute(&plan, &pg_naive, &x).is_err());
-        // bad input length
-        let pg = pack(&g, &plan).unwrap();
-        let x_bad = Tensor::randn(vec![4, 4, 4], 1.0, &mut rng);
-        assert!(execute(&plan, &pg, &x_bad).is_err());
     }
 }

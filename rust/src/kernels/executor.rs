@@ -1,0 +1,384 @@
+//! The single plan-driven execution entry point.
+//!
+//! Every consumer of the optimized Einsum kernels — the serving engine
+//! ([`crate::coordinator::engine::TtFcEngine`]), the coordinator's batch
+//! dispatch, the comparator baselines and the figure benches — goes through
+//! one [`Executor`], which owns:
+//!
+//! * a **plan cache** keyed by the full [`EinsumDims`] instance (batch
+//!   included), so recurring shapes compile once;
+//! * **scratch buffers** for single-kernel output and for the einsum-chain
+//!   ping-pong, so a warm single-threaded plan (the serving hot-loop
+//!   configuration) performs zero heap allocation per request on every `G`
+//!   layout, Canonical included — see `rust/tests/alloc_free.rs`.
+//!   Multi-threaded plans still allocate their fork/join scratch
+//!   (per-thread output slices / merge buffers) each call.
+//!
+//! Plans come from [`crate::compiler::compile`] by default; staged ablations
+//! and measured autotuning override them via [`Executor::set_plan`] /
+//! [`Executor::with_tuning`].
+
+use std::collections::HashMap;
+
+use crate::compiler::{compile, OptimizationPlan};
+use crate::error::{Error, Result};
+use crate::machine::MachineSpec;
+use crate::tensor::Tensor;
+use crate::ttd::cost::{self, EinsumDims};
+use crate::ttd::TtLayout;
+
+use super::exec::execute_plan_into;
+use super::packed::{pack, PackedG};
+
+/// Reusable buffers for the serving hot loop (no allocation per request).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Most recent kernel output (`m*b*r` floats, `(m, b, r)` order).
+    out: Vec<f32>,
+    /// Chain ping-pong partner / current slab.
+    chain: Vec<f32>,
+}
+
+impl Scratch {
+    /// The most recent kernel output (`m*b*r` floats, `(m, b, r)` order).
+    pub fn out_slice(&self) -> &[f32] {
+        &self.out
+    }
+}
+
+/// Plan-driven kernel executor: one per engine / bench / baseline harness.
+pub struct Executor {
+    machine: MachineSpec,
+    plan_cache: HashMap<EinsumDims, OptimizationPlan>,
+    scratch: Scratch,
+    /// Reused per-request chain-dims buffer (allocation-free hot loop).
+    chain_dims: Vec<EinsumDims>,
+    /// Measured RB autotuning on plan-cache misses (see [`super::tune_plan`]).
+    tune: bool,
+}
+
+impl Executor {
+    /// A fresh executor planning for `machine`.
+    pub fn new(machine: &MachineSpec) -> Self {
+        Executor {
+            machine: machine.clone(),
+            plan_cache: HashMap::new(),
+            scratch: Scratch::default(),
+            chain_dims: Vec::new(),
+            tune: false,
+        }
+    }
+
+    /// Enable measured register-blocking autotuning: each plan-cache miss
+    /// micro-benchmarks the solver's top candidates on representative
+    /// buffers of the planned shapes (EXPERIMENTS.md §Perf iteration 2).
+    /// One-time cost per distinct `EinsumDims`. Plans cached before tuning
+    /// was enabled (e.g. the batch-1 plans compiled while packing an
+    /// engine's cores) are dropped so they get re-tuned on next use — safe,
+    /// because tuning only changes RB factors, never the packed layout.
+    pub fn with_tuning(mut self) -> Self {
+        self.tune = true;
+        self.plan_cache.clear();
+        self
+    }
+
+    /// The machine this executor plans for.
+    pub fn machine(&self) -> &MachineSpec {
+        &self.machine
+    }
+
+    /// Number of cached plans (one per distinct `EinsumDims`).
+    pub fn cached_plans(&self) -> usize {
+        self.plan_cache.len()
+    }
+
+    /// The compiled (and possibly tuned) plan for an Einsum instance,
+    /// computing and caching it on first use.
+    pub fn plan(&mut self, dims: &EinsumDims) -> Result<OptimizationPlan> {
+        if let Some(p) = self.plan_cache.get(dims) {
+            return Ok(*p);
+        }
+        let mut plan = compile(dims, &self.machine)?;
+        if self.tune {
+            // representative random buffers of the planned shapes; fixed
+            // seed so tuning inputs are reproducible
+            let mut rng = crate::util::prng::Rng::new(0x7e57);
+            let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 0.5, &mut rng);
+            let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 0.5, &mut rng);
+            plan = super::tune::tune_plan(&plan, &self.machine, &g, &x, 6)?;
+        }
+        self.plan_cache.insert(*dims, plan);
+        Ok(plan)
+    }
+
+    /// Override the cached plan for `plan.dims` (ablation stages, forced
+    /// thread counts, externally tuned plans). Subsequent `execute*` calls
+    /// for those dims use it verbatim.
+    pub fn set_plan(&mut self, plan: OptimizationPlan) {
+        self.plan_cache.insert(plan.dims, plan);
+    }
+
+    /// Pack a canonical core as the (cached) plan for `dims` requires.
+    pub fn pack(&mut self, g: &Tensor, dims: &EinsumDims) -> Result<PackedG> {
+        let plan = self.plan(dims)?;
+        pack(g, &plan)
+    }
+
+    /// Execute one planned Einsum, allocating the `(m, b, r)` output tensor.
+    pub fn execute(&mut self, dims: &EinsumDims, g: &PackedG, x: &Tensor) -> Result<Tensor> {
+        let plan = self.plan(dims)?;
+        let mut out = Vec::new();
+        execute_plan_into(&plan, g, x.data(), &mut out)?;
+        Tensor::from_vec(vec![plan.dims.m, plan.dims.b, plan.dims.r], out)
+    }
+
+    /// Execute into a caller-owned buffer (resized to `m*b*r`). On error the
+    /// buffer is left untouched.
+    pub fn execute_into(
+        &mut self,
+        dims: &EinsumDims,
+        g: &PackedG,
+        xd: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let plan = self.plan(dims)?;
+        execute_plan_into(&plan, g, xd, out)
+    }
+
+    /// Allocation-free variant: output lands in the executor's scratch and
+    /// is returned as a slice (`m*b*r` floats, `(m, b, r)` order).
+    pub fn execute_with_scratch(
+        &mut self,
+        dims: &EinsumDims,
+        g: &PackedG,
+        xd: &[f32],
+    ) -> Result<&[f32]> {
+        let plan = self.plan(dims)?;
+        execute_plan_into(&plan, g, xd, &mut self.scratch.out)?;
+        Ok(&self.scratch.out)
+    }
+
+    /// The serving hot path: run a TT layout's whole einsum chain over the
+    /// pre-packed cores (processing order, t = d-1 .. 0), ping-ponging
+    /// between the two scratch buffers. Returns the final `(M, B)` row-major
+    /// slab. Once the caches and buffers are warm this performs zero heap
+    /// allocation per call when every step's plan is single-threaded;
+    /// multi-threaded steps allocate their fork/join scratch.
+    pub fn run_tt_chain(
+        &mut self,
+        layout: &TtLayout,
+        batch: usize,
+        packed: &[PackedG],
+        x: &[f32],
+    ) -> Result<&[f32]> {
+        // temporarily move the dims buffer out of self so `self.plan` can be
+        // called while iterating it (both need &mut self); restored below so
+        // its capacity is reused by the next request
+        let mut chain_dims = std::mem::take(&mut self.chain_dims);
+        cost::einsum_chain_into(layout, batch, &mut chain_dims);
+        let run = self.run_chain_steps(&chain_dims, packed, x);
+        self.chain_dims = chain_dims;
+        run?;
+        Ok(&self.scratch.chain)
+    }
+
+    fn run_chain_steps(
+        &mut self,
+        chain_dims: &[EinsumDims],
+        packed: &[PackedG],
+        x: &[f32],
+    ) -> Result<()> {
+        if chain_dims.len() != packed.len() {
+            return Err(Error::shape(format!(
+                "chain has {} steps but {} packed cores",
+                chain_dims.len(),
+                packed.len()
+            )));
+        }
+        self.scratch.chain.clear();
+        self.scratch.chain.extend_from_slice(x);
+        for (dims, g) in chain_dims.iter().zip(packed) {
+            let plan = self.plan(dims)?;
+            execute_plan_into(&plan, g, &self.scratch.chain, &mut self.scratch.out)?;
+            std::mem::swap(&mut self.scratch.chain, &mut self.scratch.out);
+        }
+        Ok(())
+    }
+
+    // --- comparator baselines through the same entry point ----------------
+    //
+    // The baselines keep their own code shape (that is what they measure),
+    // but all call sites drive them through the Executor so benches and
+    // integration tests have exactly one execution API.
+
+    /// IREE-like baseline (paper Appendix Listing 8), end to end. Shared
+    /// (`&self`) because the baselines keep their own code shape — that is
+    /// exactly what they measure — and touch no executor state.
+    pub fn execute_iree_like(&self, g: &Tensor, x: &Tensor) -> Result<Tensor> {
+        crate::baselines::iree_like::einsum(g, x)
+    }
+
+    /// IREE-like runtime half over a const-folded `(r*m, n*k)` matrix
+    /// (prepare with [`crate::baselines::iree_like::prepare_g`]).
+    pub fn execute_iree_prepared(&self, g_mat: &Tensor, r: usize, x: &Tensor) -> Result<Tensor> {
+        crate::baselines::iree_like::run(g_mat, x, r)
+    }
+
+    /// Pluto-like baseline (polyhedral tiling, scalar, canonical layout).
+    pub fn execute_pluto_like(&self, g: &Tensor, x: &Tensor) -> Result<Tensor> {
+        crate::baselines::pluto_like::einsum_default(g, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::compiler::plan::LoopOrder;
+    use crate::kernels::pack;
+    use crate::machine::MachineSpec;
+    use crate::tensor::einsum::tt_einsum_ref;
+    use crate::ttd::cost::EinsumKind;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn scratch_reuse_produces_identical_results() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(70);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 24, b: 17, n: 5, r: 8, k: 8 };
+        let mut ex = Executor::new(&machine);
+        let g = Tensor::randn(vec![8, 5, 24, 8], 1.0, &mut rng);
+        let pg = ex.pack(&g, &dims).unwrap();
+        let x1 = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
+        let x2 = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
+        let out1 = ex.execute_with_scratch(&dims, &pg, x1.data()).unwrap().to_vec();
+        let want1 = tt_einsum_ref(&g, &x1).unwrap();
+        let want2 = tt_einsum_ref(&g, &x2).unwrap();
+        assert_eq!(out1.len(), want1.numel());
+        for (a, b) in out1.iter().zip(want1.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        let out2 = ex.execute_with_scratch(&dims, &pg, x2.data()).unwrap();
+        for (a, b) in out2.iter().zip(want2.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // exactly one plan was compiled for the repeated shape
+        assert_eq!(ex.cached_plans(), 1);
+    }
+
+    #[test]
+    fn forced_multithread_mbrk_matches_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(71);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 37, b: 29, n: 6, r: 8, k: 8 };
+        let mut plan = compile(&dims, &machine).unwrap();
+        plan.threads = 4;
+        plan.tile.order = LoopOrder::Mbrk;
+        let g = Tensor::randn(vec![8, 6, 37, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![29, 6, 8], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let mut ex = Executor::new(&machine);
+        ex.set_plan(plan);
+        let got = ex.execute(&dims, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn forced_multithread_bmrk_matches_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(72);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 8, b: 61, n: 6, r: 8, k: 8 };
+        let mut plan = compile(&dims, &machine).unwrap();
+        plan.threads = 3;
+        plan.tile.order = LoopOrder::Bmrk;
+        let g = Tensor::randn(vec![8, 6, 8, 8], 1.0, &mut rng);
+        let x = Tensor::randn(vec![61, 6, 8], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let mut ex = Executor::new(&machine);
+        ex.set_plan(plan);
+        let got = ex.execute(&dims, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn forced_bt_tiling_matches_reference() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(73);
+        let dims = EinsumDims { kind: EinsumKind::First, m: 16, b: 53, n: 9, r: 8, k: 1 };
+        let mut plan = compile(&dims, &machine).unwrap();
+        plan.tile.btl = Some(7); // deliberately non-dividing tile
+        let g = Tensor::randn(vec![8, 9, 16, 1], 1.0, &mut rng);
+        let x = Tensor::randn(vec![53, 9, 1], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        let mut ex = Executor::new(&machine);
+        ex.set_plan(plan);
+        let got = ex.execute(&dims, &pg, &x).unwrap();
+        let want = tt_einsum_ref(&g, &x).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn mismatched_layout_is_rejected() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(74);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 4, b: 4, n: 4, r: 8, k: 8 };
+        let naive = OptimizationPlan::naive(dims);
+        let g = Tensor::randn(vec![8, 4, 4, 8], 1.0, &mut rng);
+        let pg_naive = pack(&g, &naive).unwrap();
+        let x = Tensor::randn(vec![4, 4, 8], 1.0, &mut rng);
+        let mut ex = Executor::new(&machine);
+        assert!(ex.execute(&dims, &pg_naive, &x).is_err());
+        // bad input length
+        let pg = ex.pack(&g, &dims).unwrap();
+        let x_bad = Tensor::randn(vec![4, 4, 4], 1.0, &mut rng);
+        assert!(ex.execute(&dims, &pg, &x_bad).is_err());
+    }
+
+    #[test]
+    fn failed_call_leaves_scratch_untouched() {
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(75);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 6, b: 5, n: 3, r: 8, k: 8 };
+        let mut ex = Executor::new(&machine);
+        let g = Tensor::randn(vec![8, 3, 6, 8], 1.0, &mut rng);
+        let pg = ex.pack(&g, &dims).unwrap();
+        let x = Tensor::randn(vec![5, 3, 8], 1.0, &mut rng);
+        let good = ex.execute_with_scratch(&dims, &pg, x.data()).unwrap().to_vec();
+        // wrong input length: must fail *before* clearing the scratch
+        let err = ex.execute_with_scratch(&dims, &pg, &x.data()[..10]);
+        assert!(err.is_err());
+        assert_eq!(ex.scratch.out_slice(), &good[..], "scratch clobbered by failed call");
+    }
+
+    #[test]
+    fn run_tt_chain_matches_reference_forward() {
+        use crate::ttd::decompose::random_cores;
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(76);
+        let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(&machine);
+        // pack in processing order with the batch-1 plans
+        let chain1 = cost::einsum_chain(&layout, 1);
+        let packed: Vec<PackedG> = chain1
+            .iter()
+            .enumerate()
+            .map(|(step, d)| ex.pack(&tt.cores[layout.d() - 1 - step], d).unwrap())
+            .collect();
+        for batch in [1usize, 3] {
+            let x = Tensor::randn(vec![batch, 180], 1.0, &mut rng);
+            let out = ex.run_tt_chain(&layout, batch, &packed, x.data()).unwrap();
+            let want = crate::ttd::apply::tt_forward(&tt.cores, &x, None).unwrap();
+            // out is (M, B); want is (B, M)
+            for b in 0..batch {
+                for m in 0..100 {
+                    let a = out[m * batch + b];
+                    let w = want.at(&[b, m]).unwrap();
+                    assert!((a - w).abs() < 1e-3, "batch {batch} ({b},{m}): {a} vs {w}");
+                }
+            }
+        }
+    }
+}

@@ -1,28 +1,51 @@
 //! The optimized Einsum kernel engine — executable realizations of every
 //! optimization stage the compiler can plan (paper §4.3).
 //!
-//! `Out[m, b, r] = sum over (n, k) of G[r, n, m, k] * In[b, n, k]`
+//! # Data layout conventions
+//!
+//! This section is the single source of truth for the index conventions the
+//! whole crate uses (referenced from [`crate::ttd`], [`crate::tensor::einsum`]
+//! and [`crate::compiler::plan`] rather than restated there):
+//!
+//! * **Core `G`** is stored canonically as a rank-4 row-major tensor with
+//!   shape `(r, n, m, k)` = `(r_{t-1}, n_t, m_t, r_t)` — the T3F convention
+//!   of Novikov et al., *Tensorizing Neural Networks* (2015). `r` is the
+//!   *output* rank extent, `k` the *contracted* rank extent.
+//! * **Input slab** has shape `(b, n, k)` — the chain slab extent `b_t`,
+//!   the layer's input factor `n_t`, and the contracted rank `r_t`.
+//! * **Output** has shape `(m, b, r)` in row-major order:
+//!   `Out[m, b, r] = sum over (n, k) of G[r, n, m, k] * In[b, n, k]`
+//!   (the paper's Listing-2 hot-spot contraction).
 //!
 //! The RISC-V RVV intrinsics of the paper's listings are realized as
 //! fixed-width `[f32; VL]` lane arrays that LLVM auto-vectorizes on the host
-//! ISA (same lane count, same microkernel structure — DESIGN.md §3). The
-//! engine executes exactly what an [`OptimizationPlan`] prescribes:
+//! ISA (same lane count, same microkernel structure — DESIGN.md §3).
+//!
+//! # Execution model
+//!
+//! [`Executor`] is the **only** execution entry point: it owns the plan
+//! cache (keyed by the full [`crate::ttd::cost::EinsumDims`], batch
+//! included) and the scratch buffers of the serving hot loop, and it
+//! executes exactly what an [`OptimizationPlan`] prescribes:
 //!
 //! * [`pack`] — array packing of the constant core (§4.3.1, Listing 3);
 //! * vectorized r-loop / k-loop microkernels (§4.3.3, Listings 4-5);
 //! * register-blocked tiles with padding ukernels (§4.3.4, Listing 6);
 //! * bt tiling + loop order (§4.3.5) and thread parallelization (§4.2.3).
+//!
+//! [`OptimizationPlan`]: crate::compiler::OptimizationPlan
 
-mod packed;
-mod naive;
-mod micro;
 mod exec;
+mod executor;
+mod micro;
+mod naive;
+mod packed;
 mod tune;
 
-pub use exec::{execute, execute_into, execute_with_scratch, Scratch};
-pub use tune::tune_plan;
+pub use executor::Executor;
 pub use naive::naive_einsum;
 pub use packed::{pack, GLayout, PackedG};
+pub use tune::tune_plan;
 
 /// Microkernel lane width. Matches the paper's `vl` (256-bit RVV / f32) and
 /// both MachineSpec presets; a different `MachineSpec::vl_f32` is planned
@@ -68,7 +91,9 @@ mod tests {
                 ] {
                     let plan = compile_stage(&dims, &machine, stage).unwrap();
                     let pg = pack(&g, &plan).unwrap();
-                    let got = execute(&plan, &pg, &x).unwrap();
+                    let mut ex = Executor::new(&machine);
+                    ex.set_plan(plan);
+                    let got = ex.execute(&dims, &pg, &x).unwrap();
                     assert!(
                         got.allclose(&want, 1e-4, 1e-4),
                         "{} {:?} stage {:?}: maxdiff {}",
@@ -87,6 +112,7 @@ mod tests {
         // m, b deliberately prime / non-multiples of every blocking factor
         let machine = MachineSpec::spacemit_k1();
         let mut rng = Rng::new(41);
+        let mut ex = Executor::new(&machine);
         for (m, b, n, r, k) in [
             (1usize, 1usize, 1usize, 8usize, 8usize),
             (7, 11, 3, 8, 8),
@@ -105,9 +131,8 @@ mod tests {
             let dims = EinsumDims { kind, m, b, n, r, k };
             let (g, x) = rand_case(&dims, &mut rng);
             let want = tt_einsum_ref(&g, &x).unwrap();
-            let plan = compile(&dims, &machine).unwrap();
-            let pg = pack(&g, &plan).unwrap();
-            let got = execute(&plan, &pg, &x).unwrap();
+            let pg = ex.pack(&g, &dims).unwrap();
+            let got = ex.execute(&dims, &pg, &x).unwrap();
             assert!(
                 got.allclose(&want, 1e-4, 1e-4),
                 "dims {dims:?}: maxdiff {}",
@@ -136,9 +161,9 @@ mod tests {
             let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
             let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
             let want = tt_einsum_ref(&g, &x).map_err(|e| e.to_string())?;
-            let plan = compile(&dims, &machine).map_err(|e| e.to_string())?;
-            let pg = pack(&g, &plan).map_err(|e| e.to_string())?;
-            let got = execute(&plan, &pg, &x).map_err(|e| e.to_string())?;
+            let mut ex = Executor::new(&machine);
+            let pg = ex.pack(&g, &dims).map_err(|e| e.to_string())?;
+            let got = ex.execute(&dims, &pg, &x).map_err(|e| e.to_string())?;
             if got.allclose(&want, 1e-3, 1e-3) {
                 Ok(())
             } else {
@@ -148,5 +173,19 @@ mod tests {
                 ))
             }
         });
+    }
+
+    #[test]
+    fn executor_plan_agrees_with_compiler() {
+        // Executor::plan is a cached front-end over compiler::compile
+        let machine = MachineSpec::spacemit_k1();
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 96, b: 128, n: 14, r: 8, k: 8 };
+        let mut ex = Executor::new(&machine);
+        let p1 = ex.plan(&dims).unwrap();
+        let p2 = compile(&dims, &machine).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(ex.cached_plans(), 1);
+        let _ = ex.plan(&dims).unwrap();
+        assert_eq!(ex.cached_plans(), 1, "repeat lookups must hit the cache");
     }
 }

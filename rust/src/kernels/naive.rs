@@ -5,13 +5,20 @@ use crate::error::Result;
 use crate::tensor::einsum::{core_dims, slab_dims};
 use crate::tensor::Tensor;
 
-/// Plain five-deep loop nest over the canonical `G[r][n][m][k]`.
-pub fn naive_einsum(g: &Tensor, x: &Tensor) -> Result<Tensor> {
-    let (r, n, m, k) = core_dims(g)?;
-    let b = slab_dims(x, n, k)?;
-    let (gd, xd) = (g.data(), x.data());
-    let mut out = Tensor::zeros(vec![m, b, r]);
-    let od = out.data_mut();
+/// Listing-2 loop nest over the canonical `G[r][n][m][k]`, writing straight
+/// into a caller-owned `(m, b, r)` buffer — the allocation-free body shared
+/// by [`naive_einsum`] and the executor's Canonical path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn naive_region(
+    gd: &[f32],
+    xd: &[f32],
+    od: &mut [f32],
+    r: usize,
+    n: usize,
+    m: usize,
+    k: usize,
+    b: usize,
+) {
     for mi in 0..m {
         for bi in 0..b {
             for ri in 0..r {
@@ -26,6 +33,14 @@ pub fn naive_einsum(g: &Tensor, x: &Tensor) -> Result<Tensor> {
             }
         }
     }
+}
+
+/// Plain five-deep loop nest over the canonical `G[r][n][m][k]`.
+pub fn naive_einsum(g: &Tensor, x: &Tensor) -> Result<Tensor> {
+    let (r, n, m, k) = core_dims(g)?;
+    let b = slab_dims(x, n, k)?;
+    let mut out = Tensor::zeros(vec![m, b, r]);
+    naive_region(g.data(), x.data(), out.data_mut(), r, n, m, k, b);
     Ok(out)
 }
 

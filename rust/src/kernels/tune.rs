@@ -16,7 +16,8 @@ use crate::error::Result;
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
 
-use super::{execute_into, pack};
+use super::exec::execute_plan_into;
+use super::packed::pack;
 
 /// Re-rank the solver's top-`k` RB candidates by measurement and return the
 /// plan updated with the winner. `g`/`x` are representative buffers of the
@@ -39,11 +40,11 @@ pub fn tune_plan(
         let cand_plan = OptimizationPlan { rb, ..*plan };
         // warm once, then take the best of 3 (min is the right statistic
         // for short deterministic kernels)
-        execute_into(&cand_plan, &pg, x.data(), &mut out)?;
+        execute_plan_into(&cand_plan, &pg, x.data(), &mut out)?;
         let mut t_best = f64::INFINITY;
         for _ in 0..3 {
             let t0 = Instant::now();
-            execute_into(&cand_plan, &pg, x.data(), &mut out)?;
+            execute_plan_into(&cand_plan, &pg, x.data(), &mut out)?;
             t_best = t_best.min(t0.elapsed().as_secs_f64());
         }
         if t_best < best.1 {
@@ -75,7 +76,9 @@ mod tests {
         assert!(tuned.rb.registers() <= machine.vector_regs as usize);
         // and must still compute the right answer
         let pg = pack(&g, &tuned).unwrap();
-        let got = crate::kernels::execute(&tuned, &pg, &x).unwrap();
+        let mut ex = crate::kernels::Executor::new(&machine);
+        ex.set_plan(tuned);
+        let got = ex.execute(&dims, &pg, &x).unwrap();
         let want = tt_einsum_ref(&g, &x).unwrap();
         assert!(got.allclose(&want, 1e-4, 1e-4));
     }

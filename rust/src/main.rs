@@ -13,14 +13,14 @@
 
 use std::collections::HashMap;
 
-use ttrv::baselines::{iree_like, pluto_like};
+use ttrv::baselines::iree_like;
 use ttrv::bench::{format_table, measure, BenchCfg};
 use ttrv::compiler::{cb_suite, compile};
 use ttrv::config::{DseConfig, ServeConfig};
 use ttrv::coordinator::{InferenceRequest, LayerOp, ModelEngine, Server, TtFcEngine};
 use ttrv::dse;
 use ttrv::dse::report::{format_rows, rows_for_model};
-use ttrv::kernels;
+use ttrv::kernels::Executor;
 use ttrv::machine::MachineSpec;
 use ttrv::models;
 use ttrv::tensor::Tensor;
@@ -172,22 +172,22 @@ fn cmd_kernel_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let bcfg = if args.contains_key("quick") { BenchCfg::quick() } else { BenchCfg::from_env() };
     let machine = MachineSpec::spacemit_k1();
     let mut rng = Rng::new(7);
+    let mut ex = Executor::new(&machine);
     for entry in cb_suite(kind) {
         let d = entry.dims;
         let g = Tensor::randn(vec![d.r, d.n, d.m, d.k], 1.0, &mut rng);
         let x = Tensor::randn(vec![d.b, d.n, d.k], 1.0, &mut rng);
-        let plan = compile(&d, &machine)?;
-        let pg = kernels::pack(&g, &plan)?;
+        let pg = ex.pack(&g, &d)?;
         let gm = iree_like::prepare_g(&g)?;
         let mut rows = Vec::new();
         rows.push(measure(&format!("{} ours", entry.id), d.flops(), &bcfg, || {
-            kernels::execute(&plan, &pg, &x).expect("kernel");
+            ex.execute(&d, &pg, &x).expect("kernel");
         }));
         rows.push(measure(&format!("{} iree-like", entry.id), d.flops(), &bcfg, || {
-            iree_like::run(&gm, &x, d.r).expect("iree");
+            ex.execute_iree_prepared(&gm, d.r, &x).expect("iree");
         }));
         rows.push(measure(&format!("{} pluto-like", entry.id), d.flops(), &bcfg, || {
-            pluto_like::einsum_default(&g, &x).expect("pluto");
+            ex.execute_pluto_like(&g, &x).expect("pluto");
         }));
         print!("{}", format_table(&format!("{:?} einsum {}", kind, entry.id), &rows, Some(1)));
     }

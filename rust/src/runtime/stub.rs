@@ -1,0 +1,61 @@
+//! API-identical stand-in for the PJRT backend used when the `pjrt` feature
+//! (and its vendored `xla` crate) is absent. `Runtime::open` always fails
+//! loudly — with or without an artifacts directory present — so callers can
+//! never silently run without the real executor; both types are
+//! uninhabited, making the rest of the surface provably unreachable while
+//! keeping call sites (tests, CLI, examples) compiling.
+
+use std::convert::Infallible;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::manifest::{ArtifactManifest, ArtifactMeta};
+
+fn unavailable() -> Error {
+    Error::runtime(
+        "PJRT backend not built: this binary was compiled without the `pjrt` \
+         feature (vendor the `xla` crate and build with `--features pjrt`)",
+    )
+}
+
+/// Stub runtime: never constructible; `open` always errs.
+pub struct Runtime {
+    never: Infallible,
+}
+
+impl Runtime {
+    /// Always fails: the PJRT executor is not compiled in. The manifest path
+    /// is still validated first so a missing artifact directory gives the
+    /// more actionable of the two errors.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        ArtifactManifest::load(&dir.as_ref().join("manifest.json"))?;
+        Err(unavailable())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn compile(&self, _name: &str) -> Result<Executable> {
+        match self.never {}
+    }
+}
+
+/// Stub executable: uninhabited (no stub `Runtime` exists to create one).
+pub enum Executable {}
+
+impl Executable {
+    pub fn meta(&self) -> &ArtifactMeta {
+        match *self {}
+    }
+
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match *self {}
+    }
+}

@@ -11,8 +11,8 @@ use crate::tensor::Tensor;
 ///
 /// `Out[m, b, r] = sum_{n, k} G[r, n, m, k] * In[b, n, k]`
 ///
-/// `g` has shape `(r, n, m, k)` = `(r_{t-1}, n_t, m_t, r_t)`; `x` has shape
-/// `(b, n, k)`; the result has shape `(m, b, r)`.
+/// Index conventions are documented once in [`crate::kernels`] (§ Data
+/// layout conventions).
 pub fn tt_einsum_ref(g: &Tensor, x: &Tensor) -> Result<Tensor> {
     let (r, n, m, k) = core_dims(g)?;
     let b = slab_dims(x, n, k)?;

@@ -58,8 +58,9 @@ pub enum EinsumKind {
     Final,
 }
 
-/// Concrete loop bounds of one Einsum kernel instance
-/// (`Out[m, b, r] += G[r, n, m, k] * In[b, n, k]`).
+/// Concrete loop bounds of one Einsum kernel instance. The core/slab/output
+/// index convention is documented once in [`crate::kernels`] (§ Data layout
+/// conventions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EinsumDims {
     pub kind: EinsumKind,
@@ -99,8 +100,16 @@ impl EinsumDims {
 /// The Einsum chain a TT layout executes for batch size `batch`, in
 /// processing order (t = d down to t = 1) — paper Listing 1.
 pub fn einsum_chain(layout: &TtLayout, batch: usize) -> Vec<EinsumDims> {
+    let mut out = Vec::with_capacity(layout.d());
+    einsum_chain_into(layout, batch, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`einsum_chain`]: clears and refills `out`
+/// (the serving executor reuses one buffer across requests).
+pub fn einsum_chain_into(layout: &TtLayout, batch: usize, out: &mut Vec<EinsumDims>) {
+    out.clear();
     let d = layout.d();
-    let mut out = Vec::with_capacity(d);
     let mut cur_size = batch as u64 * layout.n_total();
     for t in (0..d).rev() {
         let [r_prev, n_t, m_t, r_t] = layout.core_shape(t);
@@ -122,7 +131,6 @@ pub fn einsum_chain(layout: &TtLayout, batch: usize) -> Vec<EinsumDims> {
         });
         cur_size = m_t as u64 * b_t * r_prev as u64;
     }
-    out
 }
 
 #[cfg(test)]

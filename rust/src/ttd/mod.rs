@@ -18,7 +18,8 @@ use crate::factor;
 /// A validated TT-matrix layout for an FC layer `y = Wx + b`,
 /// `W (M, N)` with `M = prod(m_shape)`, `N = prod(n_shape)`.
 ///
-/// Cores have T3F shape `(r_{t-1}, n_t, m_t, r_t)`; `ranks` has length
+/// Core/slab/output index conventions are documented once in
+/// [`crate::kernels`] (§ Data layout conventions); `ranks` has length
 /// `d + 1` with `ranks[0] == ranks[d] == 1`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TtLayout {

@@ -1,0 +1,119 @@
+//! Proof that the serving hot loop performs zero heap allocation per request
+//! on all three `G` layouts (Canonical, PackedR, PackedK), via a counting
+//! global allocator. Plans are pinned to one thread — the serving hot-loop
+//! configuration — because the multi-threaded paths inherently allocate
+//! their fork/join scratch (per-thread slices / merge buffers).
+//! Everything lives in ONE #[test] so concurrent tests cannot perturb the
+//! counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
+use ttrv::kernels::{pack, Executor, VL};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{einsum_chain, EinsumDims, EinsumKind};
+use ttrv::ttd::decompose::random_cores;
+use ttrv::ttd::TtLayout;
+use ttrv::util::prng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn single_thread_plan(dims: EinsumDims, pack_g: bool, vloop: VectorLoop) -> OptimizationPlan {
+    OptimizationPlan {
+        dims,
+        pack_g,
+        vector_loop: vloop,
+        vl: if vloop == VectorLoop::None { 1 } else { VL },
+        rb: RbFactors { rm: 2, rb: 3, rr: 1, rk: 1 },
+        tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+        threads: 1,
+        ls_estimate: 0,
+    }
+}
+
+#[test]
+fn hot_loop_is_allocation_free_on_all_layouts() {
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(120);
+    let dims = EinsumDims { kind: EinsumKind::Middle, m: 24, b: 17, n: 5, r: 8, k: 8 };
+    let g = Tensor::randn(vec![8, 5, 24, 8], 1.0, &mut rng);
+    let x = Tensor::randn(vec![17, 5, 8], 1.0, &mut rng);
+
+    // single-kernel hot path: each of the three layouts must be
+    // allocation-free after the first (warming) call
+    let cases = [
+        ("Canonical", single_thread_plan(dims, false, VectorLoop::None)),
+        ("PackedR", single_thread_plan(dims, true, VectorLoop::R)),
+        ("PackedK", single_thread_plan(dims, true, VectorLoop::None)),
+    ];
+    for (name, plan) in cases {
+        let mut ex = Executor::new(&machine);
+        ex.set_plan(plan);
+        let pg = pack(&g, &plan).unwrap();
+        // warm: resizes scratch, no further growth afterwards
+        ex.execute_with_scratch(&dims, &pg, x.data()).unwrap();
+        ex.execute_with_scratch(&dims, &pg, x.data()).unwrap();
+        let before = allocs();
+        for _ in 0..10 {
+            ex.execute_with_scratch(&dims, &pg, x.data()).unwrap();
+        }
+        let delta = allocs() - before;
+        assert_eq!(delta, 0, "{name}: {delta} allocations in 10 warm executes");
+    }
+
+    // chain hot path (the serving engine's forward): warm once per batch,
+    // then zero allocations per request
+    let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+    let tt = random_cores(&layout, &mut rng);
+    let mut ex = Executor::new(&machine);
+    let chain = einsum_chain(&layout, 4);
+    // force single-thread plans so no scoped-thread spawns allocate
+    let packed: Vec<_> = chain
+        .iter()
+        .enumerate()
+        .map(|(step, d)| {
+            let mut plan = ex.plan(d).unwrap();
+            plan.threads = 1;
+            ex.set_plan(plan);
+            ex.pack(&tt.cores[layout.d() - 1 - step], d).unwrap()
+        })
+        .collect();
+    let xb = Tensor::randn(vec![4, 180], 1.0, &mut rng);
+    ex.run_tt_chain(&layout, 4, &packed, xb.data()).unwrap();
+    ex.run_tt_chain(&layout, 4, &packed, xb.data()).unwrap();
+    let before = allocs();
+    for _ in 0..10 {
+        ex.run_tt_chain(&layout, 4, &packed, xb.data()).unwrap();
+    }
+    let delta = allocs() - before;
+    assert_eq!(delta, 0, "chain: {delta} allocations in 10 warm requests");
+}

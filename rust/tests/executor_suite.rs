@@ -1,0 +1,171 @@
+//! Integration: the unified Executor entry point.
+//!
+//! * The same Einsum must produce **byte-identical** output across the three
+//!   `G` layouts whose kernels accumulate in the same order (Canonical naive,
+//!   PackedR r-vectorized, PackedK scalar) and across 1..4 threads, both
+//!   loop orders, and bt tiling — threading and tiling repartition work but
+//!   never reassociate a single output element's summation.
+//! * The k-vectorized kernel reassociates (lane-split + pairwise reduction),
+//!   so it is held to numerical closeness instead.
+//! * TT-SVD + interleave roundtrip on d=3/d=4 layouts with non-uniform ranks
+//!   and non-dividing (prime-mixed) shapes.
+
+use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
+use ttrv::kernels::{pack, Executor, VL};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{EinsumDims, EinsumKind};
+use ttrv::ttd::decompose::{random_cores, tt_svd};
+use ttrv::ttd::TtLayout;
+use ttrv::util::prng::Rng;
+
+#[allow(clippy::too_many_arguments)]
+fn plan_with(
+    dims: EinsumDims,
+    pack_g: bool,
+    vloop: VectorLoop,
+    rb: RbFactors,
+    order: LoopOrder,
+    btl: Option<usize>,
+    threads: u32,
+) -> OptimizationPlan {
+    OptimizationPlan {
+        dims,
+        pack_g,
+        vector_loop: vloop,
+        vl: if vloop == VectorLoop::None { 1 } else { VL },
+        rb,
+        tile: TilePlan { order, btl },
+        threads,
+        ls_estimate: 0,
+    }
+}
+
+fn run(ex: &mut Executor, plan: OptimizationPlan, g: &Tensor, x: &Tensor) -> Vec<f32> {
+    let pg = pack(g, &plan).unwrap();
+    ex.set_plan(plan);
+    ex.execute(&plan.dims, &pg, x).unwrap().into_vec()
+}
+
+#[test]
+fn byte_identical_across_layouts_threads_orders_and_tiles() {
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(90);
+    let mut ex = Executor::new(&machine);
+    for (m, b, n, r, k) in [
+        (7usize, 11usize, 3usize, 8usize, 8usize),
+        (13, 29, 2, 16, 8),
+        (5, 9, 4, 8, 1),
+        (16, 32, 6, 8, 8),
+    ] {
+        let kind = if k == 1 { EinsumKind::First } else { EinsumKind::Middle };
+        let dims = EinsumDims { kind, m, b, n, r, k };
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+
+        // reference: the Canonical (naive) path
+        let want = run(&mut ex, OptimizationPlan::naive(dims), &g, &x);
+
+        // PackedK scalar and PackedR r-vectorized, across threading/tiling
+        for threads in 1..=4u32 {
+            for order in [LoopOrder::Mbrk, LoopOrder::Bmrk] {
+                for btl in [None, Some(5)] {
+                    let scalar = plan_with(
+                        dims, true, VectorLoop::None, RbFactors::NONE, order, btl, threads,
+                    );
+                    assert_eq!(
+                        run(&mut ex, scalar, &g, &x),
+                        want,
+                        "PackedK scalar differs: {dims:?} T={threads} {order:?} btl={btl:?}"
+                    );
+                    for (rm, rbf) in [(1usize, 1usize), (2, 3), (4, 2), (8, 8)] {
+                        let rbl = RbFactors { rm, rb: rbf, rr: 1, rk: 1 };
+                        let rplan =
+                            plan_with(dims, true, VectorLoop::R, rbl, order, btl, threads);
+                        assert_eq!(
+                            run(&mut ex, rplan, &g, &x),
+                            want,
+                            "PackedR differs: {dims:?} rb=({rm},{rbf}) T={threads} \
+                             {order:?} btl={btl:?}"
+                        );
+                    }
+                }
+            }
+        }
+
+        // k-vectorized reassociates the contraction: close, not bitwise
+        let kplan = plan_with(
+            dims, true, VectorLoop::K, RbFactors::NONE, LoopOrder::Mbrk, None, 1,
+        );
+        let got = run(&mut ex, kplan, &g, &x);
+        for (a, w) in got.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-3 + 1e-3 * w.abs(), "{a} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn ttsvd_roundtrip_d3_d4_nonuniform_ranks_nondividing_shapes() {
+    let mut rng = Rng::new(91);
+    for (ms, ns, truth_ranks, target_ranks) in [
+        // d = 3, prime-mixed factors, ranks differ per boundary
+        (vec![6u64, 5, 2], vec![4u64, 3, 7], vec![1u64, 4, 2, 1], vec![1u64, 6, 4, 1]),
+        (vec![7, 4, 3], vec![3, 5, 2], vec![1, 3, 5, 1], vec![1, 5, 8, 1]),
+        // d = 4
+        (vec![5, 3, 2, 2], vec![2, 3, 5, 2], vec![1, 2, 4, 2, 1], vec![1, 4, 6, 4, 1]),
+    ] {
+        let truth_layout = TtLayout::new(ms.clone(), ns.clone(), truth_ranks).unwrap();
+        let truth = random_cores(&truth_layout, &mut rng);
+        let w = truth.reconstruct().unwrap();
+        let target = TtLayout::new(ms.clone(), ns.clone(), target_ranks.clone()).unwrap();
+        let tt = tt_svd(&w, &target).unwrap();
+        // the truth is exactly representable at the target ranks: exact
+        let err = tt.rel_error(&w).unwrap();
+        assert!(err < 1e-3, "{} err {err}", target.describe());
+        // achieved ranks never exceed the request
+        for (a, r) in tt.layout.ranks().iter().zip(&target_ranks) {
+            assert!(a <= r, "achieved {a} > requested {r}");
+        }
+        // cores carry the achieved-layout shapes and the chain forward
+        // agrees with the dense reconstruction
+        for (t, c) in tt.cores.iter().enumerate() {
+            assert_eq!(c.dims(), tt.layout.core_shape(t));
+        }
+        let n_total = target.n_total() as usize;
+        let x = Tensor::randn(vec![3, n_total], 1.0, &mut rng);
+        let via_chain = ttrv::ttd::apply::tt_forward(&tt.cores, &x, None).unwrap();
+        let w_hat = tt.reconstruct().unwrap();
+        let via_dense = ttrv::tensor::einsum::fc_batched_ref(&w_hat, &x, None).unwrap();
+        assert!(via_chain.allclose(&via_dense, 1e-3, 1e-3));
+    }
+}
+
+#[test]
+fn property_full_rank_ttsvd_exact_on_random_awkward_shapes() {
+    ttrv::testkit::check("tt-svd full-rank exactness", 6, |d| {
+        let dlen = *d.choose(&[3usize, 4]);
+        // keep unfoldings small enough for the Jacobi SVD: primes for d=3,
+        // {2,3} for d=4
+        let pool: &[u64] = if dlen == 3 { &[2, 3, 5] } else { &[2, 3] };
+        let ms: Vec<u64> = (0..dlen).map(|_| *d.choose(pool)).collect();
+        let ns: Vec<u64> = (0..dlen).map(|_| *d.choose(pool)).collect();
+        let m_total: u64 = ms.iter().product();
+        let n_total: u64 = ns.iter().product();
+        let mut rng = d.rng().fork();
+        let w = Tensor::randn(vec![m_total as usize, n_total as usize], 1.0, &mut rng);
+        // unconstrained ranks: achieved ranks clip to the unfolding ranks
+        // and the decomposition must be exact
+        let target = TtLayout::new(ms, ns, vec![10_000; dlen + 1].into_iter()
+            .enumerate()
+            .map(|(i, r)| if i == 0 || i == dlen { 1 } else { r })
+            .collect())
+            .map_err(|e| e.to_string())?;
+        let tt = tt_svd(&w, &target).map_err(|e| e.to_string())?;
+        let err = tt.rel_error(&w).map_err(|e| e.to_string())?;
+        if err < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!("{}: full-rank err {err}", target.describe()))
+        }
+    });
+}

@@ -1,9 +1,10 @@
 //! Integration: the full Table-3 CB suite, every optimization stage, every
 //! kernel variant, against the reference einsum — plus randomized sweeps.
+//! Everything runs through the one [`Executor`] entry point.
 
+use ttrv::compiler::cb_suite;
 use ttrv::compiler::pipeline::{compile_stage, OptStage};
-use ttrv::compiler::{cb_suite, compile};
-use ttrv::kernels;
+use ttrv::kernels::{pack, Executor};
 use ttrv::machine::MachineSpec;
 use ttrv::tensor::einsum::tt_einsum_ref;
 use ttrv::tensor::Tensor;
@@ -15,8 +16,10 @@ fn check_dims(dims: &EinsumDims, machine: &MachineSpec, rng: &mut Rng, stage: Op
     let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, rng);
     let want = tt_einsum_ref(&g, &x).unwrap();
     let plan = compile_stage(dims, machine, stage).unwrap();
-    let pg = kernels::pack(&g, &plan).unwrap();
-    let got = kernels::execute(&plan, &pg, &x).unwrap();
+    let pg = pack(&g, &plan).unwrap();
+    let mut ex = Executor::new(machine);
+    ex.set_plan(plan);
+    let got = ex.execute(dims, &pg, &x).unwrap();
     // accumulation-order noise grows with the contraction length (reference
     // sums sequentially, microkernels pairwise across lanes)
     let tol = 2e-4 * ((dims.n * dims.k) as f32).sqrt().max(1.0);
@@ -98,9 +101,9 @@ fn randomized_shape_fuzz() {
         let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
         let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
         let want = tt_einsum_ref(&g, &x).map_err(|e| e.to_string())?;
-        let plan = compile(&dims, &machine).map_err(|e| e.to_string())?;
-        let pg = kernels::pack(&g, &plan).map_err(|e| e.to_string())?;
-        let got = kernels::execute(&plan, &pg, &x).map_err(|e| e.to_string())?;
+        let mut ex = Executor::new(&machine);
+        let pg = ex.pack(&g, &dims).map_err(|e| e.to_string())?;
+        let got = ex.execute(&dims, &pg, &x).map_err(|e| e.to_string())?;
         if got.allclose(&want, 1e-3, 1e-3) {
             Ok(())
         } else {
@@ -111,19 +114,20 @@ fn randomized_shape_fuzz() {
 
 #[test]
 fn baselines_agree_with_kernel_engine() {
-    // ours, IREE-like and Pluto-like must all compute the same function
+    // ours, IREE-like and Pluto-like must all compute the same function —
+    // and all three run through the Executor entry point
     let machine = MachineSpec::spacemit_k1();
     let mut rng = Rng::new(4);
+    let mut ex = Executor::new(&machine);
     for e in cb_suite(EinsumKind::Middle).into_iter().take(5) {
         let mut dims = e.dims;
         dims.b = dims.b.min(200);
         let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, &mut rng);
         let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, &mut rng);
-        let plan = compile(&dims, &machine).unwrap();
-        let pg = kernels::pack(&g, &plan).unwrap();
-        let ours = kernels::execute(&plan, &pg, &x).unwrap();
-        let iree = ttrv::baselines::iree_like::einsum(&g, &x).unwrap();
-        let pluto = ttrv::baselines::pluto_like::einsum_default(&g, &x).unwrap();
+        let pg = ex.pack(&g, &dims).unwrap();
+        let ours = ex.execute(&dims, &pg, &x).unwrap();
+        let iree = ex.execute_iree_like(&g, &x).unwrap();
+        let pluto = ex.execute_pluto_like(&g, &x).unwrap();
         assert!(ours.allclose(&iree, 2e-4, 2e-4), "{}", e.id);
         assert!(ours.allclose(&pluto, 2e-4, 2e-4), "{}", e.id);
     }
