@@ -2,7 +2,12 @@
 //! and on the equivalent dense model, drive both with the same synthetic
 //! request trace, and compare throughput/latency and memory.
 //!
-//! Run: `cargo run --release --example serve_compressed [requests]`
+//! Run: `cargo run --release --example serve_compressed [requests] [workers]`
+//!
+//! `workers` (default 1) sizes the coordinator's batching-worker pool;
+//! each worker shares the compiled model and owns a private executor, so
+//! responses are identical at any pool size while throughput scales with
+//! cores. Try `serve_compressed 2000 4` on a multi-core host.
 
 use std::time::Instant;
 
@@ -82,13 +87,22 @@ fn main() -> ttrv::Result<()> {
         .nth(1)
         .and_then(|v| v.parse().ok())
         .unwrap_or(500);
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
     let mut rng = Rng::new(7);
     let (tt_model, dense_model, tt_params, dense_params) = build_models(&mut rng)?;
     println!(
         "\nmodel size: dense {dense_params} params vs TT-routed {tt_params} params ({:.1}x)\n",
         dense_params as f64 / tt_params as f64
     );
-    let cfg = ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 4096, workers: 1 };
+    let cfg = ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 4096, workers };
+    cfg.validate()?;
+    println!(
+        "coordinator: {workers} worker(s), max_batch {}, wait {}us\n",
+        cfg.max_batch, cfg.max_wait_us
+    );
 
     let tt_server = Server::start(tt_model, cfg.clone());
     let (tt_time, tt_metrics) = drive(&tt_server, requests, &mut rng);

@@ -13,7 +13,9 @@ pub struct DenseFc {
     /// `(N, M)` — transposed weights.
     wt: Tensor,
     bias: Option<Vec<f32>>,
+    /// Output width.
     pub m: usize,
+    /// Input width.
     pub n: usize,
 }
 

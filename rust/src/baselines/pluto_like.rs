@@ -11,7 +11,9 @@ use crate::tensor::Tensor;
 /// Tile sizes a polyhedral scheduler would emit for an L2-sized footprint.
 #[derive(Debug, Clone, Copy)]
 pub struct PlutoTiles {
+    /// Tile extent over `m`.
     pub tm: usize,
+    /// Tile extent over `b`.
     pub tb: usize,
 }
 

@@ -12,17 +12,20 @@ use crate::util::{stats, timer};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark label.
     pub name: String,
     /// Trimmed-mean seconds per iteration.
     pub seconds: f64,
     /// Median absolute deviation of the samples.
     pub mad: f64,
+    /// Timed iterations actually run.
     pub iters: usize,
     /// Work per iteration, used for GFLOP/s reporting (0 = unknown).
     pub flops: u64,
 }
 
 impl Measurement {
+    /// Throughput implied by `seconds` and `flops`.
     pub fn gflops(&self) -> f64 {
         if self.seconds > 0.0 {
             self.flops as f64 / self.seconds / 1e9
@@ -35,9 +38,13 @@ impl Measurement {
 /// Harness configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchCfg {
+    /// Untimed warmup iterations.
     pub warmup_iters: usize,
+    /// Minimum timed iterations.
     pub min_iters: usize,
+    /// Minimum total timed wall-clock.
     pub min_time: Duration,
+    /// Fraction trimmed from each tail of the sample set.
     pub trim: f64,
 }
 
@@ -52,8 +59,8 @@ impl Default for BenchCfg {
     }
 }
 
-/// Quick preset for CI / smoke runs.
 impl BenchCfg {
+    /// Quick preset for CI / smoke runs.
     pub fn quick() -> Self {
         BenchCfg {
             warmup_iters: 1,

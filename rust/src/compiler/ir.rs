@@ -7,7 +7,9 @@ pub use crate::ttd::cost::{EinsumDims, EinsumKind};
 /// instance drawn from the studied models.
 #[derive(Debug, Clone, Copy)]
 pub struct CbEntry {
+    /// Table 3 row label (e.g. `cb1`).
     pub id: &'static str,
+    /// The kernel instance's loop bounds.
     pub dims: EinsumDims,
 }
 

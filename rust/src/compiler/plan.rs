@@ -27,13 +27,18 @@ pub enum VectorLoop {
 /// loop in *vector registers* (each covering `vl` lanes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RbFactors {
+    /// Unroll factor of the scalar `m` loop.
     pub rm: usize,
+    /// Unroll factor of the scalar `b` loop.
     pub rb: usize,
+    /// Vector-register unroll of the `r` loop.
     pub rr: usize,
+    /// Vector-register unroll of the `k` loop.
     pub rk: usize,
 }
 
 impl RbFactors {
+    /// No blocking: every factor 1.
     pub const NONE: RbFactors = RbFactors { rm: 1, rb: 1, rr: 1, rk: 1 };
 
     /// Vector registers the innermost body needs (paper Eq. 19):
@@ -56,6 +61,7 @@ pub enum LoopOrder {
 /// L2 tiling decision (paper Eq. 26-28).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TilePlan {
+    /// Which of the two studied loop orders runs.
     pub order: LoopOrder,
     /// Tile length over `bt` when Eq. 26/27 fail and Eq. 28 must be applied;
     /// `None` = untiled.
@@ -65,14 +71,18 @@ pub struct TilePlan {
 /// Everything the kernel engine needs to execute one Einsum optimally.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OptimizationPlan {
+    /// The Einsum instance this plan executes.
     pub dims: EinsumDims,
     /// Pack `G` into the access-ordered layout (always on in the full
     /// pipeline; off in ablation stages).
     pub pack_g: bool,
+    /// Which loop the microkernel vectorizes.
     pub vector_loop: VectorLoop,
     /// f32 lanes per vector register on the target.
     pub vl: usize,
+    /// Register-blocking factors (Eq. 19-25 solution).
     pub rb: RbFactors,
+    /// L2 tiling decision (Eq. 26-28).
     pub tile: TilePlan,
     /// Threads assigned by the Fig. 9 heuristic.
     pub threads: u32,

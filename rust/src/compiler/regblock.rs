@@ -25,12 +25,16 @@ fn delta(x: usize) -> u64 {
 /// Load/store instruction counts per array (Eq. 20 decomposition).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LsCounts {
+    /// Loads of the packed core `G`.
     pub g: u64,
+    /// Loads of the input slab.
     pub input: u64,
+    /// Loads + stores of the output.
     pub output: u64,
 }
 
 impl LsCounts {
+    /// Total load/store count (the Eq. 20 objective).
     pub fn total(&self) -> u64 {
         self.g + self.input + self.output
     }

@@ -7,9 +7,11 @@
 use crate::machine::MachineSpec;
 use crate::ttd::cost::EinsumDims;
 
-/// FLOPs thresholds of the paper's measured study.
+/// FLOPs threshold of the paper's measured study: above this, two threads.
 pub const T2: u64 = 2_000_000;
+/// Above this many FLOPs: three threads.
 pub const T3: u64 = 4_000_000;
+/// Above this many FLOPs: four threads.
 pub const T4: u64 = 8_000_000;
 
 /// Threads to assign to one Einsum kernel, capped by the machine's cores.

@@ -18,13 +18,18 @@ pub struct Toml {
 /// A TOML-subset scalar.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A string value.
     Str(String),
+    /// An integer value.
     Int(i64),
+    /// A float value.
     Float(f64),
+    /// A boolean value.
     Bool(bool),
 }
 
 impl Toml {
+    /// Parse a TOML-subset document.
     pub fn parse(text: &str) -> Result<Toml> {
         let mut out = Toml::default();
         let mut section = String::new();
@@ -54,10 +59,12 @@ impl Toml {
         Ok(out)
     }
 
+    /// Raw value lookup.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section)?.get(key)
     }
 
+    /// String-typed lookup (None when absent or mistyped).
     pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
         match self.get(section, key) {
             Some(Value::Str(s)) => Some(s),
@@ -65,6 +72,7 @@ impl Toml {
         }
     }
 
+    /// Integer-typed lookup (None when absent or mistyped).
     pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
         match self.get(section, key) {
             Some(Value::Int(v)) => Some(*v),
@@ -72,6 +80,7 @@ impl Toml {
         }
     }
 
+    /// Float-typed lookup (ints coerce; None when absent or mistyped).
     pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
         match self.get(section, key) {
             Some(Value::Float(v)) => Some(*v),
@@ -80,6 +89,7 @@ impl Toml {
         }
     }
 
+    /// Bool-typed lookup (None when absent or mistyped).
     pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
         match self.get(section, key) {
             Some(Value::Bool(b)) => Some(*b),
@@ -129,17 +139,20 @@ fn parse_value(s: &str) -> std::result::Result<Value, String> {
 /// DSE engine knobs (paper §4.1-4.2 constants, overridable per run).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DseConfig {
-    /// Ranks must be multiples of this (the vectorization constraint).
+    /// Ranks must be multiples of this (the vectorization constraint,
+    /// paper Eq. 18). Must be >= 1.
     pub vl: u64,
-    /// Uniform rank values to sweep.
+    /// Uniform rank values to sweep. Must be non-empty, every entry >= 1.
     pub ranks: Vec<u64>,
-    /// Maximum configuration length to explore.
+    /// Maximum configuration length `d` to explore. Must be >= 1.
     pub d_max: usize,
-    /// Scalability cut: discard d > limit when the heaviest einsum is below
-    /// `scal_flops` FLOPs.
+    /// Scalability cut: discard `d > d_scal_limit` when the heaviest
+    /// einsum is below [`DseConfig::scal_flops`] FLOPs (paper §4.2.2).
+    /// Must be >= 1.
     pub d_scal_limit: usize,
+    /// FLOP threshold for the scalability cut.
     pub scal_flops: u64,
-    /// Batch size assumed when pricing inference.
+    /// Batch size assumed when pricing inference. Must be >= 1.
     pub batch: usize,
 }
 
@@ -156,14 +169,49 @@ impl Default for DseConfig {
     }
 }
 
+impl DseConfig {
+    /// Reject configurations that would make the DSE enumerate nothing or
+    /// divide by zero downstream. Called by [`load`]; call it yourself when
+    /// constructing a config programmatically.
+    pub fn validate(&self) -> Result<()> {
+        if self.vl < 1 {
+            return Err(Error::config("dse.vl must be >= 1"));
+        }
+        if self.d_max < 1 {
+            return Err(Error::config("dse.d_max must be >= 1"));
+        }
+        if self.d_scal_limit < 1 {
+            return Err(Error::config("dse.d_scal_limit must be >= 1"));
+        }
+        if self.batch < 1 {
+            return Err(Error::config("dse.batch must be >= 1"));
+        }
+        if self.ranks.is_empty() {
+            return Err(Error::config("dse.ranks must list at least one rank"));
+        }
+        if let Some(r) = self.ranks.iter().find(|&&r| r < 1) {
+            return Err(Error::config(format!("dse.ranks entry {r} must be >= 1")));
+        }
+        Ok(())
+    }
+}
+
 /// Serving coordinator knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
+    /// Largest batch a worker executes; the dynamic batcher closes a batch
+    /// at this size even before the wait window expires. Must be >= 1.
     pub max_batch: usize,
-    /// Max time a request waits for batch-mates.
+    /// Max time (microseconds) a request waits for batch-mates before its
+    /// non-full batch is dispatched anyway.
     pub max_wait_us: u64,
-    /// Bounded queue length (admission control).
+    /// Bounded admission-queue length: submissions beyond this fail fast
+    /// with a queue-full error instead of blocking. Must be >= 1.
     pub queue_cap: usize,
+    /// Number of batching workers sharing the admission queue. Each worker
+    /// owns a private executor (plan cache + scratch) over the `Arc`-shared
+    /// compiled model, so responses are byte-identical for any worker
+    /// count; throughput scales with cores. Must be >= 1.
     pub workers: usize,
 }
 
@@ -173,41 +221,80 @@ impl Default for ServeConfig {
     }
 }
 
-/// Load DSE + serve configs from a TOML-subset file.
+impl ServeConfig {
+    /// Reject configurations that would deadlock or panic the coordinator
+    /// at runtime (zero workers = nobody consumes the queue; zero queue
+    /// capacity = every submission rejected; zero max_batch = batches can
+    /// never close). Called by [`load`]; call it yourself when constructing
+    /// a config programmatically.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers < 1 {
+            return Err(Error::config("serve.workers must be >= 1"));
+        }
+        if self.queue_cap < 1 {
+            return Err(Error::config("serve.queue_cap must be >= 1"));
+        }
+        if self.max_batch < 1 {
+            return Err(Error::config("serve.max_batch must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// A non-negative integer field (negative values would otherwise wrap
+/// through the unsigned cast and dodge validation).
+fn non_negative(t: &Toml, section: &str, key: &str) -> Result<Option<u64>> {
+    match t.get_int(section, key) {
+        None => Ok(None),
+        Some(v) => u64::try_from(v)
+            .map(Some)
+            .map_err(|_| Error::config(format!("{section}.{key} must be >= 0, got {v}"))),
+    }
+}
+
+/// Load DSE + serve configs from a TOML-subset file. Both configs are
+/// validated ([`DseConfig::validate`] / [`ServeConfig::validate`]): a file
+/// that would panic or deadlock the runtime is rejected here, loudly.
 pub fn load(text: &str) -> Result<(DseConfig, ServeConfig)> {
     let t = Toml::parse(text)?;
     let mut dse = DseConfig::default();
-    if let Some(v) = t.get_int("dse", "vl") {
-        dse.vl = v as u64;
+    if let Some(v) = non_negative(&t, "dse", "vl")? {
+        dse.vl = v;
     }
-    if let Some(v) = t.get_int("dse", "d_max") {
+    if let Some(v) = non_negative(&t, "dse", "d_max")? {
         dse.d_max = v as usize;
     }
-    if let Some(v) = t.get_int("dse", "batch") {
+    if let Some(v) = non_negative(&t, "dse", "batch")? {
         dse.batch = v as usize;
     }
-    if let Some(v) = t.get_int("dse", "scal_flops") {
-        dse.scal_flops = v as u64;
+    if let Some(v) = non_negative(&t, "dse", "scal_flops")? {
+        dse.scal_flops = v;
     }
     if let Some(v) = t.get_str("dse", "ranks") {
         dse.ranks = v
             .split(',')
-            .map(|x| x.trim().parse::<u64>().map_err(|e| Error::config(e.to_string())))
+            .map(|x| {
+                x.trim()
+                    .parse::<u64>()
+                    .map_err(|e| Error::config(format!("dse.ranks entry '{}': {e}", x.trim())))
+            })
             .collect::<Result<Vec<_>>>()?;
     }
     let mut serve = ServeConfig::default();
-    if let Some(v) = t.get_int("serve", "max_batch") {
+    if let Some(v) = non_negative(&t, "serve", "max_batch")? {
         serve.max_batch = v as usize;
     }
-    if let Some(v) = t.get_int("serve", "max_wait_us") {
-        serve.max_wait_us = v as u64;
+    if let Some(v) = non_negative(&t, "serve", "max_wait_us")? {
+        serve.max_wait_us = v;
     }
-    if let Some(v) = t.get_int("serve", "queue_cap") {
+    if let Some(v) = non_negative(&t, "serve", "queue_cap")? {
         serve.queue_cap = v as usize;
     }
-    if let Some(v) = t.get_int("serve", "workers") {
+    if let Some(v) = non_negative(&t, "serve", "workers")? {
         serve.workers = v as usize;
     }
+    dse.validate()?;
+    serve.validate()?;
     Ok((dse, serve))
 }
 
@@ -273,5 +360,41 @@ mod tests {
         let (dse, serve) = load("").unwrap();
         assert_eq!(dse, DseConfig::default());
         assert_eq!(serve, ServeConfig::default());
+    }
+
+    #[test]
+    fn load_rejects_degenerate_serve_configs() {
+        for (text, needle) in [
+            ("[serve]\nworkers = 0", "workers"),
+            ("[serve]\nqueue_cap = 0", "queue_cap"),
+            ("[serve]\nmax_batch = 0", "max_batch"),
+            ("[serve]\nworkers = -4", "workers"),
+        ] {
+            let err = load(text).expect_err(text).to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_degenerate_dse_configs() {
+        for (text, needle) in [
+            ("[dse]\nvl = 0", "vl"),
+            ("[dse]\nd_max = 0", "d_max"),
+            ("[dse]\nbatch = 0", "batch"),
+            ("[dse]\nbatch = -1", "batch"),
+            ("[dse]\nranks = \"\"", "ranks"),
+            ("[dse]\nranks = \"8, 0\"", "rank"),
+        ] {
+            let err = load(text).expect_err(text).to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_accepts_defaults() {
+        DseConfig::default().validate().unwrap();
+        ServeConfig::default().validate().unwrap();
+        let s = ServeConfig { workers: 0, ..Default::default() };
+        assert!(s.validate().is_err());
     }
 }

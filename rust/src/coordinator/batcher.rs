@@ -16,6 +16,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A policy closing batches at `max_batch` requests or `max_wait`
+    /// after the oldest pending request arrived, whichever comes first.
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch >= 1);
         Batcher { max_batch, max_wait, opened_at: None, pending: 0 }
@@ -55,10 +57,12 @@ impl Batcher {
         n
     }
 
+    /// Requests in the currently open batch.
     pub fn pending(&self) -> usize {
         self.pending
     }
 
+    /// The configured batch-size cap.
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
@@ -101,6 +105,62 @@ mod tests {
         assert!(left <= Duration::from_millis(6));
         let left2 = b.time_to_deadline(t0 + Duration::from_millis(40)).unwrap();
         assert_eq!(left2, Duration::ZERO);
+    }
+
+    #[test]
+    fn property_deadline_fires_exactly_at_max_wait() {
+        // the deadline must never fire before max_wait has elapsed since
+        // the batch opened, and must always fire at/after it
+        crate::testkit::check("deadline fires at max_wait", 50, |d| {
+            let wait = Duration::from_micros(d.usize_in(1, 10_000) as u64);
+            let mut b = Batcher::new(d.usize_in(2, 64), wait);
+            let t0 = Instant::now();
+            b.push(t0);
+            // later pushes must not extend the deadline of the open batch
+            for i in 0..d.usize_in(0, 5) {
+                b.push(t0 + Duration::from_micros(i as u64));
+            }
+            let just_before = t0 + wait - Duration::from_nanos(1);
+            if b.deadline_reached(just_before) {
+                return Err(format!("fired {wait:?} early"));
+            }
+            if !b.deadline_reached(t0 + wait) {
+                return Err(format!("missed deadline at {wait:?}"));
+            }
+            // the advertised sleep must never overshoot the deadline
+            let probe = t0 + Duration::from_micros(d.usize_in(0, 20_000) as u64);
+            let left = b.time_to_deadline(probe).expect("batch open");
+            if probe + left < t0 + wait {
+                return Err("time_to_deadline wakes before the deadline".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_full_batch_exactly_at_max() {
+        // push must report full exactly on the max_batch-th request, never
+        // earlier, regardless of interleaved takes
+        crate::testkit::check("full exactly at max_batch", 50, |d| {
+            let max = d.usize_in(1, 32);
+            let mut b = Batcher::new(max, Duration::from_millis(1));
+            let t = Instant::now();
+            for _round in 0..d.usize_in(1, 4) {
+                for i in 1..=max {
+                    let full = b.push(t);
+                    if full != (i == max) {
+                        return Err(format!("push {i}/{max} reported full={full}"));
+                    }
+                }
+                if b.take() != max {
+                    return Err("take lost requests".into());
+                }
+                if b.pending() != 0 {
+                    return Err("pending not reset by take".into());
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

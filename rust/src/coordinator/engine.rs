@@ -1,4 +1,13 @@
 //! Executable model engines: the serving-time realization of DSE output.
+//!
+//! Split for the worker pool: everything expensive and immutable (packed
+//! cores, dense weights, routing) lives behind an `Arc` and is **shared**
+//! across workers; everything stateful (the [`Executor`]'s plan cache and
+//! scratch buffers) is **per worker**, so the zero-allocation warm path
+//! never crosses a lock. [`ModelEngine::worker_clone`] stamps out another
+//! worker view over the same shared weights.
+
+use std::sync::Arc;
 
 use crate::baselines::dense::DenseFc;
 use crate::error::{Error, Result};
@@ -8,91 +17,31 @@ use crate::tensor::Tensor;
 use crate::ttd::cost::einsum_chain;
 use crate::ttd::decompose::TtCores;
 
-/// A TT-decomposed FC layer compiled for serving: packed cores plus the
-/// shared plan-driven [`Executor`]. The executor owns the per-shape plan
-/// cache and the chain scratch buffers — the engine holds no kernel state of
-/// its own.
-pub struct TtFcEngine {
+/// The immutable, thread-shared half of a compiled TT FC layer: layout,
+/// packed cores and bias. Workers share one instance behind an `Arc`;
+/// each drives it with its own [`Executor`].
+struct TtFcShared {
     layout: crate::ttd::TtLayout,
     /// Packed core per chain step, in processing order (t = d-1 .. 0).
     packed: Vec<PackedG>,
     bias: Option<Vec<f32>>,
-    executor: Executor,
 }
 
-impl TtFcEngine {
-    /// Compile a decomposed layer for the target machine.
-    ///
-    /// Invariant: the cores are packed once with the batch-1 plans, which is
-    /// sound because the vectorized-loop choice (and hence the packed `G`
-    /// layout) depends only on `(r, n, k)`, never on the batch — pinned by
-    /// the `packing_layout_is_batch_invariant` test below. A batch-dependent
-    /// layout choice would surface as an `execute_plan_into` layout error at
-    /// serving time.
-    pub fn new(tt: &TtCores, machine: &MachineSpec) -> Result<TtFcEngine> {
-        let mut executor = Executor::new(machine);
-        // plans at batch 1 determine the (batch-independent) packing layout
-        let chain = einsum_chain(&tt.layout, 1);
-        let mut packed = Vec::with_capacity(chain.len());
-        for (step, dims) in chain.iter().enumerate() {
-            let core_idx = tt.layout.d() - 1 - step; // processing order
-            packed.push(executor.pack(&tt.cores[core_idx], dims)?);
-        }
-        Ok(TtFcEngine {
-            layout: tt.layout.clone(),
-            packed,
-            bias: tt.bias.clone(),
-            executor,
-        })
-    }
-
-    /// Enable measured register-blocking autotuning on plan-cache misses
-    /// (EXPERIMENTS.md §Perf iteration 2). One-time cost per batch size.
-    pub fn with_tuning(mut self) -> Self {
-        self.executor = self.executor.with_tuning();
-        self
-    }
-
-    pub fn layout(&self) -> &crate::ttd::TtLayout {
-        &self.layout
-    }
-
-    /// The shared executor (plan cache + scratch) driving this layer.
-    pub fn executor(&self) -> &Executor {
-        &self.executor
-    }
-
-    /// Input width N.
-    pub fn n_total(&self) -> usize {
-        self.layout.n_total() as usize
-    }
-
-    /// Output width M.
-    pub fn m_total(&self) -> usize {
-        self.layout.m_total() as usize
-    }
-
-    /// Forward `x (B, N) -> (B, M)` through the optimized kernel chain.
-    ///
-    /// With single-threaded plans (the serving configuration measured in
-    /// `rust/tests/alloc_free.rs`), per-request heap traffic is the response
-    /// tensor only: plans are cached per shape and the chain ping-pongs
-    /// inside the executor's scratch. Multi-threaded plans additionally
-    /// allocate their fork/join scratch per request.
-    pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
+impl TtFcShared {
+    /// Forward `x (B, N) -> (B, M)` through the optimized kernel chain,
+    /// using the caller's executor for plans and scratch.
+    fn forward_with(&self, executor: &mut Executor, x: &Tensor) -> Result<Tensor> {
+        let n_total = self.layout.n_total() as usize;
+        let m_total = self.layout.m_total() as usize;
         let dims = x.dims();
-        if dims.len() != 2 || dims[1] != self.n_total() || dims[0] == 0 {
+        if dims.len() != 2 || dims[1] != n_total || dims[0] == 0 {
             return Err(Error::shape(format!(
                 "engine expects (B >= 1, {}), got {:?}",
-                self.n_total(),
-                dims
+                n_total, dims
             )));
         }
         let batch = dims[0];
-        let m_total = self.m_total();
-        let final_slab =
-            self.executor
-                .run_tt_chain(&self.layout, batch, &self.packed, x.data())?;
+        let final_slab = executor.run_tt_chain(&self.layout, batch, &self.packed, x.data())?;
         // final layout (M, B) row-major -> (B, M)
         let mut y = Tensor::zeros(vec![batch, m_total]);
         {
@@ -114,42 +63,199 @@ impl TtFcEngine {
     }
 }
 
-/// One step of a sequential model.
+/// A TT-decomposed FC layer compiled for serving: `Arc`-shared packed cores
+/// plus a worker-local plan-driven [`Executor`] (plan cache + chain
+/// scratch). Cloning a worker view ([`TtFcEngine::worker_clone`]) shares
+/// the cores and copies the executor's plan cache into a fresh executor.
+pub struct TtFcEngine {
+    shared: Arc<TtFcShared>,
+    executor: Executor,
+}
+
+impl TtFcEngine {
+    /// Compile a decomposed layer for the target machine.
+    ///
+    /// Invariant: the cores are packed once with the batch-1 plans, which is
+    /// sound because the vectorized-loop choice (and hence the packed `G`
+    /// layout) depends only on `(r, n, k)`, never on the batch — pinned by
+    /// the `packing_layout_is_batch_invariant` test below. A batch-dependent
+    /// layout choice would surface as an `execute_plan_into` layout error at
+    /// serving time. The same invariant makes worker executors safe: plans
+    /// a worker compiles for shapes beyond the copied cache are produced
+    /// deterministically and agree with the packed layout.
+    pub fn new(tt: &TtCores, machine: &MachineSpec) -> Result<TtFcEngine> {
+        let mut executor = Executor::new(machine);
+        // plans at batch 1 determine the (batch-independent) packing layout
+        let chain = einsum_chain(&tt.layout, 1);
+        let mut packed = Vec::with_capacity(chain.len());
+        for (step, dims) in chain.iter().enumerate() {
+            let core_idx = tt.layout.d() - 1 - step; // processing order
+            packed.push(executor.pack(&tt.cores[core_idx], dims)?);
+        }
+        Ok(TtFcEngine {
+            shared: Arc::new(TtFcShared {
+                layout: tt.layout.clone(),
+                packed,
+                bias: tt.bias.clone(),
+            }),
+            executor,
+        })
+    }
+
+    /// Enable measured register-blocking autotuning on plan-cache misses
+    /// (EXPERIMENTS.md §Perf iteration 2). One-time cost per batch size.
+    /// Worker clones inherit the tuning mode.
+    pub fn with_tuning(mut self) -> Self {
+        self.executor = self.executor.with_tuning();
+        self
+    }
+
+    /// Another worker view of the same compiled layer: shared packed cores,
+    /// own executor (plan cache copied so plans — tuned ones included —
+    /// are not recompiled per worker; scratch cold; same tuning mode).
+    pub fn worker_clone(&self) -> TtFcEngine {
+        TtFcEngine {
+            shared: Arc::clone(&self.shared),
+            executor: self.executor.worker_clone(),
+        }
+    }
+
+    /// The TT layout this layer was compiled from.
+    pub fn layout(&self) -> &crate::ttd::TtLayout {
+        &self.shared.layout
+    }
+
+    /// This worker's executor (plan cache + scratch) driving the layer.
+    pub fn executor(&self) -> &Executor {
+        &self.executor
+    }
+
+    /// Input width N.
+    pub fn n_total(&self) -> usize {
+        self.shared.layout.n_total() as usize
+    }
+
+    /// Output width M.
+    pub fn m_total(&self) -> usize {
+        self.shared.layout.m_total() as usize
+    }
+
+    /// Forward `x (B, N) -> (B, M)` through the optimized kernel chain.
+    ///
+    /// With single-threaded plans (the serving configuration measured in
+    /// `rust/tests/alloc_free.rs`), per-request heap traffic is the response
+    /// tensor only: plans are cached per shape and the chain ping-pongs
+    /// inside the executor's scratch. Multi-threaded plans additionally
+    /// allocate their fork/join scratch per request.
+    pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
+        self.shared.forward_with(&mut self.executor, x)
+    }
+}
+
+/// One step of a sequential model (construction-time description; the
+/// engine converts it into shared weights + per-worker executor state).
 pub enum LayerOp {
+    /// A TT-compressed FC layer on the optimized kernel chain.
     Tt(TtFcEngine),
+    /// A dense FC layer on the MMM baseline.
     Dense(DenseFc),
+    /// Elementwise max(0, x).
     Relu,
 }
 
-/// A sequential model engine (the LeNet300-style MLP in the examples).
-pub struct ModelEngine {
-    pub name: String,
-    ops: Vec<LayerOp>,
+/// The immutable, thread-shared half of a compiled model.
+struct ModelShared {
+    name: String,
+    ops: Vec<SharedOp>,
     in_dim: usize,
     out_dim: usize,
 }
 
+/// Shared (read-only) form of one model step.
+enum SharedOp {
+    Tt(Arc<TtFcShared>),
+    Dense(Arc<DenseFc>),
+    Relu,
+}
+
+/// A sequential model engine (the LeNet300-style MLP in the examples).
+///
+/// One `ModelEngine` is one *worker view*: an `Arc` of the immutable
+/// compiled model (weights, packed cores) plus this worker's executors
+/// (plan caches + scratch, one per TT layer). [`ModelEngine::worker_clone`]
+/// creates additional views for a pool; the shared half is never copied.
+pub struct ModelEngine {
+    shared: Arc<ModelShared>,
+    /// Parallel to `shared.ops`: `Some(executor)` for TT ops, else `None`.
+    execs: Vec<Option<Executor>>,
+}
+
 impl ModelEngine {
+    /// Assemble a sequential model from compiled layers.
     pub fn new(name: impl Into<String>, ops: Vec<LayerOp>, in_dim: usize, out_dim: usize) -> Self {
-        ModelEngine { name: name.into(), ops, in_dim, out_dim }
+        let mut shared_ops = Vec::with_capacity(ops.len());
+        let mut execs = Vec::with_capacity(ops.len());
+        for op in ops {
+            match op {
+                LayerOp::Tt(TtFcEngine { shared, executor }) => {
+                    shared_ops.push(SharedOp::Tt(shared));
+                    execs.push(Some(executor));
+                }
+                LayerOp::Dense(fc) => {
+                    shared_ops.push(SharedOp::Dense(Arc::new(fc)));
+                    execs.push(None);
+                }
+                LayerOp::Relu => {
+                    shared_ops.push(SharedOp::Relu);
+                    execs.push(None);
+                }
+            }
+        }
+        ModelEngine {
+            shared: Arc::new(ModelShared { name: name.into(), ops: shared_ops, in_dim, out_dim }),
+            execs,
+        }
     }
 
+    /// The model's display name.
+    pub fn name(&self) -> &str {
+        &self.shared.name
+    }
+
+    /// Input width.
     pub fn in_dim(&self) -> usize {
-        self.in_dim
+        self.shared.in_dim
     }
 
+    /// Output width.
     pub fn out_dim(&self) -> usize {
-        self.out_dim
+        self.shared.out_dim
+    }
+
+    /// Another worker view over the same compiled model: the `Arc`-shared
+    /// weights are reused, every TT layer gets its own [`Executor`] (same
+    /// machine and tuning mode, plan cache copied, cold scratch). This is
+    /// what [`super::Server`] calls once per extra worker.
+    pub fn worker_clone(&self) -> ModelEngine {
+        let execs = self
+            .execs
+            .iter()
+            .map(|ex| ex.as_ref().map(Executor::worker_clone))
+            .collect();
+        ModelEngine { shared: Arc::clone(&self.shared), execs }
     }
 
     /// Forward a batch `(B, in_dim) -> (B, out_dim)`.
     pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
         let mut cur = x.clone();
-        for op in &mut self.ops {
+        for (op, ex) in self.shared.ops.iter().zip(self.execs.iter_mut()) {
             cur = match op {
-                LayerOp::Tt(engine) => engine.forward(&cur)?,
-                LayerOp::Dense(fc) => fc.forward(&cur)?,
-                LayerOp::Relu => {
+                SharedOp::Tt(tt) => {
+                    let executor = ex.as_mut().expect("TT op carries an executor");
+                    tt.forward_with(executor, &cur)?
+                }
+                SharedOp::Dense(fc) => fc.forward(&cur)?,
+                SharedOp::Relu => {
                     let mut t = cur;
                     for v in t.data_mut() {
                         *v = v.max(0.0);
@@ -158,11 +264,25 @@ impl ModelEngine {
                 }
             };
         }
-        if cur.dims()[1] != self.out_dim {
+        if cur.dims()[1] != self.shared.out_dim {
             return Err(Error::shape("model produced wrong output width"));
         }
         Ok(cur)
     }
+}
+
+// The pool moves worker views across threads and shares the compiled model
+// between them; pin those bounds at compile time so a non-Send field can
+// never sneak into the hot path.
+#[allow(dead_code)]
+fn assert_thread_safety() {
+    fn is_send<T: Send>() {}
+    fn is_send_sync<T: Send + Sync>() {}
+    is_send::<ModelEngine>();
+    is_send::<TtFcEngine>();
+    is_send::<Executor>();
+    is_send_sync::<ModelShared>();
+    is_send_sync::<TtFcShared>();
 }
 
 #[cfg(test)]
@@ -215,6 +335,24 @@ mod tests {
         let x2 = Tensor::randn(vec![8, 784], 1.0, &mut rng);
         engine.forward(&x2).unwrap();
         assert_eq!(engine.executor().cached_plans(), base + 4);
+    }
+
+    #[test]
+    fn worker_clone_shares_cores_and_matches_bitwise() {
+        let (mut engine, _, _) = engine_and_truth();
+        let mut clone = engine.worker_clone();
+        // own executor, but the already-compiled plans came along
+        assert_eq!(clone.executor().cached_plans(), engine.executor().cached_plans());
+        let mut rng = Rng::new(104);
+        for batch in [1usize, 5, 16] {
+            let x = Tensor::randn(vec![batch, 784], 1.0, &mut rng);
+            let a = engine.forward(&x).unwrap();
+            let b = clone.forward(&x).unwrap();
+            // same packed cores + deterministic plans => bit-identical
+            for (va, vb) in a.data().iter().zip(b.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "worker clone drifted");
+            }
+        }
     }
 
     #[test]
@@ -275,5 +413,13 @@ mod tests {
         }
         let want = fc_batched_ref(&w2, &h, None).unwrap();
         assert!(y.allclose(&want, 1e-3, 1e-3));
+
+        // a worker view over the same model produces bit-identical output
+        let mut worker = model.worker_clone();
+        let yw = worker.forward(&x).unwrap();
+        for (a, b) in y.data().iter().zip(yw.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(worker.name(), "toy");
     }
 }

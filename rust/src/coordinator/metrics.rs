@@ -18,6 +18,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one duration sample.
     pub fn record(&mut self, d: Duration) {
         let us = d.as_micros() as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
@@ -27,10 +28,25 @@ impl Histogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Fold another histogram into this one (shard merging). Buckets are
+    /// log-scaled with identical boundaries, so merging is exact: the
+    /// result is what a single histogram fed both sample streams would
+    /// hold.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, ob) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += ob;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean sample in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -39,6 +55,7 @@ impl Histogram {
         }
     }
 
+    /// Largest recorded sample in microseconds.
     pub fn max_us(&self) -> u64 {
         self.max_us
     }
@@ -61,6 +78,10 @@ impl Histogram {
 }
 
 /// Aggregated serving metrics.
+///
+/// With a worker pool each worker owns a private `Metrics` shard (no
+/// cross-worker contention on the hot path); [`super::Server::metrics`]
+/// merges the shards into one snapshot via [`Metrics::merge`].
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     /// End-to-end request latency (enqueue -> reply).
@@ -69,13 +90,30 @@ pub struct Metrics {
     pub queue_wait: Histogram,
     /// Model execution time per batch.
     pub exec: Histogram,
+    /// Requests answered.
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Requests refused by admission control (queue full).
     pub rejected: u64,
+    /// Sum of executed batch sizes (`requests`, kept separate so the
+    /// invariant `batch_size_sum == requests` is checkable after merging).
     pub batch_size_sum: u64,
 }
 
 impl Metrics {
+    /// Fold another worker's shard into this snapshot.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latency.merge(&other.latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.exec.merge(&other.exec);
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.batch_size_sum += other.batch_size_sum;
+    }
+
+    /// Mean executed batch size (0 when nothing ran).
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -84,6 +122,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable digest (used by the CLI and benches).
     pub fn summary(&self) -> String {
         format!(
             "requests={} batches={} rejected={} mean_batch={:.2} \
@@ -144,5 +183,47 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.percentile_us(99.0), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_single_stream() {
+        // merging shards must be indistinguishable from one histogram
+        // having recorded every sample
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut whole = Histogram::default();
+        for (i, us) in [1u64, 3, 9, 27, 81, 243, 729, 2187].into_iter().enumerate() {
+            let d = Duration::from_micros(us);
+            if i % 2 == 0 { a.record(d) } else { b.record(d) }
+            whole.record(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.max_us(), whole.max_us());
+        assert!((a.mean_us() - whole.mean_us()).abs() < 1e-9);
+        for p in [1.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(a.percentile_us(p), whole.percentile_us(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn metrics_merge_sums_counters() {
+        let mut a = Metrics {
+            requests: 10,
+            batches: 3,
+            rejected: 1,
+            batch_size_sum: 10,
+            ..Default::default()
+        };
+        a.latency.record(Duration::from_micros(100));
+        let mut b = Metrics { requests: 5, batches: 2, batch_size_sum: 5, ..Default::default() };
+        b.latency.record(Duration::from_micros(400));
+        a.merge(&b);
+        assert_eq!(a.requests, 15);
+        assert_eq!(a.batches, 5);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.batch_size_sum, 15);
+        assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.mean_batch(), 3.0);
     }
 }

@@ -6,20 +6,30 @@
 //!
 //! * [`engine`] — executable models: TT FC layers driven by the optimized
 //!   kernel engine, dense layers on the MMM baseline, composed into
-//!   networks; built from DSE output by the [`router`].
+//!   networks; built from DSE output by the [`router`]. The immutable
+//!   compiled model (packed cores, weights) is `Arc`-shared; each worker
+//!   holds its own executors (plan cache + scratch).
 //! * [`batcher`] — dynamic batching: group requests up to (max_batch,
 //!   max_wait) like a serving frontend.
-//! * [`server`] — the event loop: bounded queue, worker thread, replies
-//!   over channels; no allocation on the per-request hot path beyond the
-//!   reply buffers.
-//! * [`metrics`] — latency histograms + throughput counters.
+//! * `queue` (crate-private) — a bounded MPMC admission queue:
+//!   non-blocking `try_push` for fail-fast admission control, deadline-
+//!   aware pops for the batch window, drain-then-exit close semantics.
+//! * [`server`] — the pool: `ServeConfig.workers` batching workers share
+//!   the admission queue; replies fan out over channels; per-worker
+//!   metrics shards merge on demand; no allocation on the per-request hot
+//!   path beyond the reply buffers.
+//! * [`metrics`] — latency histograms + throughput counters, sharded per
+//!   worker and merged exactly on read.
 //!
-//! Invariants (property-tested): no request is lost or duplicated, batches
-//! never exceed `max_batch`, FIFO order within the queue, and batched
-//! outputs are identical to single-request outputs.
+//! Invariants (property- and integration-tested): no request is lost or
+//! duplicated, batches never exceed `max_batch`, admission never blocks
+//! (full queue -> immediate error), responses are byte-identical across
+//! pool sizes (`workers = 1` vs `workers = 4`), and graceful shutdown
+//! answers everything admitted before joining the workers.
 
 pub mod engine;
 pub mod batcher;
+mod queue;
 pub mod server;
 pub mod metrics;
 pub mod router;

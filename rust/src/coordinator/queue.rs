@@ -1,0 +1,268 @@
+//! Bounded multi-producer / multi-consumer admission queue.
+//!
+//! `std::sync::mpsc` is single-consumer, so a worker *pool* sharing one
+//! queue needs its own primitive: a `Mutex<VecDeque>` + `Condvar` bounded
+//! queue with non-blocking admission (`try_push`) and deadline-aware
+//! consumption (`pop_timeout`), the two operations the serving loop is
+//! built from.
+//!
+//! Semantics:
+//!
+//! * `try_push` never blocks: a full queue is an admission-control
+//!   rejection ([`PushError::Full`]), a closed queue is a shutdown
+//!   rejection ([`PushError::Closed`]). This preserves the coordinator's
+//!   fail-fast backpressure contract.
+//! * `pop` / `pop_timeout` drain remaining items even after [`close`]
+//!   (graceful shutdown answers everything that was admitted); only a
+//!   queue that is both closed **and** empty reports [`Pop::Closed`].
+//! * FIFO order within the queue. With several consumers, items are
+//!   handed out in arrival order but may complete out of order — that is
+//!   the point of the pool.
+//!
+//! [`close`]: SharedQueue::close
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a [`SharedQueue::try_push`] was refused. The item is handed back
+/// rather than dropped so `T` need not be `Clone` and callers can decide
+/// its fate.
+#[derive(Debug)]
+pub(crate) enum PushError<T> {
+    /// The queue is at capacity (admission control).
+    Full(T),
+    /// The queue was closed by shutdown.
+    Closed(T),
+}
+
+/// Outcome of a [`SharedQueue::pop`] / [`SharedQueue::pop_timeout`].
+#[derive(Debug)]
+pub(crate) enum Pop<T> {
+    /// The oldest queued item.
+    Item(T),
+    /// The timeout elapsed with the queue still empty (batch deadline).
+    TimedOut,
+    /// The queue is closed and fully drained: the consumer should flush
+    /// its pending batch and exit.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// The bounded MPMC queue shared by the submit path and the worker pool.
+pub(crate) struct SharedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> SharedQueue<T> {
+    /// A queue admitting at most `cap >= 1` items.
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        SharedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(cap.min(4096)),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Non-blocking admission; hands the item back on refusal.
+    pub fn try_push(&self, item: T) -> std::result::Result<(), PushError<T>> {
+        let mut g = self.inner.lock().expect("queue lock");
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        // one new item -> one consumer needs waking; a consumer that wakes
+        // to an already-taken item re-checks and re-sleeps (loop in pop)
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item arrives or the queue is closed and drained.
+    pub fn pop(&self) -> Pop<T> {
+        let mut g = self.inner.lock().expect("queue lock");
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                return Pop::Item(v);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            g = self.not_empty.wait(g).expect("queue lock");
+        }
+    }
+
+    /// Block at most `timeout` for an item. Consumers holding a non-empty
+    /// pending batch use this so the batch deadline can fire while the
+    /// queue is idle. Timeouts are clamped to one hour so an extreme
+    /// `max_wait_us` cannot overflow the deadline arithmetic.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        let timeout = timeout.min(Duration::from_secs(3600));
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("queue lock");
+        loop {
+            if let Some(v) = g.items.pop_front() {
+                return Pop::Item(v);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue lock");
+            g = guard;
+            if res.timed_out() {
+                // final re-check: an item may have landed exactly as the
+                // wait expired
+                if let Some(v) = g.items.pop_front() {
+                    return Pop::Item(v);
+                }
+                return if g.closed { Pop::Closed } else { Pop::TimedOut };
+            }
+        }
+    }
+
+    /// Close the queue: admission stops immediately, consumers drain what
+    /// remains, then observe [`Pop::Closed`]. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("queue lock");
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let q = SharedQueue::new(4);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        assert!(matches!(q.try_push(9), Err(PushError::Full(9))));
+        for want in 0..4 {
+            match q.pop() {
+                Pop::Item(v) => assert_eq!(v, want),
+                other => panic!("expected item, got {other:?}"),
+            }
+        }
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::TimedOut));
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_items() {
+        let q = SharedQueue::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        assert!(matches!(q.pop(), Pop::Item(1)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(5)), Pop::Item(2)));
+        assert!(matches!(q.pop(), Pop::Closed));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+        q.close(); // idempotent
+    }
+
+    #[test]
+    fn pop_timeout_expires_on_empty_queue() {
+        let q: SharedQueue<u32> = SharedQueue::new(1);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(20)), Pop::TimedOut));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push_and_on_close() {
+        let q = Arc::new(SharedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            loop {
+                match q2.pop() {
+                    Pop::Item(v) => got.push(v),
+                    Pop::Closed => break,
+                    Pop::TimedOut => unreachable!("blocking pop cannot time out"),
+                }
+            }
+            got
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.try_push(7).unwrap();
+        q.try_push(8).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn multi_consumer_loses_and_duplicates_nothing() {
+        let q = Arc::new(SharedQueue::new(1024));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop() {
+                            Pop::Item(v) => got.push(v),
+                            Pop::Closed => break,
+                            Pop::TimedOut => unreachable!(),
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..100u32 {
+                        let v = p * 1000 + i;
+                        loop {
+                            match q.try_push(v) {
+                                Ok(()) => break,
+                                Err(PushError::Full(_)) => std::thread::yield_now(),
+                                Err(PushError::Closed(_)) => panic!("closed early"),
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let mut want: Vec<u32> = (0..4).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want);
+    }
+}

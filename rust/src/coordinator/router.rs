@@ -18,6 +18,7 @@ pub enum Route {
 }
 
 impl Route {
+    /// Whether this route factorizes the layer.
     pub fn is_tt(&self) -> bool {
         matches!(self, Route::Tt(_))
     }

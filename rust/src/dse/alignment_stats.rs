@@ -10,7 +10,9 @@ use crate::ttd::{cost, TtLayout};
 pub struct PermutationSweep {
     /// (flops, memory, is_aligned) per permutation pair.
     pub points: Vec<(u64, u64, bool)>,
+    /// FLOPs of the aligned permutation pair.
     pub aligned_flops: u64,
+    /// Parameter memory of the aligned permutation pair.
     pub aligned_memory: u64,
 }
 
@@ -45,10 +47,13 @@ pub fn sweep_permutations(m_multiset: &[u64], n_multiset: &[u64], rank: u64) -> 
 /// minimum, 0.0 = the maximum.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AlignmentRatios {
+    /// Normalized FLOPs ratio (Eq. 16).
     pub flops: f64,
+    /// Normalized memory ratio (Eq. 17).
     pub memory: f64,
 }
 
+/// Compute the Eq. 16/17 ratios for one permutation sweep.
 pub fn ratios(sweep: &PermutationSweep) -> AlignmentRatios {
     let fmax = sweep.points.iter().map(|p| p.0).max().unwrap_or(0) as f64;
     let fmin = sweep.points.iter().map(|p| p.0).min().unwrap_or(0) as f64;

@@ -13,18 +13,26 @@ use super::space::{enumerate_aligned, Solution};
 /// reaches ~1e33). Stages 3-5 are exact enumeration counts.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageCounts {
+    /// Stage 1: every (shape, permutation, rank) combination.
     pub all: f64,
+    /// Stage 2: after shape alignment.
     pub aligned: f64,
+    /// Stage 3: after the vectorization (rank multiple of vl) cut.
     pub vectorized: usize,
+    /// Stage 4: after the initial-configuration cut.
     pub initial: usize,
+    /// Stage 5: after the scalability cut.
     pub scalability: usize,
 }
 
 /// Result of exploring one FC layer.
 #[derive(Debug, Clone)]
 pub struct Explored {
+    /// Output dimension M of the explored layer.
     pub m_dim: u64,
+    /// Input dimension N of the explored layer.
     pub n_dim: u64,
+    /// Per-stage design-space sizes.
     pub counts: StageCounts,
     /// Solutions surviving all five stages, sorted by ascending FLOPs.
     pub survivors: Vec<Solution>,

@@ -10,11 +10,15 @@ use super::prune::{explore, StageCounts};
 /// One table row.
 #[derive(Debug, Clone)]
 pub struct DsRow {
+    /// Model name.
     pub model: String,
+    /// Dataset tag as the paper's tables print it.
     pub dataset: String,
     /// `[N, M]` as the paper prints FC shapes.
     pub shape: (u64, u64),
+    /// How many identical layers share this shape.
     pub count: u64,
+    /// Per-stage design-space sizes for this shape.
     pub counts: StageCounts,
 }
 

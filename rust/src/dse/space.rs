@@ -7,14 +7,18 @@ use crate::ttd::{cost, TtLayout};
 /// One candidate factorization of an FC layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Solution {
+    /// The factorized layout.
     pub layout: TtLayout,
     /// Uniform rank value R of the layout.
     pub rank: u64,
+    /// Stored parameter count of the layout.
     pub params: u64,
+    /// FLOPs per batch-1 inference.
     pub flops: u64,
 }
 
 impl Solution {
+    /// Price a layout (params + FLOPs) at the given uniform rank.
     pub fn new(layout: TtLayout, rank: u64) -> Self {
         let params = cost::params(&layout);
         let flops = cost::flops(&layout);

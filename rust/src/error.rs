@@ -30,6 +30,11 @@ pub enum Error {
     Runtime(String),
     /// Serving coordinator failure (queue closed, engine missing, ...).
     Serve(String),
+    /// Admission control refused a request: the serving queue is at
+    /// capacity. A typed variant so callers can distinguish backpressure
+    /// (retry / shed load) from hard serving failures without string
+    /// matching.
+    QueueFull,
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -46,6 +51,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::QueueFull => write!(f, "serve error: queue full (admission control)"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -66,29 +72,37 @@ impl From<std::io::Error> for Error {
     }
 }
 
+// Shorthand constructors used across the crate.
 impl Error {
-    /// Shorthand constructors used across the crate.
+    /// An [`Error::Shape`] with the given message.
     pub fn shape(msg: impl Into<String>) -> Self {
         Error::Shape(msg.into())
     }
+    /// An [`Error::Layout`] with the given message.
     pub fn layout(msg: impl Into<String>) -> Self {
         Error::Layout(msg.into())
     }
+    /// An [`Error::Numeric`] with the given message.
     pub fn numeric(msg: impl Into<String>) -> Self {
         Error::Numeric(msg.into())
     }
+    /// An [`Error::Plan`] with the given message.
     pub fn plan(msg: impl Into<String>) -> Self {
         Error::Plan(msg.into())
     }
+    /// An [`Error::Config`] with the given message.
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+    /// An [`Error::Json`] with the given message.
     pub fn json(msg: impl Into<String>) -> Self {
         Error::Json(msg.into())
     }
+    /// An [`Error::Runtime`] with the given message.
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
     }
+    /// An [`Error::Serve`] with the given message.
     pub fn serve(msg: impl Into<String>) -> Self {
         Error::Serve(msg.into())
     }

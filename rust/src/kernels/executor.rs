@@ -47,6 +47,13 @@ impl Scratch {
 }
 
 /// Plan-driven kernel executor: one per engine / bench / baseline harness.
+///
+/// In the serving pool, one executor exists **per worker per TT layer** —
+/// it is plain owned data (`Send`, asserted in `coordinator::engine`), so
+/// a worker thread can carry it without locks, and the plan cache /
+/// scratch never contend across workers. Plans are compiled
+/// deterministically, so independently-built executors over the same
+/// machine produce identical plans (and byte-identical kernel output).
 pub struct Executor {
     machine: MachineSpec,
     plan_cache: HashMap<EinsumDims, OptimizationPlan>,
@@ -80,6 +87,30 @@ impl Executor {
         self.tune = true;
         self.plan_cache.clear();
         self
+    }
+
+    /// Whether measured autotuning is enabled (worker clones of a serving
+    /// engine propagate this so every pool member tunes the same way).
+    pub fn tuning_enabled(&self) -> bool {
+        self.tune
+    }
+
+    /// A worker-view copy for pool fan-out: same machine and tuning mode,
+    /// whatever the plan cache holds at clone time **copied** (plans are
+    /// `Copy` and deterministic, so workers skip recompiling those
+    /// shapes), scratch and chain buffers fresh. Note that
+    /// [`Executor::with_tuning`] clears the cache, so clones of a freshly
+    /// tuned engine start cold and tune independently per worker; RB
+    /// factors never change result bits, so outputs stay byte-identical
+    /// across the pool either way.
+    pub fn worker_clone(&self) -> Executor {
+        Executor {
+            machine: self.machine.clone(),
+            plan_cache: self.plan_cache.clone(),
+            scratch: Scratch::default(),
+            chain_dims: Vec::new(),
+            tune: self.tune,
+        }
     }
 
     /// The machine this executor plans for.

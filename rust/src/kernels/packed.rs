@@ -30,11 +30,13 @@ pub enum GLayout {
 /// A core repacked for the kernel engine.
 #[derive(Debug, Clone)]
 pub struct PackedG {
+    /// Which packed layout `data` holds.
     pub layout: GLayout,
     /// (r, n, m, k) of the canonical core.
     pub dims: (usize, usize, usize, usize),
     /// r rounded up to a VL multiple (PackedR only).
     pub r_pad: usize,
+    /// The packed buffer.
     pub data: Vec<f32>,
 }
 

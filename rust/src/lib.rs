@@ -26,6 +26,14 @@
 //! assert!(cost::params(&layout) < 300 * 784 + 300);
 //! assert!(cost::flops(&layout) < 2 * 300 * 784 + 300);
 //! ```
+//!
+//! The serving entry point is [`coordinator::Server`]; the end-to-end
+//! data-flow (models -> dse -> compiler -> kernels -> coordinator) is
+//! documented in `docs/ARCHITECTURE.md`.
+
+// Every public item carries rustdoc; CI builds docs with -D warnings so
+// this cannot rot (see .github/workflows/ci.yml).
+#![warn(missing_docs)]
 
 pub mod error;
 pub mod util;

@@ -11,8 +11,11 @@ use crate::tensor::Tensor;
 /// `V^T (p, n)` and `p = min(m, n)`; singular values sorted descending.
 #[derive(Debug, Clone)]
 pub struct Svd {
+    /// Left singular vectors `U (m, p)`.
     pub u: Tensor,
+    /// Singular values, descending.
     pub s: Vec<f32>,
+    /// Right singular vectors `V^T (p, n)`.
     pub vt: Tensor,
 }
 

@@ -12,7 +12,9 @@ pub struct CacheSim {
     assoc: usize,
     line_bytes: u64,
     n_sets: u64,
+    /// Total simulated accesses.
     pub accesses: u64,
+    /// Accesses that missed.
     pub misses: u64,
 }
 

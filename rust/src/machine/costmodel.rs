@@ -35,9 +35,13 @@ pub const UNPACKED_G_PENALTY: f64 = 4.0;
 /// Decomposed time estimate.
 #[derive(Debug, Clone, Copy)]
 pub struct TimeEstimate {
+    /// Arithmetic-bound seconds.
     pub compute_s: f64,
+    /// Load/store-bound seconds.
     pub ls_s: f64,
+    /// DRAM-traffic-bound seconds.
     pub dram_s: f64,
+    /// Fixed thread-spawn overhead seconds.
     pub spawn_s: f64,
 }
 
@@ -48,6 +52,7 @@ impl TimeEstimate {
         self.compute_s.max(self.ls_s).max(self.dram_s) + self.spawn_s
     }
 
+    /// Throughput implied by the estimate for `flops` of work.
     pub fn gflops(&self, flops: u64) -> f64 {
         flops as f64 / self.seconds() / 1e9
     }

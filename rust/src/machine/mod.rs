@@ -17,6 +17,7 @@ pub mod costmodel;
 /// Description of a target CPU for the analytical compiler.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MachineSpec {
+    /// Marketing name of the modeled CPU.
     pub name: &'static str,
     /// Vector width in bits (RVV VLEN / AVX width).
     pub vector_bits: u32,

@@ -7,6 +7,7 @@
 //!   kernel-bench           measure ours vs IREE-like vs Pluto-like (Figs 12-14)
 //!   serve-demo             start the serving coordinator on a TT LeNet300,
 //!                          fire synthetic load, print metrics
+//!                          (--workers N --max-batch B --wait-us T --queue-cap Q)
 //!   artifacts-check        load + execute the PJRT artifacts (needs `make artifacts`)
 //!
 //! Arg parsing is hand-rolled (clap unavailable offline): `--key value`.
@@ -196,6 +197,13 @@ fn cmd_kernel_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
 
 fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let requests: usize = get(args, "requests", 200);
+    let serve_cfg = ServeConfig {
+        max_batch: get(args, "max-batch", ServeConfig::default().max_batch),
+        max_wait_us: get(args, "wait-us", ServeConfig::default().max_wait_us),
+        queue_cap: get(args, "queue-cap", ServeConfig::default().queue_cap),
+        workers: get(args, "workers", ServeConfig::default().workers),
+    };
+    serve_cfg.validate()?;
     let machine = MachineSpec::spacemit_k1();
     let cfg = DseConfig::default();
     let mut rng = Rng::new(1);
@@ -222,7 +230,11 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
         }
     }
     let engine = ModelEngine::new("lenet300-tt", ops, 784, 10);
-    let server = Server::start(engine, ServeConfig::default());
+    println!(
+        "serving with {} worker(s), max_batch {}, wait {}us, queue {}",
+        serve_cfg.workers, serve_cfg.max_batch, serve_cfg.max_wait_us, serve_cfg.queue_cap
+    );
+    let server = Server::start(engine, serve_cfg);
 
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)

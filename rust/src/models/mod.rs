@@ -53,6 +53,7 @@ impl LayerSpec {
         }
     }
 
+    /// Whether this layer is an FC layer (the factorization target).
     pub fn is_fc(&self) -> bool {
         matches!(self, LayerSpec::Fc { .. })
     }
@@ -61,15 +62,20 @@ impl LayerSpec {
 /// Model family tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
+    /// Convolutional model (paper Table 1).
     Cnn,
+    /// Transformer model (paper Table 2).
     Llm,
 }
 
 /// A model architecture: named layers with multiplicities.
 #[derive(Debug, Clone)]
 pub struct ModelArch {
+    /// Model name as the paper's tables print it.
     pub name: &'static str,
+    /// CNN vs LLM.
     pub family: Family,
+    /// Dataset tag as the paper's tables print it.
     pub dataset: &'static str,
     /// (layer, multiplicity) pairs.
     pub layers: Vec<(LayerSpec, u64)>,

@@ -8,26 +8,34 @@ use crate::util::json::{self, Json};
 /// Shape + dtype of one executable argument.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArgSpec {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element dtype name (e.g. `f32`).
     pub dtype: String,
 }
 
 /// One AOT artifact entry.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactMeta {
+    /// Artifact name (compile key).
     pub name: String,
+    /// HLO text file relative to the artifact dir.
     pub file: String,
+    /// Expected argument shapes, in call order.
     pub args: Vec<ArgSpec>,
+    /// Free-form provenance note.
     pub note: String,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct ArtifactManifest {
+    /// Every artifact listed in the manifest.
     pub artifacts: Vec<ArtifactMeta>,
 }
 
 impl ArtifactManifest {
+    /// Read and parse `manifest.json` from disk.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path).map_err(|e| {
             Error::runtime(format!(
@@ -38,6 +46,7 @@ impl ArtifactManifest {
         Self::parse(&text)
     }
 
+    /// Parse a manifest document.
     pub fn parse(text: &str) -> Result<Self> {
         let doc = json::parse(text)?;
         if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
@@ -89,10 +98,12 @@ impl ArtifactManifest {
         Ok(ArtifactManifest { artifacts })
     }
 
+    /// Look up an artifact by name.
     pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }
 
+    /// All artifact names, manifest order.
     pub fn names(&self) -> Vec<&str> {
         self.artifacts.iter().map(|a| a.name.as_str()).collect()
     }

@@ -31,10 +31,12 @@ impl Runtime {
         Ok(Runtime { client, dir, manifest })
     }
 
+    /// The parsed artifact manifest.
     pub fn manifest(&self) -> &ArtifactManifest {
         &self.manifest
     }
 
+    /// PJRT platform string (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -64,6 +66,7 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// Manifest entry this executable was compiled from.
     pub fn meta(&self) -> &ArtifactMeta {
         &self.meta
     }

@@ -34,14 +34,17 @@ impl Runtime {
         Err(unavailable())
     }
 
+    /// Unreachable (no stub `Runtime` can exist).
     pub fn manifest(&self) -> &ArtifactManifest {
         match self.never {}
     }
 
+    /// Unreachable (no stub `Runtime` can exist).
     pub fn platform(&self) -> String {
         match self.never {}
     }
 
+    /// Unreachable (no stub `Runtime` can exist).
     pub fn compile(&self, _name: &str) -> Result<Executable> {
         match self.never {}
     }
@@ -51,10 +54,12 @@ impl Runtime {
 pub enum Executable {}
 
 impl Executable {
+    /// Unreachable (no stub `Executable` can exist).
     pub fn meta(&self) -> &ArtifactMeta {
         match *self {}
     }
 
+    /// Unreachable (no stub `Executable` can exist).
     pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         match *self {}
     }

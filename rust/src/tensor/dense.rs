@@ -48,26 +48,32 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// The shape object.
     pub fn shape(&self) -> &Shape {
         &self.shape
     }
 
+    /// Dimension extents.
     pub fn dims(&self) -> &[usize] {
         self.shape.dims()
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Row-major element slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the raw row-major buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }

@@ -7,6 +7,7 @@ use crate::error::{Error, Result};
 pub struct Shape(pub Vec<usize>);
 
 impl Shape {
+    /// A shape from dimension extents.
     pub fn new(dims: impl Into<Vec<usize>>) -> Self {
         Shape(dims.into())
     }
@@ -21,6 +22,7 @@ impl Shape {
         self.0.iter().product()
     }
 
+    /// Dimension extents.
     pub fn dims(&self) -> &[usize] {
         &self.0
     }

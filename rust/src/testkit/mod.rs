@@ -82,11 +82,17 @@ impl Draw {
 /// Outcome of a failed property, with the shrunk witness.
 #[derive(Debug)]
 pub struct Failure {
+    /// Property name.
     pub name: String,
+    /// PRNG seed reproducing the failure.
     pub seed: u64,
+    /// Case index within the run.
     pub case: usize,
+    /// Shrink scale that still fails (1.0 = unshrunk).
     pub shrink: f64,
+    /// The property's failure message.
     pub message: String,
+    /// Draws recorded while generating the witness.
     pub trace: Vec<String>,
 }
 

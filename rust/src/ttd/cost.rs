@@ -63,6 +63,7 @@ pub enum EinsumKind {
 /// conventions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EinsumDims {
+    /// Chain position (first / middle / final).
     pub kind: EinsumKind,
     /// Output feature extent `m_t`.
     pub m: usize,

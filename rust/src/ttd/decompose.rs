@@ -17,9 +17,11 @@ use super::{apply, TtLayout};
 /// A TT-decomposed FC layer: layout + concrete cores (+ optional bias).
 #[derive(Debug, Clone)]
 pub struct TtCores {
+    /// The factorized layout the cores realize.
     pub layout: TtLayout,
     /// Core `t` has shape `(r_{t-1}, n_t, m_t, r_t)`.
     pub cores: Vec<Tensor>,
+    /// Optional output bias (length `M`).
     pub bias: Option<Vec<f32>>,
 }
 

@@ -29,6 +29,7 @@ pub struct TtLayout {
 }
 
 impl TtLayout {
+    /// A layout from explicit factor shapes and a full rank list.
     pub fn new(m_shape: Vec<u64>, n_shape: Vec<u64>, ranks: Vec<u64>) -> Result<Self> {
         let d = m_shape.len();
         if d == 0 || n_shape.len() != d {
@@ -70,14 +71,17 @@ impl TtLayout {
         self.m_shape.len()
     }
 
+    /// Output factorization `(m_1 .. m_d)`.
     pub fn m_shape(&self) -> &[u64] {
         &self.m_shape
     }
 
+    /// Input factorization `(n_1 .. n_d)`.
     pub fn n_shape(&self) -> &[u64] {
         &self.n_shape
     }
 
+    /// Rank list `(r_0 .. r_d)` with `r_0 = r_d = 1`.
     pub fn ranks(&self) -> &[u64] {
         &self.ranks
     }

@@ -41,6 +41,7 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// An empty stopwatch.
     pub fn new() -> Self {
         Self::default()
     }

@@ -1,4 +1,7 @@
-//! Integration: the serving coordinator over a real TT-compressed model.
+//! Integration: the serving coordinator over a real TT-compressed model,
+//! single worker and pool.
+
+use std::time::Instant;
 
 use ttrv::baselines::dense::DenseFc;
 use ttrv::config::{DseConfig, ServeConfig};
@@ -155,4 +158,159 @@ fn throughput_improves_with_batching() {
     assert_eq!(m.requests % 128, 0);
     assert!(batched, "no burst formed a multi-request batch in 5 attempts");
     server.shutdown();
+}
+
+/// Serve a fixed 96-request stream with the given pool size and return the
+/// output bit patterns by request id. The model is rebuilt from the same
+/// seed each call, so any cross-run difference can only come from the pool.
+fn serve_stream_bits(workers: usize) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(31);
+    let (tt_model, _) = build_pair(&mut rng);
+    let server = Server::start(
+        tt_model,
+        ServeConfig { max_batch: 8, max_wait_us: 500, queue_cap: 1024, workers },
+    );
+    let mut input_rng = Rng::new(77);
+    let inputs: Vec<Vec<f32>> = (0..96).map(|_| input_rng.normal_vec(784, 1.0)).collect();
+    // burst submission so batches actually form (and form *differently*
+    // across pool sizes — which the outputs must not care about)
+    let rxs: Vec<_> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(id, input)| {
+            server
+                .submit(InferenceRequest { id: id as u64, input })
+                .unwrap()
+        })
+        .collect();
+    let mut bits = vec![Vec::new(); 96];
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, id as u64);
+        bits[id] = resp.output.iter().map(|v| v.to_bits()).collect();
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 96);
+    server.shutdown();
+    bits
+}
+
+#[test]
+fn pool_outputs_byte_identical_to_single_worker() {
+    // ISSUE 2 acceptance: workers = 4 must yield byte-identical responses
+    // to workers = 1 on the same request stream. This holds because every
+    // worker executes the same deterministic plans over the same Arc-shared
+    // packed cores, and per-element reduction order is batch-invariant —
+    // so neither batch composition nor worker assignment can move a bit.
+    let single = serve_stream_bits(1);
+    let pool = serve_stream_bits(4);
+    for (id, (a, b)) in single.iter().zip(&pool).enumerate() {
+        assert!(!a.is_empty(), "request {id} unanswered");
+        assert_eq!(a, b, "request {id}: pool output diverged from single worker");
+    }
+}
+
+/// A deliberately heavy dense stack: one batch execution takes orders of
+/// magnitude longer than a submission, so a burst deterministically
+/// saturates a 1-slot queue.
+fn slow_engine() -> ModelEngine {
+    let mut rng = Rng::new(55);
+    let mut ops = Vec::new();
+    for i in 0..6 {
+        let w = Tensor::randn(vec![512, 512], 0.05, &mut rng);
+        ops.push(LayerOp::Dense(DenseFc::new(&w, None).unwrap()));
+        if i < 5 {
+            ops.push(LayerOp::Relu);
+        }
+    }
+    ModelEngine::new("slow-dense", ops, 512, 512)
+}
+
+#[test]
+fn queue_saturation_rejects_instead_of_blocking() {
+    // max_batch 1 + queue_cap 1: the server can absorb at most two of a
+    // tight burst (one executing, one queued); the rest must be refused
+    // immediately via the admission-control error, never by blocking.
+    let server = Server::start(
+        slow_engine(),
+        ServeConfig { max_batch: 1, max_wait_us: 0, queue_cap: 1, workers: 1 },
+    );
+    let t0 = Instant::now();
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for id in 0..6u64 {
+        match server.submit(InferenceRequest { id, input: vec![0.1; 512] }) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert!(
+                    matches!(e, ttrv::Error::QueueFull),
+                    "unexpected rejection reason: {e}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    let burst = t0.elapsed();
+    assert!(rejected >= 1, "burst never hit admission control");
+    // the submit path must have failed fast, not waited for capacity
+    assert!(burst.as_secs() < 5, "submissions blocked for {burst:?}");
+    // every accepted request is still answered exactly once
+    for rx in accepted {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.rejected, rejected);
+    assert_eq!(m.requests + rejected, 6);
+    server.shutdown();
+}
+
+#[test]
+fn pool_serves_concurrent_clients_consistently() {
+    // the pool variant of the probe-drift test: four client threads, four
+    // workers, a fixed probe input must produce bit-stable output no
+    // matter which worker or batch serves it
+    let mut rng = Rng::new(24);
+    let (tt_model, _) = build_pair(&mut rng);
+    let server = std::sync::Arc::new(Server::start(
+        tt_model,
+        ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 512, workers: 4 },
+    ));
+    assert_eq!(server.workers(), 4);
+    let probe: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
+    let expected = server
+        .infer(InferenceRequest { id: 0, input: probe.clone() })
+        .unwrap()
+        .output;
+
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let server = std::sync::Arc::clone(&server);
+        let probe = probe.clone();
+        let expected = expected.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(200 + t);
+            for i in 0..25u64 {
+                if i % 3 == 0 {
+                    let out = server
+                        .infer(InferenceRequest { id: t * 1000 + i, input: probe.clone() })
+                        .unwrap()
+                        .output;
+                    for (a, b) in out.iter().zip(&expected) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "probe drifted across workers");
+                    }
+                } else {
+                    let input = rng.normal_vec(784, 1.0);
+                    server
+                        .infer(InferenceRequest { id: t * 1000 + i, input })
+                        .unwrap();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.metrics();
+    assert_eq!(m.requests, 1 + 4 * 25);
+    assert!(m.mean_batch() >= 1.0);
 }
