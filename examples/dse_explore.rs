@@ -1,12 +1,13 @@
 //! DSE exploration across a whole model: the Table-1 workflow as a user
-//! would run it — per-layer design-space reduction, the survivor shortlist,
+//! would run it — per-layer design-space reduction through all six engine
+//! stages, the Pareto frontier over (modeled time, params, FLOPs),
 //! alternates for accuracy fallback, and the compiled plan of the winner.
 //!
 //! Run: `cargo run --release --example dse_explore [model]`
 //! (model defaults to AlexNet-CIFAR10; try LeNet300, VGG-CIFAR10, GPT3-Ada)
 
 use ttrv::compiler::compile;
-use ttrv::config::DseConfig;
+use ttrv::config::{DseConfig, SelectionPolicy};
 use ttrv::dse;
 use ttrv::dse::report::MIN_FC_DIM;
 use ttrv::machine::MachineSpec;
@@ -17,7 +18,8 @@ fn main() -> ttrv::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "AlexNet-CIFAR10".into());
     let model = model_by_name(&name)
         .unwrap_or_else(|| panic!("unknown model '{name}' (see models::all_models)"));
-    let cfg = DseConfig::default();
+    // four workers: byte-identical output, quicker pricing of big layers
+    let cfg = DseConfig { dse_workers: 4, ..Default::default() };
     let machine = MachineSpec::spacemit_k1();
     println!("model: {} ({})", model.name, model.dataset);
     println!(
@@ -28,38 +30,53 @@ fn main() -> ttrv::Result<()> {
 
     for fc in model.fc_shapes() {
         if fc.n < MIN_FC_DIM || fc.m < MIN_FC_DIM {
-            println!("[{} -> {}] x{}: below factorization floor, kept dense\n", fc.n, fc.m, fc.count);
+            println!(
+                "[{} -> {}] x{}: below factorization floor, kept dense\n",
+                fc.n, fc.m, fc.count
+            );
             continue;
         }
-        let e = dse::explore(fc.m, fc.n, &cfg);
+        let e = dse::explore_timed(fc.m, fc.n, &machine, &cfg);
+        let c = &e.explored.counts;
         println!(
-            "[{} -> {}] x{}: DS {} -> {} -> {} -> {} -> {}",
+            "[{} -> {}] x{}: DS {} -> {} -> {} -> {} -> {} -> {} ({} on the frontier)",
             fc.n,
             fc.m,
             fc.count,
-            ttrv::util::sci(e.counts.all),
-            ttrv::util::sci(e.counts.aligned),
-            e.counts.vectorized,
-            e.counts.initial,
-            e.counts.scalability
+            ttrv::util::sci(c.all),
+            ttrv::util::sci(c.aligned),
+            c.vectorized,
+            c.initial,
+            c.scalability,
+            e.timed.len(),
+            e.frontier.len(),
         );
-        match dse::select_solution(&e, 8) {
+        match dse::select_solution(&e, 8, SelectionPolicy::Balance) {
             Err(err) => println!("  no feasible solution: {err}\n"),
             Ok(sol) => {
                 println!(
-                    "  selected {} | {:.1}x params, {:.1}x FLOPs vs dense",
-                    sol.layout.describe(),
-                    cost::dense_params(fc.m, fc.n) as f64 / sol.params as f64,
-                    cost::dense_flops(fc.m, fc.n) as f64 / sol.flops as f64
+                    "  selected {} | {:.1}x params, {:.1}x FLOPs, modeled {:.1}x time vs dense",
+                    sol.layout().describe(),
+                    cost::dense_params(fc.m, fc.n) as f64 / sol.solution.params as f64,
+                    cost::dense_flops(fc.m, fc.n) as f64 / sol.solution.flops as f64,
+                    sol.speedup,
                 );
-                for (i, alt) in dse::select::alternates(&e, 3).iter().enumerate() {
+                if let Ok(fast) = dse::select_solution(&e, 8, SelectionPolicy::MinTime) {
                     println!(
-                        "  alternate #{i}: {} (flops {})",
-                        alt.layout.describe(),
-                        alt.flops
+                        "  min-time policy: {} (modeled {:.1} us)",
+                        fast.layout().describe(),
+                        fast.time_s * 1e6
                     );
                 }
-                for dims in cost::einsum_chain(&sol.layout, cfg.batch) {
+                for (i, alt) in dse::select::alternates(&e, 3).iter().enumerate() {
+                    println!(
+                        "  alternate #{i}: {} (flops {}, modeled {:.1} us)",
+                        alt.layout().describe(),
+                        alt.solution.flops,
+                        alt.time_s * 1e6,
+                    );
+                }
+                for dims in cost::einsum_chain(sol.layout(), cfg.batch) {
                     let plan = compile(&dims, &machine)?;
                     println!(
                         "    {:?}: vec={:?} rb=({},{},{},{}) tile={:?} T={} ls~{}",

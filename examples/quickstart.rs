@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use ttrv::config::DseConfig;
+use ttrv::config::{DseConfig, SelectionPolicy};
 use ttrv::coordinator::TtFcEngine;
 use ttrv::dse;
 use ttrv::linalg::matmul;
@@ -25,18 +25,32 @@ fn main() -> ttrv::Result<()> {
     let machine = MachineSpec::spacemit_k1();
     let mut rng = Rng::new(42);
 
-    // 1. explore the design space
-    let explored = dse::explore(m_dim, n_dim, &cfg);
+    // 1. explore the design space (all six stages, priced on the K1 model)
+    let explored = dse::explore_timed(m_dim, n_dim, &machine, &cfg);
+    let counts = &explored.explored.counts;
     println!(
-        "DSE for FC [{n_dim} -> {m_dim}]: {} -> {} -> {} -> {} -> {} solutions",
-        ttrv::util::sci(explored.counts.all),
-        ttrv::util::sci(explored.counts.aligned),
-        explored.counts.vectorized,
-        explored.counts.initial,
-        explored.counts.scalability,
+        "DSE for FC [{n_dim} -> {m_dim}]: {} -> {} -> {} -> {} -> {} -> {} solutions",
+        ttrv::util::sci(counts.all),
+        ttrv::util::sci(counts.aligned),
+        counts.vectorized,
+        counts.initial,
+        counts.scalability,
+        explored.timed.len(),
     );
-    let sol = dse::select_solution(&explored, 8)?;
-    println!("selected: {} ({} params, {} FLOPs)", sol.layout.describe(), sol.params, sol.flops);
+    println!(
+        "Pareto frontier over (modeled time, params, FLOPs): {} solutions",
+        explored.frontier.len()
+    );
+    let sol = dse::select_solution(&explored, 8, SelectionPolicy::Balance)?;
+    println!(
+        "selected: {} ({} params, {} FLOPs, modeled {:.1} us = {:.1}x vs dense)",
+        sol.layout().describe(),
+        sol.solution.params,
+        sol.solution.flops,
+        sol.time_s * 1e6,
+        sol.speedup,
+    );
+    let sol = sol.solution;
     println!(
         "dense:    {} params, {} FLOPs  => {:.1}x param / {:.1}x FLOP compression",
         cost::dense_params(m_dim, n_dim),

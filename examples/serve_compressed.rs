@@ -31,13 +31,18 @@ fn build_models(rng: &mut Rng) -> ttrv::Result<(ModelEngine, ModelEngine, usize,
     let mut dense_params = 0usize;
     for (i, &(n, m)) in shapes.iter().enumerate() {
         dense_params += (n * m + m) as usize;
-        match ttrv::coordinator::router::route_layer(m, n, 8, &cfg) {
+        match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg)? {
             Route::Tt(sol) => {
-                let mut tt = random_cores(&sol.layout, rng);
+                let mut tt = random_cores(sol.layout(), rng);
                 tt.bias = Some(vec![0.0; m as usize]);
                 tt_params += tt.param_count();
                 let w = tt.reconstruct()?;
-                println!("layer {i}: TT {} ({} params)", sol.layout.describe(), sol.params);
+                println!(
+                    "layer {i}: TT {} ({} params, modeled {:.1}x vs dense)",
+                    sol.layout().describe(),
+                    sol.solution.params,
+                    sol.speedup
+                );
                 tt_ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine)?));
                 dense_ops.push(LayerOp::Dense(DenseFc::new(&w, None)?));
             }

@@ -4,13 +4,11 @@
 
 use ttrv::baselines::dense::DenseFc;
 use ttrv::bench::{format_secs, measure, BenchCfg};
-use ttrv::compiler::compile;
-use ttrv::config::DseConfig;
+use ttrv::config::{DseConfig, SelectionPolicy};
 use ttrv::coordinator::TtFcEngine;
 use ttrv::dse;
-use ttrv::machine::{costmodel, MachineSpec};
+use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
-use ttrv::ttd::cost::{einsum_chain, EinsumDims, EinsumKind};
 use ttrv::ttd::decompose::random_cores;
 use ttrv::util::prng::Rng;
 
@@ -59,37 +57,29 @@ fn main() {
             .seconds;
             dense_params += ttrv::ttd::cost::dense_params(m, n);
 
-            // TT path with the DSE-selected solution
-            let e = dse::explore(m, n, &cfg);
-            let sol = dse::select_solution(&e, 8).expect("solution");
-            let tt = random_cores(&sol.layout, &mut rng);
+            // TT path with the engine-selected, time-qualified solution
+            let e = dse::explore_timed(m, n, &machine, &cfg);
+            let sol =
+                dse::select_solution(&e, 8, SelectionPolicy::Balance).expect("solution");
+            let tt = random_cores(sol.layout(), &mut rng);
             // measured path: host-planned + autotuned engine (§Perf iter 2)
             let mut engine = TtFcEngine::new(&tt, &MachineSpec::host())
                 .unwrap()
                 .with_tuning();
-            tt_total += measure("tt", sol.flops, &bcfg, || {
+            tt_total += measure("tt", sol.solution.flops, &bcfg, || {
                 engine.forward(&x).expect("tt");
             })
             .seconds;
-            tt_params += sol.params;
+            tt_params += sol.solution.params;
 
-            // modeled-K1 comparison: dense MMM as a (r=1, k=1) einsum vs the
-            // TT chain, both through the same cost model
-            let dense_dims = EinsumDims {
-                kind: EinsumKind::Final,
-                m: m as usize,
-                b: batch,
-                n: n as usize,
-                r: 1,
-                k: 1,
-            };
-            if let Ok(p) = compile(&dense_dims, &machine) {
-                dense_k1 += costmodel::estimate(&p, &machine).seconds();
-            }
-            for dims in einsum_chain(&sol.layout, batch) {
-                if let Ok(p) = compile(&dims, &machine) {
-                    tt_k1 += costmodel::estimate(&p, &machine).seconds();
-                }
+            // modeled-K1 comparison straight from the stage-6 pricing: the
+            // engine already ran dense MMM (an r=k=1 einsum) and the TT
+            // chain through the same cost model; an unschedulable dense
+            // layer reports as infinity and is skipped, as the old
+            // per-kernel compile guard did
+            if e.dense_time_s.is_finite() {
+                dense_k1 += e.dense_time_s;
+                tt_k1 += sol.time_s;
             }
         }
         let speedup = dense_total / tt_total;

@@ -4,7 +4,7 @@
 
 use ttrv::bench::{measure, BenchCfg};
 use ttrv::compiler::pipeline::{compile_stage, OptStage};
-use ttrv::config::DseConfig;
+use ttrv::config::{DseConfig, SelectionPolicy};
 use ttrv::dse;
 use ttrv::kernels::{pack, Executor};
 use ttrv::machine::{costmodel, MachineSpec};
@@ -14,8 +14,8 @@ use ttrv::util::prng::Rng;
 
 fn main() {
     let machine = MachineSpec::spacemit_k1();
-    let mut cfg = DseConfig::default();
-    cfg.ranks = vec![16]; // the paper uses rank 16 here
+    // the paper uses rank 16 here
+    let cfg = DseConfig { ranks: vec![16], ..Default::default() };
     let bcfg = BenchCfg::from_env();
     let mut rng = Rng::new(16);
     let models: Vec<(&str, Vec<(u64, u64)>)> = vec![
@@ -35,16 +35,18 @@ fn main() {
     for (name, layers) in &models {
         let mut totals = [0.0f64; 4];
         for &(n, m) in layers {
-            let e = dse::explore(m, n, &cfg);
-            let Ok(sol) = dse::select_solution(&e, 16) else { continue };
-            let chain = einsum_chain(&sol.layout, 1);
+            let e = dse::explore_timed(m, n, &machine, &cfg);
+            let Ok(sol) = dse::select_solution(&e, 16, SelectionPolicy::Balance) else {
+                continue;
+            };
+            let chain = einsum_chain(sol.layout(), 1);
             let cores: Vec<Tensor> = sol
-                .layout
+                .layout()
                 .core_shapes()
                 .into_iter()
                 .map(|s| Tensor::randn(s.to_vec(), 0.2, &mut rng))
                 .collect();
-            let x0 = rng.normal_vec(sol.layout.n_total() as usize, 1.0);
+            let x0 = rng.normal_vec(sol.layout().n_total() as usize, 1.0);
             let mut layer_rbtile = 0.0f64;
             for (si, stage) in stages.iter().enumerate() {
                 let plans: Vec<_> = chain
@@ -69,7 +71,7 @@ fn main() {
                 let packed: Vec<_> = plans
                     .iter()
                     .enumerate()
-                    .map(|(i, p)| pack(&cores[sol.layout.d() - 1 - i], p).unwrap())
+                    .map(|(i, p)| pack(&cores[sol.layout().d() - 1 - i], p).unwrap())
                     .collect();
                 // one Executor per stage: the staged plans override the
                 // cache for the same chain dims
@@ -77,7 +79,7 @@ fn main() {
                 for p in &plans {
                     ex.set_plan(*p);
                 }
-                let mes = measure("stage", sol.flops, &bcfg, || {
+                let mes = measure("stage", sol.solution.flops, &bcfg, || {
                     let mut cur = x0.clone();
                     let mut out = Vec::new();
                     for (d, g) in chain.iter().zip(&packed) {

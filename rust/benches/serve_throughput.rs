@@ -31,9 +31,9 @@ fn build_engine() -> ModelEngine {
     let mut ops = Vec::new();
     let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
     for (i, &(n, m)) in shapes.iter().enumerate() {
-        match ttrv::coordinator::router::route_layer(m, n, 8, &cfg) {
+        match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg).expect("policy") {
             Route::Tt(sol) => {
-                let mut tt = random_cores(&sol.layout, &mut rng);
+                let mut tt = random_cores(sol.layout(), &mut rng);
                 tt.bias = Some(vec![0.0; m as usize]);
                 ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine).expect("compile layer")));
             }

@@ -136,6 +136,37 @@ fn parse_value(s: &str) -> std::result::Result<Value, String> {
 // Typed configs
 // ---------------------------------------------------------------------------
 
+/// How [`crate::dse::select::select_solution`] picks from the DSE engine's
+/// time-qualified survivors / Pareto frontier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectionPolicy {
+    /// The paper's §6.4 policy: the most balanced (near-square) d=2
+    /// solution at the requested rank — an accuracy proxy (default).
+    #[default]
+    Balance,
+    /// The fastest modeled solution on the Pareto frontier.
+    MinTime,
+}
+
+impl SelectionPolicy {
+    /// Parse a policy name as written in config files / CLI flags.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "balance" => Some(SelectionPolicy::Balance),
+            "min-time" => Some(SelectionPolicy::MinTime),
+            _ => None,
+        }
+    }
+
+    /// The config-file spelling of this policy.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SelectionPolicy::Balance => "balance",
+            SelectionPolicy::MinTime => "min-time",
+        }
+    }
+}
+
 /// DSE engine knobs (paper §4.1-4.2 constants, overridable per run).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DseConfig {
@@ -154,6 +185,16 @@ pub struct DseConfig {
     pub scal_flops: u64,
     /// Batch size assumed when pricing inference. Must be >= 1.
     pub batch: usize,
+    /// Stage-6 cut: discard solutions whose modeled speedup over the dense
+    /// layer is below this factor. Must be >= 1.0 (1.0 = "no modeled
+    /// slowdowns", the loosest meaningful setting).
+    pub time_speedup_min: f64,
+    /// Worker threads for parallel enumeration + pricing. Results are
+    /// byte-identical for every value. Must be >= 1.
+    pub dse_workers: usize,
+    /// Selection policy name; must parse via [`SelectionPolicy::parse`]
+    /// (`"balance"` or `"min-time"`).
+    pub selection_policy: String,
 }
 
 impl Default for DseConfig {
@@ -165,6 +206,9 @@ impl Default for DseConfig {
             d_scal_limit: 4,
             scal_flops: 8_000_000,
             batch: 1,
+            time_speedup_min: 1.0,
+            dse_workers: 1,
+            selection_policy: SelectionPolicy::Balance.as_str().to_string(),
         }
     }
 }
@@ -192,7 +236,28 @@ impl DseConfig {
         if let Some(r) = self.ranks.iter().find(|&&r| r < 1) {
             return Err(Error::config(format!("dse.ranks entry {r} must be >= 1")));
         }
+        if !(self.time_speedup_min >= 1.0 && self.time_speedup_min.is_finite()) {
+            return Err(Error::config(format!(
+                "dse.time_speedup_min must be a finite value >= 1.0, got {}",
+                self.time_speedup_min
+            )));
+        }
+        if self.dse_workers < 1 {
+            return Err(Error::config("dse.dse_workers must be >= 1"));
+        }
+        self.policy()?;
         Ok(())
+    }
+
+    /// The parsed selection policy. Errors on names [`DseConfig::validate`]
+    /// would reject.
+    pub fn policy(&self) -> Result<SelectionPolicy> {
+        SelectionPolicy::parse(&self.selection_policy).ok_or_else(|| {
+            Error::config(format!(
+                "dse.selection_policy '{}' unknown (expected 'balance' or 'min-time')",
+                self.selection_policy
+            ))
+        })
     }
 }
 
@@ -279,6 +344,15 @@ pub fn load(text: &str) -> Result<(DseConfig, ServeConfig)> {
                     .map_err(|e| Error::config(format!("dse.ranks entry '{}': {e}", x.trim())))
             })
             .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(v) = t.get_f64("dse", "time_speedup_min") {
+        dse.time_speedup_min = v;
+    }
+    if let Some(v) = non_negative(&t, "dse", "dse_workers")? {
+        dse.dse_workers = v as usize;
+    }
+    if let Some(v) = t.get_str("dse", "selection_policy") {
+        dse.selection_policy = v.to_string();
     }
     let mut serve = ServeConfig::default();
     if let Some(v) = non_negative(&t, "serve", "max_batch")? {
@@ -384,10 +458,46 @@ mod tests {
             ("[dse]\nbatch = -1", "batch"),
             ("[dse]\nranks = \"\"", "ranks"),
             ("[dse]\nranks = \"8, 0\"", "rank"),
+            ("[dse]\ntime_speedup_min = 0.5", "time_speedup_min"),
+            ("[dse]\ntime_speedup_min = -2.0", "time_speedup_min"),
+            ("[dse]\ndse_workers = 0", "dse_workers"),
+            ("[dse]\ndse_workers = -3", "dse_workers"),
+            ("[dse]\nselection_policy = \"fastest\"", "selection_policy"),
         ] {
             let err = load(text).expect_err(text).to_string();
             assert!(err.contains(needle), "{text}: {err}");
         }
+    }
+
+    #[test]
+    fn dse_engine_knobs_roundtrip() {
+        let (dse, _) = load(
+            r#"
+            [dse]
+            time_speedup_min = 2.5
+            dse_workers = 4
+            selection_policy = "min-time"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(dse.time_speedup_min, 2.5);
+        assert_eq!(dse.dse_workers, 4);
+        assert_eq!(dse.policy().unwrap(), SelectionPolicy::MinTime);
+        // integer-typed threshold coerces like any float knob
+        let (dse, _) = load("[dse]\ntime_speedup_min = 3").unwrap();
+        assert_eq!(dse.time_speedup_min, 3.0);
+    }
+
+    #[test]
+    fn selection_policy_parse_roundtrip() {
+        for p in [SelectionPolicy::Balance, SelectionPolicy::MinTime] {
+            assert_eq!(SelectionPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(SelectionPolicy::parse("fastest"), None);
+        assert_eq!(SelectionPolicy::default(), SelectionPolicy::Balance);
+        let bad = DseConfig { selection_policy: "fastest".into(), ..Default::default() };
+        assert!(bad.policy().is_err());
+        assert!(bad.validate().is_err());
     }
 
     #[test]
@@ -396,5 +506,9 @@ mod tests {
         ServeConfig::default().validate().unwrap();
         let s = ServeConfig { workers: 0, ..Default::default() };
         assert!(s.validate().is_err());
+        let d = DseConfig { time_speedup_min: f64::NAN, ..Default::default() };
+        assert!(d.validate().is_err());
+        let d = DseConfig { time_speedup_min: f64::INFINITY, ..Default::default() };
+        assert!(d.validate().is_err());
     }
 }

@@ -14,6 +14,8 @@
 //! * `queue` (crate-private) — a bounded MPMC admission queue:
 //!   non-blocking `try_push` for fail-fast admission control, deadline-
 //!   aware pops for the batch window, drain-then-exit close semantics.
+//!   Also the work-unit queue of the parallel DSE engine
+//!   ([`crate::dse::timed`]).
 //! * [`server`] — the pool: `ServeConfig.workers` batching workers share
 //!   the admission queue; replies fan out over channels; per-worker
 //!   metrics shards merge on demand; no allocation on the per-request hot
@@ -29,7 +31,7 @@
 
 pub mod engine;
 pub mod batcher;
-mod queue;
+pub(crate) mod queue;
 pub mod server;
 pub mod metrics;
 pub mod router;

@@ -1,18 +1,24 @@
-//! Layer routing: run the DSE per FC layer and decide TT vs dense
-//! (the paper factorizes layers where a surviving solution beats the dense
-//! layer; tiny layers stay dense).
+//! Layer routing: run the time-aware DSE per FC layer and decide TT vs
+//! dense (the paper factorizes layers where a surviving solution beats the
+//! dense layer; tiny layers stay dense).
+//!
+//! Routing runs the full six-stage engine
+//! ([`crate::dse::explore_timed`]), so a `Tt` route always carries a
+//! [`TimedSolution`] whose modeled speedup over the dense layer met
+//! `DseConfig::time_speedup_min` — the serving stack never deploys a
+//! factorization the machine model predicts to be a slowdown.
 
 use crate::config::DseConfig;
-use crate::dse::{self, Solution};
+use crate::dse::{self, TimedSolution};
 use crate::dse::report::MIN_FC_DIM;
 use crate::error::Result;
-use crate::ttd::cost;
+use crate::machine::MachineSpec;
 
 /// Routing decision for one FC layer.
 #[derive(Debug, Clone)]
 pub enum Route {
-    /// Factorize with this DSE-selected solution.
-    Tt(Solution),
+    /// Factorize with this DSE-selected, time-qualified solution.
+    Tt(TimedSolution),
     /// Keep the dense MMM path.
     Dense,
 }
@@ -24,65 +30,115 @@ impl Route {
     }
 }
 
-/// Decide the route for an FC layer `(m_out, n_in)` at the given rank.
-pub fn route_layer(m_out: u64, n_in: u64, rank: u64, cfg: &DseConfig) -> Route {
+/// Decide the route for an FC layer `(m_out, n_in)` at the given rank,
+/// selecting by the policy in `cfg.selection_policy` over the engine's
+/// output on `machine`. Errors on an unknown policy name (a config that
+/// [`DseConfig::validate`] would reject) rather than silently falling back
+/// — a layer with no qualified solution routes `Dense`, never `Err`.
+pub fn route_layer(
+    m_out: u64,
+    n_in: u64,
+    rank: u64,
+    machine: &MachineSpec,
+    cfg: &DseConfig,
+) -> Result<Route> {
     if m_out < MIN_FC_DIM || n_in < MIN_FC_DIM {
-        return Route::Dense;
+        return Ok(Route::Dense);
     }
-    let explored = dse::explore(m_out, n_in, cfg);
-    match dse::select_solution(&explored, rank) {
-        Ok(sol) if sol.flops < cost::dense_flops(m_out, n_in) => Route::Tt(sol),
-        _ => Route::Dense,
-    }
+    let policy = cfg.policy()?;
+    let explored = dse::explore_timed(m_out, n_in, machine, cfg);
+    // qualification happens entirely in the engine: any selectable solution
+    // already beat dense on FLOPs + params (stage 4) and on modeled time
+    // (stage 6), so selection failure is the only reason to stay dense
+    Ok(match dse::select_solution(&explored, rank, policy) {
+        Ok(sol) => Route::Tt(sol),
+        Err(_) => Route::Dense,
+    })
 }
 
 /// Route every FC layer of a model architecture.
 pub fn route_model(
     shapes: &[(u64, u64)], // (n_in, m_out) pairs, paper table order
     rank: u64,
+    machine: &MachineSpec,
     cfg: &DseConfig,
 ) -> Result<Vec<Route>> {
-    Ok(shapes
+    shapes
         .iter()
-        .map(|&(n, m)| route_layer(m, n, rank, cfg))
-        .collect())
+        .map(|&(n, m)| route_layer(m, n, rank, machine, cfg))
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ttd::cost;
+
+    fn k1() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
 
     #[test]
     fn large_layers_get_factorized() {
         let cfg = DseConfig::default();
-        let r = route_layer(300, 784, 8, &cfg);
+        let r = route_layer(300, 784, 8, &k1(), &cfg).unwrap();
         assert!(r.is_tt());
         if let Route::Tt(sol) = r {
-            assert!(sol.flops < cost::dense_flops(300, 784));
-            assert_eq!(sol.layout.d(), 2); // Sec. 6.4 selection policy
+            assert!(sol.solution.flops < cost::dense_flops(300, 784));
+            assert_eq!(sol.layout().d(), 2); // Sec. 6.4 selection policy
+            assert!(sol.speedup >= cfg.time_speedup_min);
         }
     }
 
     #[test]
     fn tiny_layers_stay_dense() {
         let cfg = DseConfig::default();
-        assert!(!route_layer(10, 100, 8, &cfg).is_tt()); // 10-class head
-        assert!(!route_layer(100, 10, 8, &cfg).is_tt());
+        assert!(!route_layer(10, 100, 8, &k1(), &cfg).unwrap().is_tt()); // 10-class head
+        assert!(!route_layer(100, 10, 8, &k1(), &cfg).unwrap().is_tt());
     }
 
     #[test]
     fn prime_dims_stay_dense() {
         let cfg = DseConfig::default();
-        assert!(!route_layer(101, 784, 8, &cfg).is_tt()); // 101 prime
+        assert!(!route_layer(101, 784, 8, &k1(), &cfg).unwrap().is_tt()); // 101 prime
     }
 
     #[test]
     fn lenet300_routing_matches_examples() {
         let cfg = DseConfig::default();
         let routes =
-            route_model(&[(784, 300), (300, 100), (100, 10)], 8, &cfg).unwrap();
+            route_model(&[(784, 300), (300, 100), (100, 10)], 8, &k1(), &cfg).unwrap();
         assert!(routes[0].is_tt());
         assert!(routes[1].is_tt());
         assert!(!routes[2].is_tt()); // 100 -> 10 too small
+    }
+
+    #[test]
+    fn strict_speedup_threshold_can_force_dense() {
+        // an absurd required speedup disqualifies every solution -> dense
+        let cfg = DseConfig { time_speedup_min: 1e9, ..Default::default() };
+        assert!(!route_layer(300, 784, 8, &k1(), &cfg).unwrap().is_tt());
+    }
+
+    #[test]
+    fn unknown_policy_is_a_routing_error_not_a_silent_fallback() {
+        let cfg = DseConfig { selection_policy: "fastest".into(), ..Default::default() };
+        assert!(route_layer(300, 784, 8, &k1(), &cfg).is_err());
+        assert!(route_model(&[(784, 300)], 8, &k1(), &cfg).is_err());
+    }
+
+    #[test]
+    fn min_time_policy_routes_to_the_modeled_fastest() {
+        let cfg = DseConfig {
+            selection_policy: "min-time".into(),
+            ..Default::default()
+        };
+        match route_layer(300, 784, 8, &k1(), &cfg).unwrap() {
+            Route::Tt(sol) => {
+                let e = dse::explore_timed(300, 784, &k1(), &cfg);
+                assert!(e.timed.iter().all(|t| sol.time_s <= t.time_s));
+            }
+            Route::Dense => panic!("expected a TT route"),
+        }
     }
 }

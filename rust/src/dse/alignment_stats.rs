@@ -1,5 +1,6 @@
 //! Permutation sweeps for the alignment-strategy evaluation
-//! (paper Figs. 5-8 and Eq. 16-17 ratios).
+//! (paper Figs. 5-8 and Eq. 16-17 ratios) — the measurement backing the
+//! pipeline's [`super::pipeline::Alignment`] stage.
 
 use crate::factor::{self, multiset_permutations};
 use crate::ttd::{cost, TtLayout};

@@ -1,7 +1,10 @@
 //! The design-space exploration engine (paper §4.1-4.2) — the paper's
-//! primary contribution.
+//! primary contribution, grown into a staged, parallel, time-aware
+//! exploration engine.
 //!
-//! Pipeline stages, exactly the paper's Figure 4 / Tables 1-2 columns:
+//! Pipeline stages — the paper's Figure 4 / Tables 1-2 columns plus the
+//! modeled-performance step its text describes but the tables stop short
+//! of:
 //!
 //! 1. **All initial solutions** — counted, never materialized
 //!    ([`crate::factor::count`]).
@@ -13,17 +16,30 @@
 //!    the dense layer.
 //! 5. **Scalability constraint** (§4.2.3) — discard long configurations
 //!    whose heaviest Einsum cannot keep threads busy.
+//! 6. **Modeled-time cut** ([`timed`]) — price every survivor through
+//!    [`crate::compiler::compile`] + [`crate::machine::costmodel`]; cut
+//!    solutions whose modeled speedup over the dense layer falls below
+//!    `DseConfig::time_speedup_min`; expose the Pareto frontier over
+//!    (modeled time, params, FLOPs) as the selection substrate.
 //!
-//! The enumerated stages sweep *uniform* rank values (the paper's `R`
-//! notation; its experiments fix R per solution), which keeps stage-3+
-//! spaces at the table's reported magnitudes.
+//! Stages 1-5 are the composable [`pipeline`] (one named [`pipeline::Stage`]
+//! per cut); stage 6 plus the `(d, m-shape)` work-unit worker pool is
+//! [`timed::explore_timed`]; [`select`] turns the frontier + qualified set
+//! into a single choice per policy. The enumerated stages sweep *uniform*
+//! rank values (the paper's `R` notation; its experiments fix R per
+//! solution), which keeps stage-3+ spaces at the table's reported
+//! magnitudes.
 
 pub mod space;
-pub mod prune;
+pub mod pipeline;
+pub mod timed;
+pub mod pareto;
 pub mod report;
 pub mod select;
 pub mod alignment_stats;
 
-pub use prune::{explore, StageCounts};
+pub use pareto::{dominates, pareto_frontier};
+pub use pipeline::{explore, Explored, StageCounts};
 pub use select::select_solution;
 pub use space::Solution;
+pub use timed::{explore_timed, TimedExplored, TimedSolution};

@@ -1,0 +1,190 @@
+//! Dominance-checked Pareto frontier over (modeled time, params, FLOPs).
+//!
+//! The multi-objective view follows "Comprehensive Design Space Exploration
+//! for Tensorized Neural Network Hardware Accelerators" (PAPERS.md): rather
+//! than collapsing the survivor set to one scalar score, the engine keeps
+//! every non-dominated trade-off point so downstream policies (latency-
+//! first deployment, memory-first embedding, accuracy-driven fallback) can
+//! pick without re-exploring.
+
+use super::timed::TimedSolution;
+
+/// Does `a` dominate `b`: no worse on every objective (modeled time,
+/// params, FLOPs) and strictly better on at least one?
+pub fn dominates(a: &TimedSolution, b: &TimedSolution) -> bool {
+    let no_worse = a.time_s <= b.time_s
+        && a.solution.params <= b.solution.params
+        && a.solution.flops <= b.solution.flops;
+    let strictly_better = a.time_s < b.time_s
+        || a.solution.params < b.solution.params
+        || a.solution.flops < b.solution.flops;
+    no_worse && strictly_better
+}
+
+/// The non-dominated subset of `timed`, returned in canonical order
+/// ([`Solution::canonical_cmp`]). Input in any order is accepted; the
+/// already-canonical lists the engine produces skip the internal re-sort
+/// in all but name.
+///
+/// The sweep runs in `O(n log n + n * frontier)` rather than the naive
+/// all-pairs `O(n^2)`, which matters for the large layers that motivate
+/// the engine (stage 5 leaves ~14k survivors on the 9216x4096 AlexNet
+/// layer):
+///
+/// * In canonical order, any dominator of `s` precedes `s` — except a
+///   solution tying `s` on both FLOPs and params while beating it on
+///   time. A pre-pass over each equal-`(flops, params)` run (contiguous
+///   once sorted) discards everything slower than the run's fastest
+///   member, eliminating that case.
+/// * After the pre-pass, checking each survivor against the *kept*
+///   frontier members alone is sound: a dominated `s` has a non-dominated
+///   dominator (follow dominators to a maximal one — dominance is a
+///   strict partial order), which precedes `s` and was therefore kept.
+///
+/// Equivalence with the naive all-pairs definition is pinned by the
+/// property tests in `rust/tests/dse_engine.rs` and the crafted-set test
+/// below.
+///
+/// [`Solution::canonical_cmp`]: super::space::Solution::canonical_cmp
+pub fn pareto_frontier(timed: &[TimedSolution]) -> Vec<TimedSolution> {
+    let mut sorted: Vec<&TimedSolution> = timed.iter().collect();
+    sorted.sort_by(|a, b| a.solution.canonical_cmp(&b.solution));
+    // pre-pass: within an equal-(flops, params) run only the fastest
+    // member(s) can be non-dominated (the rest lose on time alone)
+    let mut alive = vec![true; sorted.len()];
+    let mut start = 0;
+    while start < sorted.len() {
+        let key = |s: &TimedSolution| (s.solution.flops, s.solution.params);
+        let mut end = start + 1;
+        while end < sorted.len() && key(sorted[end]) == key(sorted[start]) {
+            end += 1;
+        }
+        let fastest = sorted[start..end]
+            .iter()
+            .map(|s| s.time_s)
+            .fold(f64::INFINITY, f64::min);
+        for i in start..end {
+            alive[i] = sorted[i].time_s <= fastest;
+        }
+        start = end;
+    }
+    // sweep: every surviving candidate needs checking only against the
+    // frontier members already kept ahead of it
+    let mut frontier: Vec<TimedSolution> = Vec::new();
+    for (i, s) in sorted.into_iter().enumerate() {
+        if alive[i] && !frontier.iter().any(|f| dominates(f, s)) {
+            frontier.push(s.clone());
+        }
+    }
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::Solution;
+    use crate::ttd::TtLayout;
+
+    fn sol(m: Vec<u64>, n: Vec<u64>, rank: u64, time_s: f64) -> TimedSolution {
+        let mut s = Solution::new(
+            TtLayout::with_uniform_rank(m, n, rank).unwrap(),
+            rank,
+        );
+        // decouple the objectives from the layout so tests can shape the
+        // dominance structure freely
+        s.params = (time_s * 1e7) as u64;
+        s.flops = s.params * 2;
+        TimedSolution { solution: s, time_s, speedup: 1.0 / time_s }
+    }
+
+    /// The naive all-pairs definition, kept as the oracle the sweep in
+    /// [`pareto_frontier`] must match.
+    fn naive_frontier(timed: &[TimedSolution]) -> Vec<TimedSolution> {
+        timed
+            .iter()
+            .filter(|s| !timed.iter().any(|o| dominates(o, s)))
+            .cloned()
+            .collect()
+    }
+
+    #[test]
+    fn strict_domination_removes_the_worse_point() {
+        let better = sol(vec![4, 4], vec![4, 4], 8, 1e-5);
+        let worse = sol(vec![8, 2], vec![2, 8], 8, 2e-5);
+        assert!(dominates(&better, &worse));
+        assert!(!dominates(&worse, &better));
+        // canonical order puts the lower-(flops, params) point first
+        let f = pareto_frontier(&[better.clone(), worse.clone()]);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0], better);
+    }
+
+    #[test]
+    fn incomparable_points_both_survive() {
+        let mut fast_big = sol(vec![4, 4], vec![4, 4], 8, 1e-5);
+        let mut slow_small = sol(vec![8, 2], vec![2, 8], 8, 2e-5);
+        fast_big.solution.params = 100;
+        fast_big.solution.flops = 100;
+        slow_small.solution.params = 50;
+        slow_small.solution.flops = 50;
+        assert!(!dominates(&fast_big, &slow_small));
+        assert!(!dominates(&slow_small, &fast_big));
+        let f = pareto_frontier(&[slow_small, fast_big]);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn sweep_matches_the_naive_definition_on_a_crafted_set() {
+        // exercises the equal-(flops, params) pre-pass: the run's slower
+        // member must fall to its faster twin, and a later-group member
+        // dominated only through a chain must still be cut
+        let mut pts = vec![
+            sol(vec![4, 4], vec![4, 4], 8, 1.0e-5),
+            sol(vec![8, 2], vec![2, 8], 8, 3.0e-5),
+            sol(vec![16, 1], vec![1, 16], 8, 2.0e-5),
+            sol(vec![2, 8], vec![8, 2], 8, 4.0e-5),
+        ];
+        // group 0/1: same (flops, params), different times
+        pts[1].solution.params = pts[0].solution.params;
+        pts[1].solution.flops = pts[0].solution.flops;
+        // group 2: more params/flops, faster (incomparable with group 0)
+        pts[2].solution.params = pts[0].solution.params + 1;
+        pts[2].solution.flops = pts[0].solution.flops + 1;
+        pts[2].time_s = 0.5e-5;
+        // point 3: dominated by pts[2] (and only by it)
+        pts[3].solution.params = pts[2].solution.params + 1;
+        pts[3].solution.flops = pts[2].solution.flops + 1;
+        pts[3].time_s = 0.6e-5;
+        let swept = pareto_frontier(&pts);
+        assert_eq!(swept, naive_frontier(&pts));
+        assert_eq!(swept.len(), 2); // pts[0] and pts[2]
+        assert_eq!(swept[0], pts[0]);
+        assert_eq!(swept[1], pts[2]);
+    }
+
+    #[test]
+    fn identical_objectives_do_not_dominate_each_other() {
+        let a = sol(vec![4, 4], vec![4, 4], 8, 1e-5);
+        let mut b = sol(vec![8, 2], vec![2, 8], 8, 1e-5);
+        b.solution.params = a.solution.params;
+        b.solution.flops = a.solution.flops;
+        assert!(!dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert_eq!(pareto_frontier(&[a, b]).len(), 2);
+    }
+
+    #[test]
+    fn empty_input_gives_empty_frontier() {
+        assert!(pareto_frontier(&[]).is_empty());
+    }
+
+    #[test]
+    fn unsorted_input_is_handled_and_output_is_canonical() {
+        let better = sol(vec![4, 4], vec![4, 4], 8, 1e-5);
+        let worse = sol(vec![8, 2], vec![2, 8], 8, 2e-5);
+        let reversed = [worse.clone(), better.clone()];
+        let f = pareto_frontier(&reversed);
+        assert_eq!(f, vec![better.clone()]);
+        assert_eq!(f, pareto_frontier(&[better, worse]));
+    }
+}

@@ -1,0 +1,436 @@
+//! The composable staged pruning pipeline and its stage-size accounting
+//! (paper Tables 1-2, Figure 4).
+//!
+//! Each paper cut is a named [`Stage`]. The first two stages operate on
+//! *counted* design spaces (the raw space reaches ~1e33 and is never
+//! materialized); the vectorization stage is where the space becomes small
+//! enough to enumerate, and later stages filter the enumerated
+//! [`Solution`] set per-solution. The per-solution predicates
+//! ([`InitialLayer::keep`], [`Scalability::keep`]) are shared with the
+//! parallel timed engine ([`super::timed`]), which applies them inside each
+//! work unit instead of over the whole set — same cuts, same counts.
+
+use crate::config::DseConfig;
+use crate::factor::count::{space_sizes, CountCfg, SpaceSizes};
+use crate::ttd::cost;
+
+use super::space::{enumerate_aligned, Solution};
+
+/// Immutable context every stage sees: the layer under exploration, the
+/// engine knobs, and the (precomputed) combinatorial space sizes.
+#[derive(Debug, Clone)]
+pub struct StageCtx<'a> {
+    /// Output dimension M of the explored layer.
+    pub m_dim: u64,
+    /// Input dimension N of the explored layer.
+    pub n_dim: u64,
+    /// Engine configuration.
+    pub cfg: &'a DseConfig,
+    /// Counted sizes of the raw / aligned / vectorized spaces.
+    pub sizes: SpaceSizes,
+}
+
+impl<'a> StageCtx<'a> {
+    /// Build the context for one layer, counting the combinatorial stages
+    /// once up front.
+    pub fn new(m_dim: u64, n_dim: u64, cfg: &'a DseConfig) -> Self {
+        let ccfg = CountCfg { vl: cfg.vl, d_max: cfg.d_max, ..CountCfg::default() };
+        StageCtx { m_dim, n_dim, cfg, sizes: space_sizes(m_dim, n_dim, &ccfg) }
+    }
+}
+
+/// The design space as it flows through the pipeline: a counted magnitude
+/// while enumeration is infeasible, a concrete solution list afterwards.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SpaceState {
+    /// A counted (never materialized) space of this many solutions.
+    Counted(f64),
+    /// An enumerated solution set.
+    Enumerated(Vec<Solution>),
+}
+
+impl SpaceState {
+    /// The magnitude of this state (list length for enumerated states).
+    pub fn magnitude(&self) -> f64 {
+        match self {
+            SpaceState::Counted(v) => *v,
+            SpaceState::Enumerated(v) => v.len() as f64,
+        }
+    }
+}
+
+/// One named pipeline stage: a pure transformation of the design space.
+pub trait Stage {
+    /// Short stage name (the Tables-1/2 column header).
+    fn name(&self) -> &'static str;
+    /// Apply the stage.
+    fn run(&self, ctx: &StageCtx<'_>, state: SpaceState) -> SpaceState;
+}
+
+/// Stage 1 — *all initial solutions*: seeds the pipeline with the counted
+/// raw space (every shape-permutation pair x rank list;
+/// [`crate::factor::count`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllSolutions;
+
+impl Stage for AllSolutions {
+    fn name(&self) -> &'static str {
+        "all"
+    }
+    fn run(&self, ctx: &StageCtx<'_>, _state: SpaceState) -> SpaceState {
+        SpaceState::Counted(ctx.sizes.all)
+    }
+}
+
+/// Stage 2 — *alignment strategy* (§4.1): keep only aligned shape pairs
+/// (Def. 1); reduction factor per Prop. 4. Still counted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Alignment;
+
+impl Stage for Alignment {
+    fn name(&self) -> &'static str {
+        "aligned"
+    }
+    fn run(&self, ctx: &StageCtx<'_>, _state: SpaceState) -> SpaceState {
+        SpaceState::Counted(ctx.sizes.aligned)
+    }
+}
+
+/// Stage 3 — *vectorization constraint* (§4.2.1): ranks must be multiples
+/// of `vl`. From here the space is small enough to enumerate, so this stage
+/// turns the counted space into the concrete aligned-solution list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vectorization;
+
+impl Stage for Vectorization {
+    fn name(&self) -> &'static str {
+        "vectorized"
+    }
+    fn run(&self, ctx: &StageCtx<'_>, _state: SpaceState) -> SpaceState {
+        SpaceState::Enumerated(enumerate_aligned(ctx.m_dim, ctx.n_dim, ctx.cfg))
+    }
+}
+
+/// Stage 4 — *initial-layer constraint* (§4.2.2): FLOPs *and* params must
+/// beat the dense layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InitialLayer;
+
+impl InitialLayer {
+    /// The per-solution predicate (shared with the parallel engine).
+    pub fn keep(&self, ctx: &StageCtx<'_>, s: &Solution) -> bool {
+        initial_layer_ok(s, ctx.m_dim, ctx.n_dim)
+    }
+}
+
+impl Stage for InitialLayer {
+    fn name(&self) -> &'static str {
+        "initial"
+    }
+    fn run(&self, ctx: &StageCtx<'_>, state: SpaceState) -> SpaceState {
+        filter_stage(state, |s| self.keep(ctx, s))
+    }
+}
+
+/// Stage 5 — *scalability constraint* (§4.2.3): discard long configurations
+/// whose heaviest Einsum cannot keep threads busy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scalability;
+
+impl Scalability {
+    /// The per-solution predicate (shared with the parallel engine).
+    pub fn keep(&self, ctx: &StageCtx<'_>, s: &Solution) -> bool {
+        scalability_ok(s, ctx.cfg)
+    }
+}
+
+impl Stage for Scalability {
+    fn name(&self) -> &'static str {
+        "scalability"
+    }
+    fn run(&self, ctx: &StageCtx<'_>, state: SpaceState) -> SpaceState {
+        filter_stage(state, |s| self.keep(ctx, s))
+    }
+}
+
+fn filter_stage(state: SpaceState, keep: impl Fn(&Solution) -> bool) -> SpaceState {
+    match state {
+        SpaceState::Enumerated(mut sols) => {
+            sols.retain(keep);
+            SpaceState::Enumerated(sols)
+        }
+        counted => counted,
+    }
+}
+
+/// An ordered stage list with per-stage size accounting.
+pub struct Pipeline {
+    stages: Vec<Box<dyn Stage>>,
+}
+
+impl Pipeline {
+    /// The paper's five-stage funnel (Tables 1-2 columns in order).
+    pub fn standard() -> Self {
+        Pipeline {
+            stages: vec![
+                Box::new(AllSolutions),
+                Box::new(Alignment),
+                Box::new(Vectorization),
+                Box::new(InitialLayer),
+                Box::new(Scalability),
+            ],
+        }
+    }
+
+    /// A pipeline from an explicit stage list (composability hook: ablation
+    /// studies drop or reorder cuts without touching the engine).
+    pub fn from_stages(stages: Vec<Box<dyn Stage>>) -> Self {
+        Pipeline { stages }
+    }
+
+    /// Stage names in execution order.
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// Run every stage in order, recording each stage's output magnitude.
+    /// Returns the per-stage `(name, magnitude)` trace and the final
+    /// enumerated survivor set (empty when no stage enumerates).
+    pub fn run(&self, ctx: &StageCtx<'_>) -> (Vec<(&'static str, f64)>, Vec<Solution>) {
+        let mut state = SpaceState::Counted(0.0);
+        let mut trace = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            state = stage.run(ctx, state);
+            trace.push((stage.name(), state.magnitude()));
+        }
+        let survivors = match state {
+            SpaceState::Enumerated(v) => v,
+            SpaceState::Counted(_) => Vec::new(),
+        };
+        (trace, survivors)
+    }
+}
+
+/// Design-space size after each pipeline stage (one Tables-1/2 row).
+///
+/// Stages 1-2 are counted combinatorially (f64 magnitudes; the raw space
+/// reaches ~1e33). Stages 3-5 are exact enumeration counts. The modeled-
+/// time cut (stage 6) lives in [`super::timed::TimedExplored`], which keeps
+/// these five counts byte-for-byte identical to the untimed pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCounts {
+    /// Stage 1: every (shape, permutation, rank) combination.
+    pub all: f64,
+    /// Stage 2: after shape alignment.
+    pub aligned: f64,
+    /// Stage 3: after the vectorization (rank multiple of vl) cut.
+    pub vectorized: usize,
+    /// Stage 4: after the initial-configuration cut.
+    pub initial: usize,
+    /// Stage 5: after the scalability cut.
+    pub scalability: usize,
+}
+
+/// Result of exploring one FC layer through stages 1-5.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Explored {
+    /// Output dimension M of the explored layer.
+    pub m_dim: u64,
+    /// Input dimension N of the explored layer.
+    pub n_dim: u64,
+    /// Per-stage design-space sizes.
+    pub counts: StageCounts,
+    /// Solutions surviving all five stages, in canonical order
+    /// ([`Solution::canonical_cmp`]).
+    pub survivors: Vec<Solution>,
+}
+
+/// Stage 4 as a free predicate: keep solutions whose FLOPs *and* parameters
+/// beat the unfactorized layer (§4.2.2).
+pub fn initial_layer_ok(s: &Solution, m_dim: u64, n_dim: u64) -> bool {
+    s.flops < cost::dense_flops(m_dim, n_dim) && s.params < cost::dense_params(m_dim, n_dim)
+}
+
+/// Stage 5 as a free predicate: discard configuration lengths over
+/// `cfg.d_scal_limit` whose heaviest Einsum has fewer than `cfg.scal_flops`
+/// FLOPs (poor workload per thread, §4.2.3).
+pub fn scalability_ok(s: &Solution, cfg: &DseConfig) -> bool {
+    if s.layout.d() <= cfg.d_scal_limit {
+        return true;
+    }
+    let max_flops = cost::einsum_chain(&s.layout, cfg.batch)
+        .iter()
+        .map(|e| e.flops())
+        .max()
+        .unwrap_or(0);
+    max_flops >= cfg.scal_flops
+}
+
+/// Run the standard five-stage pipeline for one FC layer (M outputs,
+/// N inputs). For the full six-stage engine (modeled-time cut + Pareto
+/// frontier + parallel enumeration) use [`super::timed::explore_timed`].
+pub fn explore(m_dim: u64, n_dim: u64, cfg: &DseConfig) -> Explored {
+    let ctx = StageCtx::new(m_dim, n_dim, cfg);
+    let (trace, mut survivors) = Pipeline::standard().run(&ctx);
+    survivors.sort_by(Solution::canonical_cmp);
+    Explored {
+        m_dim,
+        n_dim,
+        counts: counts_from_trace(&trace),
+        survivors,
+    }
+}
+
+/// Assemble [`StageCounts`] from a standard-pipeline trace.
+fn counts_from_trace(trace: &[(&'static str, f64)]) -> StageCounts {
+    let get = |name: &str| {
+        trace
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("stage '{name}' missing from pipeline trace"))
+            .1
+    };
+    StageCounts {
+        all: get("all"),
+        aligned: get("aligned"),
+        vectorized: get("vectorized") as usize,
+        initial: get("initial") as usize,
+        scalability: get("scalability") as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn cfg() -> DseConfig {
+        DseConfig::default()
+    }
+
+    #[test]
+    fn stage_counts_monotone_nonincreasing() {
+        for (m, n) in [(120u64, 400u64), (300, 784), (512, 512), (2048, 2048)] {
+            let e = explore(m, n, &cfg());
+            let c = &e.counts;
+            assert!(c.all >= c.aligned, "{m}x{n}");
+            assert!(c.aligned >= c.vectorized as f64, "{m}x{n}");
+            assert!(c.vectorized >= c.initial, "{m}x{n}");
+            assert!(c.initial >= c.scalability, "{m}x{n}");
+            assert_eq!(e.survivors.len(), c.scalability);
+        }
+    }
+
+    #[test]
+    fn survivors_canonically_ordered_and_all_beat_dense() {
+        let e = explore(300, 784, &cfg());
+        assert!(!e.survivors.is_empty());
+        for w in e.survivors.windows(2) {
+            assert_eq!(
+                w[0].canonical_cmp(&w[1]),
+                std::cmp::Ordering::Less,
+                "canonical order violated: {} !< {}",
+                w[0].layout.describe(),
+                w[1].layout.describe()
+            );
+            assert!(w[0].flops <= w[1].flops);
+        }
+        for s in &e.survivors {
+            assert!(s.flops < cost::dense_flops(300, 784));
+            assert!(s.params < cost::dense_params(300, 784));
+        }
+    }
+
+    #[test]
+    fn initial_layer_constraint_bites_at_high_rank() {
+        // with a huge uniform rank the factorized layer is more expensive
+        let mut c = cfg();
+        c.ranks = vec![512];
+        let e = explore(512, 512, &c);
+        // everything enumerable at rank 512 must fail the initial constraint
+        assert_eq!(e.counts.initial, 0);
+    }
+
+    #[test]
+    fn scalability_prunes_only_long_light_configs() {
+        let e = explore(4096, 4096, &cfg());
+        // pruned = initial - scalability; every pruned solution must have
+        // d > 4, i.e. every survivor with d > 4 is heavy
+        for s in &e.survivors {
+            if s.layout.d() > 4 {
+                let max_f = cost::einsum_chain(&s.layout, 1)
+                    .iter()
+                    .map(|x| x.flops())
+                    .max()
+                    .unwrap();
+                assert!(max_f >= cfg().scal_flops);
+            }
+        }
+        assert!(e.counts.initial > e.counts.scalability, "constraint should bite");
+    }
+
+    #[test]
+    fn property_survivors_always_satisfy_all_constraints() {
+        testkit::check("dse invariants", 12, |d| {
+            // random composite dims
+            let m = 8 * d.usize_in(2, 64) as u64;
+            let n = 8 * d.usize_in(2, 64) as u64;
+            let e = explore(m, n, &cfg());
+            for s in &e.survivors {
+                if !s.layout.is_aligned() {
+                    return Err(format!("misaligned survivor {}", s.layout.describe()));
+                }
+                if s.rank % 8 != 0 {
+                    return Err("non-vectorizable rank".into());
+                }
+                if !initial_layer_ok(s, m, n) {
+                    return Err("initial-layer violation".into());
+                }
+                if !scalability_ok(s, &cfg()) {
+                    return Err("scalability violation".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn standard_pipeline_names_match_table_columns() {
+        assert_eq!(
+            Pipeline::standard().stage_names(),
+            vec!["all", "aligned", "vectorized", "initial", "scalability"]
+        );
+    }
+
+    #[test]
+    fn pipeline_trace_matches_stage_counts() {
+        let c = cfg();
+        let ctx = StageCtx::new(300, 784, &c);
+        let (trace, survivors) = Pipeline::standard().run(&ctx);
+        let counts = counts_from_trace(&trace);
+        assert_eq!(counts.all, ctx.sizes.all);
+        assert_eq!(counts.aligned, ctx.sizes.aligned);
+        assert_eq!(counts.scalability, survivors.len());
+        // the trace is monotone non-increasing past the seed
+        for w in trace.windows(2) {
+            assert!(w[0].1 >= w[1].1, "{:?} -> {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn composed_pipeline_can_skip_cuts() {
+        // dropping the scalability stage keeps stage-4 survivors intact
+        let c = cfg();
+        let ctx = StageCtx::new(300, 784, &c);
+        let partial = Pipeline::from_stages(vec![
+            Box::new(AllSolutions),
+            Box::new(Alignment),
+            Box::new(Vectorization),
+            Box::new(InitialLayer),
+        ]);
+        let (trace, survivors) = partial.run(&ctx);
+        let full = explore(300, 784, &c);
+        assert_eq!(survivors.len(), full.counts.initial);
+        assert_eq!(trace.len(), 4);
+    }
+}

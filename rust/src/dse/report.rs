@@ -1,11 +1,13 @@
 //! Tables 1-2 row generation: design-space reduction per FC layer of the
-//! model zoo.
+//! model zoo. Rows report the paper's five analytic stages
+//! ([`super::pipeline`]); selection itself goes through the six-stage
+//! engine ([`super::timed`]) and never reads raw survivor lists here.
 
 use crate::config::DseConfig;
 use crate::models::ModelArch;
 use crate::util::sci;
 
-use super::prune::{explore, StageCounts};
+use super::pipeline::{explore, StageCounts};
 
 /// One table row.
 #[derive(Debug, Clone)]

@@ -1,23 +1,50 @@
-//! Solution selection (paper §6.4): configuration length two at the
-//! requested rank, preferring *balanced* factor pairs.
+//! Solution selection: policies over the six-stage engine's output
+//! ([`TimedExplored`]).
 //!
-//! The paper's text says "minimum FLOPs and a configuration length of two",
-//! but every §6.4 selection it reports is a near-square factorization
-//! ([4096, 2048] -> [64x64, 64x32]; [1024, 1000] -> [16x64, 40x25]; ...)
-//! which is far from the FLOPs minimum of Eq. 11 (degenerate shapes like
-//! n = [2, N/2] minimize FLOPs but destroy the TT-rank structure of real
-//! weight matrices, so they are useless for accuracy). We therefore select
-//! by (balance, FLOPs): the most balanced surviving d=2 pair, FLOPs as the
-//! tie-break — which reproduces the paper's reported shape family.
-//! [`select_min_flops`] provides the literal-text policy for comparison.
+//! Two policies ([`crate::config::SelectionPolicy`]):
 //!
-//! The DSE keeps the whole survivor list, so callers can walk alternates if
-//! an accuracy constraint fails downstream (paper §4).
+//! * **Balance** (default, paper §6.4). The paper's text says "minimum
+//!   FLOPs and a configuration length of two", but every §6.4 selection it
+//!   reports is a near-square factorization ([4096, 2048] -> [64x64,
+//!   64x32]; [1024, 1000] -> [16x64, 40x25]; ...) which is far from the
+//!   FLOPs minimum of Eq. 11 — degenerate shapes like n = [2, N/2]
+//!   minimize FLOPs but destroy the TT-rank structure of real weight
+//!   matrices, so they are useless for accuracy. Balance is therefore an
+//!   *accuracy proxy*, orthogonal to the frontier's three objectives, and
+//!   deliberately searches every stage-6-qualified survivor
+//!   ([`TimedExplored::timed`]): restricting it to the frontier would hand
+//!   back exactly the degenerate FLOPs-minimal shapes the policy exists to
+//!   avoid, because near-square solutions are dominated on (time, params,
+//!   FLOPs) by longer/skewed ones.
+//! * **MinTime**: the fastest modeled solution; by construction a Pareto
+//!   frontier member, selected directly from
+//!   [`TimedExplored::frontier`].
+//!
+//! Every candidate either way carries a modeled time that beat the
+//! configured speedup-vs-dense threshold (stage 6), so selection never
+//! returns a solution the machine model considers a slowdown.
+//! [`select_min_flops`] keeps the literal-text policy for comparison, and
+//! [`rerank_measured`] re-orders a frontier head by *measured* chain time
+//! (autotuned via [`crate::kernels::tune_plan`]) for deployments that can
+//! afford to run candidates.
+//!
+//! The engine keeps the whole qualified list, so callers can walk
+//! [`alternates`] if an accuracy constraint fails downstream (paper §4;
+//! "Tensorizing Neural Networks" motivates retaining fallbacks).
 
+use std::time::Instant;
+
+use crate::config::SelectionPolicy;
 use crate::error::{Error, Result};
+use crate::kernels::{Executor, PackedG};
+use crate::machine::MachineSpec;
+use crate::tensor::Tensor;
+use crate::ttd::cost;
+use crate::ttd::decompose::random_cores;
+use crate::util::prng::Rng;
 
-use super::prune::Explored;
 use super::space::Solution;
+use super::timed::{TimedExplored, TimedSolution};
 
 /// Imbalance score of a shape: `max(factor) / min(factor)` (1.0 = square).
 fn imbalance(shape: &[u64]) -> f64 {
@@ -31,123 +58,265 @@ pub fn solution_imbalance(s: &Solution) -> f64 {
     imbalance(s.layout.m_shape()) * imbalance(s.layout.n_shape())
 }
 
-/// §6.4 policy: the most balanced d=2 solution at the requested rank
-/// (FLOPs tie-break); falls back to any-d / any-rank survivors.
-pub fn select_solution(e: &Explored, rank: u64) -> Result<Solution> {
+fn no_solution(e: &TimedExplored, rank: u64) -> Error {
+    Error::NoSolution(format!(
+        "no time-qualified TT solution for {}x{} at rank {rank}",
+        e.explored.m_dim, e.explored.n_dim
+    ))
+}
+
+/// Select a solution under the given policy. Balance walks the
+/// `(d = 2, rank)` preference ladder over the time-qualified survivors;
+/// MinTime takes the fastest frontier member.
+pub fn select_solution(
+    e: &TimedExplored,
+    rank: u64,
+    policy: SelectionPolicy,
+) -> Result<TimedSolution> {
+    match policy {
+        SelectionPolicy::Balance => select_balance(e, rank),
+        SelectionPolicy::MinTime => select_min_time(e, rank),
+    }
+}
+
+/// §6.4 policy: the most balanced time-qualified d=2 solution at the
+/// requested rank (FLOPs tie-break); falls back to any-d / any-rank.
+fn select_balance(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
     let candidates = |d2_only: bool, rank_only: bool| {
-        e.survivors
+        e.timed
             .iter()
-            .filter(move |s| !d2_only || s.layout.d() == 2)
-            .filter(move |s| !rank_only || s.rank == rank)
+            .filter(move |s| !d2_only || s.layout().d() == 2)
+            .filter(move |s| !rank_only || s.solution.rank == rank)
     };
     for (d2, rk) in [(true, true), (true, false), (false, true), (false, false)] {
         let best = candidates(d2, rk).min_by(|a, b| {
-            (solution_imbalance(a), a.flops)
-                .partial_cmp(&(solution_imbalance(b), b.flops))
+            (solution_imbalance(&a.solution), a.solution.flops)
+                .partial_cmp(&(solution_imbalance(&b.solution), b.solution.flops))
                 .expect("no NaN")
         });
         if let Some(s) = best {
             return Ok(s.clone());
         }
     }
-    Err(Error::NoSolution(format!(
-        "no TT solution for {}x{} at rank {rank}",
-        e.m_dim, e.n_dim
-    )))
+    Err(no_solution(e, rank))
 }
 
-/// The literal §6.4 text policy: minimum FLOPs among d=2 at the rank.
-pub fn select_min_flops(e: &Explored, rank: u64) -> Result<Solution> {
-    e.survivors
+/// Min-time policy: the fastest frontier member at the requested rank,
+/// falling back to the fastest at any rank when the frontier has no member
+/// at that rank (same preference-ladder shape as the balance policy; ties
+/// resolve to the canonically-first member).
+fn select_min_time(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
+    for rank_only in [true, false] {
+        let best = e
+            .frontier
+            .iter()
+            .filter(|s| !rank_only || s.solution.rank == rank)
+            .min_by(|a, b| a.time_s.partial_cmp(&b.time_s).expect("no NaN"));
+        if let Some(s) = best {
+            return Ok(s.clone());
+        }
+    }
+    Err(no_solution(e, rank))
+}
+
+/// The literal §6.4 text policy: minimum FLOPs among time-qualified d=2 at
+/// the rank; any qualified solution as fallback. Kept for comparison with
+/// the balance policy.
+pub fn select_min_flops(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
+    e.timed
         .iter()
-        .filter(|s| s.layout.d() == 2 && s.rank == rank)
-        .min_by_key(|s| s.flops)
-        .or_else(|| e.survivors.iter().min_by_key(|s| s.flops))
+        .filter(|s| s.layout().d() == 2 && s.solution.rank == rank)
+        .min_by_key(|s| s.solution.flops)
+        .or_else(|| e.timed.iter().min_by_key(|s| s.solution.flops))
         .cloned()
-        .ok_or_else(|| {
-            Error::NoSolution(format!(
-                "no TT solution for {}x{} at rank {rank}",
-                e.m_dim, e.n_dim
-            ))
-        })
+        .ok_or_else(|| no_solution(e, rank))
 }
 
-/// The ranked alternates list for accuracy-driven fallback, ordered by the
-/// selection score.
-pub fn alternates(e: &Explored, limit: usize) -> Vec<Solution> {
-    let mut sols = e.survivors.clone();
+/// The ranked alternates list for accuracy-driven fallback: every
+/// time-qualified survivor ordered by the balance-selection score.
+pub fn alternates(e: &TimedExplored, limit: usize) -> Vec<TimedSolution> {
+    let mut sols = e.timed.clone();
     sols.sort_by(|a, b| {
-        (solution_imbalance(a), a.flops)
-            .partial_cmp(&(solution_imbalance(b), b.flops))
+        (solution_imbalance(&a.solution), a.solution.flops)
+            .partial_cmp(&(solution_imbalance(&b.solution), b.solution.flops))
             .expect("no NaN")
     });
     sols.truncate(limit);
     sols
 }
 
+/// Re-rank candidate solutions by **measured** end-to-end chain time on
+/// this host: each candidate gets representative random cores, a
+/// measured-autotuned executor (every plan-cache miss runs
+/// [`crate::kernels::tune_plan`]), one warmup pass and a best-of-3
+/// timing. Returns `(solution, measured seconds)` sorted fastest-first
+/// (modeled `time_s` is left untouched; ties keep the input order).
+///
+/// Intended for the frontier head (a handful of candidates) — measurement
+/// costs real kernel executions per candidate.
+pub fn rerank_measured(
+    candidates: &[TimedSolution],
+    machine: &MachineSpec,
+    batch: usize,
+) -> Result<Vec<(TimedSolution, f64)>> {
+    let mut rng = Rng::new(0x5e1ec7);
+    let mut measured = Vec::with_capacity(candidates.len());
+    for cand in candidates {
+        let layout = cand.layout().clone();
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(machine).with_tuning();
+        let chain = cost::einsum_chain(&layout, batch);
+        let packed: Vec<PackedG> = chain
+            .iter()
+            .enumerate()
+            .map(|(step, dims)| ex.pack(&tt.cores[layout.d() - 1 - step], dims))
+            .collect::<Result<_>>()?;
+        let x = Tensor::randn(vec![batch, layout.n_total() as usize], 1.0, &mut rng);
+        ex.run_tt_chain(&layout, batch, &packed, x.data())?; // warm + tune
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            ex.run_tt_chain(&layout, batch, &packed, x.data())?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        measured.push((cand.clone(), best));
+    }
+    measured.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN"));
+    Ok(measured)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::DseConfig;
-    use crate::dse::prune::explore;
+    use crate::dse::timed::explore_timed;
+
+    fn k1() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
+
+    fn timed(m: u64, n: u64) -> TimedExplored {
+        explore_timed(m, n, &k1(), &DseConfig::default())
+    }
 
     #[test]
     fn selects_balanced_d2_at_rank8() {
-        let e = explore(300, 784, &DseConfig::default());
-        let s = select_solution(&e, 8).unwrap();
-        assert_eq!(s.layout.d(), 2);
-        assert_eq!(s.rank, 8);
+        let e = timed(300, 784);
+        let s = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert_eq!(s.layout().d(), 2);
+        assert_eq!(s.solution.rank, 8);
         // the balanced pick for 784 is [28, 28]; for 300 it is [20, 15] —
         // exactly the layout the AOT artifacts use
-        assert_eq!(s.layout.n_shape(), &[28, 28]);
-        assert_eq!(s.layout.m_shape(), &[20, 15]);
+        assert_eq!(s.layout().n_shape(), &[28, 28]);
+        assert_eq!(s.layout().m_shape(), &[20, 15]);
+        // stage 6 guarantees a modeled win over dense
+        assert!(s.speedup >= 1.0);
+        assert!(s.time_s > 0.0);
     }
 
     #[test]
     fn paper_fig15_alexnet_selection() {
         // paper §6.4: [4096, 2048] factorized into [64x64, 64x32]
-        let e = explore(2048, 4096, &DseConfig::default());
-        let s = select_solution(&e, 8).unwrap();
-        assert_eq!(s.layout.n_shape(), &[64, 64]);
-        assert_eq!(s.layout.m_shape(), &[64, 32]);
+        let e = timed(2048, 4096);
+        let s = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert_eq!(s.layout().n_shape(), &[64, 64]);
+        assert_eq!(s.layout().m_shape(), &[64, 32]);
+    }
+
+    #[test]
+    fn min_time_policy_picks_the_fastest_frontier_member() {
+        let e = timed(300, 784);
+        let s = select_solution(&e, 8, SelectionPolicy::MinTime).unwrap();
+        assert!(e.frontier.contains(&s));
+        for f in &e.frontier {
+            assert!(s.time_s <= f.time_s);
+        }
+        for t in &e.timed {
+            assert!(s.time_s <= t.time_s, "{} faster", t.layout().describe());
+        }
+        // the modeled-fastest solution is much faster than the balanced one
+        let bal = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert!(s.time_s <= bal.time_s);
+    }
+
+    #[test]
+    fn min_time_falls_back_when_the_frontier_lacks_the_rank() {
+        let e = timed(300, 784);
+        // rank 8 dominates higher ranks of the same shapes on every axis,
+        // so this frontier is rank-8-only...
+        assert!(e.frontier.iter().all(|s| s.solution.rank == 8));
+        // ...and a rank-16 request walks the ladder down to the global
+        // fastest instead of failing
+        let s16 = select_solution(&e, 16, SelectionPolicy::MinTime).unwrap();
+        let s8 = select_solution(&e, 8, SelectionPolicy::MinTime).unwrap();
+        assert_eq!(s16, s8);
+    }
+
+    #[test]
+    fn balance_pick_is_time_qualified_but_frontier_is_not_its_home() {
+        // the near-square paper selection is dominated on (time, params,
+        // FLOPs) by skewed shapes — the very reason Balance searches the
+        // qualified set rather than the frontier (module docs)
+        let e = timed(300, 784);
+        let bal = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert!(e.timed.contains(&bal));
+        assert!(!e.frontier.contains(&bal));
     }
 
     #[test]
     fn min_flops_policy_is_cheaper_but_less_balanced() {
-        let e = explore(300, 784, &DseConfig::default());
-        let bal = select_solution(&e, 8).unwrap();
+        let e = timed(300, 784);
+        let bal = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
         let min = select_min_flops(&e, 8).unwrap();
-        assert!(min.flops <= bal.flops);
-        assert!(solution_imbalance(&min) >= solution_imbalance(&bal));
+        assert!(min.solution.flops <= bal.solution.flops);
+        assert!(solution_imbalance(&min.solution) >= solution_imbalance(&bal.solution));
     }
 
     #[test]
     fn fig15_selection_is_aligned_and_compressive() {
-        let e = explore(1000, 2048, &DseConfig::default());
-        let s = select_solution(&e, 8).unwrap();
-        assert_eq!(s.layout.d(), 2);
-        assert!(s.layout.is_aligned());
-        assert!(s.flops < crate::ttd::cost::dense_flops(1000, 2048));
-        assert_eq!(s.layout.n_shape().iter().product::<u64>(), 2048);
-        assert_eq!(s.layout.m_shape().iter().product::<u64>(), 1000);
+        let e = timed(1000, 2048);
+        let s = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert_eq!(s.layout().d(), 2);
+        assert!(s.layout().is_aligned());
+        assert!(s.solution.flops < crate::ttd::cost::dense_flops(1000, 2048));
+        assert_eq!(s.layout().n_shape().iter().product::<u64>(), 2048);
+        assert_eq!(s.layout().m_shape().iter().product::<u64>(), 1000);
     }
 
     #[test]
     fn alternates_sorted_by_selection_score() {
-        let e = explore(512, 512, &DseConfig::default());
+        let e = timed(512, 512);
         let alts = alternates(&e, 5);
         assert!(alts.len() >= 2);
         for w in alts.windows(2) {
-            let a = (solution_imbalance(&w[0]), w[0].flops);
-            let b = (solution_imbalance(&w[1]), w[1].flops);
+            let a = (solution_imbalance(&w[0].solution), w[0].solution.flops);
+            let b = (solution_imbalance(&w[1].solution), w[1].solution.flops);
             assert!(a <= b);
         }
     }
 
     #[test]
     fn empty_space_is_an_error() {
-        let e = explore(13, 17, &DseConfig::default());
-        assert!(select_solution(&e, 8).is_err());
+        let e = timed(13, 17);
+        assert!(select_solution(&e, 8, SelectionPolicy::Balance).is_err());
+        assert!(select_solution(&e, 8, SelectionPolicy::MinTime).is_err());
         assert!(select_min_flops(&e, 8).is_err());
+    }
+
+    #[test]
+    fn rerank_measured_orders_the_frontier_head() {
+        let host = MachineSpec::host();
+        let e = explore_timed(120, 400, &host, &DseConfig::default());
+        let head: Vec<TimedSolution> = e.frontier.iter().take(3).cloned().collect();
+        let ranked = rerank_measured(&head, &host, 1).unwrap();
+        assert_eq!(ranked.len(), head.len());
+        // sorted by measured seconds, and it is a permutation of the head
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        for (sol, secs) in &ranked {
+            assert!(*secs > 0.0);
+            assert!(head.contains(sol));
+        }
     }
 }

@@ -1,4 +1,8 @@
-//! Aligned-solution enumeration (stage 3 of the pipeline).
+//! Aligned-solution enumeration (the *vectorization* stage of the
+//! [`super::pipeline`]) and its parallel work-unit decomposition.
+
+use std::cmp::Ordering;
+use std::sync::Arc;
 
 use crate::config::DseConfig;
 use crate::factor::{self, factor_multisets, partitions::omega};
@@ -24,44 +28,95 @@ impl Solution {
         let flops = cost::flops(&layout);
         Solution { layout, rank, params, flops }
     }
+
+    /// The canonical total order over solutions:
+    /// `(flops, params, rank, m-shape lexicographic, n-shape lexicographic)`.
+    ///
+    /// Every survivor/frontier list in the DSE engine is sorted by this key,
+    /// which (a) makes tie ordering deterministic (plain FLOPs sorting left
+    /// equal-FLOPs solutions in enumeration order) and (b) makes parallel
+    /// exploration results byte-identical to serial ones after the merge.
+    pub fn canonical_cmp(&self, other: &Self) -> Ordering {
+        (self.flops, self.params, self.rank)
+            .cmp(&(other.flops, other.params, other.rank))
+            .then_with(|| self.layout.m_shape().cmp(other.layout.m_shape()))
+            .then_with(|| self.layout.n_shape().cmp(other.layout.n_shape()))
+    }
 }
 
-/// Enumerate every *aligned* solution with uniform rank drawn from
-/// `cfg.ranks`, restricted to ranks that are multiples of `cfg.vl` (the
-/// vectorization constraint) and feasible w.r.t. the TT rank bound.
-///
-/// `m_dim` = output width M, `n_dim` = input width N.
-pub fn enumerate_aligned(m_dim: u64, n_dim: u64, cfg: &DseConfig) -> Vec<Solution> {
-    let mut out = Vec::new();
+/// One independent slice of the enumeration space: a configuration length
+/// `d` and one aligned output-shape multiset. Work units are the grain of
+/// the parallel exploration engine ([`super::timed::explore_timed`]): each
+/// unit enumerates and prices its `(n-shape, rank)` sweep in isolation, so
+/// units can run on any worker in any order and still merge
+/// deterministically. The input-shape multisets for the unit's `d` are
+/// computed once per `d` and `Arc`-shared by every unit of that length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkUnit {
+    /// Configuration length of this slice.
+    pub d: usize,
+    /// Aligned (descending) output-shape multiset.
+    pub m_aligned: Vec<u64>,
+    /// Aligned (ascending) input-shape multisets of length `d`, shared
+    /// across the units of this `d`.
+    pub n_aligned_sets: Arc<Vec<Vec<u64>>>,
+}
+
+/// The deterministic work-unit list for one FC layer: every `(d, m-shape)`
+/// pair in enumeration order (`d` ascending, multisets in
+/// [`factor_multisets`] order).
+pub fn work_units(m_dim: u64, n_dim: u64, cfg: &DseConfig) -> Vec<WorkUnit> {
     let d_cap = cfg.d_max.min(omega(m_dim)).min(omega(n_dim)).max(2);
+    let mut out = Vec::new();
     for d in 2..=d_cap {
-        let m_sets = factor_multisets(m_dim, d);
-        let n_sets = factor_multisets(n_dim, d);
-        for ms in &m_sets {
-            let m_aligned = factor::align_m(ms.clone());
-            for ns in &n_sets {
-                let n_aligned = factor::align_n(ns.clone());
-                // tightest rank bound across boundaries caps the sweep
-                let bound = (1..d)
-                    .map(|t| factor::max_rank_at(&m_aligned, &n_aligned, t))
-                    .min()
-                    .unwrap_or(1);
-                for &r in &cfg.ranks {
-                    if r % cfg.vl != 0 || r > bound {
-                        continue;
-                    }
-                    let layout = TtLayout::with_uniform_rank(
-                        m_aligned.clone(),
-                        n_aligned.clone(),
-                        r,
-                    )
-                    .expect("validated by construction");
-                    out.push(Solution::new(layout, r));
-                }
-            }
+        let n_aligned_sets: Arc<Vec<Vec<u64>>> = Arc::new(
+            factor_multisets(n_dim, d).into_iter().map(factor::align_n).collect(),
+        );
+        for ms in factor_multisets(m_dim, d) {
+            out.push(WorkUnit {
+                d,
+                m_aligned: factor::align_m(ms),
+                n_aligned_sets: Arc::clone(&n_aligned_sets),
+            });
         }
     }
     out
+}
+
+/// Enumerate one work unit: every aligned solution with this unit's
+/// `(d, m-shape)`, uniform rank drawn from `cfg.ranks`, restricted to ranks
+/// that are multiples of `cfg.vl` (the vectorization constraint) and
+/// feasible w.r.t. the TT rank bound.
+pub fn enumerate_unit(unit: &WorkUnit, cfg: &DseConfig) -> Vec<Solution> {
+    let mut out = Vec::new();
+    for n_aligned in unit.n_aligned_sets.iter() {
+        // tightest rank bound across boundaries caps the sweep
+        let bound = (1..unit.d)
+            .map(|t| factor::max_rank_at(&unit.m_aligned, n_aligned, t))
+            .min()
+            .unwrap_or(1);
+        for &r in &cfg.ranks {
+            if r % cfg.vl != 0 || r > bound {
+                continue;
+            }
+            let layout =
+                TtLayout::with_uniform_rank(unit.m_aligned.clone(), n_aligned.clone(), r)
+                    .expect("validated by construction");
+            out.push(Solution::new(layout, r));
+        }
+    }
+    out
+}
+
+/// Enumerate every *aligned* solution of the layer: the concatenation of
+/// [`enumerate_unit`] over [`work_units`] in order.
+///
+/// `m_dim` = output width M, `n_dim` = input width N.
+pub fn enumerate_aligned(m_dim: u64, n_dim: u64, cfg: &DseConfig) -> Vec<Solution> {
+    work_units(m_dim, n_dim, cfg)
+        .iter()
+        .flat_map(|u| enumerate_unit(u, cfg))
+        .collect()
 }
 
 #[cfg(test)]
@@ -114,5 +169,47 @@ mod tests {
     #[test]
     fn prime_dims_empty() {
         assert!(enumerate_aligned(13, 784, &cfg()).is_empty());
+    }
+
+    #[test]
+    fn units_partition_the_enumeration() {
+        // flattening the units must reproduce enumerate_aligned exactly and
+        // each unit must only contain its own (d, m-shape)
+        let c = cfg();
+        let units = work_units(300, 784, &c);
+        assert!(!units.is_empty());
+        let mut flat = Vec::new();
+        for u in &units {
+            for s in enumerate_unit(u, &c) {
+                assert_eq!(s.layout.d(), u.d);
+                assert_eq!(s.layout.m_shape(), &u.m_aligned[..]);
+                flat.push(s);
+            }
+        }
+        assert_eq!(flat, enumerate_aligned(300, 784, &c));
+    }
+
+    #[test]
+    fn canonical_order_is_total_and_ties_break_on_shape() {
+        let a = Solution::new(
+            TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap(),
+            8,
+        );
+        let b = Solution::new(
+            TtLayout::with_uniform_rank(vec![25, 12], vec![28, 28], 8).unwrap(),
+            8,
+        );
+        assert_eq!(a.canonical_cmp(&a), Ordering::Equal);
+        // antisymmetry on distinct solutions
+        assert_ne!(a.canonical_cmp(&b), Ordering::Equal);
+        assert_eq!(a.canonical_cmp(&b), b.canonical_cmp(&a).reverse());
+        // equal numeric keys fall through to the lexicographic shape compare
+        let mut forged = b.clone();
+        forged.flops = a.flops;
+        forged.params = a.params;
+        assert_eq!(
+            a.canonical_cmp(&forged),
+            a.layout.m_shape().cmp(forged.layout.m_shape())
+        );
     }
 }

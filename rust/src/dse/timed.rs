@@ -1,0 +1,306 @@
+//! Stage 6 of the DSE engine: price every stage-5 survivor through the
+//! compiler + machine cost model, cut solutions that fail the configured
+//! speedup-vs-dense threshold, and expose the Pareto frontier over
+//! (modeled time, params, FLOPs) — the paper's "predicted inference
+//! performance" selection step that the analytic stages 1-5 feed.
+//!
+//! Exploration is parallelized across [`WorkUnit`]s (one `(d, m-shape)`
+//! slice each) by a worker pool over the coordinator's bounded MPMC queue.
+//! Every unit is a pure function of its inputs and results merge in unit
+//! order before a canonical sort, so `dse_workers = N` produces output
+//! byte-identical to `dse_workers = 1` (pinned by
+//! `rust/tests/dse_engine.rs`).
+
+use std::sync::Mutex;
+
+use crate::config::DseConfig;
+use crate::coordinator::queue::{Pop, SharedQueue};
+use crate::machine::{costmodel, MachineSpec};
+use crate::ttd::cost::{self, EinsumDims, EinsumKind};
+
+use super::pareto::pareto_frontier;
+use super::pipeline::{Explored, InitialLayer, Scalability, StageCounts, StageCtx};
+use super::space::{self, Solution, WorkUnit};
+
+/// A stage-5 survivor priced by the analytical machine model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedSolution {
+    /// The underlying factorization.
+    pub solution: Solution,
+    /// Modeled wall-clock seconds of the full einsum chain at the
+    /// configured batch on the target machine.
+    pub time_s: f64,
+    /// Modeled speedup over the unfactorized dense layer (dense modeled
+    /// time / `time_s`; infinite when the dense layer itself is
+    /// unschedulable).
+    pub speedup: f64,
+}
+
+impl TimedSolution {
+    /// The factorized layout (shorthand for `solution.layout`).
+    pub fn layout(&self) -> &crate::ttd::TtLayout {
+        &self.solution.layout
+    }
+}
+
+/// Result of the full six-stage exploration of one FC layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedExplored {
+    /// Stages 1-5: counts and survivors, byte-identical to
+    /// [`super::pipeline::explore`] on the same inputs.
+    pub explored: Explored,
+    /// Modeled time of the unfactorized dense layer (the stage-6 baseline);
+    /// infinite when the dense layer cannot be scheduled.
+    pub dense_time_s: f64,
+    /// Stage 6 survivors: every stage-5 survivor that compiles and meets
+    /// `cfg.time_speedup_min`, in canonical order.
+    pub timed: Vec<TimedSolution>,
+    /// The Pareto frontier of `timed` over (modeled time, params, FLOPs),
+    /// in canonical order — the selection substrate
+    /// ([`super::select::select_solution`]).
+    pub frontier: Vec<TimedSolution>,
+}
+
+/// Modeled seconds of one solution's full einsum chain at `batch`, or
+/// `None` when any kernel in the chain has no feasible schedule (paper
+/// §4.3.5: such solutions are "deemed inefficient and discarded").
+pub fn price_solution(s: &Solution, machine: &MachineSpec, batch: usize) -> Option<f64> {
+    let mut total = 0.0;
+    for dims in cost::einsum_chain(&s.layout, batch) {
+        let plan = crate::compiler::compile(&dims, machine).ok()?;
+        total += costmodel::estimate(&plan, machine).seconds();
+    }
+    Some(total)
+}
+
+/// Modeled seconds of the unfactorized dense layer (an `r = k = 1` final
+/// einsum, the same framing the Fig. 15 comparison uses), or infinity when
+/// it cannot be scheduled.
+pub fn dense_time(m_dim: u64, n_dim: u64, machine: &MachineSpec, batch: usize) -> f64 {
+    let dims = EinsumDims {
+        kind: EinsumKind::Final,
+        m: m_dim as usize,
+        b: batch,
+        n: n_dim as usize,
+        r: 1,
+        k: 1,
+    };
+    match crate::compiler::compile(&dims, machine) {
+        Ok(plan) => costmodel::estimate(&plan, machine).seconds(),
+        Err(_) => f64::INFINITY,
+    }
+}
+
+/// Per-work-unit exploration output, merged in unit order.
+struct UnitResult {
+    vectorized: usize,
+    initial: usize,
+    scalability: usize,
+    survivors: Vec<Solution>,
+    timed: Vec<TimedSolution>,
+}
+
+/// Stages 3-6 for one work unit (pure: no shared state).
+fn process_unit(
+    unit: &WorkUnit,
+    ctx: &StageCtx<'_>,
+    machine: &MachineSpec,
+    dense_time_s: f64,
+) -> UnitResult {
+    let sols = space::enumerate_unit(unit, ctx.cfg);
+    let vectorized = sols.len();
+    let mut survivors: Vec<Solution> =
+        sols.into_iter().filter(|s| InitialLayer.keep(ctx, s)).collect();
+    let initial = survivors.len();
+    survivors.retain(|s| Scalability.keep(ctx, s));
+    let scalability = survivors.len();
+    let mut timed = Vec::with_capacity(scalability);
+    for s in &survivors {
+        if let Some(time_s) = price_solution(s, machine, ctx.cfg.batch) {
+            let speedup = dense_time_s / time_s;
+            if speedup >= ctx.cfg.time_speedup_min {
+                timed.push(TimedSolution { solution: s.clone(), time_s, speedup });
+            }
+        }
+    }
+    UnitResult { vectorized, initial, scalability, survivors, timed }
+}
+
+/// Run the full six-stage engine for one FC layer (M outputs, N inputs) on
+/// the target machine, using `cfg.dse_workers` worker threads over the
+/// `(d, m-shape)` work-unit queue. Output is byte-identical for every
+/// worker count.
+pub fn explore_timed(
+    m_dim: u64,
+    n_dim: u64,
+    machine: &MachineSpec,
+    cfg: &DseConfig,
+) -> TimedExplored {
+    let ctx = StageCtx::new(m_dim, n_dim, cfg);
+    let units = space::work_units(m_dim, n_dim, cfg);
+    let dense_time_s = dense_time(m_dim, n_dim, machine, cfg.batch);
+
+    let workers = cfg.dse_workers.max(1).min(units.len().max(1));
+    let results: Vec<UnitResult> = if workers <= 1 {
+        units
+            .iter()
+            .map(|u| process_unit(u, &ctx, machine, dense_time_s))
+            .collect()
+    } else {
+        // Fill the MPMC queue with unit indices up front and close it;
+        // workers drain it and park each unit's result in its own slot, so
+        // the merge below observes units in their deterministic order no
+        // matter which worker ran them.
+        let queue = SharedQueue::new(units.len());
+        for i in 0..units.len() {
+            queue
+                .try_push(i)
+                .unwrap_or_else(|_| unreachable!("queue sized to hold every unit"));
+        }
+        queue.close();
+        let slots: Vec<Mutex<Option<UnitResult>>> =
+            units.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    match queue.pop() {
+                        Pop::Item(i) => {
+                            let r = process_unit(&units[i], &ctx, machine, dense_time_s);
+                            *slots[i].lock().expect("unit slot lock") = Some(r);
+                        }
+                        Pop::Closed => break,
+                        Pop::TimedOut => unreachable!("blocking pop cannot time out"),
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("unit slot lock")
+                    .expect("every queued unit was processed")
+            })
+            .collect()
+    };
+
+    let mut vectorized = 0;
+    let mut initial = 0;
+    let mut scalability = 0;
+    let mut survivors = Vec::new();
+    let mut timed = Vec::new();
+    for r in results {
+        vectorized += r.vectorized;
+        initial += r.initial;
+        scalability += r.scalability;
+        survivors.extend(r.survivors);
+        timed.extend(r.timed);
+    }
+    survivors.sort_by(Solution::canonical_cmp);
+    timed.sort_by(|a, b| a.solution.canonical_cmp(&b.solution));
+    let frontier = pareto_frontier(&timed);
+
+    TimedExplored {
+        explored: Explored {
+            m_dim,
+            n_dim,
+            counts: StageCounts {
+                all: ctx.sizes.all,
+                aligned: ctx.sizes.aligned,
+                vectorized,
+                initial,
+                scalability,
+            },
+            survivors,
+        },
+        dense_time_s,
+        timed,
+        frontier,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::pareto::dominates;
+    use crate::dse::pipeline::explore;
+
+    fn k1() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
+
+    #[test]
+    fn stages_1_to_5_identical_to_untimed_pipeline() {
+        let cfg = DseConfig::default();
+        for (m, n) in [(300u64, 784u64), (120, 400), (13, 17)] {
+            let te = explore_timed(m, n, &k1(), &cfg);
+            assert_eq!(te.explored, explore(m, n, &cfg), "[{n},{m}]");
+        }
+    }
+
+    #[test]
+    fn timed_survivors_meet_the_threshold_and_sit_in_canonical_order() {
+        let cfg = DseConfig::default();
+        let te = explore_timed(300, 784, &k1(), &cfg);
+        assert!(!te.timed.is_empty());
+        assert!(te.timed.len() <= te.explored.counts.scalability);
+        for t in &te.timed {
+            assert!(t.time_s > 0.0);
+            assert!(t.speedup >= cfg.time_speedup_min, "{}", t.layout().describe());
+            assert!((t.speedup - te.dense_time_s / t.time_s).abs() < 1e-12);
+        }
+        for w in te.timed.windows(2) {
+            assert_eq!(
+                w[0].solution.canonical_cmp(&w[1].solution),
+                std::cmp::Ordering::Less
+            );
+        }
+    }
+
+    #[test]
+    fn frontier_is_nonempty_subset_of_timed() {
+        let te = explore_timed(512, 512, &k1(), &DseConfig::default());
+        assert!(!te.frontier.is_empty());
+        assert!(te.frontier.len() <= te.timed.len());
+        for f in &te.frontier {
+            assert!(te.timed.contains(f));
+            assert!(!te.timed.iter().any(|o| dominates(o, f)));
+        }
+    }
+
+    #[test]
+    fn raising_the_threshold_prunes_more() {
+        let mut cfg = DseConfig::default();
+        let loose = explore_timed(300, 784, &k1(), &cfg);
+        cfg.time_speedup_min = 10.0;
+        let tight = explore_timed(300, 784, &k1(), &cfg);
+        assert!(tight.timed.len() < loose.timed.len());
+        assert!(tight.timed.iter().all(|t| t.speedup >= 10.0));
+        // stage 1-5 accounting is untouched by the stage-6 knob
+        assert_eq!(tight.explored, loose.explored);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let mut cfg = DseConfig::default();
+        let serial = explore_timed(120, 400, &k1(), &cfg);
+        for workers in [2usize, 3, 8] {
+            cfg.dse_workers = workers;
+            assert_eq!(explore_timed(120, 400, &k1(), &cfg), serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn prime_layer_yields_empty_engine_output() {
+        let te = explore_timed(13, 17, &k1(), &DseConfig::default());
+        assert!(te.timed.is_empty());
+        assert!(te.frontier.is_empty());
+        assert_eq!(te.explored.counts.scalability, 0);
+    }
+
+    #[test]
+    fn dense_time_is_finite_and_positive_for_real_layers() {
+        let d = dense_time(300, 784, &k1(), 1);
+        assert!(d.is_finite() && d > 0.0);
+    }
+}

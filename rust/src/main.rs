@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //!   tables                 print the Tables 1-2 design-space reduction rows
-//!   dse --n N --m M        explore one FC layer, list surviving solutions
+//!   dse --n N --m M        run the six-stage DSE engine on one FC layer:
+//!                          stage counts, the Pareto frontier with modeled
+//!                          times, and the policy-selected solution
+//!                          (--rank R --policy balance|min-time --workers W
+//!                           --top K --measure H --json)
 //!   plan --m .. --b ..     show the compiler plan for one Einsum instance
 //!   kernel-bench           measure ours vs IREE-like vs Pluto-like (Figs 12-14)
 //!   serve-demo             start the serving coordinator on a TT LeNet300,
@@ -23,6 +27,7 @@ use ttrv::dse;
 use ttrv::dse::report::{format_rows, rows_for_model};
 use ttrv::kernels::Executor;
 use ttrv::machine::MachineSpec;
+use ttrv::util::json::Json;
 use ttrv::models;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::{EinsumDims, EinsumKind};
@@ -109,33 +114,157 @@ fn cmd_tables(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
+fn shape_json(shape: &[u64]) -> Json {
+    Json::Arr(shape.iter().map(|&v| Json::from(v as usize)).collect())
+}
+
+fn timed_solution_json(s: &ttrv::dse::TimedSolution) -> Json {
+    Json::obj(vec![
+        ("m_shape", shape_json(s.layout().m_shape())),
+        ("n_shape", shape_json(s.layout().n_shape())),
+        ("rank", Json::from(s.solution.rank as usize)),
+        ("d", Json::from(s.layout().d())),
+        ("params", Json::from(s.solution.params as usize)),
+        ("flops", Json::from(s.solution.flops as usize)),
+        ("modeled_time_s", Json::from(s.time_s)),
+        ("speedup_vs_dense", Json::from(s.speedup)),
+    ])
+}
+
 fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let n: u64 = get(args, "n", 784);
     let m: u64 = get(args, "m", 300);
     let rank: u64 = get(args, "rank", 8);
     let top: usize = get(args, "top", 10);
-    let cfg = DseConfig::default();
-    let e = dse::explore(m, n, &cfg);
+    let base = DseConfig::default();
+    let cfg = DseConfig {
+        dse_workers: get(args, "workers", base.dse_workers),
+        selection_policy: args
+            .get("policy")
+            .cloned()
+            .unwrap_or_else(|| base.selection_policy.clone()),
+        ..base
+    };
+    cfg.validate()?;
+    let machine = MachineSpec::spacemit_k1();
+    let e = dse::explore_timed(m, n, &machine, &cfg);
+    let c = &e.explored.counts;
+    let sel = dse::select_solution(&e, rank, cfg.policy()?);
+
+    // measured re-rank of the frontier head (runs on the build host, not
+    // the modeled target); resolved up front so --json includes it too
+    let measured = match args.get("measure") {
+        None => None,
+        Some(v) => {
+            let head: usize = v.parse().map_err(|_| {
+                ttrv::Error::config(format!("--measure expects a candidate count, got '{v}'"))
+            })?;
+            let head = &e.frontier[..head.min(e.frontier.len())];
+            Some(ttrv::dse::select::rerank_measured(head, &MachineSpec::host(), cfg.batch)?)
+        }
+    };
+
+    if args.contains_key("json") {
+        let report = Json::obj(vec![
+            ("n", Json::from(n as usize)),
+            ("m", Json::from(m as usize)),
+            ("rank", Json::from(rank as usize)),
+            ("policy", Json::from(cfg.selection_policy.as_str())),
+            ("machine", Json::from(machine.name)),
+            (
+                "counts",
+                Json::obj(vec![
+                    ("all", Json::from(c.all)),
+                    ("aligned", Json::from(c.aligned)),
+                    ("vectorized", Json::from(c.vectorized)),
+                    ("initial", Json::from(c.initial)),
+                    ("scalability", Json::from(c.scalability)),
+                    ("timed", Json::from(e.timed.len())),
+                ]),
+            ),
+            ("dense_modeled_time_s", Json::from(e.dense_time_s)),
+            ("dense_flops", Json::from(ttrv::ttd::cost::dense_flops(m, n) as usize)),
+            ("dense_params", Json::from(ttrv::ttd::cost::dense_params(m, n) as usize)),
+            ("frontier", Json::Arr(e.frontier.iter().map(timed_solution_json).collect())),
+            (
+                "measured_rerank",
+                match &measured {
+                    None => Json::Null,
+                    Some(ranked) => Json::Arr(
+                        ranked
+                            .iter()
+                            .map(|(s, secs)| {
+                                let mut o = timed_solution_json(s);
+                                if let Json::Obj(map) = &mut o {
+                                    map.insert("measured_time_s".into(), Json::from(*secs));
+                                }
+                                o
+                            })
+                            .collect(),
+                    ),
+                },
+            ),
+            (
+                "selected",
+                match &sel {
+                    Ok(s) => timed_solution_json(s),
+                    Err(_) => Json::Null,
+                },
+            ),
+        ]);
+        println!("{}", ttrv::util::json::to_string_pretty(&report));
+        return sel.map(|_| ());
+    }
+
     println!(
-        "FC [{n}, {m}]: all={} aligned={} vectorized={} initial={} final={}",
-        ttrv::util::sci(e.counts.all),
-        ttrv::util::sci(e.counts.aligned),
-        e.counts.vectorized,
-        e.counts.initial,
-        e.counts.scalability
+        "FC [{n}, {m}]: all={} aligned={} vectorized={} initial={} scalability={} timed={}",
+        ttrv::util::sci(c.all),
+        ttrv::util::sci(c.aligned),
+        c.vectorized,
+        c.initial,
+        c.scalability,
+        e.timed.len(),
     );
-    println!("top {top} survivors by FLOPs:");
-    for s in e.survivors.iter().take(top) {
+    println!(
+        "dense baseline: {} FLOPs, modeled {:.3} ms on {}",
+        ttrv::ttd::cost::dense_flops(m, n),
+        e.dense_time_s * 1e3,
+        machine.name
+    );
+    println!(
+        "Pareto frontier over (modeled time, params, FLOPs): {} of {} qualified solutions",
+        e.frontier.len(),
+        e.timed.len()
+    );
+    for s in e.frontier.iter().take(top) {
         println!(
-            "  {}  params={} flops={} ({}x fewer FLOPs than dense)",
-            s.layout.describe(),
-            s.params,
-            s.flops,
-            ttrv::ttd::cost::dense_flops(m, n) / s.flops.max(1)
+            "  {}  params={} flops={} modeled={:.1} us ({:.1}x vs dense)",
+            s.layout().describe(),
+            s.solution.params,
+            s.solution.flops,
+            s.time_s * 1e6,
+            s.speedup,
         );
     }
-    let sel = dse::select_solution(&e, rank)?;
-    println!("selected (Sec. 6.4 policy, rank {rank}): {}", sel.layout.describe());
+    let sel = sel?;
+    println!(
+        "selected ({} policy, rank {rank}): {}",
+        cfg.selection_policy,
+        sel.layout().describe()
+    );
+    println!(
+        "  params={} flops={} modeled inference {:.1} us = {:.1}x speedup vs dense",
+        sel.solution.params,
+        sel.solution.flops,
+        sel.time_s * 1e6,
+        sel.speedup,
+    );
+    if let Some(ranked) = &measured {
+        println!("measured re-rank of the frontier head (host, autotuned):");
+        for (s, secs) in ranked {
+            println!("  {:9.1} us  {}", secs * 1e6, s.layout().describe());
+        }
+    }
     Ok(())
 }
 
@@ -212,11 +341,15 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let mut ops = Vec::new();
     let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
     for (i, &(n, m)) in shapes.iter().enumerate() {
-        match ttrv::coordinator::router::route_layer(m, n, 8, &cfg) {
+        match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg)? {
             ttrv::coordinator::Route::Tt(sol) => {
-                let mut tt = random_cores(&sol.layout, &mut rng);
+                let mut tt = random_cores(sol.layout(), &mut rng);
                 tt.bias = Some(vec![0.0; m as usize]);
-                println!("layer {i}: TT {}", sol.layout.describe());
+                println!(
+                    "layer {i}: TT {} (modeled {:.1}x vs dense)",
+                    sol.layout().describe(),
+                    sol.speedup
+                );
                 ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine)?));
             }
             ttrv::coordinator::Route::Dense => {

@@ -314,7 +314,11 @@ fn write_value(v: &Json, out: &mut String, indent: usize, pretty: bool) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no inf/NaN tokens; null is the conventional
+                // encoding (what our own parser round-trips)
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 let _ = write!(out, "{}", *n as i64);
             } else {
                 let _ = write!(out, "{n}");
@@ -429,5 +433,17 @@ mod tests {
     fn integers_print_without_decimal() {
         assert_eq!(to_string(&Json::Num(16.0)), "16");
         assert_eq!(to_string(&Json::Num(1.5)), "1.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // f64::INFINITY reaches the writer via modeled-time reports (an
+        // unschedulable dense baseline); bare `inf` would not be JSON
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let doc = Json::obj(vec![("t", Json::Num(v))]);
+            let text = to_string(&doc);
+            assert_eq!(text, "{\"t\":null}");
+            assert!(parse(&text).is_ok());
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! Integration: DSE -> compiler -> kernel engine, over the model zoo.
 
-use ttrv::config::DseConfig;
+use ttrv::config::{DseConfig, SelectionPolicy};
 use ttrv::coordinator::TtFcEngine;
 use ttrv::dse;
 use ttrv::machine::MachineSpec;
@@ -44,12 +44,14 @@ fn selected_solutions_execute_and_beat_dense_flops() {
     let mut rng = Rng::new(11);
     // the Fig. 15 model set (Sec. 6.4 shapes)
     for (n, m) in [(2048u64, 1000u64), (512, 512), (4096, 2048), (1024, 1000)] {
-        let e = dse::explore(m, n, &cfg);
-        let sol = dse::select_solution(&e, 8).unwrap();
-        assert_eq!(sol.layout.d(), 2, "Sec 6.4 policy picks d=2 for [{n},{m}]");
-        assert!(sol.flops < cost::dense_flops(m, n));
+        let e = dse::explore_timed(m, n, &machine, &cfg);
+        let sol = dse::select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert_eq!(sol.layout().d(), 2, "Sec 6.4 policy picks d=2 for [{n},{m}]");
+        assert!(sol.solution.flops < cost::dense_flops(m, n));
+        // stage 6 guarantees a modeled win on the target machine too
+        assert!(sol.speedup >= cfg.time_speedup_min, "[{n},{m}]");
         // the selected layout must compile + run through the engine
-        let tt = random_cores(&sol.layout, &mut rng);
+        let tt = random_cores(sol.layout(), &mut rng);
         let mut engine = TtFcEngine::new(&tt, &machine).unwrap();
         let x = Tensor::randn(vec![2, n as usize], 1.0, &mut rng);
         let w = tt.reconstruct().unwrap();
@@ -69,12 +71,12 @@ fn dse_plus_ttsvd_roundtrip_on_real_layer_shape() {
     // DSE-selected layout and verify approximation + compression
     let cfg = DseConfig::default();
     let mut rng = Rng::new(12);
-    let e = dse::explore(300, 784, &cfg);
-    let sol = dse::select_solution(&e, 8).unwrap();
+    let e = dse::explore_timed(300, 784, &MachineSpec::spacemit_k1(), &cfg);
+    let sol = dse::select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
     // a W that is exactly TT-rank 8 in the selected layout
-    let truth = random_cores(&sol.layout, &mut rng);
+    let truth = random_cores(sol.layout(), &mut rng);
     let w = truth.reconstruct().unwrap();
-    let tt = tt_svd(&w, &sol.layout).unwrap();
+    let tt = tt_svd(&w, sol.layout()).unwrap();
     assert!(tt.rel_error(&w).unwrap() < 1e-3);
     assert!(cost::params(&tt.layout) < cost::dense_params(300, 784) / 10);
 }
@@ -83,14 +85,16 @@ fn dse_plus_ttsvd_roundtrip_on_real_layer_shape() {
 fn alternates_allow_accuracy_fallback() {
     // the paper's flexibility claim: a list of solutions, not just one
     let cfg = DseConfig::default();
-    let e = dse::explore(1000, 2048, &cfg);
+    let e = dse::explore_timed(1000, 2048, &MachineSpec::spacemit_k1(), &cfg);
     let alts = dse::select::alternates(&e, 8);
     assert!(alts.len() >= 3, "need fallback candidates, got {}", alts.len());
     // all alternates are valid layouts with distinct (layout, rank)
     let mut seen = std::collections::HashSet::new();
     for a in &alts {
-        assert!(a.layout.ranks_feasible());
-        assert!(seen.insert(format!("{}@{}", a.layout.describe(), a.rank)));
+        assert!(a.layout().ranks_feasible());
+        assert!(seen.insert(format!("{}@{}", a.layout().describe(), a.solution.rank)));
+        // ...and every fallback already cleared the modeled-time bar
+        assert!(a.speedup >= cfg.time_speedup_min);
     }
 }
 

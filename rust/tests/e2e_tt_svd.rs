@@ -80,10 +80,10 @@ fn dse_selected_layouts_decompose_every_zoo_cnn_layer() {
     let cfg = DseConfig::default();
     let mut rng = Rng::new(43);
     for (n, m) in [(400u64, 120u64), (512, 256)] {
-        let e = dse::explore(m, n, &cfg);
-        let sol = dse::select_solution(&e, 8).unwrap();
+        let e = dse::explore_timed(m, n, &MachineSpec::spacemit_k1(), &cfg);
+        let sol = dse::select_solution(&e, 8, ttrv::config::SelectionPolicy::Balance).unwrap();
         let w = lowrankish(m as usize, n as usize, &mut rng);
-        let tt = tt_svd(&w, &sol.layout).unwrap();
+        let tt = tt_svd(&w, sol.layout()).unwrap();
         assert!(
             (tt.param_count() as u64) < cost::dense_params(m, n),
             "[{n},{m}] did not compress"

@@ -22,9 +22,9 @@ fn build_pair(rng: &mut Rng) -> (ModelEngine, ModelEngine) {
     let mut dense_ops = Vec::new();
     let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
     for (i, &(n, m)) in shapes.iter().enumerate() {
-        match ttrv::coordinator::router::route_layer(m, n, 8, &cfg) {
+        match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg).unwrap() {
             Route::Tt(sol) => {
-                let tt = random_cores(&sol.layout, rng);
+                let tt = random_cores(sol.layout(), rng);
                 let w = tt.reconstruct().unwrap();
                 tt_ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine).unwrap()));
                 dense_ops.push(LayerOp::Dense(DenseFc::new(&w, None).unwrap()));
