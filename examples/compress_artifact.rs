@@ -1,0 +1,84 @@
+//! Artifact pipeline example: compress LeNet300 once, persist it as a
+//! versioned `.ttrv` bundle, then warm-start a serving pool from the file
+//! and show that (a) cold-start is now decoupled from design-space size and
+//! (b) artifact-served outputs are bitwise-identical to the in-process
+//! engine.
+//!
+//! Run: `cargo run --release --example compress_artifact [requests]`
+
+use std::time::Instant;
+
+use ttrv::artifact;
+use ttrv::config::{DseConfig, ServeConfig};
+use ttrv::coordinator::{InferenceRequest, Server};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::util::prng::Rng;
+
+fn main() -> ttrv::Result<()> {
+    let requests: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(200);
+    let machine = MachineSpec::spacemit_k1();
+    let cfg = DseConfig::default();
+
+    // Offline: DSE + TT-SVD + compile + pack, persisted once.
+    let spec = artifact::CompressSpec::from_zoo("lenet300", 8, 42)?;
+    let t0 = Instant::now();
+    let bundle = artifact::compress(&spec, &machine, &cfg)?;
+    let compress_time = t0.elapsed();
+    let path = std::env::temp_dir().join("ttrv_example_lenet300.ttrv");
+    artifact::write_bundle_file(&path, &bundle)?;
+    println!(
+        "compressed {} in {:.2}s -> {} ({} bytes, {} params, {} of {} layers TT)",
+        bundle.name,
+        compress_time.as_secs_f64(),
+        path.display(),
+        std::fs::metadata(&path)?.len(),
+        bundle.param_count(),
+        bundle.tt_layers(),
+        bundle.shapes.len(),
+    );
+
+    // Deploy-side: decode + warm-start. No DSE, no SVD, plans pre-seeded.
+    let t0 = Instant::now();
+    let loaded = artifact::read_bundle_file(&path)?;
+    let mut warm_engine = loaded.build_engine(&machine)?;
+    println!(
+        "warm-start from file: {:.1} ms (vs {:.2}s compressing)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        compress_time.as_secs_f64()
+    );
+
+    // The two construction paths agree bitwise.
+    let mut direct_engine = bundle.build_engine(&machine)?;
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(vec![8, bundle.in_dim], 1.0, &mut rng);
+    let a = warm_engine.forward(&x)?;
+    let b = direct_engine.forward(&x)?;
+    assert!(a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits()));
+    println!("artifact-loaded outputs are bitwise-identical to the in-memory engine");
+
+    // Serve straight from the file.
+    let serve_cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let server = Server::from_artifact(&path, &machine, serve_cfg)?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|id| {
+            server
+                .submit(InferenceRequest { id: id as u64, input: rng.normal_vec(784, 1.0) })
+                .expect("admitted")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("ok");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests from the artifact in {:.1} ms ({:.0} req/s)",
+        dt * 1e3,
+        requests as f64 / dt
+    );
+    println!("{}", server.metrics().summary());
+    server.shutdown();
+    std::fs::remove_file(&path)?;
+    Ok(())
+}

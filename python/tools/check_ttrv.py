@@ -1,0 +1,228 @@
+#!/usr/bin/env python3
+"""Independent `.ttrv` decoder: a Python mirror of the Rust reader
+(rust/src/artifact/reader.rs) for debugging bundles and cross-checking the
+golden artifact. Validates the container (magic, version, TOC CRC, section
+CRCs), decodes the OPS grammar, re-runs the engine-side consistency checks
+(`TtFcEngine::from_parts`), and — for batch-1, Canonical-layout bundles —
+replays a forward pass with numpy.
+
+Usage: check_ttrv.py <bundle.ttrv> [x_csv]
+"""
+
+import json
+import struct
+import sys
+import zlib
+
+import numpy as np
+
+HEADER_LEN, TOC_ENTRY_LEN, MAX_SECTIONS = 16, 24, 64
+VERSION = 1
+
+
+class Cur:
+    def __init__(self, buf):
+        self.buf, self.pos = buf, 0
+
+    def take(self, n):
+        assert self.pos + n <= len(self.buf), f"truncated at {self.pos}"
+        out = self.buf[self.pos : self.pos + n]
+        self.pos += n
+        return out
+
+    def u8(self):
+        return self.take(1)[0]
+
+    def u32(self):
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f64(self):
+        return struct.unpack("<d", self.take(8))[0]
+
+    def f32s(self, n):
+        return np.frombuffer(self.take(4 * n), dtype="<f4").copy()
+
+
+def parse_container(b):
+    assert len(b) >= HEADER_LEN, "too short"
+    assert b[0:4] == b"TTRV", "bad magic"
+    version, count, toc_crc = struct.unpack("<III", b[4:16])
+    assert version == VERSION, f"version {version}"
+    assert 1 <= count <= MAX_SECTIONS, f"count {count}"
+    toc_end = HEADER_LEN + count * TOC_ENTRY_LEN
+    assert toc_end <= len(b), "truncated TOC"
+    toc = b[HEADER_LEN:toc_end]
+    assert zlib.crc32(toc) == toc_crc, "TOC crc"
+    sections = {}
+    ranges = []
+    for i in range(count):
+        sid, crc, off, ln = struct.unpack(
+            "<IIQQ", toc[i * TOC_ENTRY_LEN : (i + 1) * TOC_ENTRY_LEN]
+        )
+        assert toc_end <= off and off + ln <= len(b), f"section {sid} bounds"
+        assert sid not in sections, f"dup section {sid}"
+        payload = b[off : off + ln]
+        assert zlib.crc32(payload) == crc, f"section {sid} crc"
+        sections[sid] = payload
+        ranges.append((off, off + ln))
+    cursor = toc_end
+    for off, end in sorted(ranges):
+        assert off == cursor, f"unchecksummed gap/overlap at {cursor}"
+        cursor = end
+    assert cursor == len(b), "trailing bytes after the last section"
+    return sections
+
+
+def decode_layout(c):
+    d = c.u32()
+    assert 1 <= d <= 64
+    m = [c.u64() for _ in range(d)]
+    n = [c.u64() for _ in range(d)]
+    r = [c.u64() for _ in range(d + 1)]
+    assert r[0] == 1 and r[d] == 1 and all(v >= 1 for v in m + n + r)
+    return m, n, r
+
+
+def decode_bias(c, m_total):
+    flag = c.u8()
+    if flag == 0:
+        return None
+    assert flag == 1
+    ln = c.u64()
+    assert ln == m_total
+    return c.f32s(ln)
+
+
+def decode_plan(c):
+    kind = c.u8()
+    assert kind in (0, 1, 2)
+    m, b, n, r, k = (c.u64() for _ in range(5))
+    pack_g, vloop = c.u8(), c.u8()
+    assert pack_g in (0, 1) and vloop in (0, 1, 2)
+    vl = c.u64()
+    rb = [c.u64() for _ in range(4)]
+    order, has_btl = c.u8(), c.u8()
+    assert order in (0, 1) and has_btl in (0, 1)
+    btl = c.u64()
+    threads, ls = c.u32(), c.u64()
+    return dict(kind=kind, m=m, b=b, n=n, r=r, k=k, pack_g=pack_g, vloop=vloop,
+                vl=vl, rb=rb, order=order, btl=btl if has_btl else None,
+                threads=threads, ls=ls)
+
+
+def decode_packed(c):
+    glayout = c.u8()
+    assert glayout in (0, 1, 2)
+    r, n, m, k, r_pad = (c.u64() for _ in range(5))
+    if glayout in (0, 2):
+        assert r_pad == r
+        expected = r * n * m * k
+    else:
+        assert r_pad >= r and r_pad % 8 == 0
+        expected = m * r_pad * n * k
+    ln = c.u64()
+    assert ln == expected
+    return dict(glayout=glayout, dims=(r, n, m, k), r_pad=r_pad, data=c.f32s(ln))
+
+
+def einsum_chain(m_shape, n_shape, ranks, batch):
+    """Mirror of ttd::cost::einsum_chain."""
+    d = len(m_shape)
+    cur = batch * int(np.prod(n_shape))
+    steps = []
+    for t in reversed(range(d)):
+        r_prev, n_t, m_t, r_t = ranks[t], n_shape[t], m_shape[t], ranks[t + 1]
+        b_t = cur // (n_t * r_t)
+        kind = 0 if (t == d - 1 and d > 1) else (2 if t == 0 else 1)
+        steps.append(dict(kind=kind, m=m_t, b=b_t, n=n_t, r=r_prev, k=r_t))
+        cur = m_t * b_t * r_prev
+    return steps
+
+
+def decode_ops(payload):
+    c = Cur(payload)
+    ops = []
+    for _ in range(c.u32()):
+        tag = c.u8()
+        if tag == 0:
+            m, n, r = decode_layout(c)
+            decode_layout(c)  # selected layout
+            c.u64(), c.u64(), c.u64(), c.f64(), c.f64()  # rank/params/flops/time/speedup
+            m_total = int(np.prod(m))
+            bias = decode_bias(c, m_total)
+            steps = c.u32()
+            assert steps == len(m)
+            plans, packed = [], []
+            for _ in range(steps):
+                plans.append(decode_plan(c))
+                packed.append(decode_packed(c))
+            # from_parts validation: plan dims == batch-1 chain dims
+            for plan, chain in zip(plans, einsum_chain(m, n, r, 1)):
+                for key in ("kind", "m", "b", "n", "r", "k"):
+                    assert plan[key] == chain[key], (key, plan, chain)
+            for pg, chain in zip(packed, einsum_chain(m, n, r, 1)):
+                assert pg["dims"] == (chain["r"], chain["n"], chain["m"], chain["k"])
+            ops.append(("tt", (m, n, r), plans, packed, bias))
+        elif tag == 1:
+            mm, nn = c.u64(), c.u64()
+            w = c.f32s(mm * nn).reshape(mm, nn)
+            bias = decode_bias(c, mm)
+            ops.append(("dense", w, bias))
+        elif tag == 2:
+            ops.append(("relu",))
+        else:
+            raise AssertionError(f"op tag {tag}")
+    assert c.pos == len(payload), "trailing bytes"
+    return ops
+
+
+def forward(ops, x, meta):
+    cur = np.asarray(x, dtype=np.float32)
+    for op in ops:
+        if op[0] == "relu":
+            cur = np.maximum(cur, 0)
+        elif op[0] == "dense":
+            _, w, bias = op
+            cur = cur @ w.T + (0 if bias is None else bias)
+        else:
+            _, (m_shape, n_shape, ranks), plans, packed, bias = op
+            batch = cur.shape[0]
+            flat = cur.ravel()
+            for plan, pg in zip(plans, einsum_chain(m_shape, n_shape, ranks, batch)):
+                assert plan["vloop"] == 2 and plan["pack_g"] == 0, (
+                    "python replay only mirrors the Canonical/naive configuration"
+                )
+            d = len(m_shape)
+            for step, chain in enumerate(einsum_chain(m_shape, n_shape, ranks, batch)):
+                pg = packed[step]
+                r, n, m, k = pg["dims"]
+                g = pg["data"].reshape(r, n, m, k)
+                xs = flat.reshape(chain["b"], n, k)
+                flat = np.einsum("rnmk,bnk->mbr", g, xs).ravel()
+            m_total = int(np.prod(m_shape))
+            cur = flat.reshape(m_total, batch).T + (0 if bias is None else bias)
+    assert cur.shape[1] == meta["out_dim"]
+    return cur
+
+
+def main():
+    path = sys.argv[1]
+    blob = open(path, "rb").read()
+    sections = parse_container(blob)
+    meta = json.loads(sections[1])
+    assert meta["format"] == "ttrv-bundle"
+    ops = decode_ops(sections[2])
+    json.loads(sections[3])
+    print(f"{path}: ok — model {meta['model']}, {len(ops)} ops, "
+          f"{len(blob)} bytes, machine {meta['machine']}")
+    if len(sys.argv) > 2:
+        x = np.array([float(v) for v in open(sys.argv[2]).read().split(",")])
+        y = forward(ops, x.reshape(1, -1), meta)
+        print("forward:", y[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

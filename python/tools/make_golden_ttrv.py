@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""Generate the pinned golden bundle `rust/tests/data/lenet300.ttrv`.
+
+The golden artifact is the forward-compat tripwire for the `.ttrv` format
+(see rust/src/artifact/format.rs): the Rust reader must load this exact
+byte stream and serve the exact output vector pinned in
+rust/tests/artifact_suite.rs. Regenerate it ONLY on a deliberate format
+change, together with a FORMAT_VERSION bump.
+
+Construction notes:
+* Every stored value (cores, biases, dense weights, the test input) is a
+  small integer, and the script asserts that the sum of absolute values of
+  every contraction stays below 2^24. Integer f32 arithmetic below that
+  bound is exact in ANY summation order, so the pinned outputs are
+  independent of kernel/blocking/threading details — the pin survives
+  legitimate kernel refactors and only trips on format breaks.
+* The TT layers carry naive (Canonical-layout, scalar) plans, exercising
+  the third `G` layout; the pinned forward runs at batch 1 so the
+  pre-seeded batch-1 plans are the only ones used.
+"""
+
+import struct
+import zlib
+from pathlib import Path
+
+import numpy as np
+
+OUT = Path(__file__).resolve().parents[2] / "rust" / "tests" / "data" / "lenet300.ttrv"
+
+MAGIC = b"TTRV"
+VERSION = 1
+SEC_META, SEC_OPS, SEC_REPORT = 1, 2, 3
+EXACT_BOUND = 1 << 24
+
+u8 = lambda v: struct.pack("<B", v)
+u32 = lambda v: struct.pack("<I", v)
+u64 = lambda v: struct.pack("<Q", v)
+f64 = lambda v: struct.pack("<d", v)
+
+
+def f32s(arr):
+    a = np.asarray(arr, dtype=np.int64).ravel()
+    # every stored value must be integer-exact in f32
+    assert np.abs(a).max(initial=0) < EXACT_BOUND
+    return np.asarray(a, dtype="<f4").tobytes()
+
+
+def pattern(n, salt, lo=-1, hi=1, density_mod=7, nonzero=(0, 2, 4)):
+    """Deterministic sparse integer pattern in [lo, hi]."""
+    idx = np.arange(n, dtype=np.int64)
+    phase = (idx * 31 + salt) % density_mod
+    vals = ((idx * 13 + salt * 7) % (hi - lo + 1)) + lo
+    return np.where(np.isin(phase, nonzero), vals, 0)
+
+
+class TtLayer:
+    def __init__(self, m_shape, n_shape, ranks, salt):
+        self.m_shape, self.n_shape, self.ranks = m_shape, n_shape, ranks
+        d = len(m_shape)
+        self.cores = []
+        for t in range(d):
+            shape = (ranks[t], n_shape[t], m_shape[t], ranks[t + 1])
+            self.cores.append(
+                pattern(int(np.prod(shape)), salt + 101 * t).reshape(shape)
+            )
+        self.m_total = int(np.prod(m_shape))
+        self.n_total = int(np.prod(n_shape))
+        self.bias = pattern(self.m_total, salt + 997, lo=-2, hi=2)
+
+    def chain(self, batch):
+        """(kind, m, b, n, r, k) per processing step — mirrors
+        ttd::cost::einsum_chain (kind: 0 First, 1 Middle, 2 Final)."""
+        d = len(self.m_shape)
+        cur = batch * self.n_total
+        steps = []
+        for t in reversed(range(d)):
+            r_prev, n_t, m_t, r_t = (
+                self.ranks[t], self.n_shape[t], self.m_shape[t], self.ranks[t + 1],
+            )
+            b_t = cur // (n_t * r_t)
+            kind = 0 if (t == d - 1 and d > 1) else (2 if t == 0 else 1)
+            steps.append((kind, m_t, b_t, n_t, r_prev, r_t))
+            cur = m_t * b_t * r_prev
+        return steps
+
+    def forward(self, x):
+        """Mirror of TtFcShared::forward_with over naive kernels, int64."""
+        batch = x.shape[0]
+        assert x.shape[1] == self.n_total
+        flat = x.astype(np.int64).ravel()
+        d = len(self.m_shape)
+        for step, (kind, m, b, n, r, k) in enumerate(self.chain(batch)):
+            core = self.cores[d - 1 - step]
+            assert core.shape == (r, n, m, k)
+            xs = flat.reshape(b, n, k)
+            # exactness: any partial sum is bounded by the abs-sum
+            bound = np.einsum("rnmk,bnk->mbr", np.abs(core), np.abs(xs))
+            assert bound.max() < EXACT_BOUND, f"step {step}: bound {bound.max()}"
+            flat = np.einsum("rnmk,bnk->mbr", core, xs).ravel()
+        # final slab is (M, B) row-major -> (B, M), plus bias
+        y = flat.reshape(self.m_total, batch).T + self.bias
+        assert np.abs(y).max() < EXACT_BOUND
+        return y
+
+
+def encode_layout(m_shape, n_shape, ranks):
+    out = u32(len(m_shape))
+    for v in list(m_shape) + list(n_shape) + list(ranks):
+        out += u64(v)
+    return out
+
+
+def encode_naive_plan(kind, m, b, n, r, k):
+    out = u8(kind)
+    for v in (m, b, n, r, k):
+        out += u64(v)
+    out += u8(0)          # pack_g = false
+    out += u8(2)          # VectorLoop::None
+    out += u64(1)         # vl
+    out += u64(1) * 4     # rb factors
+    out += u8(0)          # LoopOrder::Mbrk
+    out += u8(0) + u64(0) # no btl
+    out += u32(1)         # threads
+    out += u64(0)         # ls_estimate
+    return out
+
+
+def encode_canonical_packed(core):
+    r, n, m, k = core.shape
+    out = u8(0)  # GLayout::Canonical
+    for v in (r, n, m, k, r):  # dims + r_pad = r
+        out += u64(v)
+    out += u64(core.size)
+    out += f32s(core)
+    return out
+
+
+def encode_tt(layer):
+    out = u8(0)  # op tag
+    lay = encode_layout(layer.m_shape, layer.n_shape, layer.ranks)
+    out += lay + lay  # achieved layout == selected layout
+    params = sum(c.size for c in layer.cores) + layer.m_total
+    flops = layer.m_total + sum(
+        2 * m * b * n * r * k for (_, m, b, n, r, k) in layer.chain(1)
+    )
+    out += u64(max(layer.ranks)) + u64(params) + u64(flops)
+    out += f64(1e-4) + f64(2.0)
+    out += u8(1) + u64(layer.m_total) + f32s(layer.bias)
+    steps = layer.chain(1)
+    out += u32(len(steps))
+    d = len(layer.m_shape)
+    for step, dims in enumerate(steps):
+        out += encode_naive_plan(*dims)
+        out += encode_canonical_packed(layer.cores[d - 1 - step])
+    return out
+
+
+def encode_dense(w, bias):
+    m, n = w.shape
+    return u8(1) + u64(m) + u64(n) + f32s(w) + u8(1) + u64(m) + f32s(bias)
+
+
+def main():
+    tt1 = TtLayer([20, 15], [28, 28], [1, 4, 1], salt=5)
+    tt2 = TtLayer([10, 10], [20, 15], [1, 3, 1], salt=60)
+    w3 = pattern(10 * 100, 900).reshape(10, 100)
+    b3 = pattern(10, 901, lo=-2, hi=2)
+
+    # --- expected output for the pinned input -----------------------------
+    x = (((np.arange(784, dtype=np.int64) * 37) % 7) - 3).reshape(1, 784)
+    h = np.maximum(tt1.forward(x), 0)
+    h = np.maximum(tt2.forward(h), 0)
+    bound = np.abs(h) @ np.abs(w3).T + np.abs(b3)
+    assert bound.max() < EXACT_BOUND, f"dense bound {bound.max()}"
+    y = h @ w3.T + b3
+    print("pinned output:", y[0].tolist())
+
+    # --- sections ---------------------------------------------------------
+    meta = (
+        b'{"format":"ttrv-bundle","model":"lenet300-golden",'
+        b'"machine":"SpacemiT-K1","in_dim":784,"out_dim":10,'
+        b'"rank":4,"seed":0,"shapes":[[784,300],[300,100],[100,10]]}'
+    )
+    ops = u32(5)
+    ops += encode_tt(tt1)
+    ops += u8(2)  # relu
+    ops += encode_tt(tt2)
+    ops += u8(2)  # relu
+    ops += encode_dense(w3, b3)
+    report = b"[]"
+
+    sections = [(SEC_META, meta), (SEC_OPS, ops), (SEC_REPORT, report)]
+    toc = b""
+    offset = 16 + 24 * len(sections)
+    for sid, payload in sections:
+        toc += u32(sid) + u32(zlib.crc32(payload)) + u64(offset) + u64(len(payload))
+        offset += len(payload)
+    blob = MAGIC + u32(VERSION) + u32(len(sections)) + u32(zlib.crc32(toc)) + toc
+    for _, payload in sections:
+        blob += payload
+
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_bytes(blob)
+    print(f"wrote {OUT} ({len(blob)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

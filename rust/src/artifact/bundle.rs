@@ -1,0 +1,542 @@
+//! The in-memory form of a `.ttrv` bundle and the two pipelines around it:
+//! **compress** (DSE route → TT-SVD → compile → pack → bundle) and
+//! **warm-start** (bundle → engines with pre-seeded plan caches, zero DSE
+//! and zero decomposition at load time).
+//!
+//! A bundle is plain data — layouts, packed core buffers, compiled plans,
+//! dense weights, biases — never live engines, so it can be written,
+//! diffed and round-tripped without touching executor state. Engines are
+//! stamped out on demand by [`ModelBundle::build_engine`].
+
+use crate::baselines::dense::DenseFc;
+use crate::compiler::OptimizationPlan;
+use crate::config::DseConfig;
+use crate::coordinator::router::{self, Route};
+use crate::coordinator::{LayerOp, ModelEngine, TtFcEngine};
+use crate::dse::report::timed_solution_json;
+use crate::dse::{TimedExplored, TimedSolution};
+use crate::error::{Error, Result};
+use crate::kernels::{pack, Executor, PackedG};
+use crate::machine::MachineSpec;
+use crate::models;
+use crate::tensor::Tensor;
+use crate::ttd::cost::einsum_chain;
+use crate::ttd::decompose::tt_svd;
+use crate::ttd::TtLayout;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Frontier entries embedded per layer in the bundle's DSE report; the
+/// report records the full frontier size alongside so the cap is never a
+/// silent truncation.
+const REPORT_FRONTIER_CAP: usize = 32;
+
+/// A TT-compressed FC layer as stored in a bundle: everything the serving
+/// engine needs, already in execution form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TtLayerBundle {
+    /// The layout the stored cores realize (achieved TT-SVD ranks, which
+    /// the decomposition may have clipped below the selected solution's).
+    pub layout: TtLayout,
+    /// Packed core per chain step, processing order (t = d-1 .. 0), in the
+    /// `G` layout each step's plan chose.
+    pub packed: Vec<PackedG>,
+    /// Compiled batch-1 plan per chain step (processing order) — pre-seeds
+    /// the executor's plan cache at load.
+    pub plans: Vec<OptimizationPlan>,
+    /// Output bias (length `M`), if any.
+    pub bias: Option<Vec<f32>>,
+    /// The DSE-selected, time-qualified solution this layer deployed.
+    pub selected: TimedSolution,
+}
+
+/// A dense (non-factorized) FC layer as stored in a bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseLayerBundle {
+    /// Weights `W (M, N)`, row-major.
+    pub w: Tensor,
+    /// Output bias (length `M`), if any.
+    pub bias: Option<Vec<f32>>,
+}
+
+/// One step of the bundled model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BundleOp {
+    /// A TT-compressed FC layer.
+    Tt(TtLayerBundle),
+    /// A dense FC fallback.
+    Dense(DenseLayerBundle),
+    /// Elementwise `max(0, x)`.
+    Relu,
+}
+
+/// A decoded (or freshly compressed) `.ttrv` bundle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelBundle {
+    /// Model display name.
+    pub name: String,
+    /// `MachineSpec::name` the plans were compiled for; engines can only be
+    /// built against the same machine.
+    pub machine: String,
+    /// Model input width.
+    pub in_dim: usize,
+    /// Model output width.
+    pub out_dim: usize,
+    /// Uniform rank requested at compression time.
+    pub rank: u64,
+    /// Seed of the deterministic demo weights (the repo stores no trained
+    /// checkpoints; weights are seeded so `verify` can reproduce them).
+    pub seed: u64,
+    /// FC layer shapes `(n_in, m_out)` in model order.
+    pub shapes: Vec<(u64, u64)>,
+    /// The layer ops, model order.
+    pub ops: Vec<BundleOp>,
+    /// The embedded DSE report (one JSON object per FC layer).
+    pub report: Json,
+}
+
+/// What to compress: a named stack of FC layers plus the demo-weight seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressSpec {
+    /// Model display name.
+    pub name: String,
+    /// FC layer shapes `(n_in, m_out)`; consecutive layers must chain
+    /// (`m_out` of layer i == `n_in` of layer i+1).
+    pub shapes: Vec<(u64, u64)>,
+    /// Uniform TT rank to request from the DSE selection.
+    pub rank: u64,
+    /// Seed for the deterministic demo weights.
+    pub seed: u64,
+}
+
+impl CompressSpec {
+    /// A spec for a zoo model's FC stack ([`models::model_by_name`]),
+    /// repeated layers expanded in order.
+    pub fn from_zoo(name: &str, rank: u64, seed: u64) -> Result<Self> {
+        let arch = models::model_by_name(name)
+            .ok_or_else(|| Error::config(format!("unknown zoo model '{name}'")))?;
+        let mut shapes = Vec::new();
+        for s in arch.fc_shapes() {
+            for _ in 0..s.count {
+                shapes.push((s.n, s.m));
+            }
+        }
+        let spec = CompressSpec { name: arch.name.to_string(), shapes, rank, seed };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject specs the compressor cannot realize as a sequential MLP.
+    pub fn validate(&self) -> Result<()> {
+        if self.shapes.is_empty() {
+            return Err(Error::config(format!(
+                "model '{}' has no FC layers to compress",
+                self.name
+            )));
+        }
+        if self.rank < 1 {
+            return Err(Error::config("compress rank must be >= 1"));
+        }
+        // META stores the seed as a JSON number; beyond 2^53 it would not
+        // survive the f64 round-trip and the written bundle could not be
+        // read back — reject here instead of emitting an unreadable file
+        if self.seed > (1u64 << 53) {
+            return Err(Error::config(format!(
+                "compress seed {} exceeds 2^53 (not exactly representable in bundle metadata)",
+                self.seed
+            )));
+        }
+        for w in self.shapes.windows(2) {
+            let ((_, m_prev), (n_next, _)) = (w[0], w[1]);
+            if m_prev != n_next {
+                return Err(Error::config(format!(
+                    "model '{}' FC layers do not chain: {} outputs then {} inputs",
+                    self.name, m_prev, n_next
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One FC layer's entry in the embedded DSE report.
+fn layer_report(
+    n: u64,
+    m: u64,
+    explored: Option<&TimedExplored>,
+    selected: Option<&TimedSolution>,
+) -> Json {
+    let mut fields = vec![
+        ("n", Json::from(n as usize)),
+        ("m", Json::from(m as usize)),
+        ("routed", Json::from(if selected.is_some() { "tt" } else { "dense" })),
+    ];
+    if let Some(e) = explored {
+        let c = &e.explored.counts;
+        fields.push((
+            "counts",
+            Json::obj(vec![
+                ("all", Json::from(c.all)),
+                ("aligned", Json::from(c.aligned)),
+                ("vectorized", Json::from(c.vectorized)),
+                ("initial", Json::from(c.initial)),
+                ("scalability", Json::from(c.scalability)),
+                ("timed", Json::from(e.timed.len())),
+            ]),
+        ));
+        fields.push(("dense_modeled_time_s", Json::from(e.dense_time_s)));
+        fields.push(("frontier_total", Json::from(e.frontier.len())));
+        fields.push((
+            "frontier",
+            Json::Arr(
+                e.frontier
+                    .iter()
+                    .take(REPORT_FRONTIER_CAP)
+                    .map(timed_solution_json)
+                    .collect(),
+            ),
+        ));
+    }
+    fields.push((
+        "selected",
+        match selected {
+            Some(s) => timed_solution_json(s),
+            None => Json::Null,
+        },
+    ));
+    Json::obj(fields)
+}
+
+/// Run the offline half of the paper's pipeline for a whole FC stack:
+/// per layer, route through the six-stage DSE engine, TT-SVD the (seeded,
+/// deterministic) weights into the selected layout, compile the chain's
+/// batch-1 plans and pack the cores as those plans require. The result is
+/// a bundle ready to be written with [`super::write_bundle_file`] or
+/// served directly via [`ModelBundle::build_engine`].
+///
+/// Deterministic end to end: the same `(spec, machine, cfg)` always
+/// produces a byte-identical bundle — `verify` relies on this.
+pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> Result<ModelBundle> {
+    spec.validate()?;
+    cfg.validate()?;
+    let mut rng = Rng::new(spec.seed);
+    let mut ex = Executor::new(machine);
+    let mut ops = Vec::new();
+    let mut layers = Vec::new();
+    for (i, &(n, m)) in spec.shapes.iter().enumerate() {
+        // demo weights: W then bias, drawn in layer order from the one
+        // seeded stream (the reproducibility contract `verify` replays)
+        let w = Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng);
+        let bias = rng.normal_vec(m as usize, 0.1);
+        let (route, explored) = router::route_layer_explored(m, n, spec.rank, machine, cfg)?;
+        match route {
+            Route::Tt(sel) => {
+                let mut tt = tt_svd(&w, sel.layout())?;
+                tt.bias = Some(bias);
+                let layout = tt.layout.clone();
+                let chain = einsum_chain(&layout, 1);
+                let mut plans = Vec::with_capacity(chain.len());
+                let mut packed = Vec::with_capacity(chain.len());
+                for (step, dims) in chain.iter().enumerate() {
+                    let plan = ex.plan(dims)?;
+                    packed.push(pack(&tt.cores[layout.d() - 1 - step], &plan)?);
+                    plans.push(plan);
+                }
+                layers.push(layer_report(n, m, explored.as_ref(), Some(&sel)));
+                ops.push(BundleOp::Tt(TtLayerBundle {
+                    layout,
+                    packed,
+                    plans,
+                    bias: tt.bias,
+                    selected: sel,
+                }));
+            }
+            Route::Dense => {
+                layers.push(layer_report(n, m, explored.as_ref(), None));
+                ops.push(BundleOp::Dense(DenseLayerBundle { w, bias: Some(bias) }));
+            }
+        }
+        if i + 1 < spec.shapes.len() {
+            ops.push(BundleOp::Relu);
+        }
+    }
+    Ok(ModelBundle {
+        name: spec.name.clone(),
+        machine: machine.name.to_string(),
+        in_dim: spec.shapes[0].0 as usize,
+        out_dim: spec.shapes[spec.shapes.len() - 1].1 as usize,
+        rank: spec.rank,
+        seed: spec.seed,
+        shapes: spec.shapes.clone(),
+        ops,
+        report: Json::Arr(layers),
+    })
+}
+
+impl ModelBundle {
+    /// The [`CompressSpec`] this bundle records (what `verify` re-runs).
+    pub fn spec(&self) -> CompressSpec {
+        CompressSpec {
+            name: self.name.clone(),
+            shapes: self.shapes.clone(),
+            rank: self.rank,
+            seed: self.seed,
+        }
+    }
+
+    /// Stored parameter count (core/weight floats + biases).
+    pub fn param_count(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                BundleOp::Tt(t) => {
+                    // canonical core sizes (padding in PackedR is layout
+                    // overhead, not parameters)
+                    let cores: usize = (0..t.layout.d())
+                        .map(|i| t.layout.core_shape(i).iter().product::<usize>())
+                        .sum();
+                    cores + t.bias.as_ref().map_or(0, Vec::len)
+                }
+                BundleOp::Dense(d) => d.w.numel() + d.bias.as_ref().map_or(0, Vec::len),
+                BundleOp::Relu => 0,
+            })
+            .sum()
+    }
+
+    /// Number of TT-compressed layers.
+    pub fn tt_layers(&self) -> usize {
+        self.ops.iter().filter(|op| matches!(op, BundleOp::Tt(_))).count()
+    }
+
+    /// Warm-start construction: stamp out a serving [`ModelEngine`]
+    /// directly from the bundle — no DSE, no decomposition, no packing;
+    /// every TT layer's executor starts with its chain plans pre-seeded.
+    ///
+    /// The target must be the machine the bundle was compiled for
+    /// (plans and packed layouts are machine-specific).
+    pub fn build_engine(&self, machine: &MachineSpec) -> Result<ModelEngine> {
+        if machine.name != self.machine {
+            return Err(Error::artifact(format!(
+                "bundle was compiled for machine '{}', cannot serve on '{}'",
+                self.machine, machine.name
+            )));
+        }
+        if self.ops.is_empty() {
+            return Err(Error::artifact("bundle has no layer ops"));
+        }
+        let mut ops = Vec::with_capacity(self.ops.len());
+        let mut width = self.in_dim;
+        for (i, op) in self.ops.iter().enumerate() {
+            match op {
+                BundleOp::Tt(t) => {
+                    if t.layout.n_total() as usize != width {
+                        return Err(Error::artifact(format!(
+                            "op {i}: TT layer expects {} inputs, model is at width {width}",
+                            t.layout.n_total()
+                        )));
+                    }
+                    width = t.layout.m_total() as usize;
+                    ops.push(LayerOp::Tt(TtFcEngine::from_parts(
+                        t.layout.clone(),
+                        t.packed.clone(),
+                        &t.plans,
+                        t.bias.clone(),
+                        machine,
+                    )?));
+                }
+                BundleOp::Dense(d) => {
+                    if d.w.dims()[1] != width {
+                        return Err(Error::artifact(format!(
+                            "op {i}: dense layer expects {} inputs, model is at width {width}",
+                            d.w.dims()[1]
+                        )));
+                    }
+                    width = d.w.dims()[0];
+                    ops.push(LayerOp::Dense(DenseFc::new(&d.w, d.bias.clone())?));
+                }
+                BundleOp::Relu => ops.push(LayerOp::Relu),
+            }
+        }
+        if width != self.out_dim {
+            return Err(Error::artifact(format!(
+                "bundle declares out_dim {} but the op chain ends at width {width}",
+                self.out_dim
+            )));
+        }
+        Ok(ModelEngine::new(self.name.clone(), ops, self.in_dim, self.out_dim))
+    }
+}
+
+/// Result summary of a successful [`verify`] run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// FC layers in the bundle.
+    pub fc_layers: usize,
+    /// How many of them are TT-compressed.
+    pub tt_layers: usize,
+    /// Size of the canonical re-encoding, in bytes.
+    pub encoded_bytes: usize,
+    /// Output values compared bitwise between the two engines.
+    pub outputs_checked: usize,
+}
+
+/// Replay check of a decoded bundle: re-run [`compress`] from the bundle's
+/// recorded `(shapes, rank, seed)`, require the fresh bundle to re-encode
+/// **byte-identically**, then push a seeded input batch through both the
+/// bundle-loaded engine and the freshly compressed one and require
+/// **bitwise-identical** outputs. `cfg` must be the DSE config used at
+/// compression time (the CLI always compresses with defaults).
+pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> Result<VerifyReport> {
+    // a machine mismatch must read as exactly that, not as a byte-level
+    // "does not match a fresh compression" corruption diagnosis
+    if machine.name != bundle.machine {
+        return Err(Error::artifact(format!(
+            "bundle was compiled for machine '{}', verifying against '{}'",
+            bundle.machine, machine.name
+        )));
+    }
+    let fresh = compress(&bundle.spec(), machine, cfg)?;
+    let loaded_bytes = super::write_bundle(bundle);
+    let fresh_bytes = super::write_bundle(&fresh);
+    if loaded_bytes != fresh_bytes {
+        return Err(Error::artifact(format!(
+            "bundle does not match a fresh compression of {} (rank {}, seed {}): \
+             {} vs {} canonical bytes{}",
+            bundle.name,
+            bundle.rank,
+            bundle.seed,
+            loaded_bytes.len(),
+            fresh_bytes.len(),
+            if loaded_bytes.len() == fresh_bytes.len() { ", content differs" } else { "" },
+        )));
+    }
+    let mut from_artifact = bundle.build_engine(machine)?;
+    let mut from_scratch = fresh.build_engine(machine)?;
+    let batch = 4usize;
+    let mut rng = Rng::new(bundle.seed ^ 0xA57F_AC75);
+    let x = Tensor::randn(vec![batch, bundle.in_dim], 1.0, &mut rng);
+    let a = from_artifact.forward(&x)?;
+    let b = from_scratch.forward(&x)?;
+    for (i, (va, vb)) in a.data().iter().zip(b.data()).enumerate() {
+        if va.to_bits() != vb.to_bits() {
+            return Err(Error::artifact(format!(
+                "artifact-served output diverges from fresh compression at element {i}: \
+                 {va} vs {vb}"
+            )));
+        }
+    }
+    Ok(VerifyReport {
+        fc_layers: bundle.shapes.len(),
+        tt_layers: bundle.tt_layers(),
+        encoded_bytes: loaded_bytes.len(),
+        outputs_checked: a.numel(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k1() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
+
+    fn lenet_spec() -> CompressSpec {
+        CompressSpec::from_zoo("lenet300", 8, 42).unwrap()
+    }
+
+    #[test]
+    fn zoo_spec_expands_and_validates() {
+        let spec = lenet_spec();
+        assert_eq!(spec.shapes, vec![(784, 300), (300, 100), (100, 10)]);
+        assert_eq!(spec.name, "LeNet300");
+        assert!(CompressSpec::from_zoo("no-such-model", 8, 0).is_err());
+        // GPT FC stacks do not chain into an MLP
+        let bad = CompressSpec {
+            name: "x".into(),
+            shapes: vec![(10, 20), (30, 5)],
+            rank: 8,
+            seed: 0,
+        };
+        assert!(bad.validate().is_err());
+        let empty = CompressSpec { name: "x".into(), shapes: vec![], rank: 8, seed: 0 };
+        assert!(empty.validate().is_err());
+    }
+
+    #[test]
+    fn compress_routes_like_the_examples_and_is_deterministic() {
+        let spec = lenet_spec();
+        let b1 = compress(&spec, &k1(), &DseConfig::default()).unwrap();
+        let b2 = compress(&spec, &k1(), &DseConfig::default()).unwrap();
+        assert_eq!(b1, b2);
+        // 784->300 and 300->100 factorize; the 10-class head stays dense
+        assert_eq!(b1.tt_layers(), 2);
+        assert_eq!(b1.ops.len(), 5); // Tt, Relu, Tt, Relu, Dense
+        assert!(matches!(b1.ops[4], BundleOp::Dense(_)));
+        assert_eq!(b1.in_dim, 784);
+        assert_eq!(b1.out_dim, 10);
+        // compression actually compresses
+        let dense_params: usize = spec
+            .shapes
+            .iter()
+            .map(|&(n, m)| (n * m + m) as usize)
+            .sum();
+        assert!(b1.param_count() < dense_params / 2);
+        // report carries one entry per FC layer
+        assert_eq!(b1.report.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn built_engine_matches_direct_construction_bitwise() {
+        let bundle = compress(&lenet_spec(), &k1(), &DseConfig::default()).unwrap();
+        let mut e1 = bundle.build_engine(&k1()).unwrap();
+        let mut e2 = bundle.build_engine(&k1()).unwrap();
+        let mut rng = Rng::new(9);
+        for batch in [1usize, 3] {
+            let x = Tensor::randn(vec![batch, 784], 1.0, &mut rng);
+            let a = e1.forward(&x).unwrap();
+            let b = e2.forward(&x).unwrap();
+            assert_eq!(a.dims(), &[batch, 10]);
+            for (va, vb) in a.data().iter().zip(b.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn build_engine_rejects_wrong_machine_and_broken_chains() {
+        let bundle = compress(&lenet_spec(), &k1(), &DseConfig::default()).unwrap();
+        let err = bundle.build_engine(&MachineSpec::host()).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+
+        let mut broken = bundle.clone();
+        broken.out_dim = 11;
+        assert!(matches!(broken.build_engine(&k1()), Err(Error::Artifact(_))));
+        let mut broken = bundle.clone();
+        broken.in_dim = 100;
+        assert!(matches!(broken.build_engine(&k1()), Err(Error::Artifact(_))));
+        let mut broken = bundle;
+        broken.ops.clear();
+        assert!(matches!(broken.build_engine(&k1()), Err(Error::Artifact(_))));
+    }
+
+    #[test]
+    fn verify_accepts_fresh_and_rejects_tampered() {
+        let cfg = DseConfig::default();
+        let bundle = compress(&lenet_spec(), &k1(), &cfg).unwrap();
+        let report = verify(&bundle, &k1(), &cfg).unwrap();
+        assert_eq!(report.fc_layers, 3);
+        assert_eq!(report.tt_layers, 2);
+        assert_eq!(report.outputs_checked, 4 * 10);
+
+        // a tampered weight is caught by the byte comparison
+        let mut tampered = bundle;
+        for op in &mut tampered.ops {
+            if let BundleOp::Tt(t) = op {
+                t.packed[0].data[0] += 1.0;
+                break;
+            }
+        }
+        assert!(matches!(verify(&tampered, &k1(), &cfg), Err(Error::Artifact(_))));
+    }
+}

@@ -1,0 +1,306 @@
+//! The `.ttrv` bundle container format: magic, version, TOC, checksums and
+//! the bounds-checked binary read/write primitives the [`super::writer`] /
+//! [`super::reader`] pair is built on.
+//!
+//! # Byte layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "TTRV"
+//! 4       4     u32 format version (currently 1)
+//! 8       4     u32 section count (<= 64)
+//! 12      4     u32 CRC-32 of the TOC bytes
+//! 16      24*c  TOC entries: { u32 id, u32 payload CRC-32,
+//!                              u64 payload offset, u64 payload length }
+//! ...           section payloads (offsets are absolute file offsets)
+//! ```
+//!
+//! # Versioning policy
+//!
+//! The version is a single monotonically increasing integer: **any** change
+//! to the container layout, a section's grammar, or a section's semantics
+//! bumps it, and the reader accepts exactly [`FORMAT_VERSION`] (older or
+//! newer files are rejected with a typed [`Error::Artifact`] naming both
+//! versions). Unknown *section ids* within a supported version are skipped,
+//! so purely additive sections do not need a bump. The pinned golden bundle
+//! in `rust/tests/data/` is the tripwire: a format change that forgets the
+//! version bump fails its load test.
+//!
+//! # CRC scheme
+//!
+//! Standard CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`, init and
+//! final XOR `0xFFFFFFFF` — the zlib/`crc32` algorithm). One checksum over
+//! the TOC bytes (header field 3) and one per section payload (TOC field 2);
+//! every checksum is verified before the payload is decoded.
+
+use crate::error::{Error, Result};
+
+/// File magic: the first four bytes of every bundle.
+pub const MAGIC: [u8; 4] = *b"TTRV";
+
+/// Current container format version (see the versioning policy above).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Upper bound on TOC entries — far above any real bundle, small enough
+/// that a corrupted count cannot drive a large allocation.
+pub const MAX_SECTIONS: u32 = 64;
+
+/// Fixed header size in bytes (magic + version + section count + TOC CRC).
+pub const HEADER_LEN: usize = 16;
+
+/// Size of one TOC entry in bytes.
+pub const TOC_ENTRY_LEN: usize = 24;
+
+/// Section id: bundle metadata (JSON — model name, dims, machine, seed).
+pub const SEC_META: u32 = 1;
+/// Section id: the layer ops (binary — cores, plans, weights, biases).
+pub const SEC_OPS: u32 = 2;
+/// Section id: the embedded DSE report (JSON — per-layer stage counts,
+/// frontier and selection).
+pub const SEC_REPORT: u32 = 3;
+
+// CRC-32 (IEEE) lookup table, built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE / zlib) of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Write primitives
+// ---------------------------------------------------------------------------
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a little-endian `u32`.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `f64`.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a slice of `f32`s, each little-endian.
+pub fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Read primitives
+// ---------------------------------------------------------------------------
+
+/// A bounds-checked forward reader over a byte slice. Every accessor
+/// returns a typed [`Error::Artifact`] instead of panicking when the input
+/// is truncated, and every element-count helper validates the count against
+/// the *remaining bytes* before any allocation happens — the decoder can be
+/// fed arbitrary bytes without panic or OOM.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Human-readable section name for error messages.
+    what: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    /// A cursor over `buf`; `what` names the section in error messages.
+    pub fn new(buf: &'a [u8], what: &'static str) -> Self {
+        Cursor { buf, pos: 0, what }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether every byte has been consumed.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn err(&self, msg: &str) -> Error {
+        Error::artifact(format!("{}: {msg} (at byte {})", self.what, self.pos))
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(self.err(&format!(
+                "truncated: need {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a little-endian `f64`.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a little-endian `u64` and convert it to `usize`, requiring it
+    /// to be at most `cap` (a semantic bound like "a tensor dimension" —
+    /// callers pass the tightest bound they know).
+    pub fn usize_capped(&mut self, cap: usize, what: &str) -> Result<usize> {
+        let v = self.u64()?;
+        if v > cap as u64 {
+            return Err(self.err(&format!("{what} = {v} exceeds bound {cap}")));
+        }
+        Ok(v as usize)
+    }
+
+    /// Read an element count that precedes `count * elem_size` bytes of
+    /// payload. Validated against the remaining bytes **before** any
+    /// allocation, so a corrupted length field cannot OOM the reader.
+    pub fn count(&mut self, elem_size: usize, what: &str) -> Result<usize> {
+        debug_assert!(elem_size > 0);
+        let v = self.u64()?;
+        let max = (self.remaining() / elem_size) as u64;
+        if v > max {
+            return Err(self.err(&format!(
+                "{what} = {v} elements x {elem_size} B exceeds the {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(v as usize)
+    }
+
+    /// Read exactly `n` little-endian `f32`s (the caller has already
+    /// validated `n` against the remaining bytes via [`Cursor::count`] or
+    /// an expected-size formula).
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| self.err("f32 count overflow"))?)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    /// A typed decode error at the current position (for semantic checks
+    /// the caller performs on already-read values).
+    pub fn invalid(&self, msg: impl AsRef<str>) -> Error {
+        self.err(msg.as_ref())
+    }
+}
+
+/// Checked `a * b` for section-size arithmetic, as a typed artifact error.
+pub fn checked_mul(a: usize, b: usize, what: &str) -> Result<usize> {
+    a.checked_mul(b)
+        .ok_or_else(|| Error::artifact(format!("{what}: size {a} x {b} overflows")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_ieee_reference_vectors() {
+        // the canonical CRC-32 check value and a couple of zlib-confirmed
+        // vectors (cross-checked against python zlib.crc32)
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"TTRV"), 0x041B_0A92);
+        assert_eq!(crc32(&[0u8; 32]), 0x190A_55AD);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_f64(&mut buf, -1.5);
+        put_f32s(&mut buf, &[1.0, -0.0, f32::MIN_POSITIVE]);
+        let mut c = Cursor::new(&buf, "test");
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(c.f64().unwrap(), -1.5);
+        let fs = c.f32s(3).unwrap();
+        assert_eq!(fs[0].to_bits(), 1.0f32.to_bits());
+        assert_eq!(fs[1].to_bits(), (-0.0f32).to_bits());
+        assert_eq!(fs[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_not_a_panic() {
+        let mut c = Cursor::new(&[1, 2, 3], "test");
+        assert!(matches!(c.u32().unwrap_err(), Error::Artifact(_)));
+        let mut c = Cursor::new(&[], "test");
+        assert!(matches!(c.u8().unwrap_err(), Error::Artifact(_)));
+    }
+
+    #[test]
+    fn oversized_count_fails_before_allocation() {
+        // a length field claiming u64::MAX elements must be rejected by
+        // comparing against the remaining bytes, never passed to Vec
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX);
+        let mut c = Cursor::new(&buf, "test");
+        let err = c.count(4, "floats").unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        assert!(err.to_string().contains("floats"));
+    }
+
+    #[test]
+    fn usize_capped_enforces_bound() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 100);
+        let mut c = Cursor::new(&buf, "test");
+        assert!(c.usize_capped(64, "d").is_err());
+        let mut c = Cursor::new(&buf, "test");
+        assert_eq!(c.usize_capped(128, "d").unwrap(), 100);
+    }
+}

@@ -1,0 +1,42 @@
+//! Compressed-model artifacts: the `.ttrv` bundle format and the
+//! compress → persist → warm-start pipeline around it.
+//!
+//! The paper's flow is offline-by-design: DSE and TT decomposition happen
+//! once, and what ships to the RISC-V target is the *compressed* model.
+//! This module is that deployment boundary. `ttrv compress` runs the
+//! six-stage DSE engine per FC layer, TT-SVD-decomposes the (seeded demo)
+//! weights, compiles and packs the kernel chain, and persists everything a
+//! server needs as one versioned, checksummed binary bundle:
+//!
+//! * magic + format version ([`mod@format`] documents the byte layout,
+//!   versioning policy and CRC scheme);
+//! * the layer ops — packed TT cores in their plan-chosen `G` layout,
+//!   compiled per-step plans, dense fallbacks, biases;
+//! * the selected [`crate::dse::TimedSolution`] per TT layer;
+//! * the full DSE report as an embedded JSON section.
+//!
+//! Serving then warm-starts from the file
+//! ([`crate::coordinator::Server::from_artifact`] /
+//! [`ModelBundle::build_engine`]): zero DSE, zero decomposition, plan
+//! caches pre-seeded — cold-start scales with model size instead of
+//! design-space size. `ttrv artifacts-check --verify` closes the loop:
+//! container + CRC validation, then a replay that requires the
+//! artifact-loaded engine to match a fresh in-process compression
+//! bitwise ([`verify`]).
+//!
+//! Module split: [`mod@format`] (container + primitives), [`writer`]
+//! (encode), [`reader`] (decode, hardened against arbitrary bytes),
+//! [`bundle`] (in-memory form + compress/build/verify pipelines).
+
+pub mod format;
+pub mod bundle;
+pub mod writer;
+pub mod reader;
+
+pub use bundle::{
+    compress, verify, BundleOp, CompressSpec, DenseLayerBundle, ModelBundle, TtLayerBundle,
+    VerifyReport,
+};
+pub use format::FORMAT_VERSION;
+pub use reader::{list_sections, read_bundle_bytes, read_bundle_file, SectionInfo};
+pub use writer::{write_bundle, write_bundle_file};

@@ -1,0 +1,554 @@
+//! `.ttrv` bundle decoder. Built to be fed arbitrary bytes: every failure
+//! path — bad magic, unsupported version, truncated file, CRC mismatch,
+//! out-of-range tag, oversized length field — returns a typed
+//! [`Error::Artifact`] and never panics or over-allocates (length fields
+//! are validated against the actual byte budget before any allocation;
+//! see [`Cursor`]). Pinned by the corruption suite in
+//! `rust/tests/artifact_suite.rs`.
+
+use std::path::Path;
+
+use crate::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
+use crate::dse::{Solution, TimedSolution};
+use crate::error::{Error, Result};
+use crate::kernels::{GLayout, PackedG, VL};
+use crate::tensor::Tensor;
+use crate::ttd::cost::{EinsumDims, EinsumKind};
+use crate::ttd::TtLayout;
+use crate::util::json::{self, Json};
+
+use super::bundle::{BundleOp, DenseLayerBundle, ModelBundle, TtLayerBundle};
+use super::format::*;
+use super::writer::{OP_DENSE, OP_RELU, OP_TT};
+
+/// Cap on any single tensor dimension and on total layer widths — far
+/// beyond real models, tight enough that size arithmetic cannot overflow.
+const DIM_CAP: usize = u32::MAX as usize;
+/// Cap on the TT configuration length `d`.
+const D_CAP: usize = 64;
+
+/// One TOC entry as validated by [`list_sections`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SectionInfo {
+    /// Section id (`SEC_META` / `SEC_OPS` / `SEC_REPORT` / future).
+    pub id: u32,
+    /// Payload length in bytes.
+    pub len: usize,
+    /// Payload CRC-32 (already verified against the payload bytes).
+    pub crc: u32,
+}
+
+/// Parse and fully validate the container: magic, version, section count,
+/// TOC CRC, per-entry bounds, duplicate ids, exact payload tiling (no
+/// unchecksummed gaps, overlaps, or trailing bytes) and every payload
+/// CRC. Returns `(id, crc, payload)` triples in TOC order.
+fn parse_container(bytes: &[u8]) -> Result<Vec<(u32, u32, &[u8])>> {
+    if bytes.len() < HEADER_LEN {
+        return Err(Error::artifact(format!(
+            "file too short for a bundle header: {} bytes < {HEADER_LEN}",
+            bytes.len()
+        )));
+    }
+    if bytes[0..4] != MAGIC {
+        return Err(Error::artifact(format!(
+            "bad magic {:02x?} (expected \"TTRV\")",
+            &bytes[0..4]
+        )));
+    }
+    let le32 = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes"));
+    let version = le32(4);
+    if version != FORMAT_VERSION {
+        return Err(Error::artifact(format!(
+            "unsupported format version {version} (this reader supports version \
+             {FORMAT_VERSION} only)"
+        )));
+    }
+    let count = le32(8);
+    if count == 0 || count > MAX_SECTIONS {
+        return Err(Error::artifact(format!(
+            "section count {count} out of range 1..={MAX_SECTIONS}"
+        )));
+    }
+    let toc_len = count as usize * TOC_ENTRY_LEN;
+    let toc_end = HEADER_LEN + toc_len;
+    if toc_end > bytes.len() {
+        return Err(Error::artifact(format!(
+            "truncated TOC: need {toc_end} bytes, file has {}",
+            bytes.len()
+        )));
+    }
+    let toc = &bytes[HEADER_LEN..toc_end];
+    let stored_toc_crc = le32(12);
+    let actual_toc_crc = crc32(toc);
+    if stored_toc_crc != actual_toc_crc {
+        return Err(Error::artifact(format!(
+            "TOC checksum mismatch: stored {stored_toc_crc:#010x}, computed {actual_toc_crc:#010x}"
+        )));
+    }
+    let mut sections = Vec::with_capacity(count as usize);
+    let mut seen = Vec::with_capacity(count as usize);
+    let mut ranges = Vec::with_capacity(count as usize);
+    for (i, entry) in toc.chunks_exact(TOC_ENTRY_LEN).enumerate() {
+        let id = u32::from_le_bytes(entry[0..4].try_into().expect("4 bytes"));
+        let crc = u32::from_le_bytes(entry[4..8].try_into().expect("4 bytes"));
+        let off = u64::from_le_bytes(entry[8..16].try_into().expect("8 bytes"));
+        let len = u64::from_le_bytes(entry[16..24].try_into().expect("8 bytes"));
+        let end = off.checked_add(len).ok_or_else(|| {
+            Error::artifact(format!("section {i} (id {id}): offset + length overflows"))
+        })?;
+        if off < toc_end as u64 || end > bytes.len() as u64 {
+            return Err(Error::artifact(format!(
+                "section {i} (id {id}): range {off}..{end} outside payload area \
+                 {toc_end}..{}",
+                bytes.len()
+            )));
+        }
+        if seen.contains(&id) {
+            return Err(Error::artifact(format!("duplicate section id {id}")));
+        }
+        seen.push(id);
+        ranges.push((off, end));
+        let payload = &bytes[off as usize..end as usize];
+        let actual = crc32(payload);
+        if actual != crc {
+            return Err(Error::artifact(format!(
+                "section {i} (id {id}): checksum mismatch: stored {crc:#010x}, \
+                 computed {actual:#010x}"
+            )));
+        }
+        sections.push((id, crc, payload));
+    }
+    // no unchecksummed bytes anywhere: the sections must tile the payload
+    // area exactly — a gap, overlap, or trailing tail would carry bytes no
+    // CRC covers
+    ranges.sort_unstable();
+    let mut cursor = toc_end as u64;
+    for &(off, end) in &ranges {
+        if off != cursor {
+            return Err(Error::artifact(format!(
+                "unchecksummed gap or overlapping sections at byte {cursor} (next section \
+                 starts at {off})"
+            )));
+        }
+        cursor = end;
+    }
+    if cursor != bytes.len() as u64 {
+        return Err(Error::artifact(format!(
+            "{} trailing bytes after the last section",
+            bytes.len() as u64 - cursor
+        )));
+    }
+    Ok(sections)
+}
+
+/// Validate the container and return its section table (ids, sizes, CRCs —
+/// all checksums verified). The cheap half of `artifacts-check --verify`.
+pub fn list_sections(bytes: &[u8]) -> Result<Vec<SectionInfo>> {
+    Ok(parse_container(bytes)?
+        .into_iter()
+        .map(|(id, crc, payload)| SectionInfo { id, len: payload.len(), crc })
+        .collect())
+}
+
+fn dim(c: &mut Cursor<'_>, what: &str) -> Result<u64> {
+    Ok(c.usize_capped(DIM_CAP, what)? as u64)
+}
+
+fn decode_layout(c: &mut Cursor<'_>) -> Result<TtLayout> {
+    let d = c.u32()? as usize;
+    if d == 0 || d > D_CAP {
+        return Err(c.invalid(format!("layout d = {d} out of range 1..={D_CAP}")));
+    }
+    let mut m_shape = Vec::with_capacity(d);
+    let mut n_shape = Vec::with_capacity(d);
+    let mut ranks = Vec::with_capacity(d + 1);
+    for _ in 0..d {
+        m_shape.push(dim(c, "layout m factor")?);
+    }
+    for _ in 0..d {
+        n_shape.push(dim(c, "layout n factor")?);
+    }
+    for _ in 0..=d {
+        ranks.push(dim(c, "layout rank")?);
+    }
+    // cap the layer totals before TtLayout computes products
+    for (shape, what) in [(&m_shape, "M"), (&n_shape, "N")] {
+        let mut total = 1u64;
+        for &f in shape.iter() {
+            total = total
+                .checked_mul(f)
+                .filter(|&t| t <= DIM_CAP as u64)
+                .ok_or_else(|| c.invalid(format!("layout {what} total exceeds {DIM_CAP}")))?;
+        }
+    }
+    TtLayout::new(m_shape, n_shape, ranks)
+        .map_err(|e| c.invalid(format!("invalid layout: {e}")))
+}
+
+fn decode_bias(c: &mut Cursor<'_>, m_total: usize) -> Result<Option<Vec<f32>>> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => {
+            let len = c.count(4, "bias")?;
+            if len != m_total {
+                return Err(c.invalid(format!("bias length {len} != layer width {m_total}")));
+            }
+            Ok(Some(c.f32s(len)?))
+        }
+        t => Err(c.invalid(format!("bias flag {t} not 0/1"))),
+    }
+}
+
+fn decode_plan(c: &mut Cursor<'_>) -> Result<OptimizationPlan> {
+    let kind = match c.u8()? {
+        0 => EinsumKind::First,
+        1 => EinsumKind::Middle,
+        2 => EinsumKind::Final,
+        t => return Err(c.invalid(format!("einsum kind tag {t}"))),
+    };
+    let m = c.usize_capped(DIM_CAP, "plan m")?;
+    let b = c.usize_capped(DIM_CAP, "plan b")?;
+    let n = c.usize_capped(DIM_CAP, "plan n")?;
+    let r = c.usize_capped(DIM_CAP, "plan r")?;
+    let k = c.usize_capped(DIM_CAP, "plan k")?;
+    let pack_g = match c.u8()? {
+        0 => false,
+        1 => true,
+        t => return Err(c.invalid(format!("pack_g flag {t}"))),
+    };
+    let vector_loop = match c.u8()? {
+        0 => VectorLoop::R,
+        1 => VectorLoop::K,
+        2 => VectorLoop::None,
+        t => return Err(c.invalid(format!("vector loop tag {t}"))),
+    };
+    let vl = c.usize_capped(1024, "plan vl")?;
+    let rm = c.usize_capped(65536, "rb rm")?;
+    let rb = c.usize_capped(65536, "rb rb")?;
+    let rr = c.usize_capped(65536, "rb rr")?;
+    let rk = c.usize_capped(65536, "rb rk")?;
+    let order = match c.u8()? {
+        0 => LoopOrder::Mbrk,
+        1 => LoopOrder::Bmrk,
+        t => return Err(c.invalid(format!("loop order tag {t}"))),
+    };
+    let has_btl = match c.u8()? {
+        0 => false,
+        1 => true,
+        t => return Err(c.invalid(format!("btl flag {t}"))),
+    };
+    let btl_raw = c.usize_capped(DIM_CAP, "tile btl")?;
+    let threads = c.u32()?;
+    if threads > 65536 {
+        return Err(c.invalid(format!("plan threads {threads} out of range")));
+    }
+    let ls_estimate = c.u64()?;
+    Ok(OptimizationPlan {
+        dims: EinsumDims { kind, m, b, n, r, k },
+        pack_g,
+        vector_loop,
+        vl,
+        rb: RbFactors { rm, rb, rr, rk },
+        tile: TilePlan { order, btl: has_btl.then_some(btl_raw) },
+        threads,
+        ls_estimate,
+    })
+}
+
+fn decode_packed(c: &mut Cursor<'_>) -> Result<PackedG> {
+    let layout = match c.u8()? {
+        0 => GLayout::Canonical,
+        1 => GLayout::PackedR,
+        2 => GLayout::PackedK,
+        t => return Err(c.invalid(format!("packed G layout tag {t}"))),
+    };
+    let r = c.usize_capped(DIM_CAP, "core r")?;
+    let n = c.usize_capped(DIM_CAP, "core n")?;
+    let m = c.usize_capped(DIM_CAP, "core m")?;
+    let k = c.usize_capped(DIM_CAP, "core k")?;
+    let r_pad = c.usize_capped(DIM_CAP, "core r_pad")?;
+    let expected = match layout {
+        GLayout::Canonical | GLayout::PackedK => {
+            if r_pad != r {
+                return Err(c.invalid(format!("r_pad {r_pad} != r {r} for unpadded layout")));
+            }
+            checked_mul(checked_mul(r, n, "core")?, checked_mul(m, k, "core")?, "core")?
+        }
+        GLayout::PackedR => {
+            if r == 0 || r_pad != r.div_ceil(VL) * VL {
+                return Err(c.invalid(format!(
+                    "PackedR r_pad {r_pad} is not r {r} rounded up to a multiple of {VL}"
+                )));
+            }
+            checked_mul(checked_mul(m, r_pad, "core")?, checked_mul(n, k, "core")?, "core")?
+        }
+    };
+    let data_len = c.count(4, "packed core data")?;
+    if data_len != expected {
+        return Err(c.invalid(format!(
+            "packed core holds {data_len} floats, layout requires {expected}"
+        )));
+    }
+    let data = c.f32s(data_len)?;
+    Ok(PackedG { layout, dims: (r, n, m, k), r_pad, data })
+}
+
+fn decode_ops(payload: &[u8]) -> Result<Vec<BundleOp>> {
+    let mut c = Cursor::new(payload, "OPS section");
+    let op_count = c.u32()? as usize;
+    if op_count > c.remaining() {
+        // every op costs at least its 1-byte tag
+        return Err(c.invalid(format!(
+            "op count {op_count} exceeds the {} remaining bytes",
+            c.remaining()
+        )));
+    }
+    let mut ops = Vec::with_capacity(op_count);
+    for _ in 0..op_count {
+        let op = match c.u8()? {
+            OP_TT => {
+                let layout = decode_layout(&mut c)?;
+                // bound every chain slab size up front so engine
+                // construction (`einsum_chain`) cannot overflow on huge
+                // crafted interior ranks
+                let mut cur = layout.n_total();
+                for t in (0..layout.d()).rev() {
+                    let [r_prev, n_t, m_t, r_t] = layout.core_shape(t);
+                    let b_t = cur / (n_t as u64 * r_t as u64);
+                    cur = (m_t as u64)
+                        .checked_mul(b_t)
+                        .and_then(|v| v.checked_mul(r_prev as u64))
+                        .filter(|&v| v <= DIM_CAP as u64)
+                        .ok_or_else(|| {
+                            c.invalid(format!("TT chain slab at step {t} exceeds {DIM_CAP}"))
+                        })?;
+                }
+                let sel_layout = decode_layout(&mut c)?;
+                let rank = c.u64()?;
+                let params = c.u64()?;
+                let flops = c.u64()?;
+                let time_s = c.f64()?;
+                let speedup = c.f64()?;
+                let bias = decode_bias(&mut c, layout.m_total() as usize)?;
+                let steps = c.u32()? as usize;
+                if steps != layout.d() {
+                    return Err(c.invalid(format!(
+                        "TT layer has {steps} chain steps but layout d = {}",
+                        layout.d()
+                    )));
+                }
+                let mut plans = Vec::with_capacity(steps);
+                let mut packed = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    plans.push(decode_plan(&mut c)?);
+                    packed.push(decode_packed(&mut c)?);
+                }
+                BundleOp::Tt(TtLayerBundle {
+                    layout,
+                    packed,
+                    plans,
+                    bias,
+                    selected: TimedSolution {
+                        solution: Solution { layout: sel_layout, rank, params, flops },
+                        time_s,
+                        speedup,
+                    },
+                })
+            }
+            OP_DENSE => {
+                let m = c.usize_capped(DIM_CAP, "dense m")?;
+                let n = c.usize_capped(DIM_CAP, "dense n")?;
+                let need = checked_mul(m, n, "dense weights")?;
+                let w = Tensor::from_vec(vec![m, n], c.f32s(need)?)
+                    .map_err(|e| c.invalid(format!("dense weights: {e}")))?;
+                let bias = decode_bias(&mut c, m)?;
+                BundleOp::Dense(DenseLayerBundle { w, bias })
+            }
+            OP_RELU => BundleOp::Relu,
+            t => return Err(c.invalid(format!("unknown op tag {t}"))),
+        };
+        ops.push(op);
+    }
+    if !c.is_empty() {
+        return Err(c.invalid(format!("{} trailing bytes after the last op", c.remaining())));
+    }
+    Ok(ops)
+}
+
+fn meta_err(msg: impl Into<String>) -> Error {
+    Error::artifact(format!("META section: {}", msg.into()))
+}
+
+fn decode_meta(payload: &[u8]) -> Result<ModelBundle> {
+    let text = std::str::from_utf8(payload).map_err(|_| meta_err("not valid UTF-8"))?;
+    let doc = json::parse(text).map_err(|e| meta_err(format!("bad JSON: {e}")))?;
+    if doc.get("format").and_then(Json::as_str) != Some("ttrv-bundle") {
+        return Err(meta_err("missing format marker 'ttrv-bundle'"));
+    }
+    let str_field = |key: &str| {
+        doc.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| meta_err(format!("missing string field '{key}'")))
+    };
+    let dim_field = |key: &str| {
+        doc.get(key)
+            .and_then(Json::as_u64)
+            .filter(|&v| v <= DIM_CAP as u64)
+            .ok_or_else(|| meta_err(format!("missing/invalid integer field '{key}'")))
+    };
+    let shapes_json = doc
+        .get("shapes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| meta_err("missing 'shapes' array"))?;
+    let mut shapes = Vec::with_capacity(shapes_json.len());
+    for s in shapes_json {
+        let pair = s.as_arr().ok_or_else(|| meta_err("shape entry is not a [n, m] pair"))?;
+        let get = |i: usize| {
+            pair.get(i)
+                .and_then(Json::as_u64)
+                .filter(|&v| v >= 1 && v <= DIM_CAP as u64)
+                .ok_or_else(|| meta_err("shape entry is not a [n, m] pair of dims"))
+        };
+        if pair.len() != 2 {
+            return Err(meta_err("shape entry is not a [n, m] pair"));
+        }
+        shapes.push((get(0)?, get(1)?));
+    }
+    Ok(ModelBundle {
+        name: str_field("model")?,
+        machine: str_field("machine")?,
+        in_dim: dim_field("in_dim")? as usize,
+        out_dim: dim_field("out_dim")? as usize,
+        rank: dim_field("rank")?,
+        seed: doc
+            .get("seed")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| meta_err("missing/invalid integer field 'seed'"))?,
+        shapes,
+        ops: Vec::new(),
+        report: Json::Null,
+    })
+}
+
+/// Decode a bundle from its byte form, validating the container, every
+/// checksum and every section grammar.
+pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
+    let sections = parse_container(bytes)?;
+    let find = |id: u32, name: &str| {
+        sections
+            .iter()
+            .find(|(sid, _, _)| *sid == id)
+            .map(|(_, _, payload)| *payload)
+            .ok_or_else(|| Error::artifact(format!("missing required section {name} (id {id})")))
+    };
+    let mut bundle = decode_meta(find(SEC_META, "META")?)?;
+    bundle.ops = decode_ops(find(SEC_OPS, "OPS")?)?;
+    let report_text = std::str::from_utf8(find(SEC_REPORT, "REPORT")?)
+        .map_err(|_| Error::artifact("REPORT section: not valid UTF-8"))?;
+    bundle.report = json::parse(report_text)
+        .map_err(|e| Error::artifact(format!("REPORT section: bad JSON: {e}")))?;
+    Ok(bundle)
+}
+
+/// Read and decode a bundle file.
+pub fn read_bundle_file(path: impl AsRef<Path>) -> Result<ModelBundle> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).map_err(|e| {
+        Error::artifact(format!("cannot read bundle {}: {e}", path.display()))
+    })?;
+    read_bundle_bytes(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DseConfig;
+    use crate::machine::MachineSpec;
+
+    fn sample_bundle() -> ModelBundle {
+        let spec = super::super::CompressSpec::from_zoo("lenet300", 8, 5).unwrap();
+        super::super::compress(&spec, &MachineSpec::spacemit_k1(), &DseConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_restores_every_field() {
+        let bundle = sample_bundle();
+        let bytes = super::super::write_bundle(&bundle);
+        let back = read_bundle_bytes(&bytes).unwrap();
+        assert_eq!(back, bundle);
+        // canonical encoding: re-encoding the decoded bundle is stable
+        assert_eq!(super::super::write_bundle(&back), bytes);
+    }
+
+    #[test]
+    fn section_listing_reports_all_three() {
+        let bytes = super::super::write_bundle(&sample_bundle());
+        let secs = list_sections(&bytes).unwrap();
+        assert_eq!(
+            secs.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![SEC_META, SEC_OPS, SEC_REPORT]
+        );
+        assert!(secs.iter().all(|s| s.len > 0));
+    }
+
+    #[test]
+    fn unknown_extra_section_is_skipped() {
+        // additive sections must not require a version bump: append a
+        // fourth section with an unknown id and re-point the TOC
+        let bundle = sample_bundle();
+        let mut bytes = Vec::new();
+        {
+            // rebuild the container by hand with an extra section
+            let sections = parse_container(&super::super::write_bundle(&bundle))
+                .unwrap()
+                .iter()
+                .map(|(id, _, p)| (*id, p.to_vec()))
+                .chain(std::iter::once((99u32, b"future".to_vec())))
+                .collect::<Vec<_>>();
+            let mut toc = Vec::new();
+            let mut offset = (HEADER_LEN + sections.len() * TOC_ENTRY_LEN) as u64;
+            for (id, payload) in &sections {
+                put_u32(&mut toc, *id);
+                put_u32(&mut toc, crc32(payload));
+                put_u64(&mut toc, offset);
+                put_u64(&mut toc, payload.len() as u64);
+                offset += payload.len() as u64;
+            }
+            bytes.extend_from_slice(&MAGIC);
+            put_u32(&mut bytes, FORMAT_VERSION);
+            put_u32(&mut bytes, sections.len() as u32);
+            put_u32(&mut bytes, crc32(&toc));
+            bytes.extend_from_slice(&toc);
+            for (_, payload) in &sections {
+                bytes.extend_from_slice(payload);
+            }
+        }
+        let back = read_bundle_bytes(&bytes).unwrap();
+        assert_eq!(back, bundle);
+    }
+
+    #[test]
+    fn missing_required_section_is_typed() {
+        let bundle = sample_bundle();
+        let full = super::super::write_bundle(&bundle);
+        // rebuild with only META
+        let sections = parse_container(&full).unwrap();
+        let meta = sections[0].2.to_vec();
+        let mut toc = Vec::new();
+        put_u32(&mut toc, SEC_META);
+        put_u32(&mut toc, crc32(&meta));
+        put_u64(&mut toc, (HEADER_LEN + TOC_ENTRY_LEN) as u64);
+        put_u64(&mut toc, meta.len() as u64);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        put_u32(&mut bytes, FORMAT_VERSION);
+        put_u32(&mut bytes, 1);
+        put_u32(&mut bytes, crc32(&toc));
+        bytes.extend_from_slice(&toc);
+        bytes.extend_from_slice(&meta);
+        let err = read_bundle_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        assert!(err.to_string().contains("OPS"));
+    }
+}

@@ -1,0 +1,242 @@
+//! `.ttrv` bundle encoder. The encoding is **canonical**: a given
+//! [`ModelBundle`] always serializes to the same bytes (sections in fixed
+//! order, sorted JSON keys, little-endian scalars), which is what lets
+//! [`super::bundle::verify`] compare a decoded bundle against a fresh
+//! compression byte-for-byte.
+
+use std::path::Path;
+
+use crate::compiler::plan::{LoopOrder, OptimizationPlan, VectorLoop};
+use crate::error::Result;
+use crate::kernels::{GLayout, PackedG};
+use crate::ttd::cost::EinsumKind;
+use crate::ttd::TtLayout;
+use crate::util::json::{self, Json};
+
+use super::bundle::{BundleOp, ModelBundle};
+use super::format::*;
+
+/// Op tags in the OPS section.
+pub(super) const OP_TT: u8 = 0;
+/// Dense FC op tag.
+pub(super) const OP_DENSE: u8 = 1;
+/// ReLU op tag.
+pub(super) const OP_RELU: u8 = 2;
+
+fn encode_layout(out: &mut Vec<u8>, layout: &TtLayout) {
+    put_u32(out, layout.d() as u32);
+    for &v in layout.m_shape() {
+        put_u64(out, v);
+    }
+    for &v in layout.n_shape() {
+        put_u64(out, v);
+    }
+    for &v in layout.ranks() {
+        put_u64(out, v);
+    }
+}
+
+fn encode_bias(out: &mut Vec<u8>, bias: &Option<Vec<f32>>) {
+    match bias {
+        None => put_u8(out, 0),
+        Some(b) => {
+            put_u8(out, 1);
+            put_u64(out, b.len() as u64);
+            put_f32s(out, b);
+        }
+    }
+}
+
+pub(super) fn encode_plan(out: &mut Vec<u8>, plan: &OptimizationPlan) {
+    let d = &plan.dims;
+    put_u8(out, match d.kind {
+        EinsumKind::First => 0,
+        EinsumKind::Middle => 1,
+        EinsumKind::Final => 2,
+    });
+    for v in [d.m, d.b, d.n, d.r, d.k] {
+        put_u64(out, v as u64);
+    }
+    put_u8(out, plan.pack_g as u8);
+    put_u8(out, match plan.vector_loop {
+        VectorLoop::R => 0,
+        VectorLoop::K => 1,
+        VectorLoop::None => 2,
+    });
+    put_u64(out, plan.vl as u64);
+    for v in [plan.rb.rm, plan.rb.rb, plan.rb.rr, plan.rb.rk] {
+        put_u64(out, v as u64);
+    }
+    put_u8(out, match plan.tile.order {
+        LoopOrder::Mbrk => 0,
+        LoopOrder::Bmrk => 1,
+    });
+    put_u8(out, plan.tile.btl.is_some() as u8);
+    put_u64(out, plan.tile.btl.unwrap_or(0) as u64);
+    put_u32(out, plan.threads);
+    put_u64(out, plan.ls_estimate);
+}
+
+pub(super) fn encode_packed(out: &mut Vec<u8>, g: &PackedG) {
+    put_u8(out, match g.layout {
+        GLayout::Canonical => 0,
+        GLayout::PackedR => 1,
+        GLayout::PackedK => 2,
+    });
+    let (r, n, m, k) = g.dims;
+    for v in [r, n, m, k, g.r_pad] {
+        put_u64(out, v as u64);
+    }
+    put_u64(out, g.data.len() as u64);
+    put_f32s(out, &g.data);
+}
+
+fn encode_ops(bundle: &ModelBundle) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, bundle.ops.len() as u32);
+    for op in &bundle.ops {
+        match op {
+            BundleOp::Tt(t) => {
+                // a hand-built bundle with mismatched lengths must fail
+                // here, loudly, not decode-time with a confusing
+                // "truncated" error
+                assert_eq!(
+                    t.plans.len(),
+                    t.packed.len(),
+                    "TtLayerBundle has {} plans but {} packed cores",
+                    t.plans.len(),
+                    t.packed.len()
+                );
+                put_u8(&mut out, OP_TT);
+                encode_layout(&mut out, &t.layout);
+                encode_layout(&mut out, t.selected.layout());
+                put_u64(&mut out, t.selected.solution.rank);
+                put_u64(&mut out, t.selected.solution.params);
+                put_u64(&mut out, t.selected.solution.flops);
+                put_f64(&mut out, t.selected.time_s);
+                put_f64(&mut out, t.selected.speedup);
+                encode_bias(&mut out, &t.bias);
+                put_u32(&mut out, t.plans.len() as u32);
+                for (plan, packed) in t.plans.iter().zip(&t.packed) {
+                    encode_plan(&mut out, plan);
+                    encode_packed(&mut out, packed);
+                }
+            }
+            BundleOp::Dense(dl) => {
+                put_u8(&mut out, OP_DENSE);
+                let dims = dl.w.dims();
+                put_u64(&mut out, dims[0] as u64);
+                put_u64(&mut out, dims[1] as u64);
+                put_f32s(&mut out, dl.w.data());
+                encode_bias(&mut out, &dl.bias);
+            }
+            BundleOp::Relu => put_u8(&mut out, OP_RELU),
+        }
+    }
+    out
+}
+
+fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
+    let shapes = Json::Arr(
+        bundle
+            .shapes
+            .iter()
+            .map(|&(n, m)| Json::Arr(vec![Json::from(n as usize), Json::from(m as usize)]))
+            .collect(),
+    );
+    let meta = Json::obj(vec![
+        ("format", Json::from("ttrv-bundle")),
+        ("model", Json::from(bundle.name.as_str())),
+        ("machine", Json::from(bundle.machine.as_str())),
+        ("in_dim", Json::from(bundle.in_dim)),
+        ("out_dim", Json::from(bundle.out_dim)),
+        ("rank", Json::from(bundle.rank as usize)),
+        ("seed", Json::from(bundle.seed as usize)),
+        ("shapes", shapes),
+    ]);
+    json::to_string(&meta).into_bytes()
+}
+
+/// Serialize a bundle to its canonical byte form.
+///
+/// # Panics
+///
+/// If a hand-built `TtLayerBundle` has differing `plans`/`packed` lengths
+/// (an invariant every constructor in this crate maintains).
+pub fn write_bundle(bundle: &ModelBundle) -> Vec<u8> {
+    let sections: Vec<(u32, Vec<u8>)> = vec![
+        (SEC_META, encode_meta(bundle)),
+        (SEC_OPS, encode_ops(bundle)),
+        (SEC_REPORT, json::to_string(&bundle.report).into_bytes()),
+    ];
+    let mut toc = Vec::with_capacity(sections.len() * TOC_ENTRY_LEN);
+    let mut offset = (HEADER_LEN + sections.len() * TOC_ENTRY_LEN) as u64;
+    for (id, payload) in &sections {
+        put_u32(&mut toc, *id);
+        put_u32(&mut toc, crc32(payload));
+        put_u64(&mut toc, offset);
+        put_u64(&mut toc, payload.len() as u64);
+        offset += payload.len() as u64;
+    }
+    let mut out = Vec::with_capacity(offset as usize);
+    out.extend_from_slice(&MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u32(&mut out, sections.len() as u32);
+    put_u32(&mut out, crc32(&toc));
+    out.extend_from_slice(&toc);
+    for (_, payload) in &sections {
+        out.extend_from_slice(payload);
+    }
+    out
+}
+
+/// Serialize a bundle and write it to `path`.
+pub fn write_bundle_file(path: impl AsRef<Path>, bundle: &ModelBundle) -> Result<()> {
+    Ok(std::fs::write(path, write_bundle(bundle))?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Round-trip coverage lives in `reader::tests` and
+    // `rust/tests/artifact_suite.rs`; here we pin container-level facts.
+
+    fn tiny_bundle() -> ModelBundle {
+        ModelBundle {
+            name: "tiny".into(),
+            machine: "SpacemiT-K1".into(),
+            in_dim: 4,
+            out_dim: 2,
+            rank: 8,
+            seed: 1,
+            shapes: vec![(4, 2)],
+            ops: vec![BundleOp::Dense(super::super::bundle::DenseLayerBundle {
+                w: crate::tensor::Tensor::zeros(vec![2, 4]),
+                bias: None,
+            })],
+            report: Json::Arr(vec![]),
+        }
+    }
+
+    #[test]
+    fn header_layout_is_stable() {
+        let bytes = write_bundle(&tiny_bundle());
+        assert_eq!(&bytes[0..4], b"TTRV");
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), FORMAT_VERSION);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 3);
+        let toc = &bytes[HEADER_LEN..HEADER_LEN + 3 * TOC_ENTRY_LEN];
+        assert_eq!(u32::from_le_bytes(bytes[12..16].try_into().unwrap()), crc32(toc));
+        // first TOC entry is META at the first post-TOC byte
+        assert_eq!(u32::from_le_bytes(toc[0..4].try_into().unwrap()), SEC_META);
+        let meta_off = u64::from_le_bytes(toc[8..16].try_into().unwrap()) as usize;
+        assert_eq!(meta_off, HEADER_LEN + 3 * TOC_ENTRY_LEN);
+        assert_eq!(bytes[meta_off], b'{');
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let b = tiny_bundle();
+        assert_eq!(write_bundle(&b), write_bundle(&b));
+    }
+}

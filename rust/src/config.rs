@@ -306,6 +306,67 @@ impl ServeConfig {
     }
 }
 
+/// A model-spec file for `ttrv compress`: names the FC stack to compress
+/// when it is not a zoo model. Grammar:
+///
+/// ```toml
+/// [model]
+/// name = "my-mlp"
+/// shapes = "784:300, 300:100, 100:10"   # n_in:m_out per FC layer
+/// rank = 8                              # optional, CLI flag wins if absent
+/// seed = 42                             # optional
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpecConfig {
+    /// Model display name.
+    pub name: String,
+    /// FC layer shapes `(n_in, m_out)` in model order.
+    pub shapes: Vec<(u64, u64)>,
+    /// Requested uniform TT rank, if the file pins one.
+    pub rank: Option<u64>,
+    /// Demo-weight seed, if the file pins one.
+    pub seed: Option<u64>,
+}
+
+/// Load a compress model-spec file ([`ModelSpecConfig`]); every shape entry
+/// must be `n:m` with both dims >= 1.
+pub fn load_model_spec(text: &str) -> Result<ModelSpecConfig> {
+    let t = Toml::parse(text)?;
+    let name = t
+        .get_str("model", "name")
+        .ok_or_else(|| Error::config("model spec needs model.name"))?
+        .to_string();
+    let raw = t
+        .get_str("model", "shapes")
+        .ok_or_else(|| Error::config("model spec needs model.shapes (\"n:m, n:m, ...\")"))?;
+    let mut shapes = Vec::new();
+    for entry in raw.split(',') {
+        let entry = entry.trim();
+        let (n, m) = entry
+            .split_once(':')
+            .ok_or_else(|| Error::config(format!("model.shapes entry '{entry}' is not n:m")))?;
+        let parse = |s: &str| {
+            s.trim()
+                .parse::<u64>()
+                .ok()
+                .filter(|&v| v >= 1)
+                .ok_or_else(|| {
+                    Error::config(format!("model.shapes entry '{entry}': bad dimension '{s}'"))
+                })
+        };
+        shapes.push((parse(n)?, parse(m)?));
+    }
+    if shapes.is_empty() {
+        return Err(Error::config("model.shapes lists no layers"));
+    }
+    let rank = non_negative(&t, "model", "rank")?;
+    if rank == Some(0) {
+        return Err(Error::config("model.rank must be >= 1"));
+    }
+    let seed = non_negative(&t, "model", "seed")?;
+    Ok(ModelSpecConfig { name, shapes, rank, seed })
+}
+
 /// A non-negative integer field (negative values would otherwise wrap
 /// through the unsigned cast and dodge validation).
 fn non_negative(t: &Toml, section: &str, key: &str) -> Result<Option<u64>> {
@@ -498,6 +559,44 @@ mod tests {
         let bad = DseConfig { selection_policy: "fastest".into(), ..Default::default() };
         assert!(bad.policy().is_err());
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn model_spec_loads_and_validates() {
+        let spec = load_model_spec(
+            r#"
+            [model]
+            name = "my-mlp"
+            shapes = "784:300, 300:100, 100:10"
+            rank = 8
+            seed = 42
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "my-mlp");
+        assert_eq!(spec.shapes, vec![(784, 300), (300, 100), (100, 10)]);
+        assert_eq!(spec.rank, Some(8));
+        assert_eq!(spec.seed, Some(42));
+        // optional knobs may be absent
+        let spec = load_model_spec("[model]\nname = \"x\"\nshapes = \"64:64\"").unwrap();
+        assert_eq!(spec.rank, None);
+        assert_eq!(spec.seed, None);
+    }
+
+    #[test]
+    fn model_spec_rejects_malformed() {
+        for text in [
+            "",                                                // no section
+            "[model]\nshapes = \"10:10\"",                     // no name
+            "[model]\nname = \"x\"",                           // no shapes
+            "[model]\nname = \"x\"\nshapes = \"10x10\"",       // not n:m
+            "[model]\nname = \"x\"\nshapes = \"10:0\"",        // zero dim
+            "[model]\nname = \"x\"\nshapes = \"10:ten\"",      // non-numeric
+            "[model]\nname = \"x\"\nshapes = \"10:10\"\nrank = 0",
+            "[model]\nname = \"x\"\nshapes = \"10:10\"\nrank = -2",
+        ] {
+            assert!(load_model_spec(text).is_err(), "accepted: {text}");
+        }
     }
 
     #[test]

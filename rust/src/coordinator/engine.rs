@@ -102,6 +102,66 @@ impl TtFcEngine {
         })
     }
 
+    /// Warm-start construction from artifact parts ([`crate::artifact`]):
+    /// pre-packed cores and their compiled batch-1 plans, both in
+    /// processing order (t = d-1 .. 0). No compiler invocation and no
+    /// packing happens here — the executor's plan cache is pre-seeded with
+    /// `plans`, so the first request runs straight on the warm path.
+    ///
+    /// The parts are validated against the layout's einsum chain (step
+    /// count, per-step plan dims, per-step core dims, bias width); a
+    /// mismatch is a typed [`Error::Artifact`]. Layout consistency between
+    /// each packed buffer and its plan (e.g. Canonical data under a
+    /// pack-requiring plan) is enforced at execution time by the kernel
+    /// engine, exactly as for every other execution path.
+    pub fn from_parts(
+        layout: crate::ttd::TtLayout,
+        packed: Vec<PackedG>,
+        plans: &[crate::compiler::OptimizationPlan],
+        bias: Option<Vec<f32>>,
+        machine: &MachineSpec,
+    ) -> Result<TtFcEngine> {
+        let chain = einsum_chain(&layout, 1);
+        if packed.len() != chain.len() || plans.len() != chain.len() {
+            return Err(Error::artifact(format!(
+                "TT layer {} needs {} chain steps, got {} cores / {} plans",
+                layout.describe(),
+                chain.len(),
+                packed.len(),
+                plans.len()
+            )));
+        }
+        for (step, dims) in chain.iter().enumerate() {
+            if plans[step].dims != *dims {
+                return Err(Error::artifact(format!(
+                    "step {step}: stored plan is for {:?}, chain expects {:?}",
+                    plans[step].dims, dims
+                )));
+            }
+            if packed[step].dims != (dims.r, dims.n, dims.m, dims.k) {
+                return Err(Error::artifact(format!(
+                    "step {step}: stored core dims {:?} do not match chain {:?}",
+                    packed[step].dims, dims
+                )));
+            }
+        }
+        if let Some(b) = &bias {
+            if b.len() != layout.m_total() as usize {
+                return Err(Error::artifact(format!(
+                    "bias length {} != layer width {}",
+                    b.len(),
+                    layout.m_total()
+                )));
+            }
+        }
+        let mut executor = Executor::new(machine);
+        executor.preseed(plans);
+        Ok(TtFcEngine {
+            shared: Arc::new(TtFcShared { layout, packed, bias }),
+            executor,
+        })
+    }
+
     /// Enable measured register-blocking autotuning on plan-cache misses
     /// (EXPERIMENTS.md §Perf iteration 2). One-time cost per batch size.
     /// Worker clones inherit the tuning mode.
@@ -378,6 +438,53 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn from_parts_matches_new_bitwise_and_validates() {
+        let mut rng = Rng::new(105);
+        let layout = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        let mut tt = random_cores(&layout, &mut rng);
+        tt.bias = Some(vec![0.25; 300]);
+        let machine = MachineSpec::spacemit_k1();
+        let mut engine = TtFcEngine::new(&tt, &machine).unwrap();
+        // rebuild the parts exactly as a bundle stores them
+        let mut ex = Executor::new(&machine);
+        let chain = einsum_chain(&layout, 1);
+        let mut plans = Vec::new();
+        let mut packed = Vec::new();
+        for (step, dims) in chain.iter().enumerate() {
+            let plan = ex.plan(dims).unwrap();
+            packed.push(crate::kernels::pack(&tt.cores[layout.d() - 1 - step], &plan).unwrap());
+            plans.push(plan);
+        }
+        let mut warm =
+            TtFcEngine::from_parts(layout.clone(), packed.clone(), &plans, tt.bias.clone(), &machine)
+                .unwrap();
+        // plan cache pre-seeded: no compile needed for the batch-1 chain
+        assert_eq!(warm.executor().cached_plans(), 2);
+        for batch in [1usize, 4] {
+            let x = Tensor::randn(vec![batch, 784], 1.0, &mut rng);
+            let a = engine.forward(&x).unwrap();
+            let b = warm.forward(&x).unwrap();
+            for (va, vb) in a.data().iter().zip(b.data()) {
+                assert_eq!(va.to_bits(), vb.to_bits(), "warm-start engine drifted");
+            }
+        }
+        // validation: wrong counts / bias width are typed artifact errors
+        let err = TtFcEngine::from_parts(
+            layout.clone(),
+            packed[..1].to_vec(),
+            &plans,
+            None,
+            &machine,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        let err =
+            TtFcEngine::from_parts(layout, packed, &plans, Some(vec![0.0; 10]), &machine)
+                .unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
     }
 
     #[test]

@@ -42,18 +42,34 @@ pub fn route_layer(
     machine: &MachineSpec,
     cfg: &DseConfig,
 ) -> Result<Route> {
+    Ok(route_layer_explored(m_out, n_in, rank, machine, cfg)?.0)
+}
+
+/// [`route_layer`], additionally returning the full engine output the
+/// decision was made from — `None` when the layer was too small to explore
+/// at all. The artifact compressor ([`crate::artifact::compress`]) embeds
+/// this as the bundle's DSE-report section instead of re-running the
+/// engine.
+pub fn route_layer_explored(
+    m_out: u64,
+    n_in: u64,
+    rank: u64,
+    machine: &MachineSpec,
+    cfg: &DseConfig,
+) -> Result<(Route, Option<dse::TimedExplored>)> {
     if m_out < MIN_FC_DIM || n_in < MIN_FC_DIM {
-        return Ok(Route::Dense);
+        return Ok((Route::Dense, None));
     }
     let policy = cfg.policy()?;
     let explored = dse::explore_timed(m_out, n_in, machine, cfg);
     // qualification happens entirely in the engine: any selectable solution
     // already beat dense on FLOPs + params (stage 4) and on modeled time
     // (stage 6), so selection failure is the only reason to stay dense
-    Ok(match dse::select_solution(&explored, rank, policy) {
+    let route = match dse::select_solution(&explored, rank, policy) {
         Ok(sol) => Route::Tt(sol),
         Err(_) => Route::Dense,
-    })
+    };
+    Ok((route, Some(explored)))
 }
 
 /// Route every FC layer of a model architecture.
@@ -111,6 +127,23 @@ mod tests {
         assert!(routes[0].is_tt());
         assert!(routes[1].is_tt());
         assert!(!routes[2].is_tt()); // 100 -> 10 too small
+    }
+
+    #[test]
+    fn explored_variant_returns_the_engine_output() {
+        let cfg = DseConfig::default();
+        // tiny layer: dense without exploring
+        let (r, e) = route_layer_explored(10, 100, 8, &k1(), &cfg).unwrap();
+        assert!(!r.is_tt());
+        assert!(e.is_none());
+        // real layer: the returned exploration is the decision substrate
+        let (r, e) = route_layer_explored(300, 784, 8, &k1(), &cfg).unwrap();
+        let e = e.expect("explored");
+        match r {
+            Route::Tt(sol) => assert!(e.timed.contains(&sol)),
+            Route::Dense => panic!("expected TT"),
+        }
+        assert!(!e.frontier.is_empty());
     }
 
     #[test]

@@ -97,6 +97,23 @@ impl Server {
         Server { queue, workers, shards, rejected: AtomicU64::new(0), in_dim }
     }
 
+    /// Warm-start a server from a compressed-model `.ttrv` bundle
+    /// ([`crate::artifact`]): decode + checksum-validate the file, build
+    /// the engine with pre-seeded plan caches (no DSE, no decomposition,
+    /// no compilation), and spawn the pool — cold-start cost scales with
+    /// model size, not design-space size. The bundle must have been
+    /// compressed for `machine`.
+    pub fn from_artifact(
+        path: impl AsRef<std::path::Path>,
+        machine: &crate::machine::MachineSpec,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        cfg.validate()?;
+        let bundle = crate::artifact::read_bundle_file(path)?;
+        let engine = bundle.build_engine(machine)?;
+        Ok(Server::start(engine, cfg))
+    }
+
     /// Number of workers in the pool.
     pub fn workers(&self) -> usize {
         self.workers.len()

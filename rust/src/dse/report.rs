@@ -5,9 +5,11 @@
 
 use crate::config::DseConfig;
 use crate::models::ModelArch;
+use crate::util::json::Json;
 use crate::util::sci;
 
 use super::pipeline::{explore, StageCounts};
+use super::timed::TimedSolution;
 
 /// One table row.
 #[derive(Debug, Clone)]
@@ -43,6 +45,23 @@ pub fn rows_for_model(model: &ModelArch, cfg: &DseConfig) -> Vec<DsRow> {
             counts: explore(s.m, s.n, cfg).counts,
         })
         .collect()
+}
+
+/// JSON form of one [`TimedSolution`] — the shared vocabulary of the CLI's
+/// `dse --json` report and the DSE section embedded in `.ttrv` bundles
+/// ([`crate::artifact`]).
+pub fn timed_solution_json(s: &TimedSolution) -> Json {
+    let shape = |vals: &[u64]| Json::Arr(vals.iter().map(|&v| Json::from(v as usize)).collect());
+    Json::obj(vec![
+        ("m_shape", shape(s.layout().m_shape())),
+        ("n_shape", shape(s.layout().n_shape())),
+        ("rank", Json::from(s.solution.rank as usize)),
+        ("d", Json::from(s.layout().d())),
+        ("params", Json::from(s.solution.params as usize)),
+        ("flops", Json::from(s.solution.flops as usize)),
+        ("modeled_time_s", Json::from(s.time_s)),
+        ("speedup_vs_dense", Json::from(s.speedup)),
+    ])
 }
 
 /// Render rows in the paper's table format.
@@ -92,6 +111,22 @@ mod tests {
         let rows = rows_for_model(&m, &DseConfig::default());
         // [784,300] and [300,100]; [100,10] skipped (m = 10 < 100)
         assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn timed_solution_json_carries_every_field() {
+        use crate::machine::MachineSpec;
+        let e = crate::dse::explore_timed(300, 784, &MachineSpec::spacemit_k1(), &DseConfig::default());
+        let j = timed_solution_json(&e.frontier[0]);
+        for key in [
+            "m_shape", "n_shape", "rank", "d", "params", "flops",
+            "modeled_time_s", "speedup_vs_dense",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        // round-trips through the writer/parser
+        let text = crate::util::json::to_string(&j);
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
     }
 
     #[test]

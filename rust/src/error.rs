@@ -30,6 +30,11 @@ pub enum Error {
     Runtime(String),
     /// Serving coordinator failure (queue closed, engine missing, ...).
     Serve(String),
+    /// Compressed-model artifact failure: malformed or corrupted `.ttrv`
+    /// bundle (bad magic/version, CRC mismatch, truncated section, invalid
+    /// layer encoding). A typed variant so the decoder surface can promise
+    /// "typed error, never panic" on arbitrary input bytes.
+    Artifact(String),
     /// Admission control refused a request: the serving queue is at
     /// capacity. A typed variant so callers can distinguish backpressure
     /// (retry / shed load) from hard serving failures without string
@@ -51,6 +56,7 @@ impl fmt::Display for Error {
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::QueueFull => write!(f, "serve error: queue full (admission control)"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -106,6 +112,10 @@ impl Error {
     pub fn serve(msg: impl Into<String>) -> Self {
         Error::Serve(msg.into())
     }
+    /// An [`Error::Artifact`] with the given message.
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +126,7 @@ mod tests {
     fn display_is_prefixed() {
         assert!(Error::shape("bad").to_string().starts_with("shape error"));
         assert!(Error::runtime("x").to_string().contains("runtime"));
+        assert!(Error::artifact("crc").to_string().starts_with("artifact error"));
     }
 
     #[test]

@@ -149,6 +149,17 @@ impl Executor {
         self.plan_cache.insert(plan.dims, plan);
     }
 
+    /// Pre-seed the plan cache with previously compiled plans — the
+    /// artifact warm-start path ([`crate::artifact`]): a bundle stores the
+    /// chain's plans next to its packed cores, so an engine built from it
+    /// serves its first request without invoking the compiler at all.
+    /// Later cache misses (new batch sizes) still compile normally.
+    pub fn preseed(&mut self, plans: &[OptimizationPlan]) {
+        for plan in plans {
+            self.plan_cache.insert(plan.dims, *plan);
+        }
+    }
+
     /// Pack a canonical core as the (cached) plan for `dims` requires.
     pub fn pack(&mut self, g: &Tensor, dims: &EinsumDims) -> Result<PackedG> {
         let plan = self.plan(dims)?;
@@ -381,6 +392,21 @@ mod tests {
         let err = ex.execute_with_scratch(&dims, &pg, &x.data()[..10]);
         assert!(err.is_err());
         assert_eq!(ex.scratch.out_slice(), &good[..], "scratch clobbered by failed call");
+    }
+
+    #[test]
+    fn preseed_fills_the_cache_without_compiling() {
+        let machine = MachineSpec::spacemit_k1();
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 24, b: 1, n: 5, r: 8, k: 8 };
+        let mut source = Executor::new(&machine);
+        let plan = source.plan(&dims).unwrap();
+        let mut warm = Executor::new(&machine);
+        assert_eq!(warm.cached_plans(), 0);
+        warm.preseed(&[plan]);
+        assert_eq!(warm.cached_plans(), 1);
+        // the cached plan is returned verbatim
+        assert_eq!(warm.plan(&dims).unwrap(), plan);
+        assert_eq!(warm.cached_plans(), 1);
     }
 
     #[test]

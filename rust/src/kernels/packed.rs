@@ -28,7 +28,7 @@ pub enum GLayout {
 }
 
 /// A core repacked for the kernel engine.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PackedG {
     /// Which packed layout `data` holds.
     pub layout: GLayout,

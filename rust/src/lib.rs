@@ -10,8 +10,10 @@
 //!   exploration engine ([`dse`]), the analytical compiler for T3F Einsum
 //!   kernels ([`compiler`], [`machine`]), executable optimized kernels and
 //!   baselines ([`kernels`], [`baselines`]), a serving coordinator
-//!   ([`coordinator`]) and a PJRT runtime ([`runtime`]) that executes
-//!   AOT-lowered JAX/Pallas artifacts.
+//!   ([`coordinator`]), a compressed-model artifact layer ([`artifact`]:
+//!   `ttrv compress` → versioned `.ttrv` bundles → warm-start serving) and
+//!   a PJRT runtime ([`runtime`]) that executes AOT-lowered JAX/Pallas
+//!   artifacts.
 //! * **L2** — `python/compile/model.py`: TT FC layers + MLP in JAX.
 //! * **L1** — `python/compile/kernels/tt_einsum.py`: the Pallas hot-spot
 //!   kernel, validated against `ref.py`.
@@ -52,5 +54,6 @@ pub mod bench;
 pub mod config;
 pub mod runtime;
 pub mod coordinator;
+pub mod artifact;
 
 pub use error::{Error, Result};

@@ -9,12 +9,22 @@
 //!                           --top K --measure H --json)
 //!   plan --m .. --b ..     show the compiler plan for one Einsum instance
 //!   kernel-bench           measure ours vs IREE-like vs Pluto-like (Figs 12-14)
-//!   serve-demo             start the serving coordinator on a TT LeNet300,
+//!   compress               run DSE + TT-SVD over a model's FC stack and
+//!                          write a versioned `.ttrv` bundle
+//!                          (--model <zoo-name|spec.toml> --out model.ttrv
+//!                           --rank R --seed S)
+//!   serve-demo             start the serving coordinator on a TT LeNet300
+//!                          (or warm-start it from --artifact model.ttrv),
 //!                          fire synthetic load, print metrics
 //!                          (--workers N --max-batch B --wait-us T --queue-cap Q)
-//!   artifacts-check        load + execute the PJRT artifacts (needs `make artifacts`)
+//!   artifacts-check        --verify model.ttrv: validate a `.ttrv` bundle
+//!                          (CRCs + bitwise replay against a fresh
+//!                          compression); without --verify, load + execute
+//!                          the PJRT artifacts (needs `make artifacts`)
 //!
 //! Arg parsing is hand-rolled (clap unavailable offline): `--key value`.
+//! A flag value that fails to parse is a hard CLI error naming the flag —
+//! never a silent fallback to the default.
 
 use std::collections::HashMap;
 
@@ -24,7 +34,7 @@ use ttrv::compiler::{cb_suite, compile};
 use ttrv::config::{DseConfig, ServeConfig};
 use ttrv::coordinator::{InferenceRequest, LayerOp, ModelEngine, Server, TtFcEngine};
 use ttrv::dse;
-use ttrv::dse::report::{format_rows, rows_for_model};
+use ttrv::dse::report::{format_rows, rows_for_model, timed_solution_json};
 use ttrv::kernels::Executor;
 use ttrv::machine::MachineSpec;
 use ttrv::util::json::Json;
@@ -53,8 +63,23 @@ fn parse_args(args: &[String]) -> HashMap<String, String> {
     map
 }
 
-fn get<T: std::str::FromStr>(args: &HashMap<String, String>, key: &str, default: T) -> T {
-    args.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+/// Typed flag lookup: absent -> `default`; present but unparsable -> a hard
+/// CLI error naming the flag and the offending value (a silently swallowed
+/// `--workers abc` used to serve with the default worker count).
+fn get<T: std::str::FromStr>(
+    args: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> ttrv::Result<T> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| {
+            ttrv::Error::config(format!(
+                "flag --{key}: cannot parse value '{v}' as {}",
+                std::any::type_name::<T>()
+            ))
+        }),
+    }
 }
 
 fn main() {
@@ -66,6 +91,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "plan" => cmd_plan(&args),
         "kernel-bench" => cmd_kernel_bench(&args),
+        "compress" => cmd_compress(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
         "help" | "--help" | "-h" => {
@@ -88,7 +114,15 @@ fn print_help() {
     println!(
         "ttrv — TT decomposition DSE + compiler optimization for RISC-V\n\
          usage: ttrv <command> [--key value ...]\n\
-         commands: tables | dse | plan | kernel-bench | serve-demo | artifacts-check\n\
+         commands: tables | dse | plan | kernel-bench | compress | serve-demo | artifacts-check\n\
+         \n\
+         compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R] [--seed S]\n\
+         \u{20}        DSE-route + TT-SVD a model's FC stack into a versioned .ttrv bundle\n\
+         serve-demo [--artifact model.ttrv] [--workers N] [--max-batch B]\n\
+         \u{20}        serve a TT LeNet300 (warm-started from the bundle when given)\n\
+         artifacts-check --verify model.ttrv\n\
+         \u{20}        validate bundle CRCs and replay it bitwise against a fresh compression\n\
+         \n\
          see `cargo bench` for the per-figure reproduction harnesses"
     );
 }
@@ -114,31 +148,14 @@ fn cmd_tables(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
-fn shape_json(shape: &[u64]) -> Json {
-    Json::Arr(shape.iter().map(|&v| Json::from(v as usize)).collect())
-}
-
-fn timed_solution_json(s: &ttrv::dse::TimedSolution) -> Json {
-    Json::obj(vec![
-        ("m_shape", shape_json(s.layout().m_shape())),
-        ("n_shape", shape_json(s.layout().n_shape())),
-        ("rank", Json::from(s.solution.rank as usize)),
-        ("d", Json::from(s.layout().d())),
-        ("params", Json::from(s.solution.params as usize)),
-        ("flops", Json::from(s.solution.flops as usize)),
-        ("modeled_time_s", Json::from(s.time_s)),
-        ("speedup_vs_dense", Json::from(s.speedup)),
-    ])
-}
-
 fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
-    let n: u64 = get(args, "n", 784);
-    let m: u64 = get(args, "m", 300);
-    let rank: u64 = get(args, "rank", 8);
-    let top: usize = get(args, "top", 10);
+    let n: u64 = get(args, "n", 784)?;
+    let m: u64 = get(args, "m", 300)?;
+    let rank: u64 = get(args, "rank", 8)?;
+    let top: usize = get(args, "top", 10)?;
     let base = DseConfig::default();
     let cfg = DseConfig {
-        dse_workers: get(args, "workers", base.dse_workers),
+        dse_workers: get(args, "workers", base.dse_workers)?,
         selection_policy: args
             .get("policy")
             .cloned()
@@ -271,11 +288,11 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
 fn cmd_plan(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let dims = EinsumDims {
         kind: EinsumKind::Middle,
-        m: get(args, "m", 64),
-        b: get(args, "b", 64),
-        n: get(args, "n", 8),
-        r: get(args, "r", 8),
-        k: get(args, "k", 8),
+        m: get(args, "m", 64)?,
+        b: get(args, "b", 64)?,
+        n: get(args, "n", 8)?,
+        r: get(args, "r", 8)?,
+        k: get(args, "k", 8)?,
     };
     let machine = MachineSpec::spacemit_k1();
     let plan = compile(&dims, &machine)?;
@@ -324,45 +341,133 @@ fn cmd_kernel_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
+fn cmd_compress(args: &HashMap<String, String>) -> ttrv::Result<()> {
+    let model = args
+        .get("model")
+        .ok_or_else(|| ttrv::Error::config("compress needs --model <zoo-name|spec.toml>"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| ttrv::Error::config("compress needs --out <file.ttrv>"))?;
+    let rank: u64 = get(args, "rank", 8)?;
+    let seed: u64 = get(args, "seed", 42)?;
+    // anything path-shaped is a spec file — a typo'd path must surface as
+    // a missing file, never fall through to an "unknown zoo model" error
+    let looks_like_path = model.ends_with(".toml") || model.contains(['/', '\\']);
+    let spec = if looks_like_path || std::path::Path::new(model).is_file() {
+        // precedence: an explicitly passed CLI flag > the spec file's
+        // pins > the CLI defaults — an explicit --rank must never be
+        // silently overridden (the same silent-flag class get() rejects)
+        let text = std::fs::read_to_string(model).map_err(|e| {
+            ttrv::Error::config(format!("cannot read model spec file '{model}': {e}"))
+        })?;
+        let file = ttrv::config::load_model_spec(&text)?;
+        let spec = ttrv::artifact::CompressSpec {
+            name: file.name,
+            shapes: file.shapes,
+            rank: if args.contains_key("rank") { rank } else { file.rank.unwrap_or(rank) },
+            seed: if args.contains_key("seed") { seed } else { file.seed.unwrap_or(seed) },
+        };
+        spec.validate()?;
+        spec
+    } else {
+        ttrv::artifact::CompressSpec::from_zoo(model, rank, seed)?
+    };
+    let machine = MachineSpec::spacemit_k1();
+    let cfg = DseConfig::default();
+    println!(
+        "compressing {} ({} FC layers) for {} at rank {}, seed {}",
+        spec.name,
+        spec.shapes.len(),
+        machine.name,
+        spec.rank,
+        spec.seed
+    );
+    let t0 = std::time::Instant::now();
+    let bundle = ttrv::artifact::compress(&spec, &machine, &cfg)?;
+    let dense_params: usize = spec.shapes.iter().map(|&(n, m)| (n * m + m) as usize).sum();
+    for entry in bundle.report.as_arr().unwrap_or(&[]) {
+        let n = entry.get("n").and_then(Json::as_usize).unwrap_or(0);
+        let m = entry.get("m").and_then(Json::as_usize).unwrap_or(0);
+        match entry.get("selected") {
+            Some(Json::Null) | None => println!("  [{n} -> {m}] dense (no qualified solution)"),
+            Some(sel) => println!(
+                "  [{n} -> {m}] TT d={} rank={} ({:.1}x modeled speedup)",
+                sel.get("d").and_then(Json::as_usize).unwrap_or(0),
+                sel.get("rank").and_then(Json::as_usize).unwrap_or(0),
+                sel.get("speedup_vs_dense").and_then(Json::as_f64).unwrap_or(0.0),
+            ),
+        }
+    }
+    ttrv::artifact::write_bundle_file(out, &bundle)?;
+    let bytes = std::fs::metadata(out)?.len();
+    println!(
+        "wrote {out}: {} bytes, {}/{} layers TT, {} params (dense stack: {dense_params}, {:.1}x smaller), {:.2}s",
+        bytes,
+        bundle.tt_layers(),
+        spec.shapes.len(),
+        bundle.param_count(),
+        dense_params as f64 / bundle.param_count() as f64,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
-    let requests: usize = get(args, "requests", 200);
+    let requests: usize = get(args, "requests", 200)?;
     let serve_cfg = ServeConfig {
-        max_batch: get(args, "max-batch", ServeConfig::default().max_batch),
-        max_wait_us: get(args, "wait-us", ServeConfig::default().max_wait_us),
-        queue_cap: get(args, "queue-cap", ServeConfig::default().queue_cap),
-        workers: get(args, "workers", ServeConfig::default().workers),
+        max_batch: get(args, "max-batch", ServeConfig::default().max_batch)?,
+        max_wait_us: get(args, "wait-us", ServeConfig::default().max_wait_us)?,
+        queue_cap: get(args, "queue-cap", ServeConfig::default().queue_cap)?,
+        workers: get(args, "workers", ServeConfig::default().workers)?,
     };
     serve_cfg.validate()?;
     let machine = MachineSpec::spacemit_k1();
-    let cfg = DseConfig::default();
     let mut rng = Rng::new(1);
 
-    // Build a TT LeNet300 from DSE-routed layers.
-    let mut ops = Vec::new();
-    let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
-    for (i, &(n, m)) in shapes.iter().enumerate() {
-        match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg)? {
-            ttrv::coordinator::Route::Tt(sol) => {
-                let mut tt = random_cores(sol.layout(), &mut rng);
-                tt.bias = Some(vec![0.0; m as usize]);
-                println!(
-                    "layer {i}: TT {} (modeled {:.1}x vs dense)",
-                    sol.layout().describe(),
-                    sol.speedup
-                );
-                ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine)?));
+    let (engine, in_dim) = if let Some(path) = args.get("artifact") {
+        // warm start: no DSE, no decomposition — the bundle carries packed
+        // cores and compiled plans
+        let t0 = std::time::Instant::now();
+        let bundle = ttrv::artifact::read_bundle_file(path)?;
+        let engine = bundle.build_engine(&machine)?;
+        println!(
+            "warm-started {} from {path} in {:.1} ms ({} FC layers, {} TT)",
+            bundle.name,
+            t0.elapsed().as_secs_f64() * 1e3,
+            bundle.shapes.len(),
+            bundle.tt_layers()
+        );
+        let in_dim = bundle.in_dim;
+        (engine, in_dim)
+    } else {
+        // cold start: DSE-route and decompose a TT LeNet300 in process
+        let cfg = DseConfig::default();
+        let mut ops = Vec::new();
+        let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
+        for (i, &(n, m)) in shapes.iter().enumerate() {
+            match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg)? {
+                ttrv::coordinator::Route::Tt(sol) => {
+                    let mut tt = random_cores(sol.layout(), &mut rng);
+                    tt.bias = Some(vec![0.0; m as usize]);
+                    println!(
+                        "layer {i}: TT {} (modeled {:.1}x vs dense)",
+                        sol.layout().describe(),
+                        sol.speedup
+                    );
+                    ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine)?));
+                }
+                ttrv::coordinator::Route::Dense => {
+                    println!("layer {i}: dense [{n} -> {m}]");
+                    let w = Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng);
+                    ops.push(LayerOp::Dense(ttrv::baselines::dense::DenseFc::new(&w, None)?));
+                }
             }
-            ttrv::coordinator::Route::Dense => {
-                println!("layer {i}: dense [{n} -> {m}]");
-                let w = Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng);
-                ops.push(LayerOp::Dense(ttrv::baselines::dense::DenseFc::new(&w, None)?));
+            if i + 1 < shapes.len() {
+                ops.push(LayerOp::Relu);
             }
         }
-        if i + 1 < shapes.len() {
-            ops.push(LayerOp::Relu);
-        }
-    }
-    let engine = ModelEngine::new("lenet300-tt", ops, 784, 10);
+        (ModelEngine::new("lenet300-tt", ops, 784, 10), 784)
+    };
     println!(
         "serving with {} worker(s), max_batch {}, wait {}us, queue {}",
         serve_cfg.workers, serve_cfg.max_batch, serve_cfg.max_wait_us, serve_cfg.queue_cap
@@ -373,7 +478,7 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let rxs: Vec<_> = (0..requests)
         .map(|id| {
             server
-                .submit(InferenceRequest { id: id as u64, input: rng.normal_vec(784, 1.0) })
+                .submit(InferenceRequest { id: id as u64, input: rng.normal_vec(in_dim, 1.0) })
                 .expect("queue should admit")
         })
         .collect();
@@ -388,6 +493,9 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
 }
 
 fn cmd_artifacts_check(args: &HashMap<String, String>) -> ttrv::Result<()> {
+    if let Some(path) = args.get("verify") {
+        return cmd_verify_bundle(path);
+    }
     let dir = args
         .get("dir")
         .cloned()
@@ -404,5 +512,83 @@ fn cmd_artifacts_check(args: &HashMap<String, String>) -> ttrv::Result<()> {
     assert_eq!(out[0].dims(), &[1, 300]);
     assert!(out[0].data().iter().all(|&v| (v - 0.5).abs() < 1e-6));
     println!("dense_fc artifact executes correctly (bias-only check passed)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_of(argv: &[&str]) -> HashMap<String, String> {
+        parse_args(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn get_returns_default_when_flag_absent() {
+        let args = args_of(&["--other", "1"]);
+        assert_eq!(get(&args, "workers", 3usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn get_parses_present_values() {
+        let args = args_of(&["--workers", "8", "--rank", "16"]);
+        assert_eq!(get(&args, "workers", 1usize).unwrap(), 8);
+        assert_eq!(get(&args, "rank", 8u64).unwrap(), 16);
+    }
+
+    #[test]
+    fn malformed_value_is_a_hard_error_naming_the_flag() {
+        // the old behavior silently served with the default worker count
+        let args = args_of(&["--workers", "abc"]);
+        let err = get(&args, "workers", 1usize).unwrap_err().to_string();
+        assert!(err.contains("--workers"), "{err}");
+        assert!(err.contains("abc"), "{err}");
+        // a value-less numeric flag (captured as "true") errors too
+        let args = args_of(&["--workers", "--json"]);
+        assert!(get(&args, "workers", 1usize).is_err());
+        // negative where unsigned expected
+        let args = args_of(&["--requests", "-5"]);
+        assert!(get(&args, "requests", 10usize).is_err());
+    }
+
+    #[test]
+    fn parse_args_pairs_and_flags() {
+        let args = args_of(&["--n", "784", "--json", "--m", "300"]);
+        assert_eq!(args.get("n").map(String::as_str), Some("784"));
+        assert_eq!(args.get("m").map(String::as_str), Some("300"));
+        assert_eq!(args.get("json").map(String::as_str), Some("true"));
+    }
+}
+
+/// `artifacts-check --verify model.ttrv`: container + CRC validation, then
+/// the bitwise replay against a fresh in-process compression.
+fn cmd_verify_bundle(path: &str) -> ttrv::Result<()> {
+    if path == "true" {
+        return Err(ttrv::Error::config("--verify needs a bundle path: --verify model.ttrv"));
+    }
+    let bytes = std::fs::read(path)
+        .map_err(|e| ttrv::Error::artifact(format!("cannot read bundle {path}: {e}")))?;
+    let sections = ttrv::artifact::list_sections(&bytes)?;
+    println!("{path}: format v{}, {} bytes, CRCs ok", ttrv::artifact::FORMAT_VERSION, bytes.len());
+    for s in &sections {
+        println!("  section {:>2}: {:>9} bytes  crc32 {:#010x}", s.id, s.len, s.crc);
+    }
+    let bundle = ttrv::artifact::read_bundle_bytes(&bytes)?;
+    println!(
+        "decoded {}: {} FC layers ({} TT), rank {}, seed {}, machine {}",
+        bundle.name,
+        bundle.shapes.len(),
+        bundle.tt_layers(),
+        bundle.rank,
+        bundle.seed,
+        bundle.machine
+    );
+    let machine = MachineSpec::spacemit_k1();
+    let report = ttrv::artifact::verify(&bundle, &machine, &DseConfig::default())?;
+    println!(
+        "verify ok: re-compression is byte-identical ({} bytes) and a seeded batch \
+         replays bitwise through both engines ({} outputs checked)",
+        report.encoded_bytes, report.outputs_checked
+    );
     Ok(())
 }

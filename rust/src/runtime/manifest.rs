@@ -1,9 +1,27 @@
 //! `artifacts/manifest.json` parsing (written by python/compile/aot.py).
+//!
+//! This is the **AOT** side of the repo's two artifact stories, and the two
+//! are deliberately split along the paper's deployment boundary:
+//!
+//! * this manifest + its HLO-text files describe *runtime-compilable
+//!   programs* for the PJRT backend (`make artifacts`; JSON because the
+//!   Python AOT pipeline writes it, format tag [`MANIFEST_FORMAT`]);
+//! * [`crate::artifact`] `.ttrv` bundles carry the *already-compressed
+//!   serving model* — packed TT cores, compiled plans, checksums — in a
+//!   versioned binary container, written and read by Rust only.
+//!
+//! Both are validated load-time artifacts looked up by name; a PJRT bundle
+//! section could later embed this manifest verbatim, which is why the
+//! format tag lives in one place.
 
 use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::util::json::{self, Json};
+
+/// The only artifact encoding the AOT manifest declares today (HLO text;
+/// see the AOT recipe note in `python/compile/aot.py`).
+pub const MANIFEST_FORMAT: &str = "hlo-text";
 
 /// Shape + dtype of one executable argument.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -49,8 +67,10 @@ impl ArtifactManifest {
     /// Parse a manifest document.
     pub fn parse(text: &str) -> Result<Self> {
         let doc = json::parse(text)?;
-        if doc.get("format").and_then(Json::as_str) != Some("hlo-text") {
-            return Err(Error::runtime("manifest format must be 'hlo-text'"));
+        if doc.get("format").and_then(Json::as_str) != Some(MANIFEST_FORMAT) {
+            return Err(Error::runtime(format!(
+                "manifest format must be '{MANIFEST_FORMAT}'"
+            )));
         }
         if doc.get("return_tuple").and_then(Json::as_bool) != Some(true) {
             return Err(Error::runtime("manifest must declare return_tuple=true"));

@@ -12,7 +12,7 @@
 
 mod manifest;
 
-pub use manifest::{ArgSpec, ArtifactManifest, ArtifactMeta};
+pub use manifest::{ArgSpec, ArtifactManifest, ArtifactMeta, MANIFEST_FORMAT};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;

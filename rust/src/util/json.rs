@@ -46,6 +46,13 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The numeric value as u64, if it is a non-negative integer exactly
+    /// representable in an f64 (<= 2^53 — artifact metadata fields).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|n| n.fract() == 0.0 && (0.0..=9_007_199_254_740_992.0).contains(n))
+            .map(|n| n as u64)
+    }
     /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
@@ -411,6 +418,16 @@ mod tests {
         assert_eq!(parse(" true ").unwrap(), Json::Bool(true));
         assert_eq!(parse("-12.5e2").unwrap(), Json::Num(-1250.0));
         assert_eq!(parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn u64_accessor_accepts_integers_only() {
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1e300).as_u64(), None);
+        assert_eq!(Json::Str("42".into()).as_u64(), None);
     }
 
     #[test]
