@@ -4,9 +4,16 @@
 //!    policy);
 //! 2. TT-SVD a weight matrix into that layout;
 //! 3. compile the einsum chain for the SpacemiT-K1 machine model;
-//! 4. run the optimized kernel engine and check it against the dense layer.
+//! 4. run the optimized kernel engine and check it against the dense layer;
+//! 5. measured autotuning: re-rank RB/thread candidates per chain einsum
+//!    on this host ([`ttrv::kernels::Executor::tune_chain`]).
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! For the full measured-performance subsystem — the pinned kernel sweep
+//! and the serving sweep, written as schema-versioned BENCH_kernels.json /
+//! BENCH_serve.json — run `ttrv bench` (or `ttrv bench --quick`); see
+//! docs/ARCHITECTURE.md "Measurement & autotuning".
 
 use ttrv::config::{DseConfig, SelectionPolicy};
 use ttrv::coordinator::TtFcEngine;
@@ -92,6 +99,27 @@ fn main() -> ttrv::Result<()> {
             plan.threads
         );
     }
+    // 5. measured autotuning: the analytic plans above are the compiler's
+    // best guess; tune_chain measures the solver's RB/thread candidates on
+    // the real packed cores and caches the winners (output bits unchanged)
+    let mut ex = ttrv::kernels::Executor::new(&machine);
+    let chain = cost::einsum_chain(&tt.layout, 1);
+    let packed: Vec<ttrv::kernels::PackedG> = chain
+        .iter()
+        .enumerate()
+        .map(|(step, dims)| ex.pack(&tt.cores[tt.layout.d() - 1 - step], dims))
+        .collect::<ttrv::Result<_>>()?;
+    let floor = ttrv::util::timer::MeasureFloor::from_env();
+    let tuned = ex.tune_chain(&tt.layout, 1, &packed, &floor)?;
+    println!("\nmeasured-autotuned plans (batch 1, this host):");
+    for (dims, plan) in chain.iter().zip(&tuned) {
+        println!(
+            "  {:?} m={} b={}: rb=({},{},{},{}), {} threads",
+            dims.kind, dims.m, dims.b,
+            plan.rb.rm, plan.rb.rb, plan.rb.rr, plan.rb.rk, plan.threads
+        );
+    }
+    println!("(persist these with `ttrv compress --tune`; sweep everything with `ttrv bench`)");
     println!("\nquickstart OK");
     Ok(())
 }

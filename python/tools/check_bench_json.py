@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Schema sanity check for the `ttrv bench` trajectory files
+(BENCH_kernels.json / BENCH_serve.json), run by CI after the bench step so
+a malformed report fails the build instead of silently polluting the perf
+trajectory.
+
+Checks per file: top-level shape, schema name/version, non-empty results,
+required keys per result row, and that every reachable number is finite
+(the Rust writer encodes non-finite as null; a null in a *required numeric
+field that must be positive* is an error here).
+
+Usage: check_bench_json.py BENCH_kernels.json BENCH_serve.json ...
+Exit status: 0 = all files valid, 1 = any violation (printed to stderr).
+"""
+
+import json
+import math
+import sys
+
+SCHEMA_VERSION = 1
+
+MEASUREMENT_KEYS = ("seconds", "min_seconds", "mad", "iters", "gflops")
+
+KERNEL_ROW_KEYS = (
+    "id", "kind", "m", "b", "n", "r", "k", "flops",
+    "ours", "iree_like", "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
+)
+
+SERVE_ROW_KEYS = (
+    "workers", "max_batch", "requests", "elapsed_s", "req_per_s",
+    "p50_us", "p99_us", "mean_batch",
+)
+
+
+class Violation(Exception):
+    pass
+
+
+def need(cond, msg):
+    if not cond:
+        raise Violation(msg)
+
+
+def is_finite_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def check_measurement(m, path):
+    need(isinstance(m, dict), f"{path}: not an object")
+    for key in MEASUREMENT_KEYS:
+        need(key in m, f"{path}: missing '{key}'")
+        need(is_finite_number(m[key]), f"{path}.{key}: not a finite number: {m[key]!r}")
+    need(m["iters"] >= 1, f"{path}.iters: must be >= 1")
+    need(m["seconds"] >= 0, f"{path}.seconds: negative")
+
+
+def check_kernels(doc):
+    need(doc.get("schema") == "ttrv-bench-kernels", "schema != ttrv-bench-kernels")
+    for row in doc["results"]:
+        rid = row.get("id", "<missing id>")
+        for key in KERNEL_ROW_KEYS:
+            need(key in row, f"results[{rid}]: missing '{key}'")
+        need(row["kind"] in ("first", "middle", "final"), f"results[{rid}]: bad kind")
+        for key in ("m", "b", "n", "r", "k", "flops"):
+            need(is_finite_number(row[key]) and row[key] >= 1, f"results[{rid}].{key}: bad dim")
+        for impl in ("ours", "iree_like", "pluto_like"):
+            check_measurement(row[impl], f"results[{rid}].{impl}")
+        for key in ("speedup_vs_iree", "speedup_vs_pluto"):
+            v = row[key]
+            # null = flagged-degenerate measurement; a number must be finite > 0
+            need(v is None or (is_finite_number(v) and v > 0), f"results[{rid}].{key}: {v!r}")
+
+
+def check_serve(doc):
+    need(doc.get("schema") == "ttrv-bench-serve", "schema != ttrv-bench-serve")
+    need(isinstance(doc.get("model"), str) and doc["model"], "missing model name")
+    for i, row in enumerate(doc["results"]):
+        for key in SERVE_ROW_KEYS:
+            need(key in row, f"results[{i}]: missing '{key}'")
+            need(is_finite_number(row[key]), f"results[{i}].{key}: not finite: {row[key]!r}")
+        need(row["workers"] >= 1 and row["max_batch"] >= 1, f"results[{i}]: bad config")
+        need(row["requests"] >= 1, f"results[{i}]: no requests")
+        need(row["req_per_s"] > 0, f"results[{i}]: non-positive throughput")
+        need(row["p99_us"] >= row["p50_us"], f"results[{i}]: p99 < p50")
+
+
+def check_file(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    need(isinstance(doc, dict), "top level is not an object")
+    need(doc.get("schema_version") == SCHEMA_VERSION,
+         f"schema_version {doc.get('schema_version')!r} != {SCHEMA_VERSION}")
+    need(isinstance(doc.get("quick"), bool), "missing/bad 'quick' flag")
+    need(isinstance(doc.get("results"), list) and doc["results"], "empty results")
+    need(is_finite_number(doc.get("host_threads")) and doc["host_threads"] >= 1,
+         "bad host_threads")
+    schema = doc.get("schema")
+    if schema == "ttrv-bench-kernels":
+        check_kernels(doc)
+    elif schema == "ttrv-bench-serve":
+        check_serve(doc)
+    else:
+        raise Violation(f"unknown schema {schema!r}")
+    return len(doc["results"])
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    failed = False
+    for path in argv[1:]:
+        try:
+            n = check_file(path)
+            print(f"{path}: ok ({n} result rows)")
+        except (Violation, OSError, json.JSONDecodeError, KeyError) as e:
+            print(f"{path}: INVALID: {e}", file=sys.stderr)
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

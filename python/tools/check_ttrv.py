@@ -17,7 +17,7 @@ import zlib
 import numpy as np
 
 HEADER_LEN, TOC_ENTRY_LEN, MAX_SECTIONS = 16, 24, 64
-VERSION = 1
+MIN_VERSION, VERSION = 1, 2  # v2 added the optional TUNE section (id 4)
 
 
 class Cur:
@@ -50,7 +50,7 @@ def parse_container(b):
     assert len(b) >= HEADER_LEN, "too short"
     assert b[0:4] == b"TTRV", "bad magic"
     version, count, toc_crc = struct.unpack("<III", b[4:16])
-    assert version == VERSION, f"version {version}"
+    assert MIN_VERSION <= version <= VERSION, f"version {version}"
     assert 1 <= count <= MAX_SECTIONS, f"count {count}"
     toc_end = HEADER_LEN + count * TOC_ENTRY_LEN
     assert toc_end <= len(b), "truncated TOC"
@@ -179,6 +179,39 @@ def decode_ops(payload):
     return ops
 
 
+def decode_tune(payload, ops):
+    """Mirror of reader.rs decode_tune: optional measured plans per TT op.
+
+    Validates op targeting, strictly-increasing indices, plan count vs
+    layout d, per-step dims vs the batch-1 chain, and that tuned plans
+    keep the analytic plan's vectorized loop / packing choice.
+    """
+    c = Cur(payload)
+    count = c.u32()
+    assert count <= len(ops), f"TUNE entry count {count}"
+    prev = -1
+    tuned = {}
+    for _ in range(count):
+        idx = c.u32()
+        assert idx > prev, f"TUNE op index {idx} not strictly increasing"
+        prev = idx
+        assert idx < len(ops) and ops[idx][0] == "tt", f"TUNE target {idx}"
+        _, (m, n, r), plans, _packed, _bias = ops[idx]
+        steps = c.u32()
+        assert steps == len(m), f"TUNE entry for op {idx}: {steps} plans"
+        entry = []
+        for step, chain in zip(range(steps), einsum_chain(m, n, r, 1)):
+            plan = decode_plan(c)
+            for key in ("kind", "m", "b", "n", "r", "k"):
+                assert plan[key] == chain[key], (key, plan, chain)
+            assert plan["vloop"] == plans[step]["vloop"], "tuned plan changes layout"
+            assert plan["pack_g"] == plans[step]["pack_g"], "tuned plan changes layout"
+            entry.append(plan)
+        tuned[idx] = entry
+    assert c.pos == len(payload), "trailing bytes in TUNE"
+    return tuned
+
+
 def forward(ops, x, meta):
     cur = np.asarray(x, dtype=np.float32)
     for op in ops:
@@ -216,8 +249,13 @@ def main():
     assert meta["format"] == "ttrv-bundle"
     ops = decode_ops(sections[2])
     json.loads(sections[3])
+    # id 4 only means TUNE from format v2; in a v1 file it is an unknown
+    # (third-party) section and is skipped, like the Rust reader does
+    version = struct.unpack("<I", blob[4:8])[0]
+    tuned = decode_tune(sections[4], ops) if (version >= 2 and 4 in sections) else {}
     print(f"{path}: ok — model {meta['model']}, {len(ops)} ops, "
-          f"{len(blob)} bytes, machine {meta['machine']}")
+          f"{len(blob)} bytes, machine {meta['machine']}, "
+          f"{len(tuned)} TT layer(s) with measured TUNE plans")
     if len(sys.argv) > 2:
         x = np.array([float(v) for v in open(sys.argv[2]).read().split(",")])
         y = forward(ops, x.reshape(1, -1), meta)

@@ -4,8 +4,10 @@
 The golden artifact is the forward-compat tripwire for the `.ttrv` format
 (see rust/src/artifact/format.rs): the Rust reader must load this exact
 byte stream and serve the exact output vector pinned in
-rust/tests/artifact_suite.rs. Regenerate it ONLY on a deliberate format
-change, together with a FORMAT_VERSION bump.
+rust/tests/artifact_suite.rs. Regenerate it ONLY on a *breaking* format
+change (one that raises MIN_FORMAT_VERSION). Additive changes — like the
+optional TUNE section of format version 2 — deliberately leave this file
+at version 1: it then doubles as the pre-bump-bundles-still-load pin.
 
 Construction notes:
 * Every stored value (cores, biases, dense weights, the test input) is a

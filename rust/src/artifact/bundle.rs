@@ -48,6 +48,12 @@ pub struct TtLayerBundle {
     pub bias: Option<Vec<f32>>,
     /// The DSE-selected, time-qualified solution this layer deployed.
     pub selected: TimedSolution,
+    /// Measured-autotuned batch-1 plans (same chain order/dims as `plans`,
+    /// RB factors / thread counts re-ranked by measurement —
+    /// [`crate::kernels::Executor::tune_chain`]). Persisted as the
+    /// optional TUNE section; `None` = serve with the analytic `plans`.
+    /// Tuned plans never change the packed `G` layout or any result bit.
+    pub tuned: Option<Vec<OptimizationPlan>>,
 }
 
 /// A dense (non-factorized) FC layer as stored in a bundle.
@@ -249,6 +255,7 @@ pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> 
                     plans,
                     bias: tt.bias,
                     selected: sel,
+                    tuned: None, // `tune_bundle` fills this on request
                 }));
             }
             Route::Dense => {
@@ -271,6 +278,52 @@ pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> 
         ops,
         report: Json::Arr(layers),
     })
+}
+
+/// Summary of a [`tune_bundle`] pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneReport {
+    /// TT layers autotuned.
+    pub layers: usize,
+    /// Winning plans persisted (one per chain step across all layers).
+    pub plans: usize,
+}
+
+/// Measured autotuning of every TT layer in a bundle: per layer, run
+/// [`crate::kernels::Executor::tune_chain`] over the **stored** packed
+/// cores at batch 1 and record the winners in
+/// [`TtLayerBundle::tuned`] — what `ttrv compress --tune` persists as the
+/// TUNE section.
+///
+/// Plans are compiled for the bundle's target machine; the measurement
+/// itself runs on the build host (like [`crate::dse::select::rerank_measured`]),
+/// so the tuned RB/thread picks are host-measured re-rankings of the
+/// target-planned candidate set. Tuning is measurement and therefore not
+/// deterministic — [`verify`] compares bundles with the TUNE section
+/// stripped, and serving output is bitwise-unchanged either way.
+pub fn tune_bundle(
+    bundle: &mut ModelBundle,
+    machine: &MachineSpec,
+    floor: &crate::util::timer::MeasureFloor,
+) -> Result<TuneReport> {
+    if machine.name != bundle.machine {
+        return Err(Error::artifact(format!(
+            "bundle was compiled for machine '{}', cannot tune for '{}'",
+            bundle.machine, machine.name
+        )));
+    }
+    let mut report = TuneReport { layers: 0, plans: 0 };
+    for op in &mut bundle.ops {
+        if let BundleOp::Tt(t) = op {
+            let mut ex = Executor::new(machine);
+            ex.preseed(&t.plans); // tune from the stored analytic plans
+            let winners = ex.tune_chain(&t.layout, 1, &t.packed, floor)?;
+            report.layers += 1;
+            report.plans += winners.len();
+            t.tuned = Some(winners);
+        }
+    }
+    Ok(report)
 }
 
 impl ModelBundle {
@@ -311,6 +364,10 @@ impl ModelBundle {
     /// Warm-start construction: stamp out a serving [`ModelEngine`]
     /// directly from the bundle — no DSE, no decomposition, no packing;
     /// every TT layer's executor starts with its chain plans pre-seeded.
+    /// Layers carrying persisted measured plans ([`TtLayerBundle::tuned`])
+    /// pre-seed those instead of the analytic plans — the output is
+    /// bitwise-identical either way (tuning only moves RB factors and
+    /// thread counts), only the speed differs.
     ///
     /// The target must be the machine the bundle was compiled for
     /// (plans and packed layouts are machine-specific).
@@ -339,7 +396,7 @@ impl ModelBundle {
                     ops.push(LayerOp::Tt(TtFcEngine::from_parts(
                         t.layout.clone(),
                         t.packed.clone(),
-                        &t.plans,
+                        t.tuned.as_deref().unwrap_or(&t.plans),
                         t.bias.clone(),
                         machine,
                     )?));
@@ -386,6 +443,12 @@ pub struct VerifyReport {
 /// bundle-loaded engine and the freshly compressed one and require
 /// **bitwise-identical** outputs. `cfg` must be the DSE config used at
 /// compression time (the CLI always compresses with defaults).
+///
+/// The byte comparison runs with the TUNE section stripped: tuned plans
+/// are *measured*, so a fresh compression cannot reproduce them byte for
+/// byte — but the replay half still runs the loaded engine on its tuned
+/// plans, so verify also re-proves that measured plans leave every output
+/// bit where the analytic plans put it.
 pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> Result<VerifyReport> {
     // a machine mismatch must read as exactly that, not as a byte-level
     // "does not match a fresh compression" corruption diagnosis
@@ -396,7 +459,13 @@ pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> R
         )));
     }
     let fresh = compress(&bundle.spec(), machine, cfg)?;
-    let loaded_bytes = super::write_bundle(bundle);
+    let mut sans_tune = bundle.clone();
+    for op in &mut sans_tune.ops {
+        if let BundleOp::Tt(t) = op {
+            t.tuned = None;
+        }
+    }
+    let loaded_bytes = super::write_bundle(&sans_tune);
     let fresh_bytes = super::write_bundle(&fresh);
     if loaded_bytes != fresh_bytes {
         return Err(Error::artifact(format!(

@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "TTRV"
-//! 4       4     u32 format version (currently 1)
+//! 4       4     u32 format version (currently 2; reader accepts 1..=2)
 //! 8       4     u32 section count (<= 64)
 //! 12      4     u32 CRC-32 of the TOC bytes
 //! 16      24*c  TOC entries: { u32 id, u32 payload CRC-32,
@@ -17,14 +17,20 @@
 //!
 //! # Versioning policy
 //!
-//! The version is a single monotonically increasing integer: **any** change
-//! to the container layout, a section's grammar, or a section's semantics
-//! bumps it, and the reader accepts exactly [`FORMAT_VERSION`] (older or
-//! newer files are rejected with a typed [`Error::Artifact`] naming both
-//! versions). Unknown *section ids* within a supported version are skipped,
-//! so purely additive sections do not need a bump. The pinned golden bundle
-//! in `rust/tests/data/` is the tripwire: a format change that forgets the
-//! version bump fails its load test.
+//! The version is a single monotonically increasing integer. The writer
+//! always stamps [`FORMAT_VERSION`]; the reader accepts the inclusive
+//! range [`MIN_FORMAT_VERSION`]`..=`[`FORMAT_VERSION`] (anything outside
+//! it is rejected with a typed [`Error::Artifact`] naming the supported
+//! range). **Additive** changes — a new optional section id, like the
+//! TUNE section of version 2 — bump [`FORMAT_VERSION`] only, so every
+//! pre-bump bundle keeps loading and new readers fall back to the old
+//! behavior when the section is absent. **Breaking** changes (container
+//! layout, an existing section's grammar or semantics) bump
+//! [`MIN_FORMAT_VERSION`] up to the same value, cutting old files off
+//! loudly. Unknown section ids within a supported version are skipped, so
+//! third-party additive sections also survive. The pinned golden bundle in
+//! `rust/tests/data/` (version 1, no TUNE section) is the tripwire: a
+//! format change that forgets the policy fails its load test.
 //!
 //! # CRC scheme
 //!
@@ -39,7 +45,12 @@ use crate::error::{Error, Result};
 pub const MAGIC: [u8; 4] = *b"TTRV";
 
 /// Current container format version (see the versioning policy above).
-pub const FORMAT_VERSION: u32 = 1;
+/// Version 2 added the optional TUNE section ([`SEC_TUNE`]).
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Oldest format version the reader still accepts (version 1 bundles have
+/// no TUNE section and decode with analytic plans only).
+pub const MIN_FORMAT_VERSION: u32 = 1;
 
 /// Upper bound on TOC entries — far above any real bundle, small enough
 /// that a corrupted count cannot drive a large allocation.
@@ -58,6 +69,11 @@ pub const SEC_OPS: u32 = 2;
 /// Section id: the embedded DSE report (JSON — per-layer stage counts,
 /// frontier and selection).
 pub const SEC_REPORT: u32 = 3;
+/// Section id (format version >= 2, optional): measured-autotuned
+/// [`crate::compiler::OptimizationPlan`]s per TT layer — the output of
+/// `ttrv compress --tune` ([`crate::kernels::Executor::tune_chain`]).
+/// Absent = serve with the analytic plans in the OPS section.
+pub const SEC_TUNE: u32 = 4;
 
 // CRC-32 (IEEE) lookup table, built at compile time.
 const CRC_TABLE: [u32; 256] = {

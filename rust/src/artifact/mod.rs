@@ -13,7 +13,12 @@
 //! * the layer ops — packed TT cores in their plan-chosen `G` layout,
 //!   compiled per-step plans, dense fallbacks, biases;
 //! * the selected [`crate::dse::TimedSolution`] per TT layer;
-//! * the full DSE report as an embedded JSON section.
+//! * the full DSE report as an embedded JSON section;
+//! * optionally (format v2, `ttrv compress --tune`): per-layer
+//!   measured-autotuned plans in the TUNE section ([`tune_bundle`] /
+//!   [`crate::kernels::Executor::tune_chain`]) — warm-started engines
+//!   then serve from *measured* plans, with outputs bitwise-identical to
+//!   the analytic path (tuning only moves RB factors / thread counts).
 //!
 //! Serving then warm-starts from the file
 //! ([`crate::coordinator::Server::from_artifact`] /
@@ -34,9 +39,9 @@ pub mod writer;
 pub mod reader;
 
 pub use bundle::{
-    compress, verify, BundleOp, CompressSpec, DenseLayerBundle, ModelBundle, TtLayerBundle,
-    VerifyReport,
+    compress, tune_bundle, verify, BundleOp, CompressSpec, DenseLayerBundle, ModelBundle,
+    TtLayerBundle, TuneReport, VerifyReport,
 };
-pub use format::FORMAT_VERSION;
+pub use format::{FORMAT_VERSION, MIN_FORMAT_VERSION};
 pub use reader::{list_sections, read_bundle_bytes, read_bundle_file, SectionInfo};
 pub use writer::{write_bundle, write_bundle_file};

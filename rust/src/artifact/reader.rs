@@ -57,10 +57,10 @@ fn parse_container(bytes: &[u8]) -> Result<Vec<(u32, u32, &[u8])>> {
     }
     let le32 = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes"));
     let version = le32(4);
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return Err(Error::artifact(format!(
-            "unsupported format version {version} (this reader supports version \
-             {FORMAT_VERSION} only)"
+            "unsupported format version {version} (this reader supports versions \
+             {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         )));
     }
     let count = le32(8);
@@ -353,6 +353,7 @@ fn decode_ops(payload: &[u8]) -> Result<Vec<BundleOp>> {
                         time_s,
                         speedup,
                     },
+                    tuned: None, // filled by the TUNE section, when present
                 })
             }
             OP_DENSE => {
@@ -373,6 +374,79 @@ fn decode_ops(payload: &[u8]) -> Result<Vec<BundleOp>> {
         return Err(c.invalid(format!("{} trailing bytes after the last op", c.remaining())));
     }
     Ok(ops)
+}
+
+/// Decode the optional TUNE section into the already-decoded ops.
+///
+/// Validation mirrors [`crate::coordinator::TtFcEngine::from_parts`] plus
+/// the tuning invariants: entries reference TT ops only, in strictly
+/// increasing op order (the canonical encoding, which also rules out
+/// duplicates); per layer the plan count equals the chain length, every
+/// plan's dims equal the batch-1 chain step, and the tuned plan keeps the
+/// analytic plan's vectorized loop / packing choice — tuning only ever
+/// moves RB factors and thread counts, so a TUNE section that would change
+/// the packed `G` layout is corrupt by definition.
+fn decode_tune(payload: &[u8], ops: &mut [BundleOp]) -> Result<()> {
+    let mut c = Cursor::new(payload, "TUNE section");
+    let count = c.u32()? as usize;
+    if count > ops.len() {
+        return Err(c.invalid(format!(
+            "TUNE entry count {count} exceeds the {} ops",
+            ops.len()
+        )));
+    }
+    let mut prev: Option<u32> = None;
+    for _ in 0..count {
+        let idx = c.u32()?;
+        if prev.is_some_and(|p| idx <= p) {
+            return Err(c.invalid(format!("TUNE op index {idx} not strictly increasing")));
+        }
+        prev = Some(idx);
+        let t = match ops.get_mut(idx as usize) {
+            Some(BundleOp::Tt(t)) => t,
+            Some(_) => {
+                return Err(c.invalid(format!("TUNE entry targets non-TT op {idx}")));
+            }
+            None => {
+                return Err(c.invalid(format!("TUNE op index {idx} out of range")));
+            }
+        };
+        let steps = c.u32()? as usize;
+        if steps != t.layout.d() {
+            return Err(c.invalid(format!(
+                "TUNE entry for op {idx} has {steps} plans but layout d = {}",
+                t.layout.d()
+            )));
+        }
+        let chain = crate::ttd::cost::einsum_chain(&t.layout, 1);
+        let mut tuned = Vec::with_capacity(steps);
+        for (step, dims) in chain.iter().enumerate() {
+            let plan = decode_plan(&mut c)?;
+            if plan.dims != *dims {
+                return Err(c.invalid(format!(
+                    "TUNE op {idx} step {step}: plan is for {:?}, chain expects {:?}",
+                    plan.dims, dims
+                )));
+            }
+            let analytic = &t.plans[step];
+            if plan.vector_loop != analytic.vector_loop || plan.pack_g != analytic.pack_g {
+                return Err(c.invalid(format!(
+                    "TUNE op {idx} step {step}: tuned plan changes the packed G layout \
+                     (vector loop {:?} vs {:?})",
+                    plan.vector_loop, analytic.vector_loop
+                )));
+            }
+            tuned.push(plan);
+        }
+        t.tuned = Some(tuned);
+    }
+    if !c.is_empty() {
+        return Err(c.invalid(format!(
+            "{} trailing bytes after the last TUNE entry",
+            c.remaining()
+        )));
+    }
+    Ok(())
 }
 
 fn meta_err(msg: impl Into<String>) -> Error {
@@ -448,6 +522,17 @@ pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
         .map_err(|_| Error::artifact("REPORT section: not valid UTF-8"))?;
     bundle.report = json::parse(report_text)
         .map_err(|e| Error::artifact(format!("REPORT section: bad JSON: {e}")))?;
+    // Optional TUNE section: measured plans; absent -> every layer's
+    // `tuned` stays None and engines run the analytic plans. The id only
+    // *means* TUNE from format version 2 — in a version-1 file id 4 is an
+    // unknown (third-party) section and is skipped per the versioning
+    // policy, exactly as the v1 reader treated it.
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("validated header"));
+    if version >= 2 {
+        if let Some((_, _, payload)) = sections.iter().find(|(sid, _, _)| *sid == SEC_TUNE) {
+            decode_tune(payload, &mut bundle.ops)?;
+        }
+    }
     Ok(bundle)
 }
 

@@ -136,6 +136,46 @@ fn encode_ops(bundle: &ModelBundle) -> Vec<u8> {
     out
 }
 
+/// The optional TUNE section: measured plans per TT layer, keyed by op
+/// index. `None` when no layer carries tuned plans — the section is then
+/// omitted entirely, so an untuned bundle's encoding is identical in
+/// shape to a format-v1 bundle (plus the version field).
+fn encode_tune(bundle: &ModelBundle) -> Option<Vec<u8>> {
+    let entries: Vec<(u32, &[OptimizationPlan])> = bundle
+        .ops
+        .iter()
+        .enumerate()
+        .filter_map(|(i, op)| match op {
+            BundleOp::Tt(t) => t.tuned.as_ref().map(|plans| {
+                // same loud construction-time check as plans/packed: a
+                // hand-built mismatch must not surface as a decode error
+                assert_eq!(
+                    plans.len(),
+                    t.plans.len(),
+                    "TtLayerBundle has {} tuned plans but {} chain steps",
+                    plans.len(),
+                    t.plans.len()
+                );
+                (i as u32, plans.as_slice())
+            }),
+            _ => None,
+        })
+        .collect();
+    if entries.is_empty() {
+        return None;
+    }
+    let mut out = Vec::new();
+    put_u32(&mut out, entries.len() as u32);
+    for (idx, plans) in entries {
+        put_u32(&mut out, idx);
+        put_u32(&mut out, plans.len() as u32);
+        for plan in plans {
+            encode_plan(&mut out, plan);
+        }
+    }
+    Some(out)
+}
+
 fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
     let shapes = Json::Arr(
         bundle
@@ -161,14 +201,17 @@ fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
 ///
 /// # Panics
 ///
-/// If a hand-built `TtLayerBundle` has differing `plans`/`packed` lengths
-/// (an invariant every constructor in this crate maintains).
+/// If a hand-built `TtLayerBundle` has differing `plans`/`packed`/`tuned`
+/// lengths (invariants every constructor in this crate maintains).
 pub fn write_bundle(bundle: &ModelBundle) -> Vec<u8> {
-    let sections: Vec<(u32, Vec<u8>)> = vec![
+    let mut sections: Vec<(u32, Vec<u8>)> = vec![
         (SEC_META, encode_meta(bundle)),
         (SEC_OPS, encode_ops(bundle)),
         (SEC_REPORT, json::to_string(&bundle.report).into_bytes()),
     ];
+    if let Some(tune) = encode_tune(bundle) {
+        sections.push((SEC_TUNE, tune));
+    }
     let mut toc = Vec::with_capacity(sections.len() * TOC_ENTRY_LEN);
     let mut offset = (HEADER_LEN + sections.len() * TOC_ENTRY_LEN) as u64;
     for (id, payload) in &sections {

@@ -1,0 +1,483 @@
+//! The `ttrv bench` measurement subsystem: kernel-level and serving-level
+//! sweeps with machine-readable, schema-versioned reports.
+//!
+//! Two sweeps, two files (written at the repo root by the CLI so every
+//! future PR appends a point to the perf trajectory):
+//!
+//! * **`BENCH_kernels.json`** — the paper's pinned Table-3 einsum shapes
+//!   (first/middle/final, [`crate::compiler::cb_suite`]), each measured as
+//!   *ours* vs the *IREE-like* and *Pluto-like* baselines through the one
+//!   [`Executor`] entry point. Warmup + a minimum-elapsed/minimum-iteration
+//!   budget per cell, 20%-trimmed mean as the primary estimator with the
+//!   fastest iteration alongside ([`crate::bench::measure`]).
+//! * **`BENCH_serve.json`** — the serving sweep: `workers x max_batch`
+//!   through a real [`Server`] pool over the deterministic compressed
+//!   LeNet300 engine, reporting req/s and p50/p99 end-to-end latency.
+//!
+//! Reports are emitted via [`crate::util::json`] (sorted object keys =
+//! deterministic field order) and validated in CI by
+//! `python/tools/check_bench_json.py`. Only non-`quick` runs are
+//! comparable across machines/PRs; `quick` runs shrink the heavy batch
+//! extents ([`QUICK_B_CAP`]) and are marked as such in the report.
+
+use std::path::Path;
+
+use crate::baselines::iree_like;
+use crate::compiler::{cb_suite, CbEntry};
+use crate::config::ServeConfig;
+use crate::coordinator::{InferenceRequest, ModelEngine, Server};
+use crate::error::{Error, Result};
+use crate::kernels::Executor;
+use crate::machine::MachineSpec;
+use crate::tensor::Tensor;
+use crate::ttd::cost::{EinsumDims, EinsumKind};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+use crate::util::stats;
+
+use super::{measure, BenchCfg, Measurement};
+
+/// Version of the `BENCH_*.json` schema; bump on any field change so the
+/// trajectory tooling can tell report generations apart.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Default file name of the kernel-sweep report.
+pub const BENCH_KERNELS_FILE: &str = "BENCH_kernels.json";
+
+/// Default file name of the serving-sweep report.
+pub const BENCH_SERVE_FILE: &str = "BENCH_serve.json";
+
+/// Batch-extent cap applied by `--quick` runs so CI smoke finishes in
+/// seconds (recorded in the report; quick rows are not cross-PR
+/// comparable).
+pub const QUICK_B_CAP: usize = 256;
+
+/// Lowercase tag of an einsum kind, as the reports spell it.
+pub fn kind_tag(kind: EinsumKind) -> &'static str {
+    match kind {
+        EinsumKind::First => "first",
+        EinsumKind::Middle => "middle",
+        EinsumKind::Final => "final",
+    }
+}
+
+/// One kernel-sweep row: the three implementations measured on one pinned
+/// einsum instance.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    /// `"<kind>/<CBi>"` label.
+    pub id: String,
+    /// The measured einsum instance (post any quick-mode `b` cap).
+    pub dims: EinsumDims,
+    /// The optimized plan-driven kernel.
+    pub ours: Measurement,
+    /// The IREE-like baseline (const-folded G, runtime matmul half).
+    pub iree_like: Measurement,
+    /// The Pluto-like baseline (polyhedral tiling, scalar).
+    pub pluto_like: Measurement,
+}
+
+impl KernelRow {
+    /// Measured speedup of ours vs a baseline time (`None` when either
+    /// estimate is degenerate — a zero or non-finite time on *either*
+    /// side flags the cell as unmeasurable rather than emitting 0 or
+    /// NaN/inf into a report).
+    pub fn speedup(&self, baseline: &Measurement) -> Option<f64> {
+        let s = baseline.seconds / self.ours.seconds;
+        (self.ours.seconds > 0.0 && baseline.seconds > 0.0 && s.is_finite()).then_some(s)
+    }
+}
+
+/// Measure one suite entry (all three implementations).
+fn kernel_row(
+    entry: &CbEntry,
+    b_cap: Option<usize>,
+    cfg: &BenchCfg,
+    rng: &mut Rng,
+) -> Result<KernelRow> {
+    let mut dims = entry.dims;
+    if let Some(cap) = b_cap {
+        dims.b = dims.b.min(cap);
+    }
+    let machine = MachineSpec::spacemit_k1();
+    let mut ex = Executor::new(&machine);
+    let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, rng);
+    let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, rng);
+    let pg = ex.pack(&g, &dims)?;
+    let gm = iree_like::prepare_g(&g)?;
+    let id = format!("{}/{}", kind_tag(dims.kind), entry.id);
+    // validate each implementation once with `?` so a bad suite entry is a
+    // typed error; the measured closures then only repeat calls that
+    // already succeeded (same warm-then-measure shape as try_min_secs)
+    ex.execute(&dims, &pg, &x)?;
+    ex.execute_iree_prepared(&gm, dims.r, &x)?;
+    ex.execute_pluto_like(&g, &x)?;
+    let ours = measure(&format!("{id} ours"), dims.flops(), cfg, || {
+        ex.execute(&dims, &pg, &x).expect("validated kernel");
+    });
+    let iree = measure(&format!("{id} iree-like"), dims.flops(), cfg, || {
+        ex.execute_iree_prepared(&gm, dims.r, &x).expect("validated kernel");
+    });
+    let pluto = measure(&format!("{id} pluto-like"), dims.flops(), cfg, || {
+        ex.execute_pluto_like(&g, &x).expect("validated kernel");
+    });
+    Ok(KernelRow { id, dims, ours, iree_like: iree, pluto_like: pluto })
+}
+
+/// Measure an explicit entry list (the testable core of the sweep).
+pub fn kernel_rows(
+    entries: &[CbEntry],
+    b_cap: Option<usize>,
+    cfg: &BenchCfg,
+) -> Result<Vec<KernelRow>> {
+    let mut rng = Rng::new(7);
+    entries.iter().map(|e| kernel_row(e, b_cap, cfg, &mut rng)).collect()
+}
+
+/// The full kernel sweep: every pinned Table-3 shape of all three einsum
+/// kinds. `quick` caps the heavy batch extents at [`QUICK_B_CAP`].
+pub fn run_kernel_sweep(cfg: &BenchCfg, quick: bool) -> Result<Vec<KernelRow>> {
+    let b_cap = quick.then_some(QUICK_B_CAP);
+    let mut entries = Vec::new();
+    for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+        entries.extend(cb_suite(kind));
+    }
+    kernel_rows(&entries, b_cap, cfg)
+}
+
+fn measurement_json(m: &Measurement) -> Json {
+    Json::obj(vec![
+        ("seconds", Json::from(m.seconds)),
+        ("min_seconds", Json::from(m.min)),
+        ("mad", Json::from(m.mad)),
+        ("iters", Json::from(m.iters)),
+        ("gflops", Json::from(m.gflops())),
+    ])
+}
+
+fn opt_f64(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::from(x),
+        None => Json::Null,
+    }
+}
+
+/// The `BENCH_kernels.json` document for a sweep result.
+pub fn kernel_report_json(rows: &[KernelRow], quick: bool) -> Json {
+    let results = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", Json::from(r.id.as_str())),
+                ("kind", Json::from(kind_tag(r.dims.kind))),
+                ("m", Json::from(r.dims.m)),
+                ("b", Json::from(r.dims.b)),
+                ("n", Json::from(r.dims.n)),
+                ("r", Json::from(r.dims.r)),
+                ("k", Json::from(r.dims.k)),
+                ("flops", Json::from(r.dims.flops() as usize)),
+                ("ours", measurement_json(&r.ours)),
+                ("iree_like", measurement_json(&r.iree_like)),
+                ("pluto_like", measurement_json(&r.pluto_like)),
+                ("speedup_vs_iree", opt_f64(r.speedup(&r.iree_like))),
+                ("speedup_vs_pluto", opt_f64(r.speedup(&r.pluto_like))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::from("ttrv-bench-kernels")),
+        ("schema_version", Json::from(BENCH_SCHEMA_VERSION as usize)),
+        ("quick", Json::from(quick)),
+        ("b_cap", opt_f64(quick.then_some(QUICK_B_CAP as f64))),
+        ("machine_planned", Json::from(MachineSpec::spacemit_k1().name)),
+        ("host_threads", Json::from(host_threads())),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// One point of the serving sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServePoint {
+    /// Worker-pool size.
+    pub workers: usize,
+    /// Dynamic-batching cap.
+    pub max_batch: usize,
+}
+
+/// The default `workers x max_batch` grid (`quick` trims it for CI).
+pub fn default_serve_points(quick: bool) -> Vec<ServePoint> {
+    let (workers, batches): (&[usize], &[usize]) = if quick {
+        (&[1, 2], &[8])
+    } else {
+        (&[1, 2, 4], &[1, 8, 32])
+    };
+    let mut points = Vec::new();
+    for &w in workers {
+        for &b in batches {
+            points.push(ServePoint { workers: w, max_batch: b });
+        }
+    }
+    points
+}
+
+/// Measured outcome of one serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// The configuration measured.
+    pub point: ServePoint,
+    /// Requests served.
+    pub requests: usize,
+    /// Wall-clock from first submission to last reply.
+    pub elapsed_s: f64,
+    /// Throughput over that window.
+    pub req_per_s: f64,
+    /// Median end-to-end latency (interpolated over the measured burst's
+    /// replies), microseconds.
+    pub p50_us: u64,
+    /// 99th-percentile end-to-end latency, microseconds.
+    pub p99_us: u64,
+    /// Mean executed batch size.
+    pub mean_batch: f64,
+}
+
+/// Sweep `points` over a model engine: per point, spawn a fresh pool on a
+/// [`ModelEngine::worker_clone`] (identical `Arc`-shared weights at every
+/// point), fire a burst of `requests` seeded inputs, and time to the last
+/// reply. The queue is sized to admit the whole burst, so the sweep
+/// measures batching + execution, never admission rejections.
+pub fn run_serve_sweep(
+    engine: &ModelEngine,
+    points: &[ServePoint],
+    requests: usize,
+) -> Result<Vec<ServeRow>> {
+    let in_dim = engine.in_dim();
+    let mut rows = Vec::with_capacity(points.len());
+    for &point in points {
+        // Warmup (below) is shaped like the real burst: enough concurrent
+        // requests that every worker sees full batches, so the one-off
+        // plan compiles for the swept batch sizes (the engine is
+        // preseeded with batch-1 plans only) cannot land inside the timed
+        // window and spike p99.
+        let hi = requests.max(16).max(point.workers);
+        let warm = (point.workers * point.max_batch * 4).clamp(point.workers, hi);
+        let cfg = ServeConfig {
+            max_batch: point.max_batch,
+            max_wait_us: 200,
+            queue_cap: requests.max(warm).max(16),
+            workers: point.workers,
+        };
+        cfg.validate()?;
+        let server = Server::start(engine.worker_clone(), cfg);
+        let warm_rxs: Vec<_> = (0..warm as u64)
+            .map(|id| server.submit(InferenceRequest { id, input: vec![0.1; in_dim] }))
+            .collect::<Result<_>>()?;
+        for rx in warm_rxs {
+            rx.recv()
+                .map_err(|_| Error::serve("bench worker dropped a warmup reply"))??;
+        }
+        let mut rng = Rng::new(0xbe9c);
+        let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(in_dim, 1.0)).collect();
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(id, input)| server.submit(InferenceRequest { id: id as u64, input }))
+            .collect::<Result<_>>()?;
+        // latency/batch stats come from the measured burst's own replies
+        // (exact interpolated percentiles, and the warmup requests above
+        // cannot pollute them the way server-wide metrics would)
+        let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
+        let mut batch_sum = 0usize;
+        for rx in rxs {
+            let resp = rx
+                .recv()
+                .map_err(|_| Error::serve("bench worker dropped a reply"))??;
+            lat_us.push(resp.latency.as_secs_f64() * 1e6);
+            batch_sum += resp.batch_size;
+        }
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        rows.push(ServeRow {
+            point,
+            requests,
+            elapsed_s,
+            req_per_s: if elapsed_s > 0.0 { requests as f64 / elapsed_s } else { 0.0 },
+            p50_us: stats::percentile(&lat_us, 50.0) as u64,
+            p99_us: stats::percentile(&lat_us, 99.0) as u64,
+            mean_batch: batch_sum as f64 / requests.max(1) as f64,
+        });
+    }
+    Ok(rows)
+}
+
+/// The `BENCH_serve.json` document for a sweep result.
+pub fn serve_report_json(rows: &[ServeRow], model: &str, quick: bool) -> Json {
+    let results = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("workers", Json::from(r.point.workers)),
+                ("max_batch", Json::from(r.point.max_batch)),
+                ("requests", Json::from(r.requests)),
+                ("elapsed_s", Json::from(r.elapsed_s)),
+                ("req_per_s", Json::from(r.req_per_s)),
+                ("p50_us", Json::from(r.p50_us as usize)),
+                ("p99_us", Json::from(r.p99_us as usize)),
+                ("mean_batch", Json::from(r.mean_batch)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::from("ttrv-bench-serve")),
+        ("schema_version", Json::from(BENCH_SCHEMA_VERSION as usize)),
+        ("quick", Json::from(quick)),
+        ("model", Json::from(model)),
+        ("host_threads", Json::from(host_threads())),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// Write a report document as pretty JSON (trailing newline, so the files
+/// diff cleanly in the trajectory).
+pub fn write_report(path: impl AsRef<Path>, report: &Json) -> Result<()> {
+    let mut text = json::to_string_pretty(report);
+    text.push('\n');
+    Ok(std::fs::write(path, text)?)
+}
+
+fn host_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::dense::DenseFc;
+    use crate::coordinator::LayerOp;
+    use std::time::Duration;
+
+    fn tiny_cfg() -> BenchCfg {
+        BenchCfg {
+            warmup_iters: 1,
+            min_iters: 2,
+            min_time: Duration::from_millis(1),
+            trim: 0.2,
+        }
+    }
+
+    #[test]
+    fn kernel_rows_measure_all_three_impls() {
+        let suite = cb_suite(EinsumKind::Middle);
+        let rows = kernel_rows(&suite[..1], Some(16), &tiny_cfg()).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.dims.b, 16, "b capped");
+        assert!(r.id.starts_with("middle/CB0"));
+        for m in [&r.ours, &r.iree_like, &r.pluto_like] {
+            assert!(m.iters >= 2);
+            assert!(m.seconds.is_finite() && m.seconds >= 0.0);
+            assert!(m.min.is_finite());
+        }
+    }
+
+    #[test]
+    fn kernel_report_is_schema_valid_json() {
+        let suite = cb_suite(EinsumKind::Final);
+        let rows = kernel_rows(&suite[..2], Some(8), &tiny_cfg()).unwrap();
+        let doc = kernel_report_json(&rows, true);
+        // round-trips through our own parser and carries the schema keys
+        let back = json::parse(&json::to_string_pretty(&doc)).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some("ttrv-bench-kernels"));
+        assert_eq!(back.get("schema_version").unwrap().as_u64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(back.get("quick").unwrap().as_bool(), Some(true));
+        let results = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        for r in results {
+            for key in [
+                "id", "kind", "m", "b", "n", "r", "k", "flops", "ours", "iree_like",
+                "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
+            ] {
+                assert!(r.get(key).is_some(), "missing {key}");
+            }
+            for impl_key in ["ours", "iree_like", "pluto_like"] {
+                let m = r.get(impl_key).unwrap();
+                for key in ["seconds", "min_seconds", "mad", "iters", "gflops"] {
+                    assert!(m.get(key).is_some(), "{impl_key} missing {key}");
+                }
+            }
+        }
+    }
+
+    fn toy_engine() -> ModelEngine {
+        let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
+        let fc = DenseFc::new(&w, None).unwrap();
+        ModelEngine::new("toy", vec![LayerOp::Dense(fc)], 4, 2)
+    }
+
+    #[test]
+    fn serve_sweep_answers_everything_and_reports() {
+        let engine = toy_engine();
+        let points =
+            [ServePoint { workers: 1, max_batch: 4 }, ServePoint { workers: 2, max_batch: 8 }];
+        let rows = run_serve_sweep(&engine, &points, 24).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.requests, 24);
+            assert!(r.elapsed_s > 0.0);
+            assert!(r.req_per_s > 0.0);
+            assert!(r.mean_batch >= 1.0);
+            assert!(r.p99_us >= r.p50_us);
+        }
+        let doc = serve_report_json(&rows, "toy", true);
+        let back = json::parse(&json::to_string(&doc)).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_str(), Some("ttrv-bench-serve"));
+        let results = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        for r in results {
+            for key in [
+                "workers", "max_batch", "requests", "elapsed_s", "req_per_s", "p50_us",
+                "p99_us", "mean_batch",
+            ] {
+                assert!(r.get(key).is_some(), "missing {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_grids_cover_quick_and_full() {
+        assert_eq!(default_serve_points(true).len(), 2);
+        assert_eq!(default_serve_points(false).len(), 9);
+    }
+
+    #[test]
+    fn degenerate_speedup_is_null_not_nan() {
+        let m = |secs: f64| Measurement {
+            name: "x".into(),
+            seconds: secs,
+            min: secs,
+            mad: 0.0,
+            iters: 1,
+            flops: 0,
+        };
+        let row = KernelRow {
+            id: "t".into(),
+            dims: EinsumDims { kind: EinsumKind::Middle, m: 1, b: 1, n: 1, r: 1, k: 1 },
+            ours: m(0.0),
+            iree_like: m(1.0),
+            pluto_like: m(1.0),
+        };
+        assert_eq!(row.speedup(&row.iree_like), None);
+        // a zero *baseline* is equally degenerate: Some(0.0) would fail
+        // the CI schema gate (speedups must be null or > 0)
+        let zero_base = KernelRow {
+            ours: m(1.0),
+            iree_like: m(0.0),
+            ..row.clone()
+        };
+        assert_eq!(zero_base.speedup(&zero_base.iree_like), None);
+        let doc = kernel_report_json(&[row], false);
+        let text = json::to_string(&doc);
+        assert!(text.contains("\"speedup_vs_iree\":null"), "{text}");
+        json::parse(&text).unwrap();
+    }
+}

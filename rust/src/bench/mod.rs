@@ -9,16 +9,22 @@ use std::time::Duration;
 
 use crate::util::{stats, timer};
 
+pub mod harness;
+
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
     /// Benchmark label.
     pub name: String,
-    /// Trimmed-mean seconds per iteration.
+    /// Trimmed-mean seconds per iteration (the primary estimator).
     pub seconds: f64,
+    /// Fastest per-iteration sample (the tuning comparators' estimator,
+    /// reported alongside so BENCH json carries both).
+    pub min: f64,
     /// Median absolute deviation of the samples.
     pub mad: f64,
-    /// Timed iterations actually run.
+    /// Timed samples collected (one per batch; equals the iteration count
+    /// on fine-grained clocks, where batches stay at size 1).
     pub iters: usize,
     /// Work per iteration, used for GFLOP/s reporting (0 = unknown).
     pub flops: u64,
@@ -70,24 +76,49 @@ impl BenchCfg {
         }
     }
 
-    /// Honor `TTRV_BENCH_QUICK=1` for fast end-to-end runs.
+    /// Realize a typed `[bench]` config section
+    /// ([`crate::config::BenchConfig`], already validated on load).
+    pub fn from_config(cfg: &crate::config::BenchConfig) -> Self {
+        BenchCfg {
+            warmup_iters: cfg.warmup_iters,
+            min_iters: cfg.min_iters,
+            min_time: Duration::from_millis(cfg.min_time_ms),
+            trim: cfg.trim,
+        }
+    }
+
+    /// Honor `TTRV_BENCH_QUICK=1` for fast end-to-end runs (the same
+    /// switch [`crate::util::timer::MeasureFloor::from_env`] reads).
     pub fn from_env() -> Self {
-        match std::env::var("TTRV_BENCH_QUICK") {
-            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => BenchCfg::quick(),
-            _ => BenchCfg::default(),
+        if crate::util::bench_quick_env() {
+            BenchCfg::quick()
+        } else {
+            BenchCfg::default()
         }
     }
 }
 
 /// Measure a closure. `flops` is the per-iteration work for GFLOP/s output.
+///
+/// Sampling is batched ([`timer::time_iters_batched`]): on coarse-clock
+/// hosts the batch grows until each sample is clock-resolvable, so a
+/// sub-granularity kernel can never record an all-zero sample set and
+/// write `seconds = 0` rows into the BENCH trajectory — the same floor
+/// discipline the tuning comparators use. Non-finite samples (impossible
+/// from `Instant`, but the stats layer is shared with synthetic sample
+/// sets) are dropped before any estimator runs, so a poisoned sample can
+/// never put NaN in a report.
 pub fn measure(name: &str, flops: u64, cfg: &BenchCfg, mut f: impl FnMut()) -> Measurement {
     for _ in 0..cfg.warmup_iters {
         f();
     }
-    let samples = timer::time_iters(&mut f, cfg.min_iters, cfg.min_time);
+    let raw = timer::time_iters_batched(&mut f, cfg.min_iters, cfg.min_time);
+    let (samples, _dropped) = stats::finite_samples(&raw);
+    let (min, _max) = stats::min_max(&samples);
     Measurement {
         name: name.to_string(),
         seconds: stats::trimmed_mean(&samples, cfg.trim),
+        min: if min.is_finite() { min } else { 0.0 },
         mad: stats::mad(&samples),
         iters: samples.len(),
         flops,
@@ -149,10 +180,15 @@ mod tests {
 
     #[test]
     fn table_formats_speedups() {
-        let rows = vec![
-            Measurement { name: "base".into(), seconds: 1.0, mad: 0.0, iters: 3, flops: 0 },
-            Measurement { name: "fast".into(), seconds: 0.25, mad: 0.0, iters: 3, flops: 0 },
-        ];
+        let m = |name: &str, seconds: f64| Measurement {
+            name: name.into(),
+            seconds,
+            min: seconds,
+            mad: 0.0,
+            iters: 3,
+            flops: 0,
+        };
+        let rows = vec![m("base", 1.0), m("fast", 0.25)];
         let t = format_table("t", &rows, Some(0));
         assert!(t.contains("4.00x"));
         assert!(t.contains("base"));

@@ -306,6 +306,87 @@ impl ServeConfig {
     }
 }
 
+/// Measurement-harness knobs (`ttrv bench`); the `[bench]` TOML section.
+///
+/// ```toml
+/// [bench]
+/// warmup_iters = 3
+/// min_iters = 10        # floor: timed iterations per measurement cell
+/// min_time_ms = 200     # floor: wall-clock per measurement cell
+/// trim = 0.2            # fraction trimmed from each tail
+/// serve_requests = 512  # burst size per serving-sweep point
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchConfig {
+    /// Untimed warmup iterations per measurement cell.
+    pub warmup_iters: usize,
+    /// Minimum timed iterations per cell. Must be >= 1.
+    pub min_iters: usize,
+    /// Minimum wall-clock milliseconds per cell (the coarse-clock floor).
+    pub min_time_ms: u64,
+    /// Fraction trimmed from each tail of the sample set. Must be a finite
+    /// value in `[0, 0.5)` (0.5+ would trim everything for even n).
+    pub trim: f64,
+    /// Requests fired per serving-sweep configuration. Must be >= 1.
+    pub serve_requests: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_time_ms: 200,
+            trim: 0.2,
+            serve_requests: 512,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Reject configurations that would measure nothing or trim every
+    /// sample away.
+    pub fn validate(&self) -> Result<()> {
+        if self.min_iters < 1 {
+            return Err(Error::config("bench.min_iters must be >= 1"));
+        }
+        if !(self.trim.is_finite() && (0.0..0.5).contains(&self.trim)) {
+            return Err(Error::config(format!(
+                "bench.trim must be a finite value in [0, 0.5), got {}",
+                self.trim
+            )));
+        }
+        if self.serve_requests < 1 {
+            return Err(Error::config("bench.serve_requests must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// Load a `[bench]` section ([`BenchConfig`]; missing keys keep defaults),
+/// validated like every other config.
+pub fn load_bench(text: &str) -> Result<BenchConfig> {
+    let t = Toml::parse(text)?;
+    let mut bench = BenchConfig::default();
+    if let Some(v) = non_negative(&t, "bench", "warmup_iters")? {
+        bench.warmup_iters = v as usize;
+    }
+    if let Some(v) = non_negative(&t, "bench", "min_iters")? {
+        bench.min_iters = v as usize;
+    }
+    if let Some(v) = non_negative(&t, "bench", "min_time_ms")? {
+        bench.min_time_ms = v;
+    }
+    if let Some(v) = t.get_f64("bench", "trim") {
+        bench.trim = v;
+    }
+    if let Some(v) = non_negative(&t, "bench", "serve_requests")? {
+        bench.serve_requests = v as usize;
+    }
+    bench.validate()?;
+    Ok(bench)
+}
+
 /// A model-spec file for `ttrv compress`: names the FC stack to compress
 /// when it is not a zoo model. Grammar:
 ///
@@ -559,6 +640,40 @@ mod tests {
         let bad = DseConfig { selection_policy: "fastest".into(), ..Default::default() };
         assert!(bad.policy().is_err());
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn bench_config_loads_and_validates() {
+        let b = load_bench(
+            r#"
+            [bench]
+            warmup_iters = 1
+            min_iters = 4
+            min_time_ms = 30
+            trim = 0.1
+            serve_requests = 64
+            "#,
+        )
+        .unwrap();
+        assert_eq!(b.warmup_iters, 1);
+        assert_eq!(b.min_iters, 4);
+        assert_eq!(b.min_time_ms, 30);
+        assert_eq!(b.trim, 0.1);
+        assert_eq!(b.serve_requests, 64);
+        // defaults when the section is absent
+        assert_eq!(load_bench("").unwrap(), BenchConfig::default());
+        BenchConfig::default().validate().unwrap();
+        // degenerate knobs rejected loudly
+        for (text, needle) in [
+            ("[bench]\nmin_iters = 0", "min_iters"),
+            ("[bench]\nmin_iters = -3", "min_iters"),
+            ("[bench]\ntrim = 0.5", "trim"),
+            ("[bench]\ntrim = -0.1", "trim"),
+            ("[bench]\nserve_requests = 0", "serve_requests"),
+        ] {
+            let err = load_bench(text).expect_err(text).to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
     }
 
     #[test]

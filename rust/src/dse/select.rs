@@ -25,14 +25,13 @@
 //! returns a solution the machine model considers a slowdown.
 //! [`select_min_flops`] keeps the literal-text policy for comparison, and
 //! [`rerank_measured`] re-orders a frontier head by *measured* chain time
-//! (autotuned via [`crate::kernels::tune_plan`]) for deployments that can
-//! afford to run candidates.
+//! (autotuned via [`crate::kernels::Executor::tune_chain`], timed by the
+//! floored harness timer) for deployments that can afford to run
+//! candidates.
 //!
 //! The engine keeps the whole qualified list, so callers can walk
 //! [`alternates`] if an accuracy constraint fails downstream (paper §4;
 //! "Tensorizing Neural Networks" motivates retaining fallbacks).
-
-use std::time::Instant;
 
 use crate::config::SelectionPolicy;
 use crate::error::{Error, Result};
@@ -42,9 +41,20 @@ use crate::tensor::Tensor;
 use crate::ttd::cost;
 use crate::ttd::decompose::random_cores;
 use crate::util::prng::Rng;
+use crate::util::timer::{self, MeasureFloor};
 
 use super::space::Solution;
 use super::timed::{TimedExplored, TimedSolution};
+
+/// Total-order comparison on the balance-selection score `(imbalance,
+/// FLOPs)`. `f64::total_cmp` instead of `partial_cmp().expect(..)`: a
+/// degenerate cost producing NaN must order deterministically (after every
+/// finite score), never panic the thread doing selection.
+fn balance_score_cmp(a: &TimedSolution, b: &TimedSolution) -> std::cmp::Ordering {
+    solution_imbalance(&a.solution)
+        .total_cmp(&solution_imbalance(&b.solution))
+        .then_with(|| a.solution.flops.cmp(&b.solution.flops))
+}
 
 /// Imbalance score of a shape: `max(factor) / min(factor)` (1.0 = square).
 fn imbalance(shape: &[u64]) -> f64 {
@@ -89,11 +99,7 @@ fn select_balance(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
             .filter(move |s| !rank_only || s.solution.rank == rank)
     };
     for (d2, rk) in [(true, true), (true, false), (false, true), (false, false)] {
-        let best = candidates(d2, rk).min_by(|a, b| {
-            (solution_imbalance(&a.solution), a.solution.flops)
-                .partial_cmp(&(solution_imbalance(&b.solution), b.solution.flops))
-                .expect("no NaN")
-        });
+        let best = candidates(d2, rk).min_by(|a, b| balance_score_cmp(a, b));
         if let Some(s) = best {
             return Ok(s.clone());
         }
@@ -111,7 +117,7 @@ fn select_min_time(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
             .frontier
             .iter()
             .filter(|s| !rank_only || s.solution.rank == rank)
-            .min_by(|a, b| a.time_s.partial_cmp(&b.time_s).expect("no NaN"));
+            .min_by(|a, b| a.time_s.total_cmp(&b.time_s));
         if let Some(s) = best {
             return Ok(s.clone());
         }
@@ -136,21 +142,22 @@ pub fn select_min_flops(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
 /// time-qualified survivor ordered by the balance-selection score.
 pub fn alternates(e: &TimedExplored, limit: usize) -> Vec<TimedSolution> {
     let mut sols = e.timed.clone();
-    sols.sort_by(|a, b| {
-        (solution_imbalance(&a.solution), a.solution.flops)
-            .partial_cmp(&(solution_imbalance(&b.solution), b.solution.flops))
-            .expect("no NaN")
-    });
+    sols.sort_by(balance_score_cmp);
     sols.truncate(limit);
     sols
 }
 
 /// Re-rank candidate solutions by **measured** end-to-end chain time on
 /// this host: each candidate gets representative random cores, a
-/// measured-autotuned executor (every plan-cache miss runs
-/// [`crate::kernels::tune_plan`]), one warmup pass and a best-of-3
-/// timing. Returns `(solution, measured seconds)` sorted fastest-first
-/// (modeled `time_s` is left untouched; ties keep the input order).
+/// chain-autotuned executor ([`Executor::tune_chain`] measures RB × thread
+/// candidates for every einsum in the chain), one warmup pass, then a
+/// floored min-of-samples timing ([`timer::min_secs`] under `floor` — the
+/// same harness timer `ttrv bench` uses, so the old zero-ns best-of-3 on
+/// coarse clocks cannot happen here either). Returns
+/// `(solution, measured seconds)` sorted fastest-first via `total_cmp`
+/// (modeled `time_s` is left untouched; ties keep the input order). A
+/// non-finite measurement is a typed [`Error::Numeric`], never a NaN that
+/// poisons downstream sorts.
 ///
 /// Intended for the frontier head (a handful of candidates) — measurement
 /// costs real kernel executions per candidate.
@@ -158,30 +165,31 @@ pub fn rerank_measured(
     candidates: &[TimedSolution],
     machine: &MachineSpec,
     batch: usize,
+    floor: &MeasureFloor,
 ) -> Result<Vec<(TimedSolution, f64)>> {
     let mut rng = Rng::new(0x5e1ec7);
     let mut measured = Vec::with_capacity(candidates.len());
     for cand in candidates {
         let layout = cand.layout().clone();
         let tt = random_cores(&layout, &mut rng);
-        let mut ex = Executor::new(machine).with_tuning();
+        let mut ex = Executor::new(machine);
         let chain = cost::einsum_chain(&layout, batch);
         let packed: Vec<PackedG> = chain
             .iter()
             .enumerate()
             .map(|(step, dims)| ex.pack(&tt.cores[layout.d() - 1 - step], dims))
             .collect::<Result<_>>()?;
+        ex.tune_chain(&layout, batch, &packed, floor)?;
         let x = Tensor::randn(vec![batch, layout.n_total() as usize], 1.0, &mut rng);
-        ex.run_tt_chain(&layout, batch, &packed, x.data())?; // warm + tune
-        let mut best = f64::INFINITY;
-        for _ in 0..3 {
-            let t0 = Instant::now();
-            ex.run_tt_chain(&layout, batch, &packed, x.data())?;
-            best = best.min(t0.elapsed().as_secs_f64());
-        }
-        measured.push((cand.clone(), best));
+        // try_min_secs warms once (validating), then takes the floored min
+        let secs = timer::try_min_secs(
+            "measured re-rank chain",
+            || ex.run_tt_chain(&layout, batch, &packed, x.data()).map(|_| ()),
+            floor,
+        )?;
+        measured.push((cand.clone(), secs));
     }
-    measured.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN"));
+    measured.sort_by(|a, b| a.1.total_cmp(&b.1));
     Ok(measured)
 }
 
@@ -304,11 +312,29 @@ mod tests {
     }
 
     #[test]
+    fn nan_times_cannot_panic_selection() {
+        // a degenerate upstream measurement (0/0 speedup, poisoned cost)
+        // used to kill the selecting thread via partial_cmp().expect();
+        // total_cmp orders NaN after every finite time instead
+        let mut e = timed(300, 784);
+        e.timed[0].time_s = f64::NAN;
+        if let Some(f) = e.frontier.first_mut() {
+            f.time_s = f64::NAN;
+        }
+        let _ = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        let s = select_solution(&e, 8, SelectionPolicy::MinTime).unwrap();
+        if e.frontier.len() > 1 {
+            assert!(!s.time_s.is_nan(), "NaN must order after every finite time");
+        }
+        let _ = alternates(&e, 3);
+    }
+
+    #[test]
     fn rerank_measured_orders_the_frontier_head() {
         let host = MachineSpec::host();
         let e = explore_timed(120, 400, &host, &DseConfig::default());
         let head: Vec<TimedSolution> = e.frontier.iter().take(3).cloned().collect();
-        let ranked = rerank_measured(&head, &host, 1).unwrap();
+        let ranked = rerank_measured(&head, &host, 1, &MeasureFloor::quick()).unwrap();
         assert_eq!(ranked.len(), head.len());
         // sorted by measured seconds, and it is a permutation of the head
         for w in ranked.windows(2) {

@@ -45,7 +45,7 @@ mod tune;
 pub use executor::Executor;
 pub use naive::naive_einsum;
 pub use packed::{pack, GLayout, PackedG};
-pub use tune::tune_plan;
+pub use tune::{tune_plan, tune_plan_floored};
 
 /// Microkernel lane width. Matches the paper's `vl` (256-bit RVV / f32) and
 /// both MachineSpec presets; a different `MachineSpec::vl_f32` is planned

@@ -1,33 +1,67 @@
-//! Measured register-blocking autotuner (§Perf iteration 2).
+//! Measured register-blocking / threading autotuner (§Perf iteration 2).
 //!
 //! The paper's Eq. 18-25 L/S model ranks candidates analytically; on hosts
 //! we can *measure*, the top candidates are micro-benchmarked on the real
 //! buffers and the fastest wins. Packing depends only on the vectorized
-//! loop, not the RB factors, so one packed core serves every candidate.
+//! loop, not the RB factors or the thread count, so one packed core serves
+//! every candidate — which is also why tuned plans are always safe to
+//! persist next to analytically-planned packed cores
+//! ([`crate::artifact`]'s TUNE section) and why tuning never changes
+//! result bits (per-element reduction order is RB/thread-invariant,
+//! pinned by `tuned_chain_output_is_bitwise_identical` below).
+//!
+//! Every timing comparison here runs under a [`MeasureFloor`]: a candidate
+//! is measured for at least a minimum wall-clock **and** iteration count
+//! (`min-of-samples` over batched runs, see [`timer::min_secs`]). The old
+//! best-of-3 `Instant` loop read 0 ns for several candidates on
+//! coarse-clock hosts, making the winner arbitrary run to run.
 //!
 //! The analytic path ([`crate::compiler::compile`]) stays paper-faithful;
-//! benches and deployments opt in via [`tune_plan`].
-
-use std::time::Instant;
+//! benches and deployments opt in via [`tune_plan`] /
+//! [`Executor::tune_chain`], and `ttrv compress --tune` persists the
+//! chain winners into the bundle.
 
 use crate::compiler::plan::OptimizationPlan;
 use crate::compiler::regblock;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
+use crate::ttd::cost;
+use crate::ttd::TtLayout;
+use crate::util::prng::Rng;
+use crate::util::timer::{self, MeasureFloor};
 
 use super::exec::execute_plan_into;
-use super::packed::pack;
+use super::executor::Executor;
+use super::packed::{pack, PackedG};
 
-/// Re-rank the solver's top-`k` RB candidates by measurement and return the
-/// plan updated with the winner. `g`/`x` are representative buffers of the
-/// planned shapes.
-pub fn tune_plan(
+/// How many of the solver's top RB candidates each tuning pass measures.
+const TUNE_TOP_K: usize = 6;
+
+/// Floored min-of-samples seconds for one candidate plan on fixed buffers
+/// ([`timer::try_min_secs`]: warm + validate once, typed error instead of
+/// panic or a non-finite result).
+fn measure_candidate(
+    plan: &OptimizationPlan,
+    g: &PackedG,
+    xd: &[f32],
+    out: &mut Vec<f32>,
+    floor: &MeasureFloor,
+) -> Result<f64> {
+    timer::try_min_secs("autotune candidate", || execute_plan_into(plan, g, xd, out), floor)
+}
+
+/// Re-rank the solver's top-`k` RB candidates by measurement under `floor`
+/// and return the plan updated with the winner. `g`/`x` are representative
+/// buffers of the planned shapes. Strictly-faster wins, so ties keep the
+/// analytically-best (first) candidate deterministically.
+pub fn tune_plan_floored(
     plan: &OptimizationPlan,
     machine: &MachineSpec,
     g: &Tensor,
     x: &Tensor,
     top_k: usize,
+    floor: &MeasureFloor,
 ) -> Result<OptimizationPlan> {
     let cands = regblock::candidates(&plan.dims, machine, plan.vector_loop, top_k);
     if cands.len() <= 1 {
@@ -38,20 +72,92 @@ pub fn tune_plan(
     let mut best = (*plan, f64::INFINITY);
     for (rb, _ls) in cands {
         let cand_plan = OptimizationPlan { rb, ..*plan };
-        // warm once, then take the best of 3 (min is the right statistic
-        // for short deterministic kernels)
-        execute_plan_into(&cand_plan, &pg, x.data(), &mut out)?;
-        let mut t_best = f64::INFINITY;
-        for _ in 0..3 {
-            let t0 = Instant::now();
-            execute_plan_into(&cand_plan, &pg, x.data(), &mut out)?;
-            t_best = t_best.min(t0.elapsed().as_secs_f64());
-        }
-        if t_best < best.1 {
-            best = (cand_plan, t_best);
+        let secs = measure_candidate(&cand_plan, &pg, x.data(), &mut out, floor)?;
+        if secs < best.1 {
+            best = (cand_plan, secs);
         }
     }
     Ok(best.0)
+}
+
+/// [`tune_plan_floored`] under the environment floor
+/// ([`MeasureFloor::from_env`]): the signature every existing caller
+/// (notably [`Executor::plan`] with tuning enabled) uses.
+pub fn tune_plan(
+    plan: &OptimizationPlan,
+    machine: &MachineSpec,
+    g: &Tensor,
+    x: &Tensor,
+    top_k: usize,
+) -> Result<OptimizationPlan> {
+    tune_plan_floored(plan, machine, g, x, top_k, &MeasureFloor::from_env())
+}
+
+impl Executor {
+    /// Measured autotuning of a whole TT einsum chain: for every step of
+    /// `layout`'s chain at `batch`, measure the solver's top RB candidates
+    /// crossed with thread-count candidates (`{analytic, 1}`) on the
+    /// **actual packed cores** (`packed`, processing order), cache each
+    /// winner via [`Executor::set_plan`], and return the winners in chain
+    /// order.
+    ///
+    /// Tuning only ever changes RB factors and the thread count — never
+    /// the vectorized loop or the `G` layout — so the caller's packed
+    /// cores stay valid and result bits are unchanged (reduction order is
+    /// RB/thread-invariant). The returned plans are exactly what
+    /// `ttrv compress --tune` persists in the artifact TUNE section.
+    pub fn tune_chain(
+        &mut self,
+        layout: &TtLayout,
+        batch: usize,
+        packed: &[PackedG],
+        floor: &MeasureFloor,
+    ) -> Result<Vec<OptimizationPlan>> {
+        let chain = cost::einsum_chain(layout, batch);
+        if chain.len() != packed.len() {
+            return Err(Error::shape(format!(
+                "tune_chain: chain has {} steps but {} packed cores",
+                chain.len(),
+                packed.len()
+            )));
+        }
+        // fixed seed: representative inputs are reproducible run to run
+        let mut rng = Rng::new(0x7e57_c4a1);
+        let mut out = Vec::new();
+        let mut winners = Vec::with_capacity(chain.len());
+        for (step, dims) in chain.iter().enumerate() {
+            let base = self.plan(dims)?;
+            let x = rng.normal_vec(dims.b * dims.n * dims.k, 0.5);
+            let mut cands: Vec<OptimizationPlan> =
+                regblock::candidates(dims, self.machine(), base.vector_loop, TUNE_TOP_K)
+                    .into_iter()
+                    .map(|(rb, _ls)| OptimizationPlan { rb, ..base })
+                    .collect();
+            if cands.is_empty() {
+                cands.push(base);
+            }
+            let thread_opts = [base.threads, 1];
+            let threads = if base.threads > 1 { &thread_opts[..] } else { &thread_opts[1..] };
+            let mut best: Option<(OptimizationPlan, f64)> = None;
+            for cand in &cands {
+                for &t in threads {
+                    let plan = OptimizationPlan { threads: t, ..*cand };
+                    let secs = measure_candidate(&plan, &packed[step], &x, &mut out, floor)?;
+                    let better = match &best {
+                        Some((_, b)) => secs < *b,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((plan, secs));
+                    }
+                }
+            }
+            let (winner, _) = best.expect("candidate list is non-empty");
+            self.set_plan(winner);
+            winners.push(winner);
+        }
+        Ok(winners)
+    }
 }
 
 #[cfg(test)]
@@ -59,8 +165,8 @@ mod tests {
     use super::*;
     use crate::compiler::compile;
     use crate::tensor::einsum::tt_einsum_ref;
-    use crate::ttd::cost::{EinsumDims, EinsumKind};
-    use crate::util::prng::Rng;
+    use crate::ttd::cost::{einsum_chain, EinsumDims, EinsumKind};
+    use crate::ttd::decompose::random_cores;
 
     #[test]
     fn tuned_plan_is_valid_and_not_slower_class() {
@@ -70,7 +176,8 @@ mod tests {
         let g = Tensor::randn(vec![8, 8, 32, 8], 1.0, &mut rng);
         let x = Tensor::randn(vec![48, 8, 8], 1.0, &mut rng);
         let plan = compile(&dims, &machine).unwrap();
-        let tuned = tune_plan(&plan, &machine, &g, &x, 6).unwrap();
+        let tuned =
+            tune_plan_floored(&plan, &machine, &g, &x, 6, &MeasureFloor::quick()).unwrap();
         // same structure, possibly different RB; must stay within budget
         assert_eq!(tuned.vector_loop, plan.vector_loop);
         assert!(tuned.rb.registers() <= machine.vector_regs as usize);
@@ -93,5 +200,79 @@ mod tests {
         let plan = compile(&dims, &machine).unwrap();
         let tuned = tune_plan(&plan, &machine, &g, &x, 4).unwrap();
         assert_eq!(tuned.dims, plan.dims);
+    }
+
+    fn packed_chain(
+        layout: &TtLayout,
+        tt: &crate::ttd::decompose::TtCores,
+        ex: &mut Executor,
+        batch: usize,
+    ) -> Vec<PackedG> {
+        einsum_chain(layout, batch)
+            .iter()
+            .enumerate()
+            .map(|(step, dims)| ex.pack(&tt.cores[layout.d() - 1 - step], dims).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn tune_chain_preserves_structure_and_caches_winners() {
+        let machine = MachineSpec::spacemit_k1();
+        let layout = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        let mut rng = Rng::new(125);
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(&machine);
+        let packed = packed_chain(&layout, &tt, &mut ex, 1);
+        let analytic: Vec<OptimizationPlan> =
+            einsum_chain(&layout, 1).iter().map(|d| ex.plan(d).unwrap()).collect();
+        let tuned = ex.tune_chain(&layout, 1, &packed, &MeasureFloor::quick()).unwrap();
+        assert_eq!(tuned.len(), analytic.len());
+        for (t, a) in tuned.iter().zip(&analytic) {
+            // dims, vectorized loop and packing layout never change —
+            // only RB factors / thread count may
+            assert_eq!(t.dims, a.dims);
+            assert_eq!(t.vector_loop, a.vector_loop);
+            assert_eq!(t.pack_g, a.pack_g);
+            assert!(t.rb.registers() <= machine.vector_regs as usize);
+            assert!(t.threads >= 1);
+            // the winner is what the executor now serves for those dims
+            assert_eq!(ex.plan(&t.dims).unwrap(), *t);
+        }
+    }
+
+    #[test]
+    fn tune_chain_rejects_mismatched_cores() {
+        let machine = MachineSpec::spacemit_k1();
+        let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+        let mut rng = Rng::new(126);
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(&machine);
+        let packed = packed_chain(&layout, &tt, &mut ex, 1);
+        let err = ex.tune_chain(&layout, 1, &packed[..1], &MeasureFloor::quick());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn tuned_chain_output_is_bitwise_identical() {
+        // tuning may pick any RB/thread winner; the serving output must not
+        // move by a single bit (the invariant the artifact TUNE section
+        // and the whole pool design lean on)
+        let machine = MachineSpec::spacemit_k1();
+        let layout = TtLayout::with_uniform_rank(vec![12, 10], vec![10, 18], 8).unwrap();
+        let mut rng = Rng::new(127);
+        let tt = random_cores(&layout, &mut rng);
+        let mut plain = Executor::new(&machine);
+        let packed = packed_chain(&layout, &tt, &mut plain, 1);
+        let x = Tensor::randn(vec![1, layout.n_total() as usize], 1.0, &mut rng);
+        let want = plain.run_tt_chain(&layout, 1, &packed, x.data()).unwrap().to_vec();
+        let mut tuned_ex = Executor::new(&machine);
+        // independent pack (same deterministic plans -> same layout)
+        let packed2 = packed_chain(&layout, &tt, &mut tuned_ex, 1);
+        tuned_ex.tune_chain(&layout, 1, &packed2, &MeasureFloor::quick()).unwrap();
+        let got = tuned_ex.run_tt_chain(&layout, 1, &packed2, x.data()).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "element {i}: {a} vs {b}");
+        }
     }
 }

@@ -9,10 +9,18 @@
 //!                           --top K --measure H --json)
 //!   plan --m .. --b ..     show the compiler plan for one Einsum instance
 //!   kernel-bench           measure ours vs IREE-like vs Pluto-like (Figs 12-14)
+//!   bench                  the measured-performance subsystem: kernel sweep
+//!                          (pinned Table-3 shapes) + serving sweep
+//!                          (workers x max_batch), written as schema-versioned
+//!                          BENCH_kernels.json / BENCH_serve.json so the perf
+//!                          trajectory accumulates PR over PR
+//!                          (--quick --out-dir D --kernels-only --serve-only
+//!                           --config bench.toml)
 //!   compress               run DSE + TT-SVD over a model's FC stack and
 //!                          write a versioned `.ttrv` bundle
 //!                          (--model <zoo-name|spec.toml> --out model.ttrv
-//!                           --rank R --seed S)
+//!                           --rank R --seed S --tune: persist measured
+//!                           autotuned plans in the TUNE section)
 //!   serve-demo             start the serving coordinator on a TT LeNet300
 //!                          (or warm-start it from --artifact model.ttrv),
 //!                          fire synthetic load, print metrics
@@ -91,6 +99,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "plan" => cmd_plan(&args),
         "kernel-bench" => cmd_kernel_bench(&args),
+        "bench" => cmd_bench(&args),
         "compress" => cmd_compress(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
@@ -114,10 +123,13 @@ fn print_help() {
     println!(
         "ttrv — TT decomposition DSE + compiler optimization for RISC-V\n\
          usage: ttrv <command> [--key value ...]\n\
-         commands: tables | dse | plan | kernel-bench | compress | serve-demo | artifacts-check\n\
+         commands: tables | dse | plan | kernel-bench | bench | compress | serve-demo | artifacts-check\n\
          \n\
-         compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R] [--seed S]\n\
+         bench [--quick] [--out-dir D] [--kernels-only|--serve-only] [--config bench.toml]\n\
+         \u{20}        measured kernel + serving sweeps -> BENCH_kernels.json / BENCH_serve.json\n\
+         compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R] [--seed S] [--tune]\n\
          \u{20}        DSE-route + TT-SVD a model's FC stack into a versioned .ttrv bundle\n\
+         \u{20}        (--tune: measure RB/thread candidates per einsum, persist the winners)\n\
          serve-demo [--artifact model.ttrv] [--workers N] [--max-batch B]\n\
          \u{20}        serve a TT LeNet300 (warm-started from the bundle when given)\n\
          artifacts-check --verify model.ttrv\n\
@@ -169,7 +181,9 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let sel = dse::select_solution(&e, rank, cfg.policy()?);
 
     // measured re-rank of the frontier head (runs on the build host, not
-    // the modeled target); resolved up front so --json includes it too
+    // the modeled target) plus a measured host dense baseline, so modeled
+    // and measured speedups sit side by side; resolved up front so --json
+    // includes it too
     let measured = match args.get("measure") {
         None => None,
         Some(v) => {
@@ -177,7 +191,11 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
                 ttrv::Error::config(format!("--measure expects a candidate count, got '{v}'"))
             })?;
             let head = &e.frontier[..head.min(e.frontier.len())];
-            Some(ttrv::dse::select::rerank_measured(head, &MachineSpec::host(), cfg.batch)?)
+            let floor = ttrv::util::timer::MeasureFloor::from_env();
+            let ranked =
+                ttrv::dse::select::rerank_measured(head, &MachineSpec::host(), cfg.batch, &floor)?;
+            let dense_secs = measure_dense_host(m, n, cfg.batch, &floor)?;
+            Some((ranked, dense_secs))
         }
     };
 
@@ -204,16 +222,30 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
             ("dense_params", Json::from(ttrv::ttd::cost::dense_params(m, n) as usize)),
             ("frontier", Json::Arr(e.frontier.iter().map(timed_solution_json).collect())),
             (
+                "dense_measured_time_s",
+                match &measured {
+                    None => Json::Null,
+                    Some((_, dense_secs)) => Json::from(*dense_secs),
+                },
+            ),
+            (
                 "measured_rerank",
                 match &measured {
                     None => Json::Null,
-                    Some(ranked) => Json::Arr(
+                    Some((ranked, dense_secs)) => Json::Arr(
                         ranked
                             .iter()
                             .map(|(s, secs)| {
                                 let mut o = timed_solution_json(s);
                                 if let Json::Obj(map) = &mut o {
                                     map.insert("measured_time_s".into(), Json::from(*secs));
+                                    // modeled `speedup_vs_dense` is already
+                                    // in the object; this is its measured
+                                    // twin, host-dense over host-chain
+                                    map.insert(
+                                        "measured_speedup_vs_dense".into(),
+                                        Json::from(dense_secs / secs),
+                                    );
                                 }
                                 o
                             })
@@ -276,13 +308,40 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
         sel.time_s * 1e6,
         sel.speedup,
     );
-    if let Some(ranked) = &measured {
-        println!("measured re-rank of the frontier head (host, autotuned):");
+    if let Some((ranked, dense_secs)) = &measured {
+        println!(
+            "measured re-rank of the frontier head (host, chain-autotuned; host dense \
+             baseline {:.1} us):",
+            dense_secs * 1e6
+        );
         for (s, secs) in ranked {
-            println!("  {:9.1} us  {}", secs * 1e6, s.layout().describe());
+            println!(
+                "  {:9.1} us  {:>6.1}x measured  {:>6.1}x modeled  {}",
+                secs * 1e6,
+                dense_secs / secs,
+                s.speedup,
+                s.layout().describe()
+            );
         }
     }
     Ok(())
+}
+
+/// Measured host time of the unfactorized dense layer at `batch` — the
+/// measured twin of [`ttrv::dse::explore_timed`]'s modeled
+/// `dense_time_s`, so `dse --measure --json` reports modeled and measured
+/// speedup side by side.
+fn measure_dense_host(
+    m: u64,
+    n: u64,
+    batch: usize,
+    floor: &ttrv::util::timer::MeasureFloor,
+) -> ttrv::Result<f64> {
+    let mut rng = Rng::new(0xd05e);
+    let w = Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng);
+    let fc = ttrv::baselines::dense::DenseFc::new(&w, None)?;
+    let x = Tensor::randn(vec![batch, n as usize], 1.0, &mut rng);
+    ttrv::util::timer::try_min_secs("host dense baseline", || fc.forward(&x).map(|_| ()), floor)
 }
 
 fn cmd_plan(args: &HashMap<String, String>) -> ttrv::Result<()> {
@@ -341,6 +400,93 @@ fn cmd_kernel_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
+/// `ttrv bench`: the measured-performance subsystem. Runs the kernel-level
+/// sweep (pinned Table-3 einsum shapes, ours vs IREE-like vs Pluto-like)
+/// and the serving sweep (`workers x max_batch` through a real pool over
+/// the deterministic compressed LeNet300), then writes the
+/// schema-versioned `BENCH_kernels.json` / `BENCH_serve.json` reports so
+/// every future run appends a point to the perf trajectory.
+fn cmd_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
+    use ttrv::bench::harness;
+    let quick = args.contains_key("quick") || ttrv::util::bench_quick_env();
+    let kernels_only = args.contains_key("kernels-only");
+    let serve_only = args.contains_key("serve-only");
+    if kernels_only && serve_only {
+        return Err(ttrv::Error::config(
+            "--kernels-only and --serve-only are mutually exclusive",
+        ));
+    }
+    // precedence: an explicit --config file > --quick / TTRV_BENCH_QUICK >
+    // the defaults (same explicit-flag-wins rule as `compress`)
+    let typed = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| {
+                ttrv::Error::config(format!("cannot read bench config '{path}': {e}"))
+            })?;
+            Some(ttrv::config::load_bench(&text)?)
+        }
+        None => None,
+    };
+    let bcfg = match &typed {
+        Some(t) => BenchCfg::from_config(t),
+        None if quick => BenchCfg::quick(),
+        None => BenchCfg::default(),
+    };
+    let out_dir = args.get("out-dir").cloned().unwrap_or_else(|| ".".to_string());
+    let out_dir = std::path::Path::new(&out_dir);
+
+    if !serve_only {
+        println!(
+            "kernel sweep ({} mode): 3 einsum kinds x 8 pinned shapes x 3 implementations",
+            if quick { "quick" } else { "full" }
+        );
+        let rows = harness::run_kernel_sweep(&bcfg, quick)?;
+        for r in &rows {
+            let fmt = |s: Option<f64>| match s {
+                Some(v) => format!("{v:.2}x"),
+                None => "-".to_string(),
+            };
+            println!(
+                "  {:<14} ours {:>11} ({:>7.2} GFLOP/s)  vs iree {:>7}  vs pluto {:>7}",
+                r.id,
+                ttrv::bench::format_secs(r.ours.seconds),
+                r.ours.gflops(),
+                fmt(r.speedup(&r.iree_like)),
+                fmt(r.speedup(&r.pluto_like)),
+            );
+        }
+        let path = out_dir.join(harness::BENCH_KERNELS_FILE);
+        harness::write_report(&path, &harness::kernel_report_json(&rows, quick))?;
+        println!("wrote {} ({} rows)", path.display(), rows.len());
+    }
+
+    if !kernels_only {
+        println!("serving sweep: building the deterministic compressed LeNet300 engine...");
+        let machine = MachineSpec::spacemit_k1();
+        let spec = ttrv::artifact::CompressSpec::from_zoo("lenet300", 8, 42)?;
+        let bundle = ttrv::artifact::compress(&spec, &machine, &DseConfig::default())?;
+        let engine = bundle.build_engine(&machine)?;
+        let default_requests = match &typed {
+            Some(t) => t.serve_requests,
+            None if quick => 128,
+            None => ttrv::config::BenchConfig::default().serve_requests,
+        };
+        let requests: usize = get(args, "requests", default_requests)?;
+        let points = harness::default_serve_points(quick);
+        let rows = harness::run_serve_sweep(&engine, &points, requests)?;
+        for r in &rows {
+            println!(
+                "  workers={} max_batch={:<3} {:>8.0} req/s  p50 {:>6} us  p99 {:>6} us  mean batch {:.1}",
+                r.point.workers, r.point.max_batch, r.req_per_s, r.p50_us, r.p99_us, r.mean_batch
+            );
+        }
+        let path = out_dir.join(harness::BENCH_SERVE_FILE);
+        harness::write_report(&path, &harness::serve_report_json(&rows, &bundle.name, quick))?;
+        println!("wrote {} ({} configurations)", path.display(), rows.len());
+    }
+    Ok(())
+}
+
 fn cmd_compress(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let model = args
         .get("model")
@@ -383,7 +529,21 @@ fn cmd_compress(args: &HashMap<String, String>) -> ttrv::Result<()> {
         spec.seed
     );
     let t0 = std::time::Instant::now();
-    let bundle = ttrv::artifact::compress(&spec, &machine, &cfg)?;
+    let mut bundle = ttrv::artifact::compress(&spec, &machine, &cfg)?;
+    if args.contains_key("tune") {
+        // measured autotuning over the stored packed cores; the winners
+        // ride along in the (optional, format v2) TUNE section and
+        // `serve-demo --artifact` warm-starts straight onto them
+        let floor = ttrv::util::timer::MeasureFloor::from_env();
+        let tt0 = std::time::Instant::now();
+        let rep = ttrv::artifact::tune_bundle(&mut bundle, &machine, &floor)?;
+        println!(
+            "autotuned {} TT layer(s): {} measured plans persisted in the TUNE section ({:.2}s)",
+            rep.layers,
+            rep.plans,
+            tt0.elapsed().as_secs_f64()
+        );
+    }
     let dense_params: usize = spec.shapes.iter().map(|&(n, m)| (n * m + m) as usize).sum();
     for entry in bundle.report.as_arr().unwrap_or(&[]) {
         let n = entry.get("n").and_then(Json::as_usize).unwrap_or(0);
@@ -424,21 +584,41 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let machine = MachineSpec::spacemit_k1();
     let mut rng = Rng::new(1);
 
-    let (engine, in_dim) = if let Some(path) = args.get("artifact") {
+    let (engine, in_dim, modeled_tt_secs) = if let Some(path) = args.get("artifact") {
         // warm start: no DSE, no decomposition — the bundle carries packed
-        // cores and compiled plans
+        // cores and compiled (possibly measured-autotuned) plans
         let t0 = std::time::Instant::now();
         let bundle = ttrv::artifact::read_bundle_file(path)?;
         let engine = bundle.build_engine(&machine)?;
+        let tuned_layers = bundle
+            .ops
+            .iter()
+            .filter(|op| matches!(op, ttrv::artifact::BundleOp::Tt(t) if t.tuned.is_some()))
+            .count();
         println!(
-            "warm-started {} from {path} in {:.1} ms ({} FC layers, {} TT)",
+            "warm-started {} from {path} in {:.1} ms ({} FC layers, {} TT, {})",
             bundle.name,
             t0.elapsed().as_secs_f64() * 1e3,
             bundle.shapes.len(),
-            bundle.tt_layers()
+            bundle.tt_layers(),
+            if tuned_layers > 0 {
+                format!("{tuned_layers} serving measured TUNE plans")
+            } else {
+                "analytic plans".to_string()
+            }
         );
+        // modeled per-request TT time (sum of the selected solutions'
+        // batch-1 chain estimates) for the modeled-vs-measured line below
+        let modeled: f64 = bundle
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                ttrv::artifact::BundleOp::Tt(t) => Some(t.selected.time_s),
+                _ => None,
+            })
+            .sum();
         let in_dim = bundle.in_dim;
-        (engine, in_dim)
+        (engine, in_dim, (modeled.is_finite() && modeled > 0.0).then_some(modeled))
     } else {
         // cold start: DSE-route and decompose a TT LeNet300 in process
         let cfg = DseConfig::default();
@@ -466,7 +646,7 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
                 ops.push(LayerOp::Relu);
             }
         }
-        (ModelEngine::new("lenet300-tt", ops, 784, 10), 784)
+        (ModelEngine::new("lenet300-tt", ops, 784, 10), 784, None)
     };
     println!(
         "serving with {} worker(s), max_batch {}, wait {}us, queue {}",
@@ -487,7 +667,23 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("served {requests} requests in {:.1} ms ({:.0} req/s)", dt * 1e3, requests as f64 / dt);
-    println!("{}", server.metrics().summary());
+    let metrics = server.metrics();
+    println!("{}", metrics.summary());
+    if let Some(modeled) = modeled_tt_secs {
+        // modeled (target cost model, batch 1) vs measured (this host's
+        // exec histogram, amortized per request) — the serving half of the
+        // analytic->measured loop the bench harness closes
+        let measured_us = metrics.exec.mean_us() / metrics.mean_batch().max(1.0);
+        if measured_us > 0.0 {
+            println!(
+                "modeled TT chains: {:.1} us/request vs measured exec: {:.1} us/request \
+                 ({:.2}x of the model, host vs modeled target)",
+                modeled * 1e6,
+                measured_us,
+                measured_us / (modeled * 1e6)
+            );
+        }
+    }
     server.shutdown();
     Ok(())
 }
@@ -569,7 +765,14 @@ fn cmd_verify_bundle(path: &str) -> ttrv::Result<()> {
     let bytes = std::fs::read(path)
         .map_err(|e| ttrv::Error::artifact(format!("cannot read bundle {path}: {e}")))?;
     let sections = ttrv::artifact::list_sections(&bytes)?;
-    println!("{path}: format v{}, {} bytes, CRCs ok", ttrv::artifact::FORMAT_VERSION, bytes.len());
+    // list_sections validated the header, so the version field is present
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("validated header"));
+    println!(
+        "{path}: format v{version} (reader supports v{}..=v{}), {} bytes, CRCs ok",
+        ttrv::artifact::MIN_FORMAT_VERSION,
+        ttrv::artifact::FORMAT_VERSION,
+        bytes.len()
+    );
     for s in &sections {
         println!("  section {:>2}: {:>9} bytes  crc32 {:#010x}", s.id, s.len, s.crc);
     }

@@ -6,6 +6,17 @@ pub mod timer;
 pub mod json;
 pub mod log;
 
+/// Whether `TTRV_BENCH_QUICK=1` (or `true`) is set — the shared opt-in for
+/// fast measurement presets ([`crate::bench::BenchCfg::from_env`] and
+/// [`timer::MeasureFloor::from_env`] both honor it, so one env var flips
+/// every measurement path to its quick preset at once).
+pub fn bench_quick_env() -> bool {
+    match std::env::var("TTRV_BENCH_QUICK") {
+        Ok(v) => v == "1" || v.eq_ignore_ascii_case("true"),
+        Err(_) => false,
+    }
+}
+
 /// Integer ceiling division.
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {

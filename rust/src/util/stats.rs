@@ -19,8 +19,24 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 fn sorted(xs: &[f64]) -> Vec<f64> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in stats input"));
+    // total_cmp: NaN sorts to the tails instead of panicking mid-sort — a
+    // single poisoned sample must never kill a server/measurement thread.
+    // Callers that cannot tolerate NaN filter first via [`finite_samples`].
+    v.sort_by(f64::total_cmp);
     v
+}
+
+/// Split a sample set into its finite part, returning how many non-finite
+/// samples were dropped. The measurement harness calls this before any
+/// estimator, so a poisoned sample can never leak NaN into a report: what
+/// remains of a fully non-finite set is an empty sample set (`iters: 0`,
+/// zero estimates), which the BENCH schema gate rejects loudly — while
+/// the comparison-grade timing paths get their typed error from
+/// [`crate::util::timer::try_min_secs`] instead.
+pub fn finite_samples(xs: &[f64]) -> (Vec<f64>, usize) {
+    let finite: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    let dropped = xs.len() - finite.len();
+    (finite, dropped)
 }
 
 /// Interpolated percentile, `p` in [0, 100].
@@ -46,18 +62,20 @@ pub fn median(xs: &[f64]) -> f64 {
 
 /// Mean after trimming `frac` of samples from each tail — the measurement
 /// harness's primary estimator (robust to scheduler noise spikes).
+///
+/// The cut is clamped so at least one sample always survives: for small
+/// `n` (or `frac >= 0.5`) the naive `n * frac` cut could trim everything —
+/// slicing out of bounds or silently yielding NaN, which would poison the
+/// BENCH json. With the clamp, `n <= 2` keeps every sample and odd small
+/// `n` degrades to the median.
 pub fn trimmed_mean(xs: &[f64], frac: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let v = sorted(xs);
-    let cut = ((v.len() as f64) * frac).floor() as usize;
-    let kept = &v[cut..v.len() - cut.min(v.len() - 1 - cut)];
-    if kept.is_empty() {
-        median(&v)
-    } else {
-        mean(kept)
-    }
+    let max_cut = (v.len() - 1) / 2;
+    let cut = (((v.len() as f64) * frac.max(0.0)).floor() as usize).min(max_cut);
+    mean(&v[cut..v.len() - cut])
 }
 
 /// Median absolute deviation (robust spread estimate).
@@ -122,5 +140,39 @@ mod tests {
         assert_eq!(median(&[]), 0.0);
         assert_eq!(trimmed_mean(&[], 0.1), 0.0);
         assert_eq!(mad(&[]), 0.0);
+    }
+
+    #[test]
+    fn trimmed_mean_small_n_never_trims_to_empty() {
+        // the old cut arithmetic could slice out of bounds / return NaN for
+        // small n; every result here must be finite for every frac
+        for frac in [0.0, 0.1, 0.2, 0.4, 0.5, 0.9, 1.0] {
+            assert_eq!(trimmed_mean(&[], frac), 0.0, "n=0 frac={frac}");
+            assert_eq!(trimmed_mean(&[3.0], frac), 3.0, "n=1 frac={frac}");
+            let t2 = trimmed_mean(&[1.0, 3.0], frac);
+            assert!(t2.is_finite() && t2 == 2.0, "n=2 frac={frac}: {t2}");
+            let t3 = trimmed_mean(&[1.0, 2.0, 300.0], frac);
+            assert!(t3.is_finite(), "n=3 frac={frac}: {t3}");
+        }
+        // n=3 with any real trim keeps (at least) the median
+        assert_eq!(trimmed_mean(&[1.0, 2.0, 300.0], 0.4), 2.0);
+        // negative frac clamps to no trimming
+        assert_eq!(trimmed_mean(&[1.0, 3.0], -1.0), 2.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_the_sort() {
+        // total_cmp: NaN sorts to a tail; estimators stay panic-free
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        let _ = median(&xs);
+        let _ = percentile(&xs, 99.0);
+        let _ = trimmed_mean(&xs, 0.25);
+        // ...and the finite filter reports exactly what was dropped
+        let (finite, dropped) = finite_samples(&xs);
+        assert_eq!(finite, vec![1.0, 2.0, 3.0]);
+        assert_eq!(dropped, 1);
+        let (none, dropped) = finite_samples(&[f64::NAN, f64::INFINITY]);
+        assert!(none.is_empty());
+        assert_eq!(dropped, 2);
     }
 }

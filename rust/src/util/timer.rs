@@ -2,6 +2,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::error::{Error, Result};
+
 /// Measure one invocation of `f`, returning (result, elapsed seconds).
 pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let start = Instant::now();
@@ -31,6 +33,171 @@ pub fn time_iters(
         }
     }
     samples
+}
+
+/// The per-candidate measurement floor shared by every min-of-N timing
+/// path (the RB autotuner [`crate::kernels::tune_plan`], the chain tuner,
+/// the measured DSE re-rank and the `ttrv bench` harness).
+///
+/// A candidate is timed until **both** bounds are met. Without the floor,
+/// a best-of-3 on a coarse-clock host reads 0 ns for several candidates
+/// and the "winner" is arbitrary — the bug this type exists to prevent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeasureFloor {
+    /// Minimum iterations of the measured closure.
+    pub min_iters: usize,
+    /// Minimum total wall-clock spent measuring.
+    pub min_elapsed: Duration,
+}
+
+impl Default for MeasureFloor {
+    fn default() -> Self {
+        MeasureFloor { min_iters: 16, min_elapsed: Duration::from_millis(2) }
+    }
+}
+
+impl MeasureFloor {
+    /// Fast preset for CI smoke runs and tests.
+    pub fn quick() -> Self {
+        MeasureFloor { min_iters: 4, min_elapsed: Duration::from_micros(200) }
+    }
+
+    /// Honor `TTRV_BENCH_QUICK=1` (same switch as
+    /// [`crate::bench::BenchCfg::from_env`]).
+    pub fn from_env() -> Self {
+        if crate::util::bench_quick_env() {
+            MeasureFloor::quick()
+        } else {
+            MeasureFloor::default()
+        }
+    }
+}
+
+/// Minimum per-iteration seconds of `f` under a [`MeasureFloor`] — the
+/// estimator every tuning comparison uses (min is right for short
+/// deterministic kernels: noise only ever adds time).
+///
+/// Iterations run in **batches** whose size doubles until a single batch
+/// is clock-resolvable (spans at least a quarter of the elapsed floor), so
+/// per-iteration estimates (`batch elapsed / batch iters`) stay nonzero
+/// even when one call is far below the host clock granularity. Returns
+/// `f64::INFINITY` only if no batch ever observed a nonzero elapsed time
+/// within the runaway cap — callers treat a non-finite result as a typed
+/// measurement error.
+pub fn min_secs(mut f: impl FnMut(), floor: &MeasureFloor) -> f64 {
+    let start = Instant::now();
+    let mut iters_total = 0usize;
+    let mut batch = 1usize;
+    let mut best = f64::INFINITY;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        iters_total += batch;
+        if dt > Duration::ZERO {
+            best = best.min(dt.as_secs_f64() / batch as f64);
+        }
+        if start.elapsed() >= floor.min_elapsed
+            && iters_total >= floor.min_iters.max(1)
+            && best.is_finite()
+        {
+            break;
+        }
+        if dt == Duration::ZERO || dt < floor.min_elapsed / 4 {
+            batch = batch.saturating_mul(2).min(1 << 20);
+        }
+        // hard cap so accidental O(huge) workloads / broken clocks terminate
+        if iters_total >= 10_000_000 {
+            break;
+        }
+    }
+    best
+}
+
+/// Per-iteration samples under a floor, batched for coarse clocks — the
+/// bench harness's sampler ([`crate::bench::measure`]). The batch size
+/// doubles until a single batch is clock-resolvable (nonzero elapsed and
+/// at least a per-sample slice of `min_time`); every sample is then
+/// `batch elapsed / batch iterations`, so trimmed-mean/MAD estimators
+/// stay meaningful on hosts where one call is below the clock
+/// granularity. On fine-grained clocks the batch stays at 1 and this
+/// degrades to [`time_iters`]. Zero-elapsed batches contribute no sample,
+/// so a coarse clock can never poison the sample set with zeros (the same
+/// zero-ns class of bug [`min_secs`] fixes for tuning comparisons).
+pub fn time_iters_batched(
+    mut f: impl FnMut(),
+    min_samples: usize,
+    min_time: Duration,
+) -> Vec<f64> {
+    // saturating divisor: a huge configured sample count must degrade to
+    // "any nonzero batch is resolvable", never overflow/zero-divide
+    let div = 4u64
+        .saturating_mul(min_samples.max(1) as u64)
+        .min(u32::MAX as u64) as u32;
+    let slice = min_time / div;
+    let start = Instant::now();
+    let mut samples = Vec::with_capacity(min_samples.max(8));
+    let mut iters_total = 0usize;
+    let mut batch = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed();
+        iters_total += batch;
+        if dt > Duration::ZERO {
+            samples.push(dt.as_secs_f64() / batch as f64);
+        }
+        if samples.len() >= min_samples.max(1) && start.elapsed() >= min_time {
+            break;
+        }
+        if dt == Duration::ZERO || dt < slice {
+            batch = batch.saturating_mul(2).min(1 << 20);
+        }
+        // hard cap so accidental O(huge) workloads / broken clocks terminate
+        if iters_total >= 10_000_000 {
+            break;
+        }
+    }
+    samples
+}
+
+/// [`min_secs`] for a fallible measured closure — the shared shape of
+/// every tuning/re-rank timing path. The first call runs untimed to warm
+/// caches and surface any plan/shape error; the timed loop then only
+/// repeats a call that already succeeded, so an error inside it is
+/// captured and returned instead of panicking a serving thread. A result
+/// that is still non-finite after the floor is a typed numeric error
+/// naming `what`.
+pub fn try_min_secs(
+    what: &str,
+    mut f: impl FnMut() -> Result<()>,
+    floor: &MeasureFloor,
+) -> Result<f64> {
+    f()?;
+    let mut err = None;
+    let secs = min_secs(
+        || {
+            if err.is_none() {
+                if let Err(e) = f() {
+                    err = Some(e);
+                }
+            }
+        },
+        floor,
+    );
+    if let Some(e) = err {
+        return Err(e);
+    }
+    if !secs.is_finite() {
+        return Err(Error::numeric(format!(
+            "{what}: floored measurement produced a non-finite time"
+        )));
+    }
+    Ok(secs)
 }
 
 /// A stopwatch accumulating named phase durations (coordinator metrics).
@@ -87,6 +254,63 @@ mod tests {
     fn time_iters_respects_min_iters() {
         let samples = time_iters(|| {}, 5, Duration::from_millis(0));
         assert!(samples.len() >= 5);
+    }
+
+    #[test]
+    fn min_secs_meets_the_floor_and_is_finite() {
+        let floor = MeasureFloor { min_iters: 32, min_elapsed: Duration::from_millis(1) };
+        let mut n = 0u64;
+        let t0 = Instant::now();
+        let secs = min_secs(|| n += 1, &floor);
+        // both bounds respected, estimate resolvable even for a ~ns closure
+        assert!(n >= 32, "only {n} iterations ran");
+        assert!(t0.elapsed() >= floor.min_elapsed);
+        assert!(secs.is_finite() && secs > 0.0, "min_secs = {secs}");
+    }
+
+    #[test]
+    fn min_secs_zero_floor_still_runs_once() {
+        let floor = MeasureFloor { min_iters: 0, min_elapsed: Duration::ZERO };
+        let mut ran = false;
+        let secs = min_secs(|| ran = true, &floor);
+        assert!(ran);
+        assert!(secs.is_finite() || secs.is_infinite()); // never NaN
+    }
+
+    #[test]
+    fn time_iters_batched_meets_floor_with_resolvable_samples() {
+        let mut n = 0u64;
+        let samples = time_iters_batched(|| n += 1, 6, Duration::from_millis(1));
+        assert!(samples.len() >= 6, "only {} samples", samples.len());
+        // zero-elapsed batches are excluded, so every sample is positive
+        assert!(samples.iter().all(|&s| s > 0.0 && s.is_finite()));
+    }
+
+    #[test]
+    fn time_iters_batched_survives_absurd_sample_counts() {
+        // 2^30 samples * 4 would overflow a u32 divisor; must not panic
+        // (the floor is unreachable, the runaway cap terminates the loop)
+        // not panicking IS the assertion; the samples themselves are
+        // whatever the runaway cap produced
+        drop(time_iters_batched(|| {}, 1 << 30, Duration::from_nanos(1)));
+        drop(time_iters_batched(|| {}, usize::MAX, Duration::ZERO));
+    }
+
+    #[test]
+    fn try_min_secs_propagates_the_first_error() {
+        let floor = MeasureFloor::quick();
+        let err = try_min_secs("t", || Err(Error::numeric("boom")), &floor).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        let ok = try_min_secs("t", || Ok(()), &floor).unwrap();
+        assert!(ok.is_finite() && ok > 0.0);
+    }
+
+    #[test]
+    fn measure_floor_presets() {
+        let d = MeasureFloor::default();
+        let q = MeasureFloor::quick();
+        assert!(q.min_elapsed < d.min_elapsed);
+        assert!(q.min_iters <= d.min_iters);
     }
 
     #[test]

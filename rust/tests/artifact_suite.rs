@@ -72,6 +72,7 @@ fn single_layer_bundle(tt: &TtCores, plans: Vec<OptimizationPlan>) -> ModelBundl
             plans,
             bias: tt.bias.clone(),
             selected,
+            tuned: None,
         })],
         report: Json::Arr(vec![]),
     }
@@ -442,6 +443,224 @@ fn trailing_garbage_in_ops_is_rejected() {
     let bytes = container(&[(1, valid_meta()), (2, ops), (3, b"[]".to_vec())]);
     let err = artifact::read_bundle_bytes(&bytes).unwrap_err();
     assert!(err.to_string().contains("trailing"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// TUNE section (format v2: persisted measured plans)
+// ---------------------------------------------------------------------------
+
+use ttrv::artifact::format::SEC_TUNE;
+use ttrv::util::timer::MeasureFloor;
+
+/// Rebuild a written bundle's container with its TUNE payload transformed
+/// (CRCs fixed up), so the section grammar can be attacked independently
+/// of the checksum layer.
+fn with_patched_tune(bytes: &[u8], f: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut sections = Vec::with_capacity(count);
+    for i in 0..count {
+        let e = &bytes[HEADER_LEN + i * TOC_ENTRY_LEN..HEADER_LEN + (i + 1) * TOC_ENTRY_LEN];
+        let id = u32::from_le_bytes(e[0..4].try_into().unwrap());
+        let off = u64::from_le_bytes(e[8..16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(e[16..24].try_into().unwrap()) as usize;
+        let mut payload = bytes[off..off + len].to_vec();
+        if id == SEC_TUNE {
+            f(&mut payload);
+        }
+        sections.push((id, payload));
+    }
+    container(&sections)
+}
+
+/// A single-layer bundle whose TUNE section simply repeats the analytic
+/// plans (a legal tuning outcome) — deterministic, no measurement needed.
+fn tuned_single_layer_bundle() -> ModelBundle {
+    let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+    let mut rng = Rng::new(31);
+    let tt = random_cores(&layout, &mut rng);
+    let plans = compiled_plans(&layout, &k1());
+    let mut bundle = single_layer_bundle(&tt, plans.clone());
+    match &mut bundle.ops[0] {
+        BundleOp::Tt(t) => t.tuned = Some(plans),
+        _ => unreachable!(),
+    }
+    bundle
+}
+
+#[test]
+fn tune_section_roundtrips_and_is_optional() {
+    // without tuned plans: no TUNE section in the container
+    let untuned = lenet_bundle();
+    let bytes = artifact::write_bundle(untuned);
+    let ids: Vec<u32> = artifact::list_sections(&bytes).unwrap().iter().map(|s| s.id).collect();
+    assert!(!ids.contains(&SEC_TUNE), "{ids:?}");
+
+    // with measured plans: the section appears and round-trips exactly
+    let mut tuned = untuned.clone();
+    let report = artifact::tune_bundle(&mut tuned, &k1(), &MeasureFloor::quick()).unwrap();
+    assert_eq!(report.layers, 2);
+    assert!(report.plans >= 4, "two d=2 chains");
+    let bytes = artifact::write_bundle(&tuned);
+    let ids: Vec<u32> = artifact::list_sections(&bytes).unwrap().iter().map(|s| s.id).collect();
+    assert!(ids.contains(&SEC_TUNE), "{ids:?}");
+    let back = artifact::read_bundle_bytes(&bytes).unwrap();
+    assert_eq!(back, tuned);
+    for op in &back.ops {
+        if let BundleOp::Tt(t) = op {
+            let plans = t.tuned.as_ref().expect("tuned plans persisted");
+            for (tp, ap) in plans.iter().zip(&t.plans) {
+                assert_eq!(tp.dims, ap.dims);
+                assert_eq!(tp.vector_loop, ap.vector_loop);
+                assert_eq!(tp.pack_g, ap.pack_g);
+            }
+        }
+    }
+}
+
+#[test]
+fn tuned_and_analytic_engines_serve_bitwise_identically() {
+    // the acceptance pin: persisted measured plans change performance
+    // only, never a single output bit
+    let analytic = lenet_bundle();
+    let mut tuned = analytic.clone();
+    artifact::tune_bundle(&mut tuned, &k1(), &MeasureFloor::quick()).unwrap();
+    let tuned = artifact::read_bundle_bytes(&artifact::write_bundle(&tuned)).unwrap();
+    let mut e_analytic = analytic.build_engine(&k1()).unwrap();
+    let mut e_tuned = tuned.build_engine(&k1()).unwrap();
+    let mut rng = Rng::new(17);
+    for batch in [1usize, 4] {
+        let x = Tensor::randn(vec![batch, 784], 1.0, &mut rng);
+        let a = e_analytic.forward(&x).unwrap();
+        let b = e_tuned.forward(&x).unwrap();
+        assert_bitwise_eq(&b, &a, &format!("tuned vs analytic, batch {batch}"));
+    }
+}
+
+#[test]
+fn verify_passes_on_a_tuned_bundle() {
+    // tuned plans are measured (non-reproducible), so verify compares
+    // bytes with the TUNE section stripped — and replays the tuned engine
+    // bitwise against the analytic fresh compression
+    let mut tuned = lenet_bundle().clone();
+    artifact::tune_bundle(&mut tuned, &k1(), &MeasureFloor::quick()).unwrap();
+    let back = artifact::read_bundle_bytes(&artifact::write_bundle(&tuned)).unwrap();
+    let report = artifact::verify(&back, &k1(), &DseConfig::default()).unwrap();
+    assert_eq!(report.tt_layers, 2);
+}
+
+#[test]
+fn server_from_artifact_serves_persisted_tuned_plans_bitwise() {
+    // compress --tune -> serve-demo --artifact, as a library-level e2e
+    let mut tuned = lenet_bundle().clone();
+    artifact::tune_bundle(&mut tuned, &k1(), &MeasureFloor::quick()).unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "ttrv_artifact_suite_tuned_{}.ttrv",
+        std::process::id()
+    ));
+    artifact::write_bundle_file(&path, &tuned).unwrap();
+    let server =
+        Server::from_artifact(&path, &k1(), ttrv::config::ServeConfig::default()).unwrap();
+    let mut reference = lenet_bundle().build_engine(&k1()).unwrap(); // analytic
+    let mut rng = Rng::new(23);
+    for id in 0..8u64 {
+        let input = rng.normal_vec(784, 1.0);
+        let resp = server
+            .infer(InferenceRequest { id, input: input.clone() })
+            .unwrap();
+        let x = Tensor::from_vec(vec![1, 784], input).unwrap();
+        let want = reference.forward(&x).unwrap();
+        for (a, b) in resp.output.iter().zip(want.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "tuned serving drifted");
+        }
+    }
+    server.shutdown();
+    std::fs::remove_file(&path).unwrap();
+}
+
+fn assert_tune_corruption_rejected(bytes: &[u8], what: &str, f: impl FnOnce(&mut Vec<u8>)) {
+    let corrupt = with_patched_tune(bytes, f);
+    let err = artifact::read_bundle_bytes(&corrupt).expect_err(&format!("{what} accepted"));
+    assert!(matches!(err, Error::Artifact(_)), "{what}: {err}");
+    assert!(err.to_string().contains("TUNE"), "{what}: {err}");
+}
+
+#[test]
+fn corrupted_tune_sections_are_typed_errors() {
+    let bundle = tuned_single_layer_bundle();
+    let bytes = artifact::write_bundle(&bundle);
+    // sanity: the untouched container decodes
+    assert_eq!(artifact::read_bundle_bytes(&bytes).unwrap(), bundle);
+
+    // TUNE payload layout: count u32 | idx u32 | plan_count u32 | plans
+    // (plan: kind u8 at +0, dims 5 x u64 at +1, pack_g u8 at +41,
+    //  vloop u8 at +42, ... — first plan starts at payload byte 12)
+    assert_tune_corruption_rejected(&bytes, "truncated", |p| {
+        p.pop();
+    });
+    assert_tune_corruption_rejected(&bytes, "trailing bytes", |p| p.push(0xAB));
+    assert_tune_corruption_rejected(&bytes, "op index out of range", |p| {
+        p[4..8].copy_from_slice(&9u32.to_le_bytes())
+    });
+    assert_tune_corruption_rejected(&bytes, "wrong plan count", |p| {
+        p[8..12].copy_from_slice(&1u32.to_le_bytes())
+    });
+    assert_tune_corruption_rejected(&bytes, "entry count too large", |p| {
+        p[0..4].copy_from_slice(&5u32.to_le_bytes())
+    });
+    assert_tune_corruption_rejected(&bytes, "plan dims drifted", |p| p[13] ^= 0x01);
+    assert_tune_corruption_rejected(&bytes, "vector loop changed", |p| p[54] = (p[54] + 1) % 3);
+}
+
+#[test]
+fn id_4_is_tune_only_from_version_2() {
+    // a version-1 file carrying an id-4 section predates the TUNE
+    // grammar: it is an unknown (possibly third-party) section and must
+    // be skipped, exactly as the v1 reader skipped it — while the same
+    // bytes under a v2 header must be grammar-validated and rejected
+    let bundle = lenet_bundle();
+    let ids_and_payloads: Vec<(u32, Vec<u8>)> = {
+        let bytes = artifact::write_bundle(bundle);
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        (0..count)
+            .map(|i| {
+                let e =
+                    &bytes[HEADER_LEN + i * TOC_ENTRY_LEN..HEADER_LEN + (i + 1) * TOC_ENTRY_LEN];
+                let id = u32::from_le_bytes(e[0..4].try_into().unwrap());
+                let off = u64::from_le_bytes(e[8..16].try_into().unwrap()) as usize;
+                let len = u64::from_le_bytes(e[16..24].try_into().unwrap()) as usize;
+                (id, bytes[off..off + len].to_vec())
+            })
+            .chain(std::iter::once((SEC_TUNE, b"not a TUNE section".to_vec())))
+            .collect()
+    };
+    let mut bytes = container(&ids_and_payloads); // stamped FORMAT_VERSION (2)
+    let err = artifact::read_bundle_bytes(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("TUNE"), "{err}");
+    bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+    let back = artifact::read_bundle_bytes(&bytes).unwrap();
+    assert_eq!(&back, bundle, "v1 id-4 section must be skipped, not decoded");
+}
+
+#[test]
+fn pre_bump_version_1_bundle_still_loads() {
+    // additive forward-compat: the writer stamps v2, but a v1 container
+    // with the same sections must decode identically (the golden bundle
+    // pins the on-disk case; this pins the header rule itself)
+    let bundle = lenet_bundle();
+    let mut bytes = artifact::write_bundle(bundle);
+    assert_eq!(
+        u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+        artifact::FORMAT_VERSION
+    );
+    bytes[4..8].copy_from_slice(&artifact::MIN_FORMAT_VERSION.to_le_bytes());
+    let back = artifact::read_bundle_bytes(&bytes).unwrap();
+    assert_eq!(&back, bundle);
+    // ...and a version below the supported range is still rejected
+    bytes[4..8].copy_from_slice(&0u32.to_le_bytes());
+    let err = artifact::read_bundle_bytes(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("version"), "{err}");
 }
 
 // ---------------------------------------------------------------------------

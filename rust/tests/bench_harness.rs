@@ -1,0 +1,125 @@
+//! Integration suite for the `ttrv bench` measurement subsystem (ISSUE 5):
+//! the harness must produce schema-valid, deterministic-field-order
+//! `BENCH_*.json` files, respect the measurement floor, and never emit
+//! NaN/inf into a report.
+
+use std::time::Duration;
+
+use ttrv::bench::harness::{
+    self, kernel_report_json, kernel_rows, run_serve_sweep, serve_report_json, write_report,
+    ServePoint, BENCH_SCHEMA_VERSION,
+};
+use ttrv::bench::BenchCfg;
+use ttrv::baselines::dense::DenseFc;
+use ttrv::compiler::cb_suite;
+use ttrv::coordinator::{LayerOp, ModelEngine};
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::EinsumKind;
+use ttrv::util::json::{self, Json};
+
+fn tiny_cfg() -> BenchCfg {
+    BenchCfg { warmup_iters: 1, min_iters: 3, min_time: Duration::from_millis(1), trim: 0.2 }
+}
+
+fn toy_engine() -> ModelEngine {
+    let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
+    let fc = DenseFc::new(&w, None).unwrap();
+    ModelEngine::new("toy", vec![LayerOp::Dense(fc)], 4, 2)
+}
+
+/// Every number reachable in a report must be finite (util/json writes
+/// non-finite as null, but the harness should not rely on that for its
+/// regular fields).
+fn assert_all_numbers_finite(v: &Json, path: &str) {
+    match v {
+        Json::Num(n) => assert!(n.is_finite(), "{path} = {n}"),
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                assert_all_numbers_finite(item, &format!("{path}[{i}]"));
+            }
+        }
+        Json::Obj(map) => {
+            for (k, val) in map {
+                assert_all_numbers_finite(val, &format!("{path}.{k}"));
+            }
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn bench_files_are_written_schema_valid_and_reparseable() {
+    let dir = std::env::temp_dir().join(format!("ttrv_bench_harness_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // kernel report over a pinned-shape subset (b capped to keep CI fast)
+    let suite = cb_suite(EinsumKind::Middle);
+    let rows = kernel_rows(&suite[..2], Some(16), &tiny_cfg()).unwrap();
+    let kernels = kernel_report_json(&rows, true);
+    let kpath = dir.join(harness::BENCH_KERNELS_FILE);
+    write_report(&kpath, &kernels).unwrap();
+
+    // serve report over a 2-point grid on a deterministic toy engine
+    let engine = toy_engine();
+    let points = [ServePoint { workers: 1, max_batch: 4 }, ServePoint { workers: 2, max_batch: 8 }];
+    let srows = run_serve_sweep(&engine, &points, 32).unwrap();
+    let serve = serve_report_json(&srows, "toy", true);
+    let spath = dir.join(harness::BENCH_SERVE_FILE);
+    write_report(&spath, &serve).unwrap();
+
+    for (path, schema, doc) in [
+        (&kpath, "ttrv-bench-kernels", &kernels),
+        (&spath, "ttrv-bench-serve", &serve),
+    ] {
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.ends_with('\n'), "{}: report must end with a newline", path.display());
+        let back = json::parse(&text).unwrap();
+        assert_eq!(&back, doc, "{}: file does not round-trip", path.display());
+        assert_eq!(back.get("schema").unwrap().as_str(), Some(schema));
+        assert_eq!(back.get("schema_version").unwrap().as_u64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(back.get("quick").unwrap().as_bool(), Some(true));
+        let results = back.get("results").unwrap().as_arr().unwrap();
+        assert!(!results.is_empty());
+        assert_all_numbers_finite(&back, schema);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn report_field_order_is_deterministic() {
+    // the same rows must serialize to the same bytes, twice — the property
+    // the trajectory diffs rely on (util/json sorts object keys)
+    let suite = cb_suite(EinsumKind::First);
+    let rows = kernel_rows(&suite[..1], Some(8), &tiny_cfg()).unwrap();
+    let a = json::to_string_pretty(&kernel_report_json(&rows, true));
+    let b = json::to_string_pretty(&kernel_report_json(&rows, true));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn measurement_floor_is_respected_per_cell() {
+    let cfg = BenchCfg {
+        warmup_iters: 0,
+        min_iters: 7,
+        min_time: Duration::from_millis(2),
+        trim: 0.2,
+    };
+    let suite = cb_suite(EinsumKind::Final);
+    let rows = kernel_rows(&suite[..1], Some(4), &cfg).unwrap();
+    for m in [&rows[0].ours, &rows[0].iree_like, &rows[0].pluto_like] {
+        assert!(m.iters >= 7, "{}: only {} timed iterations", m.name, m.iters);
+        assert!(m.seconds.is_finite() && m.min.is_finite());
+    }
+}
+
+#[test]
+fn serve_sweep_scales_input_order_independently() {
+    // two runs of the same point produce the same request count and
+    // answer everything (timings vary; correctness may not)
+    let engine = toy_engine();
+    let p = [ServePoint { workers: 2, max_batch: 4 }];
+    let a = run_serve_sweep(&engine, &p, 16).unwrap();
+    let b = run_serve_sweep(&engine, &p, 16).unwrap();
+    assert_eq!(a[0].requests, b[0].requests);
+    assert!(a[0].req_per_s > 0.0 && b[0].req_per_s > 0.0);
+}
