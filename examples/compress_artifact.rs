@@ -64,7 +64,7 @@ fn main() -> ttrv::Result<()> {
     let rxs: Vec<_> = (0..requests)
         .map(|id| {
             server
-                .submit(InferenceRequest { id: id as u64, input: rng.normal_vec(784, 1.0) })
+                .submit(InferenceRequest::new(id as u64, rng.normal_vec(784, 1.0)))
                 .expect("admitted")
         })
         .collect();

@@ -1,13 +1,17 @@
-//! Serving example: stand up the coordinator on a TT-compressed LeNet300
-//! and on the equivalent dense model, drive both with the same synthetic
-//! request trace, and compare throughput/latency and memory.
+//! Serving example: co-host the TT-compressed LeNet300 and its equivalent
+//! dense model in ONE coordinator process (one registry, one sharded
+//! queue, one worker pool), drive both with the same synthetic request
+//! trace routed by model id, and compare per-model throughput/latency and
+//! memory side by side.
 //!
 //! Run: `cargo run --release --example serve_compressed [requests] [workers]`
 //!
 //! `workers` (default 1) sizes the coordinator's batching-worker pool;
-//! each worker shares the compiled model and owns a private executor, so
+//! each worker shares the compiled models and owns a private executor, so
 //! responses are identical at any pool size while throughput scales with
-//! cores. Try `serve_compressed 2000 4` on a multi-core host.
+//! cores. Batches never mix models, so the TT and dense engines compete
+//! for the same workers exactly like two tenants on one edge device. Try
+//! `serve_compressed 2000 4` on a multi-core host.
 
 use std::time::Instant;
 
@@ -67,26 +71,6 @@ fn build_models(rng: &mut Rng) -> ttrv::Result<(ModelEngine, ModelEngine, usize,
     ))
 }
 
-fn drive(server: &Server, requests: usize, rng: &mut Rng) -> (f64, ttrv::coordinator::metrics::Metrics) {
-    // pre-generate the trace so the submission burst is tight and the
-    // dynamic batcher actually gets to group requests
-    let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(784, 1.0)).collect();
-    let t0 = Instant::now();
-    let rxs: Vec<_> = inputs
-        .into_iter()
-        .enumerate()
-        .map(|(id, input)| {
-            server
-                .submit(InferenceRequest { id: id as u64, input })
-                .expect("admitted")
-        })
-        .collect();
-    for rx in rxs {
-        rx.recv().expect("reply").expect("ok");
-    }
-    (t0.elapsed().as_secs_f64(), server.metrics())
-}
-
 fn main() -> ttrv::Result<()> {
     let requests: usize = std::env::args()
         .nth(1)
@@ -102,25 +86,60 @@ fn main() -> ttrv::Result<()> {
         "\nmodel size: dense {dense_params} params vs TT-routed {tt_params} params ({:.1}x)\n",
         dense_params as f64 / tt_params as f64
     );
-    let cfg = ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 4096, workers };
+    let cfg = ServeConfig {
+        max_batch: 16,
+        max_wait_us: 300,
+        queue_cap: 4096,
+        workers,
+        ..ServeConfig::default()
+    };
     cfg.validate()?;
     println!(
-        "coordinator: {workers} worker(s), max_batch {}, wait {}us\n",
+        "coordinator: {workers} worker(s), max_batch {}, wait {}us, both models co-hosted\n",
         cfg.max_batch, cfg.max_wait_us
     );
 
-    let tt_server = Server::start(tt_model, cfg.clone());
-    let (tt_time, tt_metrics) = drive(&tt_server, requests, &mut rng);
-    tt_server.shutdown();
+    // one server, two models — requests carry the model id
+    let server = Server::start_multi(vec![tt_model, dense_model], cfg)?;
+    let names = ["lenet300-tt", "lenet300-dense"];
 
-    let dense_server = Server::start(dense_model, cfg);
-    let (dense_time, dense_metrics) = drive(&dense_server, requests, &mut rng);
-    dense_server.shutdown();
+    // pre-generate the trace so the submission burst is tight and the
+    // dynamic batcher actually gets to group requests; each input goes to
+    // BOTH models so the comparison sees identical work
+    let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(784, 1.0)).collect();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .flat_map(|(id, input)| {
+            names.iter().enumerate().map(move |(mi, name)| {
+                InferenceRequest::new((id * 2 + mi) as u64, input.clone()).for_model(*name)
+            })
+        })
+        .map(|req| server.submit(req).expect("admitted"))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("reply").expect("ok");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests ({requests} per model) in {:>8.1} ms ({:>7.0} req/s)\n",
+        2 * requests,
+        wall * 1e3,
+        (2 * requests) as f64 / wall
+    );
+    for name in names {
+        let m = server.metrics_for(name)?;
+        println!("{name:>15}: {}", m.summary());
+    }
+    let tt_exec = server.metrics_for(names[0])?.exec.mean_us();
+    let dense_exec = server.metrics_for(names[1])?.exec.mean_us();
+    if tt_exec > 0.0 {
+        println!("\nmean exec ratio dense/TT: {:.2}x", dense_exec / tt_exec);
+    }
 
-    println!("TT    : {requests} reqs in {:>8.1} ms  ({:>7.0} req/s)", tt_time * 1e3, requests as f64 / tt_time);
-    println!("        {}", tt_metrics.summary());
-    println!("dense : {requests} reqs in {:>8.1} ms  ({:>7.0} req/s)", dense_time * 1e3, requests as f64 / dense_time);
-    println!("        {}", dense_metrics.summary());
-    println!("\nthroughput ratio TT/dense: {:.2}x", dense_time / tt_time);
+    // the machine-readable view of everything printed above
+    println!("\n{}", ttrv::util::json::to_string_pretty(&server.snapshot()));
+    server.shutdown();
     Ok(())
 }

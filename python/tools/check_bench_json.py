@@ -1,15 +1,24 @@
 #!/usr/bin/env python3
-"""Schema sanity check for the `ttrv bench` trajectory files
-(BENCH_kernels.json / BENCH_serve.json), run by CI after the bench step so
-a malformed report fails the build instead of silently polluting the perf
-trajectory.
+"""Schema sanity check for ttrv's machine-readable JSON artifacts:
+
+* `BENCH_kernels.json`   (schema `ttrv-bench-kernels`, v1)
+* `BENCH_serve.json`     (schema `ttrv-bench-serve`,   v2: per-model rows,
+                          a `models` axis, and an embedded serve snapshot)
+* serve snapshot dumps   (schema `ttrv-serve-snapshot`, v1: the document
+                          `ttrv serve-demo --snapshot-json` writes and
+                          `Server::snapshot()` returns)
+
+Run by CI after the bench/serve steps so a malformed report fails the
+build instead of silently polluting the perf trajectory. Files are
+dispatched by their `schema` field, so any mix of the three kinds can be
+passed in one invocation.
 
 Checks per file: top-level shape, schema name/version, non-empty results,
 required keys per result row, and that every reachable number is finite
 (the Rust writer encodes non-finite as null; a null in a *required numeric
 field that must be positive* is an error here).
 
-Usage: check_bench_json.py BENCH_kernels.json BENCH_serve.json ...
+Usage: check_bench_json.py BENCH_kernels.json BENCH_serve.json snap.json ...
 Exit status: 0 = all files valid, 1 = any violation (printed to stderr).
 """
 
@@ -17,7 +26,11 @@ import json
 import math
 import sys
 
-SCHEMA_VERSION = 1
+EXPECTED_VERSIONS = {
+    "ttrv-bench-kernels": 1,
+    "ttrv-bench-serve": 2,
+    "ttrv-serve-snapshot": 1,
+}
 
 MEASUREMENT_KEYS = ("seconds", "min_seconds", "mad", "iters", "gflops")
 
@@ -27,9 +40,22 @@ KERNEL_ROW_KEYS = (
 )
 
 SERVE_ROW_KEYS = (
-    "workers", "max_batch", "requests", "elapsed_s", "req_per_s",
+    "workers", "max_batch", "models", "requests", "elapsed_s", "req_per_s",
     "p50_us", "p99_us", "mean_batch",
 )
+
+HISTOGRAM_KEYS = ("count", "mean", "p50", "p99", "max", "buckets")
+
+METRICS_KEYS = (
+    "requests", "batches", "rejected", "slo_missed", "mean_batch",
+    "latency_us", "queue_wait_us", "exec_us", "batch_size",
+)
+
+REGISTRY_KEYS = ("models", "resident", "loads", "evictions", "cache_bytes",
+                 "resident_bytes")
+
+SNAPSHOT_MODEL_KEYS = ("model", "resident", "pinned", "engine_bytes",
+                       "req_per_s", "metrics")
 
 
 class Violation(Exception):
@@ -55,7 +81,6 @@ def check_measurement(m, path):
 
 
 def check_kernels(doc):
-    need(doc.get("schema") == "ttrv-bench-kernels", "schema != ttrv-bench-kernels")
     for row in doc["results"]:
         rid = row.get("id", "<missing id>")
         for key in KERNEL_ROW_KEYS:
@@ -71,36 +96,104 @@ def check_kernels(doc):
             need(v is None or (is_finite_number(v) and v > 0), f"results[{rid}].{key}: {v!r}")
 
 
+def check_histogram(h, path):
+    need(isinstance(h, dict), f"{path}: not an object")
+    for key in HISTOGRAM_KEYS:
+        need(key in h, f"{path}: missing '{key}'")
+    for key in ("count", "mean", "p50", "p99", "max"):
+        need(is_finite_number(h[key]) and h[key] >= 0, f"{path}.{key}: {h[key]!r}")
+    need(h["p99"] >= h["p50"], f"{path}: p99 < p50")
+    need(isinstance(h["buckets"], list), f"{path}.buckets: not a list")
+    for i, pair in enumerate(h["buckets"]):
+        need(isinstance(pair, list) and len(pair) == 2,
+             f"{path}.buckets[{i}]: not an [upper_bound, count] pair")
+        need(all(is_finite_number(v) and v >= 0 for v in pair),
+             f"{path}.buckets[{i}]: bad numbers {pair!r}")
+    total = sum(pair[1] for pair in h["buckets"])
+    need(total == h["count"], f"{path}: bucket counts sum to {total}, count is {h['count']}")
+
+
+def check_metrics(m, path):
+    need(isinstance(m, dict), f"{path}: not an object")
+    for key in METRICS_KEYS:
+        need(key in m, f"{path}: missing '{key}'")
+    for key in ("requests", "batches", "rejected", "slo_missed", "mean_batch"):
+        need(is_finite_number(m[key]) and m[key] >= 0, f"{path}.{key}: {m[key]!r}")
+    for key in ("latency_us", "queue_wait_us", "exec_us", "batch_size"):
+        check_histogram(m[key], f"{path}.{key}")
+
+
+def check_snapshot(doc, path="snapshot"):
+    for key in ("uptime_s", "workers", "shards", "queue_depth", "req_per_s"):
+        need(is_finite_number(doc.get(key)) and doc[key] >= 0, f"{path}.{key}: bad value")
+    need(doc["workers"] >= 1 and doc["shards"] >= 1, f"{path}: empty pool")
+    need(doc.get("steal") in ("ring", "off"), f"{path}.steal: {doc.get('steal')!r}")
+    check_metrics(doc.get("process"), f"{path}.process")
+    reg = doc.get("registry")
+    need(isinstance(reg, dict), f"{path}.registry: not an object")
+    for key in REGISTRY_KEYS:
+        need(is_finite_number(reg.get(key)) and reg[key] >= 0, f"{path}.registry.{key}: bad value")
+    models = doc.get("models")
+    need(isinstance(models, list) and models, f"{path}.models: empty")
+    need(reg["models"] == len(models), f"{path}: registry.models != len(models)")
+    for i, row in enumerate(models):
+        mpath = f"{path}.models[{i}]"
+        for key in SNAPSHOT_MODEL_KEYS:
+            need(key in row, f"{mpath}: missing '{key}'")
+        need(isinstance(row["model"], str) and row["model"], f"{mpath}.model: bad name")
+        need(isinstance(row["resident"], bool), f"{mpath}.resident: not a bool")
+        need(isinstance(row["pinned"], bool), f"{mpath}.pinned: not a bool")
+        need(is_finite_number(row["engine_bytes"]) and row["engine_bytes"] >= 0,
+             f"{mpath}.engine_bytes: bad value")
+        need(is_finite_number(row["req_per_s"]) and row["req_per_s"] >= 0,
+             f"{mpath}.req_per_s: bad value")
+        check_metrics(row["metrics"], f"{mpath}.metrics")
+
+
 def check_serve(doc):
-    need(doc.get("schema") == "ttrv-bench-serve", "schema != ttrv-bench-serve")
-    need(isinstance(doc.get("model"), str) and doc["model"], "missing model name")
+    models = doc.get("models")
+    need(isinstance(models, list) and models, "missing/empty 'models' axis")
+    need(all(isinstance(m, str) and m for m in models), "bad model name in 'models'")
     for i, row in enumerate(doc["results"]):
         for key in SERVE_ROW_KEYS:
             need(key in row, f"results[{i}]: missing '{key}'")
             need(is_finite_number(row[key]), f"results[{i}].{key}: not finite: {row[key]!r}")
+        need(isinstance(row.get("model"), str) and row["model"] in models,
+             f"results[{i}].model: not in the models axis")
         need(row["workers"] >= 1 and row["max_batch"] >= 1, f"results[{i}]: bad config")
+        need(1 <= row["models"] <= len(models), f"results[{i}]: bad models count")
         need(row["requests"] >= 1, f"results[{i}]: no requests")
         need(row["req_per_s"] > 0, f"results[{i}]: non-positive throughput")
         need(row["p99_us"] >= row["p50_us"], f"results[{i}]: p99 < p50")
+    snap = doc.get("snapshot")
+    need(isinstance(snap, dict), "missing embedded 'snapshot'")
+    need(snap.get("schema") == "ttrv-serve-snapshot", "snapshot: bad schema stamp")
+    need(snap.get("schema_version") == EXPECTED_VERSIONS["ttrv-serve-snapshot"],
+         "snapshot: bad schema_version")
+    check_snapshot(snap, "snapshot")
 
 
 def check_file(path):
     with open(path) as fh:
         doc = json.load(fh)
     need(isinstance(doc, dict), "top level is not an object")
-    need(doc.get("schema_version") == SCHEMA_VERSION,
-         f"schema_version {doc.get('schema_version')!r} != {SCHEMA_VERSION}")
+    schema = doc.get("schema")
+    need(schema in EXPECTED_VERSIONS, f"unknown schema {schema!r}")
+    expected = EXPECTED_VERSIONS[schema]
+    need(doc.get("schema_version") == expected,
+         f"schema_version {doc.get('schema_version')!r} != {expected}")
+    if schema == "ttrv-serve-snapshot":
+        # a standalone snapshot dump (no quick/results envelope)
+        check_snapshot(doc, "snapshot")
+        return len(doc["models"])
     need(isinstance(doc.get("quick"), bool), "missing/bad 'quick' flag")
     need(isinstance(doc.get("results"), list) and doc["results"], "empty results")
     need(is_finite_number(doc.get("host_threads")) and doc["host_threads"] >= 1,
          "bad host_threads")
-    schema = doc.get("schema")
     if schema == "ttrv-bench-kernels":
         check_kernels(doc)
-    elif schema == "ttrv-bench-serve":
-        check_serve(doc)
     else:
-        raise Violation(f"unknown schema {schema!r}")
+        check_serve(doc)
     return len(doc["results"])
 
 
@@ -113,7 +206,7 @@ def main(argv):
         try:
             n = check_file(path)
             print(f"{path}: ok ({n} result rows)")
-        except (Violation, OSError, json.JSONDecodeError, KeyError) as e:
+        except (Violation, OSError, json.JSONDecodeError, KeyError, TypeError) as e:
             print(f"{path}: INVALID: {e}", file=sys.stderr)
             failed = True
     return 1 if failed else 0

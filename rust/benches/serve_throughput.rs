@@ -1,35 +1,39 @@
-//! Serving throughput under load: sweep `workers x max_batch` on the
-//! TT-compressed LeNet300 coordinator and report requests/sec plus
-//! p50/p99 end-to-end latency per configuration.
+//! Serving throughput under load: sweep `workers x max_batch x models` on
+//! TT-compressed LeNet300 + LeNet5 co-hosted in one coordinator and report
+//! requests/sec plus p50/p99 end-to-end latency per (configuration, model).
 //!
 //! This is the scaling companion to the paper's kernel figures: Figs.
 //! 12-16 show the TT kernels are fast in isolation; this harness shows
 //! the worker pool keeps them fed. On a multi-core host, req/s at
 //! `workers = 4` should clearly exceed `workers = 1` for the same
 //! `max_batch` (each worker owns its own executor over the shared
-//! compiled model, so scaling is lock-free on the hot path).
+//! compiled model, so scaling is lock-free on the hot path). The
+//! two-model points show what co-hosting costs: batches never mix
+//! models, so per-model throughput at `models = 2` is the sharing tax.
+//!
+//! The sweep is written to `BENCH_serve.json` (schema `ttrv-bench-serve`
+//! v2: one row per point x hosted model, plus the final server's
+//! machine-readable snapshot), the same file `ttrv bench` maintains.
 //!
 //! Run: `cargo bench --bench serve_throughput` (honors TTRV_BENCH_QUICK=1).
 
-use std::sync::Arc;
-use std::time::Instant;
-
-use ttrv::config::{DseConfig, ServeConfig};
-use ttrv::coordinator::{InferenceRequest, LayerOp, ModelEngine, Route, Server, TtFcEngine};
+use ttrv::bench::harness::{self, run_serve_sweep, serve_report_json, write_report, ServePoint};
+use ttrv::config::DseConfig;
+use ttrv::coordinator::{LayerOp, ModelEngine, Route, TtFcEngine};
 use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::decompose::random_cores;
 use ttrv::util::prng::Rng;
 
-/// DSE-routed TT LeNet300, built once; every sweep point serves a
-/// [`ModelEngine::worker_clone`] of it, so identical weights are
-/// guaranteed by `Arc` sharing rather than by seed discipline.
-fn build_engine() -> ModelEngine {
+/// DSE-route an FC stack into a TT/dense engine with seeded random
+/// weights; built once per model, every sweep point serves a
+/// [`ModelEngine::worker_clone`], so identical weights are guaranteed by
+/// `Arc` sharing rather than by seed discipline.
+fn build_engine(name: &str, shapes: &[(u64, u64)], seed: u64) -> ModelEngine {
     let machine = MachineSpec::spacemit_k1();
     let cfg = DseConfig::default();
-    let mut rng = Rng::new(42);
+    let mut rng = Rng::new(seed);
     let mut ops = Vec::new();
-    let shapes = [(784u64, 300u64), (300, 100), (100, 10)];
     for (i, &(n, m)) in shapes.iter().enumerate() {
         match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg).expect("policy") {
             Route::Tt(sol) => {
@@ -48,142 +52,87 @@ fn build_engine() -> ModelEngine {
             ops.push(LayerOp::Relu);
         }
     }
-    ModelEngine::new("lenet300-tt", ops, 784, 10)
-}
-
-struct Outcome {
-    workers: usize,
-    max_batch: usize,
-    reqs_per_sec: f64,
-    p50_us: u64,
-    p99_us: u64,
-    mean_batch: f64,
-}
-
-/// Fire `requests` total from `clients` submitter threads (tight burst per
-/// client, then drain replies) and measure wall time to the last reply.
-fn run_config(
-    model: &ModelEngine,
-    workers: usize,
-    max_batch: usize,
-    requests: usize,
-    clients: usize,
-) -> Outcome {
-    let cfg = ServeConfig {
-        max_batch,
-        max_wait_us: 200,
-        queue_cap: requests.max(1024),
-        workers,
-    };
-    cfg.validate().expect("bench config");
-    let server = Arc::new(Server::start(model.worker_clone(), cfg));
-
-    // pre-generate every input so the measured window is submission +
-    // batching + execution, not RNG time
-    let per_client = requests / clients;
-    let traces: Vec<Vec<Vec<f32>>> = (0..clients)
-        .map(|c| {
-            let mut rng = Rng::new(1000 + c as u64);
-            (0..per_client).map(|_| rng.normal_vec(784, 1.0)).collect()
-        })
-        .collect();
-
-    let t0 = Instant::now();
-    let handles: Vec<_> = traces
-        .into_iter()
-        .enumerate()
-        .map(|(c, trace)| {
-            let server = Arc::clone(&server);
-            std::thread::spawn(move || {
-                let mut rxs = Vec::with_capacity(trace.len());
-                for (i, input) in trace.into_iter().enumerate() {
-                    let id = (c * 1_000_000 + i) as u64;
-                    // the queue is sized for the full burst, but stay
-                    // correct under backpressure: retry politely on Full
-                    loop {
-                        match server.submit(InferenceRequest { id, input: input.clone() }) {
-                            Ok(rx) => {
-                                rxs.push(rx);
-                                break;
-                            }
-                            Err(ttrv::Error::QueueFull) => std::thread::yield_now(),
-                            Err(e) => panic!("submit failed: {e}"),
-                        }
-                    }
-                }
-                for rx in rxs {
-                    rx.recv().expect("reply").expect("inference ok");
-                }
-            })
-        })
-        .collect();
-    for h in handles {
-        h.join().expect("client thread");
-    }
-    let elapsed = t0.elapsed().as_secs_f64();
-    let m = server.metrics();
-    let served = per_client * clients;
-    Outcome {
-        workers,
-        max_batch,
-        reqs_per_sec: served as f64 / elapsed,
-        p50_us: m.latency.percentile_us(50.0),
-        p99_us: m.latency.percentile_us(99.0),
-        mean_batch: m.mean_batch(),
-    }
+    let in_dim = shapes[0].0 as usize;
+    let out_dim = shapes[shapes.len() - 1].1 as usize;
+    ModelEngine::new(name, ops, in_dim, out_dim)
 }
 
 fn main() {
     let quick = std::env::var("TTRV_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let requests = if quick { 256 } else { 2000 };
-    let clients = 4;
-    let worker_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
-    let batch_caps: &[usize] = if quick { &[8] } else { &[1, 8, 32] };
-
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let models =
+        [build_engine("lenet300-tt", &[(784, 300), (300, 100), (100, 10)], 42), build_engine(
+            "lenet5-tt",
+            &[(400, 120), (120, 84), (84, 10)],
+            43,
+        )];
+    let points = harness::default_serve_points(quick);
     println!(
-        "== serve_throughput: TT LeNet300, {requests} requests, {clients} clients, {cores} core(s) =="
+        "== serve_throughput: TT LeNet300 + LeNet5, {requests} requests/point, {} point(s), {cores} core(s) ==",
+        points.len()
     );
     println!(
-        "{:>7} {:>9} {:>10} {:>9} {:>9} {:>10}",
-        "workers", "max_batch", "req/s", "p50(us)", "p99(us)", "mean_batch"
+        "{:>7} {:>9} {:>7} {:>12} {:>10} {:>9} {:>9} {:>10}",
+        "workers", "max_batch", "models", "model", "req/s", "p50(us)", "p99(us)", "mean_batch"
     );
 
-    let model = build_engine();
-    let mut outcomes: Vec<Outcome> = Vec::new();
-    for &mb in batch_caps {
-        for &w in worker_counts {
-            let o = run_config(&model, w, mb, requests, clients);
-            println!(
-                "{:>7} {:>9} {:>10.0} {:>9} {:>9} {:>10.2}",
-                o.workers, o.max_batch, o.reqs_per_sec, o.p50_us, o.p99_us, o.mean_batch
-            );
-            outcomes.push(o);
-        }
+    let (rows, snapshot) = run_serve_sweep(&models, &points, requests).expect("serve sweep");
+    for r in &rows {
+        println!(
+            "{:>7} {:>9} {:>7} {:>12} {:>10.0} {:>9} {:>9} {:>10.2}",
+            r.point.workers,
+            r.point.max_batch,
+            r.point.models,
+            r.model,
+            r.req_per_s,
+            r.p50_us,
+            r.p99_us,
+            r.mean_batch
+        );
     }
 
-    // scaling digest: best pool vs single worker at each batch cap
-    for &mb in batch_caps {
-        let single = outcomes
+    // scaling digest over the single-model rows: best pool vs one worker
+    // at each batch cap
+    let single_model: Vec<_> = rows.iter().filter(|r| r.point.models == 1).collect();
+    let mut caps: Vec<usize> = single_model.iter().map(|r| r.point.max_batch).collect();
+    caps.sort_unstable();
+    caps.dedup();
+    for mb in caps {
+        let Some(one) = single_model
             .iter()
-            .find(|o| o.max_batch == mb && o.workers == 1)
-            .expect("single-worker point");
-        let best = outcomes
+            .find(|r| r.point.max_batch == mb && r.point.workers == 1)
+        else {
+            continue;
+        };
+        let best = single_model
             .iter()
-            .filter(|o| o.max_batch == mb)
-            .max_by(|a, b| a.reqs_per_sec.total_cmp(&b.reqs_per_sec))
+            .filter(|r| r.point.max_batch == mb)
+            .max_by(|a, b| a.req_per_s.total_cmp(&b.req_per_s))
             .expect("sweep point");
         println!(
             "max_batch {:>3}: {:>4.2}x scaling ({} -> {} workers, {:.0} -> {:.0} req/s)",
             mb,
-            best.reqs_per_sec / single.reqs_per_sec,
-            single.workers,
-            best.workers,
-            single.reqs_per_sec,
-            best.reqs_per_sec
+            best.req_per_s / one.req_per_s,
+            one.point.workers,
+            best.point.workers,
+            one.req_per_s,
+            best.req_per_s
+        );
+    }
+    // co-hosting digest: per-model throughput with a neighbor present
+    for r in rows.iter().filter(|r| r.point.models > 1) {
+        println!(
+            "co-hosted {} @ workers {} max_batch {}: {:.0} req/s",
+            r.model, r.point.workers, r.point.max_batch, r.req_per_s
         );
     }
     if cores == 1 {
         println!("note: single-core host — pool scaling is not expected here");
     }
+
+    let report = serve_report_json(&rows, quick, &snapshot);
+    write_report(harness::BENCH_SERVE_FILE, &report).expect("write BENCH_serve.json");
+    println!("wrote {} ({} rows)", harness::BENCH_SERVE_FILE, rows.len());
 }

@@ -361,6 +361,31 @@ impl ModelBundle {
         self.ops.iter().filter(|op| matches!(op, BundleOp::Tt(_))).count()
     }
 
+    /// Approximate resident bytes of the engine [`build_engine`] would
+    /// produce: packed core buffers (including layout padding, which *is*
+    /// resident), dense weights, and biases. The serving registry charges
+    /// this against its LRU cache budget without having to build the
+    /// engine first; it matches
+    /// [`ModelEngine::approx_bytes`](crate::coordinator::ModelEngine::approx_bytes)
+    /// for the built engine.
+    ///
+    /// [`build_engine`]: Self::build_engine
+    pub fn engine_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                BundleOp::Tt(t) => {
+                    let cores: usize = t.packed.iter().map(PackedG::bytes).sum();
+                    (cores + t.bias.as_ref().map_or(0, Vec::len) * 4) as u64
+                }
+                BundleOp::Dense(d) => {
+                    ((d.w.numel() + d.bias.as_ref().map_or(0, Vec::len)) * 4) as u64
+                }
+                BundleOp::Relu => 0,
+            })
+            .sum()
+    }
+
     /// Warm-start construction: stamp out a serving [`ModelEngine`]
     /// directly from the bundle — no DSE, no decomposition, no packing;
     /// every TT layer's executor starts with its chain plans pre-seeded.

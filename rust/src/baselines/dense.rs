@@ -45,6 +45,12 @@ impl DenseFc {
     pub fn flops(&self, b: usize) -> u64 {
         (2 * self.m * self.n * b + if self.bias.is_some() { self.m * b } else { 0 }) as u64
     }
+
+    /// Resident bytes of the layer's parameters (transposed weights plus
+    /// bias), the quantity the serving registry's memory budget accounts.
+    pub fn weight_bytes(&self) -> u64 {
+        ((self.m * self.n + self.bias.as_ref().map_or(0, Vec::len)) * 4) as u64
+    }
 }
 
 #[cfg(test)]

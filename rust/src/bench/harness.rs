@@ -10,9 +10,11 @@
 //!   [`Executor`] entry point. Warmup + a minimum-elapsed/minimum-iteration
 //!   budget per cell, 20%-trimmed mean as the primary estimator with the
 //!   fastest iteration alongside ([`crate::bench::measure`]).
-//! * **`BENCH_serve.json`** — the serving sweep: `workers x max_batch`
-//!   through a real [`Server`] pool over the deterministic compressed
-//!   LeNet300 engine, reporting req/s and p50/p99 end-to-end latency.
+//! * **`BENCH_serve.json`** — the serving sweep: `workers x max_batch x
+//!   co-hosted models` through a real [`Server`] pool over deterministic
+//!   compressed engines, reporting one row per `(point, model)` with
+//!   req/s and p50/p99 end-to-end latency, plus the last point's
+//!   [`Server::snapshot`] embedded for the schema gate.
 //!
 //! Reports are emitted via [`crate::util::json`] (sorted object keys =
 //! deterministic field order) and validated in CI by
@@ -37,9 +39,14 @@ use crate::util::stats;
 
 use super::{measure, BenchCfg, Measurement};
 
-/// Version of the `BENCH_*.json` schema; bump on any field change so the
-/// trajectory tooling can tell report generations apart.
-pub const BENCH_SCHEMA_VERSION: u64 = 1;
+/// Version of the `BENCH_kernels.json` schema; bump on any field change
+/// so the trajectory tooling can tell report generations apart.
+pub const BENCH_KERNELS_SCHEMA_VERSION: u64 = 1;
+
+/// Version of the `BENCH_serve.json` schema. v2 (serving v2): per-model
+/// result rows, a `models` axis on every point, and an embedded metrics
+/// snapshot.
+pub const BENCH_SERVE_SCHEMA_VERSION: u64 = 2;
 
 /// Default file name of the kernel-sweep report.
 pub const BENCH_KERNELS_FILE: &str = "BENCH_kernels.json";
@@ -186,7 +193,7 @@ pub fn kernel_report_json(rows: &[KernelRow], quick: bool) -> Json {
         .collect();
     Json::obj(vec![
         ("schema", Json::from("ttrv-bench-kernels")),
-        ("schema_version", Json::from(BENCH_SCHEMA_VERSION as usize)),
+        ("schema_version", Json::from(BENCH_KERNELS_SCHEMA_VERSION as usize)),
         ("quick", Json::from(quick)),
         ("b_cap", opt_f64(quick.then_some(QUICK_B_CAP as f64))),
         ("machine_planned", Json::from(MachineSpec::spacemit_k1().name)),
@@ -202,34 +209,45 @@ pub struct ServePoint {
     pub workers: usize,
     /// Dynamic-batching cap.
     pub max_batch: usize,
+    /// Number of co-hosted models served from one process at this point.
+    pub models: usize,
 }
 
-/// The default `workers x max_batch` grid (`quick` trims it for CI).
+/// The default `workers x max_batch x models` grid (`quick` trims it for
+/// CI but keeps one multi-model point so the co-hosting path stays
+/// smoke-tested).
 pub fn default_serve_points(quick: bool) -> Vec<ServePoint> {
-    let (workers, batches): (&[usize], &[usize]) = if quick {
-        (&[1, 2], &[8])
-    } else {
-        (&[1, 2, 4], &[1, 8, 32])
-    };
     let mut points = Vec::new();
-    for &w in workers {
-        for &b in batches {
-            points.push(ServePoint { workers: w, max_batch: b });
+    if quick {
+        points.push(ServePoint { workers: 1, max_batch: 8, models: 1 });
+        points.push(ServePoint { workers: 2, max_batch: 8, models: 1 });
+        points.push(ServePoint { workers: 2, max_batch: 8, models: 2 });
+    } else {
+        for &w in &[1usize, 2, 4] {
+            for &b in &[1usize, 8, 32] {
+                points.push(ServePoint { workers: w, max_batch: b, models: 1 });
+            }
+        }
+        for &w in &[1usize, 2, 4] {
+            points.push(ServePoint { workers: w, max_batch: 8, models: 2 });
         }
     }
     points
 }
 
-/// Measured outcome of one serving configuration.
+/// Measured outcome of one model at one serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeRow {
     /// The configuration measured.
     pub point: ServePoint,
-    /// Requests served.
+    /// The model this row's requests targeted.
+    pub model: String,
+    /// Requests served to this model.
     pub requests: usize,
-    /// Wall-clock from first submission to last reply.
+    /// Wall-clock from first submission to last reply (shared by every
+    /// model row of one point — the burst is interleaved).
     pub elapsed_s: f64,
-    /// Throughput over that window.
+    /// This model's throughput over that window.
     pub req_per_s: f64,
     /// Median end-to-end latency (interpolated over the measured burst's
     /// replies), microseconds.
@@ -240,22 +258,36 @@ pub struct ServeRow {
     pub mean_batch: f64,
 }
 
-/// Sweep `points` over a model engine: per point, spawn a fresh pool on a
-/// [`ModelEngine::worker_clone`] (identical `Arc`-shared weights at every
-/// point), fire a burst of `requests` seeded inputs, and time to the last
-/// reply. The queue is sized to admit the whole burst, so the sweep
-/// measures batching + execution, never admission rejections.
+/// Sweep `points` over a set of candidate models: each point co-hosts the
+/// first `point.models` engines in one [`Server`] (worker clones, so
+/// every point sees identical `Arc`-shared weights), fires a burst of
+/// `requests` seeded inputs round-robined across the hosted models, and
+/// times to the last reply. The queue is sized to admit the whole burst,
+/// so the sweep measures batching + execution, never admission
+/// rejections. Returns one [`ServeRow`] per `(point, hosted model)` plus
+/// the last point's [`Server::snapshot`].
 pub fn run_serve_sweep(
-    engine: &ModelEngine,
+    models: &[ModelEngine],
     points: &[ServePoint],
     requests: usize,
-) -> Result<Vec<ServeRow>> {
-    let in_dim = engine.in_dim();
-    let mut rows = Vec::with_capacity(points.len());
+) -> Result<(Vec<ServeRow>, Json)> {
+    if models.is_empty() {
+        return Err(Error::serve("serve sweep needs at least one model"));
+    }
+    let mut rows = Vec::new();
+    let mut snapshot = Json::Null;
     for &point in points {
+        if point.models == 0 || point.models > models.len() {
+            return Err(Error::serve(format!(
+                "serve point wants {} co-hosted models, {} available",
+                point.models,
+                models.len()
+            )));
+        }
+        let hosted = &models[..point.models];
         // Warmup (below) is shaped like the real burst: enough concurrent
-        // requests that every worker sees full batches, so the one-off
-        // plan compiles for the swept batch sizes (the engine is
+        // requests per model that every worker sees full batches, so the
+        // one-off plan compiles for the swept batch sizes (the engines are
         // preseeded with batch-1 plans only) cannot land inside the timed
         // window and spike p99.
         let hi = requests.max(16).max(point.workers);
@@ -263,61 +295,92 @@ pub fn run_serve_sweep(
         let cfg = ServeConfig {
             max_batch: point.max_batch,
             max_wait_us: 200,
-            queue_cap: requests.max(warm).max(16),
+            queue_cap: (requests + warm * point.models).max(16),
             workers: point.workers,
+            ..ServeConfig::default()
         };
         cfg.validate()?;
-        let server = Server::start(engine.worker_clone(), cfg);
-        let warm_rxs: Vec<_> = (0..warm as u64)
-            .map(|id| server.submit(InferenceRequest { id, input: vec![0.1; in_dim] }))
-            .collect::<Result<_>>()?;
+        let server =
+            Server::start_multi(hosted.iter().map(ModelEngine::worker_clone).collect(), cfg)?;
+        let mut warm_rxs = Vec::new();
+        for engine in hosted {
+            for id in 0..warm as u64 {
+                warm_rxs.push(server.submit(
+                    InferenceRequest::new(id, vec![0.1; engine.in_dim()])
+                        .for_model(engine.name()),
+                )?);
+            }
+        }
         for rx in warm_rxs {
             rx.recv()
                 .map_err(|_| Error::serve("bench worker dropped a warmup reply"))??;
         }
         let mut rng = Rng::new(0xbe9c);
-        let inputs: Vec<Vec<f32>> = (0..requests).map(|_| rng.normal_vec(in_dim, 1.0)).collect();
+        // round-robin the burst across the co-hosted models
+        let targets: Vec<usize> = (0..requests).map(|i| i % point.models).collect();
+        let inputs: Vec<Vec<f32>> =
+            targets.iter().map(|&t| rng.normal_vec(hosted[t].in_dim(), 1.0)).collect();
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = inputs
             .into_iter()
+            .zip(&targets)
             .enumerate()
-            .map(|(id, input)| server.submit(InferenceRequest { id: id as u64, input }))
+            .map(|(id, (input, &t))| {
+                server.submit(
+                    InferenceRequest::new(id as u64, input).for_model(hosted[t].name()),
+                )
+            })
             .collect::<Result<_>>()?;
         // latency/batch stats come from the measured burst's own replies
         // (exact interpolated percentiles, and the warmup requests above
         // cannot pollute them the way server-wide metrics would)
-        let mut lat_us: Vec<f64> = Vec::with_capacity(requests);
-        let mut batch_sum = 0usize;
-        for rx in rxs {
+        let mut lat_us: Vec<Vec<f64>> = vec![Vec::new(); point.models];
+        let mut batch_sum: Vec<usize> = vec![0; point.models];
+        for (rx, &t) in rxs.into_iter().zip(&targets) {
             let resp = rx
                 .recv()
                 .map_err(|_| Error::serve("bench worker dropped a reply"))??;
-            lat_us.push(resp.latency.as_secs_f64() * 1e6);
-            batch_sum += resp.batch_size;
+            lat_us[t].push(resp.latency.as_secs_f64() * 1e6);
+            batch_sum[t] += resp.batch_size;
         }
         let elapsed_s = t0.elapsed().as_secs_f64();
+        snapshot = server.snapshot();
         server.shutdown();
-        rows.push(ServeRow {
-            point,
-            requests,
-            elapsed_s,
-            req_per_s: if elapsed_s > 0.0 { requests as f64 / elapsed_s } else { 0.0 },
-            p50_us: stats::percentile(&lat_us, 50.0) as u64,
-            p99_us: stats::percentile(&lat_us, 99.0) as u64,
-            mean_batch: batch_sum as f64 / requests.max(1) as f64,
-        });
+        for (t, engine) in hosted.iter().enumerate() {
+            let n = lat_us[t].len();
+            rows.push(ServeRow {
+                point,
+                model: engine.name().to_string(),
+                requests: n,
+                elapsed_s,
+                req_per_s: if elapsed_s > 0.0 { n as f64 / elapsed_s } else { 0.0 },
+                p50_us: if n > 0 { stats::percentile(&lat_us[t], 50.0) as u64 } else { 0 },
+                p99_us: if n > 0 { stats::percentile(&lat_us[t], 99.0) as u64 } else { 0 },
+                mean_batch: batch_sum[t] as f64 / n.max(1) as f64,
+            });
+        }
     }
-    Ok(rows)
+    Ok((rows, snapshot))
 }
 
-/// The `BENCH_serve.json` document for a sweep result.
-pub fn serve_report_json(rows: &[ServeRow], model: &str, quick: bool) -> Json {
+/// The `BENCH_serve.json` document (schema v2) for a sweep result:
+/// per-model rows, the swept model names as a top-level axis, and the
+/// final server's metrics snapshot embedded.
+pub fn serve_report_json(rows: &[ServeRow], quick: bool, snapshot: &Json) -> Json {
+    let mut model_names: Vec<&str> = Vec::new();
+    for r in rows {
+        if !model_names.contains(&r.model.as_str()) {
+            model_names.push(&r.model);
+        }
+    }
     let results = rows
         .iter()
         .map(|r| {
             Json::obj(vec![
                 ("workers", Json::from(r.point.workers)),
                 ("max_batch", Json::from(r.point.max_batch)),
+                ("models", Json::from(r.point.models)),
+                ("model", Json::from(r.model.as_str())),
                 ("requests", Json::from(r.requests)),
                 ("elapsed_s", Json::from(r.elapsed_s)),
                 ("req_per_s", Json::from(r.req_per_s)),
@@ -329,10 +392,11 @@ pub fn serve_report_json(rows: &[ServeRow], model: &str, quick: bool) -> Json {
         .collect();
     Json::obj(vec![
         ("schema", Json::from("ttrv-bench-serve")),
-        ("schema_version", Json::from(BENCH_SCHEMA_VERSION as usize)),
+        ("schema_version", Json::from(BENCH_SERVE_SCHEMA_VERSION as usize)),
         ("quick", Json::from(quick)),
-        ("model", Json::from(model)),
+        ("models", Json::Arr(model_names.into_iter().map(Json::from).collect())),
         ("host_threads", Json::from(host_threads())),
+        ("snapshot", snapshot.clone()),
         ("results", Json::Arr(results)),
     ])
 }
@@ -388,7 +452,10 @@ mod tests {
         // round-trips through our own parser and carries the schema keys
         let back = json::parse(&json::to_string_pretty(&doc)).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some("ttrv-bench-kernels"));
-        assert_eq!(back.get("schema_version").unwrap().as_u64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(
+            back.get("schema_version").unwrap().as_u64(),
+            Some(BENCH_KERNELS_SCHEMA_VERSION)
+        );
         assert_eq!(back.get("quick").unwrap().as_bool(), Some(true));
         let results = back.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 2);
@@ -408,35 +475,51 @@ mod tests {
         }
     }
 
-    fn toy_engine() -> ModelEngine {
+    fn toy_engine(name: &str) -> ModelEngine {
         let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
         let fc = DenseFc::new(&w, None).unwrap();
-        ModelEngine::new("toy", vec![LayerOp::Dense(fc)], 4, 2)
+        ModelEngine::new(name, vec![LayerOp::Dense(fc)], 4, 2)
     }
 
     #[test]
     fn serve_sweep_answers_everything_and_reports() {
-        let engine = toy_engine();
-        let points =
-            [ServePoint { workers: 1, max_batch: 4 }, ServePoint { workers: 2, max_batch: 8 }];
-        let rows = run_serve_sweep(&engine, &points, 24).unwrap();
-        assert_eq!(rows.len(), 2);
+        let models = [toy_engine("toy-a"), toy_engine("toy-b")];
+        let points = [
+            ServePoint { workers: 1, max_batch: 4, models: 1 },
+            ServePoint { workers: 2, max_batch: 8, models: 2 },
+        ];
+        let (rows, snapshot) = run_serve_sweep(&models, &points, 24).unwrap();
+        // one row for the single-model point + two for the co-hosted one
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].requests, 24);
+        assert_eq!(rows[1].requests + rows[2].requests, 24);
         for r in &rows {
-            assert_eq!(r.requests, 24);
             assert!(r.elapsed_s > 0.0);
             assert!(r.req_per_s > 0.0);
             assert!(r.mean_batch >= 1.0);
             assert!(r.p99_us >= r.p50_us);
         }
-        let doc = serve_report_json(&rows, "toy", true);
+        assert_eq!(
+            snapshot.get("schema").and_then(Json::as_str),
+            Some("ttrv-serve-snapshot"),
+            "sweep must return the last server's snapshot"
+        );
+        let doc = serve_report_json(&rows, true, &snapshot);
         let back = json::parse(&json::to_string(&doc)).unwrap();
         assert_eq!(back.get("schema").unwrap().as_str(), Some("ttrv-bench-serve"));
+        assert_eq!(
+            back.get("schema_version").unwrap().as_u64(),
+            Some(BENCH_SERVE_SCHEMA_VERSION)
+        );
+        let names = back.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(names.len(), 2, "both swept models are a top-level axis");
+        assert!(back.get("snapshot").unwrap().get("process").is_some());
         let results = back.get("results").unwrap().as_arr().unwrap();
-        assert_eq!(results.len(), 2);
+        assert_eq!(results.len(), 3);
         for r in results {
             for key in [
-                "workers", "max_batch", "requests", "elapsed_s", "req_per_s", "p50_us",
-                "p99_us", "mean_batch",
+                "workers", "max_batch", "models", "model", "requests", "elapsed_s",
+                "req_per_s", "p50_us", "p99_us", "mean_batch",
             ] {
                 assert!(r.get(key).is_some(), "missing {key}");
             }
@@ -444,9 +527,20 @@ mod tests {
     }
 
     #[test]
+    fn serve_sweep_rejects_a_point_wanting_more_models_than_given() {
+        let models = [toy_engine("only")];
+        let points = [ServePoint { workers: 1, max_batch: 4, models: 2 }];
+        assert!(run_serve_sweep(&models, &points, 8).is_err());
+    }
+
+    #[test]
     fn default_grids_cover_quick_and_full() {
-        assert_eq!(default_serve_points(true).len(), 2);
-        assert_eq!(default_serve_points(false).len(), 9);
+        assert_eq!(default_serve_points(true).len(), 3);
+        assert_eq!(default_serve_points(false).len(), 12);
+        assert!(
+            default_serve_points(true).iter().any(|p| p.models > 1),
+            "quick grid must keep a co-hosting point"
+        );
     }
 
     #[test]

@@ -261,28 +261,85 @@ impl DseConfig {
     }
 }
 
-/// Serving coordinator knobs.
+/// How idle serving workers look for work on other admission shards
+/// (`serve.steal` in the TOML: `"ring"` or `"off"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Idle workers scan the other shards in ring order (the default).
+    Ring,
+    /// Workers consume only their home shard.
+    Off,
+}
+
+impl StealPolicy {
+    /// Parse the TOML string form; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        match s {
+            "ring" => Some(StealPolicy::Ring),
+            "off" => Some(StealPolicy::Off),
+            _ => None,
+        }
+    }
+
+    /// The TOML/JSON string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StealPolicy::Ring => "ring",
+            StealPolicy::Off => "off",
+        }
+    }
+}
+
+/// Serving coordinator knobs (v2: sharded admission, SLO batching, and the
+/// model-registry cache budget ride along with the original four fields).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     /// Largest batch a worker executes; the dynamic batcher closes a batch
     /// at this size even before the wait window expires. Must be >= 1.
     pub max_batch: usize,
     /// Max time (microseconds) a request waits for batch-mates before its
-    /// non-full batch is dispatched anyway.
+    /// non-full batch is dispatched anyway. Also the hard cap on any
+    /// SLO-derived wait budget.
     pub max_wait_us: u64,
-    /// Bounded admission-queue length: submissions beyond this fail fast
-    /// with a queue-full error instead of blocking. Must be >= 1.
+    /// Bounded admission capacity summed across all shards: submissions
+    /// beyond this fail fast with a queue-full error instead of blocking.
+    /// Must be >= 1.
     pub queue_cap: usize,
-    /// Number of batching workers sharing the admission queue. Each worker
-    /// owns a private executor (plan cache + scratch) over the `Arc`-shared
-    /// compiled model, so responses are byte-identical for any worker
-    /// count; throughput scales with cores. Must be >= 1.
+    /// Number of batching workers consuming the admission shards. Each
+    /// worker owns a private executor (plan cache + scratch) over the
+    /// `Arc`-shared compiled model, so responses are byte-identical for
+    /// any worker count; throughput scales with cores. Must be >= 1.
     pub workers: usize,
+    /// Admission shards. 0 = auto (one shard per worker); otherwise
+    /// clamped into `[1, workers]` at server start so every shard has an
+    /// owning worker to drain it at shutdown.
+    pub shards: usize,
+    /// Work-stealing policy for idle workers: `"ring"` (scan other shards)
+    /// or `"off"`. Must name a known policy.
+    pub steal: String,
+    /// Default SLO budget (microseconds) stamped on requests that carry
+    /// none. 0 = no SLO: requests batch under the plain `max_wait_us`
+    /// window.
+    pub slo_us: u64,
+    /// Engine-cache memory budget in bytes for the model registry's LRU.
+    /// 0 = unlimited. The currently requested model always stays resident
+    /// even when it alone exceeds the budget, so a small budget degrades
+    /// to reload-per-switch rather than deadlock.
+    pub cache_bytes: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 16, max_wait_us: 500, queue_cap: 1024, workers: 1 }
+        ServeConfig {
+            max_batch: 16,
+            max_wait_us: 500,
+            queue_cap: 1024,
+            workers: 1,
+            shards: 0,
+            steal: "ring".to_string(),
+            slo_us: 0,
+            cache_bytes: 0,
+        }
     }
 }
 
@@ -290,8 +347,9 @@ impl ServeConfig {
     /// Reject configurations that would deadlock or panic the coordinator
     /// at runtime (zero workers = nobody consumes the queue; zero queue
     /// capacity = every submission rejected; zero max_batch = batches can
-    /// never close). Called by [`load`]; call it yourself when constructing
-    /// a config programmatically.
+    /// never close; an unknown steal policy = a silently ignored knob).
+    /// Called by [`load`]; call it yourself when constructing a config
+    /// programmatically.
     pub fn validate(&self) -> Result<()> {
         if self.workers < 1 {
             return Err(Error::config("serve.workers must be >= 1"));
@@ -302,7 +360,32 @@ impl ServeConfig {
         if self.max_batch < 1 {
             return Err(Error::config("serve.max_batch must be >= 1"));
         }
+        if StealPolicy::parse(&self.steal).is_none() {
+            return Err(Error::config(format!(
+                "serve.steal '{}' unknown (expected 'ring' or 'off')",
+                self.steal
+            )));
+        }
         Ok(())
+    }
+
+    /// The parsed steal policy. Errors with the same message as
+    /// [`validate`](Self::validate) on an unknown name.
+    pub fn steal_policy(&self) -> Result<StealPolicy> {
+        StealPolicy::parse(&self.steal).ok_or_else(|| {
+            Error::config(format!(
+                "serve.steal '{}' unknown (expected 'ring' or 'off')",
+                self.steal
+            ))
+        })
+    }
+
+    /// Effective shard count for a given worker pool: `shards = 0` means
+    /// one shard per worker, and explicit counts are clamped into
+    /// `[1, workers]` so every shard has an owner to drain it.
+    pub fn effective_shards(&self, workers: usize) -> usize {
+        let workers = workers.max(1);
+        if self.shards == 0 { workers } else { self.shards.clamp(1, workers) }
     }
 }
 
@@ -509,6 +592,18 @@ pub fn load(text: &str) -> Result<(DseConfig, ServeConfig)> {
     if let Some(v) = non_negative(&t, "serve", "workers")? {
         serve.workers = v as usize;
     }
+    if let Some(v) = non_negative(&t, "serve", "shards")? {
+        serve.shards = v as usize;
+    }
+    if let Some(v) = t.get_str("serve", "steal") {
+        serve.steal = v.to_string();
+    }
+    if let Some(v) = non_negative(&t, "serve", "slo_us")? {
+        serve.slo_us = v;
+    }
+    if let Some(v) = non_negative(&t, "serve", "cache_bytes")? {
+        serve.cache_bytes = v;
+    }
     dse.validate()?;
     serve.validate()?;
     Ok((dse, serve))
@@ -561,6 +656,10 @@ mod tests {
             [serve]
             max_batch = 8
             workers = 2
+            shards = 2
+            steal = "off"
+            slo_us = 4000
+            cache_bytes = 1048576
             "#,
         )
         .unwrap();
@@ -569,6 +668,10 @@ mod tests {
         assert_eq!(dse.batch, 16);
         assert_eq!(serve.max_batch, 8);
         assert_eq!(serve.workers, 2);
+        assert_eq!(serve.shards, 2);
+        assert_eq!(serve.steal_policy().unwrap(), StealPolicy::Off);
+        assert_eq!(serve.slo_us, 4000);
+        assert_eq!(serve.cache_bytes, 1_048_576);
     }
 
     #[test]
@@ -585,6 +688,10 @@ mod tests {
             ("[serve]\nqueue_cap = 0", "queue_cap"),
             ("[serve]\nmax_batch = 0", "max_batch"),
             ("[serve]\nworkers = -4", "workers"),
+            ("[serve]\nsteal = \"random\"", "steal"),
+            ("[serve]\nshards = -1", "shards"),
+            ("[serve]\nslo_us = -5", "slo_us"),
+            ("[serve]\ncache_bytes = -1", "cache_bytes"),
         ] {
             let err = load(text).expect_err(text).to_string();
             assert!(err.contains(needle), "{text}: {err}");
@@ -720,6 +827,22 @@ mod tests {
         ServeConfig::default().validate().unwrap();
         let s = ServeConfig { workers: 0, ..Default::default() };
         assert!(s.validate().is_err());
+        let s = ServeConfig { steal: "chaos".to_string(), ..Default::default() };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn effective_shards_clamps_to_worker_pool() {
+        let auto = ServeConfig::default(); // shards = 0 -> one per worker
+        assert_eq!(auto.effective_shards(4), 4);
+        assert_eq!(auto.effective_shards(1), 1);
+        let pinned = ServeConfig { shards: 8, ..Default::default() };
+        // never more shards than workers: every shard needs an owner to
+        // drain it at shutdown
+        assert_eq!(pinned.effective_shards(3), 3);
+        assert_eq!(pinned.effective_shards(16), 8);
+        let one = ServeConfig { shards: 1, ..Default::default() };
+        assert_eq!(one.effective_shards(4), 1);
         let d = DseConfig { time_speedup_min: f64::NAN, ..Default::default() };
         assert!(d.validate().is_err());
         let d = DseConfig { time_speedup_min: f64::INFINITY, ..Default::default() };

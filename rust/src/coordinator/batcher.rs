@@ -1,8 +1,13 @@
 //! Dynamic batching policy (pure logic, independently testable).
 //!
-//! Requests accumulate until the batch is full or the oldest request has
-//! waited `max_wait`; then the batch closes. The same policy a serving
-//! frontend (vLLM-style) applies, scaled to this system.
+//! Requests accumulate until the batch is full or the earliest *deadline*
+//! among the admitted requests is reached; then the batch closes. Each
+//! push carries its own wait budget — for an SLO-tagged request the server
+//! passes a fraction of the remaining SLO (dispatch when the budget is
+//! nearly spent, leaving headroom to execute), for an untagged request it
+//! passes the configured `max_wait`, which reproduces the classic
+//! oldest-request-waits-`max_wait` policy exactly. The same policy a
+//! serving frontend (vLLM-style) applies, scaled to this system.
 
 use std::time::{Duration, Instant};
 
@@ -11,49 +16,60 @@ use std::time::{Duration, Instant};
 pub struct Batcher {
     max_batch: usize,
     max_wait: Duration,
-    opened_at: Option<Instant>,
+    deadline: Option<Instant>,
     pending: usize,
 }
 
 impl Batcher {
-    /// A policy closing batches at `max_batch` requests or `max_wait`
-    /// after the oldest pending request arrived, whichever comes first.
+    /// A policy closing batches at `max_batch` requests or at the earliest
+    /// per-request deadline, whichever comes first. `max_wait` caps every
+    /// wait budget, so no admitted request ever lingers longer than the
+    /// configured maximum (clamped to one hour so extreme configs cannot
+    /// overflow deadline arithmetic).
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch >= 1);
-        Batcher { max_batch, max_wait, opened_at: None, pending: 0 }
+        Batcher {
+            max_batch,
+            max_wait: max_wait.min(Duration::from_secs(3600)),
+            deadline: None,
+            pending: 0,
+        }
     }
 
-    /// Record an arriving request; returns true if the batch is now full
-    /// and must be dispatched.
-    pub fn push(&mut self, now: Instant) -> bool {
-        if self.pending == 0 {
-            self.opened_at = Some(now);
-        }
+    /// Record a request that arrived at `arrival` and is willing to wait
+    /// `wait_budget` (capped by `max_wait`) for batch-mates; returns true
+    /// if the batch is now full and must be dispatched. The batch deadline
+    /// is the minimum over the admitted requests' deadlines, so one
+    /// tight-SLO request pulls the whole batch forward and later pushes
+    /// can never extend it.
+    pub fn push(&mut self, arrival: Instant, wait_budget: Duration) -> bool {
+        let d = arrival + wait_budget.min(self.max_wait);
+        self.deadline = Some(match self.deadline {
+            Some(cur) => cur.min(d),
+            None => d,
+        });
         self.pending += 1;
         self.pending >= self.max_batch
     }
 
-    /// Should a non-full batch be dispatched due to the wait deadline?
+    /// Should a non-full batch be dispatched due to its deadline?
     pub fn deadline_reached(&self, now: Instant) -> bool {
-        match self.opened_at {
-            Some(t0) if self.pending > 0 => now.duration_since(t0) >= self.max_wait,
+        match self.deadline {
+            Some(d) if self.pending > 0 => now >= d,
             _ => false,
         }
     }
 
     /// Time the queue worker may sleep before the deadline fires.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        self.opened_at.map(|t0| {
-            let elapsed = now.duration_since(t0);
-            self.max_wait.saturating_sub(elapsed)
-        })
+        self.deadline.map(|d| d.saturating_duration_since(now))
     }
 
     /// Close the batch, returning its size.
     pub fn take(&mut self) -> usize {
         let n = self.pending;
         self.pending = 0;
-        self.opened_at = None;
+        self.deadline = None;
         n
     }
 
@@ -72,23 +88,26 @@ impl Batcher {
 mod tests {
     use super::*;
 
+    const WAIT: Duration = Duration::from_millis(10);
+
     #[test]
     fn fills_to_max_batch() {
-        let mut b = Batcher::new(3, Duration::from_millis(10));
+        let mut b = Batcher::new(3, WAIT);
         let t = Instant::now();
-        assert!(!b.push(t));
-        assert!(!b.push(t));
-        assert!(b.push(t)); // full
+        assert!(!b.push(t, WAIT));
+        assert!(!b.push(t, WAIT));
+        assert!(b.push(t, WAIT)); // full
         assert_eq!(b.take(), 3);
         assert_eq!(b.pending(), 0);
     }
 
     #[test]
     fn deadline_fires_only_with_pending() {
-        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(8, wait);
         let t0 = Instant::now();
         assert!(!b.deadline_reached(t0 + Duration::from_secs(1)));
-        b.push(t0);
+        b.push(t0, wait);
         assert!(!b.deadline_reached(t0));
         assert!(b.deadline_reached(t0 + Duration::from_millis(5)));
         assert_eq!(b.take(), 1);
@@ -97,10 +116,10 @@ mod tests {
 
     #[test]
     fn time_to_deadline_counts_down() {
-        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let mut b = Batcher::new(8, WAIT);
         let t0 = Instant::now();
         assert!(b.time_to_deadline(t0).is_none());
-        b.push(t0);
+        b.push(t0, WAIT);
         let left = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
         assert!(left <= Duration::from_millis(6));
         let left2 = b.time_to_deadline(t0 + Duration::from_millis(40)).unwrap();
@@ -108,17 +127,48 @@ mod tests {
     }
 
     #[test]
+    fn tighter_slo_budget_pulls_the_batch_deadline_forward() {
+        // deadline-aware batching: a second request with a 1 ms budget
+        // tightens a batch that opened with a 10 ms budget
+        let mut b = Batcher::new(8, WAIT);
+        let t0 = Instant::now();
+        b.push(t0, WAIT);
+        assert!(!b.deadline_reached(t0 + Duration::from_millis(2)));
+        b.push(t0 + Duration::from_millis(1), Duration::from_millis(1));
+        assert!(b.deadline_reached(t0 + Duration::from_millis(2)));
+        assert_eq!(
+            b.time_to_deadline(t0 + Duration::from_millis(1)).unwrap(),
+            Duration::from_millis(1)
+        );
+        // taking the batch clears the tightened deadline
+        b.take();
+        assert!(b.time_to_deadline(t0).is_none());
+    }
+
+    #[test]
+    fn wait_budget_is_capped_by_max_wait() {
+        // a huge SLO must not let a request linger past the configured cap
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(8, wait);
+        let t0 = Instant::now();
+        b.push(t0, Duration::from_secs(3600));
+        assert!(!b.deadline_reached(t0 + Duration::from_millis(4)));
+        assert!(b.deadline_reached(t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
     fn property_deadline_fires_exactly_at_max_wait() {
-        // the deadline must never fire before max_wait has elapsed since
-        // the batch opened, and must always fire at/after it
+        // with every push carrying the full max_wait budget (the no-SLO
+        // path), the deadline must never fire before max_wait has elapsed
+        // since the batch opened, and must always fire at/after it
         crate::testkit::check("deadline fires at max_wait", 50, |d| {
             let wait = Duration::from_micros(d.usize_in(1, 10_000) as u64);
             let mut b = Batcher::new(d.usize_in(2, 64), wait);
             let t0 = Instant::now();
-            b.push(t0);
+            b.push(t0, wait);
             // later pushes must not extend the deadline of the open batch
             for i in 0..d.usize_in(0, 5) {
-                b.push(t0 + Duration::from_micros(i as u64));
+                b.push(t0 + Duration::from_micros(i as u64), wait);
             }
             let just_before = t0 + wait - Duration::from_nanos(1);
             if b.deadline_reached(just_before) {
@@ -138,16 +188,47 @@ mod tests {
     }
 
     #[test]
+    fn property_deadline_is_min_over_admitted_budgets() {
+        // mixed SLO budgets: the batch deadline equals the earliest
+        // (arrival + min(budget, max_wait)) among the admitted requests
+        crate::testkit::check("deadline = min over budgets", 50, |d| {
+            let max_wait = Duration::from_micros(d.usize_in(1, 5_000) as u64);
+            let mut b = Batcher::new(64, max_wait);
+            let t0 = Instant::now();
+            let mut want: Option<Instant> = None;
+            for _ in 0..d.usize_in(1, 8) {
+                let arrival = t0 + Duration::from_micros(d.usize_in(0, 2_000) as u64);
+                let budget = Duration::from_micros(d.usize_in(0, 10_000) as u64);
+                b.push(arrival, budget);
+                let deadline = arrival + budget.min(max_wait);
+                want = Some(match want {
+                    Some(w) => w.min(deadline),
+                    None => deadline,
+                });
+            }
+            let want = want.expect("at least one push");
+            if b.deadline_reached(want - Duration::from_nanos(1)) {
+                return Err("fired before the earliest budget was spent".into());
+            }
+            if !b.deadline_reached(want) {
+                return Err("missed the earliest budget deadline".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn property_full_batch_exactly_at_max() {
         // push must report full exactly on the max_batch-th request, never
         // earlier, regardless of interleaved takes
         crate::testkit::check("full exactly at max_batch", 50, |d| {
             let max = d.usize_in(1, 32);
-            let mut b = Batcher::new(max, Duration::from_millis(1));
+            let wait = Duration::from_millis(1);
+            let mut b = Batcher::new(max, wait);
             let t = Instant::now();
             for _round in 0..d.usize_in(1, 4) {
                 for i in 1..=max {
-                    let full = b.push(t);
+                    let full = b.push(t, wait);
                     if full != (i == max) {
                         return Err(format!("push {i}/{max} reported full={full}"));
                     }
@@ -167,13 +248,14 @@ mod tests {
     fn property_batch_never_exceeds_max() {
         crate::testkit::check("batch <= max_batch", 50, |d| {
             let max = d.usize_in(1, 16);
-            let mut b = Batcher::new(max, Duration::from_millis(1));
+            let wait = Duration::from_millis(1);
+            let mut b = Batcher::new(max, wait);
             let t = Instant::now();
             let mut total_in = 0usize;
             let mut total_out = 0usize;
             for _ in 0..d.usize_in(0, 60) {
                 total_in += 1;
-                if b.push(t) {
+                if b.push(t, wait) {
                     let n = b.take();
                     if n > max {
                         return Err(format!("batch {n} > max {max}"));

@@ -305,6 +305,28 @@ impl ModelEngine {
         ModelEngine { shared: Arc::clone(&self.shared), execs }
     }
 
+    /// Approximate resident bytes of the `Arc`-shared compiled model
+    /// (packed TT cores, dense weights, biases). Worker views and plan
+    /// caches are excluded — this is the quantity the model registry's
+    /// LRU budget accounts, and it matches
+    /// [`crate::artifact::ModelBundle::engine_bytes`] for a bundle-built
+    /// engine.
+    pub fn approx_bytes(&self) -> u64 {
+        self.shared
+            .ops
+            .iter()
+            .map(|op| match op {
+                SharedOp::Tt(tt) => {
+                    let cores: usize = tt.packed.iter().map(PackedG::bytes).sum();
+                    let bias = tt.bias.as_ref().map_or(0, |b| b.len() * 4);
+                    (cores + bias) as u64
+                }
+                SharedOp::Dense(fc) => fc.weight_bytes(),
+                SharedOp::Relu => 0,
+            })
+            .sum()
+    }
+
     /// Forward a batch `(B, in_dim) -> (B, out_dim)`.
     pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
         let mut cur = x.clone();

@@ -1,8 +1,14 @@
-//! Serving metrics: latency histograms and throughput counters.
+//! Serving metrics: latency histograms, throughput counters, and the
+//! machine-readable JSON forms the snapshot endpoint is built from.
 
 use std::time::Duration;
 
-/// Log-scaled latency histogram (microseconds, factor-2 buckets from 1us).
+use crate::util::json::Json;
+
+/// Log-scaled histogram (factor-2 buckets from 1). Time histograms record
+/// microseconds via [`record`](Self::record); the batch-size histogram
+/// feeds raw counts through [`record_value`](Self::record_value), where
+/// the `_us` accessors read as unitless values.
 #[derive(Debug, Clone)]
 pub struct Histogram {
     buckets: Vec<u64>,
@@ -20,12 +26,16 @@ impl Default for Histogram {
 impl Histogram {
     /// Record one duration sample.
     pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros() as u64;
-        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.record_value(d.as_micros() as u64);
+    }
+
+    /// Record one raw sample (batch sizes, queue depths).
+    pub fn record_value(&mut self, v: u64) {
+        let idx = (64 - v.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
         self.buckets[idx] += 1;
         self.count += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
+        self.sum_us += v;
+        self.max_us = self.max_us.max(v);
     }
 
     /// Fold another histogram into this one (shard merging). Buckets are
@@ -60,28 +70,59 @@ impl Histogram {
         self.max_us
     }
 
-    /// Approximate percentile from bucket boundaries (upper bound).
+    /// Approximate percentile from bucket boundaries (upper bound, never
+    /// above the largest recorded sample). Defensive by construction so
+    /// snapshot JSON can never carry garbage quantiles: an empty histogram
+    /// answers 0 for every `p`, `p` is clamped into `[0, 100]`, and a
+    /// non-finite `p` reads as 100.
     pub fn percentile_us(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
         }
-        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let p = if p.is_finite() { p.clamp(0.0, 100.0) } else { 100.0 };
+        // rank of the sample to report; >= 1 so p = 0 describes the
+        // smallest recorded sample instead of blindly reading bucket 0
+        let target = ((p / 100.0 * self.count as f64).ceil() as u64).max(1);
         let mut seen = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return 1u64 << (i + 1); // bucket upper bound
+                return (1u64 << (i + 1)).min(self.max_us.max(1));
             }
         }
         self.max_us
+    }
+
+    /// Machine-readable form: counts, mean/max, p50/p99, and the non-empty
+    /// `[upper_bound, count]` bucket pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![Json::from((1u64 << (i + 1)) as usize), Json::from(c as usize)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", Json::from(self.count as usize)),
+            ("mean", Json::from(self.mean_us())),
+            ("p50", Json::from(self.percentile_us(50.0) as usize)),
+            ("p99", Json::from(self.percentile_us(99.0) as usize)),
+            ("max", Json::from(self.max_us as usize)),
+            ("buckets", Json::Arr(buckets)),
+        ])
     }
 }
 
 /// Aggregated serving metrics.
 ///
-/// With a worker pool each worker owns a private `Metrics` shard (no
-/// cross-worker contention on the hot path); [`super::Server::metrics`]
-/// merges the shards into one snapshot via [`Metrics::merge`].
+/// With a worker pool each worker owns a private per-model `Metrics` shard
+/// (no cross-worker contention on the hot path); [`super::Server::metrics`]
+/// merges the shards into one snapshot via [`Metrics::merge`], and
+/// [`super::Server::snapshot`] exports the per-model and process-wide
+/// views as versioned JSON.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     /// End-to-end request latency (enqueue -> reply).
@@ -90,12 +131,16 @@ pub struct Metrics {
     pub queue_wait: Histogram,
     /// Model execution time per batch.
     pub exec: Histogram,
+    /// Executed batch sizes (one sample per dispatched batch).
+    pub batch_sizes: Histogram,
     /// Requests answered.
     pub requests: u64,
     /// Batches executed.
     pub batches: u64,
     /// Requests refused by admission control (queue full).
     pub rejected: u64,
+    /// Requests answered later than their SLO budget allowed.
+    pub slo_missed: u64,
     /// Sum of executed batch sizes (`requests`, kept separate so the
     /// invariant `batch_size_sum == requests` is checkable after merging).
     pub batch_size_sum: u64,
@@ -107,9 +152,11 @@ impl Metrics {
         self.latency.merge(&other.latency);
         self.queue_wait.merge(&other.queue_wait);
         self.exec.merge(&other.exec);
+        self.batch_sizes.merge(&other.batch_sizes);
         self.requests += other.requests;
         self.batches += other.batches;
         self.rejected += other.rejected;
+        self.slo_missed += other.slo_missed;
         self.batch_size_sum += other.batch_size_sum;
     }
 
@@ -136,6 +183,22 @@ impl Metrics {
             self.latency.mean_us(),
             self.latency.max_us(),
         )
+    }
+
+    /// Machine-readable form used by the snapshot endpoint: every counter
+    /// plus the four histograms.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::from(self.requests as usize)),
+            ("batches", Json::from(self.batches as usize)),
+            ("rejected", Json::from(self.rejected as usize)),
+            ("slo_missed", Json::from(self.slo_missed as usize)),
+            ("mean_batch", Json::from(self.mean_batch())),
+            ("latency_us", self.latency.to_json()),
+            ("queue_wait_us", self.queue_wait.to_json()),
+            ("exec_us", self.exec.to_json()),
+            ("batch_size", self.batch_sizes.to_json()),
+        ])
     }
 }
 
@@ -167,6 +230,53 @@ mod tests {
         let p90 = h.percentile_us(90.0);
         let p99 = h.percentile_us(99.0);
         assert!(p50 <= p90 && p90 <= p99);
+    }
+
+    #[test]
+    fn percentile_edge_cases_empty_and_single_sample() {
+        // ISSUE 6 satellite: n = 0 and n = 1 with p in {-1, 0, 100, 101}
+        // must never emit garbage into snapshot JSON.
+        let h = Histogram::default();
+        for p in [-1.0, 0.0, 100.0, 101.0, f64::NAN] {
+            assert_eq!(h.percentile_us(p), 0, "empty histogram must stay quiet at p={p}");
+        }
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+
+        let mut h = Histogram::default();
+        h.record(Duration::from_micros(1500));
+        for p in [-1.0, 0.0, 100.0, 101.0, f64::NAN] {
+            assert_eq!(h.percentile_us(p), 1500, "n=1: every percentile is the sample (p={p})");
+        }
+        assert_eq!(h.mean_us(), 1500.0);
+    }
+
+    #[test]
+    fn percentile_p_is_clamped_into_range() {
+        let mut h = Histogram::default();
+        for i in 0..100u64 {
+            h.record(Duration::from_micros(i + 1));
+        }
+        assert_eq!(h.percentile_us(-5.0), h.percentile_us(0.0));
+        assert_eq!(h.percentile_us(250.0), h.percentile_us(100.0));
+        // p = 0 must describe the smallest sample's bucket, not report a
+        // phantom value out of empty bucket 0
+        assert!(h.percentile_us(0.0) >= 1);
+        assert!(h.percentile_us(0.0) <= h.percentile_us(50.0));
+        // the upper-bound estimate is clamped to the observed maximum
+        assert!(h.percentile_us(100.0) <= h.max_us());
+    }
+
+    #[test]
+    fn record_value_feeds_batch_size_histograms() {
+        let mut h = Histogram::default();
+        for v in [1u64, 4, 8, 8] {
+            h.record_value(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max_us(), 8);
+        assert!((h.mean_us() - 5.25).abs() < 1e-9);
+        assert!(h.percentile_us(99.0) >= 8);
     }
 
     #[test]
@@ -216,14 +326,44 @@ mod tests {
             ..Default::default()
         };
         a.latency.record(Duration::from_micros(100));
-        let mut b = Metrics { requests: 5, batches: 2, batch_size_sum: 5, ..Default::default() };
+        a.batch_sizes.record_value(4);
+        let mut b = Metrics {
+            requests: 5,
+            batches: 2,
+            slo_missed: 2,
+            batch_size_sum: 5,
+            ..Default::default()
+        };
         b.latency.record(Duration::from_micros(400));
         a.merge(&b);
         assert_eq!(a.requests, 15);
         assert_eq!(a.batches, 5);
         assert_eq!(a.rejected, 1);
+        assert_eq!(a.slo_missed, 2);
         assert_eq!(a.batch_size_sum, 15);
         assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.batch_sizes.count(), 1);
         assert_eq!(a.mean_batch(), 3.0);
+    }
+
+    #[test]
+    fn json_forms_round_trip_finite_fields() {
+        let mut m = Metrics::default();
+        m.requests = 3;
+        m.batches = 2;
+        m.batch_size_sum = 3;
+        m.latency.record(Duration::from_micros(120));
+        m.batch_sizes.record_value(2);
+        let j = m.to_json();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("batches").and_then(Json::as_usize), Some(2));
+        let lat = j.get("latency_us").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(1));
+        assert!(lat.get("p99").and_then(Json::as_u64).unwrap() >= 120);
+        // empty histograms serialize as zeros with no buckets, never NaN
+        let exec = j.get("exec_us").unwrap();
+        assert_eq!(exec.get("count").and_then(Json::as_usize), Some(0));
+        assert_eq!(exec.get("mean").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(exec.get("buckets").and_then(Json::as_arr).map(<[Json]>::len), Some(0));
     }
 }

@@ -1,5 +1,5 @@
-//! L3 serving coordinator: a deployable inference runtime around the
-//! compressed layers.
+//! L3 serving coordinator: a deployable multi-model inference runtime
+//! around the compressed layers.
 //!
 //! The paper's contribution is compile-time (DSE + kernel plans); this
 //! module is the system that *uses* those plans in production shape:
@@ -9,33 +9,44 @@
 //!   networks; built from DSE output by the [`router`]. The immutable
 //!   compiled model (packed cores, weights) is `Arc`-shared; each worker
 //!   holds its own executors (plan cache + scratch).
-//! * [`batcher`] — dynamic batching: group requests up to (max_batch,
-//!   max_wait) like a serving frontend.
-//! * `queue` (crate-private) — a bounded MPMC admission queue:
-//!   non-blocking `try_push` for fail-fast admission control, deadline-
-//!   aware pops for the batch window, drain-then-exit close semantics.
-//!   Also the work-unit queue of the parallel DSE engine
-//!   ([`crate::dse::timed`]).
-//! * [`server`] — the pool: `ServeConfig.workers` batching workers share
-//!   the admission queue; replies fan out over channels; per-worker
-//!   metrics shards merge on demand; no allocation on the per-request hot
-//!   path beyond the reply buffers.
-//! * [`metrics`] — latency histograms + throughput counters, sharded per
-//!   worker and merged exactly on read.
+//! * [`registry`] — the multi-model store: several `.ttrv` artifacts (or
+//!   pinned engines) co-hosted in one process, routed by model id, with a
+//!   memory-budgeted LRU engine cache and lazy warm-start reload after
+//!   eviction. Workers hold epoch-leased engine views, so the steady
+//!   state does zero per-batch cloning.
+//! * [`batcher`] — deadline-aware dynamic batching: group requests up to
+//!   `max_batch`, dispatching when the *tightest* admitted latency budget
+//!   (per-request SLO, capped by `max_wait`) is nearly spent.
+//! * `queue` (crate-private) — bounded admission: the single MPMC
+//!   primitive (still the work-unit queue of the parallel DSE engine,
+//!   [`crate::dse::timed`]) and the sharded work-stealing front the
+//!   server admits through — one shard per worker, round-robin placement,
+//!   optional ring stealing, fail-fast `try_push`, drain-then-exit close
+//!   semantics.
+//! * [`server`] — the pool: `ServeConfig.workers` batching workers, each
+//!   owning one queue shard and one open batch per model; replies fan out
+//!   over channels; per-worker per-model metrics shards merge exactly on
+//!   read; [`Server::snapshot`] emits the versioned machine-readable
+//!   state document (`ttrv-serve-snapshot`).
+//! * [`metrics`] — latency/batch-size histograms + throughput counters,
+//!   sharded per worker and merged exactly on read, JSON-serializable.
 //!
 //! Invariants (property- and integration-tested): no request is lost or
-//! duplicated, batches never exceed `max_batch`, admission never blocks
-//! (full queue -> immediate error), responses are byte-identical across
-//! pool sizes (`workers = 1` vs `workers = 4`), and graceful shutdown
-//! answers everything admitted before joining the workers.
+//! duplicated, batches never exceed `max_batch` and never mix models,
+//! admission never blocks (full queue -> immediate error), responses are
+//! byte-identical across worker counts, shard counts, steal schedules,
+//! and co-hosted-model counts, and graceful shutdown answers everything
+//! admitted before joining the workers.
 
 pub mod engine;
 pub mod batcher;
 pub(crate) mod queue;
+pub mod registry;
 pub mod server;
 pub mod metrics;
 pub mod router;
 
 pub use engine::{LayerOp, ModelEngine, TtFcEngine};
+pub use registry::{ModelInfo, ModelRegistry};
 pub use router::{route_model, Route};
 pub use server::{InferenceRequest, InferenceResponse, Server};

@@ -1,27 +1,36 @@
-//! Bounded multi-producer / multi-consumer admission queue.
+//! Bounded admission queues: the single MPMC primitive and the sharded
+//! work-stealing front built on top of it.
 //!
 //! `std::sync::mpsc` is single-consumer, so a worker *pool* sharing one
 //! queue needs its own primitive: a `Mutex<VecDeque>` + `Condvar` bounded
-//! queue with non-blocking admission (`try_push`) and deadline-aware
-//! consumption (`pop_timeout`), the two operations the serving loop is
-//! built from.
+//! queue ([`SharedQueue`]) with non-blocking admission (`try_push`) and
+//! deadline-aware consumption (`pop_timeout`). Serving v2 no longer admits
+//! through one global queue: [`ShardedQueue`] round-robins admission
+//! across per-worker shards and lets idle workers steal from busy ones,
+//! so the submit path stops serializing on a single lock at high worker
+//! counts. `SharedQueue` remains the shard primitive (and the DSE worker
+//! pool's queue).
 //!
 //! Semantics:
 //!
 //! * `try_push` never blocks: a full queue is an admission-control
 //!   rejection ([`PushError::Full`]), a closed queue is a shutdown
 //!   rejection ([`PushError::Closed`]). This preserves the coordinator's
-//!   fail-fast backpressure contract.
+//!   fail-fast backpressure contract. The sharded front rejects `Full`
+//!   only once **every** shard is full.
 //! * `pop` / `pop_timeout` drain remaining items even after [`close`]
 //!   (graceful shutdown answers everything that was admitted); only a
 //!   queue that is both closed **and** empty reports [`Pop::Closed`].
-//! * FIFO order within the queue. With several consumers, items are
-//!   handed out in arrival order but may complete out of order — that is
-//!   the point of the pool.
+//!   This holds under spurious Condvar wakeups and under wakeups raced
+//!   with `close`: the item check always precedes the closed check.
+//! * FIFO order within one shard. With several consumers or shards, items
+//!   are handed out in arrival order per shard but may complete out of
+//!   order — that is the point of the pool.
 //!
 //! [`close`]: SharedQueue::close
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -91,6 +100,19 @@ impl<T> SharedQueue<T> {
         Ok(())
     }
 
+    /// Non-blocking pop: `Some` item or `None` if the queue is currently
+    /// empty (whether closed or not). This is the steal primitive — a
+    /// stealing worker must not confuse a neighbor's drained-and-closed
+    /// shard with its own shutdown signal.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().expect("queue lock").items.pop_front()
+    }
+
+    /// Items currently queued (snapshot; may be stale by return time).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue lock").items.len()
+    }
+
     /// Block until an item arrives or the queue is closed and drained.
     pub fn pop(&self) -> Pop<T> {
         let mut g = self.inner.lock().expect("queue lock");
@@ -109,6 +131,11 @@ impl<T> SharedQueue<T> {
     /// pending batch use this so the batch deadline can fire while the
     /// queue is idle. Timeouts are clamped to one hour so an extreme
     /// `max_wait_us` cannot overflow the deadline arithmetic.
+    ///
+    /// Close-vs-pending contract: after [`close`](Self::close), queued
+    /// items are still returned (in FIFO order) before [`Pop::Closed`] is
+    /// ever reported — on every wakeup path, spurious or not, the item
+    /// check precedes the closed check.
     pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
         let timeout = timeout.min(Duration::from_secs(3600));
         let deadline = Instant::now() + timeout;
@@ -150,6 +177,113 @@ impl<T> SharedQueue<T> {
     }
 }
 
+/// How an idle worker scans other shards for work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Steal {
+    /// Scan the other shards in ring order starting after the home shard.
+    Ring,
+    /// Never steal: each worker consumes only its home shard.
+    Off,
+}
+
+/// Sharded admission front: one [`SharedQueue`] per shard, round-robin
+/// placement on push, per-worker home shards on pop, optional ring
+/// stealing for idle workers.
+///
+/// Invariants carried over from the single-queue server:
+///
+/// * **Backpressure** — [`try_push`](Self::try_push) tries the round-robin
+///   home shard first and then every other shard once; it reports
+///   [`PushError::Full`] only when *all* shards are full, so `queue_cap`
+///   keeps meaning "total in-flight admissions" (per-shard caps are
+///   `ceil(cap / shards)`, so the total can overshoot `cap` by at most
+///   `shards - 1`).
+/// * **Drain-then-exit** — [`close`](Self::close) closes every shard;
+///   each shard is drained by its owning worker(s) before they observe
+///   [`Pop::Closed`], so shutdown still answers everything admitted.
+///   The server clamps `shards <= workers`, so every shard has an owner.
+pub(crate) struct ShardedQueue<T> {
+    shards: Vec<SharedQueue<T>>,
+    rr: AtomicUsize,
+    steal: Steal,
+}
+
+impl<T> ShardedQueue<T> {
+    /// `shards >= 1` shards with a *total* capacity of `cap >= 1`.
+    pub fn new(shards: usize, cap: usize, steal: Steal) -> Self {
+        assert!(shards >= 1, "shard count must be >= 1");
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        let per_shard = cap.div_ceil(shards);
+        ShardedQueue {
+            shards: (0..shards).map(|_| SharedQueue::new(per_shard)).collect(),
+            rr: AtomicUsize::new(0),
+            steal,
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total queued items across all shards (snapshot).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(SharedQueue::len).sum()
+    }
+
+    /// Non-blocking admission: round-robin home shard first, then every
+    /// other shard once. `Closed` wins over `Full` (shutdown is global),
+    /// `Full` only when no shard has room.
+    pub fn try_push(&self, item: T) -> std::result::Result<(), PushError<T>> {
+        let s = self.shards.len();
+        let home = self.rr.fetch_add(1, Ordering::Relaxed) % s;
+        let mut item = item;
+        for i in 0..s {
+            match self.shards[(home + i) % s].try_push(item) {
+                Ok(()) => return Ok(()),
+                Err(PushError::Closed(v)) => return Err(PushError::Closed(v)),
+                Err(PushError::Full(v)) => item = v,
+            }
+        }
+        Err(PushError::Full(item))
+    }
+
+    /// Non-blocking pop for `worker`: its home shard first, then (steal
+    /// permitting) the other shards in ring order. `None` means no work
+    /// was visible anywhere this worker may look.
+    pub fn try_pop(&self, worker: usize) -> Option<T> {
+        let s = self.shards.len();
+        let home = worker % s;
+        if let Some(v) = self.shards[home].try_pop() {
+            return Some(v);
+        }
+        if self.steal == Steal::Ring {
+            for i in 1..s {
+                if let Some(v) = self.shards[(home + i) % s].try_pop() {
+                    return Some(v);
+                }
+            }
+        }
+        None
+    }
+
+    /// Blocking pop on `worker`'s home shard with a timeout. Returns
+    /// [`Pop::Closed`] only when the home shard is closed **and**
+    /// drained — the worker's cue to flush pending batches and exit
+    /// (other shards are drained by their own owners).
+    pub fn pop_home(&self, worker: usize, timeout: Duration) -> Pop<T> {
+        self.shards[worker % self.shards.len()].pop_timeout(timeout)
+    }
+
+    /// Close every shard. Idempotent; admission stops immediately, owners
+    /// drain what remains.
+    pub fn close(&self) {
+        for shard in &self.shards {
+            shard.close();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +317,53 @@ mod tests {
         assert!(matches!(q.pop(), Pop::Closed));
         assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
         q.close(); // idempotent
+    }
+
+    #[test]
+    fn pop_timeout_after_close_drains_in_fifo_order_before_closed() {
+        // ISSUE 6 satellite: queued items at close time must all come out,
+        // in order, through pop_timeout — including with a zero timeout,
+        // which exercises the deadline-expired re-check path where the item
+        // check must precede the closed check.
+        let q = SharedQueue::new(8);
+        for i in 0..3 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Item(0)));
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), Pop::Item(1)));
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Item(2)));
+        assert!(matches!(q.pop_timeout(Duration::ZERO), Pop::Closed));
+    }
+
+    #[test]
+    fn consumer_woken_by_close_still_receives_item_raced_in_before_close() {
+        // Two consumers block in pop_timeout on an empty queue. One item is
+        // pushed (notify_one wakes an arbitrary consumer) and the queue is
+        // closed immediately after (notify_all wakes the rest). Whatever
+        // wakeup each consumer gets — the push's, the close's, or a
+        // spurious one — exactly one must return the item and the other
+        // must report Closed, never TimedOut and never a lost item.
+        let q: Arc<SharedQueue<u32>> = Arc::new(SharedQueue::new(4));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || loop {
+                    match q.pop_timeout(Duration::from_secs(5)) {
+                        Pop::Item(v) => return Some(v),
+                        Pop::Closed => return None,
+                        Pop::TimedOut => panic!("woken consumer timed out"),
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(41).unwrap();
+        q.close();
+        let mut got: Vec<Option<u32>> =
+            consumers.into_iter().map(|c| c.join().unwrap()).collect();
+        got.sort();
+        assert_eq!(got, vec![None, Some(41)]);
     }
 
     #[test]
@@ -264,5 +445,74 @@ mod tests {
         let mut want: Vec<u32> = (0..4).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
         want.sort_unstable();
         assert_eq!(all, want);
+    }
+
+    #[test]
+    fn sharded_push_spills_before_rejecting_and_full_only_when_all_full() {
+        // 2 shards x total cap 2 -> per-shard cap 1: two pushes land (the
+        // second spills past its full round-robin home), the third is Full.
+        let q = ShardedQueue::new(2, 2, Steal::Ring);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(q.len(), 2);
+        // draining one slot re-opens admission
+        assert!(q.try_pop(0).is_some());
+        q.try_push(4).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn sharded_steal_ring_finds_remote_items_and_off_does_not() {
+        // one item round-robins onto shard 0; worker 1's home is shard 1
+        let q = ShardedQueue::new(2, 8, Steal::Off);
+        q.try_push(7).unwrap();
+        assert!(q.try_pop(1).is_none(), "steal=off must not cross shards");
+        assert_eq!(q.try_pop(0), Some(7));
+
+        let q = ShardedQueue::new(2, 8, Steal::Ring);
+        q.try_push(9).unwrap();
+        assert_eq!(q.try_pop(1), Some(9), "steal=ring must find remote items");
+    }
+
+    #[test]
+    fn sharded_close_drains_every_shard_through_its_owner() {
+        // items spread across 4 shards, closed with all of them non-empty;
+        // 4 owner threads must between them drain everything exactly once
+        let q = Arc::new(ShardedQueue::new(4, 64, Steal::Ring));
+        for i in 0..32u32 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        assert!(matches!(q.try_push(99), Err(PushError::Closed(99))));
+        let owners: Vec<_> = (0..4)
+            .map(|w| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_home(w, Duration::from_millis(50)) {
+                            Pop::Item(v) => got.push(v),
+                            Pop::Closed => break,
+                            Pop::TimedOut => panic!("closed shard cannot time out"),
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut all: Vec<u32> = owners.into_iter().flat_map(|o| o.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn sharded_single_shard_behaves_like_shared_queue() {
+        let q = ShardedQueue::new(1, 1, Steal::Ring);
+        q.try_push(1).unwrap();
+        assert!(matches!(q.try_push(2), Err(PushError::Full(2))));
+        assert_eq!(q.try_pop(3), Some(1)); // any worker maps to shard 0
+        assert!(q.try_pop(0).is_none());
     }
 }

@@ -1,0 +1,516 @@
+//! Multi-model registry: the serving layer's model store and engine cache.
+//!
+//! A [`ModelRegistry`] holds every model one server process hosts and
+//! routes requests to them by model id. Models come in two flavors:
+//!
+//! * **Pinned** — a prototype [`ModelEngine`] handed in at construction
+//!   (the single-engine `Server::start` path). Always resident, never
+//!   evicted, outside the cache budget.
+//! * **Bundle-backed** — a decoded `.ttrv` [`ModelBundle`]. The engine is
+//!   built lazily on first use via [`ModelBundle::build_engine`] (the
+//!   warm-start path: packed cores + pre-seeded plans, no DSE), kept in a
+//!   memory-budgeted LRU cache, and transparently rebuilt from the bundle
+//!   after eviction. Rebuilds are deterministic, so an evict-then-reload
+//!   cycle cannot move an output bit.
+//!
+//! Workers keep warm per-model engine views and re-clone only when the
+//! registry's *epoch* for that model moved (i.e. a reload happened): the
+//! [`lease`](ModelRegistry::lease) API returns the current epoch plus a
+//! fresh [`ModelEngine::worker_clone`] only when the caller's epoch is
+//! stale, so the steady-state hot path does zero cloning and takes one
+//! short lock.
+//!
+//! Deadlock-freedom by construction: the registry has exactly one lock
+//! and never calls back into the server while holding it. Engine builds
+//! happen inside the lock — a reload briefly blocks other models'
+//! leases, which is the accepted cost of correctness on a 1-engine
+//! budget (the currently leased model is never evicted, so a too-small
+//! budget degrades to reload-per-switch, never to deadlock).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::artifact::ModelBundle;
+use crate::error::{Error, Result};
+use crate::machine::MachineSpec;
+
+use super::engine::ModelEngine;
+
+/// Epoch stamped on every pinned-model lease; bundle loads start at 1.
+const PINNED_EPOCH: u64 = 0;
+
+enum ModelSource {
+    Pinned(ModelEngine),
+    Bundle {
+        bundle: Box<ModelBundle>,
+        machine: MachineSpec,
+    },
+}
+
+/// Static facts about one registered model (immutable after registration).
+struct ModelSlot {
+    id: String,
+    in_dim: usize,
+    out_dim: usize,
+    bytes: u64,
+    source: ModelSource,
+}
+
+struct Resident {
+    engine: ModelEngine,
+    epoch: u64,
+}
+
+struct CacheState {
+    /// Per-slot resident engine; always `None` for pinned slots (their
+    /// prototype lives in the slot itself).
+    resident: Vec<Option<Resident>>,
+    /// Resident bundle-backed slots, least-recently-leased first.
+    lru: Vec<usize>,
+    /// Bytes of resident bundle-backed engines (pinned models excluded).
+    resident_bytes: u64,
+    next_epoch: u64,
+}
+
+/// Summary of one registered model, as reported by
+/// [`ModelRegistry::models`] (the snapshot's `models` rows).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    /// Model id (routing key).
+    pub id: String,
+    /// Input width.
+    pub in_dim: usize,
+    /// Output width.
+    pub out_dim: usize,
+    /// Approximate engine bytes charged against the cache budget.
+    pub bytes: u64,
+    /// Whether an engine for this model is currently resident.
+    pub resident: bool,
+    /// Whether the model is pinned (never evicted).
+    pub pinned: bool,
+}
+
+/// The multi-model store behind [`super::Server`]: id-routed lookup, lazy
+/// warm-start loading, and a memory-budgeted LRU engine cache. See the
+/// module docs for the design.
+pub struct ModelRegistry {
+    slots: Vec<ModelSlot>,
+    index: HashMap<String, usize>,
+    cache_bytes: u64,
+    state: Mutex<CacheState>,
+    loads: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// An empty registry with an LRU budget of `cache_bytes` (0 =
+    /// unlimited) over bundle-backed engines.
+    pub fn new(cache_bytes: u64) -> Self {
+        ModelRegistry {
+            slots: Vec::new(),
+            index: HashMap::new(),
+            cache_bytes,
+            state: Mutex::new(CacheState {
+                resident: Vec::new(),
+                lru: Vec::new(),
+                resident_bytes: 0,
+                next_epoch: PINNED_EPOCH + 1,
+            }),
+            loads: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn add_slot(&mut self, slot: ModelSlot) -> Result<usize> {
+        if self.index.contains_key(&slot.id) {
+            return Err(Error::serve(format!(
+                "duplicate model id '{}' in registry",
+                slot.id
+            )));
+        }
+        let idx = self.slots.len();
+        self.index.insert(slot.id.clone(), idx);
+        self.slots.push(slot);
+        self.state.lock().expect("registry lock").resident.push(None);
+        Ok(idx)
+    }
+
+    /// Register a pinned prototype engine (always resident, never
+    /// evicted). Returns the model's slot index.
+    pub fn add_pinned(&mut self, engine: ModelEngine) -> Result<usize> {
+        let slot = ModelSlot {
+            id: engine.name().to_string(),
+            in_dim: engine.in_dim(),
+            out_dim: engine.out_dim(),
+            bytes: engine.approx_bytes(),
+            source: ModelSource::Pinned(engine),
+        };
+        self.add_slot(slot)
+    }
+
+    /// Register a decoded `.ttrv` bundle for lazy warm-start loading on
+    /// `machine`. The bundle must target that machine — checked here so a
+    /// mismatch fails at registration, not on the first request. Returns
+    /// the model's slot index.
+    pub fn add_bundle(&mut self, bundle: ModelBundle, machine: &MachineSpec) -> Result<usize> {
+        if bundle.machine != machine.name {
+            return Err(Error::artifact(format!(
+                "bundle '{}' was compiled for machine '{}', registry serves '{}'",
+                bundle.name, bundle.machine, machine.name
+            )));
+        }
+        let slot = ModelSlot {
+            id: bundle.name.clone(),
+            in_dim: bundle.in_dim,
+            out_dim: bundle.out_dim,
+            bytes: bundle.engine_bytes(),
+            source: ModelSource::Bundle { bundle: Box::new(bundle), machine: machine.clone() },
+        };
+        self.add_slot(slot)
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether the registry holds no models.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Resolve a request's model id to a slot index. `None` routes to the
+    /// default model (slot 0, the first registered); an unknown id is a
+    /// typed serve error naming the known models.
+    pub fn resolve(&self, model: Option<&str>) -> Result<usize> {
+        match model {
+            None => {
+                if self.slots.is_empty() {
+                    return Err(Error::serve("registry has no models"));
+                }
+                Ok(0)
+            }
+            Some(id) => self.index.get(id).copied().ok_or_else(|| {
+                let mut known: Vec<&str> =
+                    self.slots.iter().map(|s| s.id.as_str()).collect();
+                known.sort_unstable();
+                Error::serve(format!(
+                    "unknown model '{id}' (serving: {})",
+                    known.join(", ")
+                ))
+            }),
+        }
+    }
+
+    /// Model id for a slot index (panics on an out-of-range slot; slot
+    /// indices come from [`resolve`](Self::resolve) or registration).
+    pub fn id(&self, slot: usize) -> &str {
+        &self.slots[slot].id
+    }
+
+    /// Input width of a slot's model.
+    pub fn in_dim(&self, slot: usize) -> usize {
+        self.slots[slot].in_dim
+    }
+
+    /// Output width of a slot's model.
+    pub fn out_dim(&self, slot: usize) -> usize {
+        self.slots[slot].out_dim
+    }
+
+    /// Lease a worker view of a slot's engine. `have_epoch` is the epoch
+    /// of the view the caller already holds (`None` for "nothing yet").
+    /// Returns the slot's current epoch plus `Some(fresh worker clone)`
+    /// only when the caller's view is stale — the warm path returns
+    /// `(epoch, None)` and the caller keeps its existing engine.
+    ///
+    /// For a bundle-backed slot this lazily (re)builds the engine from
+    /// the stored bundle, touches the LRU, and evicts least-recently-used
+    /// engines while the cache is over budget (never the slot being
+    /// leased).
+    pub fn lease(
+        &self,
+        slot: usize,
+        have_epoch: Option<u64>,
+    ) -> Result<(u64, Option<ModelEngine>)> {
+        let s = &self.slots[slot];
+        match &s.source {
+            ModelSource::Pinned(proto) => {
+                let clone = match have_epoch {
+                    Some(e) if e == PINNED_EPOCH => None,
+                    _ => Some(proto.worker_clone()),
+                };
+                Ok((PINNED_EPOCH, clone))
+            }
+            ModelSource::Bundle { bundle, machine } => {
+                let mut st = self.state.lock().expect("registry lock");
+                if st.resident[slot].is_none() {
+                    let engine = bundle.build_engine(machine)?;
+                    let epoch = st.next_epoch;
+                    st.next_epoch += 1;
+                    st.resident[slot] = Some(Resident { engine, epoch });
+                    st.resident_bytes += s.bytes;
+                    self.loads.fetch_add(1, Ordering::Relaxed);
+                }
+                st.lru.retain(|&x| x != slot);
+                st.lru.push(slot);
+                self.evict_over_budget(&mut st, slot);
+                let r = st.resident[slot].as_ref().expect("leased slot is resident");
+                let epoch = r.epoch;
+                let clone = match have_epoch {
+                    Some(e) if e == epoch => None,
+                    _ => Some(r.engine.worker_clone()),
+                };
+                Ok((epoch, clone))
+            }
+        }
+    }
+
+    /// Evict LRU engines (never `keep`) until the budget is met. With
+    /// only `keep` resident the cache may stay over budget — the model
+    /// being served always stays loadable.
+    fn evict_over_budget(&self, st: &mut CacheState, keep: usize) {
+        if self.cache_bytes == 0 {
+            return;
+        }
+        while st.resident_bytes > self.cache_bytes {
+            let Some(victim) = st.lru.iter().copied().find(|&x| x != keep) else {
+                break;
+            };
+            st.lru.retain(|&x| x != victim);
+            if st.resident[victim].take().is_some() {
+                st.resident_bytes -= self.slots[victim].bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Engines built from bundles so far (initial loads + reloads).
+    pub fn loads(&self) -> u64 {
+        self.loads.load(Ordering::Relaxed)
+    }
+
+    /// Engines evicted by the LRU budget so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The configured cache budget in bytes (0 = unlimited).
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache_bytes
+    }
+
+    /// Bytes of currently resident bundle-backed engines.
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().expect("registry lock").resident_bytes
+    }
+
+    /// Whether a slot's engine is currently resident (pinned slots always
+    /// are).
+    pub fn is_resident(&self, slot: usize) -> bool {
+        match self.slots[slot].source {
+            ModelSource::Pinned(_) => true,
+            ModelSource::Bundle { .. } => {
+                self.state.lock().expect("registry lock").resident[slot].is_some()
+            }
+        }
+    }
+
+    /// Per-model summaries in slot order (the snapshot's `models` rows).
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let st = self.state.lock().expect("registry lock");
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let pinned = matches!(s.source, ModelSource::Pinned(_));
+                ModelInfo {
+                    id: s.id.clone(),
+                    in_dim: s.in_dim,
+                    out_dim: s.out_dim,
+                    bytes: s.bytes,
+                    resident: pinned || st.resident[i].is_some(),
+                    pinned,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::{BundleOp, DenseLayerBundle};
+    use crate::baselines::dense::DenseFc;
+    use crate::coordinator::LayerOp;
+    use crate::tensor::Tensor;
+    use crate::util::json::Json;
+    use crate::util::prng::Rng;
+
+    fn machine() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
+
+    fn pinned(name: &str) -> ModelEngine {
+        let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
+        let fc = DenseFc::new(&w, None).unwrap();
+        ModelEngine::new(name, vec![LayerOp::Dense(fc)], 4, 2)
+    }
+
+    /// A hand-rolled dense-only bundle: exercises the full lazy
+    /// build/evict/reload machinery without running DSE.
+    fn dense_bundle(name: &str, seed: u64) -> ModelBundle {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(vec![2, 4], 0.5, &mut rng);
+        ModelBundle {
+            name: name.to_string(),
+            machine: machine().name.to_string(),
+            in_dim: 4,
+            out_dim: 2,
+            rank: 8,
+            seed,
+            shapes: vec![(4, 2)],
+            ops: vec![BundleOp::Dense(DenseLayerBundle { w, bias: None })],
+            report: Json::Arr(Vec::new()),
+        }
+    }
+
+    #[test]
+    fn resolve_routes_by_id_and_defaults_to_first() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_pinned(pinned("alpha")).unwrap();
+        reg.add_bundle(dense_bundle("beta", 7), &machine()).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.resolve(None).unwrap(), 0);
+        assert_eq!(reg.resolve(Some("alpha")).unwrap(), 0);
+        assert_eq!(reg.resolve(Some("beta")).unwrap(), 1);
+        let err = reg.resolve(Some("gamma")).unwrap_err().to_string();
+        assert!(err.contains("gamma") && err.contains("alpha") && err.contains("beta"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_model_ids_are_rejected() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_pinned(pinned("m")).unwrap();
+        assert!(reg.add_pinned(pinned("m")).is_err());
+        assert!(reg.add_bundle(dense_bundle("m", 1), &machine()).is_err());
+    }
+
+    #[test]
+    fn bundle_for_wrong_machine_is_rejected_at_registration() {
+        let mut reg = ModelRegistry::new(0);
+        let mut b = dense_bundle("m", 1);
+        b.machine = "some-other-soc".to_string();
+        let err = reg.add_bundle(b, &machine()).unwrap_err().to_string();
+        assert!(err.contains("some-other-soc"), "{err}");
+    }
+
+    #[test]
+    fn pinned_lease_is_epoch_stable_and_free_when_warm() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_pinned(pinned("m")).unwrap();
+        let (e0, view) = reg.lease(0, None).unwrap();
+        assert!(view.is_some(), "cold caller gets a clone");
+        let (e1, view) = reg.lease(0, Some(e0)).unwrap();
+        assert_eq!(e0, e1);
+        assert!(view.is_none(), "warm caller keeps its engine");
+        assert_eq!(reg.loads(), 0, "pinned models never count as loads");
+        assert!(reg.is_resident(0));
+    }
+
+    #[test]
+    fn bundle_lease_lazy_loads_once_and_reuses_epoch() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_bundle(dense_bundle("m", 3), &machine()).unwrap();
+        assert!(!reg.is_resident(0), "bundles load lazily");
+        let (e0, view) = reg.lease(0, None).unwrap();
+        assert!(view.is_some());
+        assert_eq!(reg.loads(), 1);
+        let (e1, view) = reg.lease(0, Some(e0)).unwrap();
+        assert_eq!(e0, e1);
+        assert!(view.is_none());
+        assert_eq!(reg.loads(), 1, "warm lease must not rebuild");
+        assert!(reg.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_and_reload_bumps_epoch() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_bundle(dense_bundle("a", 1), &machine()).unwrap();
+        reg.add_bundle(dense_bundle("b", 2), &machine()).unwrap();
+        // budget fits exactly one engine
+        let one = dense_bundle("x", 0).engine_bytes();
+        let reg = ModelRegistry { cache_bytes: one, ..reg };
+        let (ea, _) = reg.lease(0, None).unwrap();
+        assert!(reg.is_resident(0));
+        reg.lease(1, None).unwrap();
+        assert!(!reg.is_resident(0), "leasing b must evict LRU a");
+        assert!(reg.is_resident(1));
+        assert_eq!(reg.evictions(), 1);
+        // re-leasing a reloads it under a new epoch: stale workers re-clone
+        let (ea2, view) = reg.lease(0, Some(ea)).unwrap();
+        assert_ne!(ea, ea2);
+        assert!(view.is_some(), "stale epoch must hand out a fresh engine");
+        assert_eq!(reg.loads(), 3);
+    }
+
+    #[test]
+    fn leased_model_survives_a_budget_smaller_than_itself() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_bundle(dense_bundle("a", 1), &machine()).unwrap();
+        let reg = ModelRegistry { cache_bytes: 1, ..reg };
+        let (_, view) = reg.lease(0, None).unwrap();
+        assert!(view.is_some());
+        assert!(reg.is_resident(0), "the requested model always stays resident");
+        assert_eq!(reg.evictions(), 0);
+    }
+
+    #[test]
+    fn evict_then_reload_is_bitwise_identical() {
+        // unit-level twin of the .ttrv integration test: the rebuilt
+        // engine must produce bit-identical outputs (builds are
+        // deterministic functions of the stored bundle)
+        let mut reg = ModelRegistry::new(0);
+        reg.add_bundle(dense_bundle("a", 11), &machine()).unwrap();
+        reg.add_bundle(dense_bundle("b", 12), &machine()).unwrap();
+        let one = dense_bundle("x", 0).engine_bytes();
+        let reg = ModelRegistry { cache_bytes: one, ..reg };
+        let probe = Tensor::from_vec(vec![1, 4], vec![0.3, -0.7, 1.1, 0.05]).unwrap();
+        let (_, view) = reg.lease(0, None).unwrap();
+        let before: Vec<u32> = view
+            .unwrap()
+            .forward(&probe)
+            .unwrap()
+            .data()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        reg.lease(1, None).unwrap(); // evicts a
+        assert!(!reg.is_resident(0));
+        let (_, view) = reg.lease(0, None).unwrap(); // reloads a
+        let after: Vec<u32> = view
+            .unwrap()
+            .forward(&probe)
+            .unwrap()
+            .data()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        assert_eq!(before, after, "evict-then-reload moved an output bit");
+    }
+
+    #[test]
+    fn models_summary_reports_residency() {
+        let mut reg = ModelRegistry::new(0);
+        reg.add_pinned(pinned("p")).unwrap();
+        reg.add_bundle(dense_bundle("q", 4), &machine()).unwrap();
+        let info = reg.models();
+        assert_eq!(info.len(), 2);
+        assert!(info[0].pinned && info[0].resident);
+        assert!(!info[1].pinned && !info[1].resident);
+        assert!(info[1].bytes > 0);
+        reg.lease(1, None).unwrap();
+        assert!(reg.models()[1].resident);
+    }
+}

@@ -7,6 +7,10 @@
 //! [`TimedSolution`] whose modeled speedup over the dense layer met
 //! `DseConfig::time_speedup_min` — the serving stack never deploys a
 //! factorization the machine model predicts to be a slowdown.
+//!
+//! This is *layer* routing (compile-time: which kernel implements an FC).
+//! Request-to-model routing at serve time is the
+//! [`registry`](super::registry)'s job.
 
 use crate::config::DseConfig;
 use crate::dse::{self, TimedSolution};

@@ -1,16 +1,34 @@
-//! The serving event loop: bounded admission queue, a pool of dynamic
-//! batching workers, channel-based replies. Hand-rolled on std (tokio is
-//! unavailable offline); the structure is the standard serving shape:
-//! admission -> shared queue -> per-worker batch -> execute -> fan-out.
+//! The serving event loop, v2: multi-model registry, sharded
+//! work-stealing admission, deadline-aware batching, machine-readable
+//! metrics. Hand-rolled on std (tokio is unavailable offline); the
+//! structure is the standard serving shape: admission -> per-worker
+//! shard -> per-model batch -> execute -> fan-out.
 //!
-//! `ServeConfig.workers` is honored: [`Server::start`] spawns that many
-//! workers, each owning a worker view of the model
-//! ([`ModelEngine::worker_clone`] — `Arc`-shared weights, private
-//! [`crate::kernels::Executor`] so the zero-allocation warm path is
-//! preserved per worker) and its own [`Metrics`] shard (uncontended;
-//! merged on [`Server::metrics`]). Admission control (`try_push` -> loud
-//! rejection when full) and graceful shutdown (close the queue, drain it,
-//! join every worker) are unchanged from the single-worker design.
+//! What changed from the single-model server (ISSUE 2):
+//!
+//! * **Registry** — a [`Server`] now fronts a [`ModelRegistry`]: several
+//!   `.ttrv` artifacts (or pinned engines) co-hosted in one process,
+//!   requests routed by [`InferenceRequest::model`], engines cached under
+//!   a byte budget with LRU eviction and lazy warm-start reload.
+//! * **Queues** — admission round-robins across a [`ShardedQueue`] (one
+//!   shard per worker, clamped) instead of serializing on one global
+//!   lock; idle workers steal from busy shards when
+//!   [`crate::config::StealPolicy::Ring`] is on. `Error::QueueFull`
+//!   backpressure and drain-then-exit shutdown are unchanged contracts.
+//! * **Batching** — each request carries an SLO budget
+//!   ([`InferenceRequest::slo_us`], defaulted from `ServeConfig.slo_us`);
+//!   a batch dispatches when full, or when the *tightest* admitted
+//!   budget is nearly spent (half the SLO, capped by `max_wait`), so a
+//!   tight-deadline request cannot starve behind the configured wait.
+//! * **Observability** — [`Server::snapshot`] returns a versioned JSON
+//!   document (`ttrv-serve-snapshot` v1) with process-wide and per-model
+//!   counters; [`Server::metrics_for`] exposes one model's merged shard.
+//!
+//! Batches never mix models: each worker keeps one open [`Batcher`] per
+//! registry slot. Responses are bit-identical across shard counts, steal
+//! schedules, worker counts, and co-hosted models — batch *composition*
+//! varies with timing, but the kernels' per-element reduction order is
+//! batch-invariant (pinned by `rust/tests/serving.rs`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
@@ -18,22 +36,66 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::ServeConfig;
+use crate::config::{ServeConfig, StealPolicy};
 use crate::error::{Error, Result};
+use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 
 use super::batcher::Batcher;
 use super::engine::ModelEngine;
 use super::metrics::Metrics;
-use super::queue::{Pop, PushError, SharedQueue};
+use super::queue::{Pop, PushError, ShardedQueue, Steal};
+use super::registry::ModelRegistry;
+
+/// Snapshot document name ([`Server::snapshot`]).
+pub const SNAPSHOT_SCHEMA: &str = "ttrv-serve-snapshot";
+/// Snapshot document version.
+pub const SNAPSHOT_SCHEMA_VERSION: usize = 1;
+
+/// How often an idle worker re-scans other shards for stealable work.
+/// Stealing is polling-based (a cross-shard Condvar web would reintroduce
+/// the global lock the shards removed); one wake per tick costs a handful
+/// of uncontended lock acquisitions.
+const STEAL_TICK: Duration = Duration::from_micros(200);
+/// Idle block time when stealing is off: effectively "until woken".
+const IDLE_WAIT: Duration = Duration::from_secs(3600);
+/// A batch holding an SLO'd request dispatches once `slo / 2` has been
+/// spent queueing — "nearly spent" with headroom for execution itself.
+const SLO_WAIT_DIVISOR: u64 = 2;
 
 /// A single inference request.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     /// Caller-chosen identifier, echoed back in the response.
     pub id: u64,
-    /// Flat input row (length = model in_dim).
+    /// Flat input row (length = target model's in_dim).
     pub input: Vec<f32>,
+    /// Target model id; `None` routes to the server's default (first
+    /// registered) model.
+    pub model: Option<String>,
+    /// Per-request latency budget in microseconds; overrides the server's
+    /// configured `slo_us`. `None` falls back to the config (0 = none).
+    pub slo_us: Option<u64>,
+}
+
+impl InferenceRequest {
+    /// A request for the default model with no SLO.
+    pub fn new(id: u64, input: Vec<f32>) -> Self {
+        InferenceRequest { id, input, model: None, slo_us: None }
+    }
+
+    /// Route this request to a named model.
+    pub fn for_model(mut self, model: impl Into<String>) -> Self {
+        self.model = Some(model.into());
+        self
+    }
+
+    /// Attach a latency budget in microseconds.
+    pub fn with_slo_us(mut self, slo_us: u64) -> Self {
+        self.slo_us = Some(slo_us);
+        self
+    }
 }
 
 /// The reply.
@@ -51,91 +113,156 @@ pub struct InferenceResponse {
 
 struct Envelope {
     req: InferenceRequest,
+    /// Registry slot, resolved at admission so workers never fail routing.
+    slot: usize,
+    /// Effective SLO (request override, else config default, else none).
+    slo_us: Option<u64>,
     enqueued: Instant,
     reply: Sender<Result<InferenceResponse>>,
 }
 
-/// Handle to a running server (the worker pool plus its admission queue).
+/// Handle to a running server: the model registry, the sharded admission
+/// queue, and the worker pool.
 pub struct Server {
-    queue: Arc<SharedQueue<Envelope>>,
+    queue: Arc<ShardedQueue<Envelope>>,
+    registry: Arc<ModelRegistry>,
     workers: Vec<JoinHandle<()>>,
-    /// One metrics shard per worker; only that worker writes it.
-    shards: Vec<Arc<Mutex<Metrics>>>,
-    /// Admission rejections happen on caller threads, outside any shard.
-    rejected: AtomicU64,
-    in_dim: usize,
+    /// Per-worker metrics shards, each holding one [`Metrics`] per model
+    /// slot; only the owning worker writes a shard.
+    shards: Vec<Arc<Mutex<Vec<Metrics>>>>,
+    /// Per-model admission rejections (caller threads, outside any shard).
+    rejected: Vec<AtomicU64>,
+    started: Instant,
+    cfg: ServeConfig,
 }
 
 impl Server {
-    /// Start `cfg.workers` batching workers over a model engine.
-    ///
-    /// The passed engine becomes worker 0; each additional worker is a
-    /// [`ModelEngine::worker_clone`] — same `Arc`-shared weights, private
-    /// executor. Out-of-range config values are clamped to 1 here as a
-    /// last line of defense; [`crate::config::load`] rejects them loudly.
+    /// Start `cfg.workers` batching workers over a single pinned model
+    /// engine (the v1 entry point; the engine becomes the registry's
+    /// default model and is never evicted). Out-of-range config values
+    /// are clamped here as a last line of defense; [`crate::config::load`]
+    /// rejects them loudly.
     pub fn start(engine: ModelEngine, cfg: ServeConfig) -> Server {
-        let n_workers = cfg.workers.max(1);
-        let queue = Arc::new(SharedQueue::new(cfg.queue_cap.max(1)));
-        let in_dim = engine.in_dim();
-
-        let mut engines = Vec::with_capacity(n_workers);
-        for _ in 1..n_workers {
-            engines.push(engine.worker_clone());
-        }
-        engines.insert(0, engine); // worker 0 is the original engine
-
-        let mut workers = Vec::with_capacity(n_workers);
-        let mut shards = Vec::with_capacity(n_workers);
-        for engine in engines {
-            let shard = Arc::new(Mutex::new(Metrics::default()));
-            let q = Arc::clone(&queue);
-            let m = Arc::clone(&shard);
-            let wcfg = cfg.clone();
-            workers.push(std::thread::spawn(move || worker_loop(engine, wcfg, q, m)));
-            shards.push(shard);
-        }
-        Server { queue, workers, shards, rejected: AtomicU64::new(0), in_dim }
+        let mut registry = ModelRegistry::new(cfg.cache_bytes);
+        registry.add_pinned(engine).expect("fresh registry cannot hold a duplicate id");
+        Server::spawn(registry, cfg)
     }
 
-    /// Warm-start a server from a compressed-model `.ttrv` bundle
-    /// ([`crate::artifact`]): decode + checksum-validate the file, build
-    /// the engine with pre-seeded plan caches (no DSE, no decomposition,
-    /// no compilation), and spawn the pool — cold-start cost scales with
-    /// model size, not design-space size. The bundle must have been
-    /// compressed for `machine`.
+    /// Start a server co-hosting several pinned engines; requests route
+    /// between them via [`InferenceRequest::model`]. Fails on duplicate
+    /// model names.
+    pub fn start_multi(engines: Vec<ModelEngine>, cfg: ServeConfig) -> Result<Server> {
+        if engines.is_empty() {
+            return Err(Error::serve("cannot start a server with no models"));
+        }
+        let mut registry = ModelRegistry::new(cfg.cache_bytes);
+        for engine in engines {
+            registry.add_pinned(engine)?;
+        }
+        Ok(Server::spawn(registry, cfg))
+    }
+
+    /// Warm-start a server from one compressed-model `.ttrv` bundle. See
+    /// [`Server::from_artifacts`].
     pub fn from_artifact(
         path: impl AsRef<std::path::Path>,
-        machine: &crate::machine::MachineSpec,
+        machine: &MachineSpec,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        Server::from_artifacts(&[path], machine, cfg)
+    }
+
+    /// Warm-start a server co-hosting several `.ttrv` bundles
+    /// ([`crate::artifact`]): each file is decoded + checksum-validated
+    /// and registered with the model registry; engines are built lazily
+    /// with pre-seeded plan caches (no DSE, no decomposition, no
+    /// compilation), so cold-start cost scales with model size, not
+    /// design-space size. All bundles must have been compressed for
+    /// `machine`, and `cfg.cache_bytes` bounds how many engines stay
+    /// resident at once.
+    pub fn from_artifacts(
+        paths: &[impl AsRef<std::path::Path>],
+        machine: &MachineSpec,
         cfg: ServeConfig,
     ) -> Result<Server> {
         cfg.validate()?;
-        let bundle = crate::artifact::read_bundle_file(path)?;
-        let engine = bundle.build_engine(machine)?;
-        Ok(Server::start(engine, cfg))
+        if paths.is_empty() {
+            return Err(Error::serve("no artifacts given"));
+        }
+        let mut registry = ModelRegistry::new(cfg.cache_bytes);
+        for path in paths {
+            let bundle = crate::artifact::read_bundle_file(path)?;
+            registry.add_bundle(bundle, machine)?;
+        }
+        Ok(Server::spawn(registry, cfg))
+    }
+
+    fn spawn(registry: ModelRegistry, cfg: ServeConfig) -> Server {
+        let n_workers = cfg.workers.max(1);
+        let n_shards = cfg.effective_shards(n_workers);
+        let steal = match cfg.steal_policy().unwrap_or(StealPolicy::Ring) {
+            StealPolicy::Ring => Steal::Ring,
+            StealPolicy::Off => Steal::Off,
+        };
+        let queue = Arc::new(ShardedQueue::new(n_shards, cfg.queue_cap.max(1), steal));
+        let registry = Arc::new(registry);
+        let n_models = registry.len();
+
+        let mut workers = Vec::with_capacity(n_workers);
+        let mut shards = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let shard = Arc::new(Mutex::new(vec![Metrics::default(); n_models]));
+            let q = Arc::clone(&queue);
+            let r = Arc::clone(&registry);
+            let m = Arc::clone(&shard);
+            let wcfg = cfg.clone();
+            workers.push(std::thread::spawn(move || worker_loop(w, r, wcfg, steal, q, m)));
+            shards.push(shard);
+        }
+        Server {
+            queue,
+            registry,
+            workers,
+            shards,
+            rejected: (0..n_models).map(|_| AtomicU64::new(0)).collect(),
+            started: Instant::now(),
+            cfg,
+        }
     }
 
     /// Number of workers in the pool.
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.shards.len()
+    }
+
+    /// The model registry backing this server (routing table, residency,
+    /// load/eviction counters).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
     }
 
     /// Submit without blocking on execution; returns the reply channel.
-    /// Fails fast when the queue is full (admission control) or the input
-    /// width is wrong.
+    /// Fails fast on an unknown model, a wrong input width, a full queue
+    /// (admission control, [`Error::QueueFull`]), or a stopped server.
     pub fn submit(&self, req: InferenceRequest) -> Result<Receiver<Result<InferenceResponse>>> {
-        if req.input.len() != self.in_dim {
+        let slot = self.registry.resolve(req.model.as_deref())?;
+        let in_dim = self.registry.in_dim(slot);
+        if req.input.len() != in_dim {
             return Err(Error::serve(format!(
                 "input width {} != model {}",
                 req.input.len(),
-                self.in_dim
+                in_dim
             )));
         }
+        let slo_us = req
+            .slo_us
+            .or_else(|| (self.cfg.slo_us > 0).then_some(self.cfg.slo_us));
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let env = Envelope { req, enqueued: Instant::now(), reply: reply_tx };
+        let env = Envelope { req, slot, slo_us, enqueued: Instant::now(), reply: reply_tx };
         match self.queue.try_push(env) {
             Ok(()) => Ok(reply_rx),
             Err(PushError::Full(_)) => {
-                self.rejected.fetch_add(1, Ordering::Relaxed);
+                self.rejected[slot].fetch_add(1, Ordering::Relaxed);
                 Err(Error::QueueFull)
             }
             Err(PushError::Closed(_)) => Err(Error::serve("server stopped")),
@@ -148,19 +275,82 @@ impl Server {
         rx.recv().map_err(|_| Error::serve("worker dropped reply"))?
     }
 
-    /// Snapshot of the metrics: per-worker shards merged, plus the
-    /// admission-rejection count.
+    /// Process-wide metrics: every worker shard and every model merged,
+    /// plus all admission rejections.
     pub fn metrics(&self) -> Metrics {
         let mut total = Metrics::default();
         for shard in &self.shards {
-            total.merge(&shard.lock().expect("metrics lock"));
+            for m in shard.lock().expect("metrics lock").iter() {
+                total.merge(m);
+            }
         }
-        total.rejected += self.rejected.load(Ordering::Relaxed);
+        total.rejected += self.rejected.iter().map(|r| r.load(Ordering::Relaxed)).sum::<u64>();
         total
     }
 
-    /// Graceful shutdown: admission stops, the queue is drained, every
-    /// in-flight request is answered, all workers are joined.
+    /// One model's metrics, merged across worker shards.
+    pub fn metrics_for(&self, model: &str) -> Result<Metrics> {
+        let slot = self.registry.resolve(Some(model))?;
+        let mut total = Metrics::default();
+        for shard in &self.shards {
+            total.merge(&shard.lock().expect("metrics lock")[slot]);
+        }
+        total.rejected += self.rejected[slot].load(Ordering::Relaxed);
+        Ok(total)
+    }
+
+    /// Machine-readable state snapshot: schema-versioned JSON with
+    /// process-wide rates and histograms, registry cache counters, and one
+    /// row per co-hosted model. The schema is validated by
+    /// `python/tools/check_bench_json.py` in CI.
+    pub fn snapshot(&self) -> Json {
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let process = self.metrics();
+        let infos = self.registry.models();
+        let models: Vec<Json> = infos
+            .iter()
+            .map(|info| {
+                let m = self.metrics_for(&info.id).expect("registered model resolves");
+                Json::obj(vec![
+                    ("model", Json::from(info.id.as_str())),
+                    ("resident", Json::from(info.resident)),
+                    ("pinned", Json::from(info.pinned)),
+                    ("engine_bytes", Json::from(info.bytes as f64)),
+                    ("req_per_s", Json::from(m.requests as f64 / uptime)),
+                    ("metrics", m.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::from(SNAPSHOT_SCHEMA)),
+            ("schema_version", Json::from(SNAPSHOT_SCHEMA_VERSION)),
+            ("uptime_s", Json::from(uptime)),
+            ("workers", Json::from(self.workers())),
+            ("shards", Json::from(self.queue.shard_count())),
+            ("steal", Json::from(self.cfg.steal.as_str())),
+            ("queue_depth", Json::from(self.queue.len())),
+            ("req_per_s", Json::from(process.requests as f64 / uptime)),
+            ("process", process.to_json()),
+            (
+                "registry",
+                Json::obj(vec![
+                    ("models", Json::from(self.registry.len())),
+                    (
+                        "resident",
+                        Json::from(infos.iter().filter(|i| i.resident).count()),
+                    ),
+                    ("loads", Json::from(self.registry.loads() as f64)),
+                    ("evictions", Json::from(self.registry.evictions() as f64)),
+                    ("cache_bytes", Json::from(self.registry.cache_bytes() as f64)),
+                    ("resident_bytes", Json::from(self.registry.resident_bytes() as f64)),
+                ]),
+            ),
+            ("models", Json::Arr(models)),
+        ])
+    }
+
+    /// Graceful shutdown: admission stops, every shard is drained by its
+    /// owner, every in-flight request is answered, all workers are joined.
     pub fn shutdown(mut self) {
         self.stop();
     }
@@ -179,73 +369,133 @@ impl Drop for Server {
     }
 }
 
-/// One pool worker: pull from the shared queue, batch, execute, fan out.
-fn worker_loop(
-    mut engine: ModelEngine,
-    cfg: ServeConfig,
-    queue: Arc<SharedQueue<Envelope>>,
-    metrics: Arc<Mutex<Metrics>>,
-) {
-    let max_wait = Duration::from_micros(cfg.max_wait_us);
-    let mut batcher = Batcher::new(cfg.max_batch.max(1), max_wait);
-    let mut pending: Vec<Envelope> = Vec::with_capacity(cfg.max_batch.max(1));
-    loop {
-        // wait for work (or the batch deadline of already-pending work)
-        let pop = if pending.is_empty() {
-            queue.pop()
-        } else {
-            let wait = batcher
-                .time_to_deadline(Instant::now())
-                .unwrap_or(Duration::ZERO);
-            queue.pop_timeout(wait)
+/// One worker's open (not yet dispatched) batch for one model slot.
+struct OpenBatch {
+    batcher: Batcher,
+    envs: Vec<Envelope>,
+}
+
+impl OpenBatch {
+    /// Admit an envelope; returns `true` when the batch is now full.
+    fn admit(&mut self, env: Envelope, max_wait: Duration) -> bool {
+        let budget = match env.slo_us {
+            Some(slo) => Duration::from_micros(slo / SLO_WAIT_DIVISOR),
+            None => max_wait,
         };
-        let mut shutdown = false;
-        match pop {
-            Pop::Item(env) => {
-                let full = batcher.push(env.enqueued);
-                pending.push(env);
-                if !full && !batcher.deadline_reached(Instant::now()) {
-                    continue;
-                }
+        let full = self.batcher.push(env.enqueued, budget);
+        self.envs.push(env);
+        full
+    }
+}
+
+/// One pool worker: absorb from its shard (stealing when idle), keep one
+/// open batch per model, dispatch batches when full or due.
+fn worker_loop(
+    w: usize,
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    steal: Steal,
+    queue: Arc<ShardedQueue<Envelope>>,
+    metrics: Arc<Mutex<Vec<Metrics>>>,
+) {
+    let max_batch = cfg.max_batch.max(1);
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let n_models = registry.len();
+    let mut open: Vec<OpenBatch> = (0..n_models)
+        .map(|_| OpenBatch { batcher: Batcher::new(max_batch, max_wait), envs: Vec::with_capacity(max_batch) })
+        .collect();
+    // worker-local engine views, re-leased from the registry per batch
+    // (zero-cost while the epoch is unchanged)
+    let mut engines: Vec<Option<(u64, ModelEngine)>> = (0..n_models).map(|_| None).collect();
+    let mut shutdown = false;
+    loop {
+        // absorb everything immediately visible (home shard, then steals);
+        // a batch that fills dispatches at once so it never overshoots
+        // max_batch — this is also the greedy top-up: under backlog the
+        // batch goes out full, not as the size-1 remnant of an overdue
+        // deadline
+        while let Some(env) = queue.try_pop(w) {
+            let slot = env.slot;
+            if open[slot].admit(env, max_wait) {
+                dispatch(slot, &registry, &mut engines, &mut open[slot], &metrics);
             }
-            Pop::TimedOut => {} // deadline fired
-            Pop::Closed => shutdown = true,
         }
-        if !pending.is_empty() {
-            // The batch is due (full, deadline, or shutdown). Under backlog
-            // the deadline is often already overdue when the first envelope
-            // is popped, which would dispatch a batch of 1 at exactly peak
-            // load — so first top the batch up with whatever is immediately
-            // poppable (zero-timeout: never waits).
-            while pending.len() < batcher.max_batch() {
-                match queue.pop_timeout(Duration::ZERO) {
-                    Pop::Item(env) => {
-                        batcher.push(env.enqueued);
-                        pending.push(env);
-                    }
-                    Pop::TimedOut => break,
-                    Pop::Closed => {
-                        shutdown = true;
-                        break;
-                    }
-                }
+        // dispatch every batch whose deadline has passed
+        let now = Instant::now();
+        let mut fired = false;
+        for slot in 0..n_models {
+            if !open[slot].envs.is_empty() && open[slot].batcher.deadline_reached(now) {
+                dispatch(slot, &registry, &mut engines, &mut open[slot], &metrics);
+                fired = true;
             }
-            batcher.take();
-            dispatch(&mut engine, &mut pending, &metrics);
+        }
+        if fired {
+            continue; // execution took time: re-absorb before blocking
         }
         if shutdown {
+            for slot in 0..n_models {
+                if !open[slot].envs.is_empty() {
+                    dispatch(slot, &registry, &mut engines, &mut open[slot], &metrics);
+                }
+            }
             break;
+        }
+        // block on the home shard until the next batch deadline, the steal
+        // tick (work may appear on other shards without a wakeup here), or
+        // a push/close wakeup
+        let now = Instant::now();
+        let mut wait = if steal == Steal::Ring { STEAL_TICK } else { IDLE_WAIT };
+        for b in &open {
+            if !b.envs.is_empty() {
+                wait = wait.min(b.batcher.time_to_deadline(now).unwrap_or(Duration::ZERO));
+            }
+        }
+        match queue.pop_home(w, wait) {
+            Pop::Item(env) => {
+                let slot = env.slot;
+                if open[slot].admit(env, max_wait) {
+                    dispatch(slot, &registry, &mut engines, &mut open[slot], &metrics);
+                }
+            }
+            Pop::TimedOut => {}
+            Pop::Closed => shutdown = true,
         }
     }
 }
 
-/// Execute one batch and fan the rows back out to the reply channels.
-fn dispatch(engine: &mut ModelEngine, pending: &mut Vec<Envelope>, metrics: &Arc<Mutex<Metrics>>) {
-    let batch = pending.len();
+/// Execute one model's batch and fan the rows back out.
+fn dispatch(
+    slot: usize,
+    registry: &ModelRegistry,
+    engines: &mut [Option<(u64, ModelEngine)>],
+    open: &mut OpenBatch,
+    metrics: &Mutex<Vec<Metrics>>,
+) {
+    open.batcher.take();
+    let batch = open.envs.len();
+    if batch == 0 {
+        return;
+    }
+    // lease the engine: free while our epoch matches, a worker_clone after
+    // a (re)load, a full bundle build if the engine was evicted
+    let have = engines[slot].as_ref().map(|(epoch, _)| *epoch);
+    match registry.lease(slot, have) {
+        Ok((epoch, Some(fresh))) => engines[slot] = Some((epoch, fresh)),
+        Ok((_, None)) => {}
+        Err(e) => {
+            let msg = e.to_string();
+            for env in open.envs.drain(..) {
+                let _ = env.reply.send(Err(Error::serve(msg.clone())));
+            }
+            return;
+        }
+    }
+    let (_, engine) = engines[slot].as_mut().expect("lease leaves an engine in place");
+
     let in_dim = engine.in_dim();
     let out_dim = engine.out_dim();
     let mut flat = Vec::with_capacity(batch * in_dim);
-    for env in pending.iter() {
+    for env in open.envs.iter() {
         flat.extend_from_slice(&env.req.input);
     }
     let exec_start = Instant::now();
@@ -253,20 +503,28 @@ fn dispatch(engine: &mut ModelEngine, pending: &mut Vec<Envelope>, metrics: &Arc
     let exec_time = exec_start.elapsed();
 
     {
-        let mut m = metrics.lock().expect("metrics lock");
+        let mut shard = metrics.lock().expect("metrics lock");
+        let m = &mut shard[slot];
         m.batches += 1;
         m.requests += batch as u64;
         m.batch_size_sum += batch as u64;
+        m.batch_sizes.record_value(batch as u64);
         m.exec.record(exec_time);
-        for env in pending.iter() {
+        for env in open.envs.iter() {
+            let latency = env.enqueued.elapsed();
             m.queue_wait.record(exec_start.duration_since(env.enqueued));
-            m.latency.record(env.enqueued.elapsed());
+            m.latency.record(latency);
+            if let Some(slo) = env.slo_us {
+                if latency > Duration::from_micros(slo) {
+                    m.slo_missed += 1;
+                }
+            }
         }
     }
 
     match result {
         Ok(y) => {
-            for (i, env) in pending.drain(..).enumerate() {
+            for (i, env) in open.envs.drain(..).enumerate() {
                 let output = y.data()[i * out_dim..(i + 1) * out_dim].to_vec();
                 let _ = env.reply.send(Ok(InferenceResponse {
                     id: env.req.id,
@@ -278,7 +536,7 @@ fn dispatch(engine: &mut ModelEngine, pending: &mut Vec<Envelope>, metrics: &Arc
         }
         Err(e) => {
             let msg = e.to_string();
-            for env in pending.drain(..) {
+            for env in open.envs.drain(..) {
                 let _ = env.reply.send(Err(Error::serve(msg.clone())));
             }
         }
@@ -294,24 +552,47 @@ mod tests {
 
     /// Tiny deterministic model: y = x @ W^T with known W (4 -> 2).
     fn toy_engine() -> ModelEngine {
+        toy_named("toy")
+    }
+
+    fn toy_named(name: &str) -> ModelEngine {
         let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
         let fc = DenseFc::new(&w, None).unwrap();
-        ModelEngine::new("toy", vec![LayerOp::Dense(fc)], 4, 2)
+        ModelEngine::new(name, vec![LayerOp::Dense(fc)], 4, 2)
+    }
+
+    /// A second toy with different math: y = 2x (first two coords).
+    fn toy_doubler(name: &str) -> ModelEngine {
+        let w = Tensor::from_vec(vec![2, 4], vec![2., 0., 0., 0., 0., 2., 0., 0.]).unwrap();
+        let fc = DenseFc::new(&w, None).unwrap();
+        ModelEngine::new(name, vec![LayerOp::Dense(fc)], 4, 2)
     }
 
     fn serve_cfg(max_batch: usize, wait_us: u64) -> ServeConfig {
-        ServeConfig { max_batch, max_wait_us: wait_us, queue_cap: 256, workers: 1 }
+        ServeConfig {
+            max_batch,
+            max_wait_us: wait_us,
+            queue_cap: 256,
+            workers: 1,
+            ..ServeConfig::default()
+        }
     }
 
     #[test]
     fn admission_control_rejects_when_queue_full() {
         // a 1-slot queue with a slow wait window fills immediately
-        let cfg = ServeConfig { max_batch: 64, max_wait_us: 50_000, queue_cap: 1, workers: 1 };
+        let cfg = ServeConfig {
+            max_batch: 64,
+            max_wait_us: 50_000,
+            queue_cap: 1,
+            workers: 1,
+            ..ServeConfig::default()
+        };
         let server = Server::start(toy_engine(), cfg);
         let mut rejected = 0;
         let mut rxs = Vec::new();
         for id in 0..50u64 {
-            match server.submit(InferenceRequest { id, input: vec![0.0; 4] }) {
+            match server.submit(InferenceRequest::new(id, vec![0.0; 4])) {
                 Ok(rx) => rxs.push(rx),
                 Err(_) => rejected += 1,
             }
@@ -329,9 +610,7 @@ mod tests {
     #[test]
     fn single_request_roundtrip() {
         let server = Server::start(toy_engine(), serve_cfg(4, 100));
-        let resp = server
-            .infer(InferenceRequest { id: 7, input: vec![1.0, 2.0, 3.0, 4.0] })
-            .unwrap();
+        let resp = server.infer(InferenceRequest::new(7, vec![1.0, 2.0, 3.0, 4.0])).unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.output, vec![1.0, 2.0]);
         let m = server.metrics();
@@ -347,7 +626,7 @@ mod tests {
         let mut receivers = Vec::new();
         for id in 0..100u64 {
             let input = rng.normal_vec(4, 1.0);
-            let rx = server.submit(InferenceRequest { id, input: input.clone() }).unwrap();
+            let rx = server.submit(InferenceRequest::new(id, input.clone())).unwrap();
             receivers.push((id, input, rx));
         }
         let mut seen = std::collections::HashSet::new();
@@ -369,15 +648,22 @@ mod tests {
 
     #[test]
     fn worker_pool_answers_every_request() {
-        // the pool case of the no-lost-no-duplicated invariant
-        let cfg = ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 512, workers: 4 };
+        // the pool case of the no-lost-no-duplicated invariant, now across
+        // sharded queues with stealing on
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_wait_us: 200,
+            queue_cap: 512,
+            workers: 4,
+            ..ServeConfig::default()
+        };
         let server = Server::start(toy_engine(), cfg);
         assert_eq!(server.workers(), 4);
         let mut rng = Rng::new(111);
         let mut receivers = Vec::new();
         for id in 0..200u64 {
             let input = rng.normal_vec(4, 1.0);
-            let rx = server.submit(InferenceRequest { id, input: input.clone() }).unwrap();
+            let rx = server.submit(InferenceRequest::new(id, input.clone())).unwrap();
             receivers.push((id, input, rx));
         }
         let mut seen = std::collections::HashSet::new();
@@ -397,11 +683,76 @@ mod tests {
     }
 
     #[test]
+    fn steal_off_still_answers_everything() {
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 512,
+            workers: 4,
+            steal: "off".to_string(),
+            ..ServeConfig::default()
+        };
+        let server = Server::start(toy_engine(), cfg);
+        let rxs: Vec<_> = (0..64u64)
+            .map(|id| server.submit(InferenceRequest::new(id, vec![1.0; 4])).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(server.metrics().requests, 64);
+        server.shutdown();
+    }
+
+    #[test]
     fn rejects_wrong_width_and_reports() {
         let server = Server::start(toy_engine(), serve_cfg(4, 50));
-        let err = server.infer(InferenceRequest { id: 0, input: vec![1.0; 3] });
+        let err = server.infer(InferenceRequest::new(0, vec![1.0; 3]));
         assert!(err.is_err());
         server.shutdown();
+    }
+
+    #[test]
+    fn requests_route_to_their_model() {
+        let server = Server::start_multi(
+            vec![toy_named("identity"), toy_doubler("doubler")],
+            serve_cfg(4, 100),
+        )
+        .unwrap();
+        let x = vec![1.0, 2.0, 0.0, 0.0];
+        // default = first registered
+        let r = server.infer(InferenceRequest::new(0, x.clone())).unwrap();
+        assert_eq!(r.output, vec![1.0, 2.0]);
+        let r = server
+            .infer(InferenceRequest::new(1, x.clone()).for_model("identity"))
+            .unwrap();
+        assert_eq!(r.output, vec![1.0, 2.0]);
+        let r = server.infer(InferenceRequest::new(2, x).for_model("doubler")).unwrap();
+        assert_eq!(r.output, vec![2.0, 4.0]);
+        // per-model metrics see only their own traffic
+        assert_eq!(server.metrics_for("identity").unwrap().requests, 2);
+        assert_eq!(server.metrics_for("doubler").unwrap().requests, 1);
+        assert_eq!(server.metrics().requests, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_fails_fast_naming_known_ones() {
+        let server = Server::start(toy_engine(), serve_cfg(4, 50));
+        let err = server
+            .submit(InferenceRequest::new(0, vec![0.0; 4]).for_model("nope"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nope") && err.contains("toy"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn duplicate_model_names_fail_start_multi() {
+        let err = Server::start_multi(
+            vec![toy_named("same"), toy_named("same")],
+            serve_cfg(4, 50),
+        );
+        assert!(err.is_err());
     }
 
     #[test]
@@ -409,27 +760,86 @@ mod tests {
         // long wait window + burst submit => batches bigger than 1
         let server = Server::start(toy_engine(), serve_cfg(16, 50_000));
         let rxs: Vec<_> = (0..16)
-            .map(|id| {
-                server
-                    .submit(InferenceRequest { id, input: vec![0.5; 4] })
-                    .unwrap()
-            })
+            .map(|id| server.submit(InferenceRequest::new(id, vec![0.5; 4])).unwrap())
             .collect();
-        let sizes: Vec<usize> = rxs
-            .into_iter()
-            .map(|rx| rx.recv().unwrap().unwrap().batch_size)
-            .collect();
+        let sizes: Vec<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().batch_size).collect();
         // at least one multi-request batch must have formed
         assert!(sizes.iter().any(|&s| s > 1), "sizes {sizes:?}");
         server.shutdown();
     }
 
     #[test]
+    fn slo_budget_dispatches_ahead_of_max_wait() {
+        // max_wait is 5 s: without an SLO a lone request would sit in the
+        // batcher until the window closed. A 20 ms SLO must pull the
+        // dispatch to ~10 ms (half the budget).
+        let server = Server::start(toy_engine(), serve_cfg(64, 5_000_000));
+        let t0 = Instant::now();
+        let resp = server
+            .infer(InferenceRequest::new(1, vec![1.0; 4]).with_slo_us(20_000))
+            .unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "SLO'd request waited {:?}, deadline ignored",
+            t0.elapsed()
+        );
+        assert_eq!(resp.output, vec![1.0, 1.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn config_slo_applies_as_default_and_misses_are_counted() {
+        // an SLO of 1 µs is unmeetable: the request must still be answered
+        // and the miss must land in the metrics
+        let cfg = ServeConfig { slo_us: 1, ..serve_cfg(4, 100) };
+        let server = Server::start(toy_engine(), cfg);
+        server.infer(InferenceRequest::new(0, vec![1.0; 4])).unwrap();
+        let m = server.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.slo_missed, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_has_schema_and_per_model_rows() {
+        let server = Server::start_multi(
+            vec![toy_named("a"), toy_named("b")],
+            serve_cfg(4, 100),
+        )
+        .unwrap();
+        server.infer(InferenceRequest::new(0, vec![1.0; 4]).for_model("b")).unwrap();
+        let snap = server.snapshot();
+        assert_eq!(snap.get("schema").and_then(Json::as_str), Some(SNAPSHOT_SCHEMA));
+        assert_eq!(
+            snap.get("schema_version").and_then(Json::as_usize),
+            Some(SNAPSHOT_SCHEMA_VERSION)
+        );
+        assert_eq!(snap.get("workers").and_then(Json::as_usize), Some(1));
+        let models = snap.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("model").and_then(Json::as_str), Some("a"));
+        let b = &models[1];
+        assert_eq!(b.get("model").and_then(Json::as_str), Some("b"));
+        let b_reqs = b
+            .get("metrics")
+            .and_then(|m| m.get("requests"))
+            .and_then(Json::as_u64)
+            .unwrap();
+        assert_eq!(b_reqs, 1);
+        let reg = snap.get("registry").unwrap();
+        assert_eq!(reg.get("models").and_then(Json::as_usize), Some(2));
+        // the document round-trips through the parser
+        let text = crate::util::json::to_string_pretty(&snap);
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SNAPSHOT_SCHEMA));
+        server.shutdown();
+    }
+
+    #[test]
     fn shutdown_answers_inflight() {
         let server = Server::start(toy_engine(), serve_cfg(64, 1_000_000));
-        let rx = server
-            .submit(InferenceRequest { id: 1, input: vec![1.0; 4] })
-            .unwrap();
+        let rx = server.submit(InferenceRequest::new(1, vec![1.0; 4])).unwrap();
         // batch not full, deadline far away: shutdown must still flush it
         server.shutdown();
         let resp = rx.recv().unwrap().unwrap();
@@ -438,10 +848,16 @@ mod tests {
 
     #[test]
     fn shutdown_answers_inflight_across_pool() {
-        let cfg = ServeConfig { max_batch: 64, max_wait_us: 1_000_000, queue_cap: 256, workers: 3 };
+        let cfg = ServeConfig {
+            max_batch: 64,
+            max_wait_us: 1_000_000,
+            queue_cap: 256,
+            workers: 3,
+            ..ServeConfig::default()
+        };
         let server = Server::start(toy_engine(), cfg);
         let rxs: Vec<_> = (0..32u64)
-            .map(|id| server.submit(InferenceRequest { id, input: vec![1.0; 4] }).unwrap())
+            .map(|id| server.submit(InferenceRequest::new(id, vec![1.0; 4])).unwrap())
             .collect();
         server.shutdown();
         for rx in rxs {
@@ -456,17 +872,23 @@ mod tests {
         // consumes self), so exercise the closed path through Drop order:
         // close the queue first, then submit.
         server.queue.close();
-        let err = server.submit(InferenceRequest { id: 0, input: vec![0.0; 4] });
+        let err = server.submit(InferenceRequest::new(0, vec![0.0; 4]));
         assert!(err.is_err());
         assert!(err.unwrap_err().to_string().contains("stopped"));
     }
 
     #[test]
     fn workers_zero_is_clamped_to_one() {
-        let cfg = ServeConfig { max_batch: 4, max_wait_us: 100, queue_cap: 16, workers: 0 };
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait_us: 100,
+            queue_cap: 16,
+            workers: 0,
+            ..ServeConfig::default()
+        };
         let server = Server::start(toy_engine(), cfg);
         assert_eq!(server.workers(), 1);
-        let resp = server.infer(InferenceRequest { id: 3, input: vec![1.0; 4] }).unwrap();
+        let resp = server.infer(InferenceRequest::new(3, vec![1.0; 4])).unwrap();
         assert_eq!(resp.id, 3);
         server.shutdown();
     }

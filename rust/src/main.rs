@@ -11,9 +11,11 @@
 //!   kernel-bench           measure ours vs IREE-like vs Pluto-like (Figs 12-14)
 //!   bench                  the measured-performance subsystem: kernel sweep
 //!                          (pinned Table-3 shapes) + serving sweep
-//!                          (workers x max_batch), written as schema-versioned
-//!                          BENCH_kernels.json / BENCH_serve.json so the perf
-//!                          trajectory accumulates PR over PR
+//!                          (workers x max_batch x co-hosted models), written
+//!                          as schema-versioned BENCH_kernels.json /
+//!                          BENCH_serve.json (per-model rows + an embedded
+//!                          serve snapshot) so the perf trajectory
+//!                          accumulates PR over PR
 //!                          (--quick --out-dir D --kernels-only --serve-only
 //!                           --config bench.toml)
 //!   compress               run DSE + TT-SVD over a model's FC stack and
@@ -22,17 +24,24 @@
 //!                           --rank R --seed S --tune: persist measured
 //!                           autotuned plans in the TUNE section)
 //!   serve-demo             start the serving coordinator on a TT LeNet300
-//!                          (or warm-start it from --artifact model.ttrv),
-//!                          fire synthetic load, print metrics
-//!                          (--workers N --max-batch B --wait-us T --queue-cap Q)
+//!                          (or warm-start it from one or more repeated
+//!                          --artifact model.ttrv flags, co-hosted in one
+//!                          registry), fire synthetic round-robin load,
+//!                          print per-model metrics
+//!                          (--workers N --max-batch B --wait-us T
+//!                           --queue-cap Q --shards S --steal ring|off
+//!                           --slo-us T --cache-bytes B
+//!                           --snapshot-json out.json)
 //!   artifacts-check        --verify model.ttrv: validate a `.ttrv` bundle
 //!                          (CRCs + bitwise replay against a fresh
 //!                          compression); without --verify, load + execute
 //!                          the PJRT artifacts (needs `make artifacts`)
 //!
 //! Arg parsing is hand-rolled (clap unavailable offline): `--key value`.
-//! A flag value that fails to parse is a hard CLI error naming the flag —
-//! never a silent fallback to the default.
+//! Flags are repeatable — scalar lookups take the last value (the usual
+//! last-one-wins CLI rule) and list lookups (`--artifact a --artifact b`)
+//! keep every value in order. A flag value that fails to parse is a hard
+//! CLI error naming the flag — never a silent fallback to the default.
 
 use std::collections::HashMap;
 
@@ -52,16 +61,21 @@ use ttrv::ttd::cost::{EinsumDims, EinsumKind};
 use ttrv::ttd::decompose::random_cores;
 use ttrv::util::prng::Rng;
 
-fn parse_args(args: &[String]) -> HashMap<String, String> {
-    let mut map = HashMap::new();
+/// Parsed command line: every `--key` maps to *all* its values in order,
+/// so repeatable flags (`serve-demo --artifact a.ttrv --artifact b.ttrv`)
+/// survive parsing instead of last-one clobbering the map entry.
+type Args = HashMap<String, Vec<String>>;
+
+fn parse_args(args: &[String]) -> Args {
+    let mut map: Args = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                map.insert(key.to_string(), args[i + 1].clone());
+                map.entry(key.to_string()).or_default().push(args[i + 1].clone());
                 i += 2;
             } else {
-                map.insert(key.to_string(), "true".to_string());
+                map.entry(key.to_string()).or_default().push("true".to_string());
                 i += 1;
             }
         } else {
@@ -71,15 +85,23 @@ fn parse_args(args: &[String]) -> HashMap<String, String> {
     map
 }
 
+/// Last value of a (possibly repeated) scalar flag — the usual
+/// last-one-wins CLI rule.
+fn last<'a>(args: &'a Args, key: &str) -> Option<&'a String> {
+    args.get(key).and_then(|v| v.last())
+}
+
+/// Every value of a repeatable flag in command-line order; empty when the
+/// flag is absent.
+fn get_all<'a>(args: &'a Args, key: &str) -> &'a [String] {
+    args.get(key).map(Vec::as_slice).unwrap_or(&[])
+}
+
 /// Typed flag lookup: absent -> `default`; present but unparsable -> a hard
 /// CLI error naming the flag and the offending value (a silently swallowed
 /// `--workers abc` used to serve with the default worker count).
-fn get<T: std::str::FromStr>(
-    args: &HashMap<String, String>,
-    key: &str,
-    default: T,
-) -> ttrv::Result<T> {
-    match args.get(key) {
+fn get<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> ttrv::Result<T> {
+    match last(args, key) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| {
             ttrv::Error::config(format!(
@@ -130,8 +152,11 @@ fn print_help() {
          compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R] [--seed S] [--tune]\n\
          \u{20}        DSE-route + TT-SVD a model's FC stack into a versioned .ttrv bundle\n\
          \u{20}        (--tune: measure RB/thread candidates per einsum, persist the winners)\n\
-         serve-demo [--artifact model.ttrv] [--workers N] [--max-batch B]\n\
-         \u{20}        serve a TT LeNet300 (warm-started from the bundle when given)\n\
+         serve-demo [--artifact a.ttrv [--artifact b.ttrv ...]] [--workers N] [--max-batch B]\n\
+         \u{20}        [--shards S] [--steal ring|off] [--slo-us T] [--cache-bytes B]\n\
+         \u{20}        [--snapshot-json out.json]\n\
+         \u{20}        serve a TT LeNet300, or co-host every --artifact bundle in one\n\
+         \u{20}        registry (round-robin load, per-model metrics, JSON snapshot)\n\
          artifacts-check --verify model.ttrv\n\
          \u{20}        validate bundle CRCs and replay it bitwise against a fresh compression\n\
          \n\
@@ -139,7 +164,7 @@ fn print_help() {
     );
 }
 
-fn cmd_tables(args: &HashMap<String, String>) -> ttrv::Result<()> {
+fn cmd_tables(args: &Args) -> ttrv::Result<()> {
     let cfg = DseConfig::default();
     let llm_only = args.contains_key("llm");
     let cnn_only = args.contains_key("cnn");
@@ -160,7 +185,7 @@ fn cmd_tables(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
-fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
+fn cmd_dse(args: &Args) -> ttrv::Result<()> {
     let n: u64 = get(args, "n", 784)?;
     let m: u64 = get(args, "m", 300)?;
     let rank: u64 = get(args, "rank", 8)?;
@@ -168,8 +193,7 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
     let base = DseConfig::default();
     let cfg = DseConfig {
         dse_workers: get(args, "workers", base.dse_workers)?,
-        selection_policy: args
-            .get("policy")
+        selection_policy: last(args, "policy")
             .cloned()
             .unwrap_or_else(|| base.selection_policy.clone()),
         ..base
@@ -184,7 +208,7 @@ fn cmd_dse(args: &HashMap<String, String>) -> ttrv::Result<()> {
     // the modeled target) plus a measured host dense baseline, so modeled
     // and measured speedups sit side by side; resolved up front so --json
     // includes it too
-    let measured = match args.get("measure") {
+    let measured = match last(args, "measure") {
         None => None,
         Some(v) => {
             let head: usize = v.parse().map_err(|_| {
@@ -344,7 +368,7 @@ fn measure_dense_host(
     ttrv::util::timer::try_min_secs("host dense baseline", || fc.forward(&x).map(|_| ()), floor)
 }
 
-fn cmd_plan(args: &HashMap<String, String>) -> ttrv::Result<()> {
+fn cmd_plan(args: &Args) -> ttrv::Result<()> {
     let dims = EinsumDims {
         kind: EinsumKind::Middle,
         m: get(args, "m", 64)?,
@@ -369,8 +393,8 @@ fn cmd_plan(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
-fn cmd_kernel_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
-    let kind = match args.get("kind").map(String::as_str) {
+fn cmd_kernel_bench(args: &Args) -> ttrv::Result<()> {
+    let kind = match last(args, "kind").map(String::as_str) {
         Some("first") => EinsumKind::First,
         Some("final") => EinsumKind::Final,
         _ => EinsumKind::Middle,
@@ -402,11 +426,12 @@ fn cmd_kernel_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
 
 /// `ttrv bench`: the measured-performance subsystem. Runs the kernel-level
 /// sweep (pinned Table-3 einsum shapes, ours vs IREE-like vs Pluto-like)
-/// and the serving sweep (`workers x max_batch` through a real pool over
-/// the deterministic compressed LeNet300), then writes the
-/// schema-versioned `BENCH_kernels.json` / `BENCH_serve.json` reports so
+/// and the serving sweep (`workers x max_batch x models` through a real
+/// pool over the deterministic compressed LeNet300 + LeNet5 pair), then
+/// writes the schema-versioned `BENCH_kernels.json` / `BENCH_serve.json`
+/// reports — per-model rows plus an embedded `ttrv-serve-snapshot` — so
 /// every future run appends a point to the perf trajectory.
-fn cmd_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
+fn cmd_bench(args: &Args) -> ttrv::Result<()> {
     use ttrv::bench::harness;
     let quick = args.contains_key("quick") || ttrv::util::bench_quick_env();
     let kernels_only = args.contains_key("kernels-only");
@@ -418,7 +443,7 @@ fn cmd_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
     }
     // precedence: an explicit --config file > --quick / TTRV_BENCH_QUICK >
     // the defaults (same explicit-flag-wins rule as `compress`)
-    let typed = match args.get("config") {
+    let typed = match last(args, "config") {
         Some(path) => {
             let text = std::fs::read_to_string(path).map_err(|e| {
                 ttrv::Error::config(format!("cannot read bench config '{path}': {e}"))
@@ -432,7 +457,7 @@ fn cmd_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
         None if quick => BenchCfg::quick(),
         None => BenchCfg::default(),
     };
-    let out_dir = args.get("out-dir").cloned().unwrap_or_else(|| ".".to_string());
+    let out_dir = last(args, "out-dir").cloned().unwrap_or_else(|| ".".to_string());
     let out_dir = std::path::Path::new(&out_dir);
 
     if !serve_only {
@@ -461,11 +486,15 @@ fn cmd_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
     }
 
     if !kernels_only {
-        println!("serving sweep: building the deterministic compressed LeNet300 engine...");
+        println!("serving sweep: compressing the deterministic two-model zoo (lenet300 + lenet5)...");
         let machine = MachineSpec::spacemit_k1();
-        let spec = ttrv::artifact::CompressSpec::from_zoo("lenet300", 8, 42)?;
-        let bundle = ttrv::artifact::compress(&spec, &machine, &DseConfig::default())?;
-        let engine = bundle.build_engine(&machine)?;
+        let dse_cfg = DseConfig::default();
+        let mut engines = Vec::new();
+        for name in ["lenet300", "lenet5"] {
+            let spec = ttrv::artifact::CompressSpec::from_zoo(name, 8, 42)?;
+            let bundle = ttrv::artifact::compress(&spec, &machine, &dse_cfg)?;
+            engines.push(bundle.build_engine(&machine)?);
+        }
         let default_requests = match &typed {
             Some(t) => t.serve_requests,
             None if quick => 128,
@@ -473,26 +502,31 @@ fn cmd_bench(args: &HashMap<String, String>) -> ttrv::Result<()> {
         };
         let requests: usize = get(args, "requests", default_requests)?;
         let points = harness::default_serve_points(quick);
-        let rows = harness::run_serve_sweep(&engine, &points, requests)?;
+        let (rows, snapshot) = harness::run_serve_sweep(&engines, &points, requests)?;
         for r in &rows {
             println!(
-                "  workers={} max_batch={:<3} {:>8.0} req/s  p50 {:>6} us  p99 {:>6} us  mean batch {:.1}",
-                r.point.workers, r.point.max_batch, r.req_per_s, r.p50_us, r.p99_us, r.mean_batch
+                "  workers={} max_batch={:<3} models={} {:<12} {:>8.0} req/s  p50 {:>6} us  p99 {:>6} us  mean batch {:.1}",
+                r.point.workers,
+                r.point.max_batch,
+                r.point.models,
+                r.model,
+                r.req_per_s,
+                r.p50_us,
+                r.p99_us,
+                r.mean_batch
             );
         }
         let path = out_dir.join(harness::BENCH_SERVE_FILE);
-        harness::write_report(&path, &harness::serve_report_json(&rows, &bundle.name, quick))?;
-        println!("wrote {} ({} configurations)", path.display(), rows.len());
+        harness::write_report(&path, &harness::serve_report_json(&rows, quick, &snapshot))?;
+        println!("wrote {} ({} rows)", path.display(), rows.len());
     }
     Ok(())
 }
 
-fn cmd_compress(args: &HashMap<String, String>) -> ttrv::Result<()> {
-    let model = args
-        .get("model")
+fn cmd_compress(args: &Args) -> ttrv::Result<()> {
+    let model = last(args, "model")
         .ok_or_else(|| ttrv::Error::config("compress needs --model <zoo-name|spec.toml>"))?;
-    let out = args
-        .get("out")
+    let out = last(args, "out")
         .ok_or_else(|| ttrv::Error::config("compress needs --out <file.ttrv>"))?;
     let rank: u64 = get(args, "rank", 8)?;
     let seed: u64 = get(args, "seed", 42)?;
@@ -572,53 +606,69 @@ fn cmd_compress(args: &HashMap<String, String>) -> ttrv::Result<()> {
     Ok(())
 }
 
-fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
+fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
     let requests: usize = get(args, "requests", 200)?;
+    let d = ServeConfig::default();
     let serve_cfg = ServeConfig {
-        max_batch: get(args, "max-batch", ServeConfig::default().max_batch)?,
-        max_wait_us: get(args, "wait-us", ServeConfig::default().max_wait_us)?,
-        queue_cap: get(args, "queue-cap", ServeConfig::default().queue_cap)?,
-        workers: get(args, "workers", ServeConfig::default().workers)?,
+        max_batch: get(args, "max-batch", d.max_batch)?,
+        max_wait_us: get(args, "wait-us", d.max_wait_us)?,
+        queue_cap: get(args, "queue-cap", d.queue_cap)?,
+        workers: get(args, "workers", d.workers)?,
+        shards: get(args, "shards", d.shards)?,
+        steal: last(args, "steal").cloned().unwrap_or(d.steal),
+        slo_us: get(args, "slo-us", d.slo_us)?,
+        cache_bytes: get(args, "cache-bytes", d.cache_bytes)?,
     };
     serve_cfg.validate()?;
     let machine = MachineSpec::spacemit_k1();
     let mut rng = Rng::new(1);
 
-    let (engine, in_dim, modeled_tt_secs) = if let Some(path) = args.get("artifact") {
-        // warm start: no DSE, no decomposition — the bundle carries packed
-        // cores and compiled (possibly measured-autotuned) plans
+    let artifacts = get_all(args, "artifact");
+    // per-model modeled per-request TT time (sum of the selected solutions'
+    // batch-1 chain estimates) for the modeled-vs-measured lines below
+    let mut modeled_tt: Vec<(String, f64)> = Vec::new();
+    let server = if !artifacts.is_empty() {
+        // warm start: no DSE, no decomposition — each bundle carries packed
+        // cores and compiled (possibly measured-autotuned) plans; all of
+        // them co-host in one registry, routed by model id
         let t0 = std::time::Instant::now();
-        let bundle = ttrv::artifact::read_bundle_file(path)?;
-        let engine = bundle.build_engine(&machine)?;
-        let tuned_layers = bundle
-            .ops
-            .iter()
-            .filter(|op| matches!(op, ttrv::artifact::BundleOp::Tt(t) if t.tuned.is_some()))
-            .count();
-        println!(
-            "warm-started {} from {path} in {:.1} ms ({} FC layers, {} TT, {})",
-            bundle.name,
-            t0.elapsed().as_secs_f64() * 1e3,
-            bundle.shapes.len(),
-            bundle.tt_layers(),
-            if tuned_layers > 0 {
-                format!("{tuned_layers} serving measured TUNE plans")
-            } else {
-                "analytic plans".to_string()
+        for path in artifacts {
+            let bundle = ttrv::artifact::read_bundle_file(path)?;
+            let tuned_layers = bundle
+                .ops
+                .iter()
+                .filter(|op| matches!(op, ttrv::artifact::BundleOp::Tt(t) if t.tuned.is_some()))
+                .count();
+            println!(
+                "loaded {} from {path} ({} FC layers, {} TT, {})",
+                bundle.name,
+                bundle.shapes.len(),
+                bundle.tt_layers(),
+                if tuned_layers > 0 {
+                    format!("{tuned_layers} serving measured TUNE plans")
+                } else {
+                    "analytic plans".to_string()
+                }
+            );
+            let modeled: f64 = bundle
+                .ops
+                .iter()
+                .filter_map(|op| match op {
+                    ttrv::artifact::BundleOp::Tt(t) => Some(t.selected.time_s),
+                    _ => None,
+                })
+                .sum();
+            if modeled.is_finite() && modeled > 0.0 {
+                modeled_tt.push((bundle.name.clone(), modeled));
             }
+        }
+        let server = Server::from_artifacts(artifacts, &machine, serve_cfg.clone())?;
+        println!(
+            "warm-started {} model(s) in {:.1} ms",
+            server.registry().len(),
+            t0.elapsed().as_secs_f64() * 1e3
         );
-        // modeled per-request TT time (sum of the selected solutions'
-        // batch-1 chain estimates) for the modeled-vs-measured line below
-        let modeled: f64 = bundle
-            .ops
-            .iter()
-            .filter_map(|op| match op {
-                ttrv::artifact::BundleOp::Tt(t) => Some(t.selected.time_s),
-                _ => None,
-            })
-            .sum();
-        let in_dim = bundle.in_dim;
-        (engine, in_dim, (modeled.is_finite() && modeled > 0.0).then_some(modeled))
+        server
     } else {
         // cold start: DSE-route and decompose a TT LeNet300 in process
         let cfg = DseConfig::default();
@@ -646,20 +696,32 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
                 ops.push(LayerOp::Relu);
             }
         }
-        (ModelEngine::new("lenet300-tt", ops, 784, 10), 784, None)
+        Server::start(ModelEngine::new("lenet300-tt", ops, 784, 10), serve_cfg.clone())
     };
+    let infos = server.registry().models();
     println!(
-        "serving with {} worker(s), max_batch {}, wait {}us, queue {}",
-        serve_cfg.workers, serve_cfg.max_batch, serve_cfg.max_wait_us, serve_cfg.queue_cap
+        "serving {} model(s) with {} worker(s), max_batch {}, wait {}us, queue {}, steal {}{}",
+        infos.len(),
+        serve_cfg.workers.max(1),
+        serve_cfg.max_batch,
+        serve_cfg.max_wait_us,
+        serve_cfg.queue_cap,
+        serve_cfg.steal,
+        if serve_cfg.slo_us > 0 {
+            format!(", slo {}us", serve_cfg.slo_us)
+        } else {
+            String::new()
+        }
     );
-    let server = Server::start(engine, serve_cfg);
 
+    // synthetic load, round-robined across the co-hosted models
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
         .map(|id| {
-            server
-                .submit(InferenceRequest { id: id as u64, input: rng.normal_vec(in_dim, 1.0) })
-                .expect("queue should admit")
+            let info = &infos[id % infos.len()];
+            let req = InferenceRequest::new(id as u64, rng.normal_vec(info.in_dim, 1.0))
+                .for_model(info.id.clone());
+            server.submit(req).expect("queue should admit")
         })
         .collect();
     for rx in rxs {
@@ -667,16 +729,19 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("served {requests} requests in {:.1} ms ({:.0} req/s)", dt * 1e3, requests as f64 / dt);
-    let metrics = server.metrics();
-    println!("{}", metrics.summary());
-    if let Some(modeled) = modeled_tt_secs {
+    for info in &infos {
+        let m = server.metrics_for(&info.id)?;
+        println!("model {}:\n{}", info.id, m.summary());
+    }
+    for (name, modeled) in &modeled_tt {
         // modeled (target cost model, batch 1) vs measured (this host's
         // exec histogram, amortized per request) — the serving half of the
         // analytic->measured loop the bench harness closes
-        let measured_us = metrics.exec.mean_us() / metrics.mean_batch().max(1.0);
+        let m = server.metrics_for(name)?;
+        let measured_us = m.exec.mean_us() / m.mean_batch().max(1.0);
         if measured_us > 0.0 {
             println!(
-                "modeled TT chains: {:.1} us/request vs measured exec: {:.1} us/request \
+                "{name}: modeled TT chains {:.1} us/request vs measured exec {:.1} us/request \
                  ({:.2}x of the model, host vs modeled target)",
                 modeled * 1e6,
                 measured_us,
@@ -684,16 +749,25 @@ fn cmd_serve_demo(args: &HashMap<String, String>) -> ttrv::Result<()> {
             );
         }
     }
+    if let Some(path) = last(args, "snapshot-json") {
+        // the machine-readable state document: per-model rows + process
+        // totals, schema-gated by python/tools/check_bench_json.py
+        let mut text = ttrv::util::json::to_string_pretty(&server.snapshot());
+        text.push('\n');
+        std::fs::write(path, text).map_err(|e| {
+            ttrv::Error::serve(format!("cannot write snapshot '{path}': {e}"))
+        })?;
+        println!("wrote snapshot {path}");
+    }
     server.shutdown();
     Ok(())
 }
 
-fn cmd_artifacts_check(args: &HashMap<String, String>) -> ttrv::Result<()> {
-    if let Some(path) = args.get("verify") {
+fn cmd_artifacts_check(args: &Args) -> ttrv::Result<()> {
+    if let Some(path) = last(args, "verify") {
         return cmd_verify_bundle(path);
     }
-    let dir = args
-        .get("dir")
+    let dir = last(args, "dir")
         .cloned()
         .unwrap_or_else(|| "artifacts".to_string());
     let rt = ttrv::runtime::Runtime::open(&dir)?;
@@ -750,9 +824,21 @@ mod tests {
     #[test]
     fn parse_args_pairs_and_flags() {
         let args = args_of(&["--n", "784", "--json", "--m", "300"]);
-        assert_eq!(args.get("n").map(String::as_str), Some("784"));
-        assert_eq!(args.get("m").map(String::as_str), Some("300"));
-        assert_eq!(args.get("json").map(String::as_str), Some("true"));
+        assert_eq!(last(&args, "n").map(String::as_str), Some("784"));
+        assert_eq!(last(&args, "m").map(String::as_str), Some("300"));
+        assert_eq!(last(&args, "json").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_value_in_order() {
+        let args = args_of(&["--artifact", "a.ttrv", "--workers", "2", "--artifact", "b.ttrv"]);
+        assert_eq!(get_all(&args, "artifact"), &["a.ttrv", "b.ttrv"]);
+        // scalar lookups over a repeated flag take the last value
+        let args = args_of(&["--workers", "2", "--workers", "8"]);
+        assert_eq!(last(&args, "workers").map(String::as_str), Some("8"));
+        assert_eq!(get(&args, "workers", 1usize).unwrap(), 8);
+        // absent repeatable flag is an empty list, not a panic
+        assert!(get_all(&args, "artifact").is_empty());
     }
 }
 

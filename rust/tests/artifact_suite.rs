@@ -565,7 +565,7 @@ fn server_from_artifact_serves_persisted_tuned_plans_bitwise() {
     for id in 0..8u64 {
         let input = rng.normal_vec(784, 1.0);
         let resp = server
-            .infer(InferenceRequest { id, input: input.clone() })
+            .infer(InferenceRequest::new(id, input.clone()))
             .unwrap();
         let x = Tensor::from_vec(vec![1, 784], input).unwrap();
         let want = reference.forward(&x).unwrap();
@@ -727,7 +727,7 @@ fn server_from_artifact_serves_bitwise_identical_responses() {
         .enumerate()
         .map(|(id, input)| {
             server
-                .submit(InferenceRequest { id: id as u64, input: input.clone() })
+                .submit(InferenceRequest::new(id as u64, input.clone()))
                 .unwrap()
         })
         .collect();

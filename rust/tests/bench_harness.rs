@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use ttrv::bench::harness::{
     self, kernel_report_json, kernel_rows, run_serve_sweep, serve_report_json, write_report,
-    ServePoint, BENCH_SCHEMA_VERSION,
+    ServePoint, BENCH_KERNELS_SCHEMA_VERSION, BENCH_SERVE_SCHEMA_VERSION,
 };
 use ttrv::bench::BenchCfg;
 use ttrv::baselines::dense::DenseFc;
@@ -21,10 +21,10 @@ fn tiny_cfg() -> BenchCfg {
     BenchCfg { warmup_iters: 1, min_iters: 3, min_time: Duration::from_millis(1), trim: 0.2 }
 }
 
-fn toy_engine() -> ModelEngine {
+fn toy_engine(name: &str) -> ModelEngine {
     let w = Tensor::from_vec(vec![2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]).unwrap();
     let fc = DenseFc::new(&w, None).unwrap();
-    ModelEngine::new("toy", vec![LayerOp::Dense(fc)], 4, 2)
+    ModelEngine::new(name, vec![LayerOp::Dense(fc)], 4, 2)
 }
 
 /// Every number reachable in a report must be finite (util/json writes
@@ -59,29 +59,44 @@ fn bench_files_are_written_schema_valid_and_reparseable() {
     let kpath = dir.join(harness::BENCH_KERNELS_FILE);
     write_report(&kpath, &kernels).unwrap();
 
-    // serve report over a 2-point grid on a deterministic toy engine
-    let engine = toy_engine();
-    let points = [ServePoint { workers: 1, max_batch: 4 }, ServePoint { workers: 2, max_batch: 8 }];
-    let srows = run_serve_sweep(&engine, &points, 32).unwrap();
-    let serve = serve_report_json(&srows, "toy", true);
+    // serve report over a 2-point grid (single- and two-model) on
+    // deterministic toy engines
+    let engines = [toy_engine("toy"), toy_engine("toy2")];
+    let points = [
+        ServePoint { workers: 1, max_batch: 4, models: 1 },
+        ServePoint { workers: 2, max_batch: 8, models: 2 },
+    ];
+    let (srows, snapshot) = run_serve_sweep(&engines, &points, 32).unwrap();
+    let serve = serve_report_json(&srows, true, &snapshot);
     let spath = dir.join(harness::BENCH_SERVE_FILE);
     write_report(&spath, &serve).unwrap();
 
-    for (path, schema, doc) in [
-        (&kpath, "ttrv-bench-kernels", &kernels),
-        (&spath, "ttrv-bench-serve", &serve),
+    for (path, schema, version, doc) in [
+        (&kpath, "ttrv-bench-kernels", BENCH_KERNELS_SCHEMA_VERSION, &kernels),
+        (&spath, "ttrv-bench-serve", BENCH_SERVE_SCHEMA_VERSION, &serve),
     ] {
         let text = std::fs::read_to_string(path).unwrap();
         assert!(text.ends_with('\n'), "{}: report must end with a newline", path.display());
         let back = json::parse(&text).unwrap();
         assert_eq!(&back, doc, "{}: file does not round-trip", path.display());
         assert_eq!(back.get("schema").unwrap().as_str(), Some(schema));
-        assert_eq!(back.get("schema_version").unwrap().as_u64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(back.get("schema_version").unwrap().as_u64(), Some(version));
         assert_eq!(back.get("quick").unwrap().as_bool(), Some(true));
         let results = back.get("results").unwrap().as_arr().unwrap();
         assert!(!results.is_empty());
         assert_all_numbers_finite(&back, schema);
     }
+
+    // serve v2 specifics: per-row model axis + the embedded snapshot
+    let sback = json::parse(&std::fs::read_to_string(&spath).unwrap()).unwrap();
+    let models = sback.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2, "both co-hosted model names must be listed");
+    for row in sback.get("results").unwrap().as_arr().unwrap() {
+        assert!(row.get("model").unwrap().as_str().is_some());
+        assert!(row.get("models").unwrap().as_usize().unwrap() >= 1);
+    }
+    let snap = sback.get("snapshot").unwrap();
+    assert_eq!(snap.get("schema").unwrap().as_str(), Some("ttrv-serve-snapshot"));
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
@@ -116,10 +131,10 @@ fn measurement_floor_is_respected_per_cell() {
 fn serve_sweep_scales_input_order_independently() {
     // two runs of the same point produce the same request count and
     // answer everything (timings vary; correctness may not)
-    let engine = toy_engine();
-    let p = [ServePoint { workers: 2, max_batch: 4 }];
-    let a = run_serve_sweep(&engine, &p, 16).unwrap();
-    let b = run_serve_sweep(&engine, &p, 16).unwrap();
+    let engines = [toy_engine("toy")];
+    let p = [ServePoint { workers: 2, max_batch: 4, models: 1 }];
+    let (a, _) = run_serve_sweep(&engines, &p, 16).unwrap();
+    let (b, _) = run_serve_sweep(&engines, &p, 16).unwrap();
     assert_eq!(a[0].requests, b[0].requests);
     assert!(a[0].req_per_s > 0.0 && b[0].req_per_s > 0.0);
 }

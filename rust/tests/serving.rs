@@ -1,5 +1,10 @@
-//! Integration: the serving coordinator over a real TT-compressed model,
-//! single worker and pool.
+//! Integration: the serving coordinator over real TT-compressed models —
+//! single worker, pools, sharded queues, and multi-model co-hosting.
+//!
+//! The load-bearing invariant pinned here is bitwise response stability:
+//! the same request stream must produce byte-identical outputs no matter
+//! how many workers serve it, how many queue shards it crosses, whether
+//! work stealing fired, or how many other models share the process.
 
 use std::time::Instant;
 
@@ -46,19 +51,46 @@ fn build_pair(rng: &mut Rng) -> (ModelEngine, ModelEngine) {
     )
 }
 
+/// DSE-route an arbitrary FC stack into a TT/dense engine with seeded
+/// random weights.
+fn build_tt(name: &str, shapes: &[(u64, u64)], seed: u64) -> ModelEngine {
+    let machine = MachineSpec::spacemit_k1();
+    let cfg = DseConfig::default();
+    let mut rng = Rng::new(seed);
+    let mut ops = Vec::new();
+    for (i, &(n, m)) in shapes.iter().enumerate() {
+        match ttrv::coordinator::router::route_layer(m, n, 8, &machine, &cfg).unwrap() {
+            Route::Tt(sol) => {
+                let mut tt = random_cores(sol.layout(), &mut rng);
+                tt.bias = Some(vec![0.0; m as usize]);
+                ops.push(LayerOp::Tt(TtFcEngine::new(&tt, &machine).unwrap()));
+            }
+            Route::Dense => {
+                let w = Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng);
+                ops.push(LayerOp::Dense(DenseFc::new(&w, None).unwrap()));
+            }
+        }
+        if i + 1 < shapes.len() {
+            ops.push(LayerOp::Relu);
+        }
+    }
+    let in_dim = shapes[0].0 as usize;
+    let out_dim = shapes[shapes.len() - 1].1 as usize;
+    ModelEngine::new(name, ops, in_dim, out_dim)
+}
+
+fn cfg4(max_batch: usize, max_wait_us: u64, queue_cap: usize, workers: usize) -> ServeConfig {
+    ServeConfig { max_batch, max_wait_us, queue_cap, workers, ..ServeConfig::default() }
+}
+
 #[test]
 fn served_outputs_match_dense_reference_model() {
     let mut rng = Rng::new(21);
     let (tt_model, mut dense_model) = build_pair(&mut rng);
-    let server = Server::start(
-        tt_model,
-        ServeConfig { max_batch: 8, max_wait_us: 200, queue_cap: 128, workers: 1 },
-    );
+    let server = Server::start(tt_model, cfg4(8, 200, 128, 1));
     for id in 0..24u64 {
         let input = rng.normal_vec(784, 1.0);
-        let resp = server
-            .infer(InferenceRequest { id, input: input.clone() })
-            .unwrap();
+        let resp = server.infer(InferenceRequest::new(id, input.clone())).unwrap();
         let x = Tensor::from_vec(vec![1, 784], input).unwrap();
         let want = dense_model.forward(&x).unwrap();
         for (a, b) in resp.output.iter().zip(want.data()) {
@@ -74,17 +106,11 @@ fn served_outputs_match_dense_reference_model() {
 fn concurrent_clients_get_consistent_replies() {
     let mut rng = Rng::new(22);
     let (tt_model, _) = build_pair(&mut rng);
-    let server = std::sync::Arc::new(Server::start(
-        tt_model,
-        ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 512, workers: 1 },
-    ));
+    let server = std::sync::Arc::new(Server::start(tt_model, cfg4(16, 300, 512, 1)));
     // a fixed probe input must produce identical output regardless of the
     // batch it rides in
     let probe: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
-    let expected = server
-        .infer(InferenceRequest { id: 0, input: probe.clone() })
-        .unwrap()
-        .output;
+    let expected = server.infer(InferenceRequest::new(0, probe.clone())).unwrap().output;
 
     let mut handles = Vec::new();
     for t in 0..4 {
@@ -96,7 +122,7 @@ fn concurrent_clients_get_consistent_replies() {
             for i in 0..25u64 {
                 if i % 3 == 0 {
                     let out = server
-                        .infer(InferenceRequest { id: t * 1000 + i, input: probe.clone() })
+                        .infer(InferenceRequest::new(t * 1000 + i, probe.clone()))
                         .unwrap()
                         .output;
                     for (a, b) in out.iter().zip(&expected) {
@@ -104,9 +130,7 @@ fn concurrent_clients_get_consistent_replies() {
                     }
                 } else {
                     let input = rng.normal_vec(784, 1.0);
-                    server
-                        .infer(InferenceRequest { id: t * 1000 + i, input })
-                        .unwrap();
+                    server.infer(InferenceRequest::new(t * 1000 + i, input)).unwrap();
                 }
             }
         }));
@@ -128,10 +152,7 @@ fn throughput_improves_with_batching() {
     // is never tolerated.
     let mut rng = Rng::new(23);
     let (tt_model, _) = build_pair(&mut rng);
-    let server = Server::start(
-        tt_model,
-        ServeConfig { max_batch: 32, max_wait_us: 20_000, queue_cap: 512, workers: 1 },
-    );
+    let server = Server::start(tt_model, cfg4(32, 20_000, 512, 1));
     let mut batched = false;
     for attempt in 0..5 {
         let inputs: Vec<Vec<f32>> = (0..128).map(|_| rng.normal_vec(784, 1.0)).collect();
@@ -139,9 +160,7 @@ fn throughput_improves_with_batching() {
             .into_iter()
             .enumerate()
             .map(|(id, input)| {
-                server
-                    .submit(InferenceRequest { id: (attempt * 1000 + id) as u64, input })
-                    .unwrap()
+                server.submit(InferenceRequest::new((attempt * 1000 + id) as u64, input)).unwrap()
             })
             .collect();
         let mut max_batch = 0usize;
@@ -160,53 +179,123 @@ fn throughput_improves_with_batching() {
     server.shutdown();
 }
 
-/// Serve a fixed 96-request stream with the given pool size and return the
-/// output bit patterns by request id. The model is rebuilt from the same
-/// seed each call, so any cross-run difference can only come from the pool.
-fn serve_stream_bits(workers: usize) -> Vec<Vec<u32>> {
-    let mut rng = Rng::new(31);
-    let (tt_model, _) = build_pair(&mut rng);
-    let server = Server::start(
-        tt_model,
-        ServeConfig { max_batch: 8, max_wait_us: 500, queue_cap: 1024, workers },
-    );
-    let mut input_rng = Rng::new(77);
-    let inputs: Vec<Vec<f32>> = (0..96).map(|_| input_rng.normal_vec(784, 1.0)).collect();
-    // burst submission so batches actually form (and form *differently*
-    // across pool sizes — which the outputs must not care about)
-    let rxs: Vec<_> = inputs
-        .into_iter()
-        .enumerate()
-        .map(|(id, input)| {
-            server
-                .submit(InferenceRequest { id: id as u64, input })
-                .unwrap()
+/// The two FC stacks of the co-hosting matrix: LeNet300 and the LeNet5 FC
+/// tail, (name, shapes, weight seed).
+const MATRIX_MODELS: [(&str, &[(u64, u64)], u64); 2] = [
+    ("a-tt", &[(784, 300), (300, 100), (100, 10)], 31),
+    ("b-tt", &[(400, 120), (120, 84), (84, 10)], 32),
+];
+
+/// Serve a fixed per-model request stream on `hosted` co-hosted models
+/// with the given pool/shard geometry and return the output bit patterns
+/// as `bits[model][request]`. Engines are `worker_clone`s of `protos`, so
+/// every call serves identical weights and any cross-call difference can
+/// only come from the serving layer.
+fn serve_matrix_bits(
+    protos: &[ModelEngine],
+    hosted: usize,
+    workers: usize,
+    shards: usize,
+    per_model: usize,
+) -> Vec<Vec<Vec<u32>>> {
+    let engines: Vec<ModelEngine> = protos[..hosted].iter().map(ModelEngine::worker_clone).collect();
+    let in_dims: Vec<usize> = (0..hosted).map(|i| MATRIX_MODELS[i].1[0].0 as usize).collect();
+    let names: Vec<&str> = (0..hosted).map(|i| MATRIX_MODELS[i].0).collect();
+    let server = Server::start_multi(
+        engines,
+        ServeConfig {
+            max_batch: 8,
+            max_wait_us: 500,
+            queue_cap: 4096,
+            workers,
+            shards,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    // per-model input streams from fixed seeds, submitted interleaved in
+    // one burst so batches form (and form *differently* across geometries
+    // — which the outputs must not care about)
+    let streams: Vec<Vec<Vec<f32>>> = (0..hosted)
+        .map(|mi| {
+            let mut rng = Rng::new(77 + mi as u64);
+            (0..per_model).map(|_| rng.normal_vec(in_dims[mi], 1.0)).collect()
         })
         .collect();
-    let mut bits = vec![Vec::new(); 96];
-    for (id, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap().unwrap();
-        assert_eq!(resp.id, id as u64);
-        bits[id] = resp.output.iter().map(|v| v.to_bits()).collect();
+    let mut rxs: Vec<Vec<_>> = (0..hosted).map(|_| Vec::with_capacity(per_model)).collect();
+    for i in 0..per_model {
+        for mi in 0..hosted {
+            let req = InferenceRequest::new((mi * per_model + i) as u64, streams[mi][i].clone())
+                .for_model(names[mi]);
+            rxs[mi].push(server.submit(req).unwrap());
+        }
     }
+    let bits: Vec<Vec<Vec<u32>>> = rxs
+        .into_iter()
+        .map(|model_rxs| {
+            model_rxs
+                .into_iter()
+                .map(|rx| {
+                    let resp = rx.recv().unwrap().unwrap();
+                    resp.output.iter().map(|v| v.to_bits()).collect()
+                })
+                .collect()
+        })
+        .collect();
     let m = server.metrics();
-    assert_eq!(m.requests, 96);
+    assert_eq!(m.requests, (hosted * per_model) as u64);
     server.shutdown();
     bits
 }
 
 #[test]
-fn pool_outputs_byte_identical_to_single_worker() {
-    // ISSUE 2 acceptance: workers = 4 must yield byte-identical responses
-    // to workers = 1 on the same request stream. This holds because every
-    // worker executes the same deterministic plans over the same Arc-shared
-    // packed cores, and per-element reduction order is batch-invariant —
-    // so neither batch composition nor worker assignment can move a bit.
-    let single = serve_stream_bits(1);
-    let pool = serve_stream_bits(4);
-    for (id, (a, b)) in single.iter().zip(&pool).enumerate() {
-        assert!(!a.is_empty(), "request {id} unanswered");
-        assert_eq!(a, b, "request {id}: pool output diverged from single worker");
+fn responses_bitwise_stable_across_shards_workers_and_cohosting() {
+    // Serving-v2 acceptance: the response for a given (model, input) is one
+    // bit pattern, full stop — across every combination of queue shards,
+    // worker counts, steal schedules (implied by shards < workers and
+    // timing), and co-hosted neighbors. Reference: each model served alone
+    // on the minimal geometry.
+    let protos: Vec<ModelEngine> =
+        MATRIX_MODELS.iter().map(|&(n, s, seed)| build_tt(n, s, seed)).collect();
+    let per_model = 48;
+    let reference = [
+        serve_matrix_bits(&protos, 1, 1, 1, per_model).remove(0),
+        {
+            // model B alone: host it as the only model via a reordered view
+            let solo_b = Server::start(protos[1].worker_clone(), cfg4(8, 500, 4096, 1));
+            let mut rng = Rng::new(78);
+            let inputs: Vec<Vec<f32>> =
+                (0..per_model).map(|_| rng.normal_vec(400, 1.0)).collect();
+            let rxs: Vec<_> = inputs
+                .into_iter()
+                .enumerate()
+                .map(|(id, input)| {
+                    solo_b.submit(InferenceRequest::new(id as u64, input)).unwrap()
+                })
+                .collect();
+            let bits: Vec<Vec<u32>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    rx.recv().unwrap().unwrap().output.iter().map(|v| v.to_bits()).collect()
+                })
+                .collect();
+            solo_b.shutdown();
+            bits
+        },
+    ];
+    for shards in [1usize, 4] {
+        for workers in [1usize, 4] {
+            for hosted in [1usize, 2] {
+                let got = serve_matrix_bits(&protos, hosted, workers, shards, per_model);
+                for (mi, model_bits) in got.iter().enumerate() {
+                    assert_eq!(
+                        model_bits, &reference[mi],
+                        "model {} diverged at shards={shards} workers={workers} hosted={hosted}",
+                        MATRIX_MODELS[mi].0
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -231,15 +320,12 @@ fn queue_saturation_rejects_instead_of_blocking() {
     // max_batch 1 + queue_cap 1: the server can absorb at most two of a
     // tight burst (one executing, one queued); the rest must be refused
     // immediately via the admission-control error, never by blocking.
-    let server = Server::start(
-        slow_engine(),
-        ServeConfig { max_batch: 1, max_wait_us: 0, queue_cap: 1, workers: 1 },
-    );
+    let server = Server::start(slow_engine(), cfg4(1, 0, 1, 1));
     let t0 = Instant::now();
     let mut accepted = Vec::new();
     let mut rejected = 0u64;
     for id in 0..6u64 {
-        match server.submit(InferenceRequest { id, input: vec![0.1; 512] }) {
+        match server.submit(InferenceRequest::new(id, vec![0.1; 512])) {
             Ok(rx) => accepted.push(rx),
             Err(e) => {
                 assert!(
@@ -271,16 +357,10 @@ fn pool_serves_concurrent_clients_consistently() {
     // matter which worker or batch serves it
     let mut rng = Rng::new(24);
     let (tt_model, _) = build_pair(&mut rng);
-    let server = std::sync::Arc::new(Server::start(
-        tt_model,
-        ServeConfig { max_batch: 16, max_wait_us: 300, queue_cap: 512, workers: 4 },
-    ));
+    let server = std::sync::Arc::new(Server::start(tt_model, cfg4(16, 300, 512, 4)));
     assert_eq!(server.workers(), 4);
     let probe: Vec<f32> = (0..784).map(|i| (i % 13) as f32 / 13.0).collect();
-    let expected = server
-        .infer(InferenceRequest { id: 0, input: probe.clone() })
-        .unwrap()
-        .output;
+    let expected = server.infer(InferenceRequest::new(0, probe.clone())).unwrap().output;
 
     let mut handles = Vec::new();
     for t in 0..4 {
@@ -292,7 +372,7 @@ fn pool_serves_concurrent_clients_consistently() {
             for i in 0..25u64 {
                 if i % 3 == 0 {
                     let out = server
-                        .infer(InferenceRequest { id: t * 1000 + i, input: probe.clone() })
+                        .infer(InferenceRequest::new(t * 1000 + i, probe.clone()))
                         .unwrap()
                         .output;
                     for (a, b) in out.iter().zip(&expected) {
@@ -300,9 +380,7 @@ fn pool_serves_concurrent_clients_consistently() {
                     }
                 } else {
                     let input = rng.normal_vec(784, 1.0);
-                    server
-                        .infer(InferenceRequest { id: t * 1000 + i, input })
-                        .unwrap();
+                    server.infer(InferenceRequest::new(t * 1000 + i, input)).unwrap();
                 }
             }
         }));
@@ -313,4 +391,126 @@ fn pool_serves_concurrent_clients_consistently() {
     let m = server.metrics();
     assert_eq!(m.requests, 1 + 4 * 25);
     assert!(m.mean_batch() >= 1.0);
+}
+
+/// Compress two tiny FC stacks into `.ttrv` files under a fresh temp dir.
+fn write_tiny_artifacts(dir: &std::path::Path) -> Vec<std::path::PathBuf> {
+    let machine = MachineSpec::spacemit_k1();
+    let dse = DseConfig::default();
+    std::fs::create_dir_all(dir).unwrap();
+    let mut paths = Vec::new();
+    for (name, shapes, seed) in
+        [("tiny-a", vec![(64u64, 32u64)], 7u64), ("tiny-b", vec![(48, 24)], 9)]
+    {
+        let spec = ttrv::artifact::CompressSpec { name: name.to_string(), shapes, rank: 4, seed };
+        let bundle = ttrv::artifact::compress(&spec, &machine, &dse).unwrap();
+        let path = dir.join(format!("{name}.ttrv"));
+        ttrv::artifact::write_bundle_file(&path, &bundle).unwrap();
+        paths.push(path);
+    }
+    paths
+}
+
+#[test]
+fn artifact_eviction_and_reload_keep_outputs_bitwise_stable() {
+    // Satellite 3 at the integration level: co-host two .ttrv bundles under
+    // a cache budget smaller than either engine (cache_bytes = 1), so every
+    // model switch evicts the other and reloads from the artifact. The
+    // interleaved traffic must (a) never deadlock, and (b) produce the same
+    // bits for a fixed probe before and after arbitrarily many
+    // evict-reload cycles.
+    let dir = std::env::temp_dir().join(format!("ttrv_serve_evict_{}", std::process::id()));
+    let paths = write_tiny_artifacts(&dir);
+    let machine = MachineSpec::spacemit_k1();
+    let server = Server::from_artifacts(
+        &paths,
+        &machine,
+        ServeConfig {
+            max_batch: 4,
+            max_wait_us: 200,
+            queue_cap: 1024,
+            workers: 2,
+            cache_bytes: 1,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let infos = server.registry().models();
+    assert_eq!(infos.len(), 2);
+    assert!(!infos[0].pinned, "artifact-backed models must be evictable");
+
+    let probes: Vec<Vec<f32>> = infos.iter().map(|i| vec![0.3; i.in_dim]).collect();
+    let expected: Vec<Vec<u32>> = infos
+        .iter()
+        .zip(&probes)
+        .map(|(info, probe)| {
+            let resp = server
+                .infer(InferenceRequest::new(0, probe.clone()).for_model(info.id.clone()))
+                .unwrap();
+            resp.output.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+
+    // interleaved two-model burst: forces A/B/A/B lease alternation under
+    // the 1-byte budget on both workers
+    let rxs: Vec<_> = (0..60u64)
+        .map(|id| {
+            let mi = (id % 2) as usize;
+            let req = InferenceRequest::new(id, probes[mi].clone())
+                .for_model(infos[mi].id.clone());
+            server.submit(req).unwrap()
+        })
+        .collect();
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        let mi = id % 2;
+        let bits: Vec<u32> = resp.output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, expected[mi], "request {id}: output moved across an evict-reload");
+    }
+    assert!(
+        server.registry().evictions() > 0,
+        "a 1-byte budget with two models must have evicted at least once"
+    );
+    assert!(server.registry().loads() > 2, "reloads after eviction should re-count as loads");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn snapshot_reflects_cohosted_models_and_traffic() {
+    // the machine-readable snapshot is the ops surface of serving v2: it
+    // must name every co-hosted model and carry the per-model counters that
+    // metrics_for() reports
+    let protos: Vec<ModelEngine> =
+        MATRIX_MODELS.iter().map(|&(n, s, seed)| build_tt(n, s, seed)).collect();
+    let server = Server::start_multi(
+        protos.iter().map(ModelEngine::worker_clone).collect(),
+        cfg4(4, 200, 256, 2),
+    )
+    .unwrap();
+    for id in 0..10u64 {
+        let mi = (id % 2) as usize;
+        let input = vec![0.1; MATRIX_MODELS[mi].1[0].0 as usize];
+        server
+            .infer(InferenceRequest::new(id, input).for_model(MATRIX_MODELS[mi].0))
+            .unwrap();
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.get("schema").unwrap().as_str(), Some("ttrv-serve-snapshot"));
+    let models = snap.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    let mut seen_requests = 0;
+    for row in models {
+        let name = row.get("model").unwrap().as_str().unwrap();
+        assert!(MATRIX_MODELS.iter().any(|&(n, ..)| n == name), "unknown model {name}");
+        seen_requests += row
+            .get("metrics")
+            .unwrap()
+            .get("requests")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+    }
+    assert_eq!(seen_requests, 10);
+    server.shutdown();
 }
