@@ -1,12 +1,14 @@
 #!/usr/bin/env python3
 """Schema sanity check for ttrv's machine-readable JSON artifacts:
 
-* `BENCH_kernels.json`   (schema `ttrv-bench-kernels`, v1)
+* `BENCH_kernels.json`   (schema `ttrv-bench-kernels`, v2: per-row `kernel`
+                          naming the dispatched microkernel)
 * `BENCH_serve.json`     (schema `ttrv-bench-serve`,   v2: per-model rows,
                           a `models` axis, and an embedded serve snapshot)
-* serve snapshot dumps   (schema `ttrv-serve-snapshot`, v1: the document
+* serve snapshot dumps   (schema `ttrv-serve-snapshot`, v2: the document
                           `ttrv serve-demo --snapshot-json` writes and
-                          `Server::snapshot()` returns)
+                          `Server::snapshot()` returns, with a top-level
+                          `kernel` key)
 
 Run by CI after the bench/serve steps so a malformed report fails the
 build instead of silently polluting the perf trajectory. Files are
@@ -27,15 +29,19 @@ import math
 import sys
 
 EXPECTED_VERSIONS = {
-    "ttrv-bench-kernels": 1,
+    "ttrv-bench-kernels": 2,
     "ttrv-bench-serve": 2,
-    "ttrv-serve-snapshot": 1,
+    "ttrv-serve-snapshot": 2,
 }
+
+# Kernel names the Rust dispatch layer can emit (dispatch.rs); the set is
+# closed per release, so an unknown name is a schema violation.
+KNOWN_KERNELS = ("portable", "avx2-fma", "neon")
 
 MEASUREMENT_KEYS = ("seconds", "min_seconds", "mad", "iters", "gflops")
 
 KERNEL_ROW_KEYS = (
-    "id", "kind", "m", "b", "n", "r", "k", "flops",
+    "id", "kind", "m", "b", "n", "r", "k", "flops", "kernel",
     "ours", "iree_like", "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
 )
 
@@ -86,6 +92,7 @@ def check_kernels(doc):
         for key in KERNEL_ROW_KEYS:
             need(key in row, f"results[{rid}]: missing '{key}'")
         need(row["kind"] in ("first", "middle", "final"), f"results[{rid}]: bad kind")
+        need(row["kernel"] in KNOWN_KERNELS, f"results[{rid}].kernel: {row['kernel']!r}")
         for key in ("m", "b", "n", "r", "k", "flops"):
             need(is_finite_number(row[key]) and row[key] >= 1, f"results[{rid}].{key}: bad dim")
         for impl in ("ours", "iree_like", "pluto_like"):
@@ -128,6 +135,7 @@ def check_snapshot(doc, path="snapshot"):
         need(is_finite_number(doc.get(key)) and doc[key] >= 0, f"{path}.{key}: bad value")
     need(doc["workers"] >= 1 and doc["shards"] >= 1, f"{path}: empty pool")
     need(doc.get("steal") in ("ring", "off"), f"{path}.steal: {doc.get('steal')!r}")
+    need(doc.get("kernel") in KNOWN_KERNELS, f"{path}.kernel: {doc.get('kernel')!r}")
     check_metrics(doc.get("process"), f"{path}.process")
     reg = doc.get("registry")
     need(isinstance(reg, dict), f"{path}.registry: not an object")

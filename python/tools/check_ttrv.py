@@ -17,7 +17,9 @@ import zlib
 import numpy as np
 
 HEADER_LEN, TOC_ENTRY_LEN, MAX_SECTIONS = 16, 24, 64
-MIN_VERSION, VERSION = 1, 2  # v2 added the optional TUNE section (id 4)
+# v2 added the optional TUNE section (id 4); v3 appended the tuning
+# kernel name as a trailing field of the TUNE grammar
+MIN_VERSION, VERSION = 1, 3
 
 
 class Cur:
@@ -179,12 +181,14 @@ def decode_ops(payload):
     return ops
 
 
-def decode_tune(payload, ops):
+def decode_tune(payload, ops, version):
     """Mirror of reader.rs decode_tune: optional measured plans per TT op.
 
     Validates op targeting, strictly-increasing indices, plan count vs
     layout d, per-step dims vs the batch-1 chain, and that tuned plans
-    keep the analytic plan's vectorized loop / packing choice.
+    keep the analytic plan's vectorized loop / packing choice. From
+    format v3 the entries are followed by the tuning-host kernel name
+    (length-prefixed UTF-8; empty = unknown).
     """
     c = Cur(payload)
     count = c.u32()
@@ -208,8 +212,14 @@ def decode_tune(payload, ops):
             assert plan["pack_g"] == plans[step]["pack_g"], "tuned plan changes layout"
             entry.append(plan)
         tuned[idx] = entry
+    kernel = None
+    if version >= 3:
+        ln = c.u32()
+        assert ln <= 64, f"TUNE kernel name length {ln}"
+        name = c.take(ln).decode("utf-8")
+        kernel = name or None
     assert c.pos == len(payload), "trailing bytes in TUNE"
-    return tuned
+    return tuned, kernel
 
 
 def forward(ops, x, meta):
@@ -252,10 +262,14 @@ def main():
     # id 4 only means TUNE from format v2; in a v1 file it is an unknown
     # (third-party) section and is skipped, like the Rust reader does
     version = struct.unpack("<I", blob[4:8])[0]
-    tuned = decode_tune(sections[4], ops) if (version >= 2 and 4 in sections) else {}
+    if version >= 2 and 4 in sections:
+        tuned, kernel = decode_tune(sections[4], ops, version)
+    else:
+        tuned, kernel = {}, None
     print(f"{path}: ok — model {meta['model']}, {len(ops)} ops, "
           f"{len(blob)} bytes, machine {meta['machine']}, "
-          f"{len(tuned)} TT layer(s) with measured TUNE plans")
+          f"{len(tuned)} TT layer(s) with measured TUNE plans"
+          + (f" (tuned on kernel {kernel})" if kernel else ""))
     if len(sys.argv) > 2:
         x = np.array([float(v) for v in open(sys.argv[2]).read().split(",")])
         y = forward(ops, x.reshape(1, -1), meta)

@@ -99,6 +99,12 @@ pub struct ModelBundle {
     pub ops: Vec<BundleOp>,
     /// The embedded DSE report (one JSON object per FC layer).
     pub report: Json,
+    /// Name of the microkernel [`tune_bundle`] measured its winners on
+    /// (e.g. `"portable"`, `"avx2-fma"`) — persisted as the format-v3
+    /// trailing field of the TUNE section. Observability only: serving
+    /// re-probes the local host for dispatch, never this field. `None`
+    /// when untuned or decoded from a pre-v3 bundle.
+    pub tuned_kernel: Option<String>,
 }
 
 /// What to compress: a named stack of FC layers plus the demo-weight seed.
@@ -277,6 +283,7 @@ pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> 
         shapes: spec.shapes.clone(),
         ops,
         report: Json::Arr(layers),
+        tuned_kernel: None, // `tune_bundle` fills this on request
     })
 }
 
@@ -321,6 +328,10 @@ pub fn tune_bundle(
             report.layers += 1;
             report.plans += winners.len();
             t.tuned = Some(winners);
+            // record which microkernel the winners were measured on (the
+            // last layer's pick; kernels are ranked per chain, and on one
+            // host every chain sees the same candidate set)
+            bundle.tuned_kernel = Some(ex.kernel_name().to_string());
         }
     }
     Ok(report)
@@ -490,6 +501,7 @@ pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> R
             t.tuned = None;
         }
     }
+    sans_tune.tuned_kernel = None;
     let loaded_bytes = super::write_bundle(&sans_tune);
     let fresh_bytes = super::write_bundle(&fresh);
     if loaded_bytes != fresh_bytes {

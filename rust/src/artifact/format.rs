@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "TTRV"
-//! 4       4     u32 format version (currently 2; reader accepts 1..=2)
+//! 4       4     u32 format version (currently 3; reader accepts 1..=3)
 //! 8       4     u32 section count (<= 64)
 //! 12      4     u32 CRC-32 of the TOC bytes
 //! 16      24*c  TOC entries: { u32 id, u32 payload CRC-32,
@@ -21,10 +21,12 @@
 //! always stamps [`FORMAT_VERSION`]; the reader accepts the inclusive
 //! range [`MIN_FORMAT_VERSION`]`..=`[`FORMAT_VERSION`] (anything outside
 //! it is rejected with a typed [`Error::Artifact`] naming the supported
-//! range). **Additive** changes — a new optional section id, like the
-//! TUNE section of version 2 — bump [`FORMAT_VERSION`] only, so every
-//! pre-bump bundle keeps loading and new readers fall back to the old
-//! behavior when the section is absent. **Breaking** changes (container
+//! range). **Additive** changes — a new optional section id (the TUNE
+//! section of version 2) or a new optional trailing field in an existing
+//! section's grammar (the TUNE kernel name of version 3) — bump
+//! [`FORMAT_VERSION`] only, so every pre-bump bundle keeps loading and new
+//! readers fall back to the old behavior when the section or field is
+//! absent. **Breaking** changes (container
 //! layout, an existing section's grammar or semantics) bump
 //! [`MIN_FORMAT_VERSION`] up to the same value, cutting old files off
 //! loudly. Unknown section ids within a supported version are skipped, so
@@ -45,8 +47,11 @@ use crate::error::{Error, Result};
 pub const MAGIC: [u8; 4] = *b"TTRV";
 
 /// Current container format version (see the versioning policy above).
-/// Version 2 added the optional TUNE section ([`SEC_TUNE`]).
-pub const FORMAT_VERSION: u32 = 2;
+/// Version 2 added the optional TUNE section ([`SEC_TUNE`]); version 3
+/// appended the optional tuning-kernel name to the TUNE payload (the
+/// microkernel `tune_chain` measured its winners on — observability only,
+/// never used for load-time dispatch).
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Oldest format version the reader still accepts (version 1 bundles have
 /// no TUNE section and decode with analytic plans only).

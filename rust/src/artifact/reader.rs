@@ -386,7 +386,13 @@ fn decode_ops(payload: &[u8]) -> Result<Vec<BundleOp>> {
 /// analytic plan's vectorized loop / packing choice — tuning only ever
 /// moves RB factors and thread counts, so a TUNE section that would change
 /// the packed `G` layout is corrupt by definition.
-fn decode_tune(payload: &[u8], ops: &mut [BundleOp]) -> Result<()> {
+///
+/// From container format version 3 the payload carries one trailing field
+/// after the entries: the length-prefixed name of the microkernel the
+/// tuning host measured on (`Ok(Some(name))`; empty = unknown). The field
+/// is observability metadata only — serving always re-probes the local
+/// host for dispatch — and is absent (`Ok(None)`) in v2 payloads.
+fn decode_tune(payload: &[u8], version: u32, ops: &mut [BundleOp]) -> Result<Option<String>> {
     let mut c = Cursor::new(payload, "TUNE section");
     let count = c.u32()? as usize;
     if count > ops.len() {
@@ -440,13 +446,30 @@ fn decode_tune(payload: &[u8], ops: &mut [BundleOp]) -> Result<()> {
         }
         t.tuned = Some(tuned);
     }
+    // v3 trailing field: the tuning kernel name (bounded; UTF-8 checked)
+    let tuned_kernel = if version >= 3 {
+        let len = c.u32()? as usize;
+        if len > 64 {
+            return Err(c.invalid(format!("TUNE kernel name length {len} exceeds bound 64")));
+        }
+        let raw = c.take(len)?;
+        let name = std::str::from_utf8(raw)
+            .map_err(|_| c.invalid("TUNE kernel name is not valid UTF-8"))?;
+        if name.is_empty() {
+            None
+        } else {
+            Some(name.to_string())
+        }
+    } else {
+        None
+    };
     if !c.is_empty() {
         return Err(c.invalid(format!(
             "{} trailing bytes after the last TUNE entry",
             c.remaining()
         )));
     }
-    Ok(())
+    Ok(tuned_kernel)
 }
 
 fn meta_err(msg: impl Into<String>) -> Error {
@@ -502,6 +525,7 @@ fn decode_meta(payload: &[u8]) -> Result<ModelBundle> {
         shapes,
         ops: Vec::new(),
         report: Json::Null,
+        tuned_kernel: None,
     })
 }
 
@@ -530,7 +554,7 @@ pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
     let version = u32::from_le_bytes(bytes[4..8].try_into().expect("validated header"));
     if version >= 2 {
         if let Some((_, _, payload)) = sections.iter().find(|(sid, _, _)| *sid == SEC_TUNE) {
-            decode_tune(payload, &mut bundle.ops)?;
+            bundle.tuned_kernel = decode_tune(payload, version, &mut bundle.ops)?;
         }
     }
     Ok(bundle)

@@ -137,7 +137,9 @@ fn encode_ops(bundle: &ModelBundle) -> Vec<u8> {
 }
 
 /// The optional TUNE section: measured plans per TT layer, keyed by op
-/// index. `None` when no layer carries tuned plans — the section is then
+/// index, followed (format v3) by the name of the microkernel the tuning
+/// host measured the winners on (length-prefixed UTF-8; empty = unknown).
+/// `None` when no layer carries tuned plans — the section is then
 /// omitted entirely, so an untuned bundle's encoding is identical in
 /// shape to a format-v1 bundle (plus the version field).
 fn encode_tune(bundle: &ModelBundle) -> Option<Vec<u8>> {
@@ -173,6 +175,12 @@ fn encode_tune(bundle: &ModelBundle) -> Option<Vec<u8>> {
             encode_plan(&mut out, plan);
         }
     }
+    // v3 trailing field, deliberately *after* all entries so the absolute
+    // entry offsets of v2 payloads are unchanged: the tuning kernel name
+    // (observability only — load-time dispatch always re-probes the host)
+    let name = bundle.tuned_kernel.as_deref().unwrap_or("");
+    put_u32(&mut out, name.len() as u32);
+    out.extend_from_slice(name.as_bytes());
     Some(out)
 }
 
@@ -259,6 +267,7 @@ mod tests {
                 bias: None,
             })],
             report: Json::Arr(vec![]),
+            tuned_kernel: None,
         }
     }
 

@@ -40,8 +40,10 @@ use crate::util::stats;
 use super::{measure, BenchCfg, Measurement};
 
 /// Version of the `BENCH_kernels.json` schema; bump on any field change
-/// so the trajectory tooling can tell report generations apart.
-pub const BENCH_KERNELS_SCHEMA_VERSION: u64 = 1;
+/// so the trajectory tooling can tell report generations apart. v2 added
+/// the per-row `kernel` key: which microkernel the `ours` executor
+/// dispatched to on the measuring host.
+pub const BENCH_KERNELS_SCHEMA_VERSION: u64 = 2;
 
 /// Version of the `BENCH_serve.json` schema. v2 (serving v2): per-model
 /// result rows, a `models` axis on every point, and an embedded metrics
@@ -76,6 +78,9 @@ pub struct KernelRow {
     pub id: String,
     /// The measured einsum instance (post any quick-mode `b` cap).
     pub dims: EinsumDims,
+    /// Name of the microkernel the `ours` executor dispatched to (schema
+    /// v2; comparing rows across hosts is meaningless without it).
+    pub kernel: &'static str,
     /// The optimized plan-driven kernel.
     pub ours: Measurement,
     /// The IREE-like baseline (const-folded G, runtime matmul half).
@@ -128,7 +133,7 @@ fn kernel_row(
     let pluto = measure(&format!("{id} pluto-like"), dims.flops(), cfg, || {
         ex.execute_pluto_like(&g, &x).expect("validated kernel");
     });
-    Ok(KernelRow { id, dims, ours, iree_like: iree, pluto_like: pluto })
+    Ok(KernelRow { id, dims, kernel: ex.kernel_name(), ours, iree_like: iree, pluto_like: pluto })
 }
 
 /// Measure an explicit entry list (the testable core of the sweep).
@@ -183,6 +188,7 @@ pub fn kernel_report_json(rows: &[KernelRow], quick: bool) -> Json {
                 ("r", Json::from(r.dims.r)),
                 ("k", Json::from(r.dims.k)),
                 ("flops", Json::from(r.dims.flops() as usize)),
+                ("kernel", Json::from(r.kernel)),
                 ("ours", measurement_json(&r.ours)),
                 ("iree_like", measurement_json(&r.iree_like)),
                 ("pluto_like", measurement_json(&r.pluto_like)),
@@ -461,11 +467,16 @@ mod tests {
         assert_eq!(results.len(), 2);
         for r in results {
             for key in [
-                "id", "kind", "m", "b", "n", "r", "k", "flops", "ours", "iree_like",
-                "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
+                "id", "kind", "m", "b", "n", "r", "k", "flops", "kernel", "ours",
+                "iree_like", "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
             ] {
                 assert!(r.get(key).is_some(), "missing {key}");
             }
+            let kernel = r.get("kernel").unwrap().as_str().unwrap();
+            assert!(
+                crate::kernels::all_kernels().iter().any(|k| k.name() == kernel),
+                "row kernel {kernel:?} is not a registered kernel"
+            );
             for impl_key in ["ours", "iree_like", "pluto_like"] {
                 let m = r.get(impl_key).unwrap();
                 for key in ["seconds", "min_seconds", "mad", "iters", "gflops"] {
@@ -556,6 +567,7 @@ mod tests {
         let row = KernelRow {
             id: "t".into(),
             dims: EinsumDims { kind: EinsumKind::Middle, m: 1, b: 1, n: 1, r: 1, k: 1 },
+            kernel: crate::kernels::PORTABLE_KERNEL_NAME,
             ours: m(0.0),
             iree_like: m(1.0),
             pluto_like: m(1.0),

@@ -327,6 +327,20 @@ impl ModelEngine {
             .sum()
     }
 
+    /// Name of the microkernel this worker's executors dispatch to
+    /// (`"portable"` when the model has no TT layers — dense/ReLU ops
+    /// never touch the microkernel layer). All executors in one engine
+    /// share one construction-time selection, so the first is
+    /// representative.
+    pub fn kernel_name(&self) -> &'static str {
+        self.execs
+            .iter()
+            .flatten()
+            .map(Executor::kernel_name)
+            .next()
+            .unwrap_or(crate::kernels::PORTABLE_KERNEL_NAME)
+    }
+
     /// Forward a batch `(B, in_dim) -> (B, out_dim)`.
     pub fn forward(&mut self, x: &Tensor) -> Result<Tensor> {
         let mut cur = x.clone();

@@ -373,6 +373,7 @@ mod tests {
             shapes: vec![(4, 2)],
             ops: vec![BundleOp::Dense(DenseLayerBundle { w, bias: None })],
             report: Json::Arr(Vec::new()),
+            tuned_kernel: None,
         }
     }
 

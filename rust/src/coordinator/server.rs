@@ -50,8 +50,9 @@ use super::registry::ModelRegistry;
 
 /// Snapshot document name ([`Server::snapshot`]).
 pub const SNAPSHOT_SCHEMA: &str = "ttrv-serve-snapshot";
-/// Snapshot document version.
-pub const SNAPSHOT_SCHEMA_VERSION: usize = 1;
+/// Snapshot document version. v2 added the top-level `kernel` key (the
+/// microkernel name worker executors dispatch to on this host).
+pub const SNAPSHOT_SCHEMA_VERSION: usize = 2;
 
 /// How often an idle worker re-scans other shards for stealable work.
 /// Stealing is polling-based (a cross-shard Condvar web would reintroduce
@@ -328,6 +329,10 @@ impl Server {
             ("workers", Json::from(self.workers())),
             ("shards", Json::from(self.queue.shard_count())),
             ("steal", Json::from(self.cfg.steal.as_str())),
+            // host-wide dispatch choice (all worker executors select the
+            // same kernel at construction), for correlating latency rows
+            // across machines
+            ("kernel", Json::from(crate::kernels::default_kernel_name())),
             ("queue_depth", Json::from(self.queue.len())),
             ("req_per_s", Json::from(process.requests as f64 / uptime)),
             ("process", process.to_json()),
@@ -816,6 +821,13 @@ mod tests {
             Some(SNAPSHOT_SCHEMA_VERSION)
         );
         assert_eq!(snap.get("workers").and_then(Json::as_usize), Some(1));
+        // v2: the dispatch choice is part of the document and names a
+        // kernel the dispatch layer actually knows about
+        let kernel = snap.get("kernel").and_then(Json::as_str).unwrap();
+        assert!(
+            crate::kernels::all_kernels().iter().any(|k| k.name() == kernel),
+            "snapshot kernel {kernel:?} is not a registered kernel"
+        );
         let models = snap.get("models").and_then(Json::as_arr).unwrap();
         assert_eq!(models.len(), 2);
         assert_eq!(models[0].get("model").and_then(Json::as_str), Some("a"));

@@ -35,6 +35,12 @@ pub enum Error {
     /// layer encoding). A typed variant so the decoder surface can promise
     /// "typed error, never panic" on arbitrary input bytes.
     Artifact(String),
+    /// Microkernel dispatch failure: a kernel was requested (forced via
+    /// config, restored from a tuned artifact, or enumerated by autotune)
+    /// whose `supported()` probe is false on this host. A typed variant so
+    /// `tune_chain` and `Executor` construction can refuse cleanly instead
+    /// of panicking or executing illegal instructions.
+    Kernel(String),
     /// Admission control refused a request: the serving queue is at
     /// capacity. A typed variant so callers can distinguish backpressure
     /// (retry / shed load) from hard serving failures without string
@@ -57,6 +63,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Kernel(m) => write!(f, "kernel error: {m}"),
             Error::QueueFull => write!(f, "serve error: queue full (admission control)"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -115,6 +122,10 @@ impl Error {
     /// An [`Error::Artifact`] with the given message.
     pub fn artifact(msg: impl Into<String>) -> Self {
         Error::Artifact(msg.into())
+    }
+    /// An [`Error::Kernel`] with the given message.
+    pub fn kernel(msg: impl Into<String>) -> Self {
+        Error::Kernel(msg.into())
     }
 }
 

@@ -1,0 +1,244 @@
+//! x86_64 AVX2/FMA microkernels.
+//!
+//! Same tiling structure as the portable kernels in [`super::micro`] —
+//! identical region drivers, identical `(rm, rb)` register-tile dispatch,
+//! identical remainder handling — with the `[f32; VL]` lane arrays replaced
+//! by `__m256` registers and the per-lane multiply-then-add replaced by
+//! fused multiply-add (`_mm256_fmadd_ps`). FMA skips the intermediate
+//! rounding of the product, so results differ from the portable reference
+//! by a few ULPs; this kernel is therefore verified by the tolerance-based
+//! differential suite (`rust/tests/kernel_reference.rs`), never by bitwise
+//! pins (ARCHITECTURE.md "Kernel dispatch").
+//!
+//! Memory safety: every load/store goes through a bounds-checked subslice
+//! (`chunks_exact`, range indexing) before the pointer is taken, and each
+//! pointer is read/written for exactly `VL` lanes of that subslice — the
+//! sanitizer CI leg runs the packing fuzz + differential suites with these
+//! kernels selected to enforce it.
+
+use core::arch::x86_64::{
+    __m256, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_storeu_ps,
+};
+
+use super::dispatch::Kernel;
+use super::micro::dispatch_rb;
+use super::packed::PackedG;
+use super::VL;
+
+/// AVX2 + FMA kernel set (8 f32 lanes — exactly `VL`).
+pub(crate) struct Avx2Kernel;
+
+impl Kernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2-fma"
+    }
+
+    fn supported(&self) -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    fn r_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        debug_assert!(self.supported());
+        // SAFETY: dispatch only hands out this kernel when `supported()`
+        // (runtime AVX2+FMA probe) is true — enforced at Executor
+        // construction and by `ensure_supported` in tune_chain.
+        unsafe { r_region_avx2(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base) }
+    }
+
+    fn k_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        debug_assert!(self.supported());
+        // SAFETY: as above — only reachable when the host probe passed.
+        unsafe { k_region_avx2(g, xd, od, b_total, m0, m1, b0, b1, m_base) }
+    }
+}
+
+/// FMA register-tile block: the AVX2 twin of `micro::r_block`. Kept free of
+/// `#[target_feature]` so it can stay generic; `#[inline(always)]` makes it
+/// inline into the target-feature region drivers below, which is what
+/// enables AVX2 codegen for the intrinsics.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn r_block_fma<const RM: usize, const RB: usize>(
+    gd: &[f32],
+    xd: &[f32],
+    od: &mut [f32],
+    l: usize,
+    r: usize,
+    r_pad: usize,
+    b_total: usize,
+    m0: usize,
+    b0: usize,
+    m_base: usize,
+) {
+    let rv_count = r_pad / VL;
+    let zero = _mm256_setzero_ps();
+    for rv in 0..rv_count {
+        let mut acc = [[zero; RB]; RM];
+        let mut g_rows: [std::slice::ChunksExact<'_, f32>; RM] = std::array::from_fn(|im| {
+            let off = ((m0 + im) * rv_count + rv) * l * VL;
+            gd[off..off + l * VL].chunks_exact(VL)
+        });
+        let x_rows: [&[f32]; RB] =
+            std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
+        for kk in 0..l {
+            let mut gvec = [zero; RM];
+            for (im, row) in g_rows.iter_mut().enumerate() {
+                let chunk = row.next().expect("length l by construction");
+                gvec[im] = _mm256_loadu_ps(chunk.as_ptr());
+            }
+            for ib in 0..RB {
+                let xs = _mm256_set1_ps(x_rows[ib][kk]);
+                for im in 0..RM {
+                    acc[im][ib] = _mm256_fmadd_ps(gvec[im], xs, acc[im][ib]);
+                }
+            }
+        }
+        let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
+        for im in 0..RM {
+            for ib in 0..RB {
+                let mut tmp = [0.0f32; VL];
+                _mm256_storeu_ps(tmp.as_mut_ptr(), acc[im][ib]);
+                let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
+                od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
+            }
+        }
+    }
+}
+
+/// AVX2 r-vectorized region driver: tiling identical to
+/// `micro::r_region_based`, microkernel swapped for [`r_block_fma`].
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn r_region_avx2(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    rm: usize,
+    rb: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let r_pad = g.r_pad;
+    let rm = rm.clamp(1, 8);
+    let rb = rb.clamp(1, 8);
+    let m_main = m0 + (m1 - m0) / rm * rm;
+    let b_main = b0 + (b1 - b0) / rb * rb;
+    let mut mi = m0;
+    while mi < m_main {
+        let mut bi = b0;
+        while bi < b_main {
+            dispatch_rb!(rm, rb, r_block_fma,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            dispatch_rb!(rm, 1, r_block_fma,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += 1;
+        }
+        mi += rm;
+    }
+    while mi < m1 {
+        let mut bi = b0;
+        while bi + rb <= b1 {
+            dispatch_rb!(1, rb, r_block_fma,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            r_block_fma::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base);
+            bi += 1;
+        }
+        mi += 1;
+    }
+}
+
+/// AVX2 k-vectorized (dot-product) region: FMA accumulation over `VL`-wide
+/// chunks, then the same pairwise horizontal-sum shape as `micro::hsum`
+/// and the same scalar tail.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn k_region_avx2(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let chunks = l / VL;
+    let tail = chunks * VL;
+    for mi in m0..m1 {
+        for ri in 0..r {
+            let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+            for bi in b0..b1 {
+                let xrow = &xd[bi * l..(bi + 1) * l];
+                let mut acc = _mm256_setzero_ps();
+                for (gc, xc) in grow[..tail]
+                    .chunks_exact(VL)
+                    .zip(xrow[..tail].chunks_exact(VL))
+                {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(gc.as_ptr()),
+                        _mm256_loadu_ps(xc.as_ptr()),
+                        acc,
+                    );
+                }
+                let mut s = hsum_m256(acc);
+                for i in tail..l {
+                    s += grow[i] * xrow[i];
+                }
+                od[((mi - m_base) * b_total + bi) * r + ri] = s;
+            }
+        }
+    }
+}
+
+/// Pairwise horizontal sum with the exact association of `micro::hsum`:
+/// `(v0+v4 + v2+v6) + (v1+v5 + v3+v7)`.
+#[inline(always)]
+unsafe fn hsum_m256(v: __m256) -> f32 {
+    let mut tmp = [0.0f32; VL];
+    _mm256_storeu_ps(tmp.as_mut_ptr(), v);
+    let s0 = tmp[0] + tmp[4];
+    let s1 = tmp[1] + tmp[5];
+    let s2 = tmp[2] + tmp[6];
+    let s3 = tmp[3] + tmp[7];
+    (s0 + s2) + (s1 + s3)
+}

@@ -1,0 +1,292 @@
+//! Runtime microkernel dispatch: arch-specific SIMD behind the portable
+//! reference kernels.
+//!
+//! Modeled on rten's `gemm/kernels.rs`: a [`Kernel`] object bundles the
+//! register-tile microkernels for one ISA, `supported()` probes the host at
+//! runtime, and [`select`] picks the best supported implementation once at
+//! [`Executor`](super::Executor) construction. The portable `[f32; VL]`
+//! lane-array kernels ([`super::micro`]) stay the **reference semantics**:
+//! every bitwise pin in the repo runs against them, and vector kernels are
+//! held to a reduction-depth-derived tolerance instead
+//! (`rust/tests/kernel_reference.rs` — see ARCHITECTURE.md "Kernel
+//! dispatch" for the verify-tier policy).
+//!
+//! Forcing the reference bits on any box: `TTRV_FORCE_SCALAR=1` in the
+//! environment, or [`set_force_scalar`] in-process (used by the bitwise
+//! test suites so they pin the portable path regardless of host ISA).
+//!
+//! Kernel choice never affects packing: all kernels consume the same
+//! Canonical / PackedR / PackedK layouts, so a tuned artifact's packed
+//! cores stay valid whichever kernel the serving host selects.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::error::{Error, Result};
+
+use super::micro;
+use super::packed::PackedG;
+
+/// One ISA's microkernel set. Region signatures mirror the portable
+/// entry points in [`super::micro`] exactly; `od`'s first row is absolute
+/// row `m_base` (per-thread contiguous output slices).
+pub trait Kernel: Send + Sync {
+    /// Stable identifier persisted in TUNE sections / snapshots / BENCH
+    /// rows for observability (`"portable"`, `"avx2-fma"`, `"neon"`).
+    fn name(&self) -> &'static str;
+
+    /// Whether this host can execute the kernel (runtime CPUID-style
+    /// probe). The portable kernel always returns `true`.
+    fn supported(&self) -> bool;
+
+    /// r-vectorized region over `m0..m1` x `b0..b1` with register blocking
+    /// `(rm, rb)`. `g` is PackedR.
+    #[allow(clippy::too_many_arguments)]
+    fn r_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    );
+
+    /// k-vectorized (dot-product) region. `g` is PackedK.
+    #[allow(clippy::too_many_arguments)]
+    fn k_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    );
+
+    /// Packed-but-scalar region (`VectorLoop::None` plans). Default: the
+    /// portable implementation — this path is part of the bitwise
+    /// reference surface, so vector kernels inherit it unchanged.
+    #[allow(clippy::too_many_arguments)]
+    fn scalar_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        micro::scalar_packed_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+    }
+}
+
+/// Name of the portable reference kernel.
+pub const PORTABLE_KERNEL_NAME: &str = "portable";
+
+/// The portable reference kernel: the `[f32; VL]` lane-array loop nests of
+/// [`super::micro`], compiled for whatever the target baseline is. Always
+/// supported; the semantics every bitwise pin is defined against.
+struct PortableKernel;
+
+impl Kernel for PortableKernel {
+    fn name(&self) -> &'static str {
+        PORTABLE_KERNEL_NAME
+    }
+    fn supported(&self) -> bool {
+        true
+    }
+    fn r_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        micro::r_region_based(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base)
+    }
+    fn k_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        micro::k_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+    }
+}
+
+static PORTABLE: PortableKernel = PortableKernel;
+
+#[cfg(target_arch = "x86_64")]
+static VECTOR: super::avx2::Avx2Kernel = super::avx2::Avx2Kernel;
+#[cfg(target_arch = "aarch64")]
+static VECTOR: super::neon::NeonKernel = super::neon::NeonKernel;
+
+// Preference order: vector kernels first, portable fallback last.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+static ALL: [&dyn Kernel; 2] = [&VECTOR, &PORTABLE];
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+static ALL: [&dyn Kernel; 1] = [&PORTABLE];
+
+/// Every kernel compiled into this binary, in preference order (vector
+/// implementations first, portable last). Entries may be unsupported on
+/// this host — filter by [`Kernel::supported`].
+pub fn all_kernels() -> &'static [&'static dyn Kernel] {
+    &ALL
+}
+
+/// The portable reference kernel.
+pub fn portable() -> &'static dyn Kernel {
+    &PORTABLE
+}
+
+/// In-process force-scalar override (the `TTRV_FORCE_SCALAR` env knob,
+/// settable from code for test binaries).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force every subsequently constructed [`Executor`](super::Executor) onto
+/// the portable reference kernel (equivalent to `TTRV_FORCE_SCALAR=1`).
+/// Bitwise-pinned test binaries call this first thing in every test so the
+/// flag is set before any executor exists, regardless of test order.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Whether force-scalar dispatch is active (in-process flag **or**
+/// `TTRV_FORCE_SCALAR=1|true|yes` in the environment).
+pub fn force_scalar_active() -> bool {
+    if FORCE_SCALAR.load(Ordering::SeqCst) {
+        return true;
+    }
+    matches!(
+        std::env::var("TTRV_FORCE_SCALAR").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+/// The kernel a fresh [`Executor`](super::Executor) uses on this host: the
+/// first supported entry of [`all_kernels`] (portable if forced scalar).
+pub fn select() -> &'static dyn Kernel {
+    if force_scalar_active() {
+        return &PORTABLE;
+    }
+    for &k in ALL.iter() {
+        if k.supported() {
+            return k;
+        }
+    }
+    &PORTABLE
+}
+
+/// The name [`select`] would return right now (CLI / bench observability).
+pub fn default_kernel_name() -> &'static str {
+    select().name()
+}
+
+/// Look up a compiled-in kernel by its persisted name (TUNE sections store
+/// the tuning host's kernel). `None` if this binary has no such kernel.
+pub fn by_name(name: &str) -> Option<&'static dyn Kernel> {
+    ALL.iter().copied().find(|k| k.name() == name)
+}
+
+/// Typed guard: `Err(Error::Kernel)` if `k` cannot run on this host.
+/// `tune_chain` and [`Executor::with_kernel`](super::Executor::with_kernel)
+/// call this so an unsupported kernel is a clean error, never a panic or an
+/// illegal instruction.
+pub fn ensure_supported(k: &dyn Kernel) -> Result<()> {
+    if k.supported() {
+        Ok(())
+    } else {
+        Err(Error::kernel(format!(
+            "kernel '{}' is not supported on this host",
+            k.name()
+        )))
+    }
+}
+
+/// The kernels autotuning should rank: the portable reference first (so
+/// measurement ties deterministically keep the reference), then every
+/// supported vector kernel — unless force-scalar is active, in which case
+/// only portable.
+pub(crate) fn candidate_kernels() -> Vec<&'static dyn Kernel> {
+    let mut v: Vec<&'static dyn Kernel> = vec![&PORTABLE];
+    if !force_scalar_active() {
+        for &k in ALL.iter() {
+            if k.name() != PORTABLE_KERNEL_NAME && k.supported() {
+                v.push(k);
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_is_always_present_and_supported() {
+        assert!(all_kernels()
+            .iter()
+            .any(|k| k.name() == PORTABLE_KERNEL_NAME && k.supported()));
+        // portable is the preference-order fallback: last entry
+        assert_eq!(
+            all_kernels().last().unwrap().name(),
+            PORTABLE_KERNEL_NAME
+        );
+        assert!(ensure_supported(portable()).is_ok());
+    }
+
+    #[test]
+    fn selected_kernel_is_supported() {
+        let k = select();
+        assert!(k.supported(), "select() returned unsupported '{}'", k.name());
+        assert!(by_name(k.name()).is_some());
+        assert!(by_name("no-such-kernel").is_none());
+    }
+
+    #[test]
+    fn candidate_kernels_lead_with_portable() {
+        let cands = candidate_kernels();
+        assert!(!cands.is_empty());
+        assert_eq!(cands[0].name(), PORTABLE_KERNEL_NAME);
+        for k in cands {
+            assert!(k.supported());
+        }
+    }
+
+    #[test]
+    fn force_scalar_pins_selection_to_portable() {
+        // set -> observe -> restore; concurrent tests only ever see a
+        // *portable* selection while the flag is up, which every tolerance
+        // suite accepts (no lib test asserts a vector kernel was picked)
+        set_force_scalar(true);
+        assert!(force_scalar_active());
+        assert_eq!(select().name(), PORTABLE_KERNEL_NAME);
+        assert_eq!(candidate_kernels().len(), 1);
+        set_force_scalar(false);
+    }
+}

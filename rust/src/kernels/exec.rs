@@ -8,17 +8,20 @@
 use crate::compiler::plan::{LoopOrder, OptimizationPlan, VectorLoop};
 use crate::error::{Error, Result};
 
-use super::micro;
+use super::dispatch::Kernel;
 use super::naive::naive_region;
 use super::packed::{GLayout, PackedG};
 
-/// Execute a planned Einsum into a caller-owned buffer (resized to `m*b*r`).
+/// Execute a planned Einsum into a caller-owned buffer (resized to `m*b*r`)
+/// using `kernel`'s microkernels for the packed paths (the Canonical/naive
+/// stage is layout-bound and kernel-independent).
 ///
 /// Validation order matters: every precondition (plan/core dims, input
 /// length, packing layout) is checked before `out` is cleared or resized, so
 /// an `Err` return cannot expose a half-initialized buffer.
 pub(crate) fn execute_plan_into(
     plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
     g: &PackedG,
     xd: &[f32],
     out: &mut Vec<f32>,
@@ -68,7 +71,7 @@ pub(crate) fn execute_plan_into(
         let mut b0 = 0;
         while b0 < b_total {
             let b1 = (b0 + btl).min(b_total);
-            run_region(plan, g, xd, od, b_total, 0, m, b0, b1);
+            run_region(plan, kernel, g, xd, od, b_total, 0, m, b0, b1);
             b0 = b1;
         }
         return Ok(());
@@ -97,7 +100,7 @@ pub(crate) fn execute_plan_into(
                             let b1 = (b0 + btl).min(b_total);
                             // out_slice starts at row m0: shift base by -m0
                             run_region_offset(
-                                plan, g, xd, out_slice, b_total, m0, m1, b0, b1, m0,
+                                plan, kernel, g, xd, out_slice, b_total, m0, m1, b0, b1, m0,
                             );
                             b0 = b1;
                         }
@@ -129,7 +132,9 @@ pub(crate) fn execute_plan_into(
                             let xl: Vec<f32> = xd[b0 * n * k..b1 * n * k].to_vec();
                             let mut plan_local = *plan;
                             plan_local.dims.b = width;
-                            run_region(&plan_local, g, &xl, &mut local, width, 0, m, 0, width);
+                            run_region(
+                                &plan_local, kernel, g, &xl, &mut local, width, 0, m, 0, width,
+                            );
                             (b0, b1, local)
                         })
                     })
@@ -151,10 +156,11 @@ pub(crate) fn execute_plan_into(
     }
 }
 
-/// Dispatch a rectangular region to the plan's microkernel.
+/// Dispatch a rectangular region to the plan's microkernel on `kernel`.
 #[allow(clippy::too_many_arguments)]
 fn run_region(
     plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
     g: &PackedG,
     xd: &[f32],
     od: &mut [f32],
@@ -164,7 +170,7 @@ fn run_region(
     b0: usize,
     b1: usize,
 ) {
-    run_region_offset(plan, g, xd, od, b_total, m0, m1, b0, b1, 0)
+    run_region_offset(plan, kernel, g, xd, od, b_total, m0, m1, b0, b1, 0)
 }
 
 /// Same as [`run_region`] but with the output buffer starting at row
@@ -172,6 +178,7 @@ fn run_region(
 #[allow(clippy::too_many_arguments)]
 fn run_region_offset(
     plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
     g: &PackedG,
     xd: &[f32],
     od: &mut [f32],
@@ -187,12 +194,10 @@ fn run_region_offset(
     // offset. Implemented by adjusting m bounds and core offsets instead:
     // the packed-G reads use absolute m, output uses (m - m_base).
     match plan.vector_loop {
-        VectorLoop::R => micro::r_region_based(
+        VectorLoop::R => kernel.r_region(
             g, xd, od, b_total, plan.rb.rm, plan.rb.rb, m0, m1, b0, b1, m_base,
         ),
-        VectorLoop::K => micro::k_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base),
-        VectorLoop::None => {
-            micro::scalar_packed_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
-        }
+        VectorLoop::K => kernel.k_region(g, xd, od, b_total, m0, m1, b0, b1, m_base),
+        VectorLoop::None => kernel.scalar_region(g, xd, od, b_total, m0, m1, b0, b1, m_base),
     }
 }

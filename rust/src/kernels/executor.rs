@@ -27,6 +27,7 @@ use crate::tensor::Tensor;
 use crate::ttd::cost::{self, EinsumDims};
 use crate::ttd::TtLayout;
 
+use super::dispatch::{self, Kernel};
 use super::exec::execute_plan_into;
 use super::packed::{pack, PackedG};
 
@@ -62,10 +63,19 @@ pub struct Executor {
     chain_dims: Vec<EinsumDims>,
     /// Measured RB autotuning on plan-cache misses (see [`super::tune_plan`]).
     tune: bool,
+    /// The microkernel set every packed-path execution uses. Selected once
+    /// at construction ([`dispatch::select`]); `worker_clone` copies it so
+    /// a whole serving pool runs one kernel (bitwise-stable outputs).
+    kernel: &'static dyn Kernel,
+    /// `true` when the kernel was chosen explicitly ([`Executor::with_kernel`]):
+    /// autotuning then keeps it instead of re-ranking kernels.
+    kernel_pinned: bool,
 }
 
 impl Executor {
-    /// A fresh executor planning for `machine`.
+    /// A fresh executor planning for `machine`, on the best supported
+    /// kernel for this host (portable if `TTRV_FORCE_SCALAR` /
+    /// [`dispatch::set_force_scalar`] is active).
     pub fn new(machine: &MachineSpec) -> Self {
         Executor {
             machine: machine.clone(),
@@ -73,7 +83,30 @@ impl Executor {
             scratch: Scratch::default(),
             chain_dims: Vec::new(),
             tune: false,
+            kernel: dispatch::select(),
+            kernel_pinned: false,
         }
+    }
+
+    /// A fresh executor pinned to an explicit kernel. Returns
+    /// [`Error::Kernel`](crate::error::Error::Kernel) if the kernel is not
+    /// supported on this host. Pinned kernels are kept by autotuning
+    /// (`tune_chain` ranks RB/thread candidates only).
+    pub fn with_kernel(machine: &MachineSpec, kernel: &'static dyn Kernel) -> Result<Self> {
+        dispatch::ensure_supported(kernel)?;
+        Ok(Self::with_kernel_unchecked(machine, kernel))
+    }
+
+    /// [`Executor::with_kernel`] without the support probe — test hook for
+    /// faking an unsupported kernel (`tune_chain` must then fail typed).
+    pub(crate) fn with_kernel_unchecked(
+        machine: &MachineSpec,
+        kernel: &'static dyn Kernel,
+    ) -> Self {
+        let mut ex = Self::new(machine);
+        ex.kernel = kernel;
+        ex.kernel_pinned = true;
+        ex
     }
 
     /// Enable measured register-blocking autotuning: each plan-cache miss
@@ -110,12 +143,39 @@ impl Executor {
             scratch: Scratch::default(),
             chain_dims: Vec::new(),
             tune: self.tune,
+            // same microkernels pool-wide: outputs stay byte-identical
+            // across workers even when autotune switched the kernel
+            kernel: self.kernel,
+            kernel_pinned: self.kernel_pinned,
         }
     }
 
     /// The machine this executor plans for.
     pub fn machine(&self) -> &MachineSpec {
         &self.machine
+    }
+
+    /// Name of the microkernel set this executor dispatches to
+    /// (observability: TUNE sections, serving snapshots, BENCH rows).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// The dispatched kernel object (crate-internal: tune ranking).
+    pub(crate) fn kernel(&self) -> &'static dyn Kernel {
+        self.kernel
+    }
+
+    /// Whether the kernel was explicitly pinned (crate-internal).
+    pub(crate) fn kernel_pinned(&self) -> bool {
+        self.kernel_pinned
+    }
+
+    /// Switch the dispatched kernel (crate-internal: `tune_chain` installs
+    /// the measured winner; plans are kernel-independent so the cache and
+    /// packed cores stay valid).
+    pub(crate) fn set_kernel(&mut self, kernel: &'static dyn Kernel) {
+        self.kernel = kernel;
     }
 
     /// Number of cached plans (one per distinct `EinsumDims`).
@@ -136,7 +196,14 @@ impl Executor {
             let mut rng = crate::util::prng::Rng::new(0x7e57);
             let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 0.5, &mut rng);
             let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 0.5, &mut rng);
-            plan = super::tune::tune_plan(&plan, &self.machine, &g, &x, 6)?;
+            plan = super::tune::tune_plan_with_kernel(
+                &plan,
+                &self.machine,
+                &g,
+                &x,
+                6,
+                self.kernel,
+            )?;
         }
         self.plan_cache.insert(*dims, plan);
         Ok(plan)
@@ -170,7 +237,7 @@ impl Executor {
     pub fn execute(&mut self, dims: &EinsumDims, g: &PackedG, x: &Tensor) -> Result<Tensor> {
         let plan = self.plan(dims)?;
         let mut out = Vec::new();
-        execute_plan_into(&plan, g, x.data(), &mut out)?;
+        execute_plan_into(&plan, self.kernel, g, x.data(), &mut out)?;
         Tensor::from_vec(vec![plan.dims.m, plan.dims.b, plan.dims.r], out)
     }
 
@@ -184,7 +251,7 @@ impl Executor {
         out: &mut Vec<f32>,
     ) -> Result<()> {
         let plan = self.plan(dims)?;
-        execute_plan_into(&plan, g, xd, out)
+        execute_plan_into(&plan, self.kernel, g, xd, out)
     }
 
     /// Allocation-free variant: output lands in the executor's scratch and
@@ -196,7 +263,7 @@ impl Executor {
         xd: &[f32],
     ) -> Result<&[f32]> {
         let plan = self.plan(dims)?;
-        execute_plan_into(&plan, g, xd, &mut self.scratch.out)?;
+        execute_plan_into(&plan, self.kernel, g, xd, &mut self.scratch.out)?;
         Ok(&self.scratch.out)
     }
 
@@ -241,7 +308,7 @@ impl Executor {
         self.scratch.chain.extend_from_slice(x);
         for (dims, g) in chain_dims.iter().zip(packed) {
             let plan = self.plan(dims)?;
-            execute_plan_into(&plan, g, &self.scratch.chain, &mut self.scratch.out)?;
+            execute_plan_into(&plan, self.kernel, g, &self.scratch.chain, &mut self.scratch.out)?;
             std::mem::swap(&mut self.scratch.chain, &mut self.scratch.out);
         }
         Ok(())
@@ -392,6 +459,20 @@ mod tests {
         let err = ex.execute_with_scratch(&dims, &pg, &x.data()[..10]);
         assert!(err.is_err());
         assert_eq!(ex.scratch.out_slice(), &good[..], "scratch clobbered by failed call");
+    }
+
+    #[test]
+    fn explicit_portable_kernel_is_pinned_and_propagates_to_workers() {
+        let machine = MachineSpec::spacemit_k1();
+        let ex = Executor::with_kernel(&machine, crate::kernels::portable()).unwrap();
+        assert_eq!(ex.kernel_name(), "portable");
+        assert!(ex.kernel_pinned());
+        let w = ex.worker_clone();
+        assert_eq!(w.kernel_name(), "portable");
+        assert!(w.kernel_pinned());
+        // default construction picks *some* supported kernel
+        let d = Executor::new(&machine);
+        assert!(crate::kernels::all_kernels().iter().any(|k| k.name() == d.kernel_name()));
     }
 
     #[test]

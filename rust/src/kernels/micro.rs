@@ -132,6 +132,9 @@ macro_rules! dispatch_rb {
         }
     };
 }
+// The arch-specific kernels (avx2/neon) reuse the same (rm, rb) -> const
+// monomorphization table for their own microkernel blocks.
+pub(crate) use dispatch_rb;
 
 /// r-vectorized region kernel over `m0..m1` x `b0..b1` with register
 /// blocking (rm, rb); remainders run as (1, 1) padding ukernels

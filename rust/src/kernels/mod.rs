@@ -33,15 +33,34 @@
 //! * register-blocked tiles with padding ukernels (§4.3.4, Listing 6);
 //! * bt tiling + loop order (§4.3.5) and thread parallelization (§4.2.3).
 //!
+//! Which *microkernel implementation* runs those plans is a
+//! construction-time property of the executor: [`dispatch::select`] probes
+//! the host once and picks the best supported [`Kernel`] (AVX2/FMA on
+//! x86_64, NEON on aarch64, the portable `[f32; VL]` loop nests
+//! everywhere), and `TTRV_FORCE_SCALAR` / [`set_force_scalar`] pins the
+//! portable reference bits on any box. Kernel choice never affects packing
+//! or plans — only the low-order bits of f32 reductions (FMA), which is
+//! why bitwise pins run forced-scalar and vector kernels are verified by
+//! the tolerance differential suite (ARCHITECTURE.md "Kernel dispatch").
+//!
 //! [`OptimizationPlan`]: crate::compiler::OptimizationPlan
 
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+pub mod dispatch;
 mod exec;
 mod executor;
 mod micro;
 mod naive;
+#[cfg(target_arch = "aarch64")]
+mod neon;
 mod packed;
 mod tune;
 
+pub use dispatch::{
+    all_kernels, default_kernel_name, force_scalar_active, portable, set_force_scalar, Kernel,
+    PORTABLE_KERNEL_NAME,
+};
 pub use executor::Executor;
 pub use naive::naive_einsum;
 pub use packed::{pack, GLayout, PackedG};

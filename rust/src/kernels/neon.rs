@@ -1,0 +1,260 @@
+//! aarch64 NEON microkernels.
+//!
+//! Same tiling structure as the portable kernels in [`super::micro`], with
+//! each `[f32; VL]` lane array realized as a pair of `float32x4_t`
+//! registers (NEON is 128-bit; `VL` = 8) and the per-lane multiply-then-add
+//! replaced by fused multiply-add (`vfmaq_f32`). Like the AVX2 kernel this
+//! changes low-order bits versus the portable reference, so it is verified
+//! by the tolerance-based differential suite, never by bitwise pins.
+//!
+//! Memory safety: every load/store goes through a bounds-checked subslice
+//! before the pointer is taken (see the safety note in [`super::avx2`]).
+
+use core::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32,
+};
+
+use super::dispatch::Kernel;
+use super::micro::dispatch_rb;
+use super::packed::PackedG;
+use super::VL;
+
+/// NEON kernel set (2 × 4 f32 lanes = `VL`).
+pub(crate) struct NeonKernel;
+
+impl Kernel for NeonKernel {
+    fn name(&self) -> &'static str {
+        "neon"
+    }
+
+    fn supported(&self) -> bool {
+        // NEON is architecturally mandatory on aarch64, but keep the probe
+        // honest rather than hard-coding `true`.
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    fn r_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        debug_assert!(self.supported());
+        // SAFETY: NEON probe passed (dispatch only selects supported
+        // kernels); all accesses are through bounds-checked subslices.
+        unsafe { r_region_neon(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base) }
+    }
+
+    fn k_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        debug_assert!(self.supported());
+        // SAFETY: as above.
+        unsafe { k_region_neon(g, xd, od, b_total, m0, m1, b0, b1, m_base) }
+    }
+}
+
+/// A `VL`-wide f32 vector as two NEON quads.
+#[derive(Clone, Copy)]
+struct F32x8 {
+    lo: float32x4_t,
+    hi: float32x4_t,
+}
+
+#[inline(always)]
+unsafe fn zero8() -> F32x8 {
+    F32x8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) }
+}
+
+/// Load `VL` lanes from a bounds-checked slice of length >= `VL`.
+#[inline(always)]
+unsafe fn load8(src: &[f32]) -> F32x8 {
+    let s = &src[..VL];
+    F32x8 { lo: vld1q_f32(s.as_ptr()), hi: vld1q_f32(s[4..].as_ptr()) }
+}
+
+#[inline(always)]
+unsafe fn fma8(acc: F32x8, g: F32x8, xs: f32) -> F32x8 {
+    let xv = vdupq_n_f32(xs);
+    F32x8 { lo: vfmaq_f32(acc.lo, g.lo, xv), hi: vfmaq_f32(acc.hi, g.hi, xv) }
+}
+
+#[inline(always)]
+unsafe fn store8(v: F32x8) -> [f32; VL] {
+    let mut tmp = [0.0f32; VL];
+    vst1q_f32(tmp.as_mut_ptr(), v.lo);
+    vst1q_f32(tmp[4..].as_mut_ptr(), v.hi);
+    tmp
+}
+
+/// Pairwise horizontal sum with the exact association of `micro::hsum`:
+/// `lo + hi` gives `(v0+v4, v1+v5, v2+v6, v3+v7)`, then `(s0+s2)+(s1+s3)`.
+#[inline(always)]
+unsafe fn hsum8(v: F32x8) -> f32 {
+    let mut tmp = [0.0f32; 4];
+    vst1q_f32(tmp.as_mut_ptr(), vaddq_f32(v.lo, v.hi));
+    (tmp[0] + tmp[2]) + (tmp[1] + tmp[3])
+}
+
+/// FMA register-tile block: the NEON twin of `micro::r_block`.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn r_block_fma<const RM: usize, const RB: usize>(
+    gd: &[f32],
+    xd: &[f32],
+    od: &mut [f32],
+    l: usize,
+    r: usize,
+    r_pad: usize,
+    b_total: usize,
+    m0: usize,
+    b0: usize,
+    m_base: usize,
+) {
+    let rv_count = r_pad / VL;
+    for rv in 0..rv_count {
+        let mut acc = [[zero8(); RB]; RM];
+        let mut g_rows: [std::slice::ChunksExact<'_, f32>; RM] = std::array::from_fn(|im| {
+            let off = ((m0 + im) * rv_count + rv) * l * VL;
+            gd[off..off + l * VL].chunks_exact(VL)
+        });
+        let x_rows: [&[f32]; RB] =
+            std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
+        for kk in 0..l {
+            let mut gvec = [zero8(); RM];
+            for (im, row) in g_rows.iter_mut().enumerate() {
+                gvec[im] = load8(row.next().expect("length l by construction"));
+            }
+            for ib in 0..RB {
+                let xs = x_rows[ib][kk];
+                for im in 0..RM {
+                    acc[im][ib] = fma8(acc[im][ib], gvec[im], xs);
+                }
+            }
+        }
+        let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
+        for im in 0..RM {
+            for ib in 0..RB {
+                let tmp = store8(acc[im][ib]);
+                let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
+                od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
+            }
+        }
+    }
+}
+
+/// NEON r-vectorized region driver: tiling identical to
+/// `micro::r_region_based`, microkernel swapped for [`r_block_fma`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn r_region_neon(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    rm: usize,
+    rb: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let r_pad = g.r_pad;
+    let rm = rm.clamp(1, 8);
+    let rb = rb.clamp(1, 8);
+    let m_main = m0 + (m1 - m0) / rm * rm;
+    let b_main = b0 + (b1 - b0) / rb * rb;
+    let mut mi = m0;
+    while mi < m_main {
+        let mut bi = b0;
+        while bi < b_main {
+            dispatch_rb!(rm, rb, r_block_fma,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            dispatch_rb!(rm, 1, r_block_fma,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += 1;
+        }
+        mi += rm;
+    }
+    while mi < m1 {
+        let mut bi = b0;
+        while bi + rb <= b1 {
+            dispatch_rb!(1, rb, r_block_fma,
+                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            r_block_fma::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base);
+            bi += 1;
+        }
+        mi += 1;
+    }
+}
+
+/// NEON k-vectorized (dot-product) region: FMA accumulation over `VL`-wide
+/// chunks, then the same pairwise horizontal-sum shape as `micro::hsum`
+/// and the same scalar tail.
+#[allow(clippy::too_many_arguments)]
+unsafe fn k_region_neon(
+    g: &PackedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let chunks = l / VL;
+    let tail = chunks * VL;
+    for mi in m0..m1 {
+        for ri in 0..r {
+            let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+            for bi in b0..b1 {
+                let xrow = &xd[bi * l..(bi + 1) * l];
+                let mut acc = zero8();
+                for (gc, xc) in grow[..tail]
+                    .chunks_exact(VL)
+                    .zip(xrow[..tail].chunks_exact(VL))
+                {
+                    let gv = load8(gc);
+                    let xv = load8(xc);
+                    acc = F32x8 {
+                        lo: vfmaq_f32(acc.lo, gv.lo, xv.lo),
+                        hi: vfmaq_f32(acc.hi, gv.hi, xv.hi),
+                    };
+                }
+                let mut s = hsum8(acc);
+                for i in tail..l {
+                    s += grow[i] * xrow[i];
+                }
+                od[((mi - m_base) * b_total + bi) * r + ri] = s;
+            }
+        }
+    }
+}

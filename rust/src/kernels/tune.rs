@@ -3,12 +3,17 @@
 //! The paper's Eq. 18-25 L/S model ranks candidates analytically; on hosts
 //! we can *measure*, the top candidates are micro-benchmarked on the real
 //! buffers and the fastest wins. Packing depends only on the vectorized
-//! loop, not the RB factors or the thread count, so one packed core serves
-//! every candidate — which is also why tuned plans are always safe to
-//! persist next to analytically-planned packed cores
-//! ([`crate::artifact`]'s TUNE section) and why tuning never changes
-//! result bits (per-element reduction order is RB/thread-invariant,
-//! pinned by `tuned_chain_output_is_bitwise_identical` below).
+//! loop, not the RB factors, the thread count or the kernel, so one packed
+//! core serves every candidate — which is also why tuned plans are always
+//! safe to persist next to analytically-planned packed cores
+//! ([`crate::artifact`]'s TUNE section). For a **fixed kernel**, tuning
+//! never changes result bits (per-element reduction order is
+//! RB/thread-invariant, pinned by `tuned_chain_output_is_bitwise_identical`
+//! below on the portable kernel). [`Executor::tune_chain`] additionally
+//! ranks the supported **kernels** (`dispatch::candidate_kernels`) unless
+//! the executor's kernel is pinned; switching to a vector kernel does move
+//! low-order bits, which is exactly why the bitwise suites pin the portable
+//! path (ARCHITECTURE.md "Kernel dispatch").
 //!
 //! Every timing comparison here runs under a [`MeasureFloor`]: a candidate
 //! is measured for at least a minimum wall-clock **and** iteration count
@@ -31,6 +36,7 @@ use crate::ttd::TtLayout;
 use crate::util::prng::Rng;
 use crate::util::timer::{self, MeasureFloor};
 
+use super::dispatch::{self, Kernel};
 use super::exec::execute_plan_into;
 use super::executor::Executor;
 use super::packed::{pack, PackedG};
@@ -43,18 +49,54 @@ const TUNE_TOP_K: usize = 6;
 /// panic or a non-finite result).
 fn measure_candidate(
     plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
     g: &PackedG,
     xd: &[f32],
     out: &mut Vec<f32>,
     floor: &MeasureFloor,
 ) -> Result<f64> {
-    timer::try_min_secs("autotune candidate", || execute_plan_into(plan, g, xd, out), floor)
+    timer::try_min_secs(
+        "autotune candidate",
+        || execute_plan_into(plan, kernel, g, xd, out),
+        floor,
+    )
+}
+
+/// [`tune_plan_floored`] measuring on an explicit kernel — what
+/// [`Executor::plan`] with tuning enabled uses so measurement and serving
+/// run the same microkernels.
+pub(crate) fn tune_plan_floored_with(
+    plan: &OptimizationPlan,
+    machine: &MachineSpec,
+    g: &Tensor,
+    x: &Tensor,
+    top_k: usize,
+    floor: &MeasureFloor,
+    kernel: &'static dyn Kernel,
+) -> Result<OptimizationPlan> {
+    dispatch::ensure_supported(kernel)?;
+    let cands = regblock::candidates(&plan.dims, machine, plan.vector_loop, top_k);
+    if cands.len() <= 1 {
+        return Ok(*plan);
+    }
+    let pg = pack(g, plan)?; // layout is RB- and kernel-invariant
+    let mut out = Vec::new();
+    let mut best = (*plan, f64::INFINITY);
+    for (rb, _ls) in cands {
+        let cand_plan = OptimizationPlan { rb, ..*plan };
+        let secs = measure_candidate(&cand_plan, kernel, &pg, x.data(), &mut out, floor)?;
+        if secs < best.1 {
+            best = (cand_plan, secs);
+        }
+    }
+    Ok(best.0)
 }
 
 /// Re-rank the solver's top-`k` RB candidates by measurement under `floor`
 /// and return the plan updated with the winner. `g`/`x` are representative
 /// buffers of the planned shapes. Strictly-faster wins, so ties keep the
-/// analytically-best (first) candidate deterministically.
+/// analytically-best (first) candidate deterministically. Measures on the
+/// host's dispatched kernel ([`dispatch::select`]).
 pub fn tune_plan_floored(
     plan: &OptimizationPlan,
     machine: &MachineSpec,
@@ -63,26 +105,11 @@ pub fn tune_plan_floored(
     top_k: usize,
     floor: &MeasureFloor,
 ) -> Result<OptimizationPlan> {
-    let cands = regblock::candidates(&plan.dims, machine, plan.vector_loop, top_k);
-    if cands.len() <= 1 {
-        return Ok(*plan);
-    }
-    let pg = pack(g, plan)?; // layout is RB-invariant
-    let mut out = Vec::new();
-    let mut best = (*plan, f64::INFINITY);
-    for (rb, _ls) in cands {
-        let cand_plan = OptimizationPlan { rb, ..*plan };
-        let secs = measure_candidate(&cand_plan, &pg, x.data(), &mut out, floor)?;
-        if secs < best.1 {
-            best = (cand_plan, secs);
-        }
-    }
-    Ok(best.0)
+    tune_plan_floored_with(plan, machine, g, x, top_k, floor, dispatch::select())
 }
 
 /// [`tune_plan_floored`] under the environment floor
-/// ([`MeasureFloor::from_env`]): the signature every existing caller
-/// (notably [`Executor::plan`] with tuning enabled) uses.
+/// ([`MeasureFloor::from_env`]).
 pub fn tune_plan(
     plan: &OptimizationPlan,
     machine: &MachineSpec,
@@ -93,6 +120,18 @@ pub fn tune_plan(
     tune_plan_floored(plan, machine, g, x, top_k, &MeasureFloor::from_env())
 }
 
+/// [`tune_plan_floored_with`] under the environment floor.
+pub(crate) fn tune_plan_with_kernel(
+    plan: &OptimizationPlan,
+    machine: &MachineSpec,
+    g: &Tensor,
+    x: &Tensor,
+    top_k: usize,
+    kernel: &'static dyn Kernel,
+) -> Result<OptimizationPlan> {
+    tune_plan_floored_with(plan, machine, g, x, top_k, &MeasureFloor::from_env(), kernel)
+}
+
 impl Executor {
     /// Measured autotuning of a whole TT einsum chain: for every step of
     /// `layout`'s chain at `batch`, measure the solver's top RB candidates
@@ -101,11 +140,22 @@ impl Executor {
     /// winner via [`Executor::set_plan`], and return the winners in chain
     /// order.
     ///
-    /// Tuning only ever changes RB factors and the thread count — never
-    /// the vectorized loop or the `G` layout — so the caller's packed
-    /// cores stay valid and result bits are unchanged (reduction order is
-    /// RB/thread-invariant). The returned plans are exactly what
-    /// `ttrv compress --tune` persists in the artifact TUNE section.
+    /// Plan tuning only ever changes RB factors and the thread count —
+    /// never the vectorized loop or the `G` layout — so the caller's packed
+    /// cores stay valid. Unless this executor's kernel was pinned
+    /// ([`Executor::with_kernel`]) or force-scalar is active, the supported
+    /// **kernels** are ranked alongside: each candidate kernel's per-step
+    /// bests are summed over the chain and the kernel with the smallest
+    /// total becomes this executor's dispatch (strictly-faster wins, so
+    /// ties keep the portable reference). Note a kernel switch — unlike
+    /// RB/thread tuning — does move low-order result bits; bitwise suites
+    /// therefore pin the portable kernel. The chosen kernel's name is what
+    /// `ttrv compress --tune` persists next to the plans in the artifact
+    /// TUNE section ([`Executor::kernel_name`]).
+    ///
+    /// An unsupported executor kernel (possible only via the unchecked
+    /// test hook or a stale pin) is a typed [`Error::Kernel`] up front —
+    /// never a panic, never an illegal instruction mid-measurement.
     pub fn tune_chain(
         &mut self,
         layout: &TtLayout,
@@ -113,6 +163,7 @@ impl Executor {
         packed: &[PackedG],
         floor: &MeasureFloor,
     ) -> Result<Vec<OptimizationPlan>> {
+        dispatch::ensure_supported(self.kernel())?;
         let chain = cost::einsum_chain(layout, batch);
         if chain.len() != packed.len() {
             return Err(Error::shape(format!(
@@ -121,10 +172,23 @@ impl Executor {
                 packed.len()
             )));
         }
+        let kernels: Vec<&'static dyn Kernel> = if self.kernel_pinned() {
+            vec![self.kernel()]
+        } else {
+            dispatch::candidate_kernels()
+        };
+        // every candidate kernel must pass the runtime probe before we
+        // execute a single instruction of it (the typed-error contract)
+        for k in &kernels {
+            dispatch::ensure_supported(*k)?;
+        }
         // fixed seed: representative inputs are reproducible run to run
         let mut rng = Rng::new(0x7e57_c4a1);
         let mut out = Vec::new();
-        let mut winners = Vec::with_capacity(chain.len());
+        // per-kernel chain totals + per-kernel winning plans per step
+        let mut totals = vec![0.0f64; kernels.len()];
+        let mut winners: Vec<Vec<OptimizationPlan>> =
+            kernels.iter().map(|_| Vec::with_capacity(chain.len())).collect();
         for (step, dims) in chain.iter().enumerate() {
             let base = self.plan(dims)?;
             let x = rng.normal_vec(dims.b * dims.n * dims.k, 0.5);
@@ -138,25 +202,41 @@ impl Executor {
             }
             let thread_opts = [base.threads, 1];
             let threads = if base.threads > 1 { &thread_opts[..] } else { &thread_opts[1..] };
-            let mut best: Option<(OptimizationPlan, f64)> = None;
-            for cand in &cands {
-                for &t in threads {
-                    let plan = OptimizationPlan { threads: t, ..*cand };
-                    let secs = measure_candidate(&plan, &packed[step], &x, &mut out, floor)?;
-                    let better = match &best {
-                        Some((_, b)) => secs < *b,
-                        None => true,
-                    };
-                    if better {
-                        best = Some((plan, secs));
+            for (ki, kernel) in kernels.iter().enumerate() {
+                let mut best: Option<(OptimizationPlan, f64)> = None;
+                for cand in &cands {
+                    for &t in threads {
+                        let plan = OptimizationPlan { threads: t, ..*cand };
+                        let secs =
+                            measure_candidate(&plan, *kernel, &packed[step], &x, &mut out, floor)?;
+                        let better = match &best {
+                            Some((_, b)) => secs < *b,
+                            None => true,
+                        };
+                        if better {
+                            best = Some((plan, secs));
+                        }
                     }
                 }
+                let (winner, secs) = best.expect("candidate list is non-empty");
+                totals[ki] += secs;
+                winners[ki].push(winner);
             }
-            let (winner, _) = best.expect("candidate list is non-empty");
-            self.set_plan(winner);
-            winners.push(winner);
         }
-        Ok(winners)
+        // smallest chain total wins; strict inequality keeps the earlier
+        // candidate on ties (kernels[0] is the portable reference)
+        let mut best_ki = 0;
+        for ki in 1..kernels.len() {
+            if totals[ki] < totals[best_ki] {
+                best_ki = ki;
+            }
+        }
+        self.set_kernel(kernels[best_ki]);
+        let plans = winners.swap_remove(best_ki);
+        for winner in &plans {
+            self.set_plan(*winner);
+        }
+        Ok(plans)
     }
 }
 
@@ -254,25 +334,107 @@ mod tests {
 
     #[test]
     fn tuned_chain_output_is_bitwise_identical() {
-        // tuning may pick any RB/thread winner; the serving output must not
-        // move by a single bit (the invariant the artifact TUNE section
-        // and the whole pool design lean on)
+        // for a FIXED kernel, tuning may pick any RB/thread winner and the
+        // serving output must not move by a single bit (the invariant the
+        // artifact TUNE section and the whole pool design lean on). Both
+        // executors pin the portable reference kernel so autotune ranks
+        // only RB/thread candidates — kernel switches legitimately move
+        // bits and are covered by the tolerance suite instead.
         let machine = MachineSpec::spacemit_k1();
         let layout = TtLayout::with_uniform_rank(vec![12, 10], vec![10, 18], 8).unwrap();
         let mut rng = Rng::new(127);
         let tt = random_cores(&layout, &mut rng);
-        let mut plain = Executor::new(&machine);
+        let mut plain = Executor::with_kernel(&machine, dispatch::portable()).unwrap();
         let packed = packed_chain(&layout, &tt, &mut plain, 1);
         let x = Tensor::randn(vec![1, layout.n_total() as usize], 1.0, &mut rng);
         let want = plain.run_tt_chain(&layout, 1, &packed, x.data()).unwrap().to_vec();
-        let mut tuned_ex = Executor::new(&machine);
+        let mut tuned_ex = Executor::with_kernel(&machine, dispatch::portable()).unwrap();
         // independent pack (same deterministic plans -> same layout)
         let packed2 = packed_chain(&layout, &tt, &mut tuned_ex, 1);
         tuned_ex.tune_chain(&layout, 1, &packed2, &MeasureFloor::quick()).unwrap();
+        assert_eq!(tuned_ex.kernel_name(), dispatch::PORTABLE_KERNEL_NAME);
         let got = tuned_ex.run_tt_chain(&layout, 1, &packed2, x.data()).unwrap();
         assert_eq!(got.len(), want.len());
         for (i, (a, b)) in got.iter().zip(&want).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "element {i}: {a} vs {b}");
+        }
+    }
+
+    /// A kernel whose runtime probe always fails: `tune_chain` must refuse
+    /// it with a typed error before executing a single region.
+    struct NeverSupportedKernel;
+
+    impl Kernel for NeverSupportedKernel {
+        fn name(&self) -> &'static str {
+            "never-supported"
+        }
+        fn supported(&self) -> bool {
+            false
+        }
+        #[allow(clippy::too_many_arguments)]
+        fn r_region(
+            &self,
+            _g: &PackedG,
+            _xd: &[f32],
+            _od: &mut [f32],
+            _b_total: usize,
+            _rm: usize,
+            _rb: usize,
+            _m0: usize,
+            _m1: usize,
+            _b0: usize,
+            _b1: usize,
+            _m_base: usize,
+        ) {
+            unreachable!("unsupported kernel must never execute");
+        }
+        #[allow(clippy::too_many_arguments)]
+        fn k_region(
+            &self,
+            _g: &PackedG,
+            _xd: &[f32],
+            _od: &mut [f32],
+            _b_total: usize,
+            _m0: usize,
+            _m1: usize,
+            _b0: usize,
+            _b1: usize,
+            _m_base: usize,
+        ) {
+            unreachable!("unsupported kernel must never execute");
+        }
+    }
+
+    static NEVER: NeverSupportedKernel = NeverSupportedKernel;
+
+    #[test]
+    fn tune_chain_rejects_unsupported_kernel_with_typed_error() {
+        let machine = MachineSpec::spacemit_k1();
+        let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+        let mut rng = Rng::new(128);
+        let tt = random_cores(&layout, &mut rng);
+        // the checked constructor refuses outright...
+        let err = Executor::with_kernel(&machine, &NEVER)
+            .err()
+            .expect("with_kernel must refuse an unsupported kernel");
+        match err {
+            crate::error::Error::Kernel(msg) => {
+                assert!(msg.contains("never-supported"), "message names the kernel: {msg}")
+            }
+            other => panic!("expected Error::Kernel, got {other:?}"),
+        }
+        // ...and an executor smuggled past the probe fails typed in
+        // tune_chain rather than panicking or executing the kernel
+        let mut ex = Executor::with_kernel_unchecked(&machine, &NEVER);
+        let mut packer = Executor::new(&machine);
+        let packed = packed_chain(&layout, &tt, &mut packer, 1);
+        let err = ex
+            .tune_chain(&layout, 1, &packed, &MeasureFloor::quick())
+            .err()
+            .expect("tune_chain must refuse an unsupported kernel");
+        match err {
+            crate::error::Error::Kernel(_) => {}
+            other => panic!("expected Error::Kernel, got {other:?}"),
         }
     }
 }

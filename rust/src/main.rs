@@ -462,8 +462,10 @@ fn cmd_bench(args: &Args) -> ttrv::Result<()> {
 
     if !serve_only {
         println!(
-            "kernel sweep ({} mode): 3 einsum kinds x 8 pinned shapes x 3 implementations",
-            if quick { "quick" } else { "full" }
+            "kernel sweep ({} mode): 3 einsum kinds x 8 pinned shapes x 3 implementations \
+             [kernel: {}]",
+            if quick { "quick" } else { "full" },
+            ttrv::kernels::default_kernel_name(),
         );
         let rows = harness::run_kernel_sweep(&bcfg, quick)?;
         for r in &rows {
@@ -572,10 +574,12 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
         let tt0 = std::time::Instant::now();
         let rep = ttrv::artifact::tune_bundle(&mut bundle, &machine, &floor)?;
         println!(
-            "autotuned {} TT layer(s): {} measured plans persisted in the TUNE section ({:.2}s)",
+            "autotuned {} TT layer(s): {} measured plans persisted in the TUNE section \
+             ({:.2}s, kernel: {})",
             rep.layers,
             rep.plans,
-            tt0.elapsed().as_secs_f64()
+            tt0.elapsed().as_secs_f64(),
+            bundle.tuned_kernel.as_deref().unwrap_or("-"),
         );
     }
     let dense_params: usize = spec.shapes.iter().map(|&(n, m)| (n * m + m) as usize).sum();
@@ -700,7 +704,8 @@ fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
     };
     let infos = server.registry().models();
     println!(
-        "serving {} model(s) with {} worker(s), max_batch {}, wait {}us, queue {}, steal {}{}",
+        "serving {} model(s) with {} worker(s), max_batch {}, wait {}us, queue {}, steal {}{} \
+         [kernel: {}]",
         infos.len(),
         serve_cfg.workers.max(1),
         serve_cfg.max_batch,
@@ -711,7 +716,8 @@ fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
             format!(", slo {}us", serve_cfg.slo_us)
         } else {
             String::new()
-        }
+        },
+        ttrv::kernels::default_kernel_name(),
     );
 
     // synthetic load, round-robined across the co-hosted models
@@ -789,7 +795,7 @@ fn cmd_artifacts_check(args: &Args) -> ttrv::Result<()> {
 mod tests {
     use super::*;
 
-    fn args_of(argv: &[&str]) -> HashMap<String, String> {
+    fn args_of(argv: &[&str]) -> Args {
         parse_args(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
     }
 
@@ -864,13 +870,17 @@ fn cmd_verify_bundle(path: &str) -> ttrv::Result<()> {
     }
     let bundle = ttrv::artifact::read_bundle_bytes(&bytes)?;
     println!(
-        "decoded {}: {} FC layers ({} TT), rank {}, seed {}, machine {}",
+        "decoded {}: {} FC layers ({} TT), rank {}, seed {}, machine {}{}",
         bundle.name,
         bundle.shapes.len(),
         bundle.tt_layers(),
         bundle.rank,
         bundle.seed,
-        bundle.machine
+        bundle.machine,
+        match &bundle.tuned_kernel {
+            Some(k) => format!(", tuned on kernel {k}"),
+            None => String::new(),
+        }
     );
     let machine = MachineSpec::spacemit_k1();
     let report = ttrv::artifact::verify(&bundle, &machine, &DseConfig::default())?;

@@ -11,6 +11,11 @@
 //!   forward-compat tripwire for every future format change.
 //! * **End-to-end** — compress → file → `Server::from_artifact` serves
 //!   bitwise-identically to the freshly compressed engine.
+//!
+//! This binary is a **tier-1 bitwise pin**: every test that executes an
+//! engine runs forced-scalar (portable kernel), so the golden-artifact and
+//! replay assertions hold byte-for-byte on any host. Vector-kernel accuracy
+//! is tier 2, covered by `kernel_reference.rs`.
 
 use std::sync::OnceLock;
 
@@ -32,6 +37,14 @@ use ttrv::util::prng::Rng;
 
 fn k1() -> MachineSpec {
     MachineSpec::spacemit_k1()
+}
+
+/// Pin this process to the portable reference kernel (first statement of
+/// every kernel-executing test here — tests run concurrently and the flag
+/// is global, but it is only ever raised, never lowered, so there is no
+/// race).
+fn force_scalar() {
+    ttrv::kernels::set_force_scalar(true);
 }
 
 /// One compressed LeNet300, shared across the tests that need a real
@@ -75,6 +88,7 @@ fn single_layer_bundle(tt: &TtCores, plans: Vec<OptimizationPlan>) -> ModelBundl
             tuned: None,
         })],
         report: Json::Arr(vec![]),
+        tuned_kernel: None,
     }
 }
 
@@ -96,6 +110,7 @@ fn assert_bitwise_eq(a: &Tensor, b: &Tensor, ctx: &str) {
 
 #[test]
 fn roundtrip_randomized_layouts_serve_bitwise() {
+    force_scalar();
     // d ∈ {2, 3, 4}, non-uniform ranks, prime-mixed factor shapes
     let cases: Vec<TtLayout> = vec![
         TtLayout::new(vec![7, 11], vec![13, 5], vec![1, 6, 1]).unwrap(),
@@ -126,6 +141,7 @@ fn roundtrip_randomized_layouts_serve_bitwise() {
 
 #[test]
 fn all_three_g_layouts_roundtrip() {
+    force_scalar();
     let machine = k1();
     let mut rng = Rng::new(77);
     // compiled plans on a d=3 chain produce PackedR (first/middle) and
@@ -174,6 +190,7 @@ fn all_three_g_layouts_roundtrip() {
 
 #[test]
 fn full_model_bundle_roundtrips_and_serves() {
+    force_scalar();
     let bundle = lenet_bundle();
     let bytes = artifact::write_bundle(bundle);
     let back = artifact::read_bundle_bytes(&bytes).unwrap();
@@ -191,6 +208,7 @@ fn full_model_bundle_roundtrips_and_serves() {
 
 #[test]
 fn verify_passes_on_a_written_and_reloaded_bundle() {
+    force_scalar();
     let bundle = lenet_bundle();
     let back = artifact::read_bundle_bytes(&artifact::write_bundle(bundle)).unwrap();
     let report = artifact::verify(&back, &k1(), &DseConfig::default()).unwrap();
@@ -489,6 +507,7 @@ fn tuned_single_layer_bundle() -> ModelBundle {
 
 #[test]
 fn tune_section_roundtrips_and_is_optional() {
+    force_scalar();
     // without tuned plans: no TUNE section in the container
     let untuned = lenet_bundle();
     let bytes = artifact::write_bundle(untuned);
@@ -519,6 +538,7 @@ fn tune_section_roundtrips_and_is_optional() {
 
 #[test]
 fn tuned_and_analytic_engines_serve_bitwise_identically() {
+    force_scalar();
     // the acceptance pin: persisted measured plans change performance
     // only, never a single output bit
     let analytic = lenet_bundle();
@@ -538,6 +558,7 @@ fn tuned_and_analytic_engines_serve_bitwise_identically() {
 
 #[test]
 fn verify_passes_on_a_tuned_bundle() {
+    force_scalar();
     // tuned plans are measured (non-reproducible), so verify compares
     // bytes with the TUNE section stripped — and replays the tuned engine
     // bitwise against the analytic fresh compression
@@ -550,6 +571,7 @@ fn verify_passes_on_a_tuned_bundle() {
 
 #[test]
 fn server_from_artifact_serves_persisted_tuned_plans_bitwise() {
+    force_scalar();
     // compress --tune -> serve-demo --artifact, as a library-level e2e
     let mut tuned = lenet_bundle().clone();
     artifact::tune_bundle(&mut tuned, &k1(), &MeasureFloor::quick()).unwrap();
@@ -678,6 +700,7 @@ const GOLDEN_EXPECTED: [f32; 10] = [
 
 #[test]
 fn golden_artifact_loads_and_serves_pinned_output() {
+    force_scalar();
     let path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/lenet300.ttrv");
     let bundle = artifact::read_bundle_file(&path).unwrap();
@@ -710,6 +733,7 @@ fn golden_artifact_loads_and_serves_pinned_output() {
 
 #[test]
 fn server_from_artifact_serves_bitwise_identical_responses() {
+    force_scalar();
     let bundle = lenet_bundle();
     let path = std::env::temp_dir().join(format!(
         "ttrv_artifact_suite_{}.ttrv",

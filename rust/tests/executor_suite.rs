@@ -9,6 +9,11 @@
 //!   so it is held to numerical closeness instead.
 //! * TT-SVD + interleave roundtrip on d=3/d=4 layouts with non-uniform ranks
 //!   and non-dividing (prime-mixed) shapes.
+//!
+//! This binary is a **tier-1 bitwise pin**: every test runs forced-scalar
+//! (portable kernel) so its byte-identity assertions hold on any host.
+//! Vector kernels (FMA reassociates low-order bits) are covered by the
+//! tolerance differential suite in `kernel_reference.rs` instead.
 
 use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
 use ttrv::kernels::{pack, Executor, VL};
@@ -18,6 +23,13 @@ use ttrv::ttd::cost::{EinsumDims, EinsumKind};
 use ttrv::ttd::decompose::{random_cores, tt_svd};
 use ttrv::ttd::TtLayout;
 use ttrv::util::prng::Rng;
+
+/// Pin this process to the portable reference kernel (first statement of
+/// every test here — tests run concurrently and the flag is global, but it
+/// is only ever raised, never lowered, so there is no race).
+fn force_scalar() {
+    ttrv::kernels::set_force_scalar(true);
+}
 
 #[allow(clippy::too_many_arguments)]
 fn plan_with(
@@ -49,6 +61,7 @@ fn run(ex: &mut Executor, plan: OptimizationPlan, g: &Tensor, x: &Tensor) -> Vec
 
 #[test]
 fn byte_identical_across_layouts_threads_orders_and_tiles() {
+    force_scalar();
     let machine = MachineSpec::spacemit_k1();
     let mut rng = Rng::new(90);
     let mut ex = Executor::new(&machine);
@@ -104,8 +117,47 @@ fn byte_identical_across_layouts_threads_orders_and_tiles() {
     }
 }
 
+/// The no-drift pin: a *forced-scalar* executor built through the normal
+/// `Executor::new` dispatch path must select the portable kernel and
+/// produce output byte-identical to the canonical scalar reference — i.e.
+/// exactly the bytes this suite pinned before runtime kernel dispatch
+/// existed. If dispatch ever leaks a vector kernel past the force flag,
+/// or the portable kernel's accumulation order changes, this fails.
+#[test]
+fn forced_scalar_dispatch_output_is_bitwise_identical_to_reference() {
+    force_scalar();
+    let machine = MachineSpec::spacemit_k1();
+    let mut ex = Executor::new(&machine);
+    assert_eq!(
+        ex.kernel_name(),
+        ttrv::kernels::PORTABLE_KERNEL_NAME,
+        "forced-scalar dispatch must select the portable kernel"
+    );
+    let mut rng = Rng::new(92);
+    for (m, b, n, r, k) in [(7usize, 11usize, 3usize, 8usize, 8usize), (9, 5, 2, 16, 8)] {
+        let kind = if k == 1 { EinsumKind::First } else { EinsumKind::Middle };
+        let dims = EinsumDims { kind, m, b, n, r, k };
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+        let want = ttrv::kernels::naive_einsum(&g, &x).unwrap().into_vec();
+        for (pack_g, vloop, rb) in [
+            (false, VectorLoop::None, RbFactors::NONE),
+            (true, VectorLoop::None, RbFactors::NONE),
+            (true, VectorLoop::R, RbFactors { rm: 2, rb: 3, rr: 1, rk: 1 }),
+        ] {
+            let plan = plan_with(dims, pack_g, vloop, rb, LoopOrder::Mbrk, None, 1);
+            assert_eq!(
+                run(&mut ex, plan, &g, &x),
+                want,
+                "forced-scalar {dims:?} {vloop:?} pack={pack_g} drifted from the reference"
+            );
+        }
+    }
+}
+
 #[test]
 fn ttsvd_roundtrip_d3_d4_nonuniform_ranks_nondividing_shapes() {
+    force_scalar();
     let mut rng = Rng::new(91);
     for (ms, ns, truth_ranks, target_ranks) in [
         // d = 3, prime-mixed factors, ranks differ per boundary
@@ -142,6 +194,7 @@ fn ttsvd_roundtrip_d3_d4_nonuniform_ranks_nondividing_shapes() {
 
 #[test]
 fn property_full_rank_ttsvd_exact_on_random_awkward_shapes() {
+    force_scalar();
     ttrv::testkit::check("tt-svd full-rank exactness", 6, |d| {
         let dlen = *d.choose(&[3usize, 4]);
         // keep unfoldings small enough for the Jacobi SVD: primes for d=3,

@@ -1,0 +1,222 @@
+//! Tier-2 kernel verification: the **tolerance differential suite**.
+//!
+//! Every registered microkernel (portable, and the host's vector kernel
+//! when one is supported) is run against the scalar canonical reference
+//! (`naive_einsum`) over the 24 pinned Table-3 shapes x all three `G`
+//! layouts, plus remainder-tile edge shapes that leave partial register
+//! tiles, partial r lane groups, and k-loop scalar tails.
+//!
+//! Vector kernels (FMA, lane-split reductions) legitimately move the
+//! low-order bits of an f32 reduction, so this suite does **not** demand
+//! bitwise equality — that is tier 1, pinned forced-scalar by
+//! `executor_suite.rs` / `serving.rs` / `artifact_suite.rs`. Instead each
+//! output element is held to a *principled* forward-error bound derived
+//! from its reduction depth `L = n * k`:
+//!
+//! ```text
+//! |computed - exact| <= gamma_L * sum |g * x|,
+//!     gamma_L = L*u / (1 - L*u),  u = f32 unit roundoff = EPSILON / 2
+//! ```
+//!
+//! which holds for *any* summation order (and for FMA contractions) of L
+//! products (Higham, *Accuracy and Stability of Numerical Algorithms*,
+//! ch. 3). Both the reference and the candidate satisfy it vs the exact
+//! sum, so their difference is bounded by `2 * gamma_L * sum|g*x|`; the
+//! absolute floor covers the all-zero / subnormal corner. No magic
+//! epsilons: a kernel that reassociates is fine, a kernel that drops or
+//! double-counts a term is ~L/2 times over this bound and fails loudly.
+
+use ttrv::compiler::cb_suite;
+use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
+use ttrv::kernels::{pack, Executor, Kernel, VL};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{EinsumDims, EinsumKind};
+use ttrv::util::prng::Rng;
+
+/// Keep the full 24-shape sweep fast: the bound is per-element, so the
+/// batch extent only multiplies runtime, not coverage.
+const B_CAP: usize = 48;
+
+#[allow(clippy::too_many_arguments)]
+fn plan_with(
+    dims: EinsumDims,
+    pack_g: bool,
+    vloop: VectorLoop,
+    rb: RbFactors,
+    threads: u32,
+) -> OptimizationPlan {
+    OptimizationPlan {
+        dims,
+        pack_g,
+        vector_loop: vloop,
+        vl: if vloop == VectorLoop::None { 1 } else { VL },
+        rb,
+        tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+        threads,
+        ls_estimate: 0,
+    }
+}
+
+/// `2 * gamma_L * sum|g*x|` per output element, plus a subnormal floor.
+fn tolerances(g: &Tensor, x: &Tensor, reduction_depth: usize) -> Vec<f32> {
+    let abs = |t: &Tensor| {
+        Tensor::from_vec(t.dims().to_vec(), t.data().iter().map(|v| v.abs()).collect()).unwrap()
+    };
+    let u = f32::EPSILON as f64 / 2.0;
+    let lu = reduction_depth as f64 * u;
+    assert!(lu < 0.5, "reduction depth {reduction_depth} too deep for a meaningful f32 bound");
+    let gamma = lu / (1.0 - lu);
+    ttrv::kernels::naive_einsum(&abs(g), &abs(x))
+        .unwrap()
+        .data()
+        .iter()
+        .map(|&s| (2.0 * gamma * s as f64) as f32 + f32::MIN_POSITIVE)
+        .collect()
+}
+
+/// Run `plan` on an executor pinned to `kernel` and check every element
+/// against the reference within its per-element bound.
+fn check_plan(
+    kernel: &'static dyn Kernel,
+    plan: OptimizationPlan,
+    g: &Tensor,
+    x: &Tensor,
+    want: &[f32],
+    tol: &[f32],
+    label: &str,
+) {
+    let machine = MachineSpec::spacemit_k1();
+    let mut ex = Executor::with_kernel(&machine, kernel).unwrap();
+    let pg = pack(g, &plan).unwrap();
+    ex.set_plan(plan);
+    let got = ex.execute(&plan.dims, &pg, x).unwrap();
+    assert_eq!(got.data().len(), want.len(), "{label}: wrong output size");
+    for (i, ((&a, &w), &t)) in got.data().iter().zip(want).zip(tol).enumerate() {
+        assert!(
+            (a - w).abs() <= t,
+            "kernel {} {label}: elem {i}: got {a}, want {w}, |diff| {} > tol {t}",
+            kernel.name(),
+            (a - w).abs()
+        );
+    }
+}
+
+fn kind_of(r: usize, k: usize) -> EinsumKind {
+    if k == 1 {
+        EinsumKind::First
+    } else if r == 1 {
+        EinsumKind::Final
+    } else {
+        EinsumKind::Middle
+    }
+}
+
+/// Run one (dims) case through every layout x blocking flavor for every
+/// registered, supported kernel.
+fn sweep_case(dims: EinsumDims, rng: &mut Rng, label: &str) {
+    let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, rng);
+    let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, rng);
+    let want = ttrv::kernels::naive_einsum(&g, &x).unwrap();
+    let tol = tolerances(&g, &x, dims.n * dims.k);
+    for &kernel in ttrv::kernels::all_kernels() {
+        if !kernel.supported() {
+            continue;
+        }
+        // Canonical (naive loop nest, kernel-independent by construction)
+        let naive = OptimizationPlan::naive(dims);
+        check_plan(kernel, naive, &g, &x, want.data(), &tol, &format!("{label} canonical"));
+        // PackedK scalar + k-vectorized
+        for vloop in [VectorLoop::None, VectorLoop::K] {
+            let p = plan_with(dims, true, vloop, RbFactors::NONE, 1);
+            check_plan(kernel, p, &g, &x, want.data(), &tol, &format!("{label} {vloop:?}"));
+        }
+        // PackedR r-vectorized across register-tile shapes, including ones
+        // that leave remainder tiles on the pinned m/b extents
+        for (rm, rb) in [(1usize, 1usize), (2, 3), (4, 2), (8, 8)] {
+            let rbf = RbFactors { rm, rb, rr: 1, rk: 1 };
+            let p = plan_with(dims, true, VectorLoop::R, rbf, 1);
+            check_plan(
+                kernel,
+                p,
+                &g,
+                &x,
+                want.data(),
+                &tol,
+                &format!("{label} R rb=({rm},{rb})"),
+            );
+        }
+        // one threaded PackedR flavor: partitioning must not break dispatch
+        let p = plan_with(dims, true, VectorLoop::R, RbFactors { rm: 4, rb: 4, rr: 1, rk: 1 }, 2);
+        check_plan(kernel, p, &g, &x, want.data(), &tol, &format!("{label} R T=2"));
+    }
+}
+
+/// All 24 pinned Table-3 shapes x 3 G layouts x every registered kernel.
+#[test]
+fn differential_suite_on_pinned_table3_shapes() {
+    let mut rng = Rng::new(0x5eed_d1ff);
+    for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+        for e in cb_suite(kind) {
+            let mut dims = e.dims;
+            dims.b = dims.b.min(B_CAP);
+            sweep_case(dims, &mut rng, &e.id);
+        }
+    }
+}
+
+/// Remainder-tile edge shapes: prime m/b (partial register tiles), r not a
+/// VL multiple (partial lane group + zero padding), k with a scalar tail
+/// for the k-vectorized kernel, and degenerate all-1 extents.
+#[test]
+fn differential_suite_on_remainder_edge_shapes() {
+    let mut rng = Rng::new(0x7a11_ed9e);
+    for (m, b, n, r, k) in [
+        (1usize, 1usize, 1usize, 1usize, 1usize),
+        (1, 1, 1, 8, 8),
+        (7, 13, 3, 8, 8),
+        (9, 5, 2, 16, 8),
+        (3, 2, 1, 8, 16),
+        (5, 3, 2, 8, 1),
+        (6, 4, 3, 1, 8),
+        (4, 6, 2, 12, 8),  // r_pad 16 > r: masked final lane group
+        (5, 4, 3, 8, 12),  // k tail of 4 past the last full VL chunk
+        (2, 9, 1, 3, 5),   // nothing divides anything
+        (17, 1, 2, 8, 8),  // single-slab batch, prime m
+    ] {
+        let dims = EinsumDims { kind: kind_of(r, k), m, b, n, r, k };
+        sweep_case(dims, &mut rng, &format!("edge {m}x{b}x{n}x{r}x{k}"));
+    }
+}
+
+/// The portable kernel is not merely close — on the non-reassociating
+/// paths (canonical, PackedK scalar, PackedR r-vectorized) it is the
+/// bitwise reference the tier-1 suites pin. Guard that here so a refactor
+/// of the portable lane loops can't silently change the reference bits
+/// while the differential suite keeps passing.
+#[test]
+fn portable_kernel_is_bitwise_reference_on_order_preserving_paths() {
+    let machine = MachineSpec::spacemit_k1();
+    let mut rng = Rng::new(0xb17_b17);
+    for (m, b, n, r, k) in
+        [(7usize, 11usize, 3usize, 8usize, 8usize), (9, 5, 2, 16, 8), (4, 6, 2, 12, 8)]
+    {
+        let dims = EinsumDims { kind: kind_of(r, k), m, b, n, r, k };
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+        let want = ttrv::kernels::naive_einsum(&g, &x).unwrap().into_vec();
+        let mut ex = Executor::with_kernel(&machine, ttrv::kernels::portable()).unwrap();
+        for (pack_g, vloop, rb) in [
+            (false, VectorLoop::None, RbFactors::NONE),
+            (true, VectorLoop::None, RbFactors::NONE),
+            (true, VectorLoop::R, RbFactors::NONE),
+            (true, VectorLoop::R, RbFactors { rm: 2, rb: 3, rr: 1, rk: 1 }),
+        ] {
+            let plan = plan_with(dims, pack_g, vloop, rb, 1);
+            let pg = pack(&g, &plan).unwrap();
+            ex.set_plan(plan);
+            let got = ex.execute(&dims, &pg, &x).unwrap().into_vec();
+            assert_eq!(got, want, "portable not bitwise on {dims:?} {vloop:?} pack={pack_g}");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Property/fuzz coverage of operand packing and the packed-buffer
+//! contracts the unsafe vector microkernels rely on.
+//!
+//! `pack` itself is safe Rust, but the vector kernels trust its two
+//! invariants with raw-pointer loads: (1) a `PackedR` buffer holds exactly
+//! `m * r_pad * n*k` lanes with every out-of-range-r lane zeroed, and
+//! (2) a `PackedK` buffer holds exactly `m * r * n*k` contiguous
+//! contraction rows. This suite fuzzes arbitrary `(r, n, m, k)` —
+//! including degenerate all-1 extents — and checks:
+//!
+//! * pack -> unpack roundtrips **bitwise** to the canonical core for all
+//!   three layouts (no value is dropped, duplicated, or rounded);
+//! * buffer lengths are exactly the layout formulas (nothing for a kernel
+//!   to read past, nothing unwritten);
+//! * `PackedR` zero-padding: every lane with `r <= lane_r < r_pad` is 0.0;
+//! * the packed buffers actually execute: every registered kernel runs the
+//!   fuzzed shapes end to end, which is what the sanitizer CI job (ASan,
+//!   `TTRV_FORCE_SCALAR` off) leans on to catch out-of-bounds reads in the
+//!   unsafe `target_feature` regions.
+
+use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
+use ttrv::kernels::{pack, Executor, GLayout, Kernel, VL};
+use ttrv::machine::MachineSpec;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{EinsumDims, EinsumKind};
+
+fn kind_of(r: usize, k: usize) -> EinsumKind {
+    if k == 1 {
+        EinsumKind::First
+    } else if r == 1 {
+        EinsumKind::Final
+    } else {
+        EinsumKind::Middle
+    }
+}
+
+fn plan_for(dims: EinsumDims, vloop: VectorLoop, pack_g: bool, rb: RbFactors) -> OptimizationPlan {
+    OptimizationPlan {
+        dims,
+        pack_g,
+        vector_loop: vloop,
+        vl: if vloop == VectorLoop::None { 1 } else { VL },
+        rb,
+        tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+        threads: 1,
+        ls_estimate: 0,
+    }
+}
+
+/// Invert a packed buffer back to the canonical `[r][n][m][k]` order.
+fn unpack(p: &ttrv::kernels::PackedG) -> Vec<f32> {
+    let (r, n, m, k) = p.dims;
+    let l = n * k;
+    let mut out = vec![0.0f32; r * n * m * k];
+    for ri in 0..r {
+        for ni in 0..n {
+            for mi in 0..m {
+                for ki in 0..k {
+                    let kk = ni * k + ki;
+                    let v = match p.layout {
+                        GLayout::Canonical => p.data[((ri * n + ni) * m + mi) * k + ki],
+                        GLayout::PackedR => {
+                            let (rv, lane) = (ri / VL, ri % VL);
+                            p.data[((mi * (p.r_pad / VL) + rv) * l + kk) * VL + lane]
+                        }
+                        GLayout::PackedK => p.data[(mi * r + ri) * l + kk],
+                    };
+                    out[((ri * n + ni) * m + mi) * k + ki] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn property_pack_unpack_roundtrips_bitwise_for_all_layouts() {
+    ttrv::testkit::check("pack -> unpack == id", 40, |d| {
+        // degenerate 1s are first-class citizens of every extent
+        let r = d.usize_in(1, 20);
+        let n = d.usize_in(1, 6);
+        let m = d.usize_in(1, 10);
+        let k = d.usize_in(1, 20);
+        let dims = EinsumDims { kind: kind_of(r, k), m, b: 2, n, r, k };
+        let mut rng = d.rng().fork();
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        for (vloop, pack_g, layout, len) in [
+            (VectorLoop::None, false, GLayout::Canonical, r * n * m * k),
+            (VectorLoop::R, true, GLayout::PackedR, m * r.div_ceil(VL) * VL * n * k),
+            (VectorLoop::K, true, GLayout::PackedK, m * r * n * k),
+            // the scalar kernel shares the PackedK layout
+            (VectorLoop::None, true, GLayout::PackedK, m * r * n * k),
+        ] {
+            let p = pack(&g, &plan_for(dims, vloop, pack_g, RbFactors::NONE))
+                .map_err(|e| e.to_string())?;
+            if p.layout != layout {
+                return Err(format!("{vloop:?}: layout {:?}, want {layout:?}", p.layout));
+            }
+            if p.data.len() != len {
+                return Err(format!("{vloop:?}: {} lanes, want {len}", p.data.len()));
+            }
+            let back = unpack(&p);
+            if back != g.data() {
+                return Err(format!("{vloop:?}: unpack is not the canonical core"));
+            }
+            if p.layout == GLayout::PackedR {
+                if p.r_pad != r.div_ceil(VL) * VL {
+                    return Err(format!("r_pad {} for r {r}", p.r_pad));
+                }
+                // every out-of-range lane must be exactly zero: the
+                // r-kernels multiply-accumulate them unconditionally
+                for mi in 0..m {
+                    for rv in 0..p.r_pad / VL {
+                        for kk in 0..n * k {
+                            let base = ((mi * (p.r_pad / VL) + rv) * (n * k) + kk) * VL;
+                            for lane in 0..VL {
+                                if rv * VL + lane < r {
+                                    continue;
+                                }
+                                let v = p.data[base + lane];
+                                if v != 0.0 {
+                                    return Err(format!("pad lane ({mi},{rv},{kk},{lane}) = {v}"));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Drive every registered kernel over fuzzed shapes end to end. Values are
+/// checked elsewhere (`kernel_reference.rs`); here the point is that the
+/// unsafe load/store regions stay inside the packed buffers for arbitrary
+/// extents — the sanitizer CI job runs this binary with ASan and
+/// `TTRV_FORCE_SCALAR` off so the vector kernels are the ones executing.
+#[test]
+fn property_every_kernel_executes_fuzzed_shapes_in_bounds() {
+    let machine = MachineSpec::spacemit_k1();
+    ttrv::testkit::check("kernels stay in bounds", 25, |d| {
+        let r = d.usize_in(1, 20);
+        let n = d.usize_in(1, 5);
+        let m = d.usize_in(1, 12);
+        let k = d.usize_in(1, 20);
+        let b = d.usize_in(1, 12);
+        let dims = EinsumDims { kind: kind_of(r, k), m, b, n, r, k };
+        let mut rng = d.rng().fork();
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+        let rbf = RbFactors {
+            rm: *d.choose(&[1usize, 2, 4, 8]),
+            rb: d.usize_in(1, 8),
+            rr: 1,
+            rk: 1,
+        };
+        for &kernel in ttrv::kernels::all_kernels() {
+            if !kernel.supported() {
+                continue;
+            }
+            let mut ex = Executor::with_kernel(&machine, kernel).map_err(|e| e.to_string())?;
+            for (vloop, pack_g, rb) in [
+                (VectorLoop::None, false, RbFactors::NONE),
+                (VectorLoop::None, true, RbFactors::NONE),
+                (VectorLoop::K, true, RbFactors::NONE),
+                (VectorLoop::R, true, rbf),
+            ] {
+                let plan = plan_for(dims, vloop, pack_g, rb);
+                let pg = pack(&g, &plan).map_err(|e| e.to_string())?;
+                ex.set_plan(plan);
+                let out = ex.execute(&dims, &pg, &x).map_err(|e| e.to_string())?;
+                if out.dims() != [m, b, r].as_slice() {
+                    return Err(format!(
+                        "kernel {} {vloop:?}: output dims {:?}",
+                        kernel.name(),
+                        out.dims()
+                    ));
+                }
+                if out.data().iter().any(|v| !v.is_finite()) {
+                    return Err(format!("kernel {} {vloop:?}: non-finite output", kernel.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}

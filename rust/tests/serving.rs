@@ -5,6 +5,11 @@
 //! the same request stream must produce byte-identical outputs no matter
 //! how many workers serve it, how many queue shards it crosses, whether
 //! work stealing fired, or how many other models share the process.
+//!
+//! Tier-1 bitwise pin: every test runs forced-scalar (portable kernel) so
+//! those byte-identity assertions hold on hosts with SIMD kernels too —
+//! vector kernels move low-order FMA bits and are verified by the
+//! tolerance suite in `kernel_reference.rs` instead.
 
 use std::time::Instant;
 
@@ -83,8 +88,16 @@ fn cfg4(max_batch: usize, max_wait_us: u64, queue_cap: usize, workers: usize) ->
     ServeConfig { max_batch, max_wait_us, queue_cap, workers, ..ServeConfig::default() }
 }
 
+/// Pin this process to the portable reference kernel (first statement of
+/// every test here; the flag is global and only ever raised, so the
+/// parallel test harness cannot race it off).
+fn force_scalar() {
+    ttrv::kernels::set_force_scalar(true);
+}
+
 #[test]
 fn served_outputs_match_dense_reference_model() {
+    force_scalar();
     let mut rng = Rng::new(21);
     let (tt_model, mut dense_model) = build_pair(&mut rng);
     let server = Server::start(tt_model, cfg4(8, 200, 128, 1));
@@ -104,6 +117,7 @@ fn served_outputs_match_dense_reference_model() {
 
 #[test]
 fn concurrent_clients_get_consistent_replies() {
+    force_scalar();
     let mut rng = Rng::new(22);
     let (tt_model, _) = build_pair(&mut rng);
     let server = std::sync::Arc::new(Server::start(tt_model, cfg4(16, 300, 512, 1)));
@@ -150,6 +164,7 @@ fn throughput_improves_with_batching() {
     // opportunistic (depends on scheduler interleaving on a 1-core host),
     // so the batching assertion is retried across bursts; losing a request
     // is never tolerated.
+    force_scalar();
     let mut rng = Rng::new(23);
     let (tt_model, _) = build_pair(&mut rng);
     let server = Server::start(tt_model, cfg4(32, 20_000, 512, 1));
@@ -255,6 +270,7 @@ fn responses_bitwise_stable_across_shards_workers_and_cohosting() {
     // worker counts, steal schedules (implied by shards < workers and
     // timing), and co-hosted neighbors. Reference: each model served alone
     // on the minimal geometry.
+    force_scalar();
     let protos: Vec<ModelEngine> =
         MATRIX_MODELS.iter().map(|&(n, s, seed)| build_tt(n, s, seed)).collect();
     let per_model = 48;
@@ -320,6 +336,7 @@ fn queue_saturation_rejects_instead_of_blocking() {
     // max_batch 1 + queue_cap 1: the server can absorb at most two of a
     // tight burst (one executing, one queued); the rest must be refused
     // immediately via the admission-control error, never by blocking.
+    force_scalar();
     let server = Server::start(slow_engine(), cfg4(1, 0, 1, 1));
     let t0 = Instant::now();
     let mut accepted = Vec::new();
@@ -355,6 +372,7 @@ fn pool_serves_concurrent_clients_consistently() {
     // the pool variant of the probe-drift test: four client threads, four
     // workers, a fixed probe input must produce bit-stable output no
     // matter which worker or batch serves it
+    force_scalar();
     let mut rng = Rng::new(24);
     let (tt_model, _) = build_pair(&mut rng);
     let server = std::sync::Arc::new(Server::start(tt_model, cfg4(16, 300, 512, 4)));
@@ -419,6 +437,7 @@ fn artifact_eviction_and_reload_keep_outputs_bitwise_stable() {
     // interleaved traffic must (a) never deadlock, and (b) produce the same
     // bits for a fixed probe before and after arbitrarily many
     // evict-reload cycles.
+    force_scalar();
     let dir = std::env::temp_dir().join(format!("ttrv_serve_evict_{}", std::process::id()));
     let paths = write_tiny_artifacts(&dir);
     let machine = MachineSpec::spacemit_k1();
@@ -481,6 +500,7 @@ fn snapshot_reflects_cohosted_models_and_traffic() {
     // the machine-readable snapshot is the ops surface of serving v2: it
     // must name every co-hosted model and carry the per-model counters that
     // metrics_for() reports
+    force_scalar();
     let protos: Vec<ModelEngine> =
         MATRIX_MODELS.iter().map(|&(n, s, seed)| build_tt(n, s, seed)).collect();
     let server = Server::start_multi(
