@@ -1,8 +1,10 @@
 #!/usr/bin/env python3
 """Schema sanity check for ttrv's machine-readable JSON artifacts:
 
-* `BENCH_kernels.json`   (schema `ttrv-bench-kernels`, v2: per-row `kernel`
-                          naming the dispatched microkernel)
+* `BENCH_kernels.json`   (schema `ttrv-bench-kernels`, v3: per-row `kernel`
+                          naming the dispatched microkernel plus a
+                          `per_kernel` sweep of every candidate — the int8
+                          family included — measured side by side)
 * `BENCH_serve.json`     (schema `ttrv-bench-serve`,   v2: per-model rows,
                           a `models` axis, and an embedded serve snapshot)
 * serve snapshot dumps   (schema `ttrv-serve-snapshot`, v2: the document
@@ -29,21 +31,26 @@ import math
 import sys
 
 EXPECTED_VERSIONS = {
-    "ttrv-bench-kernels": 2,
+    "ttrv-bench-kernels": 3,
     "ttrv-bench-serve": 2,
     "ttrv-serve-snapshot": 2,
 }
 
 # Kernel names the Rust dispatch layer can emit (dispatch.rs); the set is
 # closed per release, so an unknown name is a schema violation.
-KNOWN_KERNELS = ("portable", "avx2-fma", "neon")
+KNOWN_KERNELS = ("portable", "avx2-fma", "neon",
+                 "int8-portable", "int8-avx2", "int8-neon")
+INT8_KERNELS = ("int8-portable", "int8-avx2", "int8-neon")
 
 MEASUREMENT_KEYS = ("seconds", "min_seconds", "mad", "iters", "gflops")
 
 KERNEL_ROW_KEYS = (
     "id", "kind", "m", "b", "n", "r", "k", "flops", "kernel",
     "ours", "iree_like", "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
+    "per_kernel",
 )
+
+PER_KERNEL_KEYS = ("kernel", "int8", "measurement", "speedup_vs_ours")
 
 SERVE_ROW_KEYS = (
     "workers", "max_batch", "models", "requests", "elapsed_s", "req_per_s",
@@ -101,6 +108,29 @@ def check_kernels(doc):
             v = row[key]
             # null = flagged-degenerate measurement; a number must be finite > 0
             need(v is None or (is_finite_number(v) and v > 0), f"results[{rid}].{key}: {v!r}")
+        # v3: the per-candidate comparison sweep — every supported kernel
+        # (f32 over the packed core, int8 over its quantized shadow)
+        cells = row["per_kernel"]
+        need(isinstance(cells, list) and cells, f"results[{rid}].per_kernel: empty")
+        seen = set()
+        for j, cell in enumerate(cells):
+            cpath = f"results[{rid}].per_kernel[{j}]"
+            need(isinstance(cell, dict), f"{cpath}: not an object")
+            for key in PER_KERNEL_KEYS:
+                need(key in cell, f"{cpath}: missing '{key}'")
+            need(cell["kernel"] in KNOWN_KERNELS, f"{cpath}.kernel: {cell['kernel']!r}")
+            need(cell["kernel"] not in seen, f"{cpath}.kernel: duplicate")
+            seen.add(cell["kernel"])
+            need(isinstance(cell["int8"], bool), f"{cpath}.int8: not a bool")
+            need(cell["int8"] == (cell["kernel"] in INT8_KERNELS),
+                 f"{cpath}: int8 flag disagrees with kernel name")
+            check_measurement(cell["measurement"], f"{cpath}.measurement")
+            v = cell["speedup_vs_ours"]
+            need(v is None or (is_finite_number(v) and v > 0),
+                 f"{cpath}.speedup_vs_ours: {v!r}")
+        # the roster always contains both reference kernels
+        need("portable" in seen, f"results[{rid}].per_kernel: portable missing")
+        need("int8-portable" in seen, f"results[{rid}].per_kernel: int8-portable missing")
 
 
 def check_histogram(h, path):

@@ -18,8 +18,9 @@ import numpy as np
 
 HEADER_LEN, TOC_ENTRY_LEN, MAX_SECTIONS = 16, 24, 64
 # v2 added the optional TUNE section (id 4); v3 appended the tuning
-# kernel name as a trailing field of the TUNE grammar
-MIN_VERSION, VERSION = 1, 3
+# kernel name as a trailing field of the TUNE grammar; v4 added the
+# optional QUANT section (id 5: int8-quantized TT cores)
+MIN_VERSION, VERSION = 1, 4
 
 
 class Cur:
@@ -222,6 +223,53 @@ def decode_tune(payload, ops, version):
     return tuned, kernel
 
 
+def decode_quant(payload, ops):
+    """Mirror of reader.rs decode_quant (format v4): optional int8 cores
+    per TT op, each cross-validated against the f32 packed core it
+    shadows — same layout tag, dims and padding, one finite positive
+    scale per `m` slice, and an int8 payload of exactly the packed
+    core's element count (symmetric quantization: -128 never appears).
+    """
+    c = Cur(payload)
+    count = c.u32()
+    assert count <= len(ops), f"QUANT entry count {count}"
+    prev = -1
+    quant = {}
+    for _ in range(count):
+        idx = c.u32()
+        assert idx > prev, f"QUANT op index {idx} not strictly increasing"
+        prev = idx
+        assert idx < len(ops) and ops[idx][0] == "tt", f"QUANT target {idx}"
+        packed = ops[idx][3]
+        steps = c.u32()
+        assert steps == len(packed), f"QUANT entry for op {idx}: {steps} cores"
+        cores = []
+        for pg in packed:
+            glayout = c.u8()
+            assert glayout in (0, 1, 2), f"QUANT layout tag {glayout}"
+            assert glayout == pg["glayout"], "QUANT layout disagrees with OPS"
+            dims = tuple(c.u64() for _ in range(4))
+            r_pad = c.u64()
+            assert dims == pg["dims"] and r_pad == pg["r_pad"], \
+                "QUANT dims disagree with OPS"
+            sc = c.u64()
+            assert sc == dims[2], f"QUANT scale count {sc} != m {dims[2]}"
+            scales = c.f32s(sc)
+            assert np.all(np.isfinite(scales)) and np.all(scales > 0), \
+                "QUANT scales must be finite and positive"
+            ln = c.u64()
+            assert ln == len(pg["data"]), "QUANT payload length"
+            data = np.frombuffer(c.take(ln), dtype=np.int8).copy()
+            assert data.min(initial=0) >= -127, "symmetric int8 never emits -128"
+            # a zeroed f32 pad lane must quantize to a zeroed int8 lane
+            assert np.all(data[pg["data"] == 0.0] == 0), "QUANT pad lanes"
+            cores.append(dict(glayout=glayout, dims=dims, r_pad=r_pad,
+                              scales=scales, data=data))
+        quant[idx] = cores
+    assert c.pos == len(payload), "trailing bytes in QUANT"
+    return quant
+
+
 def forward(ops, x, meta):
     cur = np.asarray(x, dtype=np.float32)
     for op in ops:
@@ -266,10 +314,16 @@ def main():
         tuned, kernel = decode_tune(sections[4], ops, version)
     else:
         tuned, kernel = {}, None
+    # id 5 only means QUANT from format v4; older files skip it likewise
+    if version >= 4 and 5 in sections:
+        quant = decode_quant(sections[5], ops)
+    else:
+        quant = {}
     print(f"{path}: ok — model {meta['model']}, {len(ops)} ops, "
           f"{len(blob)} bytes, machine {meta['machine']}, "
           f"{len(tuned)} TT layer(s) with measured TUNE plans"
-          + (f" (tuned on kernel {kernel})" if kernel else ""))
+          + (f" (tuned on kernel {kernel})" if kernel else "")
+          + f", {len(quant)} int8 QUANT layer(s)")
     if len(sys.argv) > 2:
         x = np.array([float(v) for v in open(sys.argv[2]).read().split(",")])
         y = forward(ops, x.reshape(1, -1), meta)

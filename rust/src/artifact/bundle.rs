@@ -16,7 +16,7 @@ use crate::coordinator::{LayerOp, ModelEngine, TtFcEngine};
 use crate::dse::report::timed_solution_json;
 use crate::dse::{TimedExplored, TimedSolution};
 use crate::error::{Error, Result};
-use crate::kernels::{pack, Executor, PackedG};
+use crate::kernels::{pack, quantize, Executor, PackedG, QuantizedG};
 use crate::machine::MachineSpec;
 use crate::models;
 use crate::tensor::Tensor;
@@ -54,6 +54,12 @@ pub struct TtLayerBundle {
     /// optional TUNE section; `None` = serve with the analytic `plans`.
     /// Tuned plans never change the packed `G` layout or any result bit.
     pub tuned: Option<Vec<OptimizationPlan>>,
+    /// Int8-quantized shadow of `packed` (same chain order, same `G`
+    /// layouts — [`crate::kernels::quantize`] per core). Persisted as the
+    /// optional QUANT section (format v4); `None` = serve the f32 cores.
+    /// Quantization is deterministic, so [`verify`] can re-derive and
+    /// byte-compare this section like any other.
+    pub quant: Option<Vec<QuantizedG>>,
 }
 
 /// A dense (non-factorized) FC layer as stored in a bundle.
@@ -262,6 +268,7 @@ pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> 
                     bias: tt.bias,
                     selected: sel,
                     tuned: None, // `tune_bundle` fills this on request
+                    quant: None, // `quantize_bundle` fills this on request
                 }));
             }
             Route::Dense => {
@@ -300,7 +307,10 @@ pub struct TuneReport {
 /// [`crate::kernels::Executor::tune_chain`] over the **stored** packed
 /// cores at batch 1 and record the winners in
 /// [`TtLayerBundle::tuned`] — what `ttrv compress --tune` persists as the
-/// TUNE section.
+/// TUNE section. A layer already quantized ([`quantize_bundle`] before
+/// `--tune`) tunes through
+/// [`crate::kernels::Executor::tune_chain_q`] instead, ranking the int8
+/// kernel roster over the int8 cores it will actually serve.
 ///
 /// Plans are compiled for the bundle's target machine; the measurement
 /// itself runs on the build host (like [`crate::dse::select::rerank_measured`]),
@@ -324,7 +334,12 @@ pub fn tune_bundle(
         if let BundleOp::Tt(t) = op {
             let mut ex = Executor::new(machine);
             ex.preseed(&t.plans); // tune from the stored analytic plans
-            let winners = ex.tune_chain(&t.layout, 1, &t.packed, floor)?;
+            let winners = match &t.quant {
+                // a quantized layer serves the int8 chain, so rank the
+                // int8 kernel roster over the cores it will actually run
+                Some(q) => ex.tune_chain_q(&t.layout, 1, q, floor)?,
+                None => ex.tune_chain(&t.layout, 1, &t.packed, floor)?,
+            };
             report.layers += 1;
             report.plans += winners.len();
             t.tuned = Some(winners);
@@ -332,6 +347,119 @@ pub fn tune_bundle(
             // last layer's pick; kernels are ranked per chain, and on one
             // host every chain sees the same candidate set)
             bundle.tuned_kernel = Some(ex.kernel_name().to_string());
+        }
+    }
+    Ok(report)
+}
+
+/// Calibration batch for the measured quantization-error check in
+/// [`quantize_bundle`].
+const QUANT_CALIB_BATCH: usize = 4;
+
+/// Seed-mixing constant for the calibration inputs (a stream distinct
+/// from both the demo weights and the verify replay batch).
+const QUANT_CALIB_SEED: u64 = 0x14B1_7C57;
+
+/// Summary of a [`quantize_bundle`] pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantReport {
+    /// TT layers quantized (or measured, when not applied).
+    pub layers: usize,
+    /// Quantized cores across all layers.
+    pub cores: usize,
+    /// Worst measured max-relative-output-error across layers
+    /// ([`crate::dse::measured_quant_error`]).
+    pub max_rel_error: f64,
+    /// Resident bytes of the f32 packed cores.
+    pub f32_core_bytes: u64,
+    /// Resident bytes of their int8 shadows (payload + scales).
+    pub int8_core_bytes: u64,
+    /// Whether the int8 cores were installed in the bundle. `false` only
+    /// when a `max_error` budget was given and the measured error
+    /// exceeded it — the bundle is then left untouched.
+    pub applied: bool,
+}
+
+/// Int8-quantize every TT layer of a bundle: per layer, quantize the
+/// stored packed cores per `m` slice ([`crate::kernels::quantize`]),
+/// measure the resulting max-relative-output-error on seeded calibration
+/// inputs ([`crate::dse::measured_quant_error`] — portable kernels, fully
+/// deterministic), and install the int8 cores in
+/// [`TtLayerBundle::quant`] — what `ttrv compress --quantize` persists as
+/// the QUANT section. Each quantized layer's measured error and int8 byte
+/// count are appended to its entry in the embedded DSE report.
+///
+/// With `max_error = Some(eps)`, the int8 cores ship only when the worst
+/// layer's measured error fits the budget; otherwise the bundle is left
+/// untouched and the report says so (`applied = false`). Unlike tuning,
+/// quantization is deterministic end to end, so [`verify`] re-derives the
+/// QUANT section from a fresh compression and byte-compares it like any
+/// other section.
+pub fn quantize_bundle(
+    bundle: &mut ModelBundle,
+    machine: &MachineSpec,
+    max_error: Option<f64>,
+) -> Result<QuantReport> {
+    if machine.name != bundle.machine {
+        return Err(Error::artifact(format!(
+            "bundle was compiled for machine '{}', cannot quantize for '{}'",
+            bundle.machine, machine.name
+        )));
+    }
+    let mut report = QuantReport {
+        layers: 0,
+        cores: 0,
+        max_rel_error: 0.0,
+        f32_core_bytes: 0,
+        int8_core_bytes: 0,
+        applied: true,
+    };
+    // (op index, fc-layer index, cores, measured error) per TT layer —
+    // staged so a blown budget leaves the bundle untouched
+    let mut staged: Vec<(usize, usize, Vec<QuantizedG>, f64)> = Vec::new();
+    let mut fc_idx = 0usize;
+    for (i, op) in bundle.ops.iter().enumerate() {
+        match op {
+            BundleOp::Tt(t) => {
+                let cores: Vec<QuantizedG> = t.packed.iter().map(quantize).collect();
+                let err = crate::dse::measured_quant_error(
+                    &t.layout,
+                    &t.packed,
+                    &cores,
+                    machine,
+                    QUANT_CALIB_BATCH,
+                    bundle.seed ^ QUANT_CALIB_SEED,
+                )?;
+                report.layers += 1;
+                report.cores += cores.len();
+                report.max_rel_error = report.max_rel_error.max(err);
+                report.f32_core_bytes += t.packed.iter().map(PackedG::bytes).sum::<usize>() as u64;
+                report.int8_core_bytes +=
+                    cores.iter().map(QuantizedG::bytes).sum::<usize>() as u64;
+                staged.push((i, fc_idx, cores, err));
+                fc_idx += 1;
+            }
+            BundleOp::Dense(_) => fc_idx += 1,
+            BundleOp::Relu => {}
+        }
+    }
+    if let Some(eps) = max_error {
+        if report.max_rel_error > eps {
+            report.applied = false;
+            return Ok(report);
+        }
+    }
+    for (i, fc, cores, err) in staged {
+        let int8_bytes: usize = cores.iter().map(QuantizedG::bytes).sum();
+        if let BundleOp::Tt(t) = &mut bundle.ops[i] {
+            t.quant = Some(cores);
+        }
+        // annotate the layer's DSE report entry with the measured axis
+        if let Json::Arr(layers) = &mut bundle.report {
+            if let Some(Json::Obj(fields)) = layers.get_mut(fc) {
+                fields.insert("quant_error".to_string(), Json::from(err));
+                fields.insert("quant_core_bytes".to_string(), Json::from(int8_bytes));
+            }
         }
     }
     Ok(report)
@@ -386,7 +514,12 @@ impl ModelBundle {
             .iter()
             .map(|op| match op {
                 BundleOp::Tt(t) => {
-                    let cores: usize = t.packed.iter().map(PackedG::bytes).sum();
+                    // a quantized layer serves its int8 shadow; the f32
+                    // packed cores are not resident in the built engine
+                    let cores: usize = match &t.quant {
+                        Some(q) => q.iter().map(QuantizedG::bytes).sum(),
+                        None => t.packed.iter().map(PackedG::bytes).sum(),
+                    };
                     (cores + t.bias.as_ref().map_or(0, Vec::len) * 4) as u64
                 }
                 BundleOp::Dense(d) => {
@@ -403,7 +536,10 @@ impl ModelBundle {
     /// Layers carrying persisted measured plans ([`TtLayerBundle::tuned`])
     /// pre-seed those instead of the analytic plans — the output is
     /// bitwise-identical either way (tuning only moves RB factors and
-    /// thread counts), only the speed differs.
+    /// thread counts), only the speed differs. Layers carrying int8 cores
+    /// ([`TtLayerBundle::quant`]) serve those instead of the f32 cores,
+    /// on the int8 kernel family — ~4x fewer resident bytes, output
+    /// within the quantization error the bundle's report records.
     ///
     /// The target must be the machine the bundle was compiled for
     /// (plans and packed layouts are machine-specific).
@@ -429,13 +565,23 @@ impl ModelBundle {
                         )));
                     }
                     width = t.layout.m_total() as usize;
-                    ops.push(LayerOp::Tt(TtFcEngine::from_parts(
-                        t.layout.clone(),
-                        t.packed.clone(),
-                        t.tuned.as_deref().unwrap_or(&t.plans),
-                        t.bias.clone(),
-                        machine,
-                    )?));
+                    let plans = t.tuned.as_deref().unwrap_or(&t.plans);
+                    ops.push(LayerOp::Tt(match &t.quant {
+                        Some(q) => TtFcEngine::from_quant_parts(
+                            t.layout.clone(),
+                            q.clone(),
+                            plans,
+                            t.bias.clone(),
+                            machine,
+                        )?,
+                        None => TtFcEngine::from_parts(
+                            t.layout.clone(),
+                            t.packed.clone(),
+                            plans,
+                            t.bias.clone(),
+                            machine,
+                        )?,
+                    }));
                 }
                 BundleOp::Dense(d) => {
                     if d.w.dims()[1] != width {
@@ -485,6 +631,13 @@ pub struct VerifyReport {
 /// byte — but the replay half still runs the loaded engine on its tuned
 /// plans, so verify also re-proves that measured plans leave every output
 /// bit where the analytic plans put it.
+///
+/// The QUANT section, by contrast, is **not** stripped: quantization is
+/// deterministic, so when the loaded bundle carries int8 cores the fresh
+/// compression is re-quantized ([`quantize_bundle`], no budget) and the
+/// QUANT bytes — scales, payloads and the report's error annotations —
+/// must match exactly. The replay then runs both engines on the int8
+/// path and still requires bitwise-identical outputs.
 pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> Result<VerifyReport> {
     // a machine mismatch must read as exactly that, not as a byte-level
     // "does not match a fresh compression" corruption diagnosis
@@ -494,7 +647,10 @@ pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> R
             bundle.machine, machine.name
         )));
     }
-    let fresh = compress(&bundle.spec(), machine, cfg)?;
+    let mut fresh = compress(&bundle.spec(), machine, cfg)?;
+    if bundle.ops.iter().any(|op| matches!(op, BundleOp::Tt(t) if t.quant.is_some())) {
+        quantize_bundle(&mut fresh, machine, None)?;
+    }
     let mut sans_tune = bundle.clone();
     for op in &mut sans_tune.ops {
         if let BundleOp::Tt(t) = op {
@@ -624,6 +780,67 @@ mod tests {
         let mut broken = bundle;
         broken.ops.clear();
         assert!(matches!(broken.build_engine(&k1()), Err(Error::Artifact(_))));
+    }
+
+    #[test]
+    fn quantize_bundle_installs_int8_within_budget_and_verifies() {
+        let cfg = DseConfig::default();
+        let mut bundle = compress(&lenet_spec(), &k1(), &cfg).unwrap();
+        let f32_engine_bytes = bundle.engine_bytes();
+        let report = quantize_bundle(&mut bundle, &k1(), None).unwrap();
+        assert!(report.applied);
+        assert_eq!(report.layers, 2);
+        assert!(report.cores > 0);
+        assert!(
+            report.max_rel_error > 0.0 && report.max_rel_error < 0.05,
+            "measured error: {}",
+            report.max_rel_error
+        );
+        // the tentpole acceptance bar: int8 core bytes shrink >= 3.5x,
+        // and the registry-visible engine bytes shrink with them
+        assert!(
+            report.f32_core_bytes as f64 / report.int8_core_bytes as f64 >= 3.5,
+            "{} vs {} core bytes",
+            report.f32_core_bytes,
+            report.int8_core_bytes
+        );
+        assert!(bundle.engine_bytes() < f32_engine_bytes / 3);
+        // the report JSON now carries the error axis per TT layer
+        let layers = bundle.report.as_arr().unwrap();
+        assert!(layers[0].get("quant_error").is_some());
+        assert!(layers[0].get("quant_core_bytes").is_some());
+        // quantization is deterministic: verify re-derives the QUANT
+        // section from a fresh compression and byte-compares it
+        let vr = verify(&bundle, &k1(), &cfg).unwrap();
+        assert_eq!(vr.tt_layers, 2);
+        // wrong machine is a typed artifact error
+        let err = quantize_bundle(&mut bundle, &MachineSpec::host(), None).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+    }
+
+    #[test]
+    fn quantize_budget_gates_shipping_int8() {
+        let cfg = DseConfig::default();
+        let mut bundle = compress(&lenet_spec(), &k1(), &cfg).unwrap();
+        // measure once to learn the actual error, then re-run under a
+        // budget below it: the bundle must come back untouched
+        let probe = quantize_bundle(&mut bundle.clone(), &k1(), None).unwrap();
+        let tight = probe.max_rel_error / 10.0;
+        let report = quantize_bundle(&mut bundle, &k1(), Some(tight)).unwrap();
+        assert!(!report.applied);
+        assert_eq!(report.max_rel_error, probe.max_rel_error);
+        assert!(bundle
+            .ops
+            .iter()
+            .all(|op| !matches!(op, BundleOp::Tt(t) if t.quant.is_some())));
+        assert!(bundle.report.as_arr().unwrap()[0].get("quant_error").is_none());
+        // a generous budget ships
+        let report = quantize_bundle(&mut bundle, &k1(), Some(0.5)).unwrap();
+        assert!(report.applied);
+        assert!(bundle
+            .ops
+            .iter()
+            .any(|op| matches!(op, BundleOp::Tt(t) if t.quant.is_some())));
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "TTRV"
-//! 4       4     u32 format version (currently 3; reader accepts 1..=3)
+//! 4       4     u32 format version (currently 4; reader accepts 1..=4)
 //! 8       4     u32 section count (<= 64)
 //! 12      4     u32 CRC-32 of the TOC bytes
 //! 16      24*c  TOC entries: { u32 id, u32 payload CRC-32,
@@ -50,8 +50,9 @@ pub const MAGIC: [u8; 4] = *b"TTRV";
 /// Version 2 added the optional TUNE section ([`SEC_TUNE`]); version 3
 /// appended the optional tuning-kernel name to the TUNE payload (the
 /// microkernel `tune_chain` measured its winners on — observability only,
-/// never used for load-time dispatch).
-pub const FORMAT_VERSION: u32 = 3;
+/// never used for load-time dispatch); version 4 added the optional QUANT
+/// section ([`SEC_QUANT`]) carrying int8-quantized TT cores.
+pub const FORMAT_VERSION: u32 = 4;
 
 /// Oldest format version the reader still accepts (version 1 bundles have
 /// no TUNE section and decode with analytic plans only).
@@ -79,6 +80,13 @@ pub const SEC_REPORT: u32 = 3;
 /// `ttrv compress --tune` ([`crate::kernels::Executor::tune_chain`]).
 /// Absent = serve with the analytic plans in the OPS section.
 pub const SEC_TUNE: u32 = 4;
+/// Section id (format version >= 4, optional): int8-quantized TT cores —
+/// per-`m`-slice scales plus the int8 payload for every packed core of
+/// every TT layer, the output of `ttrv compress --quantize`
+/// ([`crate::kernels::quantize`]). Absent = serve the f32 packed cores in
+/// the OPS section. Quantization is deterministic, so the section is
+/// always cross-validated against the OPS cores on load.
+pub const SEC_QUANT: u32 = 5;
 
 // CRC-32 (IEEE) lookup table, built at compile time.
 const CRC_TABLE: [u32; 256] = {

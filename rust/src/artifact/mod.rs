@@ -18,7 +18,12 @@
 //!   measured-autotuned plans in the TUNE section ([`tune_bundle`] /
 //!   [`crate::kernels::Executor::tune_chain`]) — warm-started engines
 //!   then serve from *measured* plans, with outputs bitwise-identical to
-//!   the analytic path (tuning only moves RB factors / thread counts).
+//!   the analytic path (tuning only moves RB factors / thread counts);
+//! * optionally (format v4, `ttrv compress --quantize`): int8-quantized
+//!   TT cores in the QUANT section ([`quantize_bundle`]) — warm-started
+//!   engines then serve the int8 chain (f32 accumulation, per-`m`-slice
+//!   scales) with ~4x fewer resident core bytes, gated by a *measured*
+//!   quantization-error budget (`--max-quant-error`).
 //!
 //! Serving then warm-starts from the file
 //! ([`crate::coordinator::Server::from_artifact`] /
@@ -39,8 +44,8 @@ pub mod writer;
 pub mod reader;
 
 pub use bundle::{
-    compress, tune_bundle, verify, BundleOp, CompressSpec, DenseLayerBundle, ModelBundle,
-    TtLayerBundle, TuneReport, VerifyReport,
+    compress, quantize_bundle, tune_bundle, verify, BundleOp, CompressSpec, DenseLayerBundle,
+    ModelBundle, QuantReport, TtLayerBundle, TuneReport, VerifyReport,
 };
 pub use format::{FORMAT_VERSION, MIN_FORMAT_VERSION};
 pub use reader::{list_sections, read_bundle_bytes, read_bundle_file, SectionInfo};

@@ -11,7 +11,7 @@ use std::path::Path;
 use crate::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
 use crate::dse::{Solution, TimedSolution};
 use crate::error::{Error, Result};
-use crate::kernels::{GLayout, PackedG, VL};
+use crate::kernels::{GLayout, PackedG, QuantizedG, VL};
 use crate::tensor::Tensor;
 use crate::ttd::cost::{EinsumDims, EinsumKind};
 use crate::ttd::TtLayout;
@@ -354,6 +354,7 @@ fn decode_ops(payload: &[u8]) -> Result<Vec<BundleOp>> {
                         speedup,
                     },
                     tuned: None, // filled by the TUNE section, when present
+                    quant: None, // filled by the QUANT section, when present
                 })
             }
             OP_DENSE => {
@@ -472,6 +473,105 @@ fn decode_tune(payload: &[u8], version: u32, ops: &mut [BundleOp]) -> Result<Opt
     Ok(tuned_kernel)
 }
 
+/// Decode one quantized core, cross-validating every structural field
+/// against the already-decoded f32 packed core it shadows: same layout,
+/// dims and padding, one scale per `m` slice, and an int8 payload of
+/// exactly the packed core's element count. Quantization never changes
+/// the memory layout — a QUANT entry that disagrees with its OPS core is
+/// corrupt by definition.
+fn decode_quant_core(c: &mut Cursor<'_>, packed: &PackedG) -> Result<QuantizedG> {
+    let layout = match c.u8()? {
+        0 => GLayout::Canonical,
+        1 => GLayout::PackedR,
+        2 => GLayout::PackedK,
+        t => return Err(c.invalid(format!("quantized G layout tag {t}"))),
+    };
+    let r = c.usize_capped(DIM_CAP, "quant core r")?;
+    let n = c.usize_capped(DIM_CAP, "quant core n")?;
+    let m = c.usize_capped(DIM_CAP, "quant core m")?;
+    let k = c.usize_capped(DIM_CAP, "quant core k")?;
+    let r_pad = c.usize_capped(DIM_CAP, "quant core r_pad")?;
+    if layout != packed.layout || (r, n, m, k) != packed.dims || r_pad != packed.r_pad {
+        return Err(c.invalid(format!(
+            "quantized core ({layout:?}, dims ({r}, {n}, {m}, {k}), r_pad {r_pad}) \
+             does not match its packed core ({:?}, dims {:?}, r_pad {})",
+            packed.layout, packed.dims, packed.r_pad
+        )));
+    }
+    let scale_count = c.count(4, "quant scales")?;
+    if scale_count != m {
+        return Err(c.invalid(format!(
+            "quantized core has {scale_count} scales for m = {m}"
+        )));
+    }
+    let scales = c.f32s(scale_count)?;
+    for (mi, &s) in scales.iter().enumerate() {
+        if !(s.is_finite() && s > 0.0) {
+            return Err(c.invalid(format!("quant scale {s} for slice {mi} is not positive")));
+        }
+    }
+    let data_len = c.count(1, "quant core data")?;
+    if data_len != packed.data.len() {
+        return Err(c.invalid(format!(
+            "quantized core holds {data_len} values, packed core holds {}",
+            packed.data.len()
+        )));
+    }
+    let data = c.take(data_len)?.iter().map(|&b| b as i8).collect();
+    Ok(QuantizedG { layout, dims: (r, n, m, k), r_pad, scales, data })
+}
+
+/// Decode the optional QUANT section (format v4) into the already-decoded
+/// ops. Same keying and ordering rules as [`decode_tune`]: entries
+/// reference TT ops only, in strictly increasing op order, one quantized
+/// core per chain step, each cross-validated against its OPS packed core.
+fn decode_quant(payload: &[u8], ops: &mut [BundleOp]) -> Result<()> {
+    let mut c = Cursor::new(payload, "QUANT section");
+    let count = c.u32()? as usize;
+    if count > ops.len() {
+        return Err(c.invalid(format!(
+            "QUANT entry count {count} exceeds the {} ops",
+            ops.len()
+        )));
+    }
+    let mut prev: Option<u32> = None;
+    for _ in 0..count {
+        let idx = c.u32()?;
+        if prev.is_some_and(|p| idx <= p) {
+            return Err(c.invalid(format!("QUANT op index {idx} not strictly increasing")));
+        }
+        prev = Some(idx);
+        let t = match ops.get_mut(idx as usize) {
+            Some(BundleOp::Tt(t)) => t,
+            Some(_) => {
+                return Err(c.invalid(format!("QUANT entry targets non-TT op {idx}")));
+            }
+            None => {
+                return Err(c.invalid(format!("QUANT op index {idx} out of range")));
+            }
+        };
+        let steps = c.u32()? as usize;
+        if steps != t.packed.len() {
+            return Err(c.invalid(format!(
+                "QUANT entry for op {idx} has {steps} cores but the layer has {}",
+                t.packed.len()
+            )));
+        }
+        let mut cores = Vec::with_capacity(steps);
+        for packed in &t.packed {
+            cores.push(decode_quant_core(&mut c, packed)?);
+        }
+        t.quant = Some(cores);
+    }
+    if !c.is_empty() {
+        return Err(c.invalid(format!(
+            "{} trailing bytes after the last QUANT entry",
+            c.remaining()
+        )));
+    }
+    Ok(())
+}
+
 fn meta_err(msg: impl Into<String>) -> Error {
     Error::artifact(format!("META section: {}", msg.into()))
 }
@@ -555,6 +655,14 @@ pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
     if version >= 2 {
         if let Some((_, _, payload)) = sections.iter().find(|(sid, _, _)| *sid == SEC_TUNE) {
             bundle.tuned_kernel = decode_tune(payload, version, &mut bundle.ops)?;
+        }
+    }
+    // Optional QUANT section: int8 cores; absent -> every layer's `quant`
+    // stays None and engines serve the f32 packed cores. Same versioning
+    // rule as TUNE: id 5 only *means* QUANT from format version 4.
+    if version >= 4 {
+        if let Some((_, _, payload)) = sections.iter().find(|(sid, _, _)| *sid == SEC_QUANT) {
+            decode_quant(payload, &mut bundle.ops)?;
         }
     }
     Ok(bundle)

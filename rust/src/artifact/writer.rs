@@ -8,7 +8,7 @@ use std::path::Path;
 
 use crate::compiler::plan::{LoopOrder, OptimizationPlan, VectorLoop};
 use crate::error::Result;
-use crate::kernels::{GLayout, PackedG};
+use crate::kernels::{GLayout, PackedG, QuantizedG};
 use crate::ttd::cost::EinsumKind;
 use crate::ttd::TtLayout;
 use crate::util::json::{self, Json};
@@ -89,6 +89,26 @@ pub(super) fn encode_packed(out: &mut Vec<u8>, g: &PackedG) {
     }
     put_u64(out, g.data.len() as u64);
     put_f32s(out, &g.data);
+}
+
+pub(super) fn encode_quant_core(out: &mut Vec<u8>, q: &QuantizedG) {
+    put_u8(out, match q.layout {
+        GLayout::Canonical => 0,
+        GLayout::PackedR => 1,
+        GLayout::PackedK => 2,
+    });
+    let (r, n, m, k) = q.dims;
+    for v in [r, n, m, k, q.r_pad] {
+        put_u64(out, v as u64);
+    }
+    put_u64(out, q.scales.len() as u64);
+    put_f32s(out, &q.scales);
+    put_u64(out, q.data.len() as u64);
+    // i8 payload stored as raw two's-complement bytes
+    out.reserve(q.data.len());
+    for &v in &q.data {
+        out.push(v as u8);
+    }
 }
 
 fn encode_ops(bundle: &ModelBundle) -> Vec<u8> {
@@ -184,6 +204,45 @@ fn encode_tune(bundle: &ModelBundle) -> Option<Vec<u8>> {
     Some(out)
 }
 
+/// The optional QUANT section (format v4): int8-quantized cores per TT
+/// layer, keyed by op index exactly like TUNE. `None` when no layer
+/// carries quantized cores — the section is then omitted entirely, so an
+/// unquantized bundle's encoding is unchanged from format v3.
+fn encode_quant(bundle: &ModelBundle) -> Option<Vec<u8>> {
+    let entries: Vec<(u32, &[QuantizedG])> = bundle
+        .ops
+        .iter()
+        .enumerate()
+        .filter_map(|(i, op)| match op {
+            BundleOp::Tt(t) => t.quant.as_ref().map(|cores| {
+                // same loud construction-time check as plans/packed/tuned
+                assert_eq!(
+                    cores.len(),
+                    t.packed.len(),
+                    "TtLayerBundle has {} quantized cores but {} packed cores",
+                    cores.len(),
+                    t.packed.len()
+                );
+                (i as u32, cores.as_slice())
+            }),
+            _ => None,
+        })
+        .collect();
+    if entries.is_empty() {
+        return None;
+    }
+    let mut out = Vec::new();
+    put_u32(&mut out, entries.len() as u32);
+    for (idx, cores) in entries {
+        put_u32(&mut out, idx);
+        put_u32(&mut out, cores.len() as u32);
+        for q in cores {
+            encode_quant_core(&mut out, q);
+        }
+    }
+    Some(out)
+}
+
 fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
     let shapes = Json::Arr(
         bundle
@@ -209,8 +268,9 @@ fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
 ///
 /// # Panics
 ///
-/// If a hand-built `TtLayerBundle` has differing `plans`/`packed`/`tuned`
-/// lengths (invariants every constructor in this crate maintains).
+/// If a hand-built `TtLayerBundle` has differing
+/// `plans`/`packed`/`tuned`/`quant` lengths (invariants every constructor
+/// in this crate maintains).
 pub fn write_bundle(bundle: &ModelBundle) -> Vec<u8> {
     let mut sections: Vec<(u32, Vec<u8>)> = vec![
         (SEC_META, encode_meta(bundle)),
@@ -219,6 +279,9 @@ pub fn write_bundle(bundle: &ModelBundle) -> Vec<u8> {
     ];
     if let Some(tune) = encode_tune(bundle) {
         sections.push((SEC_TUNE, tune));
+    }
+    if let Some(quant) = encode_quant(bundle) {
+        sections.push((SEC_QUANT, quant));
     }
     let mut toc = Vec::with_capacity(sections.len() * TOC_ENTRY_LEN);
     let mut offset = (HEADER_LEN + sections.len() * TOC_ENTRY_LEN) as u64;

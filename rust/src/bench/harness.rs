@@ -29,7 +29,7 @@ use crate::compiler::{cb_suite, CbEntry};
 use crate::config::ServeConfig;
 use crate::coordinator::{InferenceRequest, ModelEngine, Server};
 use crate::error::{Error, Result};
-use crate::kernels::Executor;
+use crate::kernels::{dispatch, quantize, Executor};
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
 use crate::ttd::cost::{EinsumDims, EinsumKind};
@@ -42,8 +42,12 @@ use super::{measure, BenchCfg, Measurement};
 /// Version of the `BENCH_kernels.json` schema; bump on any field change
 /// so the trajectory tooling can tell report generations apart. v2 added
 /// the per-row `kernel` key: which microkernel the `ours` executor
-/// dispatched to on the measuring host.
-pub const BENCH_KERNELS_SCHEMA_VERSION: u64 = 2;
+/// dispatched to on the measuring host. v3 added the per-row `per_kernel`
+/// array: the same instance measured on every compiled-in candidate
+/// kernel — f32 candidates over the packed core, int8 candidates over its
+/// quantized shadow — so one report compares dispatch choices side by
+/// side.
+pub const BENCH_KERNELS_SCHEMA_VERSION: u64 = 3;
 
 /// Version of the `BENCH_serve.json` schema. v2 (serving v2): per-model
 /// result rows, a `models` axis on every point, and an embedded metrics
@@ -70,6 +74,20 @@ pub fn kind_tag(kind: EinsumKind) -> &'static str {
     }
 }
 
+/// One cell of the schema-v3 per-kernel comparison: one candidate
+/// microkernel measured on one pinned einsum instance.
+#[derive(Debug, Clone)]
+pub struct KernelCell {
+    /// The candidate kernel's stable name (`"portable"`, `"avx2-fma"`,
+    /// `"int8-portable"`, ...).
+    pub kernel: &'static str,
+    /// Whether the cell ran the int8 path (quantized core, f32
+    /// accumulation) rather than the f32 packed core.
+    pub int8: bool,
+    /// The measurement.
+    pub measurement: Measurement,
+}
+
 /// One kernel-sweep row: the three implementations measured on one pinned
 /// einsum instance.
 #[derive(Debug, Clone)]
@@ -87,6 +105,10 @@ pub struct KernelRow {
     pub iree_like: Measurement,
     /// The Pluto-like baseline (polyhedral tiling, scalar).
     pub pluto_like: Measurement,
+    /// Schema v3: every candidate kernel this host can run, measured on
+    /// the same instance (f32 roster over `pg`, int8 roster over its
+    /// quantized shadow).
+    pub per_kernel: Vec<KernelCell>,
 }
 
 impl KernelRow {
@@ -133,7 +155,37 @@ fn kernel_row(
     let pluto = measure(&format!("{id} pluto-like"), dims.flops(), cfg, || {
         ex.execute_pluto_like(&g, &x).expect("validated kernel");
     });
-    Ok(KernelRow { id, dims, kernel: ex.kernel_name(), ours, iree_like: iree, pluto_like: pluto })
+    // schema v3: the same instance on every candidate kernel, so the
+    // report compares dispatch choices (portable vs vector, f32 vs int8)
+    // side by side on one host. Int8 cells run the quantized shadow of
+    // the *same* packed core — identical layout, ~4x fewer core bytes.
+    let qg = quantize(&pg);
+    let mut per_kernel = Vec::new();
+    for k in dispatch::candidate_kernels() {
+        let mut ex_k = Executor::with_kernel(&machine, k)?;
+        ex_k.execute(&dims, &pg, &x)?;
+        let m = measure(&format!("{id} {}", k.name()), dims.flops(), cfg, || {
+            ex_k.execute(&dims, &pg, &x).expect("validated kernel");
+        });
+        per_kernel.push(KernelCell { kernel: k.name(), int8: false, measurement: m });
+    }
+    for k in dispatch::candidate_kernels_q() {
+        let mut ex_k = Executor::with_kernel(&machine, k)?;
+        ex_k.execute_q(&dims, &qg, &x)?;
+        let m = measure(&format!("{id} {}", k.name()), dims.flops(), cfg, || {
+            ex_k.execute_q(&dims, &qg, &x).expect("validated kernel");
+        });
+        per_kernel.push(KernelCell { kernel: k.name(), int8: true, measurement: m });
+    }
+    Ok(KernelRow {
+        id,
+        dims,
+        kernel: ex.kernel_name(),
+        ours,
+        iree_like: iree,
+        pluto_like: pluto,
+        per_kernel,
+    })
 }
 
 /// Measure an explicit entry list (the testable core of the sweep).
@@ -194,6 +246,27 @@ pub fn kernel_report_json(rows: &[KernelRow], quick: bool) -> Json {
                 ("pluto_like", measurement_json(&r.pluto_like)),
                 ("speedup_vs_iree", opt_f64(r.speedup(&r.iree_like))),
                 ("speedup_vs_pluto", opt_f64(r.speedup(&r.pluto_like))),
+                (
+                    "per_kernel",
+                    Json::Arr(
+                        r.per_kernel
+                            .iter()
+                            .map(|c| {
+                                let s = r.ours.seconds / c.measurement.seconds;
+                                let vs_ours = (c.measurement.seconds > 0.0
+                                    && r.ours.seconds > 0.0
+                                    && s.is_finite())
+                                .then_some(s);
+                                Json::obj(vec![
+                                    ("kernel", Json::from(c.kernel)),
+                                    ("int8", Json::from(c.int8)),
+                                    ("measurement", measurement_json(&c.measurement)),
+                                    ("speedup_vs_ours", opt_f64(vs_ours)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ])
         })
         .collect();
@@ -448,6 +521,16 @@ mod tests {
             assert!(m.seconds.is_finite() && m.seconds >= 0.0);
             assert!(m.min.is_finite());
         }
+        // schema v3: the candidate comparison always includes both
+        // portable references (every host runs them), int8 cells flagged
+        assert!(r.per_kernel.iter().any(|c| c.kernel == crate::kernels::PORTABLE_KERNEL_NAME
+            && !c.int8));
+        assert!(r.per_kernel.iter().any(
+            |c| c.kernel == crate::kernels::INT8_PORTABLE_KERNEL_NAME && c.int8
+        ));
+        for c in &r.per_kernel {
+            assert!(c.measurement.seconds.is_finite() && c.measurement.seconds >= 0.0);
+        }
     }
 
     #[test]
@@ -469,6 +552,7 @@ mod tests {
             for key in [
                 "id", "kind", "m", "b", "n", "r", "k", "flops", "kernel", "ours",
                 "iree_like", "pluto_like", "speedup_vs_iree", "speedup_vs_pluto",
+                "per_kernel",
             ] {
                 assert!(r.get(key).is_some(), "missing {key}");
             }
@@ -481,6 +565,21 @@ mod tests {
                 let m = r.get(impl_key).unwrap();
                 for key in ["seconds", "min_seconds", "mad", "iters", "gflops"] {
                     assert!(m.get(key).is_some(), "{impl_key} missing {key}");
+                }
+            }
+            let cells = r.get("per_kernel").unwrap().as_arr().unwrap();
+            assert!(!cells.is_empty());
+            for c in cells {
+                let name = c.get("kernel").unwrap().as_str().unwrap();
+                assert!(
+                    crate::kernels::all_kernels().iter().any(|k| k.name() == name),
+                    "per_kernel cell {name:?} is not a registered kernel"
+                );
+                assert!(c.get("int8").unwrap().as_bool().is_some());
+                assert!(c.get("speedup_vs_ours").is_some());
+                let m = c.get("measurement").unwrap();
+                for key in ["seconds", "min_seconds", "mad", "iters", "gflops"] {
+                    assert!(m.get(key).is_some(), "per_kernel missing {key}");
                 }
             }
         }
@@ -571,6 +670,13 @@ mod tests {
             ours: m(0.0),
             iree_like: m(1.0),
             pluto_like: m(1.0),
+            // a degenerate per-kernel cell too: zero `ours` must emit a
+            // null speedup_vs_ours, never NaN/inf
+            per_kernel: vec![KernelCell {
+                kernel: crate::kernels::INT8_PORTABLE_KERNEL_NAME,
+                int8: true,
+                measurement: m(1.0),
+            }],
         };
         assert_eq!(row.speedup(&row.iree_like), None);
         // a zero *baseline* is equally degenerate: Some(0.0) would fail
@@ -584,6 +690,7 @@ mod tests {
         let doc = kernel_report_json(&[row], false);
         let text = json::to_string(&doc);
         assert!(text.contains("\"speedup_vs_iree\":null"), "{text}");
+        assert!(text.contains("\"speedup_vs_ours\":null"), "{text}");
         json::parse(&text).unwrap();
     }
 }

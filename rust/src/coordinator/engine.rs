@@ -11,19 +11,28 @@ use std::sync::Arc;
 
 use crate::baselines::dense::DenseFc;
 use crate::error::{Error, Result};
-use crate::kernels::{Executor, PackedG};
+use crate::kernels::{select_int8, Executor, PackedG, QuantizedG};
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
 use crate::ttd::cost::einsum_chain;
 use crate::ttd::decompose::TtCores;
 
+/// The resident core buffers of a compiled TT FC layer: the f32 packed
+/// chain, or its int8-quantized shadow (same `G` layouts, ~4x fewer
+/// bytes — [`crate::kernels::quantize`]).
+enum CoreStore {
+    /// F32 packed core per chain step, processing order (t = d-1 .. 0).
+    F32(Vec<PackedG>),
+    /// Int8 core + per-`m`-slice scales per chain step, same order.
+    Int8(Vec<QuantizedG>),
+}
+
 /// The immutable, thread-shared half of a compiled TT FC layer: layout,
-/// packed cores and bias. Workers share one instance behind an `Arc`;
+/// core buffers and bias. Workers share one instance behind an `Arc`;
 /// each drives it with its own [`Executor`].
 struct TtFcShared {
     layout: crate::ttd::TtLayout,
-    /// Packed core per chain step, in processing order (t = d-1 .. 0).
-    packed: Vec<PackedG>,
+    cores: CoreStore,
     bias: Option<Vec<f32>>,
 }
 
@@ -41,7 +50,14 @@ impl TtFcShared {
             )));
         }
         let batch = dims[0];
-        let final_slab = executor.run_tt_chain(&self.layout, batch, &self.packed, x.data())?;
+        let final_slab = match &self.cores {
+            CoreStore::F32(packed) => {
+                executor.run_tt_chain(&self.layout, batch, packed, x.data())?
+            }
+            CoreStore::Int8(quant) => {
+                executor.run_tt_chain_q(&self.layout, batch, quant, x.data())?
+            }
+        };
         // final layout (M, B) row-major -> (B, M)
         let mut y = Tensor::zeros(vec![batch, m_total]);
         {
@@ -95,7 +111,7 @@ impl TtFcEngine {
         Ok(TtFcEngine {
             shared: Arc::new(TtFcShared {
                 layout: tt.layout.clone(),
-                packed,
+                cores: CoreStore::F32(packed),
                 bias: tt.bias.clone(),
             }),
             executor,
@@ -157,7 +173,68 @@ impl TtFcEngine {
         let mut executor = Executor::new(machine);
         executor.preseed(plans);
         Ok(TtFcEngine {
-            shared: Arc::new(TtFcShared { layout, packed, bias }),
+            shared: Arc::new(TtFcShared { layout, cores: CoreStore::F32(packed), bias }),
+            executor,
+        })
+    }
+
+    /// [`TtFcEngine::from_parts`] for an int8-quantized layer: the chain's
+    /// quantized cores (artifact QUANT section) replace the f32 packed
+    /// cores as the resident buffers — ~4x fewer bytes — and the executor
+    /// dispatches the int8 kernel family ([`select_int8`]: the best
+    /// supported int8 microkernel, int8-portable under force-scalar).
+    /// Same validation as the f32 path, plus one scale per `m` slice.
+    pub fn from_quant_parts(
+        layout: crate::ttd::TtLayout,
+        quant: Vec<QuantizedG>,
+        plans: &[crate::compiler::OptimizationPlan],
+        bias: Option<Vec<f32>>,
+        machine: &MachineSpec,
+    ) -> Result<TtFcEngine> {
+        let chain = einsum_chain(&layout, 1);
+        if quant.len() != chain.len() || plans.len() != chain.len() {
+            return Err(Error::artifact(format!(
+                "TT layer {} needs {} chain steps, got {} quantized cores / {} plans",
+                layout.describe(),
+                chain.len(),
+                quant.len(),
+                plans.len()
+            )));
+        }
+        for (step, dims) in chain.iter().enumerate() {
+            if plans[step].dims != *dims {
+                return Err(Error::artifact(format!(
+                    "step {step}: stored plan is for {:?}, chain expects {:?}",
+                    plans[step].dims, dims
+                )));
+            }
+            if quant[step].dims != (dims.r, dims.n, dims.m, dims.k) {
+                return Err(Error::artifact(format!(
+                    "step {step}: quantized core dims {:?} do not match chain {:?}",
+                    quant[step].dims, dims
+                )));
+            }
+            if quant[step].scales.len() != dims.m {
+                return Err(Error::artifact(format!(
+                    "step {step}: quantized core has {} scales for m = {}",
+                    quant[step].scales.len(),
+                    dims.m
+                )));
+            }
+        }
+        if let Some(b) = &bias {
+            if b.len() != layout.m_total() as usize {
+                return Err(Error::artifact(format!(
+                    "bias length {} != layer width {}",
+                    b.len(),
+                    layout.m_total()
+                )));
+            }
+        }
+        let mut executor = Executor::with_kernel(machine, select_int8())?;
+        executor.preseed(plans);
+        Ok(TtFcEngine {
+            shared: Arc::new(TtFcShared { layout, cores: CoreStore::Int8(quant), bias }),
             executor,
         })
     }
@@ -317,7 +394,10 @@ impl ModelEngine {
             .iter()
             .map(|op| match op {
                 SharedOp::Tt(tt) => {
-                    let cores: usize = tt.packed.iter().map(PackedG::bytes).sum();
+                    let cores: usize = match &tt.cores {
+                        CoreStore::F32(p) => p.iter().map(PackedG::bytes).sum(),
+                        CoreStore::Int8(q) => q.iter().map(QuantizedG::bytes).sum(),
+                    };
                     let bias = tt.bias.as_ref().map_or(0, |b| b.len() * 4);
                     (cores + bias) as u64
                 }
@@ -521,6 +601,67 @@ mod tests {
             TtFcEngine::from_parts(layout, packed, &plans, Some(vec![0.0; 10]), &machine)
                 .unwrap_err();
         assert!(matches!(err, Error::Artifact(_)), "{err}");
+    }
+
+    #[test]
+    fn from_quant_parts_tracks_f32_and_shrinks_resident_bytes() {
+        let mut rng = Rng::new(106);
+        let layout = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        let mut tt = random_cores(&layout, &mut rng);
+        tt.bias = Some(vec![0.1; 300]);
+        let machine = MachineSpec::spacemit_k1();
+        let mut ex = Executor::new(&machine);
+        let chain = einsum_chain(&layout, 1);
+        let mut plans = Vec::new();
+        let mut packed = Vec::new();
+        for (step, dims) in chain.iter().enumerate() {
+            let plan = ex.plan(dims).unwrap();
+            packed.push(crate::kernels::pack(&tt.cores[layout.d() - 1 - step], &plan).unwrap());
+            plans.push(plan);
+        }
+        let quant: Vec<_> = packed.iter().map(crate::kernels::quantize).collect();
+        // a truncated scale vector is a typed artifact error up front
+        let mut broken = quant.clone();
+        broken[0].scales.pop();
+        let err = TtFcEngine::from_quant_parts(
+            layout.clone(),
+            broken,
+            &plans,
+            None,
+            &machine,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        let mut f32_engine =
+            TtFcEngine::from_parts(layout.clone(), packed, &plans, tt.bias.clone(), &machine)
+                .unwrap();
+        let mut q_engine =
+            TtFcEngine::from_quant_parts(layout, quant, &plans, tt.bias.clone(), &machine)
+                .unwrap();
+        let x = Tensor::randn(vec![3, 784], 1.0, &mut rng);
+        let a = f32_engine.forward(&x).unwrap();
+        let b = q_engine.forward(&x).unwrap();
+        // per-slice int8 quantization keeps the chain within a few percent
+        // of the f32 output scale
+        let scale = a.data().iter().fold(0f32, |acc, v| acc.max(v.abs()));
+        for (va, vb) in a.data().iter().zip(b.data()) {
+            assert!((va - vb).abs() <= 0.05 * scale, "{va} vs {vb} (scale {scale})");
+        }
+        // worker clones of the int8 engine stay bitwise with their parent
+        let mut worker = q_engine.worker_clone();
+        let bw = worker.forward(&x).unwrap();
+        for (vb, vw) in b.data().iter().zip(bw.data()) {
+            assert_eq!(vb.to_bits(), vw.to_bits());
+        }
+        // resident bytes shrink ~4x (per-slice scales are the only overhead)
+        let f_bytes =
+            ModelEngine::new("f", vec![LayerOp::Tt(f32_engine)], 784, 300).approx_bytes();
+        let q_bytes =
+            ModelEngine::new("q", vec![LayerOp::Tt(q_engine)], 784, 300).approx_bytes();
+        assert!(
+            f_bytes as f64 / q_bytes as f64 >= 3.5,
+            "int8 engine must be >= 3.5x smaller: {f_bytes} vs {q_bytes}"
+        );
     }
 
     #[test]

@@ -38,8 +38,9 @@ pub mod report;
 pub mod select;
 pub mod alignment_stats;
 
-pub use pareto::{dominates, pareto_frontier};
+pub use pareto::{dominates, dominates_with_error, pareto_frontier, pareto_frontier_with_error};
 pub use pipeline::{explore, Explored, StageCounts};
-pub use select::select_solution;
+pub use report::{measured_quant_error, quant_error_estimate};
+pub use select::{select_solution, select_solution_within_error_budget};
 pub use space::Solution;
 pub use timed::{explore_timed, TimedExplored, TimedSolution};

@@ -21,6 +21,45 @@ pub fn dominates(a: &TimedSolution, b: &TimedSolution) -> bool {
     no_worse && strictly_better
 }
 
+/// Four-axis dominance: the pinned three-objective relation
+/// ([`dominates`]) extended with a quantization-error axis (each
+/// solution's `err` is its modeled or measured int8 output error,
+/// [`super::report::quant_error_estimate`] /
+/// [`super::report::measured_quant_error`]). `a` dominates `b` iff it is
+/// no worse on all four axes and strictly better on at least one. The
+/// three-axis relation itself is untouched — this is a wrapper, so every
+/// existing frontier stays byte-identical when the error axis is ignored.
+pub fn dominates_with_error(a: &TimedSolution, ea: f64, b: &TimedSolution, eb: f64) -> bool {
+    let no_worse = a.time_s <= b.time_s
+        && a.solution.params <= b.solution.params
+        && a.solution.flops <= b.solution.flops
+        && ea <= eb;
+    let strictly_better = a.time_s < b.time_s
+        || a.solution.params < b.solution.params
+        || a.solution.flops < b.solution.flops
+        || ea < eb;
+    no_worse && strictly_better
+}
+
+/// The non-dominated subset of error-annotated solutions under
+/// [`dominates_with_error`], input order preserved. All-pairs — the
+/// four-axis view is only ever computed over a frontier head or an
+/// annotated selection, never the raw stage-5 survivor sets, so the
+/// `O(n^2)` cost is irrelevant here.
+pub fn pareto_frontier_with_error(
+    annotated: &[(TimedSolution, f64)],
+) -> Vec<(TimedSolution, f64)> {
+    annotated
+        .iter()
+        .filter(|(s, e)| {
+            !annotated
+                .iter()
+                .any(|(o, oe)| dominates_with_error(o, *oe, s, *e))
+        })
+        .cloned()
+        .collect()
+}
+
 /// The non-dominated subset of `timed`, returned in canonical order
 /// ([`Solution::canonical_cmp`]). Input in any order is accepted; the
 /// already-canonical lists the engine produces skip the internal re-sort
@@ -176,6 +215,23 @@ mod tests {
     #[test]
     fn empty_input_gives_empty_frontier() {
         assert!(pareto_frontier(&[]).is_empty());
+        assert!(pareto_frontier_with_error(&[]).is_empty());
+    }
+
+    #[test]
+    fn error_axis_rescues_an_otherwise_dominated_point() {
+        // b loses on all three classic axes but quantizes better: under
+        // the four-axis relation both survive
+        let a = sol(vec![4, 4], vec![4, 4], 8, 1e-5);
+        let b = sol(vec![8, 2], vec![2, 8], 8, 2e-5);
+        assert!(dominates(&a, &b));
+        assert!(!dominates_with_error(&a, 0.02, &b, 0.01));
+        let f = pareto_frontier_with_error(&[(a.clone(), 0.02), (b.clone(), 0.01)]);
+        assert_eq!(f.len(), 2);
+        // equal errors reduce to the pinned three-axis relation
+        assert!(dominates_with_error(&a, 0.01, &b, 0.01));
+        let f = pareto_frontier_with_error(&[(a, 0.01), (b, 0.01)]);
+        assert_eq!(f.len(), 1);
     }
 
     #[test]

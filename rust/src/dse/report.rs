@@ -4,8 +4,13 @@
 //! engine ([`super::timed`]) and never reads raw survivor lists here.
 
 use crate::config::DseConfig;
+use crate::error::Result;
+use crate::kernels::{dispatch, Executor, PackedG, QuantizedG, INT8_PORTABLE_KERNEL_NAME};
+use crate::machine::MachineSpec;
 use crate::models::ModelArch;
+use crate::ttd::TtLayout;
 use crate::util::json::Json;
+use crate::util::prng::Rng;
 use crate::util::sci;
 
 use super::pipeline::{explore, StageCounts};
@@ -62,6 +67,52 @@ pub fn timed_solution_json(s: &TimedSolution) -> Json {
         ("modeled_time_s", Json::from(s.time_s)),
         ("speedup_vs_dense", Json::from(s.speedup)),
     ])
+}
+
+/// Modeled relative output error of int8 per-`m`-slice quantization for a
+/// depth-`d` TT chain — the analytic quantization-error axis attached to
+/// DSE candidates before any weights exist. Symmetric int8 rounds each
+/// core element to within half a quantization step, i.e. at most
+/// `1/254` of its slice maximum ([`crate::kernels::quantize`]); the chain
+/// multiplies `d` cores, so first-order relative error accumulates
+/// additively across depth. A crude bound by design: it exists to *order*
+/// candidates (deeper chains quantize worse) and to gate budgets cheaply;
+/// [`measured_quant_error`] is the ground truth once cores exist.
+pub fn quant_error_estimate(d: usize) -> f64 {
+    d as f64 / 254.0
+}
+
+/// Measured max-relative-output-error of an int8 chain against its f32
+/// chain on seeded calibration inputs: both chains run the portable
+/// reference kernels (f32 portable vs int8-portable), so the measurement
+/// is deterministic on every host — `verify` replays it byte for byte.
+/// The metric is `max_i |q_i - f_i| / max_j |f_j|` over a `batch` of
+/// standard-normal calibration rows drawn from `seed`.
+pub fn measured_quant_error(
+    layout: &TtLayout,
+    packed: &[PackedG],
+    quant: &[QuantizedG],
+    machine: &MachineSpec,
+    batch: usize,
+    seed: u64,
+) -> Result<f64> {
+    let int8_kernel = dispatch::by_name(INT8_PORTABLE_KERNEL_NAME)
+        .expect("int8-portable is always registered");
+    let mut ex_f = Executor::with_kernel(machine, crate::kernels::portable())?;
+    let mut ex_q = Executor::with_kernel(machine, int8_kernel)?;
+    let mut rng = Rng::new(seed);
+    let x = rng.normal_vec(batch * layout.n_total() as usize, 1.0);
+    let f = ex_f.run_tt_chain(layout, batch, packed, &x)?.to_vec();
+    let q = ex_q.run_tt_chain_q(layout, batch, quant, &x)?;
+    let denom = f
+        .iter()
+        .fold(0f32, |acc, v| acc.max(v.abs()))
+        .max(f32::MIN_POSITIVE);
+    let max_abs = f
+        .iter()
+        .zip(q)
+        .fold(0f32, |acc, (a, b)| acc.max((a - b).abs()));
+    Ok((max_abs / denom) as f64)
 }
 
 /// Render rows in the paper's table format.
@@ -127,6 +178,41 @@ mod tests {
         // round-trips through the writer/parser
         let text = crate::util::json::to_string(&j);
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn quant_error_estimate_grows_with_depth() {
+        assert!(quant_error_estimate(2) < quant_error_estimate(3));
+        assert!(quant_error_estimate(3) < quant_error_estimate(6));
+        // d = 2 models under 1% relative error — comfortably inside any
+        // practical budget, matching what the measured axis reports
+        assert!(quant_error_estimate(2) < 0.01);
+    }
+
+    #[test]
+    fn measured_quant_error_is_small_and_deterministic() {
+        use crate::kernels::quantize;
+        use crate::machine::MachineSpec;
+        use crate::ttd::cost::einsum_chain;
+        use crate::ttd::decompose::random_cores;
+        use crate::util::prng::Rng;
+        let machine = MachineSpec::spacemit_k1();
+        let layout =
+            crate::ttd::TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+        let mut rng = Rng::new(314);
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = crate::kernels::Executor::new(&machine);
+        let packed: Vec<_> = einsum_chain(&layout, 1)
+            .iter()
+            .enumerate()
+            .map(|(step, dims)| ex.pack(&tt.cores[layout.d() - 1 - step], dims).unwrap())
+            .collect();
+        let quant: Vec<_> = packed.iter().map(quantize).collect();
+        let e1 = measured_quant_error(&layout, &packed, &quant, &machine, 4, 99).unwrap();
+        let e2 = measured_quant_error(&layout, &packed, &quant, &machine, 4, 99).unwrap();
+        assert_eq!(e1, e2, "fixed seed and portable kernels => deterministic");
+        assert!(e1 > 0.0, "quantization moves the output");
+        assert!(e1 < 0.05, "per-slice int8 stays within a few percent: {e1}");
     }
 
     #[test]

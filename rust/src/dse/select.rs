@@ -89,6 +89,35 @@ pub fn select_solution(
     }
 }
 
+/// [`select_solution`] under an int8 quantization-error budget: only
+/// candidates whose modeled quantization error
+/// ([`super::report::quant_error_estimate`], a function of chain depth)
+/// fits `max_quant_error` are eligible; the policy then picks among them
+/// as usual. `ttrv compress --quantize` routes selection through this so
+/// an int8 deployment never selects a layout the error model already
+/// rules out. A budget no candidate fits is a typed [`Error::NoSolution`]
+/// naming the budget — never a silent fallback past it.
+pub fn select_solution_within_error_budget(
+    e: &TimedExplored,
+    rank: u64,
+    policy: SelectionPolicy,
+    max_quant_error: f64,
+) -> Result<TimedSolution> {
+    let fits =
+        |s: &TimedSolution| super::report::quant_error_estimate(s.layout().d()) <= max_quant_error;
+    let mut filtered = e.clone();
+    filtered.timed.retain(fits);
+    filtered.frontier.retain(fits);
+    if filtered.timed.is_empty() && filtered.frontier.is_empty() {
+        return Err(Error::NoSolution(format!(
+            "no time-qualified TT solution for {}x{} at rank {rank} within quantization \
+             error budget {max_quant_error}",
+            e.explored.m_dim, e.explored.n_dim
+        )));
+    }
+    select_solution(&filtered, rank, policy)
+}
+
 /// §6.4 policy: the most balanced time-qualified d=2 solution at the
 /// requested rank (FLOPs tie-break); falls back to any-d / any-rank.
 fn select_balance(e: &TimedExplored, rank: u64) -> Result<TimedSolution> {
@@ -269,6 +298,26 @@ mod tests {
         let bal = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
         assert!(e.timed.contains(&bal));
         assert!(!e.frontier.contains(&bal));
+    }
+
+    #[test]
+    fn error_budget_filters_depth_and_rejects_impossible_budgets() {
+        let e = timed(300, 784);
+        // a generous budget reproduces the unbudgeted selection exactly
+        let plain = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        let budgeted =
+            select_solution_within_error_budget(&e, 8, SelectionPolicy::Balance, 0.5).unwrap();
+        assert_eq!(plain, budgeted);
+        // every admitted candidate's modeled error fits the budget
+        let tight = 3.0 / 254.0; // admits d <= 3
+        let s =
+            select_solution_within_error_budget(&e, 8, SelectionPolicy::MinTime, tight).unwrap();
+        assert!(crate::dse::report::quant_error_estimate(s.layout().d()) <= tight);
+        // a budget below the d = 2 floor is a typed NoSolution
+        let err = select_solution_within_error_budget(&e, 8, SelectionPolicy::Balance, 1e-9)
+            .unwrap_err();
+        assert!(matches!(err, Error::NoSolution(_)), "{err}");
+        assert!(err.to_string().contains("budget"));
     }
 
     #[test]

@@ -19,24 +19,37 @@
 //! Canonical / PackedR / PackedK layouts, so a tuned artifact's packed
 //! cores stay valid whichever kernel the serving host selects.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use crate::error::{Error, Result};
 
 use super::micro;
-use super::packed::PackedG;
+use super::packed::{PackedG, QuantizedG};
 
 /// One ISA's microkernel set. Region signatures mirror the portable
 /// entry points in [`super::micro`] exactly; `od`'s first row is absolute
 /// row `m_base` (per-thread contiguous output slices).
+///
+/// The `*_q` twins take an int8 [`QuantizedG`] instead of the f32
+/// [`PackedG`] and default to the portable int8 reference regions in
+/// [`super::int8`], so f32-only kernels execute quantized cores correctly
+/// (just not fast) and int8 kernels override them with widening SIMD.
 pub trait Kernel: Send + Sync {
     /// Stable identifier persisted in TUNE sections / snapshots / BENCH
-    /// rows for observability (`"portable"`, `"avx2-fma"`, `"neon"`).
+    /// rows for observability (`"portable"`, `"avx2-fma"`, `"neon"`,
+    /// `"int8-portable"`, `"int8-avx2"`, `"int8-neon"`).
     fn name(&self) -> &'static str;
 
     /// Whether this host can execute the kernel (runtime CPUID-style
-    /// probe). The portable kernel always returns `true`.
+    /// probe). The portable kernels always return `true`.
     fn supported(&self) -> bool;
+
+    /// Whether the int8 `*_q` regions are this kernel's *fast path* (the
+    /// kernel was built for quantized cores). [`select`] skips such
+    /// kernels for f32 execution and [`select_int8`] prefers them.
+    fn int8(&self) -> bool {
+        false
+    }
 
     /// r-vectorized region over `m0..m1` x `b0..b1` with register blocking
     /// `(rm, rb)`. `g` is PackedR.
@@ -89,10 +102,71 @@ pub trait Kernel: Send + Sync {
     ) {
         micro::scalar_packed_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
     }
+
+    /// r-vectorized region over an int8 core. `g` is quantized PackedR.
+    /// Default: the portable int8 reference.
+    #[allow(clippy::too_many_arguments)]
+    fn r_region_q(
+        &self,
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        super::int8::r_region_q_based(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base)
+    }
+
+    /// k-vectorized (dot-product) region over an int8 core. `g` is
+    /// quantized PackedK. Default: the portable int8 reference.
+    #[allow(clippy::too_many_arguments)]
+    fn k_region_q(
+        &self,
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        super::int8::k_region_q_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+    }
+
+    /// Packed-but-scalar region over an int8 core (`VectorLoop::None`
+    /// plans). Default: the portable int8 reference — like
+    /// [`Kernel::scalar_region`], part of the reference surface that
+    /// vector kernels inherit unchanged.
+    #[allow(clippy::too_many_arguments)]
+    fn scalar_region_q(
+        &self,
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        super::int8::scalar_region_q_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+    }
 }
 
 /// Name of the portable reference kernel.
 pub const PORTABLE_KERNEL_NAME: &str = "portable";
+
+/// Name of the portable int8 reference kernel.
+pub const INT8_PORTABLE_KERNEL_NAME: &str = "int8-portable";
 
 /// The portable reference kernel: the `[f32; VL]` lane-array loop nests of
 /// [`super::micro`], compiled for whatever the target baseline is. Always
@@ -139,17 +213,24 @@ impl Kernel for PortableKernel {
 }
 
 static PORTABLE: PortableKernel = PortableKernel;
+static INT8_PORTABLE: super::int8::Int8PortableKernel = super::int8::Int8PortableKernel;
 
 #[cfg(target_arch = "x86_64")]
 static VECTOR: super::avx2::Avx2Kernel = super::avx2::Avx2Kernel;
 #[cfg(target_arch = "aarch64")]
 static VECTOR: super::neon::NeonKernel = super::neon::NeonKernel;
 
-// Preference order: vector kernels first, portable fallback last.
+#[cfg(target_arch = "x86_64")]
+static INT8_VECTOR: super::int8::Int8Avx2Kernel = super::int8::Int8Avx2Kernel;
+#[cfg(target_arch = "aarch64")]
+static INT8_VECTOR: super::int8::Int8NeonKernel = super::int8::Int8NeonKernel;
+
+// Preference order: vector kernels first (f32, then int8), portable
+// references last (f32 portable is the overall fallback).
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
-static ALL: [&dyn Kernel; 2] = [&VECTOR, &PORTABLE];
+static ALL: [&dyn Kernel; 4] = [&VECTOR, &INT8_VECTOR, &INT8_PORTABLE, &PORTABLE];
 #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
-static ALL: [&dyn Kernel; 1] = [&PORTABLE];
+static ALL: [&dyn Kernel; 2] = [&INT8_PORTABLE, &PORTABLE];
 
 /// Every kernel compiled into this binary, in preference order (vector
 /// implementations first, portable last). Entries may be unsupported on
@@ -187,18 +268,85 @@ pub fn force_scalar_active() -> bool {
     )
 }
 
-/// The kernel a fresh [`Executor`](super::Executor) uses on this host: the
-/// first supported entry of [`all_kernels`] (portable if forced scalar).
+/// In-process preferred-kernel pin (the CLI `--kernel NAME` flag on
+/// `ttrv bench` / `ttrv serve-demo`): index+1 into [`ALL`], 0 = unset, so
+/// the hot-path read stays one relaxed-free atomic load.
+static PREFERRED: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin dispatch to the named kernel for the rest of the process (or clear
+/// the pin with `None`). The pin is *family-respecting*: an f32 kernel pin
+/// steers [`select`] and an int8 kernel pin steers [`select_int8`], while
+/// the other family keeps its default selection — pinning `avx2-fma` must
+/// never push quantized engines off their int8 fast path, and vice versa.
+/// Unknown names and kernels this host cannot run are a typed
+/// [`Error::Kernel`] up front — the pin either takes effect or the caller
+/// hears why, never a silent fallback.
+pub fn set_preferred_kernel(name: Option<&str>) -> Result<()> {
+    let Some(name) = name else {
+        PREFERRED.store(0, Ordering::SeqCst);
+        return Ok(());
+    };
+    let idx = ALL.iter().position(|k| k.name() == name).ok_or_else(|| {
+        Error::kernel(format!(
+            "unknown kernel '{name}' (compiled in: {})",
+            ALL.iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+        ))
+    })?;
+    ensure_supported(ALL[idx])?;
+    PREFERRED.store(idx + 1, Ordering::SeqCst);
+    Ok(())
+}
+
+/// The pinned kernel, if [`set_preferred_kernel`] is active.
+pub fn preferred_kernel() -> Option<&'static dyn Kernel> {
+    match PREFERRED.load(Ordering::SeqCst) {
+        0 => None,
+        i => Some(ALL[i - 1]),
+    }
+}
+
+/// The kernel a fresh [`Executor`](super::Executor) uses on this host for
+/// f32 cores: the [`set_preferred_kernel`] pin when it names an f32
+/// kernel, else the first supported non-int8 entry of [`all_kernels`]
+/// (portable if forced scalar).
 pub fn select() -> &'static dyn Kernel {
+    if let Some(k) = preferred_kernel() {
+        if !k.int8() {
+            return k;
+        }
+    }
     if force_scalar_active() {
         return &PORTABLE;
     }
     for &k in ALL.iter() {
-        if k.supported() {
+        if !k.int8() && k.supported() {
             return k;
         }
     }
     &PORTABLE
+}
+
+/// The kernel a quantized engine uses on this host: the
+/// [`set_preferred_kernel`] pin when it names an int8 kernel, else the
+/// first supported int8 entry of [`all_kernels`] (the portable int8
+/// reference if forced scalar). Int8 kernels are always available — the
+/// portable reference backs every arch — so unlike f32 [`select`] there
+/// is no cross-family fallback.
+pub fn select_int8() -> &'static dyn Kernel {
+    if let Some(k) = preferred_kernel() {
+        if k.int8() {
+            return k;
+        }
+    }
+    if force_scalar_active() {
+        return &INT8_PORTABLE;
+    }
+    for &k in ALL.iter() {
+        if k.int8() && k.supported() {
+            return k;
+        }
+    }
+    &INT8_PORTABLE
 }
 
 /// The name [`select`] would return right now (CLI / bench observability).
@@ -227,15 +375,33 @@ pub fn ensure_supported(k: &dyn Kernel) -> Result<()> {
     }
 }
 
-/// The kernels autotuning should rank: the portable reference first (so
-/// measurement ties deterministically keep the reference), then every
-/// supported vector kernel — unless force-scalar is active, in which case
-/// only portable.
+/// The f32 kernels autotuning should rank: the portable reference first
+/// (so measurement ties deterministically keep the reference), then every
+/// supported f32 vector kernel — unless force-scalar is active, in which
+/// case only portable. Int8 kernels are excluded: an f32 chain never
+/// touches their fast path, so ranking them would just re-measure the
+/// portable fallback under another name ([`candidate_kernels_q`] is their
+/// roster).
 pub(crate) fn candidate_kernels() -> Vec<&'static dyn Kernel> {
     let mut v: Vec<&'static dyn Kernel> = vec![&PORTABLE];
     if !force_scalar_active() {
         for &k in ALL.iter() {
-            if k.name() != PORTABLE_KERNEL_NAME && k.supported() {
+            if k.name() != PORTABLE_KERNEL_NAME && !k.int8() && k.supported() {
+                v.push(k);
+            }
+        }
+    }
+    v
+}
+
+/// The int8 kernels quantized autotuning should rank: the portable int8
+/// reference first, then every supported int8 vector kernel — unless
+/// force-scalar is active, in which case only the int8 reference.
+pub(crate) fn candidate_kernels_q() -> Vec<&'static dyn Kernel> {
+    let mut v: Vec<&'static dyn Kernel> = vec![&INT8_PORTABLE];
+    if !force_scalar_active() {
+        for &k in ALL.iter() {
+            if k.name() != INT8_PORTABLE_KERNEL_NAME && k.int8() && k.supported() {
                 v.push(k);
             }
         }
@@ -264,8 +430,19 @@ mod tests {
     fn selected_kernel_is_supported() {
         let k = select();
         assert!(k.supported(), "select() returned unsupported '{}'", k.name());
+        assert!(!k.int8(), "select() must stay on the f32 family, got '{}'", k.name());
         assert!(by_name(k.name()).is_some());
         assert!(by_name("no-such-kernel").is_none());
+    }
+
+    #[test]
+    fn int8_selection_is_supported_and_int8() {
+        let k = select_int8();
+        assert!(k.supported(), "select_int8() returned unsupported '{}'", k.name());
+        assert!(k.int8(), "select_int8() returned f32 kernel '{}'", k.name());
+        // the int8 reference is always registered and findable by name
+        let p = by_name(INT8_PORTABLE_KERNEL_NAME).expect("int8-portable registered");
+        assert!(p.supported() && p.int8());
     }
 
     #[test]
@@ -275,7 +452,37 @@ mod tests {
         assert_eq!(cands[0].name(), PORTABLE_KERNEL_NAME);
         for k in cands {
             assert!(k.supported());
+            // the f32 tuning roster never contains int8 kernels
+            assert!(!k.int8(), "f32 candidate roster contains '{}'", k.name());
         }
+    }
+
+    #[test]
+    fn candidate_kernels_q_lead_with_int8_portable() {
+        let cands = candidate_kernels_q();
+        assert!(!cands.is_empty());
+        assert_eq!(cands[0].name(), INT8_PORTABLE_KERNEL_NAME);
+        for k in cands {
+            assert!(k.supported());
+            assert!(k.int8(), "int8 candidate roster contains '{}'", k.name());
+        }
+    }
+
+    #[test]
+    fn preferred_kernel_pin_is_validated_and_family_respecting() {
+        // unknown names are a typed error and leave the pin untouched
+        let err = set_preferred_kernel(Some("no-such-kernel")).unwrap_err();
+        assert!(err.to_string().contains("no-such-kernel"), "{err}");
+        assert!(preferred_kernel().is_none());
+        // pinning the int8 reference steers select_int8 only; select()
+        // stays on the f32 family (concurrent tests observing select()
+        // are therefore unaffected, like the force-scalar test below)
+        set_preferred_kernel(Some(INT8_PORTABLE_KERNEL_NAME)).unwrap();
+        assert_eq!(preferred_kernel().unwrap().name(), INT8_PORTABLE_KERNEL_NAME);
+        assert_eq!(select_int8().name(), INT8_PORTABLE_KERNEL_NAME);
+        assert!(!select().int8());
+        set_preferred_kernel(None).unwrap();
+        assert!(preferred_kernel().is_none());
     }
 
     #[test]
@@ -286,7 +493,9 @@ mod tests {
         set_force_scalar(true);
         assert!(force_scalar_active());
         assert_eq!(select().name(), PORTABLE_KERNEL_NAME);
+        assert_eq!(select_int8().name(), INT8_PORTABLE_KERNEL_NAME);
         assert_eq!(candidate_kernels().len(), 1);
+        assert_eq!(candidate_kernels_q().len(), 1);
         set_force_scalar(false);
     }
 }

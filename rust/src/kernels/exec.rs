@@ -9,8 +9,8 @@ use crate::compiler::plan::{LoopOrder, OptimizationPlan, VectorLoop};
 use crate::error::{Error, Result};
 
 use super::dispatch::Kernel;
-use super::naive::naive_region;
-use super::packed::{GLayout, PackedG};
+use super::naive::{naive_region, naive_region_q};
+use super::packed::{GLayout, PackedG, QuantizedG};
 
 /// Execute a planned Einsum into a caller-owned buffer (resized to `m*b*r`)
 /// using `kernel`'s microkernels for the packed paths (the Canonical/naive
@@ -156,6 +156,143 @@ pub(crate) fn execute_plan_into(
     }
 }
 
+/// Int8 twin of [`execute_plan_into`]: the same validation order, the same
+/// bt tiling and thread parallelization, with the region dispatch routed to
+/// the kernel's `*_q` methods over a [`QuantizedG`]. Kept as a mirror
+/// rather than a generic driver so the f32 hot path stays monomorphic and
+/// byte-identical to what every bitwise pin was recorded against.
+pub(crate) fn execute_plan_into_q(
+    plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
+    g: &QuantizedG,
+    xd: &[f32],
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let d = &plan.dims;
+    let (r, n, m, k) = g.dims;
+    if (d.r, d.n, d.m, d.k) != (r, n, m, k) {
+        return Err(Error::shape(format!("plan dims {d:?} vs core {:?}", g.dims)));
+    }
+    if g.scales.len() != m {
+        return Err(Error::shape(format!(
+            "quantized core has {} scales for m = {m}",
+            g.scales.len()
+        )));
+    }
+    if xd.len() != d.b * n * k {
+        return Err(Error::shape(format!(
+            "input len {} != b*n*k = {}",
+            xd.len(),
+            d.b * n * k
+        )));
+    }
+    let expected_layout = match (plan.pack_g, plan.vector_loop) {
+        (false, _) => GLayout::Canonical,
+        (true, VectorLoop::R) => GLayout::PackedR,
+        (true, _) => GLayout::PackedK,
+    };
+    if g.layout != expected_layout {
+        return Err(Error::plan(format!(
+            "core packed as {:?} but plan requires {:?}",
+            g.layout, expected_layout
+        )));
+    }
+
+    out.clear();
+    out.resize(m * d.b * r, 0.0);
+
+    if g.layout == GLayout::Canonical {
+        naive_region_q(&g.data, &g.scales, xd, &mut out[..], r, n, m, k, d.b);
+        return Ok(());
+    }
+
+    let threads = plan.threads.max(1) as usize;
+    let b_total = d.b;
+    let btl = plan.tile.btl.unwrap_or(b_total).max(1);
+
+    if threads == 1 {
+        let od = &mut out[..];
+        let mut b0 = 0;
+        while b0 < b_total {
+            let b1 = (b0 + btl).min(b_total);
+            run_region_offset_q(plan, kernel, g, xd, od, b_total, 0, m, b0, b1, 0);
+            b0 = b1;
+        }
+        return Ok(());
+    }
+
+    match plan.tile.order {
+        LoopOrder::Mbrk => {
+            let rows_per = m.div_ceil(threads);
+            let mut slices: Vec<(usize, usize, &mut [f32])> = Vec::new();
+            let mut rest: &mut [f32] = &mut out[..];
+            let mut m0 = 0;
+            while m0 < m {
+                let m1 = (m0 + rows_per).min(m);
+                let (head, tail) = rest.split_at_mut((m1 - m0) * b_total * r);
+                slices.push((m0, m1, head));
+                rest = tail;
+                m0 = m1;
+            }
+            std::thread::scope(|s| {
+                for (m0, m1, out_slice) in slices {
+                    s.spawn(move || {
+                        let mut b0 = 0;
+                        while b0 < b_total {
+                            let b1 = (b0 + btl).min(b_total);
+                            run_region_offset_q(
+                                plan, kernel, g, xd, out_slice, b_total, m0, m1, b0, b1, m0,
+                            );
+                            b0 = b1;
+                        }
+                    });
+                }
+            });
+            Ok(())
+        }
+        LoopOrder::Bmrk => {
+            let cols_per = b_total.div_ceil(threads);
+            let mut ranges = Vec::new();
+            let mut b0 = 0;
+            while b0 < b_total {
+                let b1 = (b0 + cols_per).min(b_total);
+                ranges.push((b0, b1));
+                b0 = b1;
+            }
+            let chunks: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = ranges
+                    .into_iter()
+                    .map(|(b0, b1)| {
+                        s.spawn(move || {
+                            let width = b1 - b0;
+                            let mut local = vec![0.0f32; m * width * r];
+                            let xl: Vec<f32> = xd[b0 * n * k..b1 * n * k].to_vec();
+                            let mut plan_local = *plan;
+                            plan_local.dims.b = width;
+                            run_region_offset_q(
+                                &plan_local, kernel, g, &xl, &mut local, width, 0, m, 0, width, 0,
+                            );
+                            (b0, b1, local)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+            });
+            for (b0, b1, local) in chunks {
+                let width = b1 - b0;
+                for mi in 0..m {
+                    for bi in 0..width {
+                        let src = (mi * width + bi) * r;
+                        let dst = (mi * b_total + b0 + bi) * r;
+                        out[dst..dst + r].copy_from_slice(&local[src..src + r]);
+                    }
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
 /// Dispatch a rectangular region to the plan's microkernel on `kernel`.
 #[allow(clippy::too_many_arguments)]
 fn run_region(
@@ -199,5 +336,29 @@ fn run_region_offset(
         ),
         VectorLoop::K => kernel.k_region(g, xd, od, b_total, m0, m1, b0, b1, m_base),
         VectorLoop::None => kernel.scalar_region(g, xd, od, b_total, m0, m1, b0, b1, m_base),
+    }
+}
+
+/// Int8 twin of [`run_region_offset`]: routes to the `*_q` region methods.
+#[allow(clippy::too_many_arguments)]
+fn run_region_offset_q(
+    plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
+    g: &QuantizedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    match plan.vector_loop {
+        VectorLoop::R => kernel.r_region_q(
+            g, xd, od, b_total, plan.rb.rm, plan.rb.rb, m0, m1, b0, b1, m_base,
+        ),
+        VectorLoop::K => kernel.k_region_q(g, xd, od, b_total, m0, m1, b0, b1, m_base),
+        VectorLoop::None => kernel.scalar_region_q(g, xd, od, b_total, m0, m1, b0, b1, m_base),
     }
 }

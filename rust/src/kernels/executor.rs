@@ -28,8 +28,8 @@ use crate::ttd::cost::{self, EinsumDims};
 use crate::ttd::TtLayout;
 
 use super::dispatch::{self, Kernel};
-use super::exec::execute_plan_into;
-use super::packed::{pack, PackedG};
+use super::exec::{execute_plan_into, execute_plan_into_q};
+use super::packed::{pack, PackedG, QuantizedG};
 
 /// Reusable buffers for the serving hot loop (no allocation per request).
 #[derive(Debug, Default)]
@@ -241,6 +241,23 @@ impl Executor {
         Tensor::from_vec(vec![plan.dims.m, plan.dims.b, plan.dims.r], out)
     }
 
+    /// Execute one planned Einsum over an int8 core (f32 accumulation,
+    /// per-`m`-slice dequantization at store — [`super::quantize`]),
+    /// allocating the `(m, b, r)` output tensor. Same plan cache as
+    /// [`Executor::execute`]: plans are layout properties, not dtype
+    /// properties.
+    pub fn execute_q(
+        &mut self,
+        dims: &EinsumDims,
+        g: &QuantizedG,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let plan = self.plan(dims)?;
+        let mut out = Vec::new();
+        execute_plan_into_q(&plan, self.kernel, g, x.data(), &mut out)?;
+        Tensor::from_vec(vec![plan.dims.m, plan.dims.b, plan.dims.r], out)
+    }
+
     /// Execute into a caller-owned buffer (resized to `m*b*r`). On error the
     /// buffer is left untouched.
     pub fn execute_into(
@@ -309,6 +326,49 @@ impl Executor {
         for (dims, g) in chain_dims.iter().zip(packed) {
             let plan = self.plan(dims)?;
             execute_plan_into(&plan, self.kernel, g, &self.scratch.chain, &mut self.scratch.out)?;
+            std::mem::swap(&mut self.scratch.chain, &mut self.scratch.out);
+        }
+        Ok(())
+    }
+
+    /// Int8 twin of [`Executor::run_tt_chain`]: the serving hot path over
+    /// quantized cores. Same plans, same scratch ping-pong, same zero
+    /// warm-path allocation for single-threaded plans — the per-step
+    /// execution routes to the kernel's `*_q` regions (f32 accumulation,
+    /// per-slice scale at the store).
+    pub fn run_tt_chain_q(
+        &mut self,
+        layout: &TtLayout,
+        batch: usize,
+        quant: &[QuantizedG],
+        x: &[f32],
+    ) -> Result<&[f32]> {
+        let mut chain_dims = std::mem::take(&mut self.chain_dims);
+        cost::einsum_chain_into(layout, batch, &mut chain_dims);
+        let run = self.run_chain_steps_q(&chain_dims, quant, x);
+        self.chain_dims = chain_dims;
+        run?;
+        Ok(&self.scratch.chain)
+    }
+
+    fn run_chain_steps_q(
+        &mut self,
+        chain_dims: &[EinsumDims],
+        quant: &[QuantizedG],
+        x: &[f32],
+    ) -> Result<()> {
+        if chain_dims.len() != quant.len() {
+            return Err(Error::shape(format!(
+                "chain has {} steps but {} quantized cores",
+                chain_dims.len(),
+                quant.len()
+            )));
+        }
+        self.scratch.chain.clear();
+        self.scratch.chain.extend_from_slice(x);
+        for (dims, g) in chain_dims.iter().zip(quant) {
+            let plan = self.plan(dims)?;
+            execute_plan_into_q(&plan, self.kernel, g, &self.scratch.chain, &mut self.scratch.out)?;
             std::mem::swap(&mut self.scratch.chain, &mut self.scratch.out);
         }
         Ok(())
@@ -488,6 +548,38 @@ mod tests {
         // the cached plan is returned verbatim
         assert_eq!(warm.plan(&dims).unwrap(), plan);
         assert_eq!(warm.cached_plans(), 1);
+    }
+
+    #[test]
+    fn run_tt_chain_q_tracks_the_f32_chain_within_quantization_error() {
+        use crate::kernels::packed::quantize;
+        use crate::ttd::decompose::random_cores;
+        let machine = MachineSpec::spacemit_k1();
+        let mut rng = Rng::new(77);
+        let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(&machine);
+        let chain1 = cost::einsum_chain(&layout, 1);
+        let packed: Vec<PackedG> = chain1
+            .iter()
+            .enumerate()
+            .map(|(step, d)| ex.pack(&tt.cores[layout.d() - 1 - step], d).unwrap())
+            .collect();
+        let quant: Vec<QuantizedG> = packed.iter().map(quantize).collect();
+        let x = Tensor::randn(vec![3, 180], 1.0, &mut rng);
+        let want = ex.run_tt_chain(&layout, 3, &packed, x.data()).unwrap().to_vec();
+        let got = ex.run_tt_chain_q(&layout, 3, &quant, x.data()).unwrap();
+        assert_eq!(got.len(), want.len());
+        // int8 per-slice quantization perturbs each core by <= scale/2 per
+        // element (~0.4% of the slice max); two chained layers stay well
+        // inside a few percent of the output scale
+        let scale = want.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-6);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 0.05 * scale,
+                "idx {i}: int8 {a} vs f32 {b} (out scale {scale})"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,960 @@
+//! Int8 microkernels: quantized-core einsum regions with f32 accumulation.
+//!
+//! Mirrors [`super::micro`] loop-for-loop — identical tiling, identical
+//! `(rm, rb)` register-tile dispatch, identical remainder handling — with
+//! the f32 `G` loads replaced by int8 loads widened in-register
+//! (`vsext`/`vfcvt` on the paper's RVV target, `cvtepi8` on AVX2,
+//! `vmovl_s8` on NEON) and the per-`m`-slice dequantization scale applied
+//! exactly once, at the store:
+//!
+//! ```text
+//! Out[m,b,r] = scales[m] * sum_{n,k} (q[r,n,m,k] as f32) * In[b,n,k]
+//! ```
+//!
+//! Accumulation is f32 throughout, so the only deviation from the f32
+//! reference on the same core is the quantization step itself — which is
+//! what the tier-2 tolerance suite bounds (γ_L forward error plus half a
+//! quantization step per reduction term). Int8 kernels are never part of
+//! the bitwise-pinned surface.
+//!
+//! The portable region functions below are the **reference semantics** for
+//! every int8 kernel; `"int8-portable"` runs them directly and is the
+//! default-implementation target of the `*_q` methods on
+//! [`Kernel`](super::dispatch::Kernel), so f32-only kernels transparently
+//! fall back to them when handed a quantized core.
+
+use super::micro;
+use super::packed::{PackedG, QuantizedG};
+use super::VL;
+
+type Lane = [f32; VL];
+
+/// Widen `VL` int8 lanes to f32 (the portable stand-in for
+/// `vsext.vf4` + `vfcvt.f.x.v`).
+#[inline(always)]
+fn load_q(src: &[i8]) -> Lane {
+    let mut v = [0.0f32; VL];
+    for (d, &s) in v.iter_mut().zip(&src[..VL]) {
+        *d = s as f32;
+    }
+    v
+}
+
+#[inline(always)]
+fn fma(acc: &mut Lane, a: &Lane, scalar: f32) {
+    for i in 0..VL {
+        acc[i] += a[i] * scalar;
+    }
+}
+
+#[inline(always)]
+fn hsum(v: &Lane) -> f32 {
+    // same pairwise association as `micro::hsum`
+    let s0 = v[0] + v[4];
+    let s1 = v[1] + v[5];
+    let s2 = v[2] + v[6];
+    let s3 = v[3] + v[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Int8 twin of `micro::r_block`: r-vectorized register-tile block over
+/// quantized PackedR data. Accumulators are unscaled f32; each output row's
+/// scale multiplies in at the store.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn r_block_q<const RM: usize, const RB: usize>(
+    gd: &[i8],
+    scales: &[f32],
+    xd: &[f32],
+    od: &mut [f32],
+    l: usize,
+    r: usize,
+    r_pad: usize,
+    b_total: usize,
+    m0: usize,
+    b0: usize,
+    m_base: usize,
+) {
+    let rv_count = r_pad / VL;
+    for rv in 0..rv_count {
+        let mut acc = [[[0.0f32; VL]; RB]; RM];
+        let mut g_rows: [std::slice::ChunksExact<'_, i8>; RM] = std::array::from_fn(|im| {
+            let off = ((m0 + im) * rv_count + rv) * l * VL;
+            gd[off..off + l * VL].chunks_exact(VL)
+        });
+        let x_rows: [&[f32]; RB] =
+            std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
+        for kk in 0..l {
+            let mut gvec = [[0.0f32; VL]; RM];
+            for (im, row) in g_rows.iter_mut().enumerate() {
+                gvec[im] = load_q(row.next().expect("length l by construction"));
+            }
+            for ib in 0..RB {
+                let xs = x_rows[ib][kk];
+                for im in 0..RM {
+                    fma(&mut acc[im][ib], &gvec[im], xs);
+                }
+            }
+        }
+        let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
+        for im in 0..RM {
+            let scale = scales[m0 + im];
+            for ib in 0..RB {
+                let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
+                for (o, a) in od[out_base..out_base + lanes].iter_mut().zip(&acc[im][ib][..lanes])
+                {
+                    *o = a * scale;
+                }
+            }
+        }
+    }
+}
+
+/// Portable int8 r-vectorized region: tiling identical to
+/// `micro::r_region_based`, microkernel swapped for [`r_block_q`].
+/// `g` is quantized PackedR.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn r_region_q_based(
+    g: &QuantizedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    rm: usize,
+    rb: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let r_pad = g.r_pad;
+    let rm = rm.clamp(1, 8);
+    let rb = rb.clamp(1, 8);
+    let m_main = m0 + (m1 - m0) / rm * rm;
+    let b_main = b0 + (b1 - b0) / rb * rb;
+    let mut mi = m0;
+    while mi < m_main {
+        let mut bi = b0;
+        while bi < b_main {
+            micro::dispatch_rb!(rm, rb, r_block_q,
+                (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            micro::dispatch_rb!(rm, 1, r_block_q,
+                (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += 1;
+        }
+        mi += rm;
+    }
+    while mi < m1 {
+        let mut bi = b0;
+        while bi + rb <= b1 {
+            micro::dispatch_rb!(1, rb, r_block_q,
+                (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            bi += rb;
+        }
+        while bi < b1 {
+            r_block_q::<1, 1>(&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base);
+            bi += 1;
+        }
+        mi += 1;
+    }
+}
+
+/// Portable int8 k-vectorized (dot-product) region. `g` is quantized
+/// PackedK; the scale multiplies the reduced sum at the scalar store.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn k_region_q_based(
+    g: &QuantizedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    let chunks = l / VL;
+    let tail = chunks * VL;
+    for mi in m0..m1 {
+        let scale = g.scales[mi];
+        for ri in 0..r {
+            let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+            for bi in b0..b1 {
+                let xrow = &xd[bi * l..(bi + 1) * l];
+                let mut acc = [0.0f32; VL];
+                for c in 0..chunks {
+                    let gv = load_q(&grow[c * VL..]);
+                    for i in 0..VL {
+                        acc[i] += gv[i] * xrow[c * VL + i];
+                    }
+                }
+                let mut s = hsum(&acc);
+                for i in tail..l {
+                    s += grow[i] as f32 * xrow[i];
+                }
+                od[((mi - m_base) * b_total + bi) * r + ri] = s * scale;
+            }
+        }
+    }
+}
+
+/// Portable int8 packed-but-scalar region (`VectorLoop::None` plans).
+/// `g` is quantized PackedK.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scalar_region_q_based(
+    g: &QuantizedG,
+    xd: &[f32],
+    od: &mut [f32],
+    b_total: usize,
+    m0: usize,
+    m1: usize,
+    b0: usize,
+    b1: usize,
+    m_base: usize,
+) {
+    let (r, n, _m, k) = g.dims;
+    let l = n * k;
+    for mi in m0..m1 {
+        let scale = g.scales[mi];
+        for bi in b0..b1 {
+            let xrow = &xd[bi * l..(bi + 1) * l];
+            for ri in 0..r {
+                let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+                let mut acc = 0.0f32;
+                for (gv, xv) in grow.iter().zip(xrow) {
+                    acc += *gv as f32 * xv;
+                }
+                od[((mi - m_base) * b_total + bi) * r + ri] = acc * scale;
+            }
+        }
+    }
+}
+
+use super::dispatch::Kernel;
+
+/// The portable int8 reference kernel: runs the region functions above for
+/// quantized cores and the portable f32 microkernels for f32 cores. Always
+/// supported; the semantics every int8 SIMD kernel is tolerance-checked
+/// against.
+pub(crate) struct Int8PortableKernel;
+
+impl Kernel for Int8PortableKernel {
+    fn name(&self) -> &'static str {
+        super::dispatch::INT8_PORTABLE_KERNEL_NAME
+    }
+    fn supported(&self) -> bool {
+        true
+    }
+    fn int8(&self) -> bool {
+        true
+    }
+    // f32 regions: the portable reference, unchanged — an int8 kernel
+    // asked to run an f32 core computes exactly the portable bits.
+    fn r_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        micro::r_region_based(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base)
+    }
+    fn k_region(
+        &self,
+        g: &PackedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        micro::k_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+    }
+    // *_q regions: the trait defaults already run this module's portable
+    // reference implementations.
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use x86::Int8Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 int8 kernels: 8 int8 lanes sign-extended to i32
+    //! (`_mm256_cvtepi8_epi32`), converted to f32, then the same FMA
+    //! register tiles as [`super::super::avx2`]. Memory safety follows the
+    //! same rule: every pointer comes from a bounds-checked subslice.
+
+    use core::arch::x86_64::{
+        __m128i, __m256, _mm256_cvtepi8_epi32, _mm256_cvtepi32_ps, _mm256_fmadd_ps,
+        _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm_loadl_epi64,
+    };
+
+    use super::super::dispatch::Kernel;
+    use super::super::micro::{self, dispatch_rb};
+    use super::super::packed::{PackedG, QuantizedG};
+    use super::super::VL;
+
+    /// AVX2 + FMA int8 kernel set (widen-multiply-accumulate in f32).
+    pub(crate) struct Int8Avx2Kernel;
+
+    impl Kernel for Int8Avx2Kernel {
+        fn name(&self) -> &'static str {
+            "int8-avx2"
+        }
+        fn supported(&self) -> bool {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        fn int8(&self) -> bool {
+            true
+        }
+        fn r_region(
+            &self,
+            g: &PackedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            rm: usize,
+            rb: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            micro::r_region_based(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base)
+        }
+        fn k_region(
+            &self,
+            g: &PackedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            micro::k_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+        }
+        fn r_region_q(
+            &self,
+            g: &QuantizedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            rm: usize,
+            rb: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            debug_assert!(self.supported());
+            // SAFETY: dispatch only hands out this kernel when the runtime
+            // AVX2+FMA probe passed (Executor construction / tune_chain).
+            unsafe { r_region_q_avx2(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base) }
+        }
+        fn k_region_q(
+            &self,
+            g: &QuantizedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            debug_assert!(self.supported());
+            // SAFETY: as above — only reachable when the host probe passed.
+            unsafe { k_region_q_avx2(g, xd, od, b_total, m0, m1, b0, b1, m_base) }
+        }
+    }
+
+    /// Widen `VL` int8 lanes to a f32 vector from a bounds-checked slice of
+    /// length >= `VL` (load 8 bytes, sign-extend to i32, convert).
+    #[inline(always)]
+    unsafe fn load_q8(src: &[i8]) -> __m256 {
+        let s = &src[..VL];
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
+            s.as_ptr() as *const __m128i
+        )))
+    }
+
+    /// Int8 FMA register-tile block: the AVX2 twin of [`super::r_block_q`].
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    unsafe fn r_block_q_fma<const RM: usize, const RB: usize>(
+        gd: &[i8],
+        scales: &[f32],
+        xd: &[f32],
+        od: &mut [f32],
+        l: usize,
+        r: usize,
+        r_pad: usize,
+        b_total: usize,
+        m0: usize,
+        b0: usize,
+        m_base: usize,
+    ) {
+        let rv_count = r_pad / VL;
+        let zero = _mm256_setzero_ps();
+        for rv in 0..rv_count {
+            let mut acc = [[zero; RB]; RM];
+            let mut g_rows: [std::slice::ChunksExact<'_, i8>; RM] = std::array::from_fn(|im| {
+                let off = ((m0 + im) * rv_count + rv) * l * VL;
+                gd[off..off + l * VL].chunks_exact(VL)
+            });
+            let x_rows: [&[f32]; RB] =
+                std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
+            for kk in 0..l {
+                let mut gvec = [zero; RM];
+                for (im, row) in g_rows.iter_mut().enumerate() {
+                    gvec[im] = load_q8(row.next().expect("length l by construction"));
+                }
+                for ib in 0..RB {
+                    let xs = _mm256_set1_ps(x_rows[ib][kk]);
+                    for im in 0..RM {
+                        acc[im][ib] = _mm256_fmadd_ps(gvec[im], xs, acc[im][ib]);
+                    }
+                }
+            }
+            let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
+            for im in 0..RM {
+                let sv = _mm256_set1_ps(scales[m0 + im]);
+                for ib in 0..RB {
+                    let mut tmp = [0.0f32; VL];
+                    _mm256_storeu_ps(tmp.as_mut_ptr(), _mm256_mul_ps(acc[im][ib], sv));
+                    let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
+                    od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
+                }
+            }
+        }
+    }
+
+    /// AVX2 int8 r-vectorized region driver: tiling identical to
+    /// [`super::r_region_q_based`], microkernel swapped for
+    /// [`r_block_q_fma`].
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn r_region_q_avx2(
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        let (r, n, _m, k) = g.dims;
+        let l = n * k;
+        let r_pad = g.r_pad;
+        let rm = rm.clamp(1, 8);
+        let rb = rb.clamp(1, 8);
+        let m_main = m0 + (m1 - m0) / rm * rm;
+        let b_main = b0 + (b1 - b0) / rb * rb;
+        let mut mi = m0;
+        while mi < m_main {
+            let mut bi = b0;
+            while bi < b_main {
+                dispatch_rb!(rm, rb, r_block_q_fma,
+                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                bi += rb;
+            }
+            while bi < b1 {
+                dispatch_rb!(rm, 1, r_block_q_fma,
+                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                bi += 1;
+            }
+            mi += rm;
+        }
+        while mi < m1 {
+            let mut bi = b0;
+            while bi + rb <= b1 {
+                dispatch_rb!(1, rb, r_block_q_fma,
+                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                bi += rb;
+            }
+            while bi < b1 {
+                r_block_q_fma::<1, 1>(
+                    &g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base,
+                );
+                bi += 1;
+            }
+            mi += 1;
+        }
+    }
+
+    /// AVX2 int8 k-vectorized (dot-product) region: widen, FMA, then the
+    /// same pairwise horizontal-sum shape as `micro::hsum` and the same
+    /// scalar tail; the slice scale multiplies the reduced sum.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn k_region_q_avx2(
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        use core::arch::x86_64::_mm256_loadu_ps;
+        let (r, n, _m, k) = g.dims;
+        let l = n * k;
+        let chunks = l / VL;
+        let tail = chunks * VL;
+        for mi in m0..m1 {
+            let scale = g.scales[mi];
+            for ri in 0..r {
+                let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+                for bi in b0..b1 {
+                    let xrow = &xd[bi * l..(bi + 1) * l];
+                    let mut acc = _mm256_setzero_ps();
+                    for (gc, xc) in grow[..tail]
+                        .chunks_exact(VL)
+                        .zip(xrow[..tail].chunks_exact(VL))
+                    {
+                        acc = _mm256_fmadd_ps(load_q8(gc), _mm256_loadu_ps(xc.as_ptr()), acc);
+                    }
+                    let mut s = hsum_m256(acc);
+                    for i in tail..l {
+                        s += grow[i] as f32 * xrow[i];
+                    }
+                    od[((mi - m_base) * b_total + bi) * r + ri] = s * scale;
+                }
+            }
+        }
+    }
+
+    /// Pairwise horizontal sum with the exact association of `micro::hsum`.
+    #[inline(always)]
+    unsafe fn hsum_m256(v: __m256) -> f32 {
+        let mut tmp = [0.0f32; VL];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), v);
+        let s0 = tmp[0] + tmp[4];
+        let s1 = tmp[1] + tmp[5];
+        let s2 = tmp[2] + tmp[6];
+        let s3 = tmp[3] + tmp[7];
+        (s0 + s2) + (s1 + s3)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) use arm::Int8NeonKernel;
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    //! NEON int8 kernels: 8 int8 lanes widened via `vmovl_s8`/`vmovl_s16`
+    //! to two i32 quads, converted to f32, then the same FMA register tiles
+    //! as [`super::super::neon`]. Memory safety follows the same
+    //! bounds-checked-subslice rule.
+
+    use core::arch::aarch64::{
+        float32x4_t, vaddq_f32, vcvtq_f32_s32, vdupq_n_f32, vfmaq_f32, vget_high_s16,
+        vget_low_s16, vld1_s8, vld1q_f32, vmovl_s16, vmovl_s8, vmulq_n_f32, vst1q_f32,
+    };
+
+    use super::super::dispatch::Kernel;
+    use super::super::micro::{self, dispatch_rb};
+    use super::super::packed::{PackedG, QuantizedG};
+    use super::super::VL;
+
+    /// NEON int8 kernel set (widen-multiply-accumulate in f32).
+    pub(crate) struct Int8NeonKernel;
+
+    impl Kernel for Int8NeonKernel {
+        fn name(&self) -> &'static str {
+            "int8-neon"
+        }
+        fn supported(&self) -> bool {
+            std::arch::is_aarch64_feature_detected!("neon")
+        }
+        fn int8(&self) -> bool {
+            true
+        }
+        fn r_region(
+            &self,
+            g: &PackedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            rm: usize,
+            rb: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            micro::r_region_based(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base)
+        }
+        fn k_region(
+            &self,
+            g: &PackedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            micro::k_region_based(g, xd, od, b_total, m0, m1, b0, b1, m_base)
+        }
+        fn r_region_q(
+            &self,
+            g: &QuantizedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            rm: usize,
+            rb: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            debug_assert!(self.supported());
+            // SAFETY: NEON probe passed (dispatch only selects supported
+            // kernels); all accesses go through bounds-checked subslices.
+            unsafe { r_region_q_neon(g, xd, od, b_total, rm, rb, m0, m1, b0, b1, m_base) }
+        }
+        fn k_region_q(
+            &self,
+            g: &QuantizedG,
+            xd: &[f32],
+            od: &mut [f32],
+            b_total: usize,
+            m0: usize,
+            m1: usize,
+            b0: usize,
+            b1: usize,
+            m_base: usize,
+        ) {
+            debug_assert!(self.supported());
+            // SAFETY: as above.
+            unsafe { k_region_q_neon(g, xd, od, b_total, m0, m1, b0, b1, m_base) }
+        }
+    }
+
+    /// A `VL`-wide f32 vector as two NEON quads.
+    #[derive(Clone, Copy)]
+    struct F32x8 {
+        lo: float32x4_t,
+        hi: float32x4_t,
+    }
+
+    #[inline(always)]
+    unsafe fn zero8() -> F32x8 {
+        F32x8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) }
+    }
+
+    /// Widen `VL` int8 lanes from a bounds-checked slice of length >= `VL`.
+    #[inline(always)]
+    unsafe fn load_q8(src: &[i8]) -> F32x8 {
+        let s = &src[..VL];
+        let w = vmovl_s8(vld1_s8(s.as_ptr()));
+        F32x8 {
+            lo: vcvtq_f32_s32(vmovl_s16(vget_low_s16(w))),
+            hi: vcvtq_f32_s32(vmovl_s16(vget_high_s16(w))),
+        }
+    }
+
+    #[inline(always)]
+    unsafe fn fma8(acc: F32x8, g: F32x8, xs: f32) -> F32x8 {
+        let xv = vdupq_n_f32(xs);
+        F32x8 { lo: vfmaq_f32(acc.lo, g.lo, xv), hi: vfmaq_f32(acc.hi, g.hi, xv) }
+    }
+
+    /// Pairwise horizontal sum with the exact association of `micro::hsum`.
+    #[inline(always)]
+    unsafe fn hsum8(v: F32x8) -> f32 {
+        let mut tmp = [0.0f32; 4];
+        vst1q_f32(tmp.as_mut_ptr(), vaddq_f32(v.lo, v.hi));
+        (tmp[0] + tmp[2]) + (tmp[1] + tmp[3])
+    }
+
+    /// Int8 FMA register-tile block: the NEON twin of [`super::r_block_q`].
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    unsafe fn r_block_q_fma<const RM: usize, const RB: usize>(
+        gd: &[i8],
+        scales: &[f32],
+        xd: &[f32],
+        od: &mut [f32],
+        l: usize,
+        r: usize,
+        r_pad: usize,
+        b_total: usize,
+        m0: usize,
+        b0: usize,
+        m_base: usize,
+    ) {
+        let rv_count = r_pad / VL;
+        for rv in 0..rv_count {
+            let mut acc = [[zero8(); RB]; RM];
+            let mut g_rows: [std::slice::ChunksExact<'_, i8>; RM] = std::array::from_fn(|im| {
+                let off = ((m0 + im) * rv_count + rv) * l * VL;
+                gd[off..off + l * VL].chunks_exact(VL)
+            });
+            let x_rows: [&[f32]; RB] =
+                std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
+            for kk in 0..l {
+                let mut gvec = [zero8(); RM];
+                for (im, row) in g_rows.iter_mut().enumerate() {
+                    gvec[im] = load_q8(row.next().expect("length l by construction"));
+                }
+                for ib in 0..RB {
+                    let xs = x_rows[ib][kk];
+                    for im in 0..RM {
+                        acc[im][ib] = fma8(acc[im][ib], gvec[im], xs);
+                    }
+                }
+            }
+            let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
+            for im in 0..RM {
+                let scale = scales[m0 + im];
+                for ib in 0..RB {
+                    let v = acc[im][ib];
+                    let mut tmp = [0.0f32; VL];
+                    vst1q_f32(tmp.as_mut_ptr(), vmulq_n_f32(v.lo, scale));
+                    vst1q_f32(tmp[4..].as_mut_ptr(), vmulq_n_f32(v.hi, scale));
+                    let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
+                    od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
+                }
+            }
+        }
+    }
+
+    /// NEON int8 r-vectorized region driver: tiling identical to
+    /// [`super::r_region_q_based`], microkernel swapped for
+    /// [`r_block_q_fma`].
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn r_region_q_neon(
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        rm: usize,
+        rb: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        let (r, n, _m, k) = g.dims;
+        let l = n * k;
+        let r_pad = g.r_pad;
+        let rm = rm.clamp(1, 8);
+        let rb = rb.clamp(1, 8);
+        let m_main = m0 + (m1 - m0) / rm * rm;
+        let b_main = b0 + (b1 - b0) / rb * rb;
+        let mut mi = m0;
+        while mi < m_main {
+            let mut bi = b0;
+            while bi < b_main {
+                dispatch_rb!(rm, rb, r_block_q_fma,
+                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                bi += rb;
+            }
+            while bi < b1 {
+                dispatch_rb!(rm, 1, r_block_q_fma,
+                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                bi += 1;
+            }
+            mi += rm;
+        }
+        while mi < m1 {
+            let mut bi = b0;
+            while bi + rb <= b1 {
+                dispatch_rb!(1, rb, r_block_q_fma,
+                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                bi += rb;
+            }
+            while bi < b1 {
+                r_block_q_fma::<1, 1>(
+                    &g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base,
+                );
+                bi += 1;
+            }
+            mi += 1;
+        }
+    }
+
+    /// NEON int8 k-vectorized (dot-product) region: widen, FMA, the same
+    /// pairwise horizontal-sum shape as `micro::hsum`, the same scalar
+    /// tail, scale at the store.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn k_region_q_neon(
+        g: &QuantizedG,
+        xd: &[f32],
+        od: &mut [f32],
+        b_total: usize,
+        m0: usize,
+        m1: usize,
+        b0: usize,
+        b1: usize,
+        m_base: usize,
+    ) {
+        let (r, n, _m, k) = g.dims;
+        let l = n * k;
+        let chunks = l / VL;
+        let tail = chunks * VL;
+        for mi in m0..m1 {
+            let scale = g.scales[mi];
+            for ri in 0..r {
+                let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
+                for bi in b0..b1 {
+                    let xrow = &xd[bi * l..(bi + 1) * l];
+                    let mut acc = zero8();
+                    for (gc, xc) in grow[..tail]
+                        .chunks_exact(VL)
+                        .zip(xrow[..tail].chunks_exact(VL))
+                    {
+                        let gv = load_q8(gc);
+                        let xv = F32x8 {
+                            lo: vld1q_f32(xc[..VL].as_ptr()),
+                            hi: vld1q_f32(xc[4..].as_ptr()),
+                        };
+                        acc = F32x8 {
+                            lo: vfmaq_f32(acc.lo, gv.lo, xv.lo),
+                            hi: vfmaq_f32(acc.hi, gv.hi, xv.hi),
+                        };
+                    }
+                    let mut s = hsum8(acc);
+                    for i in tail..l {
+                        s += grow[i] as f32 * xrow[i];
+                    }
+                    od[((mi - m_base) * b_total + bi) * r + ri] = s * scale;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
+    use crate::kernels::packed::{dequantize, pack, quantize};
+    use crate::tensor::Tensor;
+    use crate::ttd::cost::{EinsumDims, EinsumKind};
+    use crate::util::prng::Rng;
+
+    fn plan_for(dims: EinsumDims, vloop: VectorLoop) -> OptimizationPlan {
+        OptimizationPlan {
+            dims,
+            pack_g: true,
+            vector_loop: vloop,
+            vl: VL,
+            rb: RbFactors::NONE,
+            tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+            threads: 1,
+            ls_estimate: 0,
+        }
+    }
+
+    /// The portable int8 regions must agree bitwise with the portable f32
+    /// regions run over the *dequantized* core — same loop order, same
+    /// accumulation order, the scale folded in is the only difference and
+    /// `scale * (q * x)` vs `(scale * q) * x` differ only when the fold
+    /// itself rounds; an exactly-representable core sidesteps that, so the
+    /// comparison below is exact.
+    #[test]
+    fn portable_int8_regions_match_f32_reference_on_dequantized_core() {
+        let (r, n, m, k, b) = (11, 2, 5, 3, 4);
+        let dims = EinsumDims { kind: EinsumKind::Middle, m, b, n, r, k };
+        let mut rng = Rng::new(60);
+        // integer-valued core in [-127, 127]: quantizes losslessly with
+        // scale 1.0, so int8-vs-f32 comparisons are exact
+        let gd: Vec<f32> = (0..r * n * m * k)
+            .map(|_| (rng.normal() * 40.0).round().clamp(-126.0, 126.0) as f32)
+            .collect();
+        let mut g = Tensor::zeros(vec![r, n, m, k]);
+        g.data_mut().copy_from_slice(&gd);
+        // force scale 1.0 per slice: plant a +/-127 in every m-slice
+        for mi in 0..m {
+            g.data_mut()[(mi) * k] = 127.0;
+        }
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+
+        for vloop in [VectorLoop::R, VectorLoop::K, VectorLoop::None] {
+            let p = pack(&g, &plan_for(dims, vloop)).unwrap();
+            let q = quantize(&p);
+            assert!(q.scales.iter().all(|&s| s == 1.0), "{:?}", q.scales);
+            assert_eq!(dequantize(&q).data, p.data);
+            let mut out_q = vec![0.0f32; m * b * r];
+            let mut out_f = vec![0.0f32; m * b * r];
+            match vloop {
+                VectorLoop::R => {
+                    r_region_q_based(&q, x.data(), &mut out_q, b, 2, 3, 0, m, 0, b, 0);
+                    micro::r_region_based(&p, x.data(), &mut out_f, b, 2, 3, 0, m, 0, b, 0);
+                }
+                VectorLoop::K => {
+                    k_region_q_based(&q, x.data(), &mut out_q, b, 0, m, 0, b, 0);
+                    micro::k_region_based(&p, x.data(), &mut out_f, b, 0, m, 0, b, 0);
+                }
+                VectorLoop::None => {
+                    scalar_region_q_based(&q, x.data(), &mut out_q, b, 0, m, 0, b, 0);
+                    micro::scalar_packed_region_based(&p, x.data(), &mut out_f, b, 0, m, 0, b, 0);
+                }
+            }
+            assert_eq!(out_q, out_f, "{vloop:?}");
+        }
+    }
+
+    #[test]
+    fn scales_rescale_the_output_rows() {
+        // one m-slice with magnitude 254 -> scale 2.0; output must be the
+        // scaled product, not the raw int accumulation
+        let (r, n, m, k, b) = (1, 1, 1, 2, 1);
+        let dims = EinsumDims { kind: EinsumKind::Final, m, b, n, r, k };
+        let mut g = Tensor::zeros(vec![r, n, m, k]);
+        g.data_mut().copy_from_slice(&[254.0, -2.0]);
+        let mut x = Tensor::zeros(vec![b, n, k]);
+        x.data_mut().copy_from_slice(&[0.5, 3.0]);
+        let p = pack(&g, &plan_for(dims, VectorLoop::K)).unwrap();
+        let q = quantize(&p);
+        assert_eq!(q.scales, vec![2.0]);
+        assert_eq!(q.data, vec![127, -1]);
+        let mut out = vec![0.0f32; 1];
+        k_region_q_based(&q, x.data(), &mut out, b, 0, m, 0, b, 0);
+        // 2.0 * (127*0.5 + (-1)*3.0) = 2.0 * 60.5 = 121.0
+        assert_eq!(out, vec![121.0]);
+        // exact value with the true core: 254*0.5 - 2*3 = 121 (quantization
+        // is lossless here, so they agree)
+        let mut out_f = vec![0.0f32; 1];
+        micro::k_region_based(&p, x.data(), &mut out_f, b, 0, m, 0, b, 0);
+        assert_eq!(out, out_f);
+    }
+}

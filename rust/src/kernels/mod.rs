@@ -50,6 +50,7 @@ mod avx2;
 pub mod dispatch;
 mod exec;
 mod executor;
+mod int8;
 mod micro;
 mod naive;
 #[cfg(target_arch = "aarch64")]
@@ -58,12 +59,13 @@ mod packed;
 mod tune;
 
 pub use dispatch::{
-    all_kernels, default_kernel_name, force_scalar_active, portable, set_force_scalar, Kernel,
+    all_kernels, default_kernel_name, force_scalar_active, portable, preferred_kernel,
+    select_int8, set_force_scalar, set_preferred_kernel, Kernel, INT8_PORTABLE_KERNEL_NAME,
     PORTABLE_KERNEL_NAME,
 };
 pub use executor::Executor;
 pub use naive::naive_einsum;
-pub use packed::{pack, GLayout, PackedG};
+pub use packed::{dequantize, pack, quantize, GLayout, PackedG, QuantizedG};
 pub use tune::{tune_plan, tune_plan_floored};
 
 /// Microkernel lane width. Matches the paper's `vl` (256-bit RVV / f32) and

@@ -35,6 +35,38 @@ pub(crate) fn naive_region(
     }
 }
 
+/// Int8 twin of [`naive_region`]: the same Listing-2 loop nest over a
+/// quantized canonical core, f32 accumulation, per-`m`-slice scale applied
+/// once at the store.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn naive_region_q(
+    gd: &[i8],
+    scales: &[f32],
+    xd: &[f32],
+    od: &mut [f32],
+    r: usize,
+    n: usize,
+    m: usize,
+    k: usize,
+    b: usize,
+) {
+    for mi in 0..m {
+        let scale = scales[mi];
+        for bi in 0..b {
+            for ri in 0..r {
+                let mut acc = 0.0f32;
+                for ni in 0..n {
+                    for ki in 0..k {
+                        acc += gd[((ri * n + ni) * m + mi) * k + ki] as f32
+                            * xd[(bi * n + ni) * k + ki];
+                    }
+                }
+                od[(mi * b + bi) * r + ri] = acc * scale;
+            }
+        }
+    }
+}
+
 /// Plain five-deep loop nest over the canonical `G[r][n][m][k]`.
 pub fn naive_einsum(g: &Tensor, x: &Tensor) -> Result<Tensor> {
     let (r, n, m, k) = core_dims(g)?;

@@ -47,6 +47,95 @@ impl PackedG {
     }
 }
 
+/// An int8-quantized core in one of the [`PackedG`] layouts.
+///
+/// Quantization is symmetric per `m`-slice: every value belonging to
+/// output row `mi` shares one positive scale, `data = round(g / scale)`
+/// clamped to `[-127, 127]` (the symmetric int8 range — -128 is never
+/// produced so negation stays exact). Indexing of `data` is identical to
+/// the f32 buffer of the same layout, including `PackedR` zero pad lanes
+/// (a zero quantizes to zero under every scale), so the int8 kernels walk
+/// the exact same offsets as their f32 twins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedG {
+    /// Which packed layout `data` holds.
+    pub layout: GLayout,
+    /// (r, n, m, k) of the canonical core.
+    pub dims: (usize, usize, usize, usize),
+    /// r rounded up to a VL multiple (PackedR only).
+    pub r_pad: usize,
+    /// Per-`m`-slice dequantization scales, length `m`, all finite and > 0.
+    pub scales: Vec<f32>,
+    /// The quantized buffer — same length and index formula as the f32
+    /// buffer of `layout`.
+    pub data: Vec<i8>,
+}
+
+impl QuantizedG {
+    /// Resident bytes: one byte per lane plus the f32 scale vector.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Iterate the indices of `data` that belong to `m`-slice `mi`.
+    /// `PackedR`/`PackedK` keep each slice contiguous; `Canonical` strides.
+    fn slice_indices(
+        layout: GLayout,
+        dims: (usize, usize, usize, usize),
+        r_pad: usize,
+        mi: usize,
+    ) -> Box<dyn Iterator<Item = usize>> {
+        let (r, n, m, k) = dims;
+        let l = n * k;
+        match layout {
+            GLayout::PackedR => Box::new(mi * r_pad * l..(mi + 1) * r_pad * l),
+            GLayout::PackedK => Box::new(mi * r * l..(mi + 1) * r * l),
+            GLayout::Canonical => {
+                // `[r][n][m][k]`: row `mi` owns a k-run every m*k elements
+                Box::new((0..r * n).map(move |rn| (rn * m + mi) * k).flat_map(|base| base..base + k))
+            }
+        }
+    }
+}
+
+/// Quantize a packed core to int8 with one symmetric scale per `m`-slice.
+///
+/// The scale is `max|g| / 127` over the slice (1.0 for an all-zero slice so
+/// dequantization never divides by zero); pad lanes are zero in the input
+/// and stay zero in the output, preserving the `PackedR` contract the
+/// vector kernels rely on.
+pub fn quantize(p: &PackedG) -> QuantizedG {
+    let m = p.dims.2;
+    let mut scales = vec![1.0f32; m];
+    let mut data = vec![0i8; p.data.len()];
+    for (mi, scale) in scales.iter_mut().enumerate() {
+        let mut amax = 0.0f32;
+        for i in QuantizedG::slice_indices(p.layout, p.dims, p.r_pad, mi) {
+            amax = amax.max(p.data[i].abs());
+        }
+        if amax > 0.0 {
+            *scale = amax / 127.0;
+        }
+        for i in QuantizedG::slice_indices(p.layout, p.dims, p.r_pad, mi) {
+            data[i] = (p.data[i] / *scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    QuantizedG { layout: p.layout, dims: p.dims, r_pad: p.r_pad, scales, data }
+}
+
+/// Reconstruct the f32 packed buffer a [`QuantizedG`] approximates —
+/// the reference the roundtrip property tests bound error against.
+pub fn dequantize(q: &QuantizedG) -> PackedG {
+    let m = q.dims.2;
+    let mut data = vec![0.0f32; q.data.len()];
+    for (mi, &scale) in q.scales.iter().enumerate() {
+        for i in QuantizedG::slice_indices(q.layout, q.dims, q.r_pad, mi) {
+            data[i] = q.data[i] as f32 * scale;
+        }
+    }
+    PackedG { layout: q.layout, dims: q.dims, r_pad: q.r_pad, data }
+}
+
 /// Pack `g` as the plan requires.
 pub fn pack(g: &Tensor, plan: &OptimizationPlan) -> Result<PackedG> {
     let d = g.dims();
@@ -187,6 +276,63 @@ mod tests {
         let p = pack(&g, &plan_for((2, 2, 2, 2), VectorLoop::None, false)).unwrap();
         assert_eq!(p.layout, GLayout::Canonical);
         assert_eq!(p.data, g.data());
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_is_within_half_a_step_per_slice() {
+        let mut rng = Rng::new(54);
+        let g = Tensor::randn(vec![5, 3, 4, 2], 1.0, &mut rng);
+        for vloop in [VectorLoop::R, VectorLoop::K, VectorLoop::None] {
+            let p = pack(&g, &plan_for((5, 3, 4, 2), vloop, vloop != VectorLoop::None)).unwrap();
+            let q = quantize(&p);
+            assert_eq!(q.layout, p.layout);
+            assert_eq!(q.data.len(), p.data.len());
+            assert_eq!(q.scales.len(), 4);
+            let back = dequantize(&q);
+            for mi in 0..4 {
+                let step = q.scales[mi];
+                assert!(step > 0.0 && step.is_finite());
+                for i in QuantizedG::slice_indices(p.layout, p.dims, p.r_pad, mi) {
+                    let err = (back.data[i] - p.data[i]).abs();
+                    assert!(err <= step / 2.0 + 1e-7, "slice {mi} idx {i}: err {err} > {step}/2");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_keeps_packed_r_pad_lanes_zero() {
+        let mut rng = Rng::new(55);
+        let g = Tensor::randn(vec![3, 2, 2, 1], 1.0, &mut rng);
+        let p = pack(&g, &plan_for((3, 2, 2, 1), VectorLoop::R, true)).unwrap();
+        let q = quantize(&p);
+        assert_eq!(q.r_pad, 8);
+        for mi in 0..2 {
+            for kk in 0..2 {
+                for lane in 3..8 {
+                    assert_eq!(q.data[(mi * 2 + kk) * VL + lane], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_all_zero_slice_uses_unit_scale() {
+        let g = Tensor::zeros(vec![2, 2, 3, 2]);
+        let p = pack(&g, &plan_for((2, 2, 3, 2), VectorLoop::K, true)).unwrap();
+        let q = quantize(&p);
+        assert_eq!(q.scales, vec![1.0; 3]);
+        assert!(q.data.iter().all(|&v| v == 0));
+        assert_eq!(dequantize(&q).data, p.data);
+    }
+
+    #[test]
+    fn quantized_bytes_are_a_quarter_of_f32_plus_scales() {
+        let mut rng = Rng::new(56);
+        let g = Tensor::randn(vec![8, 3, 5, 2], 1.0, &mut rng);
+        let p = pack(&g, &plan_for((8, 3, 5, 2), VectorLoop::R, true)).unwrap();
+        let q = quantize(&p);
+        assert_eq!(q.bytes(), p.bytes() / 4 + 5 * 4);
     }
 
     #[test]

@@ -37,9 +37,9 @@ use crate::util::prng::Rng;
 use crate::util::timer::{self, MeasureFloor};
 
 use super::dispatch::{self, Kernel};
-use super::exec::execute_plan_into;
+use super::exec::{execute_plan_into, execute_plan_into_q};
 use super::executor::Executor;
-use super::packed::{pack, PackedG};
+use super::packed::{pack, PackedG, QuantizedG};
 
 /// How many of the solver's top RB candidates each tuning pass measures.
 const TUNE_TOP_K: usize = 6;
@@ -58,6 +58,23 @@ fn measure_candidate(
     timer::try_min_secs(
         "autotune candidate",
         || execute_plan_into(plan, kernel, g, xd, out),
+        floor,
+    )
+}
+
+/// [`measure_candidate`] for a quantized core: same floored min-of-samples
+/// timing, running the int8 execution path.
+fn measure_candidate_q(
+    plan: &OptimizationPlan,
+    kernel: &'static dyn Kernel,
+    g: &QuantizedG,
+    xd: &[f32],
+    out: &mut Vec<f32>,
+    floor: &MeasureFloor,
+) -> Result<f64> {
+    timer::try_min_secs(
+        "autotune int8 candidate",
+        || execute_plan_into_q(plan, kernel, g, xd, out),
         floor,
     )
 }
@@ -238,6 +255,94 @@ impl Executor {
         }
         Ok(plans)
     }
+
+    /// [`Executor::tune_chain`] over **quantized** cores: identical
+    /// candidate space (top-K RB × thread counts per step, fixed-seed
+    /// representative inputs) measured through the int8 execution path,
+    /// and the kernel roster is the int8 family
+    /// ([`dispatch::candidate_kernels_q`], int8-portable first) unless
+    /// this executor's kernel was pinned. The winning int8 kernel becomes
+    /// this executor's dispatch so its name flows into the artifact TUNE
+    /// section exactly like the f32 path's.
+    pub fn tune_chain_q(
+        &mut self,
+        layout: &TtLayout,
+        batch: usize,
+        quant: &[QuantizedG],
+        floor: &MeasureFloor,
+    ) -> Result<Vec<OptimizationPlan>> {
+        dispatch::ensure_supported(self.kernel())?;
+        let chain = cost::einsum_chain(layout, batch);
+        if chain.len() != quant.len() {
+            return Err(Error::shape(format!(
+                "tune_chain_q: chain has {} steps but {} quantized cores",
+                chain.len(),
+                quant.len()
+            )));
+        }
+        let kernels: Vec<&'static dyn Kernel> = if self.kernel_pinned() {
+            vec![self.kernel()]
+        } else {
+            dispatch::candidate_kernels_q()
+        };
+        for k in &kernels {
+            dispatch::ensure_supported(*k)?;
+        }
+        // same fixed seed as the f32 tuner: comparable representative inputs
+        let mut rng = Rng::new(0x7e57_c4a1);
+        let mut out = Vec::new();
+        let mut totals = vec![0.0f64; kernels.len()];
+        let mut winners: Vec<Vec<OptimizationPlan>> =
+            kernels.iter().map(|_| Vec::with_capacity(chain.len())).collect();
+        for (step, dims) in chain.iter().enumerate() {
+            let base = self.plan(dims)?;
+            let x = rng.normal_vec(dims.b * dims.n * dims.k, 0.5);
+            let mut cands: Vec<OptimizationPlan> =
+                regblock::candidates(dims, self.machine(), base.vector_loop, TUNE_TOP_K)
+                    .into_iter()
+                    .map(|(rb, _ls)| OptimizationPlan { rb, ..base })
+                    .collect();
+            if cands.is_empty() {
+                cands.push(base);
+            }
+            let thread_opts = [base.threads, 1];
+            let threads = if base.threads > 1 { &thread_opts[..] } else { &thread_opts[1..] };
+            for (ki, kernel) in kernels.iter().enumerate() {
+                let mut best: Option<(OptimizationPlan, f64)> = None;
+                for cand in &cands {
+                    for &t in threads {
+                        let plan = OptimizationPlan { threads: t, ..*cand };
+                        let secs =
+                            measure_candidate_q(&plan, *kernel, &quant[step], &x, &mut out, floor)?;
+                        let better = match &best {
+                            Some((_, b)) => secs < *b,
+                            None => true,
+                        };
+                        if better {
+                            best = Some((plan, secs));
+                        }
+                    }
+                }
+                let (winner, secs) = best.expect("candidate list is non-empty");
+                totals[ki] += secs;
+                winners[ki].push(winner);
+            }
+        }
+        // smallest chain total wins; strict inequality keeps the earlier
+        // candidate on ties (kernels[0] is the int8-portable reference)
+        let mut best_ki = 0;
+        for ki in 1..kernels.len() {
+            if totals[ki] < totals[best_ki] {
+                best_ki = ki;
+            }
+        }
+        self.set_kernel(kernels[best_ki]);
+        let plans = winners.swap_remove(best_ki);
+        for winner in &plans {
+            self.set_plan(*winner);
+        }
+        Ok(plans)
+    }
 }
 
 #[cfg(test)]
@@ -318,6 +423,49 @@ mod tests {
             // the winner is what the executor now serves for those dims
             assert_eq!(ex.plan(&t.dims).unwrap(), *t);
         }
+    }
+
+    #[test]
+    fn tune_chain_q_preserves_structure_and_selects_an_int8_kernel() {
+        let machine = MachineSpec::spacemit_k1();
+        let layout = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 8).unwrap();
+        let mut rng = Rng::new(129);
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(&machine);
+        let quant: Vec<QuantizedG> = packed_chain(&layout, &tt, &mut ex, 1)
+            .iter()
+            .map(crate::kernels::quantize)
+            .collect();
+        let analytic: Vec<OptimizationPlan> =
+            einsum_chain(&layout, 1).iter().map(|d| ex.plan(d).unwrap()).collect();
+        let tuned = ex.tune_chain_q(&layout, 1, &quant, &MeasureFloor::quick()).unwrap();
+        assert_eq!(tuned.len(), analytic.len());
+        for (t, a) in tuned.iter().zip(&analytic) {
+            assert_eq!(t.dims, a.dims);
+            assert_eq!(t.vector_loop, a.vector_loop);
+            assert_eq!(t.pack_g, a.pack_g);
+            assert!(t.rb.registers() <= machine.vector_regs as usize);
+            assert!(t.threads >= 1);
+            assert_eq!(ex.plan(&t.dims).unwrap(), *t);
+        }
+        // the roster is the int8 family, so the installed winner must be int8
+        let winner = dispatch::by_name(ex.kernel_name())
+            .expect("tuned kernel is registered");
+        assert!(winner.int8(), "tune_chain_q winner {} must be int8", ex.kernel_name());
+    }
+
+    #[test]
+    fn tune_chain_q_rejects_mismatched_cores() {
+        let machine = MachineSpec::spacemit_k1();
+        let layout = TtLayout::with_uniform_rank(vec![10, 10], vec![12, 15], 8).unwrap();
+        let mut rng = Rng::new(130);
+        let tt = random_cores(&layout, &mut rng);
+        let mut ex = Executor::new(&machine);
+        let quant: Vec<QuantizedG> = packed_chain(&layout, &tt, &mut ex, 1)
+            .iter()
+            .map(crate::kernels::quantize)
+            .collect();
+        assert!(ex.tune_chain_q(&layout, 1, &quant[..1], &MeasureFloor::quick()).is_err());
     }
 
     #[test]

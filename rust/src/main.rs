@@ -22,7 +22,10 @@
 //!                          write a versioned `.ttrv` bundle
 //!                          (--model <zoo-name|spec.toml> --out model.ttrv
 //!                           --rank R --seed S --tune: persist measured
-//!                           autotuned plans in the TUNE section)
+//!                           autotuned plans in the TUNE section;
+//!                           --quantize [--max-quant-error EPS]: persist
+//!                           int8 cores in the QUANT section when the
+//!                           measured output error fits the budget)
 //!   serve-demo             start the serving coordinator on a TT LeNet300
 //!                          (or warm-start it from one or more repeated
 //!                          --artifact model.ttrv flags, co-hosted in one
@@ -31,7 +34,12 @@
 //!                          (--workers N --max-batch B --wait-us T
 //!                           --queue-cap Q --shards S --steal ring|off
 //!                           --slo-us T --cache-bytes B
-//!                           --snapshot-json out.json)
+//!                           --snapshot-json out.json --kernel NAME)
+//!
+//! `bench` and `serve-demo` take `--kernel NAME` to pin every engine onto
+//! one compiled-in microkernel (portable | avx2-fma | neon |
+//! int8-portable | int8-avx2 | int8-neon); unknown or host-unsupported
+//! names are a typed kernel error before any work starts.
 //!   artifacts-check        --verify model.ttrv: validate a `.ttrv` bundle
 //!                          (CRCs + bitwise replay against a fresh
 //!                          compression); without --verify, load + execute
@@ -148,13 +156,16 @@ fn print_help() {
          commands: tables | dse | plan | kernel-bench | bench | compress | serve-demo | artifacts-check\n\
          \n\
          bench [--quick] [--out-dir D] [--kernels-only|--serve-only] [--config bench.toml]\n\
+         \u{20}        [--kernel NAME]\n\
          \u{20}        measured kernel + serving sweeps -> BENCH_kernels.json / BENCH_serve.json\n\
          compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R] [--seed S] [--tune]\n\
+         \u{20}        [--quantize [--max-quant-error EPS]]\n\
          \u{20}        DSE-route + TT-SVD a model's FC stack into a versioned .ttrv bundle\n\
-         \u{20}        (--tune: measure RB/thread candidates per einsum, persist the winners)\n\
+         \u{20}        (--tune: measure RB/thread candidates per einsum, persist the winners;\n\
+         \u{20}         --quantize: persist int8 cores when measured error fits the budget)\n\
          serve-demo [--artifact a.ttrv [--artifact b.ttrv ...]] [--workers N] [--max-batch B]\n\
          \u{20}        [--shards S] [--steal ring|off] [--slo-us T] [--cache-bytes B]\n\
-         \u{20}        [--snapshot-json out.json]\n\
+         \u{20}        [--snapshot-json out.json] [--kernel NAME]\n\
          \u{20}        serve a TT LeNet300, or co-host every --artifact bundle in one\n\
          \u{20}        registry (round-robin load, per-model metrics, JSON snapshot)\n\
          artifacts-check --verify model.ttrv\n\
@@ -431,8 +442,27 @@ fn cmd_kernel_bench(args: &Args) -> ttrv::Result<()> {
 /// writes the schema-versioned `BENCH_kernels.json` / `BENCH_serve.json`
 /// reports — per-model rows plus an embedded `ttrv-serve-snapshot` — so
 /// every future run appends a point to the perf trajectory.
+/// Apply the shared `--kernel NAME` flag: pin process-wide dispatch to the
+/// named microkernel ([`ttrv::kernels::set_preferred_kernel`] — typed
+/// `Error::Kernel` on an unknown name or one this host cannot run).
+fn apply_kernel_flag(args: &Args) -> ttrv::Result<()> {
+    match last(args, "kernel") {
+        Some(name) => ttrv::kernels::set_preferred_kernel(Some(name)),
+        None => Ok(()),
+    }
+}
+
+/// The kernel name the banners report: the `--kernel` pin when present
+/// (whichever family it names), else what f32 dispatch selects.
+fn active_kernel_name() -> &'static str {
+    ttrv::kernels::preferred_kernel()
+        .map(|k| k.name())
+        .unwrap_or_else(ttrv::kernels::default_kernel_name)
+}
+
 fn cmd_bench(args: &Args) -> ttrv::Result<()> {
     use ttrv::bench::harness;
+    apply_kernel_flag(args)?;
     let quick = args.contains_key("quick") || ttrv::util::bench_quick_env();
     let kernels_only = args.contains_key("kernels-only");
     let serve_only = args.contains_key("serve-only");
@@ -465,7 +495,7 @@ fn cmd_bench(args: &Args) -> ttrv::Result<()> {
             "kernel sweep ({} mode): 3 einsum kinds x 8 pinned shapes x 3 implementations \
              [kernel: {}]",
             if quick { "quick" } else { "full" },
-            ttrv::kernels::default_kernel_name(),
+            active_kernel_name(),
         );
         let rows = harness::run_kernel_sweep(&bcfg, quick)?;
         for r in &rows {
@@ -566,6 +596,37 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
     );
     let t0 = std::time::Instant::now();
     let mut bundle = ttrv::artifact::compress(&spec, &machine, &cfg)?;
+    if args.contains_key("quantize") {
+        // int8-quantize the packed cores per m slice; the shadows ride
+        // along in the (optional, format v4) QUANT section and
+        // `serve-demo --artifact` warm-starts straight onto the int8
+        // engines. --max-quant-error gates shipping on the *measured*
+        // output error of the seeded calibration batch.
+        let budget = match last(args, "max-quant-error") {
+            None => None,
+            Some(_) => Some(get(args, "max-quant-error", 0.0f64)?),
+        };
+        let rep = ttrv::artifact::quantize_bundle(&mut bundle, &machine, budget)?;
+        if rep.applied {
+            println!(
+                "quantized {} TT layer(s) ({} cores) into the QUANT section: \
+                 {} -> {} core bytes ({:.1}x smaller), measured max rel error {:.2e}",
+                rep.layers,
+                rep.cores,
+                rep.f32_core_bytes,
+                rep.int8_core_bytes,
+                rep.f32_core_bytes as f64 / rep.int8_core_bytes.max(1) as f64,
+                rep.max_rel_error,
+            );
+        } else {
+            println!(
+                "quantization NOT applied: measured max rel error {:.2e} exceeds \
+                 --max-quant-error {:.2e}; shipping f32 cores",
+                rep.max_rel_error,
+                budget.unwrap_or(0.0),
+            );
+        }
+    }
     if args.contains_key("tune") {
         // measured autotuning over the stored packed cores; the winners
         // ride along in the (optional, format v2) TUNE section and
@@ -611,6 +672,7 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
 }
 
 fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
+    apply_kernel_flag(args)?;
     let requests: usize = get(args, "requests", 200)?;
     let d = ServeConfig::default();
     let serve_cfg = ServeConfig {
@@ -643,8 +705,13 @@ fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
                 .iter()
                 .filter(|op| matches!(op, ttrv::artifact::BundleOp::Tt(t) if t.tuned.is_some()))
                 .count();
+            let quant_layers = bundle
+                .ops
+                .iter()
+                .filter(|op| matches!(op, ttrv::artifact::BundleOp::Tt(t) if t.quant.is_some()))
+                .count();
             println!(
-                "loaded {} from {path} ({} FC layers, {} TT, {})",
+                "loaded {} from {path} ({} FC layers, {} TT, {}{})",
                 bundle.name,
                 bundle.shapes.len(),
                 bundle.tt_layers(),
@@ -652,6 +719,11 @@ fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
                     format!("{tuned_layers} serving measured TUNE plans")
                 } else {
                     "analytic plans".to_string()
+                },
+                if quant_layers > 0 {
+                    format!(", {quant_layers} int8 QUANT layer(s)")
+                } else {
+                    String::new()
                 }
             );
             let modeled: f64 = bundle
@@ -717,7 +789,7 @@ fn cmd_serve_demo(args: &Args) -> ttrv::Result<()> {
         } else {
             String::new()
         },
-        ttrv::kernels::default_kernel_name(),
+        active_kernel_name(),
     );
 
     // synthetic load, round-robined across the co-hosted models

@@ -686,6 +686,186 @@ fn pre_bump_version_1_bundle_still_loads() {
 }
 
 // ---------------------------------------------------------------------------
+// QUANT section (format v4: int8-quantized TT cores)
+// ---------------------------------------------------------------------------
+
+use ttrv::artifact::format::SEC_QUANT;
+
+/// One quantized LeNet300 (no error budget: always applies), shared across
+/// the QUANT tests. The measured error it records is kernel-independent
+/// (`measured_quant_error` pins the portable reference kernels itself),
+/// but the fixture raises force-scalar anyway — suite policy: anything
+/// that executes engines runs forced-scalar.
+fn quantized_lenet_bundle() -> &'static ModelBundle {
+    static BUNDLE: OnceLock<ModelBundle> = OnceLock::new();
+    BUNDLE.get_or_init(|| {
+        force_scalar();
+        let mut bundle = lenet_bundle().clone();
+        let report = artifact::quantize_bundle(&mut bundle, &k1(), None).unwrap();
+        assert!(report.applied);
+        bundle
+    })
+}
+
+/// Rebuild a written bundle's container with its QUANT payload transformed
+/// (CRCs fixed up), mirroring [`with_patched_tune`].
+fn with_patched_quant(bytes: &[u8], f: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut sections = Vec::with_capacity(count);
+    for i in 0..count {
+        let e = &bytes[HEADER_LEN + i * TOC_ENTRY_LEN..HEADER_LEN + (i + 1) * TOC_ENTRY_LEN];
+        let id = u32::from_le_bytes(e[0..4].try_into().unwrap());
+        let off = u64::from_le_bytes(e[8..16].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(e[16..24].try_into().unwrap()) as usize;
+        let mut payload = bytes[off..off + len].to_vec();
+        if id == SEC_QUANT {
+            f(&mut payload);
+        }
+        sections.push((id, payload));
+    }
+    container(&sections)
+}
+
+#[test]
+fn quant_section_roundtrips_and_is_optional() {
+    force_scalar();
+    // without quantized cores: no QUANT section in the container
+    let bytes = artifact::write_bundle(lenet_bundle());
+    let ids: Vec<u32> = artifact::list_sections(&bytes).unwrap().iter().map(|s| s.id).collect();
+    assert!(!ids.contains(&SEC_QUANT), "{ids:?}");
+
+    // with int8 cores: the section appears and round-trips exactly,
+    // shrinking the resident TT core bytes by at least 3.5x (the int8
+    // payload is 1/4 of f32; scales and the pad-lane layout cost the rest)
+    let quantized = quantized_lenet_bundle();
+    let bytes = artifact::write_bundle(quantized);
+    let ids: Vec<u32> = artifact::list_sections(&bytes).unwrap().iter().map(|s| s.id).collect();
+    assert!(ids.contains(&SEC_QUANT), "{ids:?}");
+    let back = artifact::read_bundle_bytes(&bytes).unwrap();
+    assert_eq!(&back, quantized);
+    let (mut f32_bytes, mut int8_bytes) = (0u64, 0u64);
+    for op in &back.ops {
+        if let BundleOp::Tt(t) = op {
+            let q = t.quant.as_ref().expect("int8 cores persisted");
+            assert_eq!(q.len(), t.packed.len());
+            for (qg, pg) in q.iter().zip(&t.packed) {
+                assert_eq!(qg.layout, pg.layout);
+                assert_eq!(qg.dims.2, qg.scales.len(), "one scale per m slice");
+                f32_bytes += pg.bytes() as u64;
+                int8_bytes += qg.bytes() as u64;
+            }
+        }
+    }
+    assert!(
+        f32_bytes as f64 >= 3.5 * int8_bytes as f64,
+        "core bytes only shrank {f32_bytes} -> {int8_bytes}"
+    );
+}
+
+#[test]
+fn quantized_engine_serves_within_the_measured_error_regime() {
+    force_scalar();
+    // an engine built from a quantized bundle serves the int8 cores; its
+    // outputs track the f32 engine within the per-slice quantization
+    // error regime (the exact budget is measured and pinned by
+    // `quantize_bundle`'s own tests — this is the serving-path e2e)
+    let back =
+        artifact::read_bundle_bytes(&artifact::write_bundle(quantized_lenet_bundle())).unwrap();
+    let mut int8_engine = back.build_engine(&k1()).unwrap();
+    let mut f32_engine = lenet_bundle().build_engine(&k1()).unwrap();
+    let mut rng = Rng::new(41);
+    for batch in [1usize, 4] {
+        let x = Tensor::randn(vec![batch, 784], 1.0, &mut rng);
+        let q = int8_engine.forward(&x).unwrap();
+        let f = f32_engine.forward(&x).unwrap();
+        assert_eq!(q.dims(), f.dims());
+        let scale = f.data().iter().fold(0f32, |a, v| a.max(v.abs())).max(1e-6);
+        for (i, (a, b)) in q.data().iter().zip(f.data()).enumerate() {
+            assert!(
+                (a - b).abs() <= 0.1 * scale,
+                "batch {batch} elem {i}: int8 {a} vs f32 {b} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn verify_passes_on_a_quantized_bundle() {
+    force_scalar();
+    // quantization is deterministic, so verify re-derives the int8 cores
+    // from a fresh compression and byte-compares the QUANT section like
+    // any other
+    let back =
+        artifact::read_bundle_bytes(&artifact::write_bundle(quantized_lenet_bundle())).unwrap();
+    let report = artifact::verify(&back, &k1(), &DseConfig::default()).unwrap();
+    assert_eq!(report.fc_layers, 3);
+    assert_eq!(report.tt_layers, 2);
+}
+
+fn assert_quant_corruption_rejected(bytes: &[u8], what: &str, f: impl FnOnce(&mut Vec<u8>)) {
+    let corrupt = with_patched_quant(bytes, f);
+    let err = artifact::read_bundle_bytes(&corrupt).expect_err(&format!("{what} accepted"));
+    assert!(matches!(err, Error::Artifact(_)), "{what}: {err}");
+    assert!(err.to_string().contains("QUANT"), "{what}: {err}");
+}
+
+#[test]
+fn corrupted_quant_sections_are_typed_errors() {
+    let bytes = artifact::write_bundle(quantized_lenet_bundle());
+    // sanity: the untouched container decodes
+    assert_eq!(&artifact::read_bundle_bytes(&bytes).unwrap(), quantized_lenet_bundle());
+
+    // QUANT payload layout: count u32 | idx u32 | steps u32 | cores
+    // (core: layout u8 at +0, r/n/m/k/r_pad 5 x u64 at +1, scale count +
+    // scales, data len + raw int8 — first core starts at payload byte 12)
+    assert_quant_corruption_rejected(&bytes, "truncated", |p| {
+        p.pop();
+    });
+    assert_quant_corruption_rejected(&bytes, "trailing bytes", |p| p.push(0xAB));
+    assert_quant_corruption_rejected(&bytes, "op index out of range", |p| {
+        p[4..8].copy_from_slice(&9u32.to_le_bytes())
+    });
+    assert_quant_corruption_rejected(&bytes, "wrong core count", |p| {
+        p[8..12].copy_from_slice(&1u32.to_le_bytes())
+    });
+    assert_quant_corruption_rejected(&bytes, "entry count too large", |p| {
+        p[0..4].copy_from_slice(&9u32.to_le_bytes())
+    });
+    assert_quant_corruption_rejected(&bytes, "unknown layout tag", |p| p[12] = 0xFF);
+    assert_quant_corruption_rejected(&bytes, "dims disagree with OPS core", |p| p[13] ^= 0x01);
+}
+
+#[test]
+fn id_5_is_quant_only_from_version_4() {
+    // a pre-v4 file carrying an id-5 section predates the QUANT grammar:
+    // it is an unknown section and must be skipped — while the same bytes
+    // under a v4 header must be grammar-validated and rejected
+    let bundle = lenet_bundle();
+    let ids_and_payloads: Vec<(u32, Vec<u8>)> = {
+        let bytes = artifact::write_bundle(bundle);
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        (0..count)
+            .map(|i| {
+                let e =
+                    &bytes[HEADER_LEN + i * TOC_ENTRY_LEN..HEADER_LEN + (i + 1) * TOC_ENTRY_LEN];
+                let id = u32::from_le_bytes(e[0..4].try_into().unwrap());
+                let off = u64::from_le_bytes(e[8..16].try_into().unwrap()) as usize;
+                let len = u64::from_le_bytes(e[16..24].try_into().unwrap()) as usize;
+                (id, bytes[off..off + len].to_vec())
+            })
+            .chain(std::iter::once((SEC_QUANT, b"not a QUANT section".to_vec())))
+            .collect()
+    };
+    let mut bytes = container(&ids_and_payloads); // stamped FORMAT_VERSION (4)
+    let err = artifact::read_bundle_bytes(&bytes).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("QUANT"), "{err}");
+    bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+    let back = artifact::read_bundle_bytes(&bytes).unwrap();
+    assert_eq!(&back, bundle, "pre-v4 id-5 section must be skipped, not decoded");
+}
+
+// ---------------------------------------------------------------------------
 // Golden artifact (forward-compat tripwire)
 // ---------------------------------------------------------------------------
 

@@ -25,10 +25,16 @@
 //! absolute floor covers the all-zero / subnormal corner. No magic
 //! epsilons: a kernel that reassociates is fine, a kernel that drops or
 //! double-counts a term is ~L/2 times over this bound and fails loudly.
+//!
+//! The int8 twin suite holds every kernel's quantized path (`execute_q`
+//! over `quantize(pack(g))`) to the same bound **plus** the per-`m`-slice
+//! quantization step: symmetric rounding perturbs each `g` element by at
+//! most `scale[m] / 2`, so an output element of slice `m` moves by at
+//! most `(scale[m] / 2) * sum_{n,k} |x|` on top of the accumulation term.
 
 use ttrv::compiler::cb_suite;
 use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
-use ttrv::kernels::{pack, Executor, Kernel, VL};
+use ttrv::kernels::{pack, quantize, Executor, Kernel, VL};
 use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::{EinsumDims, EinsumKind};
@@ -152,6 +158,94 @@ fn sweep_case(dims: EinsumDims, rng: &mut Rng, label: &str) {
     }
 }
 
+/// Int8 bound: the f32 differential bound plus the quantization step.
+/// For an output element of slice `m` (output layout `[m, b, r]`),
+/// symmetric rounding moves each `g` element by at most `scale[m] / 2`,
+/// contributing at most `(scale[m] / 2) * sum_{n,k} |x[b,n,k]|`; the
+/// `1.01` factor absorbs the `gamma_L` cross-term on the perturbation.
+fn tolerances_q(g: &Tensor, x: &Tensor, scales: &[f32], dims: &EinsumDims) -> Vec<f32> {
+    let base = tolerances(g, x, dims.n * dims.k);
+    let slab = dims.n * dims.k;
+    let xd = x.data();
+    let abs_x: Vec<f32> = (0..dims.b)
+        .map(|bi| xd[bi * slab..(bi + 1) * slab].iter().map(|v| v.abs()).sum())
+        .collect();
+    base.iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let mi = i / (dims.b * dims.r);
+            let bi = (i / dims.r) % dims.b;
+            t + 1.01 * 0.5 * scales[mi] * abs_x[bi]
+        })
+        .collect()
+}
+
+/// Quantized twin of [`check_plan`]: pack for `plan`, quantize the packed
+/// core, run the kernel's int8 path via `execute_q`, and hold every
+/// element to the int8 per-element bound.
+fn check_plan_q(
+    kernel: &'static dyn Kernel,
+    plan: OptimizationPlan,
+    g: &Tensor,
+    x: &Tensor,
+    want: &[f32],
+    tol: &[f32],
+    label: &str,
+) {
+    let machine = MachineSpec::spacemit_k1();
+    let mut ex = Executor::with_kernel(&machine, kernel).unwrap();
+    let qg = quantize(&pack(g, &plan).unwrap());
+    ex.set_plan(plan);
+    let got = ex.execute_q(&plan.dims, &qg, x).unwrap();
+    assert_eq!(got.data().len(), want.len(), "{label}: wrong output size");
+    for (i, ((&a, &w), &t)) in got.data().iter().zip(want).zip(tol).enumerate() {
+        assert!(
+            (a - w).abs() <= t,
+            "kernel {} int8 {label}: elem {i}: got {a}, want {w}, |diff| {} > tol {t}",
+            kernel.name(),
+            (a - w).abs()
+        );
+    }
+}
+
+/// Quantized twin of [`sweep_case`]: one (dims) case through every layout
+/// x blocking flavor for every registered kernel's int8 path. Slice
+/// scales are layout-independent (the per-`m` amax is the same set of
+/// values in any packing), so one canonical quantize pins the bound.
+fn sweep_case_q(dims: EinsumDims, rng: &mut Rng, label: &str) {
+    let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, rng);
+    let x = Tensor::randn(vec![dims.b, dims.n, dims.k], 1.0, rng);
+    let want = ttrv::kernels::naive_einsum(&g, &x).unwrap();
+    let scales = quantize(&pack(&g, &OptimizationPlan::naive(dims)).unwrap()).scales;
+    let tol = tolerances_q(&g, &x, &scales, &dims);
+    for &kernel in ttrv::kernels::all_kernels() {
+        if !kernel.supported() {
+            continue;
+        }
+        let naive = OptimizationPlan::naive(dims);
+        check_plan_q(kernel, naive, &g, &x, want.data(), &tol, &format!("{label} canonical"));
+        for vloop in [VectorLoop::None, VectorLoop::K] {
+            let p = plan_with(dims, true, vloop, RbFactors::NONE, 1);
+            check_plan_q(kernel, p, &g, &x, want.data(), &tol, &format!("{label} {vloop:?}"));
+        }
+        for (rm, rb) in [(1usize, 1usize), (2, 3), (4, 2), (8, 8)] {
+            let rbf = RbFactors { rm, rb, rr: 1, rk: 1 };
+            let p = plan_with(dims, true, VectorLoop::R, rbf, 1);
+            check_plan_q(
+                kernel,
+                p,
+                &g,
+                &x,
+                want.data(),
+                &tol,
+                &format!("{label} R rb=({rm},{rb})"),
+            );
+        }
+        let p = plan_with(dims, true, VectorLoop::R, RbFactors { rm: 4, rb: 4, rr: 1, rk: 1 }, 2);
+        check_plan_q(kernel, p, &g, &x, want.data(), &tol, &format!("{label} R T=2"));
+    }
+}
+
 /// All 24 pinned Table-3 shapes x 3 G layouts x every registered kernel.
 #[test]
 fn differential_suite_on_pinned_table3_shapes() {
@@ -162,6 +256,39 @@ fn differential_suite_on_pinned_table3_shapes() {
             dims.b = dims.b.min(B_CAP);
             sweep_case(dims, &mut rng, &e.id);
         }
+    }
+}
+
+/// Int8 twin of the 24-shape sweep: every kernel's quantized path over
+/// the same pinned Table-3 shapes x 3 G layouts, held to the f32 bound
+/// plus the per-slice quantization step.
+#[test]
+fn differential_suite_int8_on_pinned_table3_shapes() {
+    let mut rng = Rng::new(0x18_d1ff ^ 0x5eed_0000);
+    for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+        for e in cb_suite(kind) {
+            let mut dims = e.dims;
+            dims.b = dims.b.min(B_CAP);
+            sweep_case_q(dims, &mut rng, &e.id);
+        }
+    }
+}
+
+/// Int8 twin of the remainder-tile sweep: quantized pad lanes (zeroed by
+/// construction) and scalar tails must not leak into live outputs.
+#[test]
+fn differential_suite_int8_on_remainder_edge_shapes() {
+    let mut rng = Rng::new(0x1a7e_17e8);
+    for (m, b, n, r, k) in [
+        (1usize, 1usize, 1usize, 1usize, 1usize),
+        (7, 13, 3, 8, 8),
+        (9, 5, 2, 16, 8),
+        (4, 6, 2, 12, 8),  // r_pad 16 > r: masked final lane group
+        (5, 4, 3, 8, 12),  // k tail of 4 past the last full VL chunk
+        (2, 9, 1, 3, 5),   // nothing divides anything
+    ] {
+        let dims = EinsumDims { kind: kind_of(r, k), m, b, n, r, k };
+        sweep_case_q(dims, &mut rng, &format!("edge {m}x{b}x{n}x{r}x{k}"));
     }
 }
 

@@ -16,10 +16,15 @@
 //! * the packed buffers actually execute: every registered kernel runs the
 //!   fuzzed shapes end to end, which is what the sanitizer CI job (ASan,
 //!   `TTRV_FORCE_SCALAR` off) leans on to catch out-of-bounds reads in the
-//!   unsafe `target_feature` regions.
+//!   unsafe `target_feature` regions;
+//! * the int8 shadow holds the same contracts: `quantize` preserves the
+//!   buffer length / index formulas / zero pad lanes of every layout,
+//!   `dequantize` reconstructs within half a quantization step per
+//!   `m`-slice, and every kernel's `*_q` regions execute quantized cores
+//!   in bounds (the int8 half of the ASan surface).
 
 use ttrv::compiler::plan::{LoopOrder, OptimizationPlan, RbFactors, TilePlan, VectorLoop};
-use ttrv::kernels::{pack, Executor, GLayout, Kernel, VL};
+use ttrv::kernels::{dequantize, pack, quantize, Executor, GLayout, Kernel, VL};
 use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::{EinsumDims, EinsumKind};
@@ -131,6 +136,78 @@ fn property_pack_unpack_roundtrips_bitwise_for_all_layouts() {
     });
 }
 
+/// Quantize -> dequantize over fuzzed shapes and all three layouts: the
+/// int8 buffer is index-compatible with its f32 twin (same length, same
+/// formulas, `PackedR` pad lanes still exactly zero), scales are
+/// per-`m`-slice positive finite, and reconstruction lands within half a
+/// quantization step of every original value — the invariants the int8
+/// kernels and the QUANT section reader both trust.
+#[test]
+fn property_quantize_roundtrips_within_half_step_for_all_layouts() {
+    ttrv::testkit::check("quantize -> dequantize within step/2", 40, |d| {
+        let r = d.usize_in(1, 20);
+        let n = d.usize_in(1, 6);
+        let m = d.usize_in(1, 10);
+        let k = d.usize_in(1, 20);
+        let dims = EinsumDims { kind: kind_of(r, k), m, b: 2, n, r, k };
+        let mut rng = d.rng().fork();
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        for (vloop, pack_g) in [
+            (VectorLoop::None, false), // Canonical
+            (VectorLoop::R, true),     // PackedR
+            (VectorLoop::K, true),     // PackedK
+        ] {
+            let p = pack(&g, &plan_for(dims, vloop, pack_g, RbFactors::NONE))
+                .map_err(|e| e.to_string())?;
+            let q = quantize(&p);
+            if q.layout != p.layout || q.dims != p.dims || q.r_pad != p.r_pad {
+                return Err(format!("{vloop:?}: quantize changed the layout descriptor"));
+            }
+            if q.data.len() != p.data.len() {
+                return Err(format!(
+                    "{vloop:?}: {} int8 lanes for {} f32 lanes",
+                    q.data.len(),
+                    p.data.len()
+                ));
+            }
+            if q.scales.len() != m {
+                return Err(format!("{vloop:?}: {} scales for m = {m}", q.scales.len()));
+            }
+            if q.scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                return Err(format!("{vloop:?}: non-positive scale"));
+            }
+            // the int8 resident footprint is ~4x smaller by construction
+            if q.bytes() >= p.bytes() {
+                return Err(format!("{vloop:?}: int8 bytes {} >= f32 {}", q.bytes(), p.bytes()));
+            }
+            // pad lanes quantize to exactly zero (kernels MAC them blindly)
+            if q.layout == GLayout::PackedR {
+                for (i, (&fv, &qv)) in p.data.iter().zip(&q.data).enumerate() {
+                    if fv == 0.0 && qv != 0 {
+                        return Err(format!("{vloop:?}: zero lane {i} quantized to {qv}"));
+                    }
+                }
+            }
+            // reconstruction: per-slice bound |deq - g| <= scale/2
+            let back = dequantize(&q);
+            for (i, (&a, &b)) in p.data.iter().zip(&back.data).enumerate() {
+                let owner = match p.layout {
+                    GLayout::Canonical => (i / k) % m,
+                    GLayout::PackedR => i / (p.r_pad * n * k),
+                    GLayout::PackedK => i / (r * n * k),
+                };
+                let bound = q.scales[owner] * 0.5 + 1e-6;
+                if (a - b).abs() > bound {
+                    return Err(format!(
+                        "{vloop:?}: slice {owner} lane {i}: |{a} - {b}| > {bound}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Drive every registered kernel over fuzzed shapes end to end. Values are
 /// checked elsewhere (`kernel_reference.rs`); here the point is that the
 /// unsafe load/store regions stay inside the packed buffers for arbitrary
@@ -179,6 +256,64 @@ fn property_every_kernel_executes_fuzzed_shapes_in_bounds() {
                 }
                 if out.data().iter().any(|v| !v.is_finite()) {
                     return Err(format!("kernel {} {vloop:?}: non-finite output", kernel.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The int8 twin of the in-bounds property: every registered kernel
+/// executes fuzzed shapes over *quantized* cores through every plan
+/// family (every kernel has `*_q` regions — f32 kernels inherit the
+/// portable int8 reference, int8 kernels run their widening SIMD). The
+/// ASan CI job leans on this to bound the unsafe int8 vector regions.
+#[test]
+fn property_every_kernel_executes_quantized_fuzzed_shapes_in_bounds() {
+    let machine = MachineSpec::spacemit_k1();
+    ttrv::testkit::check("int8 kernels stay in bounds", 25, |d| {
+        let r = d.usize_in(1, 20);
+        let n = d.usize_in(1, 5);
+        let m = d.usize_in(1, 12);
+        let k = d.usize_in(1, 20);
+        let b = d.usize_in(1, 12);
+        let dims = EinsumDims { kind: kind_of(r, k), m, b, n, r, k };
+        let mut rng = d.rng().fork();
+        let g = Tensor::randn(vec![r, n, m, k], 1.0, &mut rng);
+        let x = Tensor::randn(vec![b, n, k], 1.0, &mut rng);
+        let rbf = RbFactors {
+            rm: *d.choose(&[1usize, 2, 4, 8]),
+            rb: d.usize_in(1, 8),
+            rr: 1,
+            rk: 1,
+        };
+        for &kernel in ttrv::kernels::all_kernels() {
+            if !kernel.supported() {
+                continue;
+            }
+            let mut ex = Executor::with_kernel(&machine, kernel).map_err(|e| e.to_string())?;
+            for (vloop, pack_g, rb) in [
+                (VectorLoop::None, false, RbFactors::NONE),
+                (VectorLoop::None, true, RbFactors::NONE),
+                (VectorLoop::K, true, RbFactors::NONE),
+                (VectorLoop::R, true, rbf),
+            ] {
+                let plan = plan_for(dims, vloop, pack_g, rb);
+                let qg = quantize(&pack(&g, &plan).map_err(|e| e.to_string())?);
+                ex.set_plan(plan);
+                let out = ex.execute_q(&dims, &qg, &x).map_err(|e| e.to_string())?;
+                if out.dims() != [m, b, r].as_slice() {
+                    return Err(format!(
+                        "kernel {} {vloop:?}: q output dims {:?}",
+                        kernel.name(),
+                        out.dims()
+                    ));
+                }
+                if out.data().iter().any(|v| !v.is_finite()) {
+                    return Err(format!(
+                        "kernel {} {vloop:?}: non-finite int8 output",
+                        kernel.name()
+                    ));
                 }
             }
         }
