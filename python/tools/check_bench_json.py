@@ -11,6 +11,12 @@
                           `ttrv serve-demo --snapshot-json` writes and
                           `Server::snapshot()` returns, with a top-level
                           `kernel` key)
+* DSE reports            (schema `ttrv-dse-report`, v1: the document
+                          `ttrv dse --json` prints — stage counts,
+                          Pareto frontier, selection, and when the rank
+                          sweep ran, `rank_sweep` rows carrying
+                          `rel_error`/`quant_error` plus the
+                          accuracy-budget pick's `selected_rank`)
 
 Run by CI after the bench/serve steps so a malformed report fails the
 build instead of silently polluting the perf trajectory. Files are
@@ -34,6 +40,7 @@ EXPECTED_VERSIONS = {
     "ttrv-bench-kernels": 3,
     "ttrv-bench-serve": 2,
     "ttrv-serve-snapshot": 2,
+    "ttrv-dse-report": 1,
 }
 
 # Kernel names the Rust dispatch layer can emit (dispatch.rs); the set is
@@ -51,6 +58,13 @@ KERNEL_ROW_KEYS = (
 )
 
 PER_KERNEL_KEYS = ("kernel", "int8", "measurement", "speedup_vs_ours")
+
+DSE_COUNT_KEYS = ("all", "aligned", "vectorized", "initial", "scalability", "timed")
+
+DSE_SOLUTION_KEYS = (
+    "m_shape", "n_shape", "rank", "d", "params", "flops",
+    "modeled_time_s", "speedup_vs_dense",
+)
 
 SERVE_ROW_KEYS = (
     "workers", "max_batch", "models", "requests", "elapsed_s", "req_per_s",
@@ -211,6 +225,72 @@ def check_serve(doc):
     check_snapshot(snap, "snapshot")
 
 
+def check_dse_solution(s, path, swept=False):
+    need(isinstance(s, dict), f"{path}: not an object")
+    for key in DSE_SOLUTION_KEYS:
+        need(key in s, f"{path}: missing '{key}'")
+    for key in ("m_shape", "n_shape"):
+        shape = s[key]
+        need(isinstance(shape, list) and shape, f"{path}.{key}: empty shape")
+        need(all(is_finite_number(v) and v >= 1 for v in shape),
+             f"{path}.{key}: bad factor in {shape!r}")
+    for key in ("rank", "d", "params", "flops"):
+        need(is_finite_number(s[key]) and s[key] >= 1, f"{path}.{key}: {s[key]!r}")
+    for key in ("modeled_time_s", "speedup_vs_dense"):
+        need(is_finite_number(s[key]) and s[key] > 0, f"{path}.{key}: {s[key]!r}")
+    if swept:
+        # sweep rows carry the two accuracy axes on top of the timed vocab
+        for key in ("rel_error", "quant_error"):
+            need(key in s, f"{path}: missing '{key}'")
+            need(is_finite_number(s[key]) and s[key] >= 0, f"{path}.{key}: {s[key]!r}")
+
+
+def check_dse_report(doc):
+    for key in ("n", "m", "rank"):
+        need(is_finite_number(doc.get(key)) and doc[key] >= 1, f"{key}: bad value")
+    need(isinstance(doc.get("policy"), str) and doc["policy"], "policy: bad value")
+    need(isinstance(doc.get("machine"), str) and doc["machine"], "machine: bad value")
+    counts = doc.get("counts")
+    need(isinstance(counts, dict), "counts: not an object")
+    for key in DSE_COUNT_KEYS:
+        need(is_finite_number(counts.get(key)) and counts[key] >= 0,
+             f"counts.{key}: bad value")
+    need(is_finite_number(doc.get("dense_modeled_time_s"))
+         and doc["dense_modeled_time_s"] > 0, "dense_modeled_time_s: bad value")
+    for key in ("dense_flops", "dense_params"):
+        need(is_finite_number(doc.get(key)) and doc[key] >= 1, f"{key}: bad value")
+    frontier = doc.get("frontier")
+    need(isinstance(frontier, list) and frontier, "frontier: empty")
+    for i, s in enumerate(frontier):
+        check_dse_solution(s, f"frontier[{i}]")
+    if doc.get("selected") is not None:
+        check_dse_solution(doc["selected"], "selected")
+    # the rank-sweep block: all-null when the sweep did not run; when the
+    # accuracy budget produced a pick, selected_rank must be a rank the
+    # sweep actually measured and rel_error must fit the budget
+    budget = doc.get("accuracy_budget")
+    need(budget is None or (is_finite_number(budget) and budget > 0),
+         f"accuracy_budget: {budget!r}")
+    sweep = doc.get("rank_sweep")
+    need(sweep is None or isinstance(sweep, list), "rank_sweep: not a list")
+    if isinstance(sweep, list):
+        for i, s in enumerate(sweep):
+            check_dse_solution(s, f"rank_sweep[{i}]", swept=True)
+    sel_rank = doc.get("selected_rank")
+    rel = doc.get("rel_error")
+    need((sel_rank is None) == (rel is None),
+         "selected_rank and rel_error must be null together")
+    if sel_rank is not None:
+        need(isinstance(sweep, list) and budget is not None,
+             "selected_rank without a rank_sweep + accuracy_budget")
+        need(is_finite_number(sel_rank) and sel_rank >= 1, f"selected_rank: {sel_rank!r}")
+        need(is_finite_number(rel) and 0 <= rel <= budget,
+             f"rel_error {rel!r} outside the accuracy budget {budget!r}")
+        need(any(s["rank"] == sel_rank for s in sweep),
+             "selected_rank is not a rank the sweep measured")
+    return len(frontier)
+
+
 def check_file(path):
     with open(path) as fh:
         doc = json.load(fh)
@@ -224,6 +304,9 @@ def check_file(path):
         # a standalone snapshot dump (no quick/results envelope)
         check_snapshot(doc, "snapshot")
         return len(doc["models"])
+    if schema == "ttrv-dse-report":
+        # a `ttrv dse --json` report (no quick/results envelope either)
+        return check_dse_report(doc)
     need(isinstance(doc.get("quick"), bool), "missing/bad 'quick' flag")
     need(isinstance(doc.get("results"), list) and doc["results"], "empty results")
     need(is_finite_number(doc.get("host_threads")) and doc["host_threads"] >= 1,

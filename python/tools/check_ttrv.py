@@ -299,12 +299,41 @@ def forward(ops, x, meta):
     return cur
 
 
+def check_auto_meta(meta):
+    """Mirror of reader.rs decode_meta's auto-rank record: `auto_budget`
+    and `auto_layers` are additive keys written by `compress --rank auto`
+    — either both absent (fixed-rank bundle) or both present, with one
+    entry per FC shape: null (dense / no sweep pick) or the sweep's
+    {rank, rel_error}.
+    """
+    budget = meta.get("auto_budget")
+    layers = meta.get("auto_layers")
+    if budget is None and layers is None:
+        return None
+    assert budget is not None and layers is not None, \
+        "auto_budget and auto_layers must be present together"
+    assert isinstance(budget, (int, float)) and not isinstance(budget, bool) \
+        and np.isfinite(budget) and budget > 0, f"auto_budget {budget!r}"
+    assert isinstance(layers, list) and len(layers) == len(meta["shapes"]), \
+        f"auto_layers has {len(layers)} entries for {len(meta['shapes'])} FC layers"
+    for i, entry in enumerate(layers):
+        if entry is None:
+            continue
+        rank, rel = entry.get("rank"), entry.get("rel_error")
+        assert isinstance(rank, int) and 1 <= rank <= 0xFFFFFFFF, \
+            f"auto_layers[{i}].rank {rank!r}"
+        assert isinstance(rel, (int, float)) and not isinstance(rel, bool) \
+            and np.isfinite(rel) and rel >= 0, f"auto_layers[{i}].rel_error {rel!r}"
+    return budget, layers
+
+
 def main():
     path = sys.argv[1]
     blob = open(path, "rb").read()
     sections = parse_container(blob)
     meta = json.loads(sections[1])
     assert meta["format"] == "ttrv-bundle"
+    auto = check_auto_meta(meta)
     ops = decode_ops(sections[2])
     json.loads(sections[3])
     # id 4 only means TUNE from format v2; in a v1 file it is an unknown
@@ -323,7 +352,9 @@ def main():
           f"{len(blob)} bytes, machine {meta['machine']}, "
           f"{len(tuned)} TT layer(s) with measured TUNE plans"
           + (f" (tuned on kernel {kernel})" if kernel else "")
-          + f", {len(quant)} int8 QUANT layer(s)")
+          + f", {len(quant)} int8 QUANT layer(s)"
+          + (f", auto-rank budget {auto[0]} "
+             f"({sum(1 for e in auto[1] if e)} swept layer(s))" if auto else ""))
     if len(sys.argv) > 2:
         x = np.array([float(v) for v in open(sys.argv[2]).read().split(",")])
         y = forward(ops, x.reshape(1, -1), meta)

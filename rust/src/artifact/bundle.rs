@@ -13,8 +13,8 @@ use crate::compiler::OptimizationPlan;
 use crate::config::DseConfig;
 use crate::coordinator::router::{self, Route};
 use crate::coordinator::{LayerOp, ModelEngine, TtFcEngine};
-use crate::dse::report::timed_solution_json;
-use crate::dse::{TimedExplored, TimedSolution};
+use crate::dse::report::{timed_solution_json, MIN_FC_DIM};
+use crate::dse::{self, TimedExplored, TimedSolution};
 use crate::error::{Error, Result};
 use crate::kernels::{pack, quantize, Executor, PackedG, QuantizedG};
 use crate::machine::MachineSpec;
@@ -82,6 +82,31 @@ pub enum BundleOp {
     Relu,
 }
 
+/// Per-layer outcome of an accuracy-budget compression: the rank the
+/// weight-aware sweep ([`crate::dse::sweep_ranks`]) selected and the
+/// measured TT-SVD relative reconstruction error that justified it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoRankLayer {
+    /// Selected (requested-ladder) rank — the deployed solution's label;
+    /// the stored layout carries the achieved, possibly clipped, ranks.
+    pub rank: u64,
+    /// Measured relative Frobenius reconstruction error at that rank.
+    pub rel_error: f64,
+}
+
+/// Record of an accuracy-budget compression ([`compress_auto`]): the
+/// budget `ε` and, per FC layer in model order, the sweep's pick — `None`
+/// for layers that stayed dense (below the size floor, or no swept rank
+/// fit the budget). Persisted in META so [`verify`] can replay the auto
+/// path instead of the fixed-rank path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoRankInfo {
+    /// The accuracy budget the compression was asked to meet.
+    pub budget: f64,
+    /// One entry per FC layer (same order as [`ModelBundle::shapes`]).
+    pub layers: Vec<Option<AutoRankLayer>>,
+}
+
 /// A decoded (or freshly compressed) `.ttrv` bundle.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelBundle {
@@ -111,6 +136,10 @@ pub struct ModelBundle {
     /// re-probes the local host for dispatch, never this field. `None`
     /// when untuned or decoded from a pre-v3 bundle.
     pub tuned_kernel: Option<String>,
+    /// Accuracy-budget compression record ([`compress_auto`]); `None` for
+    /// fixed-rank bundles. Persisted as additive META keys, so fixed-rank
+    /// bundles stay byte-identical to earlier format-v4 writers.
+    pub auto: Option<AutoRankInfo>,
 }
 
 /// What to compress: a named stack of FC layers plus the demo-weight seed.
@@ -183,6 +212,7 @@ fn layer_report(
     m: u64,
     explored: Option<&TimedExplored>,
     selected: Option<&TimedSolution>,
+    auto: Option<&AutoRankLayer>,
 ) -> Json {
     let mut fields = vec![
         ("n", Json::from(n as usize)),
@@ -222,7 +252,41 @@ fn layer_report(
             None => Json::Null,
         },
     ));
+    if let Some(a) = auto {
+        fields.push(("selected_rank", Json::from(a.rank as usize)));
+        fields.push(("rel_error", Json::from(a.rel_error)));
+    }
     Json::obj(fields)
+}
+
+/// TT-SVD the weights into the selected layout and compile/pack the chain —
+/// the shared tail of the fixed-rank and accuracy-budget compression paths.
+fn build_tt_layer(
+    ex: &mut Executor,
+    w: &Tensor,
+    bias: Vec<f32>,
+    sel: &TimedSolution,
+) -> Result<TtLayerBundle> {
+    let mut tt = tt_svd(w, sel.layout())?;
+    tt.bias = Some(bias);
+    let layout = tt.layout.clone();
+    let chain = einsum_chain(&layout, 1);
+    let mut plans = Vec::with_capacity(chain.len());
+    let mut packed = Vec::with_capacity(chain.len());
+    for (step, dims) in chain.iter().enumerate() {
+        let plan = ex.plan(dims)?;
+        packed.push(pack(&tt.cores[layout.d() - 1 - step], &plan)?);
+        plans.push(plan);
+    }
+    Ok(TtLayerBundle {
+        layout,
+        packed,
+        plans,
+        bias: tt.bias,
+        selected: sel.clone(),
+        tuned: None, // `tune_bundle` fills this on request
+        quant: None, // `quantize_bundle` fills this on request
+    })
 }
 
 /// Run the offline half of the paper's pipeline for a whole FC stack:
@@ -235,45 +299,86 @@ fn layer_report(
 /// Deterministic end to end: the same `(spec, machine, cfg)` always
 /// produces a byte-identical bundle — `verify` relies on this.
 pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> Result<ModelBundle> {
+    compress_impl(spec, machine, cfg, None)
+}
+
+/// [`compress`] with the rank chosen per layer by the weight-aware rank
+/// sweep under an accuracy budget, instead of `spec.rank` for every layer:
+/// per FC layer, run the six-stage engine, sweep the rank ladder
+/// (`DseConfig::rank_candidates`) over the layer's actual weights
+/// ([`crate::dse::sweep_ranks`]), and deploy the fastest time-qualified
+/// solution whose measured TT-SVD reconstruction error fits `budget`
+/// ([`crate::dse::select_within_accuracy_budget`]). A layer where no swept
+/// rank fits the budget stays dense — the same fallback the fixed-rank
+/// path uses on selection failure. The bundle records the budget and every
+/// per-layer pick in [`ModelBundle::auto`], so [`verify`] replays this
+/// path; determinism is the same contract as [`compress`].
+pub fn compress_auto(
+    spec: &CompressSpec,
+    machine: &MachineSpec,
+    cfg: &DseConfig,
+    budget: f64,
+) -> Result<ModelBundle> {
+    if !(budget.is_finite() && budget > 0.0) {
+        return Err(Error::config(format!(
+            "accuracy budget must be a finite value > 0, got {budget}"
+        )));
+    }
+    compress_impl(spec, machine, cfg, Some(budget))
+}
+
+fn compress_impl(
+    spec: &CompressSpec,
+    machine: &MachineSpec,
+    cfg: &DseConfig,
+    auto_budget: Option<f64>,
+) -> Result<ModelBundle> {
     spec.validate()?;
     cfg.validate()?;
     let mut rng = Rng::new(spec.seed);
     let mut ex = Executor::new(machine);
     let mut ops = Vec::new();
     let mut layers = Vec::new();
+    let mut auto_layers = Vec::new();
     for (i, &(n, m)) in spec.shapes.iter().enumerate() {
         // demo weights: W then bias, drawn in layer order from the one
         // seeded stream (the reproducibility contract `verify` replays)
         let w = Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng);
         let bias = rng.normal_vec(m as usize, 0.1);
-        let (route, explored) = router::route_layer_explored(m, n, spec.rank, machine, cfg)?;
-        match route {
-            Route::Tt(sel) => {
-                let mut tt = tt_svd(&w, sel.layout())?;
-                tt.bias = Some(bias);
-                let layout = tt.layout.clone();
-                let chain = einsum_chain(&layout, 1);
-                let mut plans = Vec::with_capacity(chain.len());
-                let mut packed = Vec::with_capacity(chain.len());
-                for (step, dims) in chain.iter().enumerate() {
-                    let plan = ex.plan(dims)?;
-                    packed.push(pack(&tt.cores[layout.d() - 1 - step], &plan)?);
-                    plans.push(plan);
-                }
-                layers.push(layer_report(n, m, explored.as_ref(), Some(&sel)));
-                ops.push(BundleOp::Tt(TtLayerBundle {
-                    layout,
-                    packed,
-                    plans,
-                    bias: tt.bias,
-                    selected: sel,
-                    tuned: None, // `tune_bundle` fills this on request
-                    quant: None, // `quantize_bundle` fills this on request
-                }));
-            }
-            Route::Dense => {
-                layers.push(layer_report(n, m, explored.as_ref(), None));
+        if let Some(budget) = auto_budget {
+            if m < MIN_FC_DIM || n < MIN_FC_DIM {
+                layers.push(layer_report(n, m, None, None, None));
+                auto_layers.push(None);
                 ops.push(BundleOp::Dense(DenseLayerBundle { w, bias: Some(bias) }));
+            } else {
+                let e = dse::explore_timed(m, n, machine, cfg);
+                let sweep = dse::sweep_ranks(&e, &w, machine, cfg)?;
+                match dse::select_within_accuracy_budget(&sweep, budget) {
+                    Ok(sw) => {
+                        let auto =
+                            AutoRankLayer { rank: sw.timed.solution.rank, rel_error: sw.rel_error };
+                        layers.push(layer_report(n, m, Some(&e), Some(&sw.timed), Some(&auto)));
+                        ops.push(BundleOp::Tt(build_tt_layer(&mut ex, &w, bias, &sw.timed)?));
+                        auto_layers.push(Some(auto));
+                    }
+                    Err(_) => {
+                        layers.push(layer_report(n, m, Some(&e), None, None));
+                        auto_layers.push(None);
+                        ops.push(BundleOp::Dense(DenseLayerBundle { w, bias: Some(bias) }));
+                    }
+                }
+            }
+        } else {
+            let (route, explored) = router::route_layer_explored(m, n, spec.rank, machine, cfg)?;
+            match route {
+                Route::Tt(sel) => {
+                    layers.push(layer_report(n, m, explored.as_ref(), Some(&sel), None));
+                    ops.push(BundleOp::Tt(build_tt_layer(&mut ex, &w, bias, &sel)?));
+                }
+                Route::Dense => {
+                    layers.push(layer_report(n, m, explored.as_ref(), None, None));
+                    ops.push(BundleOp::Dense(DenseLayerBundle { w, bias: Some(bias) }));
+                }
             }
         }
         if i + 1 < spec.shapes.len() {
@@ -291,6 +396,7 @@ pub fn compress(spec: &CompressSpec, machine: &MachineSpec, cfg: &DseConfig) -> 
         ops,
         report: Json::Arr(layers),
         tuned_kernel: None, // `tune_bundle` fills this on request
+        auto: auto_budget.map(|budget| AutoRankInfo { budget, layers: auto_layers }),
     })
 }
 
@@ -647,7 +753,13 @@ pub fn verify(bundle: &ModelBundle, machine: &MachineSpec, cfg: &DseConfig) -> R
             bundle.machine, machine.name
         )));
     }
-    let mut fresh = compress(&bundle.spec(), machine, cfg)?;
+    // an auto-rank bundle must be replayed through the accuracy-budget
+    // path — re-compressing at the fixed spec rank would reproduce a
+    // different (and legitimately so) set of layers
+    let mut fresh = match &bundle.auto {
+        Some(a) => compress_auto(&bundle.spec(), machine, cfg, a.budget)?,
+        None => compress(&bundle.spec(), machine, cfg)?,
+    };
     if bundle.ops.iter().any(|op| matches!(op, BundleOp::Tt(t) if t.quant.is_some())) {
         quantize_bundle(&mut fresh, machine, None)?;
     }
@@ -841,6 +953,78 @@ mod tests {
             .ops
             .iter()
             .any(|op| matches!(op, BundleOp::Tt(t) if t.quant.is_some())));
+    }
+
+    #[test]
+    fn compress_auto_records_sweep_picks_and_verifies() {
+        // small ladder / single swept shape: the accuracy sweep re-runs
+        // TT-SVD per candidate, which is expensive in debug builds
+        let cfg = DseConfig {
+            rank_candidates: vec![2, 8],
+            sweep_shapes: 1,
+            ..Default::default()
+        };
+        let spec = CompressSpec {
+            name: "auto-one".into(),
+            shapes: vec![(784, 300)],
+            rank: 8,
+            seed: 42,
+        };
+        // randn weights concentrate energy across the whole spectrum:
+        // rank 8 on the balanced 420x560 unfolding truncates to ~0.97
+        // relative error and rank 2 to ~0.99, so a 0.98 budget admits
+        // exactly the rank-8 candidates of the ladder
+        let bundle = compress_auto(&spec, &k1(), &cfg, 0.98).unwrap();
+        assert_eq!(bundle.tt_layers(), 1);
+        let auto = bundle.auto.as_ref().expect("auto record");
+        assert_eq!(auto.budget, 0.98);
+        assert_eq!(auto.layers.len(), 1);
+        let layer = auto.layers[0].as_ref().expect("swept pick");
+        assert_eq!(layer.rank, 8, "a 0.98 budget must exclude the rank-2 candidates");
+        assert!(layer.rel_error.is_finite() && layer.rel_error <= 0.98);
+        // the embedded report carries the pick alongside the classic fields
+        let entry = &bundle.report.as_arr().unwrap()[0];
+        assert_eq!(
+            entry.get("selected_rank"),
+            Some(&Json::from(layer.rank as usize))
+        );
+        assert_eq!(entry.get("rel_error"), Some(&Json::from(layer.rel_error)));
+        // verify replays the accuracy-budget path (byte-compare + bitwise
+        // outputs), which also proves compress_auto is deterministic
+        let vr = verify(&bundle, &k1(), &cfg).unwrap();
+        assert_eq!(vr.tt_layers, 1);
+        // rejecting the budget is a config error, not a panic
+        assert!(matches!(
+            compress_auto(&spec, &k1(), &cfg, 0.0),
+            Err(Error::Config(_))
+        ));
+        assert!(matches!(
+            compress_auto(&spec, &k1(), &cfg, f64::NAN),
+            Err(Error::Config(_))
+        ));
+    }
+
+    #[test]
+    fn compress_auto_impossible_budget_stays_dense() {
+        let cfg = DseConfig {
+            rank_candidates: vec![8],
+            sweep_shapes: 1,
+            ..Default::default()
+        };
+        let spec = CompressSpec {
+            name: "auto-dense".into(),
+            shapes: vec![(784, 300)],
+            rank: 8,
+            seed: 42,
+        };
+        // randn weights are far from low TT rank: a vanishing budget is
+        // unsatisfiable, so the layer falls back to dense — recorded as a
+        // None pick, never an error
+        let bundle = compress_auto(&spec, &k1(), &cfg, 1e-12).unwrap();
+        assert_eq!(bundle.tt_layers(), 0);
+        let auto = bundle.auto.as_ref().unwrap();
+        assert_eq!(auto.layers, vec![None]);
+        assert!(bundle.report.as_arr().unwrap()[0].get("selected_rank").is_none());
     }
 
     #[test]

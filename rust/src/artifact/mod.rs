@@ -23,7 +23,12 @@
 //!   TT cores in the QUANT section ([`quantize_bundle`]) — warm-started
 //!   engines then serve the int8 chain (f32 accumulation, per-`m`-slice
 //!   scales) with ~4x fewer resident core bytes, gated by a *measured*
-//!   quantization-error budget (`--max-quant-error`).
+//!   quantization-error budget (`--max-quant-error`);
+//! * optionally (`ttrv compress --rank auto`): per-layer ranks chosen by
+//!   the weight-aware accuracy sweep ([`compress_auto`] /
+//!   [`crate::dse::sweep_ranks`]) under an accuracy budget, with the
+//!   budget and every per-layer pick recorded as additive META keys so
+//!   [`verify`] replays the same path.
 //!
 //! Serving then warm-starts from the file
 //! ([`crate::coordinator::Server::from_artifact`] /
@@ -44,8 +49,9 @@ pub mod writer;
 pub mod reader;
 
 pub use bundle::{
-    compress, quantize_bundle, tune_bundle, verify, BundleOp, CompressSpec, DenseLayerBundle,
-    ModelBundle, QuantReport, TtLayerBundle, TuneReport, VerifyReport,
+    compress, compress_auto, quantize_bundle, tune_bundle, verify, AutoRankInfo, AutoRankLayer,
+    BundleOp, CompressSpec, DenseLayerBundle, ModelBundle, QuantReport, TtLayerBundle, TuneReport,
+    VerifyReport,
 };
 pub use format::{FORMAT_VERSION, MIN_FORMAT_VERSION};
 pub use reader::{list_sections, read_bundle_bytes, read_bundle_file, SectionInfo};

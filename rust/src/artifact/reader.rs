@@ -17,7 +17,9 @@ use crate::ttd::cost::{EinsumDims, EinsumKind};
 use crate::ttd::TtLayout;
 use crate::util::json::{self, Json};
 
-use super::bundle::{BundleOp, DenseLayerBundle, ModelBundle, TtLayerBundle};
+use super::bundle::{
+    AutoRankInfo, AutoRankLayer, BundleOp, DenseLayerBundle, ModelBundle, TtLayerBundle,
+};
 use super::format::*;
 use super::writer::{OP_DENSE, OP_RELU, OP_TT};
 
@@ -612,6 +614,56 @@ fn decode_meta(payload: &[u8]) -> Result<ModelBundle> {
         }
         shapes.push((get(0)?, get(1)?));
     }
+    // optional accuracy-budget record (additive keys): both keys come and
+    // go together, and the per-layer list must cover every FC layer
+    let auto = match (doc.get("auto_budget"), doc.get("auto_layers")) {
+        (None, None) => None,
+        (Some(b), Some(l)) => {
+            let budget = b
+                .as_f64()
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .ok_or_else(|| meta_err("'auto_budget' is not a finite value > 0"))?;
+            let entries = l
+                .as_arr()
+                .ok_or_else(|| meta_err("'auto_layers' is not an array"))?;
+            if entries.len() != shapes.len() {
+                return Err(meta_err(format!(
+                    "'auto_layers' has {} entries for {} FC layers",
+                    entries.len(),
+                    shapes.len()
+                )));
+            }
+            let mut layers = Vec::with_capacity(entries.len());
+            for e in entries {
+                layers.push(match e {
+                    Json::Null => None,
+                    _ => {
+                        let rank = e
+                            .get("rank")
+                            .and_then(Json::as_u64)
+                            .filter(|&r| r >= 1 && r <= DIM_CAP as u64)
+                            .ok_or_else(|| {
+                                meta_err("'auto_layers' entry has no valid 'rank' >= 1")
+                            })?;
+                        let rel_error = e
+                            .get("rel_error")
+                            .and_then(Json::as_f64)
+                            .filter(|v| v.is_finite() && *v >= 0.0)
+                            .ok_or_else(|| {
+                                meta_err("'auto_layers' entry has no finite 'rel_error' >= 0")
+                            })?;
+                        Some(AutoRankLayer { rank, rel_error })
+                    }
+                });
+            }
+            Some(AutoRankInfo { budget, layers })
+        }
+        _ => {
+            return Err(meta_err(
+                "'auto_budget' and 'auto_layers' must be present together",
+            ))
+        }
+    };
     Ok(ModelBundle {
         name: str_field("model")?,
         machine: str_field("machine")?,
@@ -626,6 +678,7 @@ fn decode_meta(payload: &[u8]) -> Result<ModelBundle> {
         ops: Vec::new(),
         report: Json::Null,
         tuned_kernel: None,
+        auto,
     })
 }
 

@@ -251,7 +251,7 @@ fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
             .map(|&(n, m)| Json::Arr(vec![Json::from(n as usize), Json::from(m as usize)]))
             .collect(),
     );
-    let meta = Json::obj(vec![
+    let mut fields = vec![
         ("format", Json::from("ttrv-bundle")),
         ("model", Json::from(bundle.name.as_str())),
         ("machine", Json::from(bundle.machine.as_str())),
@@ -260,8 +260,28 @@ fn encode_meta(bundle: &ModelBundle) -> Vec<u8> {
         ("rank", Json::from(bundle.rank as usize)),
         ("seed", Json::from(bundle.seed as usize)),
         ("shapes", shapes),
-    ]);
-    json::to_string(&meta).into_bytes()
+    ];
+    // accuracy-budget compression record — additive keys, so fixed-rank
+    // bundles stay byte-identical to earlier format-v4 writers
+    if let Some(auto) = &bundle.auto {
+        fields.push(("auto_budget", Json::from(auto.budget)));
+        fields.push((
+            "auto_layers",
+            Json::Arr(
+                auto.layers
+                    .iter()
+                    .map(|l| match l {
+                        Some(a) => Json::obj(vec![
+                            ("rank", Json::from(a.rank as usize)),
+                            ("rel_error", Json::from(a.rel_error)),
+                        ]),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    json::to_string(&Json::obj(fields)).into_bytes()
 }
 
 /// Serialize a bundle to its canonical byte form.
@@ -331,6 +351,7 @@ mod tests {
             })],
             report: Json::Arr(vec![]),
             tuned_kernel: None,
+            auto: None,
         }
     }
 

@@ -195,6 +195,24 @@ pub struct DseConfig {
     /// Selection policy name; must parse via [`SelectionPolicy::parse`]
     /// (`"balance"` or `"min-time"`).
     pub selection_policy: String,
+    /// Rank ladder for the accuracy-aware rank sweep
+    /// ([`crate::dse::sweep_ranks`]): each stage-6 survivor shape is
+    /// TT-SVD-decomposed at every rank here and annotated with its
+    /// relative reconstruction error. Unlike [`DseConfig::ranks`], these
+    /// are *not* constrained to multiples of `vl` — low ranks trade
+    /// vector-lane utilization for accuracy headroom, and the modeled-time
+    /// qualification decides what survives. Must be non-empty, every
+    /// entry >= 1.
+    pub rank_candidates: Vec<u64>,
+    /// Cap on how many distinct stage-6 survivor shapes the rank sweep
+    /// decomposes (TT-SVD per shape x rank is the expensive part). Must be
+    /// >= 1; the sweep reports how many shapes the cap dropped.
+    pub sweep_shapes: usize,
+    /// Default accuracy budget for sweep-driven selection (`compress
+    /// --rank auto` without an explicit `--accuracy-budget`): the fastest
+    /// swept candidate with relative reconstruction error <= this is
+    /// chosen. Must be a finite value > 0 when set.
+    pub accuracy_budget: Option<f64>,
 }
 
 impl Default for DseConfig {
@@ -209,6 +227,9 @@ impl Default for DseConfig {
             time_speedup_min: 1.0,
             dse_workers: 1,
             selection_policy: SelectionPolicy::Balance.as_str().to_string(),
+            rank_candidates: vec![2, 4, 8, 16],
+            sweep_shapes: 8,
+            accuracy_budget: None,
         }
     }
 }
@@ -244,6 +265,22 @@ impl DseConfig {
         }
         if self.dse_workers < 1 {
             return Err(Error::config("dse.dse_workers must be >= 1"));
+        }
+        if self.rank_candidates.is_empty() {
+            return Err(Error::config("dse.rank_candidates must list at least one rank"));
+        }
+        if let Some(r) = self.rank_candidates.iter().find(|&&r| r < 1) {
+            return Err(Error::config(format!("dse.rank_candidates entry {r} must be >= 1")));
+        }
+        if self.sweep_shapes < 1 {
+            return Err(Error::config("dse.sweep_shapes must be >= 1"));
+        }
+        if let Some(b) = self.accuracy_budget {
+            if !(b.is_finite() && b > 0.0) {
+                return Err(Error::config(format!(
+                    "dse.accuracy_budget must be a finite value > 0, got {b}"
+                )));
+            }
         }
         self.policy()?;
         Ok(())
@@ -579,6 +616,22 @@ pub fn load(text: &str) -> Result<(DseConfig, ServeConfig)> {
     if let Some(v) = t.get_str("dse", "selection_policy") {
         dse.selection_policy = v.to_string();
     }
+    if let Some(v) = t.get_str("dse", "rank_candidates") {
+        dse.rank_candidates = v
+            .split(',')
+            .map(|x| {
+                x.trim().parse::<u64>().map_err(|e| {
+                    Error::config(format!("dse.rank_candidates entry '{}': {e}", x.trim()))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(v) = non_negative(&t, "dse", "sweep_shapes")? {
+        dse.sweep_shapes = v as usize;
+    }
+    if let Some(v) = t.get_f64("dse", "accuracy_budget") {
+        dse.accuracy_budget = Some(v);
+    }
     let mut serve = ServeConfig::default();
     if let Some(v) = non_negative(&t, "serve", "max_batch")? {
         serve.max_batch = v as usize;
@@ -712,6 +765,11 @@ mod tests {
             ("[dse]\ndse_workers = 0", "dse_workers"),
             ("[dse]\ndse_workers = -3", "dse_workers"),
             ("[dse]\nselection_policy = \"fastest\"", "selection_policy"),
+            ("[dse]\nrank_candidates = \"\"", "rank_candidates"),
+            ("[dse]\nrank_candidates = \"4, 0\"", "rank_candidates"),
+            ("[dse]\nsweep_shapes = 0", "sweep_shapes"),
+            ("[dse]\naccuracy_budget = 0.0", "accuracy_budget"),
+            ("[dse]\naccuracy_budget = -0.5", "accuracy_budget"),
         ] {
             let err = load(text).expect_err(text).to_string();
             assert!(err.contains(needle), "{text}: {err}");
@@ -726,15 +784,25 @@ mod tests {
             time_speedup_min = 2.5
             dse_workers = 4
             selection_policy = "min-time"
+            rank_candidates = "2, 8, 32"
+            sweep_shapes = 4
+            accuracy_budget = 0.25
             "#,
         )
         .unwrap();
         assert_eq!(dse.time_speedup_min, 2.5);
         assert_eq!(dse.dse_workers, 4);
         assert_eq!(dse.policy().unwrap(), SelectionPolicy::MinTime);
+        assert_eq!(dse.rank_candidates, vec![2, 8, 32]);
+        assert_eq!(dse.sweep_shapes, 4);
+        assert_eq!(dse.accuracy_budget, Some(0.25));
         // integer-typed threshold coerces like any float knob
         let (dse, _) = load("[dse]\ntime_speedup_min = 3").unwrap();
         assert_eq!(dse.time_speedup_min, 3.0);
+        // ...and so does the accuracy budget; absent means no default budget
+        let (dse, _) = load("[dse]\naccuracy_budget = 1").unwrap();
+        assert_eq!(dse.accuracy_budget, Some(1.0));
+        assert_eq!(DseConfig::default().accuracy_budget, None);
     }
 
     #[test]

@@ -21,26 +21,44 @@
 //!    solutions whose modeled speedup over the dense layer falls below
 //!    `DseConfig::time_speedup_min`; expose the Pareto frontier over
 //!    (modeled time, params, FLOPs) as the selection substrate.
+//! 7. **Rank sweep** ([`ranksweep`], weight-aware) — re-decompose each
+//!    stage-6 survivor shape at the configurable rank ladder
+//!    (`DseConfig::rank_candidates`) against the layer's weight matrix,
+//!    annotate every priced, time-qualified candidate with its measured
+//!    TT-SVD relative reconstruction error, and expose the composed-error
+//!    frontier (reconstruction + quantization axes on top of the three
+//!    classic objectives); [`select::select_within_accuracy_budget`]
+//!    turns an accuracy budget into a rank choice.
 //!
 //! Stages 1-5 are the composable [`pipeline`] (one named [`pipeline::Stage`]
 //! per cut); stage 6 plus the `(d, m-shape)` work-unit worker pool is
-//! [`timed::explore_timed`]; [`select`] turns the frontier + qualified set
+//! [`timed::explore_timed`]; stage 7 is [`ranksweep::sweep_ranks`], a pure
+//! function of the stage-6 output (so parallel enumeration stays
+//! bit-identical to serial); [`select`] turns the frontier + qualified set
 //! into a single choice per policy. The enumerated stages sweep *uniform*
 //! rank values (the paper's `R` notation; its experiments fix R per
 //! solution), which keeps stage-3+ spaces at the table's reported
-//! magnitudes.
+//! magnitudes — the rank sweep is where non-enumerated low ranks enter,
+//! justified by measured accuracy instead of the vectorization heuristic.
 
 pub mod space;
 pub mod pipeline;
 pub mod timed;
 pub mod pareto;
+pub mod ranksweep;
 pub mod report;
 pub mod select;
 pub mod alignment_stats;
 
-pub use pareto::{dominates, dominates_with_error, pareto_frontier, pareto_frontier_with_error};
+pub use pareto::{
+    dominates, dominates_with_error, dominates_with_errors, pareto_frontier,
+    pareto_frontier_with_error, pareto_frontier_with_errors,
+};
 pub use pipeline::{explore, Explored, StageCounts};
+pub use ranksweep::{sweep_ranks, RankSweep, SweptSolution};
 pub use report::{measured_quant_error, quant_error_estimate};
-pub use select::{select_solution, select_solution_within_error_budget};
+pub use select::{
+    select_solution, select_solution_within_error_budget, select_within_accuracy_budget,
+};
 pub use space::Solution;
 pub use timed::{explore_timed, TimedExplored, TimedSolution};

@@ -21,31 +21,58 @@ pub fn dominates(a: &TimedSolution, b: &TimedSolution) -> bool {
     no_worse && strictly_better
 }
 
-/// Four-axis dominance: the pinned three-objective relation
-/// ([`dominates`]) extended with a quantization-error axis (each
-/// solution's `err` is its modeled or measured int8 output error,
-/// [`super::report::quant_error_estimate`] /
-/// [`super::report::measured_quant_error`]). `a` dominates `b` iff it is
-/// no worse on all four axes and strictly better on at least one. The
-/// three-axis relation itself is untouched — this is a wrapper, so every
-/// existing frontier stays byte-identical when the error axis is ignored.
-pub fn dominates_with_error(a: &TimedSolution, ea: f64, b: &TimedSolution, eb: f64) -> bool {
+/// Multi-error dominance: the pinned three-objective relation
+/// ([`dominates`]) extended with any number of *paired* error axes
+/// (`ea[i]` against `eb[i]`; the slices must have equal length). This is
+/// how the quantization axis and the rank sweep's reconstruction axis
+/// compose rather than fork: pass `[rel_error, quant_error]` and `a`
+/// dominates `b` iff it is no worse on every axis — classic and error
+/// alike — and strictly better on at least one. With an empty error
+/// vector this is exactly [`dominates`].
+pub fn dominates_with_errors(a: &TimedSolution, ea: &[f64], b: &TimedSolution, eb: &[f64]) -> bool {
+    assert_eq!(ea.len(), eb.len(), "error vectors must pair up axis-for-axis");
     let no_worse = a.time_s <= b.time_s
         && a.solution.params <= b.solution.params
         && a.solution.flops <= b.solution.flops
-        && ea <= eb;
+        && ea.iter().zip(eb).all(|(x, y)| x <= y);
     let strictly_better = a.time_s < b.time_s
         || a.solution.params < b.solution.params
         || a.solution.flops < b.solution.flops
-        || ea < eb;
+        || ea.iter().zip(eb).any(|(x, y)| x < y);
     no_worse && strictly_better
 }
 
-/// The non-dominated subset of error-annotated solutions under
-/// [`dominates_with_error`], input order preserved. All-pairs — the
-/// four-axis view is only ever computed over a frontier head or an
-/// annotated selection, never the raw stage-5 survivor sets, so the
-/// `O(n^2)` cost is irrelevant here.
+/// Four-axis dominance: [`dominates_with_errors`] with a single error axis
+/// (each solution's `err` is its modeled or measured int8 output error,
+/// [`super::report::quant_error_estimate`] /
+/// [`super::report::measured_quant_error`]). The three-axis relation
+/// itself is untouched — this is a wrapper, so every existing frontier
+/// stays byte-identical when the error axis is ignored.
+pub fn dominates_with_error(a: &TimedSolution, ea: f64, b: &TimedSolution, eb: f64) -> bool {
+    dominates_with_errors(a, &[ea], b, &[eb])
+}
+
+/// The non-dominated subset of error-vector-annotated solutions under
+/// [`dominates_with_errors`], input order preserved. All-pairs — the
+/// composed-error view is only ever computed over a frontier head, an
+/// annotated selection, or a rank sweep, never the raw stage-5 survivor
+/// sets, so the `O(n^2)` cost is irrelevant here.
+pub fn pareto_frontier_with_errors(
+    annotated: &[(TimedSolution, Vec<f64>)],
+) -> Vec<(TimedSolution, Vec<f64>)> {
+    annotated
+        .iter()
+        .filter(|(s, e)| {
+            !annotated
+                .iter()
+                .any(|(o, oe)| dominates_with_errors(o, oe, s, e))
+        })
+        .cloned()
+        .collect()
+}
+
+/// [`pareto_frontier_with_errors`] specialized to the single
+/// quantization-error axis.
 pub fn pareto_frontier_with_error(
     annotated: &[(TimedSolution, f64)],
 ) -> Vec<(TimedSolution, f64)> {
@@ -232,6 +259,33 @@ mod tests {
         assert!(dominates_with_error(&a, 0.01, &b, 0.01));
         let f = pareto_frontier_with_error(&[(a, 0.01), (b, 0.01)]);
         assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn composed_error_axes_require_winning_every_axis() {
+        let a = sol(vec![4, 4], vec![4, 4], 8, 1e-5);
+        let b = sol(vec![8, 2], vec![2, 8], 8, 2e-5);
+        assert!(dominates(&a, &b));
+        // the single-error wrapper and the general relation agree
+        assert_eq!(
+            dominates_with_error(&a, 0.01, &b, 0.02),
+            dominates_with_errors(&a, &[0.01], &b, &[0.02])
+        );
+        // a wins quantization but loses reconstruction: neither dominates,
+        // so both survive the composed frontier — the axes compose instead
+        // of forking into two separate frontiers
+        assert!(!dominates_with_errors(&a, &[0.5, 0.01], &b, &[0.1, 0.02]));
+        assert!(!dominates_with_errors(&b, &[0.1, 0.02], &a, &[0.5, 0.01]));
+        let f = pareto_frontier_with_errors(&[
+            (a.clone(), vec![0.5, 0.01]),
+            (b.clone(), vec![0.1, 0.02]),
+        ]);
+        assert_eq!(f.len(), 2);
+        // equal error vectors reduce to the pinned three-axis relation
+        assert!(dominates_with_errors(&a, &[0.1, 0.1], &b, &[0.1, 0.1]));
+        let f = pareto_frontier_with_errors(&[(a, vec![0.1, 0.1]), (b, vec![0.1, 0.1])]);
+        assert_eq!(f.len(), 1);
+        assert!(pareto_frontier_with_errors(&[]).is_empty());
     }
 
     #[test]

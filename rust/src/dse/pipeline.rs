@@ -9,6 +9,12 @@
 //! ([`InitialLayer::keep`], [`Scalability::keep`]) are shared with the
 //! parallel timed engine ([`super::timed`]), which applies them inside each
 //! work unit instead of over the whole set — same cuts, same counts.
+//!
+//! After the modeled-time cut, the weight-aware rank sweep
+//! ([`super::ranksweep`]) runs as a post-stage-6 step over the survivor
+//! shapes. It is not a [`Stage`] (stages are pure shape/cost predicates
+//! with no access to weights) and does not appear in [`StageCounts`] — the
+//! stage-size accounting stays pinned to the paper's Tables 1-2 columns.
 
 use crate::config::DseConfig;
 use crate::factor::count::{space_sizes, CountCfg, SpaceSizes};

@@ -1,0 +1,333 @@
+//! The rank sweep: accuracy as a measured DSE axis (stage 7, after the
+//! modeled-time cut).
+//!
+//! Stages 1-6 prune by shape efficiency and modeled performance but take
+//! the TT rank as a config input; this stage makes rank a *searched*
+//! dimension with a measurable accuracy cost, following "Data-Driven
+//! Low-Rank Neural Network Compression" (rank from reconstruction error)
+//! and "Comprehensive Design Space Exploration for Tensorized Neural
+//! Network Hardware Accelerators" (accuracy as an explicit DSE objective)
+//! — see PAPERS.md. For each distinct stage-6 survivor shape (most
+//! balanced first — the accuracy-relevant ordering — capped at
+//! [`DseConfig::sweep_shapes`]), the layer's weight matrix is
+//! TT-SVD-decomposed at every rank in [`DseConfig::rank_candidates`], and
+//! each priced, time-qualified result is annotated with its relative
+//! Frobenius reconstruction error
+//! ([`crate::ttd::decompose::TtCores::rel_error`]).
+//!
+//! Candidate ranks are deliberately *not* restricted to the enumerated
+//! space's `rank % vl == 0` vectorization constraint: low ranks like 2 or
+//! 4 trade vector-lane utilization for accuracy headroom (the compiler
+//! falls back to K-loop vectorization), and the same modeled-time
+//! qualification as stage 6 (`time_speedup_min`) decides what survives —
+//! never the vectorization heuristic alone.
+//!
+//! The annotated frontier composes the reconstruction axis with the
+//! modeled int8 quantization axis
+//! ([`super::pareto::pareto_frontier_with_errors`] over
+//! `[rel_error, quant_error]`) instead of forking a second single-error
+//! frontier. Selection under an accuracy budget is
+//! [`super::select::select_within_accuracy_budget`]. Everything here is a
+//! pure function of `(explored, w, machine, cfg)`, so worker-parallel
+//! enumeration upstream stays bit-identical to serial.
+
+use crate::config::DseConfig;
+use crate::error::Result;
+use crate::machine::MachineSpec;
+use crate::tensor::Tensor;
+use crate::ttd::decompose::tt_svd;
+use crate::ttd::TtLayout;
+
+use super::pareto::pareto_frontier_with_errors;
+use super::report::quant_error_estimate;
+use super::space::Solution;
+use super::timed::{price_solution, TimedExplored, TimedSolution};
+
+/// One swept candidate: a priced, time-qualified solution at a sweep
+/// rank, annotated with its measured TT-SVD reconstruction error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweptSolution {
+    /// The priced solution. `timed.solution.rank` is the *requested*
+    /// sweep rank; the layout carries the achieved (possibly clipped)
+    /// TT-SVD ranks that pricing used.
+    pub timed: TimedSolution,
+    /// Relative Frobenius reconstruction error of the TT-SVD cores
+    /// against the layer's weight matrix.
+    pub rel_error: f64,
+}
+
+/// Result of sweeping one layer's stage-6 survivor shapes over the rank
+/// ladder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankSweep {
+    /// Output dimension M of the swept layer.
+    pub m_dim: u64,
+    /// Input dimension N of the swept layer.
+    pub n_dim: u64,
+    /// Every time-qualified swept candidate, in canonical order,
+    /// deduplicated by achieved layout (two requested ranks clipping to
+    /// the same achieved cores keep the smaller request).
+    pub swept: Vec<SweptSolution>,
+    /// The non-dominated subset of `swept` under the composed relation
+    /// (modeled time, params, FLOPs, reconstruction error, modeled
+    /// quantization error), input (canonical) order preserved.
+    pub frontier: Vec<SweptSolution>,
+    /// Distinct survivor shapes actually swept.
+    pub shapes_swept: usize,
+    /// Distinct survivor shapes available; greater than `shapes_swept`
+    /// when the [`DseConfig::sweep_shapes`] cap truncated the sweep.
+    pub shapes_total: usize,
+}
+
+/// Imbalance of one shape pair, matching the balance-selection score
+/// ([`super::select::solution_imbalance`]): `max/min` per factor list,
+/// multiplied across the m- and n-shapes (1.0 = perfectly square).
+fn shape_imbalance(m_shape: &[u64], n_shape: &[u64]) -> f64 {
+    let one = |shape: &[u64]| {
+        let max = *shape.iter().max().expect("non-empty shape") as f64;
+        let min = *shape.iter().min().expect("non-empty shape") as f64;
+        max / min
+    };
+    one(m_shape) * one(n_shape)
+}
+
+/// Sweep the stage-6 survivor shapes of one explored layer over
+/// `cfg.rank_candidates` against the layer's weight matrix `w` (`(M, N)`,
+/// matching `e.explored`). Per shape x rank: TT-SVD (ranks clip to the
+/// achieved unfolding ranks), reconstruction error, pricing at the
+/// achieved layout, and the same speedup-vs-dense cut as stage 6.
+/// Candidates whose rank is infeasible for a shape, whose chain has no
+/// feasible schedule, or whose modeled speedup misses
+/// `cfg.time_speedup_min` are skipped, like their stage-6 counterparts.
+pub fn sweep_ranks(
+    e: &TimedExplored,
+    w: &Tensor,
+    machine: &MachineSpec,
+    cfg: &DseConfig,
+) -> Result<RankSweep> {
+    // distinct (m-shape, n-shape) pairs of the stage-6 survivors, most
+    // balanced first (ties break lexicographically) so the sweep_shapes
+    // cap keeps the accuracy-relevant near-square shapes, not the
+    // cheap skewed ones canonical order leads with
+    let mut shapes: Vec<(Vec<u64>, Vec<u64>)> = Vec::new();
+    for t in &e.timed {
+        let key = (t.layout().m_shape().to_vec(), t.layout().n_shape().to_vec());
+        if !shapes.contains(&key) {
+            shapes.push(key);
+        }
+    }
+    shapes.sort_by(|a, b| {
+        shape_imbalance(&a.0, &a.1)
+            .total_cmp(&shape_imbalance(&b.0, &b.1))
+            .then_with(|| a.cmp(b))
+    });
+    let shapes_total = shapes.len();
+    shapes.truncate(cfg.sweep_shapes);
+    let shapes_swept = shapes.len();
+
+    let mut swept: Vec<SweptSolution> = Vec::new();
+    for (m_shape, n_shape) in &shapes {
+        for &r in &cfg.rank_candidates {
+            let Ok(target) = TtLayout::with_uniform_rank(m_shape.clone(), n_shape.clone(), r)
+            else {
+                continue; // rank infeasible for this shape pair
+            };
+            let tt = tt_svd(w, &target)?;
+            let rel_error = tt.rel_error(w)? as f64;
+            // price at the achieved layout; the requested rank stays as
+            // the solution's rank label
+            let sol = Solution::new(tt.layout, r);
+            let Some(time_s) = price_solution(&sol, machine, cfg.batch) else {
+                continue; // unschedulable chain, discarded like stage 6
+            };
+            let speedup = e.dense_time_s / time_s;
+            if speedup < cfg.time_speedup_min {
+                continue; // same cut as stage 6
+            }
+            swept.push(SweptSolution {
+                timed: TimedSolution { solution: sol, time_s, speedup },
+                rel_error,
+            });
+        }
+    }
+
+    // two requested ranks can clip to the same achieved layout (e.g. 8
+    // and 16 on a shape whose unfolding rank is 5): identical cores,
+    // price, and error — keep the smaller request
+    let mut unique: Vec<SweptSolution> = Vec::new();
+    for s in swept {
+        match unique.iter_mut().find(|u| u.timed.layout() == s.timed.layout()) {
+            Some(u) => {
+                if s.timed.solution.rank < u.timed.solution.rank {
+                    *u = s;
+                }
+            }
+            None => unique.push(s),
+        }
+    }
+    let mut swept = unique;
+    swept.sort_by(|a, b| a.timed.solution.canonical_cmp(&b.timed.solution));
+
+    let annotated: Vec<(TimedSolution, Vec<f64>)> = swept
+        .iter()
+        .map(|s| {
+            let errs = vec![s.rel_error, quant_error_estimate(s.timed.layout().d())];
+            (s.timed.clone(), errs)
+        })
+        .collect();
+    let frontier = pareto_frontier_with_errors(&annotated)
+        .into_iter()
+        .map(|(timed, errs)| SweptSolution { timed, rel_error: errs[0] })
+        .collect();
+
+    Ok(RankSweep {
+        m_dim: e.explored.m_dim,
+        n_dim: e.explored.n_dim,
+        swept,
+        frontier,
+        shapes_swept,
+        shapes_total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SelectionPolicy;
+    use crate::dse::select::{select_solution, select_within_accuracy_budget};
+    use crate::dse::timed::explore_timed;
+    use crate::error::Error;
+    use crate::ttd::decompose::random_cores;
+    use crate::util::prng::Rng;
+
+    fn k1() -> MachineSpec {
+        MachineSpec::spacemit_k1()
+    }
+
+    /// A small ladder and shape cap keep the per-test TT-SVD count at
+    /// e2e-suite scale (Jacobi SVDs of 300x784 unfoldings dominate).
+    fn sweep_cfg(shapes: usize, ranks: Vec<u64>) -> DseConfig {
+        DseConfig { sweep_shapes: shapes, rank_candidates: ranks, ..Default::default() }
+    }
+
+    #[test]
+    fn rel_error_is_monotone_nonincreasing_in_rank_per_shape() {
+        let cfg = sweep_cfg(1, vec![2, 4, 8]);
+        let e = explore_timed(300, 784, &k1(), &cfg);
+        let w = Tensor::randn(vec![300, 784], 0.1, &mut Rng::new(5));
+        let sweep = sweep_ranks(&e, &w, &k1(), &cfg).unwrap();
+        assert_eq!(sweep.m_dim, 300);
+        assert_eq!(sweep.n_dim, 784);
+        assert_eq!(sweep.shapes_swept, 1);
+        assert!(sweep.shapes_total > 1);
+        // on a full-rank random W no ranks clip, so all three survive if
+        // any does; more rank never reconstructs worse
+        assert!(sweep.swept.len() >= 2, "swept: {}", sweep.swept.len());
+        let mut by_rank = sweep.swept.clone();
+        by_rank.sort_by_key(|s| s.timed.solution.rank);
+        for pair in by_rank.windows(2) {
+            assert!(
+                pair[1].rel_error <= pair[0].rel_error + 1e-5,
+                "rank {} err {} > rank {} err {}",
+                pair[1].timed.solution.rank,
+                pair[1].rel_error,
+                pair[0].timed.solution.rank,
+                pair[0].rel_error
+            );
+        }
+        // every candidate carries a meaningful error and a stage-6-grade
+        // time qualification
+        for s in &sweep.swept {
+            assert!(s.rel_error.is_finite() && s.rel_error >= 0.0);
+            assert!(s.timed.speedup >= cfg.time_speedup_min);
+            assert!(s.timed.time_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn frontier_is_nondominated_subset_under_composed_errors() {
+        let cfg = sweep_cfg(2, vec![2, 8]);
+        let e = explore_timed(300, 784, &k1(), &cfg);
+        let w = Tensor::randn(vec![300, 784], 0.1, &mut Rng::new(6));
+        let sweep = sweep_ranks(&e, &w, &k1(), &cfg).unwrap();
+        assert!(!sweep.frontier.is_empty());
+        assert!(sweep.frontier.len() <= sweep.swept.len());
+        let errs = |s: &SweptSolution| {
+            vec![s.rel_error, quant_error_estimate(s.timed.layout().d())]
+        };
+        for f in &sweep.frontier {
+            assert!(sweep.swept.contains(f));
+            for o in &sweep.swept {
+                assert!(!crate::dse::pareto::dominates_with_errors(
+                    &o.timed,
+                    &errs(o),
+                    &f.timed,
+                    &errs(f)
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn budget_forces_a_rank_the_fixed_rank_path_would_not_select() {
+        // plant a TT-rank-2 weight matrix on the balance pick's shape
+        // ([20, 15] x [28, 28], `selects_balanced_d2_at_rank8`): the
+        // fixed-rank path keeps the configured rank 8, but the sweep sees
+        // that rank 2 already reconstructs W exactly and a tight budget
+        // selects it — a rank outside the enumerated space entirely
+        // (2 % vl != 0)
+        let cfg = sweep_cfg(2, vec![2, 4, 8]);
+        let e = explore_timed(300, 784, &k1(), &cfg);
+        let planted = TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], 2).unwrap();
+        let w = random_cores(&planted, &mut Rng::new(7)).reconstruct().unwrap();
+        let sweep = sweep_ranks(&e, &w, &k1(), &cfg).unwrap();
+        let pick = select_within_accuracy_budget(&sweep, 1e-3).unwrap();
+        // only the planted shape reconstructs under the budget, and there
+        // the sweep prefers a cheap low rank over the configured 8
+        assert_eq!(pick.timed.layout().m_shape(), &[20, 15]);
+        assert_eq!(pick.timed.layout().n_shape(), &[28, 28]);
+        assert!(pick.timed.solution.rank < 8, "picked rank {}", pick.timed.solution.rank);
+        assert!(pick.rel_error <= 1e-3, "err {}", pick.rel_error);
+        assert_ne!(pick.timed.solution.rank % cfg.vl, 0);
+        // the old fixed-rank path cannot produce this rank
+        let fixed = select_solution(&e, 8, SelectionPolicy::Balance).unwrap();
+        assert_eq!(fixed.solution.rank, 8);
+        assert_ne!(pick.timed.solution.rank, fixed.solution.rank);
+        // an impossible budget on the same sweep is a typed, budget-naming
+        // error (the accuracy floor of a planted rank-2 W is ~0, so go
+        // below float noise)
+        let err = select_within_accuracy_budget(&sweep, 1e-12).unwrap_err();
+        assert!(matches!(err, Error::NoSolution(_)), "{err}");
+        assert!(err.to_string().contains("accuracy budget"), "{err}");
+    }
+
+    #[test]
+    fn sweep_is_identical_for_parallel_exploration() {
+        // the sweep is a pure function of the explored result, and the
+        // explored result is byte-identical for every worker count — so
+        // the new stage preserves the engine's parallel determinism
+        let mut cfg = sweep_cfg(1, vec![2, 8]);
+        let w = Tensor::randn(vec![300, 784], 0.1, &mut Rng::new(8));
+        let serial = {
+            let e = explore_timed(300, 784, &k1(), &cfg);
+            sweep_ranks(&e, &w, &k1(), &cfg).unwrap()
+        };
+        cfg.dse_workers = 4;
+        let e = explore_timed(300, 784, &k1(), &cfg);
+        let parallel = sweep_ranks(&e, &w, &k1(), &cfg).unwrap();
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn empty_exploration_sweeps_nothing() {
+        let cfg = sweep_cfg(8, vec![2, 8]);
+        let e = explore_timed(13, 17, &k1(), &cfg); // prime layer: no survivors
+        let w = Tensor::randn(vec![13, 17], 0.1, &mut Rng::new(9));
+        let sweep = sweep_ranks(&e, &w, &k1(), &cfg).unwrap();
+        assert!(sweep.swept.is_empty());
+        assert!(sweep.frontier.is_empty());
+        assert_eq!(sweep.shapes_total, 0);
+        let err = select_within_accuracy_budget(&sweep, 0.5).unwrap_err();
+        assert!(matches!(err, Error::NoSolution(_)), "{err}");
+    }
+}

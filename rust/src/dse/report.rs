@@ -69,6 +69,22 @@ pub fn timed_solution_json(s: &TimedSolution) -> Json {
     ])
 }
 
+/// JSON form of one [`SweptSolution`](super::ranksweep::SweptSolution) —
+/// a [`timed_solution_json`] object extended with the two accuracy axes the
+/// rank sweep attaches: the measured TT-SVD relative reconstruction error
+/// and the analytic quantization-error estimate for the chain depth.
+pub fn swept_solution_json(s: &super::ranksweep::SweptSolution) -> Json {
+    let mut j = timed_solution_json(&s.timed);
+    if let Json::Obj(map) = &mut j {
+        map.insert("rel_error".to_string(), Json::from(s.rel_error));
+        map.insert(
+            "quant_error".to_string(),
+            Json::from(quant_error_estimate(s.timed.layout().d())),
+        );
+    }
+    j
+}
+
 /// Modeled relative output error of int8 per-`m`-slice quantization for a
 /// depth-`d` TT chain — the analytic quantization-error axis attached to
 /// DSE candidates before any weights exist. Symmetric int8 rounds each
@@ -176,6 +192,30 @@ mod tests {
             assert!(j.get(key).is_some(), "missing {key}");
         }
         // round-trips through the writer/parser
+        let text = crate::util::json::to_string(&j);
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn swept_solution_json_extends_the_timed_vocabulary() {
+        use crate::dse::ranksweep::SweptSolution;
+        use crate::machine::MachineSpec;
+        let e =
+            crate::dse::explore_timed(300, 784, &MachineSpec::spacemit_k1(), &DseConfig::default());
+        let s = SweptSolution { timed: e.frontier[0].clone(), rel_error: 0.125 };
+        let j = swept_solution_json(&s);
+        // every timed field plus the two accuracy axes
+        for key in [
+            "m_shape", "n_shape", "rank", "d", "params", "flops",
+            "modeled_time_s", "speedup_vs_dense", "rel_error", "quant_error",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("rel_error"), Some(&Json::from(0.125)));
+        assert_eq!(
+            j.get("quant_error"),
+            Some(&Json::from(quant_error_estimate(s.timed.layout().d())))
+        );
         let text = crate::util::json::to_string(&j);
         assert_eq!(crate::util::json::parse(&text).unwrap(), j);
     }

@@ -39,10 +39,11 @@ use crate::kernels::{Executor, PackedG};
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
 use crate::ttd::cost;
-use crate::ttd::decompose::random_cores;
+use crate::ttd::decompose::{random_cores, TtCores};
 use crate::util::prng::Rng;
 use crate::util::timer::{self, MeasureFloor};
 
+use super::ranksweep::{RankSweep, SweptSolution};
 use super::space::Solution;
 use super::timed::{TimedExplored, TimedSolution};
 
@@ -108,7 +109,17 @@ pub fn select_solution_within_error_budget(
     let mut filtered = e.clone();
     filtered.timed.retain(fits);
     filtered.frontier.retain(fits);
-    if filtered.timed.is_empty() && filtered.frontier.is_empty() {
+    // Emptiness is checked per policy *substrate*: Balance selects from
+    // `timed`, MinTime from `frontier`, and the two can empty
+    // independently (the frontier can be all-d>=3 while d=2 survivors
+    // remain — `balance_pick_is_time_qualified_but_frontier_is_not_its_home`).
+    // Requiring both to be empty used to let a frontier-emptying budget
+    // fall through to the generic no-solution error that never named it.
+    let substrate_empty = match policy {
+        SelectionPolicy::Balance => filtered.timed.is_empty(),
+        SelectionPolicy::MinTime => filtered.frontier.is_empty(),
+    };
+    if substrate_empty {
         return Err(Error::NoSolution(format!(
             "no time-qualified TT solution for {}x{} at rank {rank} within quantization \
              error budget {max_quant_error}",
@@ -116,6 +127,35 @@ pub fn select_solution_within_error_budget(
         )));
     }
     select_solution(&filtered, rank, policy)
+}
+
+/// Accuracy-budget policy over a rank sweep: the fastest (modeled) swept
+/// candidate whose measured TT-SVD relative reconstruction error fits
+/// `budget` — the accuracy analogue of
+/// [`select_solution_within_error_budget`], with the rank chosen by the
+/// sweep rather than taken from the config. Ties on modeled time resolve
+/// canonically. Like the quantization budget, a budget no candidate fits
+/// is a typed [`Error::NoSolution`] naming the budget — the swept set is
+/// the policy's only substrate, so the guard can never route through an
+/// error that omits it.
+pub fn select_within_accuracy_budget(sweep: &RankSweep, budget: f64) -> Result<SweptSolution> {
+    sweep
+        .swept
+        .iter()
+        .filter(|s| s.rel_error <= budget)
+        .min_by(|a, b| {
+            a.timed
+                .time_s
+                .total_cmp(&b.timed.time_s)
+                .then_with(|| a.timed.solution.canonical_cmp(&b.timed.solution))
+        })
+        .cloned()
+        .ok_or_else(|| {
+            Error::NoSolution(format!(
+                "no time-qualified TT solution for {}x{} within accuracy budget {budget}",
+                sweep.m_dim, sweep.n_dim
+            ))
+        })
 }
 
 /// §6.4 policy: the most balanced time-qualified d=2 solution at the
@@ -176,6 +216,47 @@ pub fn alternates(e: &TimedExplored, limit: usize) -> Vec<TimedSolution> {
     sols
 }
 
+/// Deterministic per-candidate measurement seed: an FNV-1a hash of the
+/// candidate's canonical layout (factor shapes and achieved ranks) and
+/// requested rank, mixed with the historical re-rank seed constant.
+fn candidate_seed(cand: &TimedSolution) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    let layout = cand.layout();
+    mix(layout.d() as u64);
+    for &v in layout.m_shape() {
+        mix(v);
+    }
+    for &v in layout.n_shape() {
+        mix(v);
+    }
+    for &v in layout.ranks() {
+        mix(v);
+    }
+    mix(cand.solution.rank);
+    h ^ 0x5e1ec7
+}
+
+/// The deterministic measurement inputs for one candidate: representative
+/// random cores and a calibration batch, drawn from a fresh Rng seeded by
+/// [`candidate_seed`]. A function of the candidate (and batch) alone —
+/// re-ranking `[a, b]`, `[b, a]`, or `[b]` by itself measures
+/// byte-identical tensors for `b`. This is the only source of randomness
+/// in [`rerank_measured`]; threading one Rng across the candidate list
+/// used to make a candidate's cores depend on its list position.
+fn measurement_inputs(cand: &TimedSolution, batch: usize) -> (TtCores, Tensor) {
+    let layout = cand.layout();
+    let mut rng = Rng::new(candidate_seed(cand));
+    let tt = random_cores(layout, &mut rng);
+    let x = Tensor::randn(vec![batch, layout.n_total() as usize], 1.0, &mut rng);
+    (tt, x)
+}
+
 /// Re-rank candidate solutions by **measured** end-to-end chain time on
 /// this host: each candidate gets representative random cores, a
 /// chain-autotuned executor ([`Executor::tune_chain`] measures RB × thread
@@ -189,18 +270,21 @@ pub fn alternates(e: &TimedExplored, limit: usize) -> Vec<TimedSolution> {
 /// poisons downstream sorts.
 ///
 /// Intended for the frontier head (a handful of candidates) — measurement
-/// costs real kernel executions per candidate.
+/// costs real kernel executions per candidate. Each candidate's random
+/// cores and calibration input come from a seed derived from the
+/// candidate itself ([`measurement_inputs`]), so its measurement does not
+/// depend on where it sits in the list or on which other candidates are
+/// measured alongside it.
 pub fn rerank_measured(
     candidates: &[TimedSolution],
     machine: &MachineSpec,
     batch: usize,
     floor: &MeasureFloor,
 ) -> Result<Vec<(TimedSolution, f64)>> {
-    let mut rng = Rng::new(0x5e1ec7);
     let mut measured = Vec::with_capacity(candidates.len());
     for cand in candidates {
         let layout = cand.layout().clone();
-        let tt = random_cores(&layout, &mut rng);
+        let (tt, x) = measurement_inputs(cand, batch);
         let mut ex = Executor::new(machine);
         let chain = cost::einsum_chain(&layout, batch);
         let packed: Vec<PackedG> = chain
@@ -209,7 +293,6 @@ pub fn rerank_measured(
             .map(|(step, dims)| ex.pack(&tt.cores[layout.d() - 1 - step], dims))
             .collect::<Result<_>>()?;
         ex.tune_chain(&layout, batch, &packed, floor)?;
-        let x = Tensor::randn(vec![batch, layout.n_total() as usize], 1.0, &mut rng);
         // try_min_secs warms once (validating), then takes the floored min
         let secs = timer::try_min_secs(
             "measured re-rank chain",
@@ -376,6 +459,92 @@ mod tests {
             assert!(!s.time_s.is_nan(), "NaN must order after every finite time");
         }
         let _ = alternates(&e, 3);
+    }
+
+    #[test]
+    fn frontier_emptying_budget_names_the_budget_for_min_time() {
+        // regression: with the frontier emptied by the budget but d=2
+        // survivors still time-qualified, MinTime used to fall through to
+        // select_min_time's generic no-solution error that never
+        // mentioned the budget
+        let mut e = timed(300, 784);
+        assert!(e.timed.iter().any(|s| s.layout().d() == 2));
+        let deep = crate::ttd::TtLayout::with_uniform_rank(vec![5, 5, 12], vec![16, 7, 7], 8)
+            .expect("valid d=3 layout");
+        e.frontier = vec![TimedSolution {
+            solution: Solution::new(deep, 8),
+            time_s: 1e-6,
+            speedup: 2.0,
+        }];
+        let tight = 2.0 / 254.0; // admits only d = 2, so the frontier empties
+        let err = select_solution_within_error_budget(&e, 8, SelectionPolicy::MinTime, tight)
+            .unwrap_err();
+        assert!(matches!(err, Error::NoSolution(_)), "{err}");
+        assert!(err.to_string().contains("budget"), "{err}");
+        // the Balance substrate keeps its d=2 survivors, so it succeeds
+        let s =
+            select_solution_within_error_budget(&e, 8, SelectionPolicy::Balance, tight).unwrap();
+        assert_eq!(s.layout().d(), 2);
+    }
+
+    #[test]
+    fn rerank_measurement_tensors_do_not_depend_on_list_composition() {
+        // regression: one Rng threaded across the candidate list made a
+        // candidate's random cores (and so its measured time) depend on
+        // its position and on which other candidates were measured;
+        // measurement inputs are now a function of the candidate alone
+        let e = timed(300, 784);
+        assert!(e.timed.len() >= 2);
+        let a = e.timed[0].clone();
+        let b = e.timed[1].clone();
+        let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        let (cores_b1, x_b1) = measurement_inputs(&b, 2);
+        // drawing `a`'s inputs in between must not perturb `b`'s
+        let _ = measurement_inputs(&a, 2);
+        let (cores_b2, x_b2) = measurement_inputs(&b, 2);
+        assert_eq!(cores_b1.cores.len(), cores_b2.cores.len());
+        for (c1, c2) in cores_b1.cores.iter().zip(&cores_b2.cores) {
+            assert_eq!(bits(c1), bits(c2));
+        }
+        assert_eq!(bits(&x_b1), bits(&x_b2));
+        // distinct candidates draw from distinct streams
+        assert_ne!(candidate_seed(&a), candidate_seed(&b));
+        let (cores_a, _) = measurement_inputs(&a, 2);
+        assert_ne!(bits(&cores_a.cores[0]), bits(&cores_b1.cores[0]));
+    }
+
+    #[test]
+    fn accuracy_budget_picks_fastest_within_budget_and_is_typed_below_floor() {
+        let mk = |rank: u64, time_s: f64, rel_error: f64| {
+            let layout =
+                crate::ttd::TtLayout::with_uniform_rank(vec![20, 15], vec![28, 28], rank).unwrap();
+            SweptSolution {
+                timed: TimedSolution {
+                    solution: Solution::new(layout, rank),
+                    time_s,
+                    speedup: 1.0 / time_s,
+                },
+                rel_error,
+            }
+        };
+        let sweep = RankSweep {
+            m_dim: 300,
+            n_dim: 784,
+            swept: vec![mk(2, 1e-6, 0.4), mk(4, 2e-6, 0.2), mk(8, 3e-6, 0.05)],
+            frontier: vec![],
+            shapes_swept: 1,
+            shapes_total: 1,
+        };
+        // the fastest candidate within the budget — not the most accurate
+        let pick = select_within_accuracy_budget(&sweep, 0.25).unwrap();
+        assert_eq!(pick.timed.solution.rank, 4);
+        // a loose budget admits everything, so the globally fastest wins
+        let loose = select_within_accuracy_budget(&sweep, 1.0).unwrap();
+        assert_eq!(loose.timed.solution.rank, 2);
+        // below the accuracy floor: a typed NoSolution naming the budget
+        let err = select_within_accuracy_budget(&sweep, 0.01).unwrap_err();
+        assert!(matches!(err, Error::NoSolution(_)), "{err}");
+        assert!(err.to_string().contains("accuracy budget"), "{err}");
     }
 
     #[test]

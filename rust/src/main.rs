@@ -59,7 +59,7 @@ use ttrv::compiler::{cb_suite, compile};
 use ttrv::config::{DseConfig, ServeConfig};
 use ttrv::coordinator::{InferenceRequest, LayerOp, ModelEngine, Server, TtFcEngine};
 use ttrv::dse;
-use ttrv::dse::report::{format_rows, rows_for_model, timed_solution_json};
+use ttrv::dse::report::{format_rows, rows_for_model, swept_solution_json, timed_solution_json};
 use ttrv::kernels::Executor;
 use ttrv::machine::MachineSpec;
 use ttrv::util::json::Json;
@@ -155,13 +155,19 @@ fn print_help() {
          usage: ttrv <command> [--key value ...]\n\
          commands: tables | dse | plan | kernel-bench | bench | compress | serve-demo | artifacts-check\n\
          \n\
+         dse [--n N --m M --rank R] [--ranks 2,4,8] [--accuracy-budget EPS] [--seed S]\n\
+         \u{20}        [--policy P] [--measure K] [--json]\n\
+         \u{20}        six-stage DSE for one FC layer; --ranks / --accuracy-budget add the\n\
+         \u{20}        weight-aware rank sweep and the fastest-within-budget pick\n\
          bench [--quick] [--out-dir D] [--kernels-only|--serve-only] [--config bench.toml]\n\
          \u{20}        [--kernel NAME]\n\
          \u{20}        measured kernel + serving sweeps -> BENCH_kernels.json / BENCH_serve.json\n\
-         compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R] [--seed S] [--tune]\n\
-         \u{20}        [--quantize [--max-quant-error EPS]]\n\
+         compress --model <zoo-name|spec.toml> --out model.ttrv [--rank R|auto] [--seed S]\n\
+         \u{20}        [--accuracy-budget EPS] [--tune] [--quantize [--max-quant-error EPS]]\n\
          \u{20}        DSE-route + TT-SVD a model's FC stack into a versioned .ttrv bundle\n\
-         \u{20}        (--tune: measure RB/thread candidates per einsum, persist the winners;\n\
+         \u{20}        (--rank auto: per-layer rank from the accuracy sweep, fastest layout\n\
+         \u{20}         with TT-SVD rel error <= EPS;\n\
+         \u{20}         --tune: measure RB/thread candidates per einsum, persist the winners;\n\
          \u{20}         --quantize: persist int8 cores when measured error fits the budget)\n\
          serve-demo [--artifact a.ttrv [--artifact b.ttrv ...]] [--workers N] [--max-batch B]\n\
          \u{20}        [--shards S] [--steal ring|off] [--slo-us T] [--cache-bytes B]\n\
@@ -201,12 +207,21 @@ fn cmd_dse(args: &Args) -> ttrv::Result<()> {
     let m: u64 = get(args, "m", 300)?;
     let rank: u64 = get(args, "rank", 8)?;
     let top: usize = get(args, "top", 10)?;
+    let seed: u64 = get(args, "seed", 42)?;
     let base = DseConfig::default();
     let cfg = DseConfig {
         dse_workers: get(args, "workers", base.dse_workers)?,
         selection_policy: last(args, "policy")
             .cloned()
             .unwrap_or_else(|| base.selection_policy.clone()),
+        rank_candidates: match last(args, "ranks") {
+            Some(s) => parse_rank_list(s)?,
+            None => base.rank_candidates.clone(),
+        },
+        accuracy_budget: match last(args, "accuracy-budget") {
+            Some(_) => Some(get(args, "accuracy-budget", 0.0f64)?),
+            None => base.accuracy_budget,
+        },
         ..base
     };
     cfg.validate()?;
@@ -214,6 +229,22 @@ fn cmd_dse(args: &Args) -> ttrv::Result<()> {
     let e = dse::explore_timed(m, n, &machine, &cfg);
     let c = &e.explored.counts;
     let sel = dse::select_solution(&e, rank, cfg.policy()?);
+
+    // weight-aware rank sweep (stage 7), on request: --ranks and/or
+    // --accuracy-budget turn it on. The CLI has no trained weights, so it
+    // sweeps a seeded TT-structured demo matrix (planted at the ladder's
+    // median rank on the policy pick's shape) — low ranks then carry real
+    // reconstruction-error signal instead of the flat error of pure noise.
+    let sweep = if args.contains_key("ranks") || cfg.accuracy_budget.is_some() {
+        let w = dse_demo_weights(m, n, sel.as_ref().ok(), &cfg, seed);
+        Some(dse::sweep_ranks(&e, &w, &machine, &cfg)?)
+    } else {
+        None
+    };
+    let budget_pick = match (&sweep, cfg.accuracy_budget) {
+        (Some(sw), Some(b)) => Some(dse::select_within_accuracy_budget(sw, b)),
+        _ => None,
+    };
 
     // measured re-rank of the frontier head (runs on the build host, not
     // the modeled target) plus a measured host dense baseline, so modeled
@@ -235,7 +266,12 @@ fn cmd_dse(args: &Args) -> ttrv::Result<()> {
     };
 
     if args.contains_key("json") {
+        if let Some(Err(err)) = &budget_pick {
+            eprintln!("warning: accuracy budget not met: {err}");
+        }
         let report = Json::obj(vec![
+            ("schema", Json::from("ttrv-dse-report")),
+            ("schema_version", Json::from(1usize)),
             ("n", Json::from(n as usize)),
             ("m", Json::from(m as usize)),
             ("rank", Json::from(rank as usize)),
@@ -295,6 +331,34 @@ fn cmd_dse(args: &Args) -> ttrv::Result<()> {
                     Err(_) => Json::Null,
                 },
             ),
+            (
+                "accuracy_budget",
+                match cfg.accuracy_budget {
+                    Some(b) => Json::from(b),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "rank_sweep",
+                match &sweep {
+                    Some(sw) => Json::Arr(sw.swept.iter().map(swept_solution_json).collect()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "selected_rank",
+                match &budget_pick {
+                    Some(Ok(sw)) => Json::from(sw.timed.solution.rank as usize),
+                    _ => Json::Null,
+                },
+            ),
+            (
+                "rel_error",
+                match &budget_pick {
+                    Some(Ok(sw)) => Json::from(sw.rel_error),
+                    _ => Json::Null,
+                },
+            ),
         ]);
         println!("{}", ttrv::util::json::to_string_pretty(&report));
         return sel.map(|_| ());
@@ -343,6 +407,40 @@ fn cmd_dse(args: &Args) -> ttrv::Result<()> {
         sel.time_s * 1e6,
         sel.speedup,
     );
+    if let Some(sw) = &sweep {
+        println!(
+            "rank sweep over ranks {:?} ({} of {} shapes swept): {} decompositions, \
+             {} on the accuracy frontier",
+            cfg.rank_candidates,
+            sw.shapes_swept,
+            sw.shapes_total,
+            sw.swept.len(),
+            sw.frontier.len(),
+        );
+        for s in &sw.swept {
+            println!(
+                "  rank {:>3}  rel_error={:.4}  modeled={:.1} us ({:.1}x)  {}",
+                s.timed.solution.rank,
+                s.rel_error,
+                s.timed.time_s * 1e6,
+                s.timed.speedup,
+                s.timed.layout().describe(),
+            );
+        }
+        match &budget_pick {
+            Some(Ok(pick)) => println!(
+                "accuracy-budget pick (rel_error <= {}): rank {} rel_error={:.4} \
+                 modeled={:.1} us  {}",
+                cfg.accuracy_budget.unwrap_or(f64::NAN),
+                pick.timed.solution.rank,
+                pick.rel_error,
+                pick.timed.time_s * 1e6,
+                pick.timed.layout().describe(),
+            ),
+            Some(Err(err)) => println!("accuracy budget not met: {err}"),
+            None => {}
+        }
+    }
     if let Some((ranked, dense_secs)) = &measured {
         println!(
             "measured re-rank of the frontier head (host, chain-autotuned; host dense \
@@ -377,6 +475,55 @@ fn measure_dense_host(
     let fc = ttrv::baselines::dense::DenseFc::new(&w, None)?;
     let x = Tensor::randn(vec![batch, n as usize], 1.0, &mut rng);
     ttrv::util::timer::try_min_secs("host dense baseline", || fc.forward(&x).map(|_| ()), floor)
+}
+
+/// `--ranks` value parser: a non-empty comma list of TT ranks.
+fn parse_rank_list(s: &str) -> ttrv::Result<Vec<u64>> {
+    let ranks: Vec<u64> = s
+        .split(',')
+        .map(|t| {
+            t.trim().parse::<u64>().map_err(|_| {
+                ttrv::Error::config(format!(
+                    "--ranks expects a comma list of positive integers (e.g. 2,4,8), got '{s}'"
+                ))
+            })
+        })
+        .collect::<ttrv::Result<_>>()?;
+    if ranks.is_empty() {
+        return Err(ttrv::Error::config("--ranks expects at least one rank"));
+    }
+    Ok(ranks)
+}
+
+/// Seeded demo weights for the CLI rank sweep. Real deployments sweep the
+/// trained weight matrix; the CLI plants a TT-structured matrix (the
+/// ladder's median rank, on the policy pick's factorization shape) so low
+/// ranks carry genuine reconstruction-error signal — a pure-noise matrix
+/// would show near-flat error across the whole ladder.
+fn dse_demo_weights(
+    m: u64,
+    n: u64,
+    sel: Option<&ttrv::dse::TimedSolution>,
+    cfg: &DseConfig,
+    seed: u64,
+) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut ladder = cfg.rank_candidates.clone();
+    ladder.sort_unstable();
+    let plant_rank = ladder.get(ladder.len() / 2).copied().unwrap_or(4);
+    if let Some(s) = sel {
+        let layout = ttrv::ttd::TtLayout::with_uniform_rank(
+            s.layout().m_shape().to_vec(),
+            s.layout().n_shape().to_vec(),
+            plant_rank,
+        );
+        if let Ok(layout) = layout {
+            if let Ok(w) = random_cores(&layout, &mut rng).reconstruct() {
+                return w;
+            }
+        }
+    }
+    Tensor::randn(vec![m as usize, n as usize], 0.05, &mut rng)
 }
 
 fn cmd_plan(args: &Args) -> ttrv::Result<()> {
@@ -560,8 +707,27 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
         .ok_or_else(|| ttrv::Error::config("compress needs --model <zoo-name|spec.toml>"))?;
     let out = last(args, "out")
         .ok_or_else(|| ttrv::Error::config("compress needs --out <file.ttrv>"))?;
-    let rank: u64 = get(args, "rank", 8)?;
+    // `--rank auto` switches to the weight-aware sweep: per layer the rank
+    // comes from the accuracy-budget pick over `rank_candidates`, not from
+    // a fixed CLI value. Checked as a string BEFORE the numeric parse,
+    // which would otherwise hard-error on "auto".
+    let rank_is_auto = last(args, "rank").map(String::as_str) == Some("auto");
+    let rank: u64 = if rank_is_auto { 8 } else { get(args, "rank", 8)? };
     let seed: u64 = get(args, "seed", 42)?;
+    let auto_budget = if rank_is_auto {
+        let b = match last(args, "accuracy-budget") {
+            Some(_) => Some(get(args, "accuracy-budget", 0.0f64)?),
+            None => DseConfig::default().accuracy_budget,
+        };
+        Some(b.ok_or_else(|| {
+            ttrv::Error::config(
+                "--rank auto needs --accuracy-budget EPS (max relative TT-SVD \
+                 reconstruction error, e.g. 0.1)",
+            )
+        })?)
+    } else {
+        None
+    };
     // anything path-shaped is a spec file — a typo'd path must surface as
     // a missing file, never fall through to an "unknown zoo model" error
     let looks_like_path = model.ends_with(".toml") || model.contains(['/', '\\']);
@@ -576,7 +742,11 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
         let spec = ttrv::artifact::CompressSpec {
             name: file.name,
             shapes: file.shapes,
-            rank: if args.contains_key("rank") { rank } else { file.rank.unwrap_or(rank) },
+            rank: if args.contains_key("rank") && !rank_is_auto {
+                rank
+            } else {
+                file.rank.unwrap_or(rank)
+            },
             seed: if args.contains_key("seed") { seed } else { file.seed.unwrap_or(seed) },
         };
         spec.validate()?;
@@ -586,16 +756,28 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
     };
     let machine = MachineSpec::spacemit_k1();
     let cfg = DseConfig::default();
-    println!(
-        "compressing {} ({} FC layers) for {} at rank {}, seed {}",
-        spec.name,
-        spec.shapes.len(),
-        machine.name,
-        spec.rank,
-        spec.seed
-    );
+    match auto_budget {
+        Some(b) => println!(
+            "compressing {} ({} FC layers) for {} at rank auto (accuracy budget {b}), seed {}",
+            spec.name,
+            spec.shapes.len(),
+            machine.name,
+            spec.seed
+        ),
+        None => println!(
+            "compressing {} ({} FC layers) for {} at rank {}, seed {}",
+            spec.name,
+            spec.shapes.len(),
+            machine.name,
+            spec.rank,
+            spec.seed
+        ),
+    }
     let t0 = std::time::Instant::now();
-    let mut bundle = ttrv::artifact::compress(&spec, &machine, &cfg)?;
+    let mut bundle = match auto_budget {
+        Some(b) => ttrv::artifact::compress_auto(&spec, &machine, &cfg, b)?,
+        None => ttrv::artifact::compress(&spec, &machine, &cfg)?,
+    };
     if args.contains_key("quantize") {
         // int8-quantize the packed cores per m slice; the shadows ride
         // along in the (optional, format v4) QUANT section and
@@ -649,12 +831,21 @@ fn cmd_compress(args: &Args) -> ttrv::Result<()> {
         let m = entry.get("m").and_then(Json::as_usize).unwrap_or(0);
         match entry.get("selected") {
             Some(Json::Null) | None => println!("  [{n} -> {m}] dense (no qualified solution)"),
-            Some(sel) => println!(
-                "  [{n} -> {m}] TT d={} rank={} ({:.1}x modeled speedup)",
-                sel.get("d").and_then(Json::as_usize).unwrap_or(0),
-                sel.get("rank").and_then(Json::as_usize).unwrap_or(0),
-                sel.get("speedup_vs_dense").and_then(Json::as_f64).unwrap_or(0.0),
-            ),
+            Some(sel) => {
+                let swept = match (
+                    entry.get("selected_rank").and_then(Json::as_usize),
+                    entry.get("rel_error").and_then(Json::as_f64),
+                ) {
+                    (Some(r), Some(e)) => format!(", swept rank {r} rel_error={e:.4}"),
+                    _ => String::new(),
+                };
+                println!(
+                    "  [{n} -> {m}] TT d={} rank={} ({:.1}x modeled speedup{swept})",
+                    sel.get("d").and_then(Json::as_usize).unwrap_or(0),
+                    sel.get("rank").and_then(Json::as_usize).unwrap_or(0),
+                    sel.get("speedup_vs_dense").and_then(Json::as_f64).unwrap_or(0.0),
+                );
+            }
         }
     }
     ttrv::artifact::write_bundle_file(out, &bundle)?;

@@ -86,9 +86,11 @@ fn single_layer_bundle(tt: &TtCores, plans: Vec<OptimizationPlan>) -> ModelBundl
             bias: tt.bias.clone(),
             selected,
             tuned: None,
+            quant: None,
         })],
         report: Json::Arr(vec![]),
         tuned_kernel: None,
+        auto: None,
     }
 }
 
@@ -863,6 +865,57 @@ fn id_5_is_quant_only_from_version_4() {
     bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
     let back = artifact::read_bundle_bytes(&bytes).unwrap();
     assert_eq!(&back, bundle, "pre-v4 id-5 section must be skipped, not decoded");
+}
+
+// ---------------------------------------------------------------------------
+// Auto-rank META record (accuracy-budget compression)
+// ---------------------------------------------------------------------------
+
+use ttrv::artifact::{AutoRankInfo, AutoRankLayer};
+
+#[test]
+fn auto_rank_meta_roundtrips_and_is_optional() {
+    // fixed-rank bundles carry no auto keys and stay byte-identical
+    let plain = lenet_bundle();
+    assert!(plain.auto.is_none());
+    let plain_bytes = artifact::write_bundle(plain);
+
+    // the auto record survives write -> read exactly (budget, per-layer
+    // picks, dense Nones) — and changes only the META section
+    let mut auto = plain.clone();
+    auto.auto = Some(AutoRankInfo {
+        budget: 0.1,
+        layers: vec![
+            Some(AutoRankLayer { rank: 4, rel_error: 0.0625 }),
+            Some(AutoRankLayer { rank: 2, rel_error: 0.03125 }),
+            None,
+        ],
+    });
+    let bytes = artifact::write_bundle(&auto);
+    assert_ne!(bytes, plain_bytes);
+    let back = artifact::read_bundle_bytes(&bytes).unwrap();
+    assert_eq!(back, auto);
+    assert_eq!(back.auto.as_ref().unwrap().layers.len(), 3);
+}
+
+#[test]
+fn auto_rank_meta_corruption_is_a_typed_error() {
+    // an auto_layers list that does not cover every FC layer is corrupt
+    let mut short = lenet_bundle().clone();
+    short.auto = Some(AutoRankInfo {
+        budget: 0.1,
+        layers: vec![Some(AutoRankLayer { rank: 4, rel_error: 0.1 })], // 1 of 3
+    });
+    let err = artifact::read_bundle_bytes(&artifact::write_bundle(&short)).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("auto_layers"), "{err}");
+
+    // a non-finite budget never decodes
+    let mut bad = lenet_bundle().clone();
+    bad.auto = Some(AutoRankInfo { budget: f64::NAN, layers: vec![None, None, None] });
+    let err = artifact::read_bundle_bytes(&artifact::write_bundle(&bad)).unwrap_err();
+    assert!(matches!(err, Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("auto_budget"), "{err}");
 }
 
 // ---------------------------------------------------------------------------

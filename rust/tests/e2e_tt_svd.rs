@@ -50,6 +50,20 @@ fn compression_error_tradeoff_is_monotone() {
 }
 
 #[test]
+fn full_rank_decomposition_is_exact() {
+    // the top of the rank ladder: requesting the attainable bound
+    // min(m1*n1, m2*n2) must reproduce W to float roundoff, so the rank
+    // sweep's rel_error axis bottoms out near 0 instead of plateauing
+    let mut rng = Rng::new(44);
+    let w = lowrankish(120, 400, &mut rng);
+    let bound = (12u64 * 20).min(10 * 20);
+    let layout = TtLayout::with_uniform_rank(vec![12, 10], vec![20, 20], bound).unwrap();
+    let tt = tt_svd(&w, &layout).unwrap();
+    let err = tt.rel_error(&w).unwrap();
+    assert!(err < 1e-3, "full-rank TT-SVD not exact: rel_error {err}");
+}
+
+#[test]
 fn engine_inference_error_bounded_by_decomposition_error() {
     let mut rng = Rng::new(42);
     let w = lowrankish(120, 400, &mut rng);
