@@ -17,6 +17,11 @@
                           sweep ran, `rank_sweep` rows carrying
                           `rel_error`/`quant_error` plus the
                           accuracy-budget pick's `selected_rank`)
+* lint reports           (schema `ttrv-lint-report`, v1: the document
+                          `ttrv lint --json` prints — one row per
+                          plan x core pair with the static verifier's
+                          per-invariant violations; `clean` must agree
+                          with the violation count)
 
 Run by CI after the bench/serve steps so a malformed report fails the
 build instead of silently polluting the perf trajectory. Files are
@@ -41,6 +46,7 @@ EXPECTED_VERSIONS = {
     "ttrv-bench-serve": 2,
     "ttrv-serve-snapshot": 2,
     "ttrv-dse-report": 1,
+    "ttrv-lint-report": 1,
 }
 
 # Kernel names the Rust dispatch layer can emit (dispatch.rs); the set is
@@ -291,6 +297,62 @@ def check_dse_report(doc):
     return len(frontier)
 
 
+LINT_ROW_KEYS = (
+    "layer", "step", "source", "kind", "m", "b", "n", "r", "k", "layout",
+    "vector_loop", "vl", "rm", "rb", "rr", "rk", "registers", "threads",
+    "quant", "status", "violations",
+)
+
+LINT_LAYOUTS = ("Canonical", "PackedR", "PackedK")
+LINT_KINDS = ("First", "Middle", "Final")
+LINT_VECTOR_LOOPS = ("R", "K", "None")
+
+
+def check_lint_report(doc):
+    for key in ("source", "model", "machine"):
+        need(isinstance(doc.get(key), str) and doc[key], f"{key}: bad value")
+    need(isinstance(doc.get("machine_known"), bool), "machine_known: not a bool")
+    need(isinstance(doc.get("clean"), bool), "clean: not a bool")
+    results = doc.get("results")
+    need(isinstance(results, list) and results, "results: empty")
+    need(doc.get("plans_checked") == len(results),
+         "plans_checked disagrees with len(results)")
+    total = 0
+    for i, row in enumerate(results):
+        rpath = f"results[{i}]"
+        need(isinstance(row, dict), f"{rpath}: not an object")
+        for key in LINT_ROW_KEYS:
+            need(key in row, f"{rpath}: missing '{key}'")
+        need(row["source"] in ("selected", "tuned"), f"{rpath}.source: {row['source']!r}")
+        need(row["kind"] in LINT_KINDS, f"{rpath}.kind: {row['kind']!r}")
+        need(row["layout"] in LINT_LAYOUTS, f"{rpath}.layout: {row['layout']!r}")
+        need(row["vector_loop"] in LINT_VECTOR_LOOPS,
+             f"{rpath}.vector_loop: {row['vector_loop']!r}")
+        for key in ("m", "b", "n", "r", "k", "vl", "rm", "rb", "rr", "rk", "threads"):
+            need(is_finite_number(row[key]) and row[key] >= 1, f"{rpath}.{key}: bad value")
+        need(is_finite_number(row["layer"]) and row["layer"] >= 0, f"{rpath}.layer: bad value")
+        need(is_finite_number(row["step"]) and row["step"] >= 0, f"{rpath}.step: bad value")
+        # Eq. 19: rm*rb*rr + min(rb*rk, rm*rr) + 1 >= 1*1*1 + 1 + 1 = 3
+        need(is_finite_number(row["registers"]) and row["registers"] >= 3,
+             f"{rpath}.registers: bad value")
+        need(isinstance(row["quant"], bool), f"{rpath}.quant: not a bool")
+        vs = row["violations"]
+        need(isinstance(vs, list), f"{rpath}.violations: not a list")
+        for j, v in enumerate(vs):
+            need(isinstance(v, dict), f"{rpath}.violations[{j}]: not an object")
+            need(isinstance(v.get("invariant"), str) and v["invariant"],
+                 f"{rpath}.violations[{j}].invariant: bad value")
+            need(isinstance(v.get("detail"), str) and v["detail"],
+                 f"{rpath}.violations[{j}].detail: bad value")
+        need(row["status"] == ("ok" if not vs else "violated"),
+             f"{rpath}.status: disagrees with its violations list")
+        total += len(vs)
+    need(doc.get("violations") == total,
+         f"violations {doc.get('violations')!r} != counted {total}")
+    need(doc["clean"] == (total == 0), "clean disagrees with the violation count")
+    return len(results)
+
+
 def check_file(path):
     with open(path) as fh:
         doc = json.load(fh)
@@ -307,6 +369,9 @@ def check_file(path):
     if schema == "ttrv-dse-report":
         # a `ttrv dse --json` report (no quick/results envelope either)
         return check_dse_report(doc)
+    if schema == "ttrv-lint-report":
+        # a `ttrv lint --json` report (envelope-free, like the DSE report)
+        return check_lint_report(doc)
     need(isinstance(doc.get("quick"), bool), "missing/bad 'quick' flag")
     need(isinstance(doc.get("results"), list) and doc["results"], "empty results")
     need(is_finite_number(doc.get("host_threads")) and doc["host_threads"] >= 1,

@@ -41,7 +41,7 @@ pub fn run_suite(kind: EinsumKind, fig: &str) {
         host_plan.threads = 1;
         // measured autotune over the solver's top candidates (§Perf iter 2)
         host_plan = tune_plan(&host_plan, &host, &g, &x, 6).expect("tune");
-        ex.set_plan(host_plan);
+        ex.set_plan(host_plan).expect("plan");
         let pg = pack(&g, &host_plan).expect("pack");
         let gm = iree_like::prepare_g(&g).expect("prep");
         let ours = measure(&format!("{} ours", entry.id), d.flops(), &bcfg, || {

@@ -77,7 +77,7 @@ fn main() {
                 // cache for the same chain dims
                 let mut ex = Executor::new(&machine);
                 for p in &plans {
-                    ex.set_plan(*p);
+                    ex.set_plan(*p).expect("plan");
                 }
                 let mes = measure("stage", sol.solution.flops, &bcfg, || {
                     let mut cur = x0.clone();

@@ -43,7 +43,7 @@ fn main() {
             let mut plan = base;
             plan.rb = RbFactors { rm, rb, rr: 1, rk: 1 };
             plan.threads = 1;
-            ex.set_plan(plan);
+            ex.set_plan(plan).expect("plan");
             let pg = pack(&g, &plan).expect("pack");
             let m = measure(&format!("rm={rm} rb={rb}"), dims.flops(), &bcfg, || {
                 ex.execute(&dims, &pg, &x).expect("exec");

@@ -439,7 +439,7 @@ pub fn tune_bundle(
     for op in &mut bundle.ops {
         if let BundleOp::Tt(t) = op {
             let mut ex = Executor::new(machine);
-            ex.preseed(&t.plans); // tune from the stored analytic plans
+            ex.preseed(&t.plans)?; // tune from the stored analytic plans
             let winners = match &t.quant {
                 // a quantized layer serves the int8 chain, so rank the
                 // int8 kernel roster over the cores it will actually run

@@ -1,0 +1,337 @@
+//! Bundle-wide static verification — the artifact side of `ttrv lint`.
+//!
+//! A `.ttrv` bundle injects externally-sourced plans (OPS, TUNE) and cores
+//! (OPS, QUANT) straight into the serving executor, so every plan × core
+//! pair it carries is run through the strict tier of
+//! [`crate::compiler::verify`] — the machine register budget (resolved
+//! from the bundle's META `machine` name via
+//! [`MachineSpec::by_name`]; unknown machines skip only that check) plus
+//! the packed-geometry and pad-lane proofs against the concrete stored
+//! cores.
+//!
+//! Two consumers share the walk:
+//!
+//! * [`lint_bundle`] collects *every* violation into a [`LintReport`] with
+//!   one [`LintRow`] per plan × core pair — the `ttrv lint` subcommand
+//!   renders it as text or as the `ttrv-lint-report` v1 JSON schema.
+//! * [`verify_bundle`] is the decode chokepoint:
+//!   [`crate::artifact::read_bundle_bytes`] calls it on every decoded
+//!   bundle and refuses to return one that fails, as a typed
+//!   [`Error::Artifact`] naming the first offending layer/step/invariant.
+//!
+//! [`Error::Artifact`]: crate::error::Error::Artifact
+
+use crate::artifact::bundle::{BundleOp, ModelBundle};
+use crate::compiler::verify::{self, Violation};
+use crate::compiler::OptimizationPlan;
+use crate::error::{Error, Result};
+use crate::kernels::{GLayout, PackedG, QuantizedG};
+use crate::machine::MachineSpec;
+use crate::util::json::Json;
+
+/// Which plan list of a TT layer a lint row came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    /// The analytic OPS plan the compiler selected.
+    Selected,
+    /// A measured-autotuned TUNE plan.
+    Tuned,
+}
+
+impl PlanSource {
+    /// Stable lowercase name (the JSON report's `source` enum).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlanSource::Selected => "selected",
+            PlanSource::Tuned => "tuned",
+        }
+    }
+}
+
+/// One plan × core pair's verification outcome.
+#[derive(Debug, Clone)]
+pub struct LintRow {
+    /// Index of the op in [`ModelBundle::ops`].
+    pub layer: usize,
+    /// Chain step within the layer (processing order, t = d-1 .. 0).
+    pub step: usize,
+    /// Which plan list the plan came from.
+    pub source: PlanSource,
+    /// The plan that was checked.
+    pub plan: OptimizationPlan,
+    /// The stored core's layout.
+    pub layout: GLayout,
+    /// The plan's vector-register demand (paper Eq. 19).
+    pub registers: usize,
+    /// Whether an int8 QUANT shadow core was cross-checked too.
+    pub quant: bool,
+    /// Every violated invariant (empty = this pair proved safe).
+    pub violations: Vec<Violation>,
+}
+
+/// The full bundle verification result: one row per plan × core pair.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// Model display name from the bundle.
+    pub model: String,
+    /// The META `machine` name the plans were compiled for.
+    pub machine: String,
+    /// Whether [`MachineSpec::by_name`] knows that machine — when `false`
+    /// the register-budget check was skipped (every other check still ran).
+    pub machine_known: bool,
+    /// One row per checked plan × core pair, bundle order.
+    pub rows: Vec<LintRow>,
+}
+
+impl LintReport {
+    /// How many plan × core pairs were checked.
+    pub fn plans_checked(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Total violations across every row.
+    pub fn violations(&self) -> usize {
+        self.rows.iter().map(|r| r.violations.len()).sum()
+    }
+
+    /// `true` when every pair proved safe.
+    pub fn clean(&self) -> bool {
+        self.rows.iter().all(|r| r.violations.is_empty())
+    }
+
+    /// The `ttrv-lint-report` v1 JSON document (`source` names where the
+    /// bundle came from: an artifact path or a `zoo:<name>` tag).
+    pub fn to_json(&self, source: &str) -> Json {
+        let results: Vec<Json> = self.rows.iter().map(row_json).collect();
+        Json::obj(vec![
+            ("schema", Json::from("ttrv-lint-report")),
+            ("schema_version", Json::from(1usize)),
+            ("source", Json::from(source)),
+            ("model", Json::from(self.model.as_str())),
+            ("machine", Json::from(self.machine.as_str())),
+            ("machine_known", Json::from(self.machine_known)),
+            ("plans_checked", Json::from(self.plans_checked())),
+            ("violations", Json::from(self.violations())),
+            ("clean", Json::from(self.clean())),
+            ("results", Json::Arr(results)),
+        ])
+    }
+}
+
+fn row_json(r: &LintRow) -> Json {
+    let d = &r.plan.dims;
+    Json::obj(vec![
+        ("layer", Json::from(r.layer)),
+        ("step", Json::from(r.step)),
+        ("source", Json::from(r.source.as_str())),
+        ("kind", Json::from(format!("{:?}", d.kind).as_str())),
+        ("m", Json::from(d.m)),
+        ("b", Json::from(d.b)),
+        ("n", Json::from(d.n)),
+        ("r", Json::from(d.r)),
+        ("k", Json::from(d.k)),
+        ("layout", Json::from(format!("{:?}", r.layout).as_str())),
+        ("vector_loop", Json::from(format!("{:?}", r.plan.vector_loop).as_str())),
+        ("vl", Json::from(r.plan.vl)),
+        ("rm", Json::from(r.plan.rb.rm)),
+        ("rb", Json::from(r.plan.rb.rb)),
+        ("rr", Json::from(r.plan.rb.rr)),
+        ("rk", Json::from(r.plan.rb.rk)),
+        ("registers", Json::from(r.registers)),
+        ("threads", Json::from(r.plan.threads)),
+        ("quant", Json::from(r.quant)),
+        ("status", Json::from(if r.violations.is_empty() { "ok" } else { "violated" })),
+        (
+            "violations",
+            Json::Arr(
+                r.violations
+                    .iter()
+                    .map(|v| {
+                        Json::obj(vec![
+                            ("invariant", Json::from(v.invariant)),
+                            ("detail", Json::from(v.detail.as_str())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Strict-tier checks for one plan against its stored cores.
+fn check_pair(
+    layer: usize,
+    step: usize,
+    source: PlanSource,
+    plan: &OptimizationPlan,
+    packed: &PackedG,
+    quant: Option<&QuantizedG>,
+    machine: Option<&MachineSpec>,
+) -> LintRow {
+    let mut violations = match machine {
+        Some(m) => verify::check_plan_for(plan, m),
+        None => verify::check_plan(plan),
+    };
+    violations.extend(verify::check_packed(plan, packed));
+    if let Some(q) = quant {
+        violations.extend(verify::check_quant(plan, q));
+    }
+    LintRow {
+        layer,
+        step,
+        source,
+        plan: *plan,
+        layout: packed.layout,
+        registers: plan.rb.registers(),
+        quant: quant.is_some(),
+        violations,
+    }
+}
+
+/// Run the full strict-tier analysis over every plan × core pair in the
+/// bundle: analytic OPS plans and (when present) measured TUNE plans, each
+/// against the stored f32 core and (when present) its int8 QUANT shadow.
+/// Collects every violation; [`verify_bundle`] is the fail-fast twin.
+pub fn lint_bundle(bundle: &ModelBundle) -> LintReport {
+    let machine = MachineSpec::by_name(&bundle.machine);
+    let mut rows = Vec::new();
+    for (layer, op) in bundle.ops.iter().enumerate() {
+        let BundleOp::Tt(t) = op else { continue };
+        let quant_at = |step: usize| t.quant.as_ref().and_then(|qs| qs.get(step));
+        for (step, (plan, packed)) in t.plans.iter().zip(&t.packed).enumerate() {
+            rows.push(check_pair(
+                layer,
+                step,
+                PlanSource::Selected,
+                plan,
+                packed,
+                quant_at(step),
+                machine.as_ref(),
+            ));
+        }
+        if let Some(tuned) = &t.tuned {
+            for (step, (plan, packed)) in tuned.iter().zip(&t.packed).enumerate() {
+                rows.push(check_pair(
+                    layer,
+                    step,
+                    PlanSource::Tuned,
+                    plan,
+                    packed,
+                    quant_at(step),
+                    machine.as_ref(),
+                ));
+            }
+        }
+    }
+    LintReport {
+        model: bundle.name.clone(),
+        machine: bundle.machine.clone(),
+        machine_known: machine.is_some(),
+        rows,
+    }
+}
+
+/// The artifact-decode chokepoint: [`lint_bundle`] as a typed
+/// [`Error::Artifact`] naming the first offending layer/step/invariant
+/// (and the total count, so a multi-fault bundle is obvious).
+/// [`crate::artifact::read_bundle_bytes`] calls this on every decode — a
+/// bundle that fails never reaches an executor.
+pub fn verify_bundle(bundle: &ModelBundle) -> Result<()> {
+    let report = lint_bundle(bundle);
+    if report.clean() {
+        return Ok(());
+    }
+    let row = report
+        .rows
+        .iter()
+        .find(|r| !r.violations.is_empty())
+        .expect("non-clean report has a violating row");
+    let msgs: Vec<String> = row.violations.iter().map(|v| v.to_string()).collect();
+    Err(Error::artifact(format!(
+        "bundle '{}' fails static verification ({} violation(s) across {} plan(s)); \
+         first: layer {} step {} ({} plan): {}",
+        report.model,
+        report.violations(),
+        report.plans_checked(),
+        row.layer,
+        row.step,
+        row.source.as_str(),
+        msgs.join("; ")
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::{compress, CompressSpec};
+    use crate::config::DseConfig;
+
+    fn sample() -> ModelBundle {
+        let spec = CompressSpec::from_zoo("lenet300", 8, 5).unwrap();
+        compress(&spec, &MachineSpec::spacemit_k1(), &DseConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn fresh_compression_lints_clean() {
+        let b = sample();
+        let report = lint_bundle(&b);
+        assert!(report.plans_checked() > 0);
+        assert!(report.machine_known);
+        assert!(report.clean(), "{:?}", report.rows.iter().flat_map(|r| &r.violations).collect::<Vec<_>>());
+        assert!(verify_bundle(&b).is_ok());
+    }
+
+    #[test]
+    fn corrupted_plan_is_named_by_layer_step_and_invariant() {
+        let mut b = sample();
+        let BundleOp::Tt(t) = &mut b.ops[0] else { panic!("op 0 is TT") };
+        t.plans[1].threads = 0;
+        let report = lint_bundle(&b);
+        assert!(!report.clean());
+        let bad: Vec<_> = report.rows.iter().filter(|r| !r.violations.is_empty()).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!((bad[0].layer, bad[0].step), (0, 1));
+        assert_eq!(bad[0].violations[0].invariant, "threads-positive");
+        let err = verify_bundle(&b).unwrap_err().to_string();
+        assert!(err.contains("layer 0 step 1"), "{err}");
+        assert!(err.contains("threads-positive"), "{err}");
+    }
+
+    #[test]
+    fn unknown_machine_skips_only_the_budget_check() {
+        let mut b = sample();
+        b.machine = "riscv-unknown".to_string();
+        let report = lint_bundle(&b);
+        assert!(!report.machine_known);
+        assert!(report.clean()); // everything else still ran and passed
+        // an over-budget RB now passes (no machine to budget against)...
+        let BundleOp::Tt(t) = &mut b.ops[0] else { panic!("op 0 is TT") };
+        t.plans[0].rb = crate::compiler::RbFactors { rm: 8, rb: 8, rr: 1, rk: 1 };
+        assert!(lint_bundle(&b).clean());
+        // ...but the same bundle on a known machine is rejected by budget
+        b.machine = "SpacemiT-K1".to_string();
+        let report = lint_bundle(&b);
+        let bad: Vec<_> = report.rows.iter().filter(|r| !r.violations.is_empty()).collect();
+        assert_eq!(bad[0].violations[0].invariant, "rb-register-budget");
+    }
+
+    #[test]
+    fn report_json_matches_schema_v1() {
+        let report = lint_bundle(&sample());
+        let doc = report.to_json("zoo:lenet300");
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("ttrv-lint-report"));
+        assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("clean").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            doc.get("plans_checked").and_then(Json::as_usize),
+            Some(report.plans_checked())
+        );
+        let results = doc.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), report.plans_checked());
+        for r in results {
+            assert_eq!(r.get("status").and_then(Json::as_str), Some("ok"));
+            assert_eq!(r.get("source").and_then(Json::as_str), Some("selected"));
+            assert!(r.get("registers").and_then(Json::as_usize).unwrap() >= 3);
+        }
+    }
+}

@@ -47,6 +47,7 @@ pub mod format;
 pub mod bundle;
 pub mod writer;
 pub mod reader;
+pub mod lint;
 
 pub use bundle::{
     compress, compress_auto, quantize_bundle, tune_bundle, verify, AutoRankInfo, AutoRankLayer,
@@ -54,5 +55,8 @@ pub use bundle::{
     VerifyReport,
 };
 pub use format::{FORMAT_VERSION, MIN_FORMAT_VERSION};
-pub use reader::{list_sections, read_bundle_bytes, read_bundle_file, SectionInfo};
+pub use lint::{lint_bundle, verify_bundle, LintReport, LintRow, PlanSource};
+pub use reader::{
+    list_sections, read_bundle_bytes, read_bundle_bytes_unverified, read_bundle_file, SectionInfo,
+};
 pub use writer::{write_bundle, write_bundle_file};

@@ -683,8 +683,12 @@ fn decode_meta(payload: &[u8]) -> Result<ModelBundle> {
 }
 
 /// Decode a bundle from its byte form, validating the container, every
-/// checksum and every section grammar.
-pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
+/// checksum and every section grammar — but *not* the static-verification
+/// gate. This exists for `ttrv lint`, which wants the full per-plan
+/// violation report ([`crate::artifact::lint_bundle`]) instead of the
+/// fail-fast first error; never build an engine from a bundle obtained
+/// this way — use [`read_bundle_bytes`], which proves every plan safe.
+pub fn read_bundle_bytes_unverified(bytes: &[u8]) -> Result<ModelBundle> {
     let sections = parse_container(bytes)?;
     let find = |id: u32, name: &str| {
         sections
@@ -718,6 +722,20 @@ pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
             decode_quant(payload, &mut bundle.ops)?;
         }
     }
+    Ok(bundle)
+}
+
+/// Decode a bundle from its byte form, validating the container, every
+/// checksum, every section grammar — and then the static-verification
+/// chokepoint: every decoded plan × core pair (analytic OPS, measured
+/// TUNE, int8 QUANT) must pass the strict tier of
+/// [`crate::compiler::verify`] before the bundle reaches any executor.
+/// The per-section grammars bound *parsing*; this proves *execution*
+/// safety (geometry, pad lanes, register budget) for externally-sourced
+/// bytes whose CRCs an attacker controls.
+pub fn read_bundle_bytes(bytes: &[u8]) -> Result<ModelBundle> {
+    let bundle = read_bundle_bytes_unverified(bytes)?;
+    super::lint::verify_bundle(&bundle)?;
     Ok(bundle)
 }
 
@@ -796,6 +814,21 @@ mod tests {
         }
         let back = read_bundle_bytes(&bytes).unwrap();
         assert_eq!(back, bundle);
+    }
+
+    #[test]
+    fn decoded_plans_must_pass_static_verification() {
+        // a plan the per-field grammar caps accept (threads <= 65536) but
+        // the strict verify tier rejects — re-encoded with valid CRCs, so
+        // only the chokepoint in `read_bundle_bytes` can catch it
+        let mut bundle = sample_bundle();
+        let BundleOp::Tt(t) = &mut bundle.ops[0] else { panic!("op 0 is TT") };
+        t.plans[0].threads = 0;
+        let bytes = super::super::write_bundle(&bundle);
+        assert!(read_bundle_bytes_unverified(&bytes).is_ok());
+        let err = read_bundle_bytes(&bytes).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{err}");
+        assert!(err.to_string().contains("threads-positive"), "{err}");
     }
 
     #[test]

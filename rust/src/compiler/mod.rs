@@ -23,7 +23,9 @@ pub mod tiling;
 pub mod threads;
 pub mod plan;
 pub mod pipeline;
+pub mod verify;
 
 pub use ir::{cb_suite, CbEntry};
 pub use pipeline::compile;
 pub use plan::{LoopOrder, OptimizationPlan, RbFactors, VectorLoop};
+pub use verify::Violation;

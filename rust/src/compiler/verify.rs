@@ -1,0 +1,533 @@
+//! Static plan/layout safety verification — the invariant checker behind
+//! `ttrv lint` and the executor/artifact chokepoints.
+//!
+//! The unsafe vector microkernels ([`crate::kernels`]) trust a set of
+//! packing and plan invariants with raw-pointer loads; historically those
+//! were guarded only by fuzz tests and `debug_assert!`s that vanish in
+//! release builds. This module proves them *statically* per plan — the
+//! paper's own posture (decide at compile time, then run fast) applied to
+//! our own artifacts:
+//!
+//! * **Safety tier** ([`check_plan`] / [`verify_plan`]) — machine-free
+//!   invariants every plan must satisfy before it may reach a kernel
+//!   region. Enforced at every [`crate::kernels::Executor`] plan-cache
+//!   insert (`plan`, `set_plan`, `preseed`).
+//! * **Strict tier** ([`check_plan_for`] / [`verify_plan_for`], plus the
+//!   [`check_packed`] / [`check_quant`] cross-checks against a concrete
+//!   core) — adds the machine register budget (paper Eq. 19) and the exact
+//!   packed-buffer geometry formulas of [`crate::kernels::pack`].
+//!   Enforced on every plan decoded from a `.ttrv` artifact and by
+//!   `ttrv lint`.
+//!
+//! The register budget lives in the strict tier deliberately: exceeding it
+//! causes register spills (a performance defect the solver never plans),
+//! not out-of-bounds access — the region drivers clamp `rm`/`rb` into
+//! `1..=8` — and the test suites sweep over-budget points on purpose for
+//! remainder-tile coverage.
+//!
+//! Each failed check is a [`Violation`] naming the invariant by a stable
+//! slug (the table in ARCHITECTURE.md "Static verification"); the
+//! `verify_*` wrappers fold them into one typed [`Error::Plan`].
+//!
+//! [`Error::Plan`]: crate::error::Error::Plan
+
+use std::fmt;
+
+use crate::compiler::plan::{OptimizationPlan, VectorLoop};
+use crate::error::{Error, Result};
+use crate::kernels::{GLayout, PackedG, QuantizedG, VL};
+use crate::machine::MachineSpec;
+use crate::ttd::cost::EinsumKind;
+
+/// Largest `rm`/`rb` unroll the region drivers dispatch (they clamp into
+/// `1..=MAX_RB`; a plan outside that range would silently execute a
+/// different unroll than it claims).
+pub const MAX_RB: usize = 8;
+
+/// One failed invariant: a stable slug naming it plus a human-readable
+/// detail with the offending values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Stable invariant slug (e.g. `rpad-formula`, `rb-register-budget`) —
+    /// the key diagnostics, mutant tests and the lint report agree on.
+    pub invariant: &'static str,
+    /// Human-readable detail naming the offending values.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.invariant, self.detail)
+    }
+}
+
+fn push(out: &mut Vec<Violation>, invariant: &'static str, detail: String) {
+    out.push(Violation { invariant, detail });
+}
+
+/// The packed-core layout a plan requires — the single consistency table
+/// the executor ([`crate::kernels`]) dispatches on.
+pub fn expected_layout(plan: &OptimizationPlan) -> GLayout {
+    match (plan.pack_g, plan.vector_loop) {
+        (false, _) => GLayout::Canonical,
+        (true, VectorLoop::R) => GLayout::PackedR,
+        (true, _) => GLayout::PackedK,
+    }
+}
+
+/// Safety tier: machine-free invariants every plan must satisfy before it
+/// may reach a kernel region. Returns every violated invariant (empty =
+/// safe).
+pub fn check_plan(plan: &OptimizationPlan) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let d = &plan.dims;
+    if d.m == 0 || d.b == 0 || d.n == 0 || d.r == 0 || d.k == 0 {
+        push(
+            &mut out,
+            "dims-positive",
+            format!(
+                "every Einsum extent must be >= 1, got m={} b={} n={} r={} k={}",
+                d.m, d.b, d.n, d.r, d.k
+            ),
+        );
+    }
+    match d.kind {
+        EinsumKind::First if d.k != 1 => push(
+            &mut out,
+            "dims-kind",
+            format!("First Einsum contracts no rank, so k must be 1, got k={}", d.k),
+        ),
+        EinsumKind::Final if d.r != 1 => push(
+            &mut out,
+            "dims-kind",
+            format!("Final Einsum produces no rank, so r must be 1, got r={}", d.r),
+        ),
+        _ => {}
+    }
+    let want_vl = if plan.vector_loop == VectorLoop::None { 1 } else { VL };
+    if plan.vl != want_vl {
+        push(
+            &mut out,
+            "vl-matches-packing",
+            format!(
+                "vector_loop {:?} executes at vl={want_vl}, plan claims vl={}",
+                plan.vector_loop, plan.vl
+            ),
+        );
+    }
+    let rb = &plan.rb;
+    if !(1..=MAX_RB).contains(&rb.rm)
+        || !(1..=MAX_RB).contains(&rb.rb)
+        || rb.rr == 0
+        || rb.rk == 0
+    {
+        push(
+            &mut out,
+            "rb-range",
+            format!(
+                "rm/rb must be in 1..={MAX_RB} and rr/rk >= 1 (the range the region \
+                 drivers dispatch), got rm={} rb={} rr={} rk={}",
+                rb.rm, rb.rb, rb.rr, rb.rk
+            ),
+        );
+    }
+    if plan.threads == 0 {
+        push(&mut out, "threads-positive", "threads must be >= 1, got 0".to_string());
+    }
+    if plan.tile.btl == Some(0) {
+        push(
+            &mut out,
+            "btl-positive",
+            "bt tile length must be >= 1 when tiled, got Some(0)".to_string(),
+        );
+    }
+    out
+}
+
+/// Strict tier over a plan alone: the safety tier plus the machine
+/// register budget (paper Eq. 19) — the solver's own feasibility
+/// constraint, re-checked on externally-sourced plans.
+pub fn check_plan_for(plan: &OptimizationPlan, machine: &MachineSpec) -> Vec<Violation> {
+    let mut out = check_plan(plan);
+    let need = plan.rb.registers();
+    let budget = machine.vector_regs as usize;
+    if need > budget {
+        push(
+            &mut out,
+            "rb-register-budget",
+            format!(
+                "RB factors (rm={} rb={} rr={} rk={}) need {need} vector registers \
+                 (Eq. 19) but {} has {budget}",
+                plan.rb.rm, plan.rb.rb, plan.rb.rr, plan.rb.rk, machine.name
+            ),
+        );
+    }
+    out
+}
+
+/// Shared geometry checks for a packed core (f32 or int8): the layout
+/// table, the canonical dims, the `r_pad` formula and the exact buffer
+/// length formula of [`crate::kernels::pack`].
+fn check_geometry(
+    out: &mut Vec<Violation>,
+    plan: &OptimizationPlan,
+    layout: GLayout,
+    dims: (usize, usize, usize, usize),
+    r_pad: usize,
+    len: usize,
+) {
+    let d = &plan.dims;
+    let (r, n, m, k) = dims;
+    if (d.r, d.n, d.m, d.k) != (r, n, m, k) {
+        push(
+            out,
+            "core-dims-match",
+            format!("plan dims {d:?} do not match core dims (r,n,m,k)={dims:?}"),
+        );
+    }
+    let want_layout = expected_layout(plan);
+    if layout != want_layout {
+        push(
+            out,
+            "layout-consistent",
+            format!(
+                "core packed as {layout:?} but the plan (pack_g={}, vector_loop={:?}) \
+                 requires {want_layout:?}",
+                plan.pack_g, plan.vector_loop
+            ),
+        );
+    }
+    let want_rpad = match layout {
+        GLayout::PackedR => r.div_ceil(VL) * VL,
+        _ => r,
+    };
+    if r_pad != want_rpad {
+        push(
+            out,
+            "rpad-formula",
+            format!("r_pad={r_pad} but {layout:?} with r={r} requires r_pad={want_rpad}"),
+        );
+    }
+    let want_len = match layout {
+        GLayout::Canonical => r * n * m * k,
+        GLayout::PackedR => m * want_rpad * n * k,
+        GLayout::PackedK => m * r * n * k,
+    };
+    if len != want_len {
+        push(
+            out,
+            "buffer-length",
+            format!(
+                "buffer holds {len} lanes but {layout:?} with (r,n,m,k)={dims:?} \
+                 requires exactly {want_len}"
+            ),
+        );
+    }
+}
+
+/// Find the first nonzero `PackedR` pad lane (`r <= lane_r < r_pad`) — the
+/// lanes the r-kernels multiply-accumulate unconditionally, so any nonzero
+/// value silently corrupts results. Only called once the geometry checks
+/// passed (the index formula below assumes them).
+fn pad_lane_violation(
+    dims: (usize, usize, usize, usize),
+    r_pad: usize,
+    nonzero: impl Fn(usize) -> bool,
+) -> Option<String> {
+    let (r, n, m, k) = dims;
+    let l = n * k;
+    for mi in 0..m {
+        for rv in 0..r_pad / VL {
+            for kk in 0..l {
+                let base = ((mi * (r_pad / VL) + rv) * l + kk) * VL;
+                for lane in 0..VL {
+                    if rv * VL + lane >= r && nonzero(base + lane) {
+                        return Some(format!(
+                            "pad lane (m={mi}, rv={rv}, nk={kk}, lane={lane}) is nonzero; \
+                             r-kernels MAC pad lanes unconditionally so they must be 0"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Strict tier: prove a plan × f32 packed core pair safe for the unsafe
+/// SIMD regions — layout table, dims, `r_pad` formula, exact buffer
+/// length, and (for `PackedR`) provably-zero pad lanes.
+pub fn check_packed(plan: &OptimizationPlan, g: &PackedG) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_geometry(&mut out, plan, g.layout, g.dims, g.r_pad, g.data.len());
+    if out.is_empty() && g.layout == GLayout::PackedR {
+        if let Some(detail) = pad_lane_violation(g.dims, g.r_pad, |i| g.data[i] != 0.0) {
+            push(&mut out, "pad-lanes-zero", detail);
+        }
+    }
+    out
+}
+
+/// Strict tier for an int8 core: the same geometry/pad-lane proofs as
+/// [`check_packed`] plus the quantization contracts — one finite positive
+/// scale per `m`-slice and no `-128` value (symmetric range, so negation
+/// stays exact in the widening kernels).
+pub fn check_quant(plan: &OptimizationPlan, q: &QuantizedG) -> Vec<Violation> {
+    let mut out = Vec::new();
+    check_geometry(&mut out, plan, q.layout, q.dims, q.r_pad, q.data.len());
+    if out.is_empty() && q.layout == GLayout::PackedR {
+        if let Some(detail) = pad_lane_violation(q.dims, q.r_pad, |i| q.data[i] != 0) {
+            push(&mut out, "pad-lanes-zero", detail);
+        }
+    }
+    let m = q.dims.2;
+    if q.scales.len() != m {
+        push(
+            &mut out,
+            "quant-scale-count",
+            format!("quantized core has {} scales for m={m} (one per m-slice)", q.scales.len()),
+        );
+    }
+    if let Some((mi, s)) =
+        q.scales.iter().enumerate().find(|(_, s)| !s.is_finite() || **s <= 0.0)
+    {
+        push(
+            &mut out,
+            "quant-scale-finite",
+            format!("scale[{mi}] = {s} must be finite and > 0"),
+        );
+    }
+    if let Some(pos) = q.data.iter().position(|&v| v == i8::MIN) {
+        push(
+            &mut out,
+            "quant-value-range",
+            format!(
+                "data[{pos}] = -128 is outside the symmetric int8 range [-127, 127] \
+                 the quantizer guarantees"
+            ),
+        );
+    }
+    out
+}
+
+fn to_result(what: &str, violations: Vec<Violation>) -> Result<()> {
+    if violations.is_empty() {
+        return Ok(());
+    }
+    let msgs: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+    Err(Error::plan(format!("{what}: {}", msgs.join("; "))))
+}
+
+/// [`check_plan`] as a typed error (the executor chokepoint).
+pub fn verify_plan(plan: &OptimizationPlan) -> Result<()> {
+    to_result("plan rejected", check_plan(plan))
+}
+
+/// [`check_plan_for`] as a typed error (externally-sourced plans).
+pub fn verify_plan_for(plan: &OptimizationPlan, machine: &MachineSpec) -> Result<()> {
+    to_result("plan rejected", check_plan_for(plan, machine))
+}
+
+/// [`check_packed`] as a typed error.
+pub fn verify_packed(plan: &OptimizationPlan, g: &PackedG) -> Result<()> {
+    to_result("plan/core pair rejected", check_packed(plan, g))
+}
+
+/// [`check_quant`] as a typed error.
+pub fn verify_quant(plan: &OptimizationPlan, q: &QuantizedG) -> Result<()> {
+    to_result("plan/quantized-core pair rejected", check_quant(plan, q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::plan::{LoopOrder, RbFactors, TilePlan};
+    use crate::compiler::{cb_suite, compile};
+    use crate::kernels::{pack, quantize};
+    use crate::tensor::Tensor;
+    use crate::ttd::cost::EinsumDims;
+    use crate::util::prng::Rng;
+
+    fn names(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.invariant).collect()
+    }
+
+    fn middle_plan() -> OptimizationPlan {
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 6, b: 4, n: 3, r: 8, k: 8 };
+        OptimizationPlan {
+            dims,
+            pack_g: true,
+            vector_loop: VectorLoop::R,
+            vl: VL,
+            rb: RbFactors { rm: 2, rb: 3, rr: 1, rk: 1 },
+            tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+            threads: 1,
+            ls_estimate: 0,
+        }
+    }
+
+    #[test]
+    fn compiled_plans_pass_both_tiers_on_both_machines() {
+        for machine in [MachineSpec::spacemit_k1(), MachineSpec::host()] {
+            for kind in [EinsumKind::First, EinsumKind::Middle, EinsumKind::Final] {
+                for e in cb_suite(kind) {
+                    let plan = compile(&e.dims, &machine).unwrap();
+                    let vs = check_plan_for(&plan, &machine);
+                    assert!(vs.is_empty(), "{} on {}: {:?}", e.id, machine.name, names(&vs));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_plan_is_safe() {
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 4, b: 4, n: 4, r: 8, k: 8 };
+        assert!(check_plan(&OptimizationPlan::naive(dims)).is_empty());
+    }
+
+    #[test]
+    fn each_safety_invariant_fires_by_name() {
+        let good = middle_plan();
+        assert!(check_plan(&good).is_empty());
+
+        let mut p = good;
+        p.dims.n = 0;
+        assert_eq!(names(&check_plan(&p)), ["dims-positive"]);
+
+        let mut p = good;
+        p.dims.kind = EinsumKind::First; // k = 8
+        assert_eq!(names(&check_plan(&p)), ["dims-kind"]);
+        let mut p = good;
+        p.dims.kind = EinsumKind::Final; // r = 8
+        assert_eq!(names(&check_plan(&p)), ["dims-kind"]);
+
+        let mut p = good;
+        p.vl = 4;
+        assert_eq!(names(&check_plan(&p)), ["vl-matches-packing"]);
+        let mut p = good;
+        p.vector_loop = VectorLoop::None;
+        p.vl = VL; // scalar loop must claim vl = 1
+        assert_eq!(names(&check_plan(&p)), ["vl-matches-packing"]);
+
+        for bad_rb in [
+            RbFactors { rm: 0, rb: 1, rr: 1, rk: 1 },
+            RbFactors { rm: 9, rb: 1, rr: 1, rk: 1 },
+            RbFactors { rm: 1, rb: 0, rr: 1, rk: 1 },
+            RbFactors { rm: 1, rb: 9, rr: 1, rk: 1 },
+            RbFactors { rm: 1, rb: 1, rr: 0, rk: 1 },
+            RbFactors { rm: 1, rb: 1, rr: 1, rk: 0 },
+        ] {
+            let mut p = good;
+            p.rb = bad_rb;
+            assert_eq!(names(&check_plan(&p)), ["rb-range"], "{bad_rb:?}");
+        }
+
+        let mut p = good;
+        p.threads = 0;
+        assert_eq!(names(&check_plan(&p)), ["threads-positive"]);
+
+        let mut p = good;
+        p.tile.btl = Some(0);
+        assert_eq!(names(&check_plan(&p)), ["btl-positive"]);
+    }
+
+    #[test]
+    fn register_budget_is_strict_tier_only() {
+        // (8, 8) needs 73 registers — over every preset's budget, but the
+        // region drivers clamp unrolls so it is *safe*; the test suites
+        // sweep it deliberately for remainder-tile coverage.
+        let mut p = middle_plan();
+        p.rb = RbFactors { rm: 8, rb: 8, rr: 1, rk: 1 };
+        assert!(check_plan(&p).is_empty(), "safety tier must accept over-budget RB");
+        let vs = check_plan_for(&p, &MachineSpec::spacemit_k1());
+        assert_eq!(names(&vs), ["rb-register-budget"]);
+        // within budget on K1 (32 regs), over budget on the host (16)
+        let mut p = middle_plan();
+        p.rb = RbFactors { rm: 4, rb: 6, rr: 1, rk: 1 }; // 29 registers
+        assert!(check_plan_for(&p, &MachineSpec::spacemit_k1()).is_empty());
+        assert_eq!(names(&check_plan_for(&p, &MachineSpec::host())), ["rb-register-budget"]);
+    }
+
+    fn packed_pair() -> (OptimizationPlan, PackedG) {
+        let plan = middle_plan();
+        let d = plan.dims;
+        let mut rng = Rng::new(90);
+        let g = Tensor::randn(vec![d.r, d.n, d.m, d.k], 1.0, &mut rng);
+        let pg = pack(&g, &plan).unwrap();
+        (plan, pg)
+    }
+
+    #[test]
+    fn packed_cross_checks_fire_by_name() {
+        let (plan, pg) = packed_pair();
+        assert!(check_packed(&plan, &pg).is_empty());
+
+        let mut bad = pg.clone();
+        bad.dims.1 += 1; // n
+        assert!(names(&check_packed(&plan, &bad)).contains(&"core-dims-match"));
+
+        let mut bad = pg.clone();
+        bad.layout = GLayout::PackedK;
+        assert!(names(&check_packed(&plan, &bad)).contains(&"layout-consistent"));
+
+        let mut bad = pg.clone();
+        bad.r_pad = pg.dims.0; // r, not div_ceil(r, VL) * VL... equal here (r = 8)
+        bad.r_pad += VL; // force a mismatch regardless
+        assert!(names(&check_packed(&plan, &bad)).contains(&"rpad-formula"));
+
+        let mut bad = pg.clone();
+        bad.data.pop(); // k-tail overrun: one lane short
+        assert_eq!(names(&check_packed(&plan, &bad)), ["buffer-length"]);
+
+        // nonzero pad lane: r = 3 pads to 8, poison lane 5
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 2, b: 2, n: 2, r: 3, k: 2 };
+        let plan = OptimizationPlan { dims, ..middle_plan() };
+        let mut rng = Rng::new(91);
+        let g = Tensor::randn(vec![3, 2, 2, 2], 1.0, &mut rng);
+        let mut pg = pack(&g, &plan).unwrap();
+        assert!(check_packed(&plan, &pg).is_empty());
+        pg.data[5] = 1.5; // lane 5 of the first vector: lane_r = 5 >= r = 3
+        assert_eq!(names(&check_packed(&plan, &pg)), ["pad-lanes-zero"]);
+    }
+
+    #[test]
+    fn quant_cross_checks_fire_by_name() {
+        let (plan, pg) = packed_pair();
+        let q = quantize(&pg);
+        assert!(check_quant(&plan, &q).is_empty());
+
+        let mut bad = q.clone();
+        bad.scales.pop();
+        assert_eq!(names(&check_quant(&plan, &bad)), ["quant-scale-count"]);
+
+        let mut bad = q.clone();
+        bad.scales[1] = f32::NAN;
+        assert_eq!(names(&check_quant(&plan, &bad)), ["quant-scale-finite"]);
+        let mut bad = q.clone();
+        bad.scales[0] = 0.0;
+        assert_eq!(names(&check_quant(&plan, &bad)), ["quant-scale-finite"]);
+
+        let mut bad = q.clone();
+        bad.data[0] = i8::MIN;
+        assert_eq!(names(&check_quant(&plan, &bad)), ["quant-value-range"]);
+
+        let mut bad = q.clone();
+        bad.data.truncate(bad.data.len() - 3);
+        assert_eq!(names(&check_quant(&plan, &bad)), ["buffer-length"]);
+    }
+
+    #[test]
+    fn verify_wrappers_return_typed_plan_errors() {
+        let mut p = middle_plan();
+        p.threads = 0;
+        let err = verify_plan(&p).unwrap_err();
+        match err {
+            Error::Plan(msg) => assert!(msg.contains("threads-positive"), "{msg}"),
+            other => panic!("expected Error::Plan, got {other:?}"),
+        }
+        assert!(verify_plan(&middle_plan()).is_ok());
+        let (plan, pg) = packed_pair();
+        assert!(verify_packed(&plan, &pg).is_ok());
+        assert!(verify_quant(&plan, &quantize(&pg)).is_ok());
+    }
+}

@@ -171,7 +171,7 @@ impl TtFcEngine {
             }
         }
         let mut executor = Executor::new(machine);
-        executor.preseed(plans);
+        executor.preseed(plans)?;
         Ok(TtFcEngine {
             shared: Arc::new(TtFcShared { layout, cores: CoreStore::F32(packed), bias }),
             executor,
@@ -232,7 +232,7 @@ impl TtFcEngine {
             }
         }
         let mut executor = Executor::with_kernel(machine, select_int8())?;
-        executor.preseed(plans);
+        executor.preseed(plans)?;
         Ok(TtFcEngine {
             shared: Arc::new(TtFcShared { layout, cores: CoreStore::Int8(quant), bias }),
             executor,

@@ -30,9 +30,19 @@
 //! [`close`]: SharedQueue::close
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+// Under `--cfg loom` the sync primitives come from the loom model checker
+// (`loom_tests` below exhaustively interleaves them); the dev-dependency is
+// injected by the CI loom job, so regular builds stay dependency-free.
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex};
+#[cfg(not(loom))]
+use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex};
 
 /// Why a [`SharedQueue::try_push`] was refused. The item is handed back
 /// rather than dropped so `T` need not be `Clone` and callers can decide
@@ -284,7 +294,10 @@ impl<T> ShardedQueue<T> {
     }
 }
 
-#[cfg(test)]
+// The std tests use real threads, sleeps and `Instant` deadlines, none of
+// which exist inside the loom model; they are compiled out under
+// `--cfg loom` (the loom job runs only `loom_model_*` tests anyway).
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::Arc;
@@ -514,5 +527,131 @@ mod tests {
         assert!(matches!(q.try_push(2), Err(PushError::Full(2))));
         assert_eq!(q.try_pop(3), Some(1)); // any worker maps to shard 0
         assert!(q.try_pop(0).is_none());
+    }
+}
+
+// Loom model-checking tests: every interleaving of the lock/Condvar/atomic
+// operations is explored, which is how the drain-then-exit and
+// Full-only-when-all-full invariants documented above are actually pinned.
+// Run via the CI loom job: `RUSTFLAGS="--cfg loom" cargo test --lib loom_model_`.
+// `pop_timeout`/`pop_home` are deliberately not modelled: they take real
+// `Instant` deadlines, which loom cannot schedule.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use loom::sync::Arc;
+    use loom::thread;
+
+    /// Drain what `pop` hands back until the queue reports `Closed`.
+    fn drain(q: &SharedQueue<u32>) -> Vec<u32> {
+        let mut got = Vec::new();
+        loop {
+            match q.pop() {
+                Pop::Item(v) => got.push(v),
+                Pop::Closed => return got,
+                Pop::TimedOut => unreachable!("pop() never times out"),
+            }
+        }
+    }
+
+    #[test]
+    fn loom_model_close_racing_consumer_never_loses_pending_item() {
+        loom::model(|| {
+            let q = Arc::new(SharedQueue::new(2));
+            q.try_push(1).unwrap();
+            let consumer = {
+                let q = Arc::clone(&q);
+                thread::spawn(move || drain(&q))
+            };
+            q.close();
+            // Whatever order close() and the consumer's pop() land in, the
+            // admitted item is answered before Closed is observed.
+            assert_eq!(consumer.join().unwrap(), vec![1]);
+        });
+    }
+
+    #[test]
+    fn loom_model_push_racing_close_admitted_iff_drained() {
+        loom::model(|| {
+            let q = Arc::new(SharedQueue::new(2));
+            let producer = {
+                let q = Arc::clone(&q);
+                thread::spawn(move || q.try_push(7).is_ok())
+            };
+            q.close();
+            let admitted = producer.join().unwrap();
+            // An admission that raced close() either lost (Closed, nothing
+            // queued) or won (item queued) — never a third state where the
+            // push reported Ok but the item vanished.
+            let drained = drain(&q);
+            assert_eq!(admitted, drained == vec![7]);
+        });
+    }
+
+    #[test]
+    fn loom_model_two_consumers_receive_one_item_exactly_once() {
+        loom::model(|| {
+            let q = Arc::new(SharedQueue::new(2));
+            q.try_push(41).unwrap();
+            q.close();
+            let consumers: Vec<_> = (0..2)
+                .map(|_| {
+                    let q = Arc::clone(&q);
+                    thread::spawn(move || drain(&q))
+                })
+                .collect();
+            let mut got: Vec<u32> = consumers
+                .into_iter()
+                .flat_map(|c| c.join().unwrap())
+                .collect();
+            got.sort_unstable();
+            // Exactly one of the racing consumers was handed the item; the
+            // other saw Closed. No loss, no duplication.
+            assert_eq!(got, vec![41]);
+        });
+    }
+
+    #[test]
+    fn loom_model_steal_ring_race_hands_item_to_exactly_one_worker() {
+        loom::model(|| {
+            let q = Arc::new(ShardedQueue::new(2, 4, Steal::Ring));
+            q.try_push(9).unwrap(); // rr starts at 0 -> lands on shard 0
+            let a = {
+                let q = Arc::clone(&q);
+                thread::spawn(move || q.try_pop(0)) // home shard 0
+            };
+            let b = {
+                let q = Arc::clone(&q);
+                thread::spawn(move || q.try_pop(1)) // home shard 1, steals from 0
+            };
+            let (ra, rb) = (a.join().unwrap(), b.join().unwrap());
+            // The owner and the stealing worker race on shard 0's lock:
+            // exactly one wins the item, the ring never duplicates it.
+            assert!(matches!((ra, rb), (Some(9), None) | (None, Some(9))));
+            assert_eq!(q.len(), 0);
+        });
+    }
+
+    #[test]
+    fn loom_model_sharded_push_full_only_when_every_shard_full() {
+        loom::model(|| {
+            // 2 shards, total cap 2 -> per-shard cap 1. One slot taken, two
+            // pushes race for the last one.
+            let q = Arc::new(ShardedQueue::new(2, 2, Steal::Ring));
+            q.try_push(1).unwrap();
+            let racer = {
+                let q = Arc::clone(&q);
+                thread::spawn(move || q.try_push(2))
+            };
+            let local = q.try_push(3);
+            let remote = racer.join().unwrap();
+            // Exactly one of the racing pushes lands; the loser spilled
+            // across both shards before reporting Full (never Closed).
+            match (local, remote) {
+                (Ok(()), Err(PushError::Full(3))) | (Err(PushError::Full(3)), Ok(())) => {}
+                other => panic!("expected exactly one Full(3) rejection, got {other:?}"),
+            }
+            assert_eq!(q.len(), 2);
+        });
     }
 }

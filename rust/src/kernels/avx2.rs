@@ -81,6 +81,11 @@ impl Kernel for Avx2Kernel {
 /// `#[target_feature]` so it can stay generic; `#[inline(always)]` makes it
 /// inline into the target-feature region drivers below, which is what
 /// enables AVX2 codegen for the intrinsics.
+///
+/// # Safety
+///
+/// The caller must guarantee AVX2+FMA are available (all call sites live
+/// inside the `target_feature(avx2,fma)` region drivers below).
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
 unsafe fn r_block_fma<const RM: usize, const RB: usize>(
@@ -96,7 +101,9 @@ unsafe fn r_block_fma<const RM: usize, const RB: usize>(
     m_base: usize,
 ) {
     let rv_count = r_pad / VL;
-    let zero = _mm256_setzero_ps();
+    // SAFETY: register-only intrinsic, no memory access; AVX2 availability
+    // is this function's contract.
+    let zero = unsafe { _mm256_setzero_ps() };
     for rv in 0..rv_count {
         let mut acc = [[zero; RB]; RM];
         let mut g_rows: [std::slice::ChunksExact<'_, f32>; RM] = std::array::from_fn(|im| {
@@ -109,12 +116,17 @@ unsafe fn r_block_fma<const RM: usize, const RB: usize>(
             let mut gvec = [zero; RM];
             for (im, row) in g_rows.iter_mut().enumerate() {
                 let chunk = row.next().expect("length l by construction");
-                gvec[im] = _mm256_loadu_ps(chunk.as_ptr());
+                // SAFETY: `chunk` is a bounds-checked `VL`-long subslice
+                // (`chunks_exact(VL)` over a range-indexed row), so the
+                // 8-lane unaligned load stays inside it.
+                gvec[im] = unsafe { _mm256_loadu_ps(chunk.as_ptr()) };
             }
             for ib in 0..RB {
-                let xs = _mm256_set1_ps(x_rows[ib][kk]);
+                // SAFETY: register-only broadcast; no memory access.
+                let xs = unsafe { _mm256_set1_ps(x_rows[ib][kk]) };
                 for im in 0..RM {
-                    acc[im][ib] = _mm256_fmadd_ps(gvec[im], xs, acc[im][ib]);
+                    // SAFETY: register-only FMA; no memory access.
+                    acc[im][ib] = unsafe { _mm256_fmadd_ps(gvec[im], xs, acc[im][ib]) };
                 }
             }
         }
@@ -122,7 +134,9 @@ unsafe fn r_block_fma<const RM: usize, const RB: usize>(
         for im in 0..RM {
             for ib in 0..RB {
                 let mut tmp = [0.0f32; VL];
-                _mm256_storeu_ps(tmp.as_mut_ptr(), acc[im][ib]);
+                // SAFETY: `tmp` is exactly `VL` f32s on the stack; the
+                // unaligned 8-lane store writes only within it.
+                unsafe { _mm256_storeu_ps(tmp.as_mut_ptr(), acc[im][ib]) };
                 let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
                 od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
             }
@@ -158,13 +172,22 @@ unsafe fn r_region_avx2(
     while mi < m_main {
         let mut bi = b0;
         while bi < b_main {
-            dispatch_rb!(rm, rb, r_block_fma,
-                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            // SAFETY: `r_block_fma`'s contract (AVX2+FMA available) is met
+            // inside this `target_feature` region; its slice accesses are
+            // bounds-checked against the packed-buffer formulas that
+            // `compiler::verify` certifies for every accepted plan.
+            unsafe {
+                dispatch_rb!(rm, rb, r_block_fma,
+                    (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+            };
             bi += rb;
         }
         while bi < b1 {
-            dispatch_rb!(rm, 1, r_block_fma,
-                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            // SAFETY: as above.
+            unsafe {
+                dispatch_rb!(rm, 1, r_block_fma,
+                    (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+            };
             bi += 1;
         }
         mi += rm;
@@ -172,12 +195,16 @@ unsafe fn r_region_avx2(
     while mi < m1 {
         let mut bi = b0;
         while bi + rb <= b1 {
-            dispatch_rb!(1, rb, r_block_fma,
-                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            // SAFETY: as above.
+            unsafe {
+                dispatch_rb!(1, rb, r_block_fma,
+                    (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+            };
             bi += rb;
         }
         while bi < b1 {
-            r_block_fma::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base);
+            // SAFETY: as above.
+            unsafe { r_block_fma::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base) };
             bi += 1;
         }
         mi += 1;
@@ -209,18 +236,27 @@ unsafe fn k_region_avx2(
             let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
             for bi in b0..b1 {
                 let xrow = &xd[bi * l..(bi + 1) * l];
-                let mut acc = _mm256_setzero_ps();
+                // SAFETY: register-only intrinsic; no memory access.
+                let mut acc = unsafe { _mm256_setzero_ps() };
                 for (gc, xc) in grow[..tail]
                     .chunks_exact(VL)
                     .zip(xrow[..tail].chunks_exact(VL))
                 {
-                    acc = _mm256_fmadd_ps(
-                        _mm256_loadu_ps(gc.as_ptr()),
-                        _mm256_loadu_ps(xc.as_ptr()),
-                        acc,
-                    );
+                    // SAFETY: `gc` and `xc` are bounds-checked `VL`-long
+                    // subslices (`chunks_exact(VL)`), so both unaligned
+                    // 8-lane loads stay inside them; the FMA itself is
+                    // register-only.
+                    acc = unsafe {
+                        _mm256_fmadd_ps(
+                            _mm256_loadu_ps(gc.as_ptr()),
+                            _mm256_loadu_ps(xc.as_ptr()),
+                            acc,
+                        )
+                    };
                 }
-                let mut s = hsum_m256(acc);
+                // SAFETY: `hsum_m256` only spills the register to a
+                // `VL`-long stack array.
+                let mut s = unsafe { hsum_m256(acc) };
                 for i in tail..l {
                     s += grow[i] * xrow[i];
                 }
@@ -235,7 +271,9 @@ unsafe fn k_region_avx2(
 #[inline(always)]
 unsafe fn hsum_m256(v: __m256) -> f32 {
     let mut tmp = [0.0f32; VL];
-    _mm256_storeu_ps(tmp.as_mut_ptr(), v);
+    // SAFETY: `tmp` is exactly `VL` f32s on the stack; the unaligned
+    // 8-lane store writes only within it.
+    unsafe { _mm256_storeu_ps(tmp.as_mut_ptr(), v) };
     let s0 = tmp[0] + tmp[4];
     let s1 = tmp[1] + tmp[5];
     let s2 = tmp[2] + tmp[6];

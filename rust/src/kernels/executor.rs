@@ -20,7 +20,7 @@
 
 use std::collections::HashMap;
 
-use crate::compiler::{compile, OptimizationPlan};
+use crate::compiler::{compile, verify, OptimizationPlan};
 use crate::error::{Error, Result};
 use crate::machine::MachineSpec;
 use crate::tensor::Tensor;
@@ -205,6 +205,7 @@ impl Executor {
                 self.kernel,
             )?;
         }
+        verify::verify_plan(&plan)?;
         self.plan_cache.insert(*dims, plan);
         Ok(plan)
     }
@@ -212,8 +213,16 @@ impl Executor {
     /// Override the cached plan for `plan.dims` (ablation stages, forced
     /// thread counts, externally tuned plans). Subsequent `execute*` calls
     /// for those dims use it verbatim.
-    pub fn set_plan(&mut self, plan: OptimizationPlan) {
+    ///
+    /// The plan must pass the safety tier of [`verify`] — every cache
+    /// insert is a verification chokepoint, so no unverified plan can
+    /// reach a kernel region. Rejection is a typed
+    /// [`Error::Plan`](crate::error::Error::Plan) naming the violated
+    /// invariant.
+    pub fn set_plan(&mut self, plan: OptimizationPlan) -> Result<()> {
+        verify::verify_plan(&plan)?;
         self.plan_cache.insert(plan.dims, plan);
+        Ok(())
     }
 
     /// Pre-seed the plan cache with previously compiled plans — the
@@ -221,10 +230,17 @@ impl Executor {
     /// chain's plans next to its packed cores, so an engine built from it
     /// serves its first request without invoking the compiler at all.
     /// Later cache misses (new batch sizes) still compile normally.
-    pub fn preseed(&mut self, plans: &[OptimizationPlan]) {
+    ///
+    /// Every plan is verified ([`verify::verify_plan`]) before insertion —
+    /// the one-time cost that keeps the warm-start hot path free of any
+    /// per-request checking. A rejected plan aborts the preseed with a
+    /// typed error; earlier plans in the slice stay cached.
+    pub fn preseed(&mut self, plans: &[OptimizationPlan]) -> Result<()> {
         for plan in plans {
+            verify::verify_plan(plan)?;
             self.plan_cache.insert(plan.dims, *plan);
         }
+        Ok(())
     }
 
     /// Pack a canonical core as the (cached) plan for `dims` requires.
@@ -447,7 +463,7 @@ mod tests {
         let x = Tensor::randn(vec![29, 6, 8], 1.0, &mut rng);
         let pg = pack(&g, &plan).unwrap();
         let mut ex = Executor::new(&machine);
-        ex.set_plan(plan);
+        ex.set_plan(plan).unwrap();
         let got = ex.execute(&dims, &pg, &x).unwrap();
         let want = tt_einsum_ref(&g, &x).unwrap();
         assert!(got.allclose(&want, 1e-4, 1e-4));
@@ -465,7 +481,7 @@ mod tests {
         let x = Tensor::randn(vec![61, 6, 8], 1.0, &mut rng);
         let pg = pack(&g, &plan).unwrap();
         let mut ex = Executor::new(&machine);
-        ex.set_plan(plan);
+        ex.set_plan(plan).unwrap();
         let got = ex.execute(&dims, &pg, &x).unwrap();
         let want = tt_einsum_ref(&g, &x).unwrap();
         assert!(got.allclose(&want, 1e-4, 1e-4));
@@ -482,7 +498,7 @@ mod tests {
         let x = Tensor::randn(vec![53, 9, 1], 1.0, &mut rng);
         let pg = pack(&g, &plan).unwrap();
         let mut ex = Executor::new(&machine);
-        ex.set_plan(plan);
+        ex.set_plan(plan).unwrap();
         let got = ex.execute(&dims, &pg, &x).unwrap();
         let want = tt_einsum_ref(&g, &x).unwrap();
         assert!(got.allclose(&want, 1e-4, 1e-4));
@@ -543,11 +559,43 @@ mod tests {
         let plan = source.plan(&dims).unwrap();
         let mut warm = Executor::new(&machine);
         assert_eq!(warm.cached_plans(), 0);
-        warm.preseed(&[plan]);
+        warm.preseed(&[plan]).unwrap();
         assert_eq!(warm.cached_plans(), 1);
         // the cached plan is returned verbatim
         assert_eq!(warm.plan(&dims).unwrap(), plan);
         assert_eq!(warm.cached_plans(), 1);
+    }
+
+    #[test]
+    fn unsafe_plans_are_rejected_at_every_cache_insert() {
+        // the chokepoint contract: set_plan and preseed refuse a plan that
+        // fails the safety tier with a typed Error::Plan naming the
+        // invariant, and the cache stays untouched
+        let machine = MachineSpec::spacemit_k1();
+        let dims = EinsumDims { kind: EinsumKind::Middle, m: 8, b: 4, n: 3, r: 8, k: 8 };
+        let good = compile(&dims, &machine).unwrap();
+        let mut bad = good;
+        bad.rb.rm = 0;
+        let mut ex = Executor::new(&machine);
+        match ex.set_plan(bad) {
+            Err(Error::Plan(msg)) => assert!(msg.contains("rb-range"), "{msg}"),
+            other => panic!("set_plan must reject rm=0, got {other:?}"),
+        }
+        assert_eq!(ex.cached_plans(), 0);
+        let mut bad = good;
+        bad.threads = 0;
+        match ex.preseed(&[good, bad]) {
+            Err(Error::Plan(msg)) => assert!(msg.contains("threads-positive"), "{msg}"),
+            other => panic!("preseed must reject threads=0, got {other:?}"),
+        }
+        // the good plan before the bad one stays cached (documented order)
+        assert_eq!(ex.cached_plans(), 1);
+        let mut bad = good;
+        bad.vl = 4;
+        match ex.set_plan(bad) {
+            Err(Error::Plan(msg)) => assert!(msg.contains("vl-matches-packing"), "{msg}"),
+            other => panic!("set_plan must reject vl=4, got {other:?}"),
+        }
     }
 
     #[test]

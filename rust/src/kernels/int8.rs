@@ -396,9 +396,14 @@ mod x86 {
     #[inline(always)]
     unsafe fn load_q8(src: &[i8]) -> __m256 {
         let s = &src[..VL];
-        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
-            s.as_ptr() as *const __m128i
-        )))
+        // SAFETY: `s` is a bounds-checked `VL`-byte subslice, so the 8-byte
+        // low-half load stays inside it (`loadl` has no alignment
+        // requirement); sign-extend and convert are register-only.
+        unsafe {
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                s.as_ptr() as *const __m128i,
+            )))
+        }
     }
 
     /// Int8 FMA register-tile block: the AVX2 twin of [`super::r_block_q`].
@@ -418,7 +423,10 @@ mod x86 {
         m_base: usize,
     ) {
         let rv_count = r_pad / VL;
-        let zero = _mm256_setzero_ps();
+        // SAFETY: register-only intrinsic, no memory access; AVX2
+        // availability is this block's contract (called only from the
+        // `target_feature` drivers below).
+        let zero = unsafe { _mm256_setzero_ps() };
         for rv in 0..rv_count {
             let mut acc = [[zero; RB]; RM];
             let mut g_rows: [std::slice::ChunksExact<'_, i8>; RM] = std::array::from_fn(|im| {
@@ -430,21 +438,33 @@ mod x86 {
             for kk in 0..l {
                 let mut gvec = [zero; RM];
                 for (im, row) in g_rows.iter_mut().enumerate() {
-                    gvec[im] = load_q8(row.next().expect("length l by construction"));
+                    // SAFETY: the chunk is a bounds-checked `VL`-byte
+                    // subslice (`chunks_exact(VL)`), `load_q8`'s contract.
+                    gvec[im] =
+                        unsafe { load_q8(row.next().expect("length l by construction")) };
                 }
                 for ib in 0..RB {
-                    let xs = _mm256_set1_ps(x_rows[ib][kk]);
+                    // SAFETY: register-only broadcast.
+                    let xs = unsafe { _mm256_set1_ps(x_rows[ib][kk]) };
                     for im in 0..RM {
-                        acc[im][ib] = _mm256_fmadd_ps(gvec[im], xs, acc[im][ib]);
+                        // SAFETY: register-only FMA.
+                        acc[im][ib] = unsafe { _mm256_fmadd_ps(gvec[im], xs, acc[im][ib]) };
                     }
                 }
             }
             let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
             for im in 0..RM {
-                let sv = _mm256_set1_ps(scales[m0 + im]);
+                // SAFETY: register-only broadcast (`scales[m0 + im]` is a
+                // bounds-checked slice read).
+                let sv = unsafe { _mm256_set1_ps(scales[m0 + im]) };
                 for ib in 0..RB {
                     let mut tmp = [0.0f32; VL];
-                    _mm256_storeu_ps(tmp.as_mut_ptr(), _mm256_mul_ps(acc[im][ib], sv));
+                    // SAFETY: `tmp` is exactly `VL` f32s on the stack; the
+                    // unaligned 8-lane store writes only within it (the
+                    // multiply is register-only).
+                    unsafe {
+                        _mm256_storeu_ps(tmp.as_mut_ptr(), _mm256_mul_ps(acc[im][ib], sv))
+                    };
                     let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
                     od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
                 }
@@ -481,13 +501,23 @@ mod x86 {
         while mi < m_main {
             let mut bi = b0;
             while bi < b_main {
-                dispatch_rb!(rm, rb, r_block_q_fma,
-                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                // SAFETY: `r_block_q_fma`'s contract — the SIMD feature
+                // this module's kernels probe at dispatch (`supported()`)
+                // — holds inside this driver; its slice accesses are
+                // bounds-checked against the quantized-buffer formulas
+                // that `compiler::verify` certifies per plan.
+                unsafe {
+                    dispatch_rb!(rm, rb, r_block_q_fma,
+                        (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+                };
                 bi += rb;
             }
             while bi < b1 {
-                dispatch_rb!(rm, 1, r_block_q_fma,
-                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                // SAFETY: as above.
+                unsafe {
+                    dispatch_rb!(rm, 1, r_block_q_fma,
+                        (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+                };
                 bi += 1;
             }
             mi += rm;
@@ -495,14 +525,20 @@ mod x86 {
         while mi < m1 {
             let mut bi = b0;
             while bi + rb <= b1 {
-                dispatch_rb!(1, rb, r_block_q_fma,
-                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                // SAFETY: as above.
+                unsafe {
+                    dispatch_rb!(1, rb, r_block_q_fma,
+                        (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+                };
                 bi += rb;
             }
             while bi < b1 {
-                r_block_q_fma::<1, 1>(
-                    &g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base,
-                );
+                // SAFETY: as above.
+                unsafe {
+                    r_block_q_fma::<1, 1>(
+                        &g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base,
+                    )
+                };
                 bi += 1;
             }
             mi += 1;
@@ -536,14 +572,23 @@ mod x86 {
                 let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
                 for bi in b0..b1 {
                     let xrow = &xd[bi * l..(bi + 1) * l];
-                    let mut acc = _mm256_setzero_ps();
+                    // SAFETY: register-only intrinsic; no memory access.
+                    let mut acc = unsafe { _mm256_setzero_ps() };
                     for (gc, xc) in grow[..tail]
                         .chunks_exact(VL)
                         .zip(xrow[..tail].chunks_exact(VL))
                     {
-                        acc = _mm256_fmadd_ps(load_q8(gc), _mm256_loadu_ps(xc.as_ptr()), acc);
+                        // SAFETY: `gc` and `xc` are bounds-checked
+                        // `VL`-long subslices (`chunks_exact(VL)`), which
+                        // is the contract of `load_q8` and of the 8-lane
+                        // unaligned f32 load; the FMA is register-only.
+                        acc = unsafe {
+                            _mm256_fmadd_ps(load_q8(gc), _mm256_loadu_ps(xc.as_ptr()), acc)
+                        };
                     }
-                    let mut s = hsum_m256(acc);
+                    // SAFETY: `hsum_m256` only spills the register to a
+                    // `VL`-long stack array.
+                    let mut s = unsafe { hsum_m256(acc) };
                     for i in tail..l {
                         s += grow[i] as f32 * xrow[i];
                     }
@@ -557,7 +602,9 @@ mod x86 {
     #[inline(always)]
     unsafe fn hsum_m256(v: __m256) -> f32 {
         let mut tmp = [0.0f32; VL];
-        _mm256_storeu_ps(tmp.as_mut_ptr(), v);
+        // SAFETY: `tmp` is exactly `VL` f32s on the stack; the unaligned
+        // 8-lane store writes only within it.
+        unsafe { _mm256_storeu_ps(tmp.as_mut_ptr(), v) };
         let s0 = tmp[0] + tmp[4];
         let s1 = tmp[1] + tmp[5];
         let s2 = tmp[2] + tmp[6];
@@ -675,31 +722,42 @@ mod arm {
 
     #[inline(always)]
     unsafe fn zero8() -> F32x8 {
-        F32x8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) }
+        // SAFETY: register-only broadcast, no memory access; NEON
+        // availability is the caller's contract (dispatch probes first).
+        unsafe { F32x8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) } }
     }
 
     /// Widen `VL` int8 lanes from a bounds-checked slice of length >= `VL`.
     #[inline(always)]
     unsafe fn load_q8(src: &[i8]) -> F32x8 {
         let s = &src[..VL];
-        let w = vmovl_s8(vld1_s8(s.as_ptr()));
-        F32x8 {
-            lo: vcvtq_f32_s32(vmovl_s16(vget_low_s16(w))),
-            hi: vcvtq_f32_s32(vmovl_s16(vget_high_s16(w))),
+        // SAFETY: `s` is a bounds-checked `VL`-byte subslice, so the
+        // 8-byte load stays inside it; widen/convert are register-only.
+        unsafe {
+            let w = vmovl_s8(vld1_s8(s.as_ptr()));
+            F32x8 {
+                lo: vcvtq_f32_s32(vmovl_s16(vget_low_s16(w))),
+                hi: vcvtq_f32_s32(vmovl_s16(vget_high_s16(w))),
+            }
         }
     }
 
     #[inline(always)]
     unsafe fn fma8(acc: F32x8, g: F32x8, xs: f32) -> F32x8 {
-        let xv = vdupq_n_f32(xs);
-        F32x8 { lo: vfmaq_f32(acc.lo, g.lo, xv), hi: vfmaq_f32(acc.hi, g.hi, xv) }
+        // SAFETY: register-only broadcast + FMA; no memory access.
+        unsafe {
+            let xv = vdupq_n_f32(xs);
+            F32x8 { lo: vfmaq_f32(acc.lo, g.lo, xv), hi: vfmaq_f32(acc.hi, g.hi, xv) }
+        }
     }
 
     /// Pairwise horizontal sum with the exact association of `micro::hsum`.
     #[inline(always)]
     unsafe fn hsum8(v: F32x8) -> f32 {
         let mut tmp = [0.0f32; 4];
-        vst1q_f32(tmp.as_mut_ptr(), vaddq_f32(v.lo, v.hi));
+        // SAFETY: `tmp` is exactly 4 f32s on the stack and the single
+        // 4-lane store writes only within it; the add is register-only.
+        unsafe { vst1q_f32(tmp.as_mut_ptr(), vaddq_f32(v.lo, v.hi)) };
         (tmp[0] + tmp[2]) + (tmp[1] + tmp[3])
     }
 
@@ -721,7 +779,9 @@ mod arm {
     ) {
         let rv_count = r_pad / VL;
         for rv in 0..rv_count {
-            let mut acc = [[zero8(); RB]; RM];
+            // SAFETY: register-only helper; NEON availability is this
+            // block's contract (`supported()` probed at dispatch).
+            let mut acc = [[unsafe { zero8() }; RB]; RM];
             let mut g_rows: [std::slice::ChunksExact<'_, i8>; RM] = std::array::from_fn(|im| {
                 let off = ((m0 + im) * rv_count + rv) * l * VL;
                 gd[off..off + l * VL].chunks_exact(VL)
@@ -729,14 +789,19 @@ mod arm {
             let x_rows: [&[f32]; RB] =
                 std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
             for kk in 0..l {
-                let mut gvec = [zero8(); RM];
+                // SAFETY: as above — register-only.
+                let mut gvec = [unsafe { zero8() }; RM];
                 for (im, row) in g_rows.iter_mut().enumerate() {
-                    gvec[im] = load_q8(row.next().expect("length l by construction"));
+                    // SAFETY: the chunk is a bounds-checked `VL`-byte
+                    // subslice (`chunks_exact(VL)`), `load_q8`'s contract.
+                    gvec[im] =
+                        unsafe { load_q8(row.next().expect("length l by construction")) };
                 }
                 for ib in 0..RB {
                     let xs = x_rows[ib][kk];
                     for im in 0..RM {
-                        acc[im][ib] = fma8(acc[im][ib], gvec[im], xs);
+                        // SAFETY: register-only FMA helper.
+                        acc[im][ib] = unsafe { fma8(acc[im][ib], gvec[im], xs) };
                     }
                 }
             }
@@ -746,8 +811,13 @@ mod arm {
                 for ib in 0..RB {
                     let v = acc[im][ib];
                     let mut tmp = [0.0f32; VL];
-                    vst1q_f32(tmp.as_mut_ptr(), vmulq_n_f32(v.lo, scale));
-                    vst1q_f32(tmp[4..].as_mut_ptr(), vmulq_n_f32(v.hi, scale));
+                    // SAFETY: `tmp` is exactly `VL` f32s on the stack; the
+                    // two 4-lane stores (offsets 0 and 4) write only
+                    // within it (the multiplies are register-only).
+                    unsafe {
+                        vst1q_f32(tmp.as_mut_ptr(), vmulq_n_f32(v.lo, scale));
+                        vst1q_f32(tmp[4..].as_mut_ptr(), vmulq_n_f32(v.hi, scale));
+                    }
                     let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
                     od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
                 }
@@ -783,13 +853,23 @@ mod arm {
         while mi < m_main {
             let mut bi = b0;
             while bi < b_main {
-                dispatch_rb!(rm, rb, r_block_q_fma,
-                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                // SAFETY: `r_block_q_fma`'s contract — the SIMD feature
+                // this module's kernels probe at dispatch (`supported()`)
+                // — holds inside this driver; its slice accesses are
+                // bounds-checked against the quantized-buffer formulas
+                // that `compiler::verify` certifies per plan.
+                unsafe {
+                    dispatch_rb!(rm, rb, r_block_q_fma,
+                        (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+                };
                 bi += rb;
             }
             while bi < b1 {
-                dispatch_rb!(rm, 1, r_block_q_fma,
-                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                // SAFETY: as above.
+                unsafe {
+                    dispatch_rb!(rm, 1, r_block_q_fma,
+                        (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+                };
                 bi += 1;
             }
             mi += rm;
@@ -797,14 +877,20 @@ mod arm {
         while mi < m1 {
             let mut bi = b0;
             while bi + rb <= b1 {
-                dispatch_rb!(1, rb, r_block_q_fma,
-                    (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+                // SAFETY: as above.
+                unsafe {
+                    dispatch_rb!(1, rb, r_block_q_fma,
+                        (&g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+                };
                 bi += rb;
             }
             while bi < b1 {
-                r_block_q_fma::<1, 1>(
-                    &g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base,
-                );
+                // SAFETY: as above.
+                unsafe {
+                    r_block_q_fma::<1, 1>(
+                        &g.data, &g.scales, xd, od, l, r, r_pad, b_total, mi, bi, m_base,
+                    )
+                };
                 bi += 1;
             }
             mi += 1;
@@ -836,22 +922,33 @@ mod arm {
                 let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
                 for bi in b0..b1 {
                     let xrow = &xd[bi * l..(bi + 1) * l];
-                    let mut acc = zero8();
+                    // SAFETY: register-only helper; NEON availability is
+                    // this driver's contract (`supported()` probed).
+                    let mut acc = unsafe { zero8() };
                     for (gc, xc) in grow[..tail]
                         .chunks_exact(VL)
                         .zip(xrow[..tail].chunks_exact(VL))
                     {
-                        let gv = load_q8(gc);
-                        let xv = F32x8 {
-                            lo: vld1q_f32(xc[..VL].as_ptr()),
-                            hi: vld1q_f32(xc[4..].as_ptr()),
-                        };
-                        acc = F32x8 {
-                            lo: vfmaq_f32(acc.lo, gv.lo, xv.lo),
-                            hi: vfmaq_f32(acc.hi, gv.hi, xv.hi),
-                        };
+                        // SAFETY: `gc` and `xc` are bounds-checked
+                        // `VL`-long subslices (`chunks_exact(VL)`), so the
+                        // int8 widen-load and the two 4-lane f32 loads
+                        // (offsets 0 and 4) stay inside them; the FMAs are
+                        // register-only.
+                        unsafe {
+                            let gv = load_q8(gc);
+                            let xv = F32x8 {
+                                lo: vld1q_f32(xc[..VL].as_ptr()),
+                                hi: vld1q_f32(xc[4..].as_ptr()),
+                            };
+                            acc = F32x8 {
+                                lo: vfmaq_f32(acc.lo, gv.lo, xv.lo),
+                                hi: vfmaq_f32(acc.hi, gv.hi, xv.hi),
+                            };
+                        }
                     }
-                    let mut s = hsum8(acc);
+                    // SAFETY: `hsum8` only spills to its own 4-lane stack
+                    // array.
+                    let mut s = unsafe { hsum8(acc) };
                     for i in tail..l {
                         s += grow[i] as f32 * xrow[i];
                     }

@@ -113,7 +113,7 @@ mod tests {
                     let plan = compile_stage(&dims, &machine, stage).unwrap();
                     let pg = pack(&g, &plan).unwrap();
                     let mut ex = Executor::new(&machine);
-                    ex.set_plan(plan);
+                    ex.set_plan(plan).unwrap();
                     let got = ex.execute(&dims, &pg, &x).unwrap();
                     assert!(
                         got.allclose(&want, 1e-4, 1e-4),

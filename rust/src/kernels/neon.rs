@@ -80,27 +80,38 @@ struct F32x8 {
 
 #[inline(always)]
 unsafe fn zero8() -> F32x8 {
-    F32x8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) }
+    // SAFETY: register-only broadcast, no memory access; NEON availability
+    // is the caller's contract (dispatch probes before selecting).
+    unsafe { F32x8 { lo: vdupq_n_f32(0.0), hi: vdupq_n_f32(0.0) } }
 }
 
 /// Load `VL` lanes from a bounds-checked slice of length >= `VL`.
 #[inline(always)]
 unsafe fn load8(src: &[f32]) -> F32x8 {
     let s = &src[..VL];
-    F32x8 { lo: vld1q_f32(s.as_ptr()), hi: vld1q_f32(s[4..].as_ptr()) }
+    // SAFETY: `s` is a bounds-checked `VL`-long subslice, so the two
+    // 4-lane loads (offsets 0 and 4) stay inside it.
+    unsafe { F32x8 { lo: vld1q_f32(s.as_ptr()), hi: vld1q_f32(s[4..].as_ptr()) } }
 }
 
 #[inline(always)]
 unsafe fn fma8(acc: F32x8, g: F32x8, xs: f32) -> F32x8 {
-    let xv = vdupq_n_f32(xs);
-    F32x8 { lo: vfmaq_f32(acc.lo, g.lo, xv), hi: vfmaq_f32(acc.hi, g.hi, xv) }
+    // SAFETY: register-only broadcast + FMA; no memory access.
+    unsafe {
+        let xv = vdupq_n_f32(xs);
+        F32x8 { lo: vfmaq_f32(acc.lo, g.lo, xv), hi: vfmaq_f32(acc.hi, g.hi, xv) }
+    }
 }
 
 #[inline(always)]
 unsafe fn store8(v: F32x8) -> [f32; VL] {
     let mut tmp = [0.0f32; VL];
-    vst1q_f32(tmp.as_mut_ptr(), v.lo);
-    vst1q_f32(tmp[4..].as_mut_ptr(), v.hi);
+    // SAFETY: `tmp` is exactly `VL` f32s on the stack; the two 4-lane
+    // stores (offsets 0 and 4) write only within it.
+    unsafe {
+        vst1q_f32(tmp.as_mut_ptr(), v.lo);
+        vst1q_f32(tmp[4..].as_mut_ptr(), v.hi);
+    }
     tmp
 }
 
@@ -109,7 +120,9 @@ unsafe fn store8(v: F32x8) -> [f32; VL] {
 #[inline(always)]
 unsafe fn hsum8(v: F32x8) -> f32 {
     let mut tmp = [0.0f32; 4];
-    vst1q_f32(tmp.as_mut_ptr(), vaddq_f32(v.lo, v.hi));
+    // SAFETY: `tmp` is exactly 4 f32s on the stack and the single 4-lane
+    // store writes only within it; the add is register-only.
+    unsafe { vst1q_f32(tmp.as_mut_ptr(), vaddq_f32(v.lo, v.hi)) };
     (tmp[0] + tmp[2]) + (tmp[1] + tmp[3])
 }
 
@@ -130,7 +143,9 @@ unsafe fn r_block_fma<const RM: usize, const RB: usize>(
 ) {
     let rv_count = r_pad / VL;
     for rv in 0..rv_count {
-        let mut acc = [[zero8(); RB]; RM];
+        // SAFETY: register-only helper; NEON availability is this
+        // function's contract (see `r_region`/`k_region` above).
+        let mut acc = [[unsafe { zero8() }; RB]; RM];
         let mut g_rows: [std::slice::ChunksExact<'_, f32>; RM] = std::array::from_fn(|im| {
             let off = ((m0 + im) * rv_count + rv) * l * VL;
             gd[off..off + l * VL].chunks_exact(VL)
@@ -138,21 +153,26 @@ unsafe fn r_block_fma<const RM: usize, const RB: usize>(
         let x_rows: [&[f32]; RB] =
             std::array::from_fn(|ib| &xd[(b0 + ib) * l..(b0 + ib) * l + l]);
         for kk in 0..l {
-            let mut gvec = [zero8(); RM];
+            // SAFETY: as above — register-only.
+            let mut gvec = [unsafe { zero8() }; RM];
             for (im, row) in g_rows.iter_mut().enumerate() {
-                gvec[im] = load8(row.next().expect("length l by construction"));
+                // SAFETY: the chunk is a bounds-checked `VL`-long subslice
+                // (`chunks_exact(VL)`), which is `load8`'s contract.
+                gvec[im] = unsafe { load8(row.next().expect("length l by construction")) };
             }
             for ib in 0..RB {
                 let xs = x_rows[ib][kk];
                 for im in 0..RM {
-                    acc[im][ib] = fma8(acc[im][ib], gvec[im], xs);
+                    // SAFETY: register-only FMA helper.
+                    acc[im][ib] = unsafe { fma8(acc[im][ib], gvec[im], xs) };
                 }
             }
         }
         let lanes = if (rv + 1) * VL <= r { VL } else { r - rv * VL };
         for im in 0..RM {
             for ib in 0..RB {
-                let tmp = store8(acc[im][ib]);
+                // SAFETY: `store8` only spills to its own `VL` stack array.
+                let tmp = unsafe { store8(acc[im][ib]) };
                 let out_base = ((m0 + im - m_base) * b_total + (b0 + ib)) * r + rv * VL;
                 od[out_base..out_base + lanes].copy_from_slice(&tmp[..lanes]);
             }
@@ -187,13 +207,22 @@ unsafe fn r_region_neon(
     while mi < m_main {
         let mut bi = b0;
         while bi < b_main {
-            dispatch_rb!(rm, rb, r_block_fma,
-                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            // SAFETY: `r_block_fma`'s contract (NEON available) is this
+            // driver's own contract, discharged by the dispatch probe; its
+            // slice accesses are bounds-checked against the packed-buffer
+            // formulas that `compiler::verify` certifies per plan.
+            unsafe {
+                dispatch_rb!(rm, rb, r_block_fma,
+                    (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+            };
             bi += rb;
         }
         while bi < b1 {
-            dispatch_rb!(rm, 1, r_block_fma,
-                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            // SAFETY: as above.
+            unsafe {
+                dispatch_rb!(rm, 1, r_block_fma,
+                    (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+            };
             bi += 1;
         }
         mi += rm;
@@ -201,12 +230,16 @@ unsafe fn r_region_neon(
     while mi < m1 {
         let mut bi = b0;
         while bi + rb <= b1 {
-            dispatch_rb!(1, rb, r_block_fma,
-                (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base));
+            // SAFETY: as above.
+            unsafe {
+                dispatch_rb!(1, rb, r_block_fma,
+                    (&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base))
+            };
             bi += rb;
         }
         while bi < b1 {
-            r_block_fma::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base);
+            // SAFETY: as above.
+            unsafe { r_block_fma::<1, 1>(&g.data, xd, od, l, r, r_pad, b_total, mi, bi, m_base) };
             bi += 1;
         }
         mi += 1;
@@ -237,19 +270,27 @@ unsafe fn k_region_neon(
             let grow = &g.data[(mi * r + ri) * l..(mi * r + ri + 1) * l];
             for bi in b0..b1 {
                 let xrow = &xd[bi * l..(bi + 1) * l];
-                let mut acc = zero8();
+                // SAFETY: register-only helper; NEON availability is this
+                // driver's contract, discharged by the dispatch probe.
+                let mut acc = unsafe { zero8() };
                 for (gc, xc) in grow[..tail]
                     .chunks_exact(VL)
                     .zip(xrow[..tail].chunks_exact(VL))
                 {
-                    let gv = load8(gc);
-                    let xv = load8(xc);
-                    acc = F32x8 {
-                        lo: vfmaq_f32(acc.lo, gv.lo, xv.lo),
-                        hi: vfmaq_f32(acc.hi, gv.hi, xv.hi),
-                    };
+                    // SAFETY: `gc` and `xc` are bounds-checked `VL`-long
+                    // subslices (`chunks_exact(VL)`), which is `load8`'s
+                    // contract; the FMAs are register-only.
+                    unsafe {
+                        let gv = load8(gc);
+                        let xv = load8(xc);
+                        acc = F32x8 {
+                            lo: vfmaq_f32(acc.lo, gv.lo, xv.lo),
+                            hi: vfmaq_f32(acc.hi, gv.hi, xv.hi),
+                        };
+                    }
                 }
-                let mut s = hsum8(acc);
+                // SAFETY: `hsum8` only spills to its own 4-lane stack array.
+                let mut s = unsafe { hsum8(acc) };
                 for i in tail..l {
                     s += grow[i] * xrow[i];
                 }

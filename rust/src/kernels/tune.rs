@@ -251,7 +251,7 @@ impl Executor {
         self.set_kernel(kernels[best_ki]);
         let plans = winners.swap_remove(best_ki);
         for winner in &plans {
-            self.set_plan(*winner);
+            self.set_plan(*winner)?;
         }
         Ok(plans)
     }
@@ -339,7 +339,7 @@ impl Executor {
         self.set_kernel(kernels[best_ki]);
         let plans = winners.swap_remove(best_ki);
         for winner in &plans {
-            self.set_plan(*winner);
+            self.set_plan(*winner)?;
         }
         Ok(plans)
     }
@@ -369,7 +369,7 @@ mod tests {
         // and must still compute the right answer
         let pg = pack(&g, &tuned).unwrap();
         let mut ex = crate::kernels::Executor::new(&machine);
-        ex.set_plan(tuned);
+        ex.set_plan(tuned).unwrap();
         let got = ex.execute(&dims, &pg, &x).unwrap();
         let want = tt_einsum_ref(&g, &x).unwrap();
         assert!(got.allclose(&want, 1e-4, 1e-4));

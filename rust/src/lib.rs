@@ -36,6 +36,13 @@
 // Every public item carries rustdoc; CI builds docs with -D warnings so
 // this cannot rot (see .github/workflows/ci.yml).
 #![warn(missing_docs)]
+// Unsafe hygiene: an `unsafe fn` body gets no blanket license — every
+// unsafe operation inside it sits in its own `unsafe {}` block, and every
+// such block carries a `// SAFETY:` comment naming the invariant it leans
+// on (clippy runs with -D warnings in CI, so both are enforced). The
+// invariants themselves are proven per-plan by `compiler::verify`.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 pub mod error;
 pub mod util;

@@ -82,6 +82,18 @@ impl MachineSpec {
         }
     }
 
+    /// Look up a preset by its marketing name (the string `.ttrv` bundles
+    /// store in their META `machine` key) — `None` for machines this build
+    /// does not know, so callers can skip machine-specific checks instead
+    /// of guessing a register budget.
+    pub fn by_name(name: &str) -> Option<MachineSpec> {
+        match name {
+            "SpacemiT-K1" => Some(MachineSpec::spacemit_k1()),
+            "host-x86" => Some(MachineSpec::host()),
+            _ => None,
+        }
+    }
+
     /// The build/CI host this reproduction measures on: modeled as a single
     /// generic x86-64 core with 256-bit vectors (AVX2-class).
     pub fn host() -> Self {
@@ -127,5 +139,13 @@ mod tests {
         let h = MachineSpec::host();
         assert_eq!(h.vl_f32(), 8);
         assert!(h.peak_gflops_core() > 0.0);
+    }
+
+    #[test]
+    fn by_name_roundtrips_presets() {
+        for spec in [MachineSpec::spacemit_k1(), MachineSpec::host()] {
+            assert_eq!(MachineSpec::by_name(spec.name), Some(spec));
+        }
+        assert_eq!(MachineSpec::by_name("riscv-unknown"), None);
     }
 }

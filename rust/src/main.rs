@@ -44,6 +44,12 @@
 //!                          (CRCs + bitwise replay against a fresh
 //!                          compression); without --verify, load + execute
 //!                          the PJRT artifacts (needs `make artifacts`)
+//!   lint                   static plan/layout safety verification: run the
+//!                          strict tier of `compiler::verify` over every
+//!                          plan x core pair of a bundle or zoo model and
+//!                          print per-plan diagnostics; exit 0 iff clean
+//!                          (--artifact model.ttrv | --model zoo-name
+//!                           [--rank R --seed S] [--json])
 //!
 //! Arg parsing is hand-rolled (clap unavailable offline): `--key value`.
 //! Flags are repeatable — scalar lookups take the last value (the usual
@@ -133,6 +139,7 @@ fn main() {
         "compress" => cmd_compress(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "artifacts-check" => cmd_artifacts_check(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -153,7 +160,8 @@ fn print_help() {
     println!(
         "ttrv — TT decomposition DSE + compiler optimization for RISC-V\n\
          usage: ttrv <command> [--key value ...]\n\
-         commands: tables | dse | plan | kernel-bench | bench | compress | serve-demo | artifacts-check\n\
+         commands: tables | dse | plan | kernel-bench | bench | compress | serve-demo |\n\
+         \u{20}         artifacts-check | lint\n\
          \n\
          dse [--n N --m M --rank R] [--ranks 2,4,8] [--accuracy-budget EPS] [--seed S]\n\
          \u{20}        [--policy P] [--measure K] [--json]\n\
@@ -176,6 +184,10 @@ fn print_help() {
          \u{20}        registry (round-robin load, per-model metrics, JSON snapshot)\n\
          artifacts-check --verify model.ttrv\n\
          \u{20}        validate bundle CRCs and replay it bitwise against a fresh compression\n\
+         lint --artifact model.ttrv | --model <zoo-name> [--rank R] [--seed S] [--json]\n\
+         \u{20}        static safety verification: prove every plan x core pair in-bounds\n\
+         \u{20}        (packed geometry, zeroed pad lanes, register budget, quant scales);\n\
+         \u{20}        per-plan diagnostics name the violated invariant; exit 0 iff clean\n\
          \n\
          see `cargo bench` for the per-figure reproduction harnesses"
     );
@@ -1153,4 +1165,91 @@ fn cmd_verify_bundle(path: &str) -> ttrv::Result<()> {
         report.encoded_bytes, report.outputs_checked
     );
     Ok(())
+}
+
+/// `ttrv lint`: the CLI chokepoint of the static plan/layout verifier.
+/// Runs [`ttrv::artifact::lint_bundle`] — the strict tier of
+/// [`ttrv::compiler::verify`] over every plan × core pair — on a `.ttrv`
+/// bundle (decoded *without* the reader's fail-fast gate, so a corrupt
+/// bundle yields the full violation list, not just the first) or on a
+/// fresh in-process compression of a zoo model. Exit 0 iff clean.
+fn cmd_lint(args: &Args) -> ttrv::Result<()> {
+    let (bundle, source) = match (last(args, "artifact"), last(args, "model")) {
+        (Some(path), None) => {
+            let bytes = std::fs::read(path)
+                .map_err(|e| ttrv::Error::artifact(format!("cannot read bundle {path}: {e}")))?;
+            (ttrv::artifact::read_bundle_bytes_unverified(&bytes)?, path.clone())
+        }
+        (None, Some(name)) => {
+            let rank: u64 = get(args, "rank", 8)?;
+            let seed: u64 = get(args, "seed", 42)?;
+            let spec = ttrv::artifact::CompressSpec::from_zoo(name, rank, seed)?;
+            let bundle =
+                ttrv::artifact::compress(&spec, &MachineSpec::spacemit_k1(), &DseConfig::default())?;
+            (bundle, format!("zoo:{name}"))
+        }
+        _ => {
+            return Err(ttrv::Error::config(
+                "lint needs exactly one of --artifact model.ttrv or --model <zoo-name>",
+            ))
+        }
+    };
+    let report = ttrv::artifact::lint_bundle(&bundle);
+    if args.contains_key("json") {
+        println!("{}", ttrv::util::json::to_string_pretty(&report.to_json(&source)));
+    } else {
+        println!(
+            "lint {source}: model {} compiled for {}{}",
+            report.model,
+            report.machine,
+            if report.machine_known {
+                ""
+            } else {
+                " (unknown machine: register-budget check skipped)"
+            }
+        );
+        for row in &report.rows {
+            let d = &row.plan.dims;
+            println!(
+                "  layer {} step {} [{}] {:?} m={} b={} n={} r={} k={} {:?} rb=({},{},{},{}) \
+                 regs={} threads={}{}: {}",
+                row.layer,
+                row.step,
+                row.source.as_str(),
+                d.kind,
+                d.m,
+                d.b,
+                d.n,
+                d.r,
+                d.k,
+                row.layout,
+                row.plan.rb.rm,
+                row.plan.rb.rb,
+                row.plan.rb.rr,
+                row.plan.rb.rk,
+                row.registers,
+                row.plan.threads,
+                if row.quant { " +int8" } else { "" },
+                if row.violations.is_empty() { "ok" } else { "VIOLATED" },
+            );
+            for v in &row.violations {
+                println!("      {v}");
+            }
+        }
+        println!(
+            "{} plan(s) checked, {} violation(s): {}",
+            report.plans_checked(),
+            report.violations(),
+            if report.clean() { "clean" } else { "UNSAFE" }
+        );
+    }
+    if report.clean() {
+        Ok(())
+    } else {
+        Err(ttrv::Error::plan(format!(
+            "lint found {} violation(s) across {} plan(s)",
+            report.violations(),
+            report.plans_checked()
+        )))
+    }
 }

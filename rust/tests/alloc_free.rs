@@ -77,7 +77,7 @@ fn hot_loop_is_allocation_free_on_all_layouts() {
     ];
     for (name, plan) in cases {
         let mut ex = Executor::new(&machine);
-        ex.set_plan(plan);
+        ex.set_plan(plan).unwrap();
         let pg = pack(&g, &plan).unwrap();
         // warm: resizes scratch, no further growth afterwards
         ex.execute_with_scratch(&dims, &pg, x.data()).unwrap();
@@ -103,7 +103,7 @@ fn hot_loop_is_allocation_free_on_all_layouts() {
         .map(|(step, d)| {
             let mut plan = ex.plan(d).unwrap();
             plan.threads = 1;
-            ex.set_plan(plan);
+            ex.set_plan(plan).unwrap();
             ex.pack(&tt.cores[layout.d() - 1 - step], d).unwrap()
         })
         .collect();

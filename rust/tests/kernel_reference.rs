@@ -95,7 +95,7 @@ fn check_plan(
     let machine = MachineSpec::spacemit_k1();
     let mut ex = Executor::with_kernel(&machine, kernel).unwrap();
     let pg = pack(g, &plan).unwrap();
-    ex.set_plan(plan);
+    ex.set_plan(plan).unwrap();
     let got = ex.execute(&plan.dims, &pg, x).unwrap();
     assert_eq!(got.data().len(), want.len(), "{label}: wrong output size");
     for (i, ((&a, &w), &t)) in got.data().iter().zip(want).zip(tol).enumerate() {
@@ -195,7 +195,7 @@ fn check_plan_q(
     let machine = MachineSpec::spacemit_k1();
     let mut ex = Executor::with_kernel(&machine, kernel).unwrap();
     let qg = quantize(&pack(g, &plan).unwrap());
-    ex.set_plan(plan);
+    ex.set_plan(plan).unwrap();
     let got = ex.execute_q(&plan.dims, &qg, x).unwrap();
     assert_eq!(got.data().len(), want.len(), "{label}: wrong output size");
     for (i, ((&a, &w), &t)) in got.data().iter().zip(want).zip(tol).enumerate() {
@@ -341,7 +341,7 @@ fn portable_kernel_is_bitwise_reference_on_order_preserving_paths() {
         ] {
             let plan = plan_with(dims, pack_g, vloop, rb, 1);
             let pg = pack(&g, &plan).unwrap();
-            ex.set_plan(plan);
+            ex.set_plan(plan).unwrap();
             let got = ex.execute(&dims, &pg, &x).unwrap().into_vec();
             assert_eq!(got, want, "portable not bitwise on {dims:?} {vloop:?} pack={pack_g}");
         }

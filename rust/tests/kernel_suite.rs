@@ -18,7 +18,7 @@ fn check_dims(dims: &EinsumDims, machine: &MachineSpec, rng: &mut Rng, stage: Op
     let plan = compile_stage(dims, machine, stage).unwrap();
     let pg = pack(&g, &plan).unwrap();
     let mut ex = Executor::new(machine);
-    ex.set_plan(plan);
+    ex.set_plan(plan).unwrap();
     let got = ex.execute(dims, &pg, &x).unwrap();
     // accumulation-order noise grows with the contraction length (reference
     // sums sequentially, microkernels pairwise across lanes)

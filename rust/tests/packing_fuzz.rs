@@ -29,6 +29,18 @@ use ttrv::machine::MachineSpec;
 use ttrv::tensor::Tensor;
 use ttrv::ttd::cost::{EinsumDims, EinsumKind};
 
+// Miri executes a few hundred times slower than native, so the CI Miri job
+// trims the fuzz budget: each case still walks every layout and kernel, and
+// undefined behaviour is per-operation, not per-iteration.
+#[cfg(miri)]
+const FUZZ_CASES: usize = 3;
+#[cfg(not(miri))]
+const FUZZ_CASES: usize = 40;
+#[cfg(miri)]
+const EXEC_CASES: usize = 2;
+#[cfg(not(miri))]
+const EXEC_CASES: usize = 25;
+
 fn kind_of(r: usize, k: usize) -> EinsumKind {
     if k == 1 {
         EinsumKind::First
@@ -80,7 +92,7 @@ fn unpack(p: &ttrv::kernels::PackedG) -> Vec<f32> {
 
 #[test]
 fn property_pack_unpack_roundtrips_bitwise_for_all_layouts() {
-    ttrv::testkit::check("pack -> unpack == id", 40, |d| {
+    ttrv::testkit::check("pack -> unpack == id", FUZZ_CASES, |d| {
         // degenerate 1s are first-class citizens of every extent
         let r = d.usize_in(1, 20);
         let n = d.usize_in(1, 6);
@@ -144,7 +156,7 @@ fn property_pack_unpack_roundtrips_bitwise_for_all_layouts() {
 /// kernels and the QUANT section reader both trust.
 #[test]
 fn property_quantize_roundtrips_within_half_step_for_all_layouts() {
-    ttrv::testkit::check("quantize -> dequantize within step/2", 40, |d| {
+    ttrv::testkit::check("quantize -> dequantize within step/2", FUZZ_CASES, |d| {
         let r = d.usize_in(1, 20);
         let n = d.usize_in(1, 6);
         let m = d.usize_in(1, 10);
@@ -216,7 +228,7 @@ fn property_quantize_roundtrips_within_half_step_for_all_layouts() {
 #[test]
 fn property_every_kernel_executes_fuzzed_shapes_in_bounds() {
     let machine = MachineSpec::spacemit_k1();
-    ttrv::testkit::check("kernels stay in bounds", 25, |d| {
+    ttrv::testkit::check("kernels stay in bounds", EXEC_CASES, |d| {
         let r = d.usize_in(1, 20);
         let n = d.usize_in(1, 5);
         let m = d.usize_in(1, 12);
@@ -245,7 +257,7 @@ fn property_every_kernel_executes_fuzzed_shapes_in_bounds() {
             ] {
                 let plan = plan_for(dims, vloop, pack_g, rb);
                 let pg = pack(&g, &plan).map_err(|e| e.to_string())?;
-                ex.set_plan(plan);
+                ex.set_plan(plan).map_err(|e| e.to_string())?;
                 let out = ex.execute(&dims, &pg, &x).map_err(|e| e.to_string())?;
                 if out.dims() != [m, b, r].as_slice() {
                     return Err(format!(
@@ -271,7 +283,7 @@ fn property_every_kernel_executes_fuzzed_shapes_in_bounds() {
 #[test]
 fn property_every_kernel_executes_quantized_fuzzed_shapes_in_bounds() {
     let machine = MachineSpec::spacemit_k1();
-    ttrv::testkit::check("int8 kernels stay in bounds", 25, |d| {
+    ttrv::testkit::check("int8 kernels stay in bounds", EXEC_CASES, |d| {
         let r = d.usize_in(1, 20);
         let n = d.usize_in(1, 5);
         let m = d.usize_in(1, 12);
@@ -300,7 +312,7 @@ fn property_every_kernel_executes_quantized_fuzzed_shapes_in_bounds() {
             ] {
                 let plan = plan_for(dims, vloop, pack_g, rb);
                 let qg = quantize(&pack(&g, &plan).map_err(|e| e.to_string())?);
-                ex.set_plan(plan);
+                ex.set_plan(plan).map_err(|e| e.to_string())?;
                 let out = ex.execute_q(&dims, &qg, &x).map_err(|e| e.to_string())?;
                 if out.dims() != [m, b, r].as_slice() {
                     return Err(format!(

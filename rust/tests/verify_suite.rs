@@ -1,0 +1,290 @@
+//! Static-verifier suite (ISSUE 10): the adversarial mutant corpus and the
+//! three chokepoint pins.
+//!
+//! * **Mutant corpus** — ≥10 hand-corrupted bundles (bad `r_pad`,
+//!   over-budget RB, k-tail overruns, layout/plan mismatches, int8 scale
+//!   faults, poisoned pad lanes, ...) that the verifier must reject with a
+//!   diagnostic naming the violated invariant by its stable slug, and that
+//!   the artifact reader must refuse to decode after a byte round-trip.
+//! * **Clean pins** — the golden `tests/data/lenet300.ttrv`, fresh
+//!   compressions (f32 / +QUANT / +TUNE-shaped) and the *entire* model
+//!   zoo's DSE-selected plan chains all lint clean: the verifier has zero
+//!   false positives on everything the compiler itself produces.
+//! * **Chokepoints** — plans reach kernels only through (1) executor
+//!   cache inserts (`executor.rs` unit tests), (2) `read_bundle_bytes`
+//!   (pinned here + `reader.rs`), (3) `ttrv lint` (the same
+//!   `lint_bundle` walk pinned here).
+
+use std::sync::OnceLock;
+
+use ttrv::artifact::{self, BundleOp, CompressSpec, ModelBundle};
+use ttrv::compiler::verify::{check_packed, check_plan_for, check_quant};
+use ttrv::compiler::{compile, RbFactors};
+use ttrv::config::DseConfig;
+use ttrv::coordinator::{router, Route};
+use ttrv::error::Error;
+use ttrv::kernels::{pack, quantize, VL};
+use ttrv::machine::MachineSpec;
+use ttrv::models;
+use ttrv::tensor::Tensor;
+use ttrv::ttd::cost::{einsum_chain, EinsumDims, EinsumKind};
+use ttrv::ttd::decompose::random_cores;
+use ttrv::util::prng::Rng;
+
+fn k1() -> MachineSpec {
+    MachineSpec::spacemit_k1()
+}
+
+/// One deterministic compressed LeNet300 with an int8 QUANT shadow and a
+/// TUNE-shaped plan list, shared by every mutant (cloned per mutation).
+fn base_bundle() -> &'static ModelBundle {
+    static CELL: OnceLock<ModelBundle> = OnceLock::new();
+    CELL.get_or_init(|| {
+        let spec = CompressSpec::from_zoo("lenet300", 8, 5).unwrap();
+        let mut b = artifact::compress(&spec, &k1(), &DseConfig::default()).unwrap();
+        artifact::quantize_bundle(&mut b, &k1(), None).unwrap();
+        // a TUNE section without measurement: re-using the analytic plans
+        // is exactly the shape `tune_bundle` persists (tuning never changes
+        // dims or layouts), and it exercises the tuned-plan lint walk
+        for op in &mut b.ops {
+            if let BundleOp::Tt(t) = op {
+                t.tuned = Some(t.plans.clone());
+            }
+        }
+        b.tuned_kernel = Some("portable".to_string());
+        b
+    })
+}
+
+/// First TT layer of a bundle, mutably.
+fn tt0(b: &mut ModelBundle) -> &mut ttrv::artifact::TtLayerBundle {
+    b.ops
+        .iter_mut()
+        .find_map(|op| match op {
+            BundleOp::Tt(t) => Some(t),
+            _ => None,
+        })
+        .expect("bundle has a TT layer")
+}
+
+/// The adversarial corpus: every mutation must (a) be named by the lint
+/// walk with the expected invariant slug and (b) make the byte-roundtrip
+/// reader refuse the bundle with a typed `Error::Artifact` — whether the
+/// decode grammar or the static-verification gate catches it first.
+#[test]
+fn mutant_corpus_rejected_with_named_invariants() {
+    type Mutation = (&'static str, &'static str, fn(&mut ModelBundle));
+    let corpus: [Mutation; 14] = [
+        ("r_pad-too-small", "rpad-formula", |b| {
+            tt0(b).packed[0].r_pad -= 1;
+        }),
+        ("rb-over-register-budget", "rb-register-budget", |b| {
+            tt0(b).plans[0].rb = RbFactors { rm: 8, rb: 8, rr: 1, rk: 1 };
+        }),
+        ("k-tail-overrun-f32", "buffer-length", |b| {
+            tt0(b).packed[0].data.pop();
+        }),
+        ("k-tail-overrun-int8", "buffer-length", |b| {
+            let t = tt0(b);
+            let q = t.quant.as_mut().expect("quantized");
+            q[0].data.pop();
+        }),
+        ("layout-plan-mismatch", "layout-consistent", |b| {
+            let t = tt0(b);
+            t.plans[0].pack_g = !t.plans[0].pack_g;
+        }),
+        ("plan-core-dims-mismatch", "core-dims-match", |b| {
+            tt0(b).plans[0].dims.m += 1;
+        }),
+        ("int8-scale-count-mismatch", "quant-scale-count", |b| {
+            let t = tt0(b);
+            t.quant.as_mut().expect("quantized")[0].scales.pop();
+        }),
+        ("int8-scale-nan", "quant-scale-finite", |b| {
+            let t = tt0(b);
+            t.quant.as_mut().expect("quantized")[0].scales[0] = f32::NAN;
+        }),
+        ("int8-value-minus-128", "quant-value-range", |b| {
+            let t = tt0(b);
+            t.quant.as_mut().expect("quantized")[0].data[0] = i8::MIN;
+        }),
+        ("threads-zero", "threads-positive", |b| {
+            tt0(b).plans[1].threads = 0;
+        }),
+        ("rm-zero", "rb-range", |b| {
+            tt0(b).plans[0].rb.rm = 0;
+        }),
+        ("vl-claims-half-vector", "vl-matches-packing", |b| {
+            tt0(b).plans[0].vl = VL / 2;
+        }),
+        ("btl-zero-tile", "btl-positive", |b| {
+            tt0(b).plans[0].tile.btl = Some(0);
+        }),
+        ("tuned-plan-corrupt", "threads-positive", |b| {
+            let t = tt0(b);
+            t.tuned.as_mut().expect("tuned")[0].threads = 0;
+        }),
+    ];
+    for (name, slug, mutate) in corpus {
+        let mut b = base_bundle().clone();
+        mutate(&mut b);
+        // (a) the lint walk names the violated invariant
+        let report = artifact::lint_bundle(&b);
+        assert!(!report.clean(), "{name}: lint failed to flag the mutant");
+        let slugs: Vec<&str> = report
+            .rows
+            .iter()
+            .flat_map(|r| r.violations.iter().map(|v| v.invariant))
+            .collect();
+        assert!(slugs.contains(&slug), "{name}: expected '{slug}' in {slugs:?}");
+        // the fail-fast twin is a typed Error::Artifact naming it too
+        let err = artifact::verify_bundle(&b).unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)), "{name}: {err}");
+        assert!(err.to_string().contains(slug), "{name}: {err}");
+        // (b) the byte round-trip cannot smuggle it past the reader: either
+        // the section grammar or the static-verification gate rejects
+        let bytes = artifact::write_bundle(&b);
+        let err = artifact::read_bundle_bytes(&bytes)
+            .expect_err(&format!("{name}: reader accepted a corrupt bundle"));
+        assert!(matches!(err, Error::Artifact(_)), "{name}: {err}");
+    }
+}
+
+/// A poisoned `PackedR` pad lane (only expressible when `r % VL != 0`) is
+/// named by `pad-lanes-zero` — the r-kernels MAC pad lanes unconditionally,
+/// so a nonzero one silently corrupts results without ever going
+/// out of bounds.
+#[test]
+fn mutant_pad_lane_poison_is_named() {
+    use ttrv::compiler::plan::TilePlan;
+    use ttrv::compiler::{LoopOrder, OptimizationPlan, VectorLoop};
+    // r = 3 pads to one vector of VL = 8 under PackedR — hand-built so the
+    // test controls the layout instead of trusting the compiler's pick
+    let dims = EinsumDims { kind: EinsumKind::Middle, m: 4, b: 2, n: 2, r: 3, k: 2 };
+    let plan = OptimizationPlan {
+        dims,
+        pack_g: true,
+        vector_loop: VectorLoop::R,
+        vl: VL,
+        rb: RbFactors { rm: 2, rb: 2, rr: 1, rk: 1 },
+        tile: TilePlan { order: LoopOrder::Mbrk, btl: None },
+        threads: 1,
+        ls_estimate: 0,
+    };
+    let mut rng = Rng::new(17);
+    let g = Tensor::randn(vec![dims.r, dims.n, dims.m, dims.k], 1.0, &mut rng);
+    let mut pg = pack(&g, &plan).unwrap();
+    assert!(check_packed(&plan, &pg).is_empty());
+    // poison the lane right past r in the first vector
+    let lane = dims.r; // lane_r = 3 >= r
+    pg.data[lane] = 0.25;
+    let vs = check_packed(&plan, &pg);
+    assert_eq!(vs.len(), 1, "{vs:?}");
+    assert_eq!(vs[0].invariant, "pad-lanes-zero");
+    // same proof on the int8 shadow
+    pg.data[lane] = 0.0;
+    let mut q = quantize(&pg);
+    assert!(check_quant(&plan, &q).is_empty());
+    q.data[lane] = 1;
+    let vs = check_quant(&plan, &q);
+    assert_eq!(vs.len(), 1, "{vs:?}");
+    assert_eq!(vs[0].invariant, "pad-lanes-zero");
+}
+
+/// The golden artifact decodes through the strict gate and lints clean —
+/// the no-false-positives pin for the on-disk format.
+#[test]
+fn golden_bundle_lints_clean() {
+    let bytes = std::fs::read(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/data/lenet300.ttrv"
+    ))
+    .expect("golden bundle");
+    // read_bundle_bytes itself runs the strict gate (chokepoint 2)...
+    let bundle = artifact::read_bundle_bytes(&bytes).unwrap();
+    // ...and the full lint walk agrees, machine resolved from META
+    let report = artifact::lint_bundle(&bundle);
+    assert!(report.machine_known, "golden bundle machine {:?}", report.machine);
+    assert!(report.plans_checked() > 0);
+    assert!(report.clean(), "golden bundle must lint clean");
+}
+
+/// Fresh compressions — plain, quantized, and TUNE-shaped — all lint
+/// clean, including through a byte round-trip of the gated reader.
+#[test]
+fn fresh_and_quantized_compressions_lint_clean() {
+    let b = base_bundle();
+    let report = artifact::lint_bundle(b);
+    assert!(report.clean(), "{:?}", report.rows.iter().flat_map(|r| &r.violations).collect::<Vec<_>>());
+    // rows cover selected and tuned sources, all with the int8 shadow
+    assert!(report.rows.iter().any(|r| r.source == artifact::PlanSource::Selected && r.quant));
+    assert!(report.rows.iter().any(|r| r.source == artifact::PlanSource::Tuned));
+    let back = artifact::read_bundle_bytes(&artifact::write_bundle(b)).unwrap();
+    assert_eq!(&back, b);
+}
+
+/// Every zoo model's DSE-selected plan chains pass the strict tier, and
+/// cores packed for those plans pass every geometry/pad-lane/quant
+/// cross-check — the whole catalog is verifier-clean without a single
+/// false positive. (Runs on the plan/pack layer directly so the big
+/// ImageNet/GPT shapes don't need a full TT-SVD of demo weights.)
+#[test]
+fn all_zoo_models_plans_lint_clean() {
+    let machine = k1();
+    let cfg = DseConfig::default();
+    let mut seen = std::collections::HashSet::new();
+    let mut rng = Rng::new(23);
+    let mut tt_layers = 0usize;
+    for model in models::all_models() {
+        for shape in model.fc_shapes() {
+            if !seen.insert((shape.n, shape.m)) {
+                continue;
+            }
+            let Route::Tt(sel) = router::route_layer(shape.m, shape.n, 8, &machine, &cfg)
+                .unwrap_or(Route::Dense)
+            else {
+                continue;
+            };
+            tt_layers += 1;
+            let layout = sel.layout().clone();
+            let cores = random_cores(&layout, &mut rng);
+            for (step, dims) in einsum_chain(&layout, 1).iter().enumerate() {
+                let plan = compile(dims, &machine).unwrap();
+                let vs = check_plan_for(&plan, &machine);
+                assert!(vs.is_empty(), "{} [{}x{}] step {step}: {vs:?}", model.name, shape.n, shape.m);
+                let pg = pack(&cores.cores[layout.d() - 1 - step], &plan).unwrap();
+                let vs = check_packed(&plan, &pg);
+                assert!(vs.is_empty(), "{} [{}x{}] step {step}: {vs:?}", model.name, shape.n, shape.m);
+                let vs = check_quant(&plan, &quantize(&pg));
+                assert!(vs.is_empty(), "{} [{}x{}] step {step}: {vs:?}", model.name, shape.n, shape.m);
+            }
+        }
+    }
+    assert!(tt_layers >= 10, "expected a broad TT-routed sample, got {tt_layers}");
+}
+
+/// The lint report JSON round-trips the document contract `ttrv lint
+/// --json` prints (schema `ttrv-lint-report` v1, checked in CI by
+/// `check_bench_json.py`).
+#[test]
+fn lint_report_json_contract() {
+    let mut b = base_bundle().clone();
+    tt0(&mut b).plans[0].threads = 0;
+    let report = artifact::lint_bundle(&b);
+    let doc = report.to_json("mutant:threads-zero");
+    assert_eq!(doc.get("schema").and_then(ttrv::util::json::Json::as_str), Some("ttrv-lint-report"));
+    assert_eq!(doc.get("clean").and_then(ttrv::util::json::Json::as_bool), Some(false));
+    let violations = doc.get("violations").and_then(ttrv::util::json::Json::as_usize).unwrap();
+    assert!(violations >= 1);
+    let results = doc.get("results").and_then(ttrv::util::json::Json::as_arr).unwrap();
+    let violated: Vec<_> = results
+        .iter()
+        .filter(|r| r.get("status").and_then(ttrv::util::json::Json::as_str) == Some("violated"))
+        .collect();
+    assert_eq!(violated.len(), 1);
+    let vs = violated[0].get("violations").and_then(ttrv::util::json::Json::as_arr).unwrap();
+    assert_eq!(
+        vs[0].get("invariant").and_then(ttrv::util::json::Json::as_str),
+        Some("threads-positive")
+    );
+}
